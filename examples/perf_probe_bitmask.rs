@@ -1,0 +1,23 @@
+//! Perf probe: packed-bitmask delta encode throughput at several change
+//! rates (used by the EXPERIMENTS.md §Perf iteration log).
+use bitsnap::compress::bitmask;
+use bitsnap::tensor::XorShiftRng;
+use std::time::Instant;
+fn main() {
+    let n = 1 << 24; // 16M fp16 elems = 32MB
+    let mut rng = XorShiftRng::new(1);
+    let base: Vec<u8> = (0..n * 2).map(|_| rng.next_u32() as u8).collect();
+    for rate in [0.02f64, 0.15, 0.5] {
+        let mut curr = base.clone();
+        for i in rng.choose_indices(n, (n as f64 * rate) as usize) {
+            curr[2 * i] ^= 0xff;
+        }
+        for _ in 0..2 {
+            let t0 = Instant::now();
+            let p = bitmask::encode_packed(&base, &curr, 2).unwrap();
+            let dt = t0.elapsed().as_secs_f64();
+            println!("rate {rate}: {:.0} ms ({:.0} MB/s), payload {:.1} MB",
+                dt * 1e3, 32.0 / dt, p.len() as f64 / 1e6);
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Perf probe: cluster-quantization encode throughput (used by the
+//! EXPERIMENTS.md §Perf iteration log).
+use bitsnap::compress::cluster_quant;
+use bitsnap::tensor::{HostTensor, XorShiftRng};
+use std::time::Instant;
+fn main() {
+    let n = 1 << 24; // 16M f32 = 64MB
+    let mut rng = XorShiftRng::new(1);
+    let vals = rng.normal_vec(n, 0.0, 1e-3);
+    let t = HostTensor::from_f32(&[n], &vals).unwrap();
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let (_p, tc, tq) = cluster_quant::encode_with_timing(&t, 16).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!("total {:.0} ms ({:.0} MB/s) | cluster {:.0} ms quant {:.0} ms",
+            dt*1e3, 64.0/dt, tc.as_secs_f64()*1e3, tq.as_secs_f64()*1e3);
+    }
+}

@@ -1,0 +1,282 @@
+//! End-to-end driver: train a GPT through the full three-layer stack
+//! (rust coordinator → AOT XLA train_step → Pallas attention kernel) with
+//! BitSnap checkpointing, and run the paper's convergence experiments.
+//!
+//! ```text
+//! # plain training run with checkpoints every 20 steps
+//! cargo run --release --example train_and_checkpoint -- --steps 200 --save-every 20
+//!
+//! # Fig. 12: resume from a bitmask-sparsified (lossless) checkpoint and
+//! # verify the loss curve is identical to the uncompressed resume
+//! cargo run --release --example train_and_checkpoint -- --experiment fig12
+//!
+//! # Fig. 13: resume from a cluster-quantized checkpoint and measure the
+//! # loss impact vs the unquantized resume
+//! cargo run --release --example train_and_checkpoint -- --experiment fig13
+//! ```
+//!
+//! Loss curves are written as CSV under `results/` for plotting; the run
+//! summary is recorded in EXPERIMENTS.md.
+
+use std::io::Write as _;
+
+use bitsnap::compress::delta::{compress_state_dict, decompress_state_dict, Policy};
+use bitsnap::engine::{CheckpointEngine, EngineConfig, Storage};
+use bitsnap::runtime::{default_artifacts_dir, PjrtRuntime};
+use bitsnap::train::Trainer;
+
+struct Opts {
+    model: String,
+    steps: u64,
+    save_every: u64,
+    experiment: Option<String>,
+}
+
+fn parse_opts() -> Opts {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |key: &str| -> Option<String> {
+        args.iter()
+            .position(|a| a == key)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    Opts {
+        model: get("--model").unwrap_or_else(|| "gpt-nano".into()),
+        steps: get("--steps").and_then(|v| v.parse().ok()).unwrap_or(200),
+        save_every: get("--save-every").and_then(|v| v.parse().ok()).unwrap_or(20),
+        experiment: get("--experiment"),
+    }
+}
+
+fn new_trainer(model: &str, seed: u64) -> Trainer {
+    let dir = default_artifacts_dir();
+    if !dir.join(format!("train_step_{model}.hlo.txt")).exists() {
+        eprintln!("artifacts for {model} missing under {dir:?}; run `make artifacts`");
+        std::process::exit(1);
+    }
+    let rt = PjrtRuntime::cpu(dir).expect("pjrt cpu client");
+    Trainer::new(rt, model, seed).expect("trainer")
+}
+
+fn write_csv(path: &str, series: &[(&str, &[f32])]) {
+    std::fs::create_dir_all("results").unwrap();
+    let mut f = std::fs::File::create(path).unwrap();
+    write!(f, "step").unwrap();
+    for (name, _) in series {
+        write!(f, ",{name}").unwrap();
+    }
+    writeln!(f).unwrap();
+    let len = series.iter().map(|(_, s)| s.len()).max().unwrap_or(0);
+    for i in 0..len {
+        write!(f, "{i}").unwrap();
+        for (_, s) in series {
+            match s.get(i) {
+                Some(v) => write!(f, ",{v}").unwrap(),
+                None => write!(f, ",").unwrap(),
+            }
+        }
+        writeln!(f).unwrap();
+    }
+    println!("wrote {path}");
+}
+
+fn main() {
+    let opts = parse_opts();
+    match opts.experiment.as_deref() {
+        Some("fig12") => experiment_resume(&opts, Policy::lossless(), "fig12", Expect::Identical),
+        Some("fig13") => experiment_resume(&opts, Policy::bitsnap(), "fig13", Expect::Close),
+        // the §2.2.1 cautionary baseline: aggressive ExCP-style pruning
+        // must show the "sudden jump of loss" the paper warns about
+        Some("excp") => experiment_resume(
+            &opts,
+            Policy {
+                model: bitsnap::compress::delta::ModelPolicy::BitmaskPacked,
+                optimizer: bitsnap::compress::delta::OptimizerPolicy::ExcpPrune,
+            },
+            "excp",
+            Expect::Jump,
+        ),
+        Some(other) => {
+            eprintln!("unknown experiment {other:?} (fig12|fig13|excp)");
+            std::process::exit(2);
+        }
+        None => plain_run(&opts),
+    }
+}
+
+/// Plain training with BitSnap checkpointing — the end-to-end proof that
+/// all three layers compose.
+fn plain_run(opts: &Opts) {
+    let mut trainer = new_trainer(&opts.model, 1);
+    println!(
+        "training {} ({:.2}M params, seq {}, batch {}) for {} steps",
+        opts.model,
+        trainer.manifest().param_count() as f64 / 1e6,
+        trainer.manifest().seq,
+        trainer.manifest().batch,
+        opts.steps
+    );
+    let out = format!("results/e2e_{}", opts.model);
+    let _ = std::fs::remove_dir_all(&out);
+    let cfg = EngineConfig {
+        job: format!("e2e-{}", opts.model),
+        rank: 0,
+        world: 1,
+        shm_root: std::path::PathBuf::from(format!("{out}/shm")),
+        storage: Storage::new(format!("{out}/storage")).unwrap(),
+        redundancy: 2,
+        policy: Policy::bitsnap(),
+        max_cached_iteration: 5,
+    };
+    let mut engine = CheckpointEngine::new(cfg).unwrap();
+
+    let mut losses = Vec::new();
+    let mut total_blocked = std::time::Duration::ZERO;
+    let t0 = std::time::Instant::now();
+    for i in 1..=opts.steps {
+        let loss = trainer.step().unwrap();
+        losses.push(loss);
+        if i % 10 == 0 || i == 1 {
+            println!("  step {i:>5}  loss {loss:.4}");
+        }
+        if i % opts.save_every == 0 {
+            let sd = trainer.state_dict().unwrap();
+            let r = engine.save(i, &sd).unwrap();
+            total_blocked += r.blocking;
+            println!(
+                "    ckpt @{i} {} ratio {:.2}x blocked {:.1} ms",
+                if r.is_base { "base " } else { "delta" },
+                r.ratio(),
+                r.blocking.as_secs_f64() * 1e3
+            );
+        }
+    }
+    let wall = t0.elapsed();
+    engine.flush().unwrap();
+    let stats = engine.agent_stats();
+    write_csv(&format!("{out}_loss.csv"), &[("loss", &losses)]);
+    println!(
+        "\ndone in {:.1}s: loss {:.3} -> {:.3}; {} ckpts persisted ({}); training blocked {:.2}s total ({:.2}%)",
+        wall.as_secs_f64(),
+        losses.first().unwrap(),
+        losses.last().unwrap(),
+        stats.persisted,
+        bitsnap::bench::fmt_bytes(stats.bytes_written as usize),
+        total_blocked.as_secs_f64(),
+        total_blocked.as_secs_f64() / wall.as_secs_f64() * 100.0
+    );
+    assert!(losses.last().unwrap() < losses.first().unwrap(), "no learning");
+}
+
+/// What a resume-comparison experiment expects of the compressed arm.
+#[derive(PartialEq)]
+enum Expect {
+    /// Fig. 12: bit-identical loss curve (lossless sparsification).
+    Identical,
+    /// Fig. 13: within a few percent (cluster quantization).
+    Close,
+    /// §2.2.1: a visible loss jump (aggressive pruning baseline).
+    Jump,
+}
+
+/// Figs. 12/13 + the ExCP cautionary tale: train, checkpoint at the
+/// midpoint, then resume twice — once from the exact state and once from
+/// the compression round-trip — and compare loss curves on identical data.
+fn experiment_resume(opts: &Opts, policy: Policy, tag: &str, expect: Expect) {
+    let warmup = opts.steps / 2;
+    let horizon = opts.steps - warmup;
+    let mut trainer = new_trainer(&opts.model, 1);
+    println!("[{tag}] warmup {warmup} steps on {}...", opts.model);
+    for _ in 0..warmup {
+        trainer.step().unwrap();
+    }
+    let sd = trainer.state_dict().unwrap();
+
+    // compression round-trip under the experiment's policy
+    let ckpt = compress_state_dict(&sd, None, policy, warmup, warmup).unwrap();
+    let restored = decompress_state_dict(&ckpt, None).unwrap();
+    let ratio = sd.total_bytes() as f64 / ckpt.payload_bytes() as f64;
+    println!("[{tag}] checkpoint ratio {ratio:.2}x under {policy:?}");
+
+    // arm A: continue from the exact in-memory state
+    let replay_seed = 4242;
+    trainer.reset_corpus(replay_seed);
+    let mut clean = Vec::with_capacity(horizon as usize);
+    for _ in 0..horizon {
+        clean.push(trainer.step().unwrap());
+    }
+
+    // arm B: fresh trainer, resume from the round-tripped checkpoint
+    let mut resumed = new_trainer(&opts.model, 2);
+    resumed.load_state_dict(&restored, warmup).unwrap();
+    resumed.reset_corpus(replay_seed);
+    let mut lossy = Vec::with_capacity(horizon as usize);
+    for _ in 0..horizon {
+        lossy.push(resumed.step().unwrap());
+    }
+
+    write_csv(
+        &format!("results/{tag}_{}.csv", opts.model),
+        &[("baseline_resume", &clean), ("compressed_resume", &lossy)],
+    );
+
+    let max_rel: f64 = clean
+        .iter()
+        .zip(&lossy)
+        .map(|(c, q)| ((c - q) / c).abs() as f64)
+        .fold(0.0, f64::max);
+    let mean_rel: f64 = clean
+        .iter()
+        .zip(&lossy)
+        .map(|(c, q)| ((c - q) / c).abs() as f64)
+        .sum::<f64>()
+        / clean.len() as f64;
+    println!(
+        "[{tag}] {} steps after resume: mean |Δloss|/loss {:.3}%, max {:.3}%",
+        horizon,
+        mean_rel * 100.0,
+        max_rel * 100.0
+    );
+    match expect {
+        Expect::Identical => {
+            assert_eq!(clean, lossy, "lossless (Fig. 12) resume must be bit-identical");
+            println!("[{tag}] PASS: sparsified resume is bit-identical to baseline (paper: \"lossless with respect to model accuracy\")");
+        }
+        Expect::Close => {
+            assert!(
+                mean_rel < 0.05,
+                "quantized resume drifted {:.2}% (paper: ~4.5%)",
+                mean_rel * 100.0
+            );
+            println!(
+                "[{tag}] PASS: quantized resume stays within {:.2}% of baseline (paper reports ~4.5% impact)",
+                mean_rel * 100.0
+            );
+        }
+        Expect::Jump => {
+            // the jump may land a few steps after resume (the zeroed
+            // moments/weights take effect as updates resume)
+            let worst = clean
+                .iter()
+                .zip(&lossy)
+                .map(|(c, q)| ((q - c) / c) as f64)
+                .fold(f64::MIN, f64::max);
+            println!(
+                "[{tag}] worst upward loss excursion vs baseline: +{:.1}% (step 1: baseline {:.3} vs pruned {:.3})",
+                worst * 100.0,
+                clean[0],
+                lossy[0]
+            );
+            assert!(
+                worst > 0.10,
+                "aggressive pruning should cause the §2.2.1 loss jump (got {:.1}%)",
+                worst * 100.0
+            );
+            println!(
+                "[{tag}] CONFIRMED the paper's §2.2.1 warning: aggressive pruning degrades the resumed loss by up to {:.0}% (mean {:.1}%), unlike BitSnap's codecs (fig12: 0%, fig13: <0.01%)",
+                worst * 100.0,
+                mean_rel * 100.0
+            );
+        }
+    }
+}

@@ -1,0 +1,153 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the rust runtime.
+
+Run once via `make artifacts`. Python never executes at training/serving
+time — the rust binary loads the HLO text through the xla crate's PJRT CPU
+client.
+
+HLO *text* (not `.serialize()`d protos) is the interchange format: jax
+≥ 0.5 emits HloModuleProto with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts:
+    init_<cfg>.hlo.txt              ()  -> (params..., m..., v...)
+    train_step_<cfg>.hlo.txt        (params..., m..., v..., step, tokens)
+                                        -> (params'..., m'..., v'..., loss)
+    train_step_<cfg>.manifest.txt   parameter order + hyperparams
+    cluster_quant_<block>.hlo.txt   (values f32[n], boundaries f32[15])
+                                        -> (labels i32, scales, offsets, q u8)
+    cluster_dequant_<block>.hlo.txt (q u8[n], labels i32[n], scales, offsets)
+                                        -> (values f32[n])
+    bitmask_pack_<block>.hlo.txt    (prev u16[n], curr u16[n])
+                                        -> (packed u8[n/8], count i32)
+"""
+
+import argparse
+import math
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import bitmask_delta, cluster_quant
+from . import model as model_lib
+
+DEFAULT_MODELS = ["gpt-nano", "gpt-micro"]
+QUANT_BLOCKS = [1 << 16, 1 << 20]   # 64Ki and 1Mi values per chunk
+PACK_BLOCKS = [1 << 16, 1 << 20]
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(out_dir: str, name: str, text: str) -> None:
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name} ({len(text) / 1e6:.2f} MB)")
+
+
+def lower_model(cfg_name: str, out_dir: str) -> None:
+    cfg = model_lib.CONFIGS[cfg_name]
+    specs = model_lib.param_specs(cfg)
+    n = len(specs)
+    print(f"[{cfg_name}] {model_lib.param_count(cfg) / 1e6:.2f}M params, "
+          f"{n} tensors, seq={cfg.seq}, batch={cfg.batch}")
+
+    # init: no inputs -> 3n outputs (params, m, v)
+    init = jax.jit(lambda: model_lib.init_flat(cfg, seed=0))
+    write(out_dir, f"init_{cfg_name}.hlo.txt", to_hlo_text(init.lower()))
+
+    # train_step: 3n + 2 inputs
+    f32 = jnp.float32
+    arg_specs = (
+        [jax.ShapeDtypeStruct(s, f32) for _, s in specs] * 3
+        + [jax.ShapeDtypeStruct((), jnp.int32)]
+        + [jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32)]
+    )
+    step_fn = jax.jit(lambda *flat: model_lib.train_step_flat(cfg, *flat))
+    write(out_dir, f"train_step_{cfg_name}.hlo.txt", to_hlo_text(step_fn.lower(*arg_specs)))
+
+    # manifest for the rust trainer
+    lines = [
+        f"model {cfg_name}",
+        f"vocab {cfg.vocab}",
+        f"d_model {cfg.d_model}",
+        f"n_layers {cfg.n_layers}",
+        f"n_heads {cfg.n_heads}",
+        f"seq {cfg.seq}",
+        f"batch {cfg.batch}",
+        f"lr {model_lib.LR}",
+        f"params {n}",
+    ]
+    for name, shape in specs:
+        dims = "x".join(str(d) for d in shape)
+        lines.append(f"param {name} f32 {dims}")
+    with open(os.path.join(out_dir, f"train_step_{cfg_name}.manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"  wrote train_step_{cfg_name}.manifest.txt")
+
+
+def lower_quant_kernels(out_dir: str) -> None:
+    for block in QUANT_BLOCKS:
+        tag = f"cluster_quant_{block}"
+        fn = jax.jit(lambda v, b: cluster_quant.quantize_pipeline(v, b, block=cluster_quant.DEFAULT_BLOCK))
+        lowered = fn.lower(
+            jax.ShapeDtypeStruct((block,), jnp.float32),
+            jax.ShapeDtypeStruct((cluster_quant.NUM_CLUSTERS - 1,), jnp.float32),
+        )
+        write(out_dir, f"{tag}.hlo.txt", to_hlo_text(lowered))
+
+        deq = jax.jit(lambda q, l, s, b: cluster_quant.cluster_dequant(q, l, s, b))
+        lowered = deq.lower(
+            jax.ShapeDtypeStruct((block,), jnp.uint8),
+            jax.ShapeDtypeStruct((block,), jnp.int32),
+            jax.ShapeDtypeStruct((cluster_quant.NUM_CLUSTERS,), jnp.float32),
+            jax.ShapeDtypeStruct((cluster_quant.NUM_CLUSTERS,), jnp.float32),
+        )
+        write(out_dir, f"cluster_dequant_{block}.hlo.txt", to_hlo_text(lowered))
+
+    for block in PACK_BLOCKS:
+        fn = jax.jit(lambda p, c: bitmask_delta.bitmask_pack(p, c))
+        lowered = fn.lower(
+            jax.ShapeDtypeStruct((block,), jnp.uint16),
+            jax.ShapeDtypeStruct((block,), jnp.uint16),
+        )
+        write(out_dir, f"bitmask_pack_{block}.hlo.txt", to_hlo_text(lowered))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    ap.add_argument(
+        "--models",
+        default=",".join(DEFAULT_MODELS),
+        help=f"comma-separated model configs (available: {', '.join(model_lib.CONFIGS)})",
+    )
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    for name in args.models.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        if name not in model_lib.CONFIGS:
+            print(f"unknown model config {name!r}", file=sys.stderr)
+            sys.exit(1)
+        lower_model(name, args.out)
+    if not args.skip_kernels:
+        lower_quant_kernels(args.out)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Pallas causal attention kernel — the training substrate's hot-spot.
+
+The checkpoint experiments need *real* training state, so the L2 GPT model
+(model.py) runs its attention through this kernel. Grid over heads; each
+step holds one head's (seq, dh) q/k/v tiles plus the (seq, seq) score tile
+in VMEM — for the model sizes this substrate trains (seq ≤ 256,
+dh ≤ 64) that is ≤ 0.5 MiB, far under the 16 MiB VMEM budget, and the two
+matmuls per step target the MXU.
+
+interpret=True as everywhere: the artifact must execute on the CPU PJRT
+client.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0]                                          # [seq, dh]
+    k = k_ref[0]
+    v = v_ref[0]
+    seq, dh = q.shape
+    scores = jnp.dot(q, k.T) / jnp.sqrt(jnp.float32(dh))  # MXU matmul
+    row = jax.lax.broadcasted_iota(jnp.int32, (seq, seq), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (seq, seq), 1)
+    scores = jnp.where(col <= row, scores, -1e30)         # causal mask
+    # numerically stable softmax on the VPU
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(probs, v)                          # MXU matmul
+
+
+def _pallas_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    heads, seq, dh = q.shape
+    spec = pl.BlockSpec((1, seq, dh), lambda h: (h, 0, 0))
+    return pl.pallas_call(
+        _attn_kernel,
+        grid=(heads,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((heads, seq, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def _reference(q, k, v):
+    # pure-jnp twin used only to derive the backward pass (pallas_call has
+    # no autodiff rule); numerically identical to the kernel within f32
+    # rounding, so the VJP is consistent with the kernel's primal.
+    seq, dh = q.shape[1], q.shape[2]
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+    scores = jnp.where(mask[None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+@jax.custom_vjp
+def causal_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Causal softmax attention. q,k,v: [heads, seq, dh] f32.
+
+    Forward runs the Pallas kernel; backward is the autodiff of the
+    numerically-identical jnp twin (flash-attention-style recompute — no
+    probs are saved between passes).
+    """
+    return _pallas_attention(q, k, v)
+
+
+def _attn_fwd(q, k, v):
+    return _pallas_attention(q, k, v), (q, k, v)
+
+
+def _attn_bwd(res, do):
+    q, k, v = res
+    _, vjp = jax.vjp(_reference, q, k, v)
+    return vjp(do)
+
+
+causal_attention.defvjp(_attn_fwd, _attn_bwd)

@@ -1,0 +1,59 @@
+"""Pallas kernel for bitmask delta detection + bit packing (paper §3.3).
+
+Change detection over the raw 16-bit patterns of fp16/bf16 model states,
+then packing 8 mask bits per byte. On TPU the pack is expressed as a
+(BLOCK/8, 8) × (8,) contraction with powers of two — an MXU-able dot
+instead of the CUDA byte-shuffle the paper's GPU implementation would use
+(DESIGN.md §Hardware-Adaptation).
+
+The *gather* of changed values is data-dependent-shape and therefore
+cannot live in XLA; rust performs it from the packed mask (see
+rust/src/compress/bitmask.rs). This kernel produces exactly what rust
+needs: the packed mask and the changed count.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 8192
+
+
+def _pack_kernel(prev_ref, curr_ref, packed_ref, count_ref):
+    prev = prev_ref[...]
+    curr = curr_ref[...]
+    changed = (prev != curr).astype(jnp.uint32)          # [BLOCK]
+    n = changed.shape[0]
+    grouped = changed.reshape(n // 8, 8)
+    weights = 2 ** jnp.arange(8, dtype=jnp.uint32)       # LSB-first like rust
+    packed_ref[...] = jnp.sum(grouped * weights[None, :], axis=1).astype(jnp.uint8)
+    count_ref[...] = jnp.sum(changed).astype(jnp.int32)[None]
+
+
+def bitmask_pack(prev_bits: jnp.ndarray, curr_bits: jnp.ndarray, block: int = DEFAULT_BLOCK):
+    """(prev u16 [n], curr u16 [n]) → (packed u8 [n/8], count i32).
+
+    n must be a multiple of `block` (rust pads the tail chunk with equal
+    bytes, which contribute 0 bits).
+    """
+    n = prev_bits.shape[0]
+    assert n % block == 0 and block % 8 == 0
+    grid = n // block
+    packed, counts = pl.pallas_call(
+        _pack_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block // 8,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n // 8,), jnp.uint8),
+            jax.ShapeDtypeStruct((grid,), jnp.int32),
+        ],
+        interpret=True,
+    )(prev_bits, curr_bits)
+    return packed, jnp.sum(counts).astype(jnp.int32)

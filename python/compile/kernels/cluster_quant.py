@@ -1,0 +1,140 @@
+"""Pallas kernels for cluster-based quantization (paper §3.4).
+
+The paper's A100 implementation is elementwise CUDA; on TPU we restructure
+around VMEM tiles and VPU broadcast-compares (DESIGN.md
+§Hardware-Adaptation):
+
+* ``cluster_stats``  — grid over BLOCK-sized value tiles; each step labels
+  its tile (compare against the m-1 boundaries resident in VMEM) and
+  reduces per-cluster min/max via masked reductions over a (BLOCK, m)
+  one-hot tile. Per-block partials are combined by the caller (a jnp
+  ``min``/``max`` over the block axis — a trivially fusable reduction).
+* ``cluster_apply``  — second pass: normalize + round to uint8 using the
+  per-cluster scale/offset table (16 × 2 floats, VMEM-resident).
+
+VMEM budget per grid step at BLOCK=4096, m=16: value tile 16 KiB + one-hot
+bool tile 64 KiB + label tile 16 KiB ≪ 16 MiB, so the kernel is
+HBM-bandwidth-bound — matching the paper's observation that checkpoint
+compression competes with I/O, not FLOPs.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU perf is estimated structurally (DESIGN.md §Perf).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+NUM_CLUSTERS = 16
+
+
+def _stats_kernel(values_ref, boundaries_ref, labels_ref, cmin_ref, cmax_ref):
+    v = values_ref[...]                                  # [BLOCK]
+    b = boundaries_ref[...]                              # [m-1]
+    labels = jnp.sum(v[:, None] > b[None, :], axis=1).astype(jnp.int32)
+    labels_ref[...] = labels
+    one_hot = labels[:, None] == jnp.arange(NUM_CLUSTERS)[None, :]
+    cmin_ref[0] = jnp.min(jnp.where(one_hot, v[:, None], jnp.inf), axis=0)
+    cmax_ref[0] = jnp.max(jnp.where(one_hot, v[:, None], -jnp.inf), axis=0)
+
+
+def cluster_stats(values: jnp.ndarray, boundaries: jnp.ndarray, block: int = DEFAULT_BLOCK):
+    """Labels + per-cluster min/max for a [n] f32 tensor (n % block == 0).
+
+    Returns (labels i32 [n], cmin f32 [16], cmax f32 [16]).
+    """
+    n = values.shape[0]
+    assert n % block == 0, f"n={n} not a multiple of block={block}"
+    grid = n // block
+    labels, pmin, pmax = pl.pallas_call(
+        _stats_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((NUM_CLUSTERS - 1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1, NUM_CLUSTERS), lambda i: (i, 0)),
+            pl.BlockSpec((1, NUM_CLUSTERS), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((grid, NUM_CLUSTERS), jnp.float32),
+            jax.ShapeDtypeStruct((grid, NUM_CLUSTERS), jnp.float32),
+        ],
+        interpret=True,
+    )(values, boundaries)
+    return labels, jnp.min(pmin, axis=0), jnp.max(pmax, axis=0)
+
+
+def _apply_kernel(values_ref, labels_ref, scales_ref, offsets_ref, q_ref):
+    v = values_ref[...]
+    l = labels_ref[...]
+    s = scales_ref[...][l]
+    b = offsets_ref[...][l]
+    q = jnp.where(s > 0, jnp.round((v - b) / jnp.where(s > 0, s, 1.0) * 255.0), 0.0)
+    q_ref[...] = jnp.clip(q, 0, 255).astype(jnp.uint8)
+
+
+def cluster_apply(values, labels, scales, offsets, block: int = DEFAULT_BLOCK):
+    """Quantize values to uint8 given labels and per-cluster ranges."""
+    n = values.shape[0]
+    assert n % block == 0
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((NUM_CLUSTERS,), lambda i: (0,)),
+            pl.BlockSpec((NUM_CLUSTERS,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.uint8),
+        interpret=True,
+    )(values, labels, scales, offsets)
+
+
+def _dequant_kernel(q_ref, labels_ref, scales_ref, offsets_ref, v_ref):
+    q = q_ref[...].astype(jnp.float32)
+    l = labels_ref[...]
+    v_ref[...] = q / 255.0 * scales_ref[...][l] + offsets_ref[...][l]
+
+
+def cluster_dequant(q, labels, scales, offsets, block: int = DEFAULT_BLOCK):
+    """Dequantize uint8 back to f32 (Eq. 4)."""
+    n = q.shape[0]
+    assert n % block == 0
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((NUM_CLUSTERS,), lambda i: (0,)),
+            pl.BlockSpec((NUM_CLUSTERS,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(q, labels, scales, offsets)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def quantize_pipeline(values, boundaries, block: int = DEFAULT_BLOCK):
+    """Full fused pipeline: stats → ranges → quantize.
+
+    Returns (labels i32, scales f32[16], offsets f32[16], q u8). This is the
+    function AOT-lowered to ``cluster_quant_<block>.hlo.txt``; rust calls it
+    per value-chunk from the XLA-backed quantizer.
+    """
+    labels, cmin, cmax = cluster_stats(values, boundaries, block)
+    finite = cmin <= cmax
+    scales = jnp.where(finite, cmax - cmin, 0.0)
+    offsets = jnp.where(finite, cmin, 0.0)
+    q = cluster_apply(values, labels, scales, offsets, block)
+    return labels, scales, offsets, q

@@ -1,0 +1,77 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(python/tests/) asserts allclose between kernel and oracle across shape and
+dtype sweeps. The oracles are also the "L2-only" fallbacks used when a
+block size has no specialized kernel.
+"""
+
+import jax.numpy as jnp
+import jax
+
+
+# ---------------------------------------------------------------------------
+# Cluster-based quantization (paper §3.4)
+# ---------------------------------------------------------------------------
+
+def cluster_labels_ref(values: jnp.ndarray, boundaries: jnp.ndarray) -> jnp.ndarray:
+    """Label = number of boundaries strictly below the value (i32)."""
+    return jnp.sum(values[:, None] > boundaries[None, :], axis=1).astype(jnp.int32)
+
+
+def cluster_minmax_ref(values, labels, m: int):
+    """Per-cluster (min, max); empty clusters give (+inf, -inf)."""
+    inf = jnp.inf
+    one_hot = labels[:, None] == jnp.arange(m)[None, :]
+    cmin = jnp.min(jnp.where(one_hot, values[:, None], inf), axis=0)
+    cmax = jnp.max(jnp.where(one_hot, values[:, None], -inf), axis=0)
+    return cmin, cmax
+
+
+def cluster_quantize_ref(values, labels, scales, offsets):
+    """q = round((v - b[l]) / S[l] * 255), uint8; q = 0 where S[l] == 0."""
+    s = scales[labels]
+    b = offsets[labels]
+    q = jnp.where(s > 0, jnp.round((values - b) / jnp.where(s > 0, s, 1.0) * 255.0), 0.0)
+    return jnp.clip(q, 0, 255).astype(jnp.uint8)
+
+
+def cluster_dequantize_ref(q, labels, scales, offsets):
+    """v̂ = q/255 * S[l] + b[l] (Eq. 4 path)."""
+    return q.astype(jnp.float32) / 255.0 * scales[labels] + offsets[labels]
+
+
+# ---------------------------------------------------------------------------
+# Bitmask delta sparsification (paper §3.3)
+# ---------------------------------------------------------------------------
+
+def bitmask_pack_ref(prev_bits: jnp.ndarray, curr_bits: jnp.ndarray):
+    """Packed changed-element bitmask over 16-bit words.
+
+    prev/curr are the raw uint16 bit patterns of fp16/bf16 model states
+    (change detection is *bit* equality — see rust compress::bitmask).
+    Returns (packed uint8 [n/8], changed_count i32). n must be a multiple
+    of 8 (rust pads the tail block).
+    """
+    changed = (prev_bits != curr_bits).astype(jnp.uint32)
+    n = changed.shape[0]
+    grouped = changed.reshape(n // 8, 8)
+    weights = (2 ** jnp.arange(8, dtype=jnp.uint32))  # LSB-first like rust
+    packed = jnp.sum(grouped * weights[None, :], axis=1).astype(jnp.uint8)
+    return packed, jnp.sum(changed).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Attention (training substrate hot-spot)
+# ---------------------------------------------------------------------------
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Softmax attention. q,k,v: [heads, seq, dh] (f32)."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(dh).astype(q.dtype)
+    if causal:
+        seq = q.shape[1]
+        mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+        scores = jnp.where(mask[None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)

@@ -1,0 +1,202 @@
+"""Layer-2: GPT-style decoder + fused Adam train_step in JAX.
+
+This is the training substrate that produces the *real* model/optimizer
+states the checkpoint experiments compress (Figs. 9, 12, 13; Tables 3–4).
+Attention runs through the Layer-1 Pallas kernel so the whole three-layer
+stack lowers into one HLO module per model config.
+
+The artifact interface is a flat tensor list (HLO has no pytrees):
+
+    init_<cfg>:        ()                                  -> (p_0 .. p_{P-1})
+    train_step_<cfg>:  (p_0.., m_0.., v_0.., step, tokens) -> (p'.., m'.., v'.., loss)
+
+with `step` i32 scalar and `tokens` i32 [batch, seq+1] (inputs = tokens[:, :-1],
+targets = tokens[:, 1:]). Parameter order is canonical (see `param_specs`)
+and written to `train_step_<cfg>.manifest.txt` for the rust trainer.
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import causal_attention
+
+# Adam hyperparameters (constant across the repro; mirrored in manifest).
+# LR follows a cosine decay to LR*LR_FLOOR over DECAY_STEPS — real LLM
+# pre-training always decays, and the late-stage small-update regime is
+# exactly what makes fp16 model-state deltas sparse (paper §3.3 / Fig. 9:
+# "when the loss remains stable, there is minimal change in model states").
+LR = 1e-3
+LR_FLOOR = 0.003
+DECAY_STEPS = 400.0
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def lr_at(t):
+    """Cosine-decayed learning rate at (1-based) step t."""
+    import jax.numpy as jnp
+
+    frac = jnp.minimum(t, DECAY_STEPS) / DECAY_STEPS
+    decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return LR * jnp.maximum(decay, LR_FLOOR)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq: int
+    batch: int
+
+    @property
+    def d_head(self):
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+CONFIGS = {
+    # ~0.1M params: smoke tests and fast CI
+    "gpt-nano": ModelConfig("gpt-nano", vocab=256, d_model=64, n_layers=2, n_heads=2, seq=64, batch=8),
+    # ~0.9M params: the Fig. 9/12/13 workhorse on this single-core host
+    "gpt-micro": ModelConfig("gpt-micro", vocab=512, d_model=128, n_layers=4, n_heads=4, seq=128, batch=8),
+    # ~5M params
+    "gpt-tiny": ModelConfig("gpt-tiny", vocab=1024, d_model=256, n_layers=6, n_heads=8, seq=128, batch=8),
+    # ~26M params
+    "gpt-small": ModelConfig("gpt-small", vocab=2048, d_model=512, n_layers=8, n_heads=8, seq=256, batch=4),
+    # ~92M params: the "~100M transformer" end-to-end config (slow on 1 core;
+    # the e2e example defaults to gpt-micro and takes --model gpt-100m)
+    "gpt-100m": ModelConfig("gpt-100m", vocab=8192, d_model=768, n_layers=12, n_heads=12, seq=256, batch=2),
+}
+
+
+def param_specs(cfg: ModelConfig):
+    """Canonical (name, shape) list — the artifact parameter order."""
+    d, v, s = cfg.d_model, cfg.vocab, cfg.seq
+    specs = [("wte", (v, d)), ("wpe", (s, d))]
+    for i in range(cfg.n_layers):
+        p = f"h.{i}."
+        specs += [
+            (p + "ln1.g", (d,)),
+            (p + "ln1.b", (d,)),
+            (p + "attn.qkv_w", (d, 3 * d)),
+            (p + "attn.proj_w", (d, d)),
+            (p + "ln2.g", (d,)),
+            (p + "ln2.b", (d,)),
+            (p + "mlp.fc_w", (d, 4 * d)),
+            (p + "mlp.fc_b", (4 * d,)),
+            (p + "mlp.out_w", (4 * d, d)),
+            (p + "mlp.out_b", (d,)),
+        ]
+    specs += [("lnf.g", (d,)), ("lnf.b", (d,))]
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+
+    return sum(math.prod(s) for _, s in param_specs(cfg))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Initialize the flat parameter list (GPT-2-style scales)."""
+    specs = param_specs(cfg)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(specs))
+    out = []
+    for key, (name, shape) in zip(keys, specs):
+        if name.endswith(".g"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith((".b", ".fc_b", ".out_b")):
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif name.endswith("proj_w") or name.endswith("out_w"):
+            # residual-path projections get the 1/sqrt(2L) shrink
+            scale = 0.02 / jnp.sqrt(2.0 * cfg.n_layers)
+            out.append(scale * jax.random.normal(key, shape, jnp.float32))
+        else:
+            out.append(0.02 * jax.random.normal(key, shape, jnp.float32))
+    return tuple(out)
+
+
+def _layer_norm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def forward_loss(cfg: ModelConfig, params, tokens):
+    """Cross-entropy LM loss. tokens: i32 [batch, seq+1]."""
+    specs = param_specs(cfg)
+    p = dict(zip([n for n, _ in specs], params))
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    b, s = inputs.shape
+    d, nh, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+
+    x = p["wte"][inputs] + p["wpe"][None, :s, :]
+    for i in range(cfg.n_layers):
+        pre = f"h.{i}."
+        h = _layer_norm(x, p[pre + "ln1.g"], p[pre + "ln1.b"])
+        qkv = h @ p[pre + "attn.qkv_w"]                      # [b, s, 3d]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(t):
+            return t.reshape(b, s, nh, dh).transpose(0, 2, 1, 3).reshape(b * nh, s, dh)
+
+        o = causal_attention(heads(q), heads(k), heads(v))   # L1 Pallas kernel
+        o = o.reshape(b, nh, s, dh).transpose(0, 2, 1, 3).reshape(b, s, d)
+        x = x + o @ p[pre + "attn.proj_w"]
+        h = _layer_norm(x, p[pre + "ln2.g"], p[pre + "ln2.b"])
+        h = jax.nn.gelu(h @ p[pre + "mlp.fc_w"] + p[pre + "mlp.fc_b"])
+        x = x + h @ p[pre + "mlp.out_w"] + p[pre + "mlp.out_b"]
+
+    x = _layer_norm(x, p["lnf.g"], p["lnf.b"])
+    logits = x @ p["wte"].T                                  # weight-tied head
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def train_step(cfg: ModelConfig, params, m, v, step, tokens):
+    """One fused forward/backward/Adam step. Returns (params', m', v', loss)."""
+    loss, grads = jax.value_and_grad(lambda ps: forward_loss(cfg, ps, tokens))(tuple(params))
+    t = step.astype(jnp.float32) + 1.0
+    lr = lr_at(t)
+    bc1 = 1.0 - BETA1 ** t
+    bc2 = 1.0 - BETA2 ** t
+    new_p, new_m, new_v = [], [], []
+    for pi, mi, vi, gi in zip(params, m, v, grads):
+        mi = BETA1 * mi + (1.0 - BETA1) * gi
+        vi = BETA2 * vi + (1.0 - BETA2) * gi * gi
+        update = (mi / bc1) / (jnp.sqrt(vi / bc2) + EPS)
+        new_p.append(pi - lr * update)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, loss
+
+
+def train_step_flat(cfg: ModelConfig, *flat):
+    """Flat-tensor wrapper matching the artifact interface."""
+    n = len(param_specs(cfg))
+    assert len(flat) == 3 * n + 2, f"expected {3 * n + 2} args, got {len(flat)}"
+    params, m, v = flat[:n], flat[n : 2 * n], flat[2 * n : 3 * n]
+    step, tokens = flat[3 * n], flat[3 * n + 1]
+    new_p, new_m, new_v, loss = train_step(cfg, params, m, v, step, tokens)
+    return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+
+def init_flat(cfg: ModelConfig, seed: int = 0):
+    """Flat init matching the artifact interface: params then zero m/v."""
+    params = init_params(cfg, seed)
+    zeros = tuple(jnp.zeros_like(t) for t in params)
+    return params + zeros + zeros
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def train_step_jit(cfg: ModelConfig, *flat):
+    return train_step_flat(cfg, *flat)

@@ -1,0 +1,112 @@
+"""AOT artifact pipeline tests: lowering produces loadable HLO text whose
+*execution via XLA* matches direct jax execution (the same numbers the
+rust runtime will see)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model as model_lib
+from compile.kernels import cluster_quant
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def run_hlo_text(text: str, args):
+    """Compile + run HLO text through the same XLA the rust PJRT client
+    wraps (numerics identical): text → HloModule → XlaComputation → MLIR →
+    backend compile."""
+    from jax._src import compiler
+    from jax._src.interpreters import mlir as jmlir
+    from jax._src.lib.mlir import ir
+    from jaxlib import _jax
+
+    mod = xc._xla.hlo_module_from_text(text)
+    comp = xc._xla.XlaComputation(mod.as_serialized_hlo_module_proto())
+    mlir_str = xc._xla.mlir.xla_computation_to_mlir_module(comp)
+    backend = jax.devices("cpu")[0].client
+    dl = _jax.DeviceList(tuple(jax.devices("cpu")[:1]))
+    opts = compiler.get_compile_options(num_replicas=1, num_partitions=1)
+    with jmlir.make_ir_context():
+        module = ir.Module.parse(mlir_str)
+        exe = compiler.backend_compile_and_load(backend, module, dl, opts, [])
+    bufs = [backend.buffer_from_pyval(np.asarray(a)) for a in args]
+    out = exe.execute(bufs)
+    return [np.asarray(o) for o in out]
+
+
+def test_to_hlo_text_is_parseable():
+    cfg = model_lib.CONFIGS["gpt-nano"]
+    init = jax.jit(lambda: model_lib.init_flat(cfg, seed=0))
+    text = aot.to_hlo_text(init.lower())
+    assert text.startswith("HloModule")
+    # parses back
+    mod = xc._xla.hlo_module_from_text(text)
+    assert mod is not None
+
+
+def test_train_step_hlo_matches_jax(tmp_path):
+    cfg = model_lib.CONFIGS["gpt-nano"]
+    n = len(model_lib.param_specs(cfg))
+    flat = [np.asarray(t) for t in model_lib.init_flat(cfg, seed=0)]
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq + 1)).astype(np.int32)
+    args = flat + [np.int32(0), tokens]
+
+    jax_out = model_lib.train_step_flat(
+        cfg, *[jnp.array(a) for a in args]
+    )
+    jax_loss = float(jax_out[-1])
+
+    step_fn = jax.jit(lambda *f: model_lib.train_step_flat(cfg, *f))
+    spec_args = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in args]
+    text = aot.to_hlo_text(step_fn.lower(*spec_args))
+    hlo_out = run_hlo_text(text, args)
+    # lowered with return_tuple=True → flat outputs list
+    assert len(hlo_out) == 3 * n + 1
+    np.testing.assert_allclose(float(hlo_out[-1]), jax_loss, rtol=1e-5)
+    np.testing.assert_allclose(hlo_out[0], np.asarray(jax_out[0]), rtol=1e-5, atol=1e-7)
+
+
+def test_quant_kernel_hlo_matches_jax():
+    block = 1 << 16
+    rng = np.random.default_rng(1)
+    v = rng.normal(0, 1e-3, block).astype(np.float32)
+    samples = rng.normal(0, 1e-3, 100_000)
+    b = np.quantile(samples, np.arange(1, 16) / 16).astype(np.float32)
+
+    fn = jax.jit(lambda vv, bb: cluster_quant.quantize_pipeline(vv, bb))
+    jax_labels, jax_scales, jax_offsets, jax_q = fn(jnp.array(v), jnp.array(b))
+
+    text = aot.to_hlo_text(
+        fn.lower(
+            jax.ShapeDtypeStruct((block,), jnp.float32),
+            jax.ShapeDtypeStruct((15,), jnp.float32),
+        )
+    )
+    out = run_hlo_text(text, [v, b])
+    np.testing.assert_array_equal(out[0], np.asarray(jax_labels))
+    np.testing.assert_allclose(out[1], np.asarray(jax_scales))
+    np.testing.assert_array_equal(out[3], np.asarray(jax_q))
+
+
+def test_aot_main_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    argv = sys.argv
+    sys.argv = ["aot", "--out", str(out), "--models", "gpt-nano", "--skip-kernels"]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    manifest = (out / "train_step_gpt-nano.manifest.txt").read_text()
+    assert "model gpt-nano" in manifest
+    assert "param wte f32 256x64" in manifest
+    n_params = len(model_lib.param_specs(model_lib.CONFIGS["gpt-nano"]))
+    assert manifest.count("\nparam ") == n_params
+    assert (out / "init_gpt-nano.hlo.txt").exists()
+    assert (out / "train_step_gpt-nano.hlo.txt").exists()

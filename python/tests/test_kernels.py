@@ -1,0 +1,160 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/value distributions; every property is an
+exact or allclose comparison against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, bitmask_delta, cluster_quant, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+# --------------------------------------------------------------------------
+# cluster quantization
+# --------------------------------------------------------------------------
+
+def normal_boundaries(rng, m=16, mu=0.0, sigma=1.0):
+    qs = np.arange(1, m) / m
+    from scipy.stats import norm  # pragma: no cover — fallback below if absent
+    return mu + sigma * norm.ppf(qs)
+
+
+def boundaries_from_samples(mu, sigma, m=16):
+    # quantile boundaries without scipy (matches rust normal_boundaries
+    # within sampling error; exactness does not matter for the oracle test)
+    rng = np.random.default_rng(0)
+    samples = rng.normal(mu, sigma, 200_000)
+    return np.quantile(samples, np.arange(1, m) / m).astype(np.float32)
+
+
+@given(
+    n_blocks=st.integers(1, 4),
+    mu=st.floats(-2.0, 2.0),
+    log_sigma=st.floats(-4.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cluster_stats_matches_ref(n_blocks, mu, log_sigma, seed):
+    sigma = 10.0 ** log_sigma
+    n = n_blocks * cluster_quant.DEFAULT_BLOCK
+    rng = np.random.default_rng(seed)
+    v = jnp.array(rng.normal(mu, sigma, n), dtype=jnp.float32)
+    b = jnp.array(boundaries_from_samples(mu, sigma), dtype=jnp.float32)
+    labels, cmin, cmax = cluster_quant.cluster_stats(v, b)
+    l_ref = ref.cluster_labels_ref(v, b)
+    assert (labels == l_ref).all()
+    cmin_r, cmax_r = ref.cluster_minmax_ref(v, l_ref, cluster_quant.NUM_CLUSTERS)
+    np.testing.assert_array_equal(np.asarray(cmin), np.asarray(cmin_r))
+    np.testing.assert_array_equal(np.asarray(cmax), np.asarray(cmax_r))
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_quantize_pipeline_roundtrip_error_bounded(seed):
+    n = cluster_quant.DEFAULT_BLOCK * 2
+    rng = np.random.default_rng(seed)
+    v = jnp.array(rng.normal(0, 1e-3, n), dtype=jnp.float32)
+    b = jnp.array(boundaries_from_samples(0, 1e-3), dtype=jnp.float32)
+    labels, scales, offsets, q = cluster_quant.quantize_pipeline(v, b)
+    # q must equal the oracle quantizer given the same labels/ranges
+    q_ref = ref.cluster_quantize_ref(v, labels, scales, offsets)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    # dequantized error ≤ half a step of the widest cluster
+    deq = cluster_quant.cluster_dequant(q, labels, scales, offsets)
+    step = float(jnp.max(scales)) / 255.0
+    assert float(jnp.max(jnp.abs(deq - v))) <= step * 0.51 + 1e-9
+
+
+def test_cluster_empty_cluster_is_safe():
+    # all values identical -> every cluster but one empty, scale 0
+    n = cluster_quant.DEFAULT_BLOCK
+    v = jnp.full((n,), 3.25, dtype=jnp.float32)
+    b = jnp.linspace(-1, 1, cluster_quant.NUM_CLUSTERS - 1, dtype=jnp.float32)
+    labels, scales, offsets, q = cluster_quant.quantize_pipeline(v, b)
+    deq = cluster_quant.cluster_dequant(q, labels, scales, offsets)
+    np.testing.assert_allclose(np.asarray(deq), 3.25)
+
+
+# --------------------------------------------------------------------------
+# bitmask pack
+# --------------------------------------------------------------------------
+
+@given(
+    n_blocks=st.integers(1, 3),
+    change_rate=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bitmask_pack_matches_ref(n_blocks, change_rate, seed):
+    n = n_blocks * bitmask_delta.DEFAULT_BLOCK
+    rng = np.random.default_rng(seed)
+    prev = rng.integers(0, 2**16, n).astype(np.uint16)
+    curr = prev.copy()
+    k = int(n * change_rate)
+    idx = rng.choice(n, k, replace=False)
+    curr[idx] ^= np.uint16(0x5A5A)
+    packed, count = bitmask_delta.bitmask_pack(jnp.array(prev), jnp.array(curr))
+    p_ref, c_ref = ref.bitmask_pack_ref(jnp.array(prev), jnp.array(curr))
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(p_ref))
+    assert int(count) == int(c_ref) == k
+
+
+def test_bitmask_pack_bit_order_is_lsb_first():
+    n = bitmask_delta.DEFAULT_BLOCK
+    prev = np.zeros(n, dtype=np.uint16)
+    curr = prev.copy()
+    curr[0] = 1   # element 0 changed -> bit 0 of byte 0
+    curr[9] = 1   # element 9 changed -> bit 1 of byte 1
+    packed, count = bitmask_delta.bitmask_pack(jnp.array(prev), jnp.array(curr))
+    assert int(count) == 2
+    assert int(packed[0]) == 0b0000_0001
+    assert int(packed[1]) == 0b0000_0010
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+@given(
+    heads=st.sampled_from([1, 2, 4]),
+    seq=st.sampled_from([8, 32, 64]),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(heads, seq, dh, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.array(rng.normal(size=(heads, seq, dh)), dtype=jnp.float32)
+    k = jnp.array(rng.normal(size=(heads, seq, dh)), dtype=jnp.float32)
+    v = jnp.array(rng.normal(size=(heads, seq, dh)), dtype=jnp.float32)
+    out = attention.causal_attention(q, k, v)
+    out_ref = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_ref), rtol=3e-5, atol=3e-5)
+
+
+def test_attention_is_causal():
+    # changing future keys/values must not affect earlier outputs
+    rng = np.random.default_rng(1)
+    q = jnp.array(rng.normal(size=(2, 16, 8)), dtype=jnp.float32)
+    k = jnp.array(rng.normal(size=(2, 16, 8)), dtype=jnp.float32)
+    v = jnp.array(rng.normal(size=(2, 16, 8)), dtype=jnp.float32)
+    out1 = attention.causal_attention(q, k, v)
+    k2 = k.at[:, 10:, :].set(99.0)
+    v2 = v.at[:, 10:, :].set(-99.0)
+    out2 = attention.causal_attention(q, k2, v2)
+    np.testing.assert_allclose(np.asarray(out1[:, :10]), np.asarray(out2[:, :10]), rtol=1e-6)
+
+
+def test_attention_gradient_matches_ref_gradient():
+    rng = np.random.default_rng(2)
+    q = jnp.array(rng.normal(size=(2, 16, 8)), dtype=jnp.float32)
+    k = jnp.array(rng.normal(size=(2, 16, 8)), dtype=jnp.float32)
+    v = jnp.array(rng.normal(size=(2, 16, 8)), dtype=jnp.float32)
+    g1 = jax.grad(lambda q: jnp.sum(attention.causal_attention(q, k, v) ** 2))(q)
+    g2 = jax.grad(lambda q: jnp.sum(ref.attention_ref(q, k, v) ** 2))(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-5)

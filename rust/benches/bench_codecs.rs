@@ -1,0 +1,225 @@
+//! Codec micro-benchmarks + ablations: throughput and ratio of every
+//! codec in the zoo over model-state deltas and optimizer states,
+//! including the Huffman-vs-packed-bitmask argument of §3.3, the
+//! byte-grouping lossless baseline the paper declines for speed, and the
+//! unified quality metric Q (Eq. 5).
+//!
+//! Also compares the native rust cluster-quant hot path against the
+//! XLA/Pallas-artifact path (L1 kernel executed via PJRT).
+//!
+//! Run: `cargo bench --bench bench_codecs`
+
+use std::time::Instant;
+
+use bitsnap::bench::{bench, fmt_throughput, Table};
+use bitsnap::compress::metrics::{quality_scores, CodecMeasurement, QualityWeights};
+use bitsnap::compress::{
+    bitmask, byte_group, cluster_quant, coo, huffman, metrics, naive_quant,
+};
+use bitsnap::tensor::{DType, HostTensor, XorShiftRng};
+
+fn main() {
+    let n: usize = std::env::var("N").ok().and_then(|v| v.parse().ok()).unwrap_or(1 << 22);
+    let mut rng = XorShiftRng::new(99);
+
+    // ----- model-state delta codecs (15% changed fp16) -------------------
+    println!("== model-state delta codecs ({n} fp16 params, 15% changed) ==\n");
+    let base_vals = rng.normal_vec(n, 0.0, 0.02);
+    let base = HostTensor::from_f32_as_f16(&[n], &base_vals).unwrap();
+    let mut curr = base.clone();
+    {
+        let bytes = curr.bytes_mut();
+        for i in rng.choose_indices(n, n * 15 / 100) {
+            bytes[2 * i] ^= 1;
+        }
+    }
+    let raw = n * 2;
+    let mut table =
+        Table::new(&["codec", "ratio", "encode throughput", "decode throughput", "lossless"]);
+    let mut measurements = Vec::new();
+    let mut names = Vec::new();
+
+    type EncFn<'a> = Box<dyn Fn() -> Vec<u8> + 'a>;
+    let encoders: Vec<(&str, EncFn)> = vec![
+        ("bitmask packed", Box::new(|| bitmask::encode_packed(base.bytes(), curr.bytes(), 2).unwrap())),
+        ("bitmask naive", Box::new(|| bitmask::encode_naive(base.bytes(), curr.bytes(), 2).unwrap())),
+        ("coo u16", Box::new(|| coo::encode(base.bytes(), curr.bytes(), 2, coo::IndexWidth::U16).unwrap())),
+        ("coo u32", Box::new(|| coo::encode(base.bytes(), curr.bytes(), 2, coo::IndexWidth::U32).unwrap())),
+    ];
+    for (name, enc) in &encoders {
+        let payload = enc();
+        let stats = bench(1, 5, || {
+            std::hint::black_box(enc());
+        });
+        let dec_stats = match *name {
+            "bitmask packed" => bench(1, 5, || {
+                std::hint::black_box(bitmask::decode_packed(base.bytes(), &payload, 2).unwrap());
+            }),
+            "bitmask naive" => bench(1, 5, || {
+                std::hint::black_box(bitmask::decode_naive(base.bytes(), &payload, 2).unwrap());
+            }),
+            _ => bench(1, 5, || {
+                std::hint::black_box(coo::decode(base.bytes(), &payload, 2).unwrap());
+            }),
+        };
+        let ratio = raw as f64 / payload.len() as f64;
+        table.row(&[
+            name.to_string(),
+            format!("{ratio:.2}x"),
+            fmt_throughput(raw, stats.median),
+            fmt_throughput(raw, dec_stats.median),
+            "yes".into(),
+        ]);
+        measurements.push(CodecMeasurement {
+            ratio,
+            throughput: raw as f64 / stats.median.as_secs_f64(),
+            mse: 0.0,
+        });
+        names.push(name.to_string());
+    }
+
+    // huffman over the dense delta (the §3.3 strawman) + byte grouping
+    let dense_delta: Vec<u8> = base
+        .bytes()
+        .iter()
+        .zip(curr.bytes())
+        .map(|(a, b)| a ^ b)
+        .collect();
+    let t0 = Instant::now();
+    let huff = huffman::encode(&dense_delta);
+    let huff_t = t0.elapsed();
+    let ratio = raw as f64 / huff.len() as f64;
+    table.row(&[
+        "huffman (dense delta)".into(),
+        format!("{ratio:.2}x"),
+        fmt_throughput(raw, huff_t),
+        "-".into(),
+        "yes".into(),
+    ]);
+    measurements.push(CodecMeasurement {
+        ratio,
+        throughput: raw as f64 / huff_t.as_secs_f64(),
+        mse: 0.0,
+    });
+    names.push("huffman".into());
+    let t0 = Instant::now();
+    let bg = byte_group::encode(&curr).unwrap();
+    let bg_t = t0.elapsed();
+    let ratio = raw as f64 / bg.len() as f64;
+    table.row(&[
+        "byte-group+zstd (no delta)".into(),
+        format!("{ratio:.2}x"),
+        fmt_throughput(raw, bg_t),
+        "-".into(),
+        "yes".into(),
+    ]);
+    measurements.push(CodecMeasurement {
+        ratio,
+        throughput: raw as f64 / bg_t.as_secs_f64(),
+        mse: 0.0,
+    });
+    names.push("byte-group".into());
+    table.print();
+
+    // §3.3 claim check
+    let packed_len = bitmask::encode_packed(base.bytes(), curr.bytes(), 2).unwrap().len();
+    println!(
+        "\n§3.3 check: packed bitmask {} vs huffman {} bytes -> packed wins: {}",
+        packed_len,
+        huff.len(),
+        packed_len < huff.len()
+    );
+
+    // Eq. 5 quality scores under both weight presets
+    for (label, w) in
+        [("training", QualityWeights::training()), ("checkpointing", QualityWeights::checkpointing())]
+    {
+        let q = quality_scores(&measurements, w);
+        let best = names[q
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0]
+            .clone();
+        println!("Q ({label}): best codec = {best}  scores = {:?}", q.iter().map(|x| (x * 100.0).round() / 100.0).collect::<Vec<_>>());
+    }
+
+    // ----- optimizer-state quantizers ------------------------------------
+    let qn = 1 << 21;
+    println!("\n== optimizer-state quantizers ({qn} fp32 values, Adam-m like) ==\n");
+    let vals = {
+        let mut r = XorShiftRng::new(5);
+        r.normal_vec(qn, 0.0, 1e-3)
+    };
+    let t = HostTensor::from_f32(&[qn], &vals).unwrap();
+    let mut qt = Table::new(&["codec", "ratio", "encode throughput", "MRE", "MSE"]);
+    for (name, enc, dec) in [
+        (
+            "cluster quant (BitSnap)",
+            Box::new(|| cluster_quant::encode(&t, 16).unwrap()) as Box<dyn Fn() -> Vec<u8>>,
+            Box::new(|p: &[u8]| cluster_quant::decode(p, DType::F32, &[qn]).unwrap())
+                as Box<dyn Fn(&[u8]) -> HostTensor>,
+        ),
+        (
+            "naive 8-bit",
+            Box::new(|| naive_quant::encode(&t).unwrap()),
+            Box::new(|p: &[u8]| naive_quant::decode(p, DType::F32, &[qn]).unwrap()),
+        ),
+        (
+            "blockwise 8-bit (Dettmers)",
+            Box::new(|| bitsnap::compress::blockwise_quant::encode(&t, 2048).unwrap()),
+            Box::new(|p: &[u8]| {
+                bitsnap::compress::blockwise_quant::decode(p, DType::F32, &[qn]).unwrap()
+            }),
+        ),
+    ] {
+        let payload = enc();
+        let stats = bench(1, 3, || {
+            std::hint::black_box(enc());
+        });
+        let back = dec(&payload).to_f32_vec().unwrap();
+        qt.row(&[
+            name.to_string(),
+            format!("{:.2}x", (qn * 4) as f64 / payload.len() as f64),
+            fmt_throughput(qn * 4, stats.median),
+            format!("{:.3}", metrics::mre(&vals, &back)),
+            format!("{:.2e}", metrics::mse(&vals, &back)),
+        ]);
+    }
+    qt.print();
+
+    // ----- native vs XLA/Pallas artifact path ----------------------------
+    let dir = bitsnap::runtime::default_artifacts_dir();
+    if dir.join("cluster_quant_1048576.hlo.txt").exists() {
+        println!("\n== native rust vs XLA(Pallas artifact) cluster quantization ==\n");
+        let block = 1 << 20;
+        let xvals = {
+            let mut r = XorShiftRng::new(6);
+            r.normal_vec(block, 0.0, 1e-3)
+        };
+        let xt = HostTensor::from_f32(&[block], &xvals).unwrap();
+        let native = bench(1, 3, || {
+            std::hint::black_box(cluster_quant::encode(&xt, 16).unwrap());
+        });
+        let mut rt = bitsnap::runtime::PjrtRuntime::cpu(dir).expect("pjrt");
+        let xq = bitsnap::runtime::kernels::XlaClusterQuant::new(block);
+        xq.quantize_tensor(&mut rt, &xt).unwrap(); // compile warmup
+        let xla = bench(0, 3, || {
+            std::hint::black_box(xq.quantize_tensor(&mut rt, &xt).unwrap());
+        });
+        let mut xtable = Table::new(&["engine", "median", "throughput"]);
+        xtable.row(&[
+            "native rust".into(),
+            format!("{:.1} ms", native.median.as_secs_f64() * 1e3),
+            fmt_throughput(block * 4, native.median),
+        ]);
+        xtable.row(&[
+            "XLA artifact (Pallas interpret)".into(),
+            format!("{:.1} ms", xla.median.as_secs_f64() * 1e3),
+            fmt_throughput(block * 4, xla.median),
+        ]);
+        xtable.print();
+        println!("\n(interpret-mode Pallas on CPU is a correctness path; TPU perf is estimated in DESIGN.md)");
+    }
+}

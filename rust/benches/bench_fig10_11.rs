@@ -1,0 +1,74 @@
+//! Figs. 10–11 — "Processing times under mp4 pp1 / mp2 pp2 parallelism":
+//! quantization (T_q), clustering (T_c) and delta-encoding time of one
+//! checkpoint under different mp×pp layouts.
+//!
+//! The paper shards a 7B GPT across 4 A100s. Here the dict is synthetic
+//! at `PARAMS` (default 2^24 ≈ 16.8M — 1/417 of 7B; DESIGN.md
+//! §Substitutions) and each shard is timed serially — per-rank times in a
+//! real fleet are uncontended, so max-over-shards is the honest parallel
+//! wall-clock on this 1-core host.
+//!
+//! Expected shape: all three phases scale down ~linearly from mp1pp1 to
+//! the 4-way layouts, and mp4pp1 ≈ mp2pp2 (both are 4 ranks; the paper
+//! sees pipeline parallelism helping slightly more).
+//!
+//! Run: `cargo bench --bench bench_fig10_11`
+
+use bitsnap::bench::Table;
+use bitsnap::compress::delta::Policy;
+use bitsnap::tensor::StateDict;
+use bitsnap::train::{compress_sharded, Parallelism};
+
+fn main() {
+    let params: usize =
+        std::env::var("PARAMS").ok().and_then(|v| v.parse().ok()).unwrap_or(1 << 24);
+    println!(
+        "Figs. 10-11: per-phase compression time under parallelism ({:.1}M-param dict)\n",
+        params as f64 / 1e6
+    );
+    let base = StateDict::synthetic_gpt(params, 11);
+    let mut curr = base.clone();
+    curr.perturb_model_states(0.15, 12);
+
+    let layouts = [
+        Parallelism::new(1, 1),
+        Parallelism::new(4, 1), // Fig. 10
+        Parallelism::new(2, 2), // Fig. 11
+        Parallelism::new(2, 1),
+        Parallelism::new(1, 4),
+    ];
+    let mut table = Table::new(&[
+        "layout",
+        "ranks",
+        "quantization (ms)",
+        "clustering (ms)",
+        "delta encoding (ms)",
+        "parallel wall (ms)",
+    ]);
+    let mut results = Vec::new();
+    for p in layouts {
+        let r = compress_sharded(&curr, Some(&base), Policy::bitsnap(), p).unwrap();
+        table.row(&[
+            p.label(),
+            format!("{}", p.world()),
+            format!("{:.1}", r.quantization().as_secs_f64() * 1e3),
+            format!("{:.1}", r.clustering().as_secs_f64() * 1e3),
+            format!("{:.1}", r.delta_encoding().as_secs_f64() * 1e3),
+            format!("{:.1}", r.simulated_parallel.as_secs_f64() * 1e3),
+        ]);
+        results.push((p, r));
+    }
+    table.print();
+
+    let wall = |i: usize| results[i].1.simulated_parallel.as_secs_f64();
+    // 4-way layouts must beat serial by >2.5x (paper: near-linear)
+    assert!(wall(1) < wall(0) / 2.5, "mp4pp1 {} vs serial {}", wall(1), wall(0));
+    assert!(wall(2) < wall(0) / 2.5, "mp2pp2 {} vs serial {}", wall(2), wall(0));
+    println!(
+        "\nspeedups vs mp1pp1: mp4pp1 {:.2}x, mp2pp2 {:.2}x, mp2pp1 {:.2}x, mp1pp4 {:.2}x",
+        wall(0) / wall(1),
+        wall(0) / wall(2),
+        wall(0) / wall(3),
+        wall(0) / wall(4)
+    );
+}

@@ -1,0 +1,85 @@
+//! Fig. 8 — "Compression ratio as a function of parameters changed":
+//! sweep the change rate from ~1% to ~95% and report the compression
+//! ratio of the improved (packed) bitmask, the naive bitmask, and the
+//! COO-u16/u32 sparse baselines over fp16 model states.
+//!
+//! Expected shape (paper §5.2.2): packed bitmask dominates up to the
+//! 93.75% break-even of Eq. 2; COO wins only at very low change rates
+//! (< ~6%); naive bitmask crosses below 1x at 50% (Eq. 1).
+//!
+//! Run: `cargo bench --bench bench_fig8`
+
+use bitsnap::bench::Table;
+use bitsnap::compress::{bitmask, coo};
+use bitsnap::tensor::{HostTensor, XorShiftRng};
+
+fn main() {
+    let n: usize = std::env::var("N").ok().and_then(|v| v.parse().ok()).unwrap_or(1 << 22);
+    println!("Fig. 8: compression ratio vs % parameters changed ({n} fp16 params)\n");
+    let mut rng = XorShiftRng::new(8);
+    let base_vals = rng.normal_vec(n, 0.0, 0.02);
+    let base = HostTensor::from_f32_as_f16(&[n], &base_vals).unwrap();
+
+    let rates: &[f64] = &[
+        0.01, 0.03125, 0.0625, 0.125, 0.15, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 0.9375, 0.95,
+    ];
+    let mut table = Table::new(&[
+        "% changed",
+        "BitSnap packed",
+        "Naive bitmask",
+        "COO u16",
+        "COO u32",
+        "best",
+    ]);
+    let raw = n * 2;
+    for &rate in rates {
+        let mut curr = base.clone();
+        let k = ((n as f64) * rate).round() as usize;
+        {
+            let bytes = curr.bytes_mut();
+            let mut r = XorShiftRng::new((rate * 1e6) as u64);
+            for i in r.choose_indices(n, k) {
+                bytes[2 * i] ^= 0x01;
+            }
+        }
+        // measured payloads (not just the analytic sizes)
+        let packed = bitmask::encode_packed(base.bytes(), curr.bytes(), 2).unwrap().len();
+        let naive = bitmask::encode_naive(base.bytes(), curr.bytes(), 2).unwrap().len();
+        let coo16 =
+            coo::encode(base.bytes(), curr.bytes(), 2, coo::IndexWidth::U16).unwrap().len();
+        let coo32 =
+            coo::encode(base.bytes(), curr.bytes(), 2, coo::IndexWidth::U32).unwrap().len();
+        let ratios = [
+            raw as f64 / packed as f64,
+            raw as f64 / naive as f64,
+            raw as f64 / coo16 as f64,
+            raw as f64 / coo32 as f64,
+        ];
+        let names = ["packed", "naive", "coo16", "coo32"];
+        let best = names[ratios
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0];
+        table.row(&[
+            format!("{:.3}%", rate * 100.0),
+            format!("{:.2}x", ratios[0]),
+            format!("{:.2}x", ratios[1]),
+            format!("{:.2}x", ratios[2]),
+            format!("{:.2}x", ratios[3]),
+            best.to_string(),
+        ]);
+    }
+    table.print();
+
+    // assert the paper's headline shapes
+    let ratio_at = |rate: f64| {
+        let k = ((n as f64) * rate).round() as usize;
+        raw as f64 / bitmask::packed_size(n, k, 2) as f64
+    };
+    assert!(ratio_at(0.15) > 4.5, "15% change should be ~5x");
+    assert!(ratio_at(0.03125) > 10.0, "3.125% change should exceed 10x");
+    assert!(ratio_at(0.9375) >= 0.99, "break-even at 93.75% (Eq. 2)");
+    println!("\nshape checks passed: ~5x @15%, >10x @3.125%, break-even @93.75%");
+}

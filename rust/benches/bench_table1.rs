@@ -1,0 +1,47 @@
+//! Table 1 — "Summary of Popular Large Language Models": checkpoint size
+//! and save time per model, from the analytical storage model (the paper's
+//! own Table 1 is analytical too: params × bytes/param ÷ NVMe bandwidth).
+//!
+//! Run: `cargo bench --bench bench_table1`
+
+use bitsnap::bench::{fmt_bytes, Table};
+use bitsnap::engine::AnalyticalModel;
+
+fn main() {
+    let m = AnalyticalModel::paper();
+    println!(
+        "Table 1: checkpoint save time (analytical, {:.1} B/param, {:.0} MB/s NVMe)\n",
+        m.bytes_per_param,
+        m.write_bps / 1e6
+    );
+    let rows: &[(&str, f64, &str, f64)] = &[
+        // (model, params, year, paper's reported minutes)
+        ("PaLM 540B", 540e9, "2022", 34.5),
+        ("Llama3.1 405B", 405e9, "2024", 25.1),
+        ("GPT-3 175B", 175e9, "2020", 10.8),
+        ("OPT 175B", 175e9, "2023", 10.8),
+        ("LLaMA-2 70B", 70e9, "2023", 4.3),
+        ("LLaMA-2 13B", 13e9, "2023", 0.8),
+        ("GPT-2 XL", 1.5e9, "2019", 0.1),
+    ];
+    let mut t =
+        Table::new(&["Model", "Params", "Ckpt size", "Save time (min)", "Paper (min)", "Year"]);
+    let mut max_rel_err: f64 = 0.0;
+    for (name, p, year, paper_min) in rows {
+        let ours = m.save_seconds(*p) / 60.0;
+        if *paper_min > 0.15 {
+            max_rel_err = max_rel_err.max(((ours - paper_min) / paper_min).abs());
+        }
+        t.row(&[
+            name.to_string(),
+            format!("{:.1}B", p / 1e9),
+            fmt_bytes(m.checkpoint_bytes(*p) as usize),
+            format!("{ours:.1}"),
+            format!("{paper_min:.1}"),
+            year.to_string(),
+        ]);
+    }
+    t.print();
+    println!("\nmax relative error vs paper rows: {:.1}%", max_rel_err * 100.0);
+    assert!(max_rel_err < 0.10, "analytical model drifted from the paper");
+}

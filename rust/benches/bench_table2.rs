@@ -1,0 +1,108 @@
+//! Table 2 — "Time takes to save a specific GPT model in seconds":
+//! Megatron-LM's synchronous uncompressed save vs BitSnap's
+//! compress-to-shm + async-persist engine.
+//!
+//! The paper runs 345M/0.5B/1B/3B GPTs on A100-80GB nodes with real NVMe.
+//! This host is a single CPU core, so (DESIGN.md §Substitutions) model
+//! states are synthetic dicts with realistic distributions, scaled by
+//! `SCALE` (default 1/32: a "345M" row is a 10.8M-param dict), and storage
+//! is throttled to the paper's 3.5 GB/s-class NVMe so sync-write cost is
+//! bandwidth-dominated exactly as in production. The *speedup column* is
+//! the reproduced quantity; absolute seconds scale with SCALE.
+//!
+//! Run: `cargo bench --bench bench_table2` (env SCALE=8 for a bigger run)
+
+use std::time::{Duration, Instant};
+
+use bitsnap::bench::{fmt_bytes, Table};
+use bitsnap::compress::delta::Policy;
+use bitsnap::engine::{CheckpointEngine, EngineConfig, Storage};
+use bitsnap::tensor::StateDict;
+
+// Effective storage write bandwidth, calibrated from the paper's own
+// Table 2: Megatron takes 4.28 s to save the 345M model (≈ 4.5 GB at the
+// 13.1 B/param mixed-precision footprint) → ≈ 1.06 GB/s effective — well
+// under raw NVMe spec because torch.save serializes while writing.
+const NVME_BPS: f64 = 1.06e9;
+
+fn sync_save(storage: &Storage, sd: &StateDict, iter: u64) -> Duration {
+    // the Megatron/torch.save baseline: serialize raw and block until
+    // storage finishes
+    let ckpt = bitsnap::compress::delta::compress_state_dict(sd, None, Policy::raw(), iter, iter)
+        .unwrap();
+    let bytes = bitsnap::engine::container::serialize(&ckpt);
+    let t0 = Instant::now();
+    storage.put(iter, 0, &bytes, true).unwrap();
+    t0.elapsed()
+}
+
+fn main() {
+    let scale: usize = std::env::var("SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(32);
+    println!("Table 2: checkpoint save seconds (sizes scaled 1/{scale}; speedup is the reproduced shape)\n");
+    let rows: &[(&str, usize, f64)] = &[
+        // (label, true params, paper speedup)
+        ("345M", 345_000_000, 7.38),
+        ("0.5B", 500_000_000, 8.35),
+        ("1B", 1_000_000_000, 11.63),
+        ("3B", 3_000_000_000, 11.73),
+    ];
+    let pid = std::process::id();
+    let mut table = Table::new(&[
+        "Model",
+        "Ckpt bytes (scaled)",
+        "Megatron-LM (s)",
+        "BitSnap (s)",
+        "Speedup",
+        "Paper speedup",
+    ]);
+    for (label, params, paper_speedup) in rows {
+        let scaled = params / scale;
+        let sd = StateDict::synthetic_gpt(scaled, 42);
+
+        let store_root = std::env::temp_dir().join(format!("bsnp-t2-store-{pid}-{label}"));
+        let _ = std::fs::remove_dir_all(&store_root);
+        let storage = Storage::new(&store_root).unwrap().with_throttle(NVME_BPS / scale as f64);
+
+        // baseline: synchronous raw save
+        let t_megatron = sync_save(&storage, &sd, 1);
+
+        // BitSnap: compress + shm + async agent; blocking time is what the
+        // trainer sees
+        let shm_root = std::env::temp_dir().join(format!("bsnp-t2-shm-{pid}-{label}"));
+        let _ = std::fs::remove_dir_all(&shm_root);
+        let cfg = EngineConfig {
+            job: format!("t2-{label}"),
+            rank: 0,
+            world: 1,
+            shm_root: shm_root.clone(),
+            storage: storage.clone(),
+            redundancy: 2,
+            policy: Policy::bitsnap(),
+            max_cached_iteration: 5,
+        };
+        let mut engine = CheckpointEngine::new(cfg).unwrap();
+        // warm save (base); drain the agent so its throttled persist does
+        // not timeshare this single core with the measured delta save
+        let mut sd2 = sd.clone();
+        engine.save(10, &sd2).unwrap();
+        engine.flush().unwrap();
+        sd2.perturb_model_states(0.15, 7);
+        let report = engine.save(20, &sd2).unwrap();
+        engine.flush().unwrap();
+
+        let speedup = t_megatron.as_secs_f64() / report.blocking.as_secs_f64();
+        table.row(&[
+            label.to_string(),
+            fmt_bytes(sd.total_bytes()),
+            format!("{:.2}", t_megatron.as_secs_f64()),
+            format!("{:.2}", report.blocking.as_secs_f64()),
+            format!("{speedup:.2}x"),
+            format!("{paper_speedup:.2}x"),
+        ]);
+        drop(engine);
+        let _ = std::fs::remove_dir_all(&shm_root);
+        let _ = std::fs::remove_dir_all(&store_root);
+    }
+    table.print();
+    println!("\n(BitSnap column = training-blocking time; persistence continues async, as in the paper)");
+}

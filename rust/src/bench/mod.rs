@@ -1,0 +1,158 @@
+//! Minimal benchmark harness (criterion is unavailable in this offline
+//! build). Provides warmup + repeated timing with median/mean/σ and the
+//! table printers the paper-figure benches share.
+
+use std::time::{Duration, Instant};
+
+/// Statistics over repeated runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub median: Duration,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: usize,
+}
+
+impl Stats {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs and `iters` measured runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    stats_of(&mut times)
+}
+
+/// Time a fallible setup+run closure that returns per-run duration itself
+/// (for benches that must exclude setup from the timed region).
+pub fn bench_durations<F: FnMut() -> Duration>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = (0..iters).map(|_| f()).collect();
+    stats_of(&mut times)
+}
+
+fn stats_of(times: &mut [Duration]) -> Stats {
+    times.sort();
+    let iters = times.len();
+    let median = times[iters / 2];
+    let mean_nanos = times.iter().map(|d| d.as_nanos()).sum::<u128>() / iters as u128;
+    let mean = Duration::from_nanos(mean_nanos as u64);
+    let var = times
+        .iter()
+        .map(|d| {
+            let x = d.as_nanos() as f64 - mean_nanos as f64;
+            x * x
+        })
+        .sum::<f64>()
+        / iters as f64;
+    Stats {
+        median,
+        mean,
+        stddev: Duration::from_nanos(var.sqrt() as u64),
+        min: times[0],
+        max: times[iters - 1],
+        iters,
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} µs", s * 1e6)
+    }
+}
+
+/// Human-readable byte count.
+pub fn fmt_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut x = b as f64;
+    let mut u = 0;
+    while x >= 1024.0 && u < UNITS.len() - 1 {
+        x /= 1024.0;
+        u += 1;
+    }
+    format!("{x:.2} {}", UNITS[u])
+}
+
+/// Throughput in bytes/sec, formatted.
+pub fn fmt_throughput(bytes: usize, d: Duration) -> String {
+    let bps = bytes as f64 / d.as_secs_f64().max(1e-12);
+    format!("{}/s", fmt_bytes(bps as usize))
+}
+
+/// Fixed-width markdown-ish table printer shared by the paper benches.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            println!("{s}");
+        };
+        line(&self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep);
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let s = bench(1, 5, || std::thread::sleep(Duration::from_millis(1)));
+        assert_eq!(s.iters, 5);
+        assert!(s.median >= Duration::from_millis(1));
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(1536), "1.50 KiB");
+        assert!(fmt_duration(Duration::from_micros(1500)).contains("ms"));
+    }
+}

@@ -1,0 +1,76 @@
+//! Tiny argument parser (clap is unavailable in this offline build).
+//! Grammar: `bitsnap <subcommand> [--key value | --flag]...`
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+pub struct Args {
+    subcommand: Option<String>,
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: Iterator<Item = String>>(mut it: I) -> Self {
+        let subcommand = it.next();
+        let mut values = HashMap::new();
+        let mut flags = Vec::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            if let Some(key) = rest[i].strip_prefix("--") {
+                if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    values.insert(key.to_string(), rest[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Self { subcommand, values, flags }
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.subcommand.as_deref()
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.values.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn basic() {
+        let a = parse(&["train", "--model", "gpt-nano", "--steps", "50", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get("model"), Some("gpt-nano"));
+        assert_eq!(a.get_parse::<u64>("steps"), Some(50));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn empty() {
+        let a = parse(&[]);
+        assert_eq!(a.subcommand(), None);
+    }
+}

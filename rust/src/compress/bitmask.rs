@@ -1,0 +1,381 @@
+//! Bitmask-based delta sparsification (paper §3.3, Algo. 1).
+//!
+//! Given a base checkpoint and the current one, only the *changed* elements
+//! are stored, plus a mask saying which elements changed. Two variants:
+//!
+//! * **naive**: one `u8` per element (0/1) — beneficial while fewer than
+//!   50% of elements changed (Eq. 1: `n + 2·n_c < 2n`).
+//! * **improved/packed**: 8 mask bits per byte — beneficial up to 93.75%
+//!   changed (Eq. 2: `n/8 + 2·n_c < 2n`).
+//!
+//! Change detection is *bit equality* on the element's little-endian bytes,
+//! so reconstruction is exactly lossless (no `-0.0 == 0.0` surprises, NaNs
+//! compare by payload). We store the changed elements' *new values*; adding
+//! arithmetic deltas to fp16 would not round-trip bit-exactly.
+//!
+//! Payload layout (both variants), little-endian:
+//! ```text
+//! n_elems   u64
+//! elem_size u8
+//! n_changed u64
+//! mask      (n bytes naive | ceil(n/8) bytes packed)
+//! values    n_changed * elem_size bytes
+//! ```
+
+use super::CompressError;
+
+const HEADER: usize = 8 + 1 + 8;
+
+fn check_pair(base: &[u8], curr: &[u8], elem_size: usize) -> Result<usize, CompressError> {
+    if base.len() != curr.len() {
+        return Err(CompressError::Shape(format!(
+            "base {} bytes vs curr {} bytes",
+            base.len(),
+            curr.len()
+        )));
+    }
+    if elem_size == 0 || curr.len() % elem_size != 0 {
+        return Err(CompressError::Shape(format!(
+            "byte length {} not divisible by elem size {elem_size}",
+            curr.len()
+        )));
+    }
+    Ok(curr.len() / elem_size)
+}
+
+#[inline]
+fn elem_changed(base: &[u8], curr: &[u8], i: usize, elem_size: usize) -> bool {
+    let off = i * elem_size;
+    base[off..off + elem_size] != curr[off..off + elem_size]
+}
+
+fn write_header(out: &mut Vec<u8>, n: usize, elem_size: usize, n_changed: usize) {
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+    out.push(elem_size as u8);
+    out.extend_from_slice(&(n_changed as u64).to_le_bytes());
+}
+
+fn read_header(payload: &[u8]) -> Result<(usize, usize, usize), CompressError> {
+    if payload.len() < HEADER {
+        return Err(CompressError::Format("bitmask payload too short".into()));
+    }
+    let n = u64::from_le_bytes(payload[0..8].try_into().unwrap()) as usize;
+    let elem_size = payload[8] as usize;
+    let n_changed = u64::from_le_bytes(payload[9..17].try_into().unwrap()) as usize;
+    if elem_size == 0 {
+        return Err(CompressError::Format("bitmask elem_size 0".into()));
+    }
+    if n_changed > n {
+        return Err(CompressError::Format("bitmask n_changed > n".into()));
+    }
+    Ok((n, elem_size, n_changed))
+}
+
+/// Naive variant: u8 mask per element (paper's first formulation).
+pub fn encode_naive(base: &[u8], curr: &[u8], elem_size: usize) -> Result<Vec<u8>, CompressError> {
+    let n = check_pair(base, curr, elem_size)?;
+    let mut mask = vec![0u8; n];
+    let mut n_changed = 0usize;
+    for i in 0..n {
+        if elem_changed(base, curr, i, elem_size) {
+            mask[i] = 1;
+            n_changed += 1;
+        }
+    }
+    let mut out = Vec::with_capacity(HEADER + n + n_changed * elem_size);
+    write_header(&mut out, n, elem_size, n_changed);
+    out.extend_from_slice(&mask);
+    for i in 0..n {
+        if mask[i] == 1 {
+            let off = i * elem_size;
+            out.extend_from_slice(&curr[off..off + elem_size]);
+        }
+    }
+    Ok(out)
+}
+
+/// Decode the naive variant. Returns the reconstructed dense bytes.
+pub fn decode_naive(
+    base: &[u8],
+    payload: &[u8],
+    elem_size: usize,
+) -> Result<Vec<u8>, CompressError> {
+    let (n, es, n_changed) = read_header(payload)?;
+    if es != elem_size || base.len() != n * elem_size {
+        return Err(CompressError::Format("bitmask naive: base/header mismatch".into()));
+    }
+    let mask_end = HEADER + n;
+    let values_end = mask_end + n_changed * elem_size;
+    if payload.len() != values_end {
+        return Err(CompressError::Format("bitmask naive: bad payload length".into()));
+    }
+    let mask = &payload[HEADER..mask_end];
+    let values = &payload[mask_end..values_end];
+    let mut out = base.to_vec();
+    let mut vi = 0usize;
+    for i in 0..n {
+        if mask[i] != 0 {
+            out[i * elem_size..(i + 1) * elem_size]
+                .copy_from_slice(&values[vi * elem_size..(vi + 1) * elem_size]);
+            vi += 1;
+        }
+    }
+    if vi != n_changed {
+        return Err(CompressError::Format("bitmask naive: mask popcount != n_changed".into()));
+    }
+    Ok(out)
+}
+
+/// Improved variant: mask packed 8 bits per byte (paper Fig. 5).
+/// Bit `i` lives in `mask[i / 8]` at position `i % 8` (LSB-first).
+pub fn encode_packed(base: &[u8], curr: &[u8], elem_size: usize) -> Result<Vec<u8>, CompressError> {
+    let n = check_pair(base, curr, elem_size)?;
+    let mask_bytes = n.div_ceil(8);
+    let mut out = Vec::with_capacity(HEADER + mask_bytes + curr.len() / 4);
+    write_header(&mut out, n, elem_size, 0); // n_changed patched below
+    out.resize(HEADER + mask_bytes, 0);
+
+    // Hot path: specialized for the dominant 2-byte (fp16/bf16) case, which
+    // is what model states use. One u128 load pair covers 8 elements; the
+    // per-16-bit-lane "any byte differs" reduction needs ~8 scalar ops for
+    // all 8 lanes, and value extraction iterates only the set bits.
+    let mut n_changed = 0usize;
+    if elem_size == 2 {
+        let full = n / 8;
+        for mb in 0..full {
+            let o = mb * 16;
+            let a = u128::from_le_bytes(base[o..o + 16].try_into().unwrap());
+            let b = u128::from_le_bytes(curr[o..o + 16].try_into().unwrap());
+            let x = a ^ b;
+            // lane-nonzero bit per 16-bit lane, branch-free
+            let mut m2 = 0u8;
+            for j in 0..8 {
+                m2 |= (((x >> (16 * j)) as u16 != 0) as u8) << j;
+            }
+            out[HEADER + mb] = m2;
+            let mut bits = m2;
+            while bits != 0 {
+                let j = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                out.extend_from_slice(&curr[o + 2 * j..o + 2 * j + 2]);
+                n_changed += 1;
+            }
+        }
+        for i in full * 8..n {
+            if elem_changed(base, curr, i, 2) {
+                out[HEADER + i / 8] |= 1 << (i % 8);
+                out.extend_from_slice(&curr[i * 2..i * 2 + 2]);
+                n_changed += 1;
+            }
+        }
+    } else {
+        for i in 0..n {
+            if elem_changed(base, curr, i, elem_size) {
+                out[HEADER + i / 8] |= 1 << (i % 8);
+                let off = i * elem_size;
+                out.extend_from_slice(&curr[off..off + elem_size]);
+                n_changed += 1;
+            }
+        }
+    }
+    out[9..17].copy_from_slice(&(n_changed as u64).to_le_bytes());
+    Ok(out)
+}
+
+/// Decode the packed variant.
+pub fn decode_packed(
+    base: &[u8],
+    payload: &[u8],
+    elem_size: usize,
+) -> Result<Vec<u8>, CompressError> {
+    let (n, es, n_changed) = read_header(payload)?;
+    if es != elem_size || base.len() != n * elem_size {
+        return Err(CompressError::Format("bitmask packed: base/header mismatch".into()));
+    }
+    let mask_bytes = n.div_ceil(8);
+    let mask_end = HEADER + mask_bytes;
+    let values_end = mask_end + n_changed * elem_size;
+    if payload.len() != values_end {
+        return Err(CompressError::Format("bitmask packed: bad payload length".into()));
+    }
+    let mask = &payload[HEADER..mask_end];
+    let values = &payload[mask_end..values_end];
+    let mut out = base.to_vec();
+    let mut vi = 0usize;
+    for (mb, &m) in mask.iter().enumerate() {
+        if m == 0 {
+            continue;
+        }
+        let mut bits = m;
+        while bits != 0 {
+            let j = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            let i = mb * 8 + j;
+            if i >= n {
+                return Err(CompressError::Format("bitmask packed: padding bit set".into()));
+            }
+            out[i * elem_size..(i + 1) * elem_size]
+                .copy_from_slice(&values[vi * elem_size..(vi + 1) * elem_size]);
+            vi += 1;
+        }
+    }
+    if vi != n_changed {
+        return Err(CompressError::Format("bitmask packed: popcount != n_changed".into()));
+    }
+    Ok(out)
+}
+
+/// Count changed elements without producing a payload (used for codec
+/// selection and by the Fig. 8/9 harnesses).
+pub fn count_changed(base: &[u8], curr: &[u8], elem_size: usize) -> Result<usize, CompressError> {
+    let n = check_pair(base, curr, elem_size)?;
+    Ok((0..n).filter(|&i| elem_changed(base, curr, i, elem_size)).count())
+}
+
+/// Compressed size in bytes the packed variant will produce (analytic,
+/// Eq. 2's left side): `header + ceil(n/8) + n_changed * elem_size`.
+pub fn packed_size(n: usize, n_changed: usize, elem_size: usize) -> usize {
+    HEADER + n.div_ceil(8) + n_changed * elem_size
+}
+
+/// Compressed size of the naive variant (Eq. 1's left side).
+pub fn naive_size(n: usize, n_changed: usize, elem_size: usize) -> usize {
+    HEADER + n + n_changed * elem_size
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::XorShiftRng;
+
+    fn mk_pair(n: usize, changed: usize, elem_size: usize, seed: u64) -> (Vec<u8>, Vec<u8>) {
+        let mut rng = XorShiftRng::new(seed);
+        let base: Vec<u8> = (0..n * elem_size).map(|_| rng.next_u32() as u8).collect();
+        let mut curr = base.clone();
+        for i in rng.choose_indices(n, changed) {
+            // guarantee a bit flip in the first byte of the element
+            curr[i * elem_size] ^= 0x5a;
+        }
+        (base, curr)
+    }
+
+    #[test]
+    fn packed_roundtrip_various_sizes() {
+        for &(n, c) in &[(1usize, 0usize), (1, 1), (8, 3), (9, 9), (1000, 0), (1000, 137), (1000, 1000)] {
+            let (base, curr) = mk_pair(n, c, 2, n as u64 * 31 + c as u64);
+            let p = encode_packed(&base, &curr, 2).unwrap();
+            assert_eq!(decode_packed(&base, &p, 2).unwrap(), curr, "n={n} c={c}");
+            assert_eq!(p.len(), packed_size(n, c, 2));
+        }
+    }
+
+    #[test]
+    fn naive_roundtrip_various_sizes() {
+        for &(n, c) in &[(1usize, 1usize), (64, 10), (257, 200)] {
+            let (base, curr) = mk_pair(n, c, 4, 7);
+            let p = encode_naive(&base, &curr, 4).unwrap();
+            assert_eq!(decode_naive(&base, &p, 4).unwrap(), curr);
+            assert_eq!(p.len(), naive_size(n, c, 4));
+        }
+    }
+
+    #[test]
+    fn elem_sizes_1_2_4_8() {
+        for es in [1usize, 2, 4, 8] {
+            let (base, curr) = mk_pair(333, 44, es, es as u64);
+            let p = encode_packed(&base, &curr, es).unwrap();
+            assert_eq!(decode_packed(&base, &p, es).unwrap(), curr, "es={es}");
+        }
+    }
+
+    #[test]
+    fn identical_input_compresses_to_mask_only() {
+        let base = vec![7u8; 2000];
+        let p = encode_packed(&base, &base, 2).unwrap();
+        assert_eq!(p.len(), HEADER + 125); // 1000 elems -> 125 mask bytes
+        assert_eq!(decode_packed(&base, &p, 2).unwrap(), base);
+    }
+
+    #[test]
+    fn paper_eq2_breakeven() {
+        // packed bitmask beats raw up to (just below) 15/16 changed
+        let n = 1 << 16;
+        let es = 2;
+        let raw = n * es;
+        let at_15_16 = packed_size(n, n * 15 / 16, es);
+        assert!(at_15_16 <= raw + HEADER);
+        let above = packed_size(n, n * 31 / 32 + n / 32, es);
+        assert!(above > raw);
+    }
+
+    #[test]
+    fn paper_fig8_15pct_gives_about_5x() {
+        // §3.3: "when the delta change amounts to 15%, nearly 5x lossless
+        // compression"
+        let n = 1 << 20;
+        let ratio = (n * 2) as f64 / packed_size(n, n * 15 / 100, 2) as f64;
+        assert!(ratio > 4.5 && ratio < 5.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn change_detection_is_bitwise() {
+        // -0.0 vs 0.0 differ in bits and must be recorded
+        let base = 0.0f32.to_le_bytes().to_vec();
+        let curr = (-0.0f32).to_le_bytes().to_vec();
+        let p = encode_packed(&base, &curr, 4).unwrap();
+        let (_, _, n_changed) = read_header(&p).unwrap();
+        assert_eq!(n_changed, 1);
+        assert_eq!(decode_packed(&base, &p, 4).unwrap(), curr);
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let (base, curr) = mk_pair(100, 10, 2, 5);
+        let p = encode_packed(&base, &curr, 2).unwrap();
+        assert!(decode_packed(&base, &p[..p.len() - 1], 2).is_err());
+        assert!(decode_packed(&base, &p[..10], 2).is_err());
+    }
+
+    #[test]
+    fn wrong_base_length_rejected() {
+        let (base, curr) = mk_pair(100, 10, 2, 6);
+        let p = encode_packed(&base, &curr, 2).unwrap();
+        assert!(decode_packed(&base[..198], &p, 2).is_err());
+    }
+
+    #[test]
+    fn corrupt_padding_bit_rejected() {
+        let (base, curr) = mk_pair(9, 1, 2, 8);
+        let mut p = encode_packed(&base, &curr, 2).unwrap();
+        // set a mask bit beyond n in the final partial byte
+        let mask_last = HEADER + 1; // 9 elems -> 2 mask bytes; second byte holds bit 8 only
+        p[mask_last] |= 0b1000_0000; // bit 15 — out of range
+        assert!(decode_packed(&base, &p, 2).is_err());
+    }
+
+    #[test]
+    fn count_changed_matches_encoding() {
+        let (base, curr) = mk_pair(512, 99, 2, 9);
+        assert_eq!(count_changed(&base, &curr, 2).unwrap(), 99);
+    }
+
+    // Property test (hand-rolled; proptest is unavailable offline): random
+    // (n, change-set, elem-size) triples must round-trip both variants and
+    // match the analytic sizes.
+    #[test]
+    fn prop_random_roundtrips() {
+        let mut rng = XorShiftRng::new(0xb17);
+        for trial in 0..200 {
+            let es = [1usize, 2, 4, 8][rng.next_below(4)];
+            let n = 1 + rng.next_below(2048);
+            let c = rng.next_below(n + 1);
+            let (base, curr) = mk_pair(n, c, es, trial);
+            let packed = encode_packed(&base, &curr, es).unwrap();
+            let naive = encode_naive(&base, &curr, es).unwrap();
+            assert_eq!(decode_packed(&base, &packed, es).unwrap(), curr);
+            assert_eq!(decode_naive(&base, &naive, es).unwrap(), curr);
+            assert_eq!(packed.len(), packed_size(n, c, es));
+            assert_eq!(naive.len(), naive_size(n, c, es));
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Dettmers-style 8-bit block-wise quantization (Dettmers et al. 2022),
+//! the prior-art optimizer-state compressor the paper builds on: the
+//! tensor is cut into fixed-size blocks and each block gets its own
+//! asymmetric 8-bit range. Robust to outliers (they only poison their own
+//! block), but stores 8 bytes of scale/offset per block, so small blocks
+//! trade ratio for precision.
+//!
+//! BitSnap's cluster quantization replaces the *positional* blocks with
+//! *value-range* clusters; this module exists as the ablation baseline.
+//!
+//! Payload: `n u64 | block u32 | (S f32, b f32) * n_blocks | q u8 * n`.
+
+use super::CompressError;
+use crate::tensor::{DType, HostTensor};
+
+pub const DEFAULT_BLOCK: usize = 2048;
+
+const HEADER: usize = 8 + 4;
+
+pub fn encode(t: &HostTensor, block: usize) -> Result<Vec<u8>, CompressError> {
+    if t.dtype() != DType::F32 {
+        return Err(CompressError::Dtype(format!("block quant expects f32, got {:?}", t.dtype())));
+    }
+    if block == 0 {
+        return Err(CompressError::Format("block quant: zero block".into()));
+    }
+    let owned;
+    let values: &[f32] = match t.as_f32_slice() {
+        Ok(s) => s,
+        Err(_) => {
+            owned = t.to_f32_vec()?;
+            &owned
+        }
+    };
+    let n = values.len();
+    let n_blocks = n.div_ceil(block);
+    let mut out = Vec::with_capacity(HEADER + 8 * n_blocks + n);
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+    out.extend_from_slice(&(block as u32).to_le_bytes());
+    for chunk in values.chunks(block) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in chunk {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let scale = if hi > lo { hi - lo } else { 0.0 };
+        out.extend_from_slice(&scale.to_le_bytes());
+        out.extend_from_slice(&lo.to_le_bytes());
+    }
+    for (bi, chunk) in values.chunks(block).enumerate() {
+        let base = HEADER + 8 * bi;
+        let scale = f32::from_le_bytes(out[base..base + 4].try_into().unwrap());
+        let lo = f32::from_le_bytes(out[base + 4..base + 8].try_into().unwrap());
+        for &v in chunk {
+            let q = if scale > 0.0 {
+                (((v - lo) / scale) * 255.0).round().clamp(0.0, 255.0) as u8
+            } else {
+                0
+            };
+            out.push(q);
+        }
+    }
+    Ok(out)
+}
+
+pub fn decode(payload: &[u8], dtype: DType, shape: &[usize]) -> Result<HostTensor, CompressError> {
+    if dtype != DType::F32 {
+        return Err(CompressError::Dtype("block quant decodes to f32".into()));
+    }
+    if payload.len() < HEADER {
+        return Err(CompressError::Format("block quant: short payload".into()));
+    }
+    let n = u64::from_le_bytes(payload[0..8].try_into().unwrap()) as usize;
+    let block = u32::from_le_bytes(payload[8..12].try_into().unwrap()) as usize;
+    if block == 0 || n != shape.iter().product::<usize>() {
+        return Err(CompressError::Format("block quant: header mismatch".into()));
+    }
+    let n_blocks = n.div_ceil(block);
+    if payload.len() != HEADER + 8 * n_blocks + n {
+        return Err(CompressError::Format("block quant: length mismatch".into()));
+    }
+    let q = &payload[HEADER + 8 * n_blocks..];
+    let mut data = Vec::with_capacity(n * 4);
+    for i in 0..n {
+        let bi = i / block;
+        let base = HEADER + 8 * bi;
+        let scale = f32::from_le_bytes(payload[base..base + 4].try_into().unwrap());
+        let lo = f32::from_le_bytes(payload[base + 4..base + 8].try_into().unwrap());
+        let v = q[i] as f32 / 255.0 * scale + lo;
+        data.extend_from_slice(&v.to_le_bytes());
+    }
+    HostTensor::from_bytes(dtype, shape, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::metrics;
+    use crate::tensor::XorShiftRng;
+
+    #[test]
+    fn roundtrip_and_outlier_containment() {
+        let mut rng = XorShiftRng::new(1);
+        let mut vals = rng.normal_vec(8192, 0.0, 1.0);
+        vals[0] = 1e4; // outlier poisons only block 0
+        let t = HostTensor::from_f32(&[8192], &vals).unwrap();
+        let p = encode(&t, 2048).unwrap();
+        let back = decode(&p, DType::F32, &[8192]).unwrap().to_f32_vec().unwrap();
+        let mse_poisoned = metrics::mse(&vals[1..2048], &back[1..2048]);
+        let mse_clean = metrics::mse(&vals[2048..], &back[2048..]);
+        assert!(mse_clean * 100.0 < mse_poisoned, "{mse_clean} vs {mse_poisoned}");
+    }
+
+    #[test]
+    fn non_multiple_length() {
+        let mut rng = XorShiftRng::new(2);
+        let vals = rng.normal_vec(1000, 0.0, 0.1);
+        let t = HostTensor::from_f32(&[1000], &vals).unwrap();
+        let p = encode(&t, 256).unwrap();
+        let back = decode(&p, DType::F32, &[1000]).unwrap().to_f32_vec().unwrap();
+        let step = 0.1 * 8.0 / 255.0; // generous bound
+        for (v, d) in vals.iter().zip(&back) {
+            assert!((v - d).abs() < step);
+        }
+    }
+
+    #[test]
+    fn corrupt_rejected() {
+        let t = HostTensor::from_f32(&[16], &[0.5f32; 16]).unwrap();
+        let p = encode(&t, 4).unwrap();
+        assert!(decode(&p[..p.len() - 1], DType::F32, &[16]).is_err());
+        assert!(decode(&p, DType::F32, &[15]).is_err());
+        assert!(encode(&t, 0).is_err());
+    }
+}

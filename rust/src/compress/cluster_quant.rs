@@ -1,0 +1,449 @@
+//! Cluster-based quantization for optimizer states (paper §3.4, Algo. 2).
+//!
+//! Optimizer-state values are approximately normally distributed (paper
+//! Fig. 6), so uniform 8-bit quantization wastes most of its levels on the
+//! sparse tails. BitSnap instead:
+//!
+//! 1. computes the tensor's mean μ and std σ,
+//! 2. builds `m` clusters whose boundaries are normal quantiles
+//!    `μ + σ·Φ⁻¹(i/m)` — more clusters where values are dense, mirroring
+//!    "the closer the value range nears to zero, the more clusters",
+//! 3. assigns each element a cluster label, and
+//! 4. quantizes each cluster independently with Dettmers-style asymmetric
+//!    8-bit quantization: `S = max−min`, `b = min`,
+//!    `q = argmin_j |Q_map(j) − (v−b)/S|` which for a linear uint8 map is
+//!    `round((v−b)/S · 255)` (Eq. 3); dequantization is `q/255·S + b`.
+//!
+//! With `m ≤ 16` the labels pack into uint4, so storage is
+//! `n/2 (labels) + n (payload) + 8m (scales) + O(1)` ≈ `1.5n + 136` bytes
+//! against `4n` raw — the paper's ≈2.67x analytic ratio.
+//!
+//! Payload layout:
+//! ```text
+//! n u64 | m u8 | scales f32*m | offsets f32*m | labels u4*ceil(n/2) | q u8*n
+//! ```
+
+use super::CompressError;
+use crate::tensor::{DType, HostTensor};
+
+/// Paper §3.4: "we have tried to set m to be less equal than 16 to save L
+/// in uint4 data type and it proves to be effective".
+pub const DEFAULT_CLUSTERS: usize = 16;
+
+const HEADER: usize = 8 + 1;
+
+/// Inverse standard-normal CDF (Acklam's rational approximation,
+/// |relative error| < 1.15e-9 — far below uint8 quantization noise).
+pub fn inv_normal_cdf(p: f64) -> f64 {
+    debug_assert!(p > 0.0 && p < 1.0);
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -inv_normal_cdf(1.0 - p)
+    }
+}
+
+/// Cluster boundaries for `m` clusters over N(mu, sigma): the m-1 interior
+/// normal quantiles. Monotonically increasing.
+pub fn normal_boundaries(m: usize, mu: f32, sigma: f32) -> Vec<f32> {
+    (1..m)
+        .map(|i| mu + sigma * inv_normal_cdf(i as f64 / m as f64) as f32)
+        .collect()
+}
+
+fn mean_std(values: &[f32]) -> (f32, f32) {
+    // Chunked two-level accumulation: f32 SIMD-friendly inner sums, f64
+    // outer accumulation for stability on multi-GB tensors.
+    let n = values.len().max(1) as f64;
+    let mut sum = 0f64;
+    let mut sum_sq = 0f64;
+    for chunk in values.chunks(4096) {
+        let mut s = 0f32;
+        let mut s2 = 0f32;
+        for &v in chunk {
+            s += v;
+            s2 += v * v;
+        }
+        sum += s as f64;
+        sum_sq += s2 as f64;
+    }
+    let mean = sum / n;
+    let var = (sum_sq / n - mean * mean).max(0.0);
+    (mean as f32, var.sqrt() as f32)
+}
+
+/// Assign each value the index of its cluster: number of boundaries < v.
+#[inline]
+#[cfg(test)]
+fn label_of(v: f32, boundaries: &[f32]) -> u8 {
+    // boundaries is tiny (m-1 <= 15): a linear scan beats binary search and
+    // vectorizes as a compare+sum, which is also exactly what the Pallas
+    // kernel does on TPU (DESIGN.md §Hardware-Adaptation).
+    let mut l = 0u8;
+    for &b in boundaries {
+        l += (v > b) as u8;
+    }
+    l
+}
+
+/// Quantize an f32 tensor. `m` must be in 2..=16.
+pub fn encode(t: &HostTensor, m: usize) -> Result<Vec<u8>, CompressError> {
+    encode_with_timing(t, m).map(|(p, _, _)| p)
+}
+
+/// Like [`encode`] but also reports the time spent in the clustering pass
+/// (T_c: stats + labels + per-cluster ranges) and the quantization pass
+/// (T_q: normalize + round + pack) — the split the paper's Figs. 10–11
+/// plot per parallelism configuration.
+pub fn encode_with_timing(
+    t: &HostTensor,
+    m: usize,
+) -> Result<(Vec<u8>, std::time::Duration, std::time::Duration), CompressError> {
+    if t.dtype() != DType::F32 {
+        return Err(CompressError::Dtype(format!(
+            "cluster quant expects f32 optimizer states, got {:?}",
+            t.dtype()
+        )));
+    }
+    if !(2..=16).contains(&m) {
+        return Err(CompressError::Format(format!("cluster count {m} outside 2..=16")));
+    }
+    let owned;
+    let values: &[f32] = match t.as_f32_slice() {
+        Ok(s) => s,
+        Err(_) => {
+            owned = t.to_f32_vec()?;
+            &owned
+        }
+    };
+    let n = values.len();
+    let t_cluster0 = std::time::Instant::now();
+    let (mu, sigma) = mean_std(values);
+    let boundaries = normal_boundaries(m, mu, sigma.max(f32::MIN_POSITIVE));
+
+    // pass 1 (clustering, T_c): labels, then per-cluster min/max.
+    // The label loop compares each value against all m-1 boundaries from a
+    // fixed-size array — branch-free and auto-vectorizable (the same
+    // broadcast-compare shape the Pallas kernel uses on the TPU VPU);
+    // padding boundaries with +inf contributes 0 to every sum.
+    let mut bpad = [f32::INFINITY; 15];
+    bpad[..boundaries.len()].copy_from_slice(&boundaries);
+    let mut labels = vec![0u8; n];
+    for (l, &v) in labels.iter_mut().zip(values) {
+        let mut acc = 0i32;
+        for b in bpad {
+            acc += (v > b) as i32;
+        }
+        *l = acc as u8;
+    }
+    let mut cmin = [f32::INFINITY; 16];
+    let mut cmax = [f32::NEG_INFINITY; 16];
+    for (&l, &v) in labels.iter().zip(values) {
+        let l = l as usize;
+        cmin[l] = cmin[l].min(v);
+        cmax[l] = cmax[l].max(v);
+    }
+    let mut scales = vec![0f32; m];
+    let mut offsets = vec![0f32; m];
+    for c in 0..m {
+        if cmin[c].is_finite() {
+            scales[c] = cmax[c] - cmin[c];
+            offsets[c] = cmin[c];
+        }
+    }
+
+    let t_cluster = t_cluster0.elapsed();
+    let t_quant0 = std::time::Instant::now();
+
+    // pass 2 (quantization, T_q): emit
+    let mut out = Vec::with_capacity(HEADER + 8 * m + n.div_ceil(2) + n);
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+    out.push(m as u8);
+    for s in &scales {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    for b in &offsets {
+        out.extend_from_slice(&b.to_le_bytes());
+    }
+    // labels packed two per byte, low nibble first
+    let mut packed = vec![0u8; n.div_ceil(2)];
+    for (i, &l) in labels.iter().enumerate() {
+        packed[i / 2] |= l << ((i % 2) * 4);
+    }
+    out.extend_from_slice(&packed);
+    // quantized payload: round((v - b) / S * 255), computed as a fused
+    // multiply by a per-cluster reciprocal (division and f32::round are
+    // the two serial bottlenecks in the naive loop; `+0.5` floor-rounding
+    // is exact here because the operand is clamped non-negative)
+    let mut inv = [0f32; 16];
+    let mut offs = [0f32; 16];
+    for c in 0..m {
+        inv[c] = if scales[c] > 0.0 { 255.0 / scales[c] } else { 0.0 };
+        offs[c] = offsets[c];
+    }
+    let start = out.len();
+    out.resize(start + n, 0);
+    let q = &mut out[start..];
+    for ((qi, &l), &v) in q.iter_mut().zip(&labels).zip(values) {
+        let c = l as usize;
+        let t = ((v - offs[c]) * inv[c]).clamp(0.0, 255.0);
+        *qi = (t + 0.5) as u8;
+    }
+    Ok((out, t_cluster, t_quant0.elapsed()))
+}
+
+/// Dequantize. `dtype`/`shape` come from the checkpoint container entry.
+pub fn decode(payload: &[u8], dtype: DType, shape: &[usize]) -> Result<HostTensor, CompressError> {
+    if dtype != DType::F32 {
+        return Err(CompressError::Dtype("cluster quant decodes to f32".into()));
+    }
+    if payload.len() < HEADER {
+        return Err(CompressError::Format("cluster quant: payload too short".into()));
+    }
+    let n = u64::from_le_bytes(payload[0..8].try_into().unwrap()) as usize;
+    let m = payload[8] as usize;
+    if !(2..=16).contains(&m) {
+        return Err(CompressError::Format("cluster quant: bad m".into()));
+    }
+    if n != shape.iter().product::<usize>() {
+        return Err(CompressError::Format("cluster quant: n != shape product".into()));
+    }
+    let expect = HEADER + 8 * m + n.div_ceil(2) + n;
+    if payload.len() != expect {
+        return Err(CompressError::Format(format!(
+            "cluster quant: payload {} != expected {expect}",
+            payload.len()
+        )));
+    }
+    let mut pos = HEADER;
+    let mut scales = Vec::with_capacity(m);
+    for _ in 0..m {
+        scales.push(f32::from_le_bytes(payload[pos..pos + 4].try_into().unwrap()));
+        pos += 4;
+    }
+    let mut offsets = Vec::with_capacity(m);
+    for _ in 0..m {
+        offsets.push(f32::from_le_bytes(payload[pos..pos + 4].try_into().unwrap()));
+        pos += 4;
+    }
+    let labels = &payload[pos..pos + n.div_ceil(2)];
+    pos += n.div_ceil(2);
+    let q = &payload[pos..pos + n];
+    let mut data = Vec::with_capacity(n * 4);
+    for i in 0..n {
+        let l = ((labels[i / 2] >> ((i % 2) * 4)) & 0x0f) as usize;
+        if l >= m {
+            return Err(CompressError::Format("cluster quant: label >= m".into()));
+        }
+        let v = q[i] as f32 / 255.0 * scales[l] + offsets[l];
+        data.extend_from_slice(&v.to_le_bytes());
+    }
+    HostTensor::from_bytes(dtype, shape, data)
+}
+
+/// Analytic compressed size (paper: `8m + 1.5n + O(1)` for m ≤ 16).
+pub fn analytic_size(n: usize, m: usize) -> usize {
+    HEADER + 8 * m + n.div_ceil(2) + n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::XorShiftRng;
+    use crate::compress::metrics;
+
+    #[test]
+    fn inv_cdf_sane() {
+        assert!((inv_normal_cdf(0.5)).abs() < 1e-12);
+        assert!((inv_normal_cdf(0.975) - 1.959964).abs() < 1e-4);
+        assert!((inv_normal_cdf(0.025) + 1.959964).abs() < 1e-4);
+        // symmetry
+        for p in [0.01, 0.1, 0.3] {
+            assert!((inv_normal_cdf(p) + inv_normal_cdf(1.0 - p)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn boundaries_monotone() {
+        let b = normal_boundaries(16, 0.0, 1.0);
+        assert_eq!(b.len(), 15);
+        for w in b.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        // denser near zero: inner gap < outer gap
+        assert!(b[8] - b[7] < b[14] - b[13]);
+    }
+
+    #[test]
+    fn roundtrip_normal_data_low_error() {
+        let mut rng = XorShiftRng::new(1);
+        let vals = rng.normal_vec(1 << 16, 0.0, 1e-3); // Adam-m like
+        let t = HostTensor::from_f32(&[1 << 16], &vals).unwrap();
+        let p = encode(&t, 16).unwrap();
+        let back = decode(&p, DType::F32, &[1 << 16]).unwrap();
+        let deq = back.to_f32_vec().unwrap();
+        let mse = metrics::mse(&vals, &deq);
+        // dominated by the two tail clusters (width ~3σ, step ~1.2e-5):
+        // expected MSE ≈ step²/12 /16·2 ≈ 1.5e-12
+        assert!(mse < 5e-12, "mse {mse}");
+        // ratio ~2.67
+        let ratio = (vals.len() * 4) as f64 / p.len() as f64;
+        assert!(ratio > 2.6 && ratio < 2.7, "ratio {ratio}");
+    }
+
+    #[test]
+    fn much_better_than_naive_on_outliers() {
+        // one huge outlier ruins global-range quantization but not ours
+        let mut rng = XorShiftRng::new(2);
+        let mut vals = rng.normal_vec(10_000, 0.0, 1.0);
+        vals[0] = 1.0e4;
+        let t = HostTensor::from_f32(&[10_000], &vals).unwrap();
+        let ours = decode(&encode(&t, 16).unwrap(), DType::F32, &[10_000])
+            .unwrap()
+            .to_f32_vec()
+            .unwrap();
+        let naive = crate::compress::naive_quant::decode(
+            &crate::compress::naive_quant::encode(&t).unwrap(),
+            DType::F32,
+            &[10_000],
+        )
+        .unwrap()
+        .to_f32_vec()
+        .unwrap();
+        let mse_ours = metrics::mse(&vals[1..], &ours[1..]);
+        let mse_naive = metrics::mse(&vals[1..], &naive[1..]);
+        assert!(
+            mse_ours * 100.0 < mse_naive,
+            "ours {mse_ours} vs naive {mse_naive}"
+        );
+    }
+
+    #[test]
+    fn constant_tensor() {
+        let t = HostTensor::from_f32(&[64], &[3.25f32; 64]).unwrap();
+        let p = encode(&t, 4).unwrap();
+        let back = decode(&p, DType::F32, &[64]).unwrap().to_f32_vec().unwrap();
+        for v in back {
+            assert_eq!(v, 3.25);
+        }
+    }
+
+    #[test]
+    fn empty_tensor() {
+        let t = HostTensor::from_f32(&[0], &[]).unwrap();
+        let p = encode(&t, 8).unwrap();
+        let back = decode(&p, DType::F32, &[0]).unwrap();
+        assert_eq!(back.len(), 0);
+    }
+
+    #[test]
+    fn rejects_non_f32() {
+        let t = HostTensor::from_f32_as_f16(&[4], &[1., 2., 3., 4.]).unwrap();
+        assert!(encode(&t, 16).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_m() {
+        let t = HostTensor::from_f32(&[4], &[1., 2., 3., 4.]).unwrap();
+        assert!(encode(&t, 1).is_err());
+        assert!(encode(&t, 17).is_err());
+    }
+
+    #[test]
+    fn rejects_corrupt_payload() {
+        let mut rng = XorShiftRng::new(3);
+        let vals = rng.normal_vec(100, 0.0, 1.0);
+        let t = HostTensor::from_f32(&[100], &vals).unwrap();
+        let p = encode(&t, 16).unwrap();
+        assert!(decode(&p[..p.len() - 1], DType::F32, &[100]).is_err());
+        assert!(decode(&p, DType::F32, &[99]).is_err());
+        assert!(decode(&p, DType::F16, &[100]).is_err());
+    }
+
+    #[test]
+    fn size_matches_analytic() {
+        let mut rng = XorShiftRng::new(4);
+        for &n in &[1usize, 7, 100, 4097] {
+            let vals = rng.normal_vec(n, 0.5, 2.0);
+            let t = HostTensor::from_f32(&[n], &vals).unwrap();
+            for m in [2usize, 8, 16] {
+                assert_eq!(encode(&t, m).unwrap().len(), analytic_size(n, m));
+            }
+        }
+    }
+
+    #[test]
+    fn prop_error_bounded_by_cluster_width() {
+        // every dequantized value must be within its cluster's S/255 of the
+        // original — the defining invariant of per-cluster asymmetric quant
+        let mut rng = XorShiftRng::new(5);
+        for _ in 0..20 {
+            let n = 100 + rng.next_below(4000);
+            let sigma = 10f32.powi(rng.next_below(8) as i32 - 4);
+            let mu = rng.next_normal();
+            let vals = rng.normal_vec(n, mu, sigma);
+            let t = HostTensor::from_f32(&[n], &vals).unwrap();
+            let m = 2 + rng.next_below(15);
+            let p = encode(&t, m).unwrap();
+            let back = decode(&p, DType::F32, &[n]).unwrap().to_f32_vec().unwrap();
+            // recompute boundaries to find each value's cluster width
+            let (mu, s) = mean_std(&vals);
+            let bs = normal_boundaries(m, mu, s.max(f32::MIN_POSITIVE));
+            let mut cmin = vec![f32::INFINITY; m];
+            let mut cmax = vec![f32::NEG_INFINITY; m];
+            for &v in &vals {
+                let l = label_of(v, &bs) as usize;
+                cmin[l] = cmin[l].min(v);
+                cmax[l] = cmax[l].max(v);
+            }
+            for (i, (&v, &d)) in vals.iter().zip(&back).enumerate() {
+                let l = label_of(v, &bs) as usize;
+                let width = cmax[l] - cmin[l];
+                // half a quant step plus f32 rounding from the
+                // (v-b)/S*255 → q/255*S+b round-trip, which scales with |v|
+                let tol = width / 255.0 * 0.51 + (v.abs() + d.abs()) * f32::EPSILON * 8.0 + 1e-12;
+                assert!(
+                    (v - d).abs() <= tol,
+                    "i={i} v={v} d={d} width={width}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,359 @@
+//! Delta-chain policy: which codec compresses which tensor, and how delta
+//! checkpoints chain back to their base (paper §3.3 + §4.4).
+//!
+//! A *base* checkpoint stores every tensor standalone. The next
+//! `MAX_CACHED_ITERATION − 1` checkpoints are *delta* checkpoints whose
+//! model states are bitmask-sparsified against the base ("we firstly save
+//! a base checkpoint, and for the next numbers of checkpoints we only save
+//! the delta value on top of the base checkpoint"). Optimizer states are
+//! cluster-quantized in either kind (or kept raw in lossless mode — the
+//! Fig. 12 experiment needs sparsification without quantization).
+
+use super::{
+    bitmask, compress, compress_delta, decompress, decompress_delta, CodecId, CompressError,
+    CompressedTensor,
+};
+use crate::tensor::{HostTensor, StateDict, StateKind};
+
+/// What to do with optimizer states.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerPolicy {
+    /// Keep fp32 bytes (lossless mode, Fig. 12 experiment).
+    Raw,
+    /// Cluster-based quantization (paper default, §3.4).
+    ClusterQuant,
+    /// Naive global 8-bit (Table 4 baseline).
+    NaiveQuant8,
+    /// Dettmers block-wise 8-bit (ablation).
+    BlockQuant8,
+    /// ExCP-style aggressive prune+quantize: moderate on master weights,
+    /// aggressive on Adam moments (the §2.2.1 cautionary baseline — high
+    /// ratio, but resuming causes the loss jump the paper warns about).
+    ExcpPrune,
+}
+
+/// What to do with model states when a base is available.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelPolicy {
+    /// Always store dense.
+    Raw,
+    /// Packed bitmask delta (paper default).
+    BitmaskPacked,
+    /// Naive u8 bitmask delta (ablation).
+    BitmaskNaive,
+    /// COO-u16 delta (Fig. 8 baseline).
+    CooU16,
+    /// Per-tensor pick of the smallest among packed/naive/coo/raw, decided
+    /// from the measured change count (the adaptive mode the abstract
+    /// promises: "adapts dynamically to different training stages").
+    Auto,
+}
+
+/// Compression policy for a whole checkpoint.
+#[derive(Clone, Copy, Debug)]
+pub struct Policy {
+    pub model: ModelPolicy,
+    pub optimizer: OptimizerPolicy,
+}
+
+impl Policy {
+    /// Paper-default BitSnap: packed bitmask + cluster quantization.
+    pub fn bitsnap() -> Self {
+        Self { model: ModelPolicy::BitmaskPacked, optimizer: OptimizerPolicy::ClusterQuant }
+    }
+
+    /// Fully lossless: packed bitmask + raw optimizer states.
+    pub fn lossless() -> Self {
+        Self { model: ModelPolicy::BitmaskPacked, optimizer: OptimizerPolicy::Raw }
+    }
+
+    /// No compression anywhere (the Megatron/torch.save baseline).
+    pub fn raw() -> Self {
+        Self { model: ModelPolicy::Raw, optimizer: OptimizerPolicy::Raw }
+    }
+}
+
+/// One compressed state-dict entry.
+#[derive(Clone, Debug)]
+pub struct CompressedEntry {
+    pub name: String,
+    pub kind: StateKind,
+    pub compressed: CompressedTensor,
+}
+
+/// A compressed checkpoint: all entries plus whether they delta-chain.
+#[derive(Clone, Debug)]
+pub struct CompressedCheckpoint {
+    pub entries: Vec<CompressedEntry>,
+    /// Iteration this checkpoint belongs to.
+    pub iteration: u64,
+    /// Iteration of the base checkpoint deltas refer to (== `iteration`
+    /// for a base checkpoint).
+    pub base_iteration: u64,
+}
+
+impl CompressedCheckpoint {
+    pub fn is_base(&self) -> bool {
+        self.iteration == self.base_iteration
+    }
+
+    pub fn payload_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.compressed.payload.len()).sum()
+    }
+}
+
+fn pick_auto(base: &HostTensor, curr: &HostTensor) -> Result<CodecId, CompressError> {
+    let es = curr.dtype().size();
+    let n = curr.len();
+    let n_changed = bitmask::count_changed(base.bytes(), curr.bytes(), es)?;
+    let candidates = [
+        (CodecId::BitmaskPacked, bitmask::packed_size(n, n_changed, es)),
+        (CodecId::BitmaskNaive, bitmask::naive_size(n, n_changed, es)),
+        (CodecId::CooU16, super::coo::u16_size(n, n_changed, es)),
+        (CodecId::Raw, n * es),
+    ];
+    Ok(candidates.iter().min_by_key(|(_, s)| *s).unwrap().0)
+}
+
+/// Per-phase compression timing (the paper's Figs. 10–11 decomposition):
+/// delta encoding over model states, clustering (T_c) and quantization
+/// (T_q) over optimizer states.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CompressTimings {
+    pub delta_encoding: std::time::Duration,
+    pub clustering: std::time::Duration,
+    pub quantization: std::time::Duration,
+}
+
+impl CompressTimings {
+    pub fn add(&mut self, other: &CompressTimings) {
+        self.delta_encoding += other.delta_encoding;
+        self.clustering += other.clustering;
+        self.quantization += other.quantization;
+    }
+}
+
+/// Compress a full state dict. `base` is the base checkpoint's state dict
+/// when this is a delta checkpoint (model states are sparsified against
+/// it), or `None` for a base checkpoint.
+pub fn compress_state_dict(
+    sd: &StateDict,
+    base: Option<&StateDict>,
+    policy: Policy,
+    iteration: u64,
+    base_iteration: u64,
+) -> Result<CompressedCheckpoint, CompressError> {
+    compress_state_dict_timed(sd, base, policy, iteration, base_iteration).map(|(c, _)| c)
+}
+
+/// [`compress_state_dict`] with the per-phase timing breakdown.
+pub fn compress_state_dict_timed(
+    sd: &StateDict,
+    base: Option<&StateDict>,
+    policy: Policy,
+    iteration: u64,
+    base_iteration: u64,
+) -> Result<(CompressedCheckpoint, CompressTimings), CompressError> {
+    let mut timings = CompressTimings::default();
+    let mut entries = Vec::with_capacity(sd.len());
+    for e in sd.entries() {
+        let compressed = match e.kind {
+            StateKind::ModelState => {
+                let t0 = std::time::Instant::now();
+                let base_t = base.and_then(|b| b.get(&e.name)).map(|be| &be.tensor);
+                let c = match (policy.model, base_t) {
+                    (ModelPolicy::Raw, _) | (_, None) => compress(CodecId::Raw, &e.tensor)?,
+                    (ModelPolicy::BitmaskPacked, Some(b)) => {
+                        compress_delta(CodecId::BitmaskPacked, b, &e.tensor)?
+                    }
+                    (ModelPolicy::BitmaskNaive, Some(b)) => {
+                        compress_delta(CodecId::BitmaskNaive, b, &e.tensor)?
+                    }
+                    (ModelPolicy::CooU16, Some(b)) => {
+                        compress_delta(CodecId::CooU16, b, &e.tensor)?
+                    }
+                    (ModelPolicy::Auto, Some(b)) => {
+                        let codec = pick_auto(b, &e.tensor)?;
+                        if codec == CodecId::Raw {
+                            compress(CodecId::Raw, &e.tensor)?
+                        } else {
+                            compress_delta(codec, b, &e.tensor)?
+                        }
+                    }
+                };
+                timings.delta_encoding += t0.elapsed();
+                c
+            }
+            k if k.is_optimizer() => match policy.optimizer {
+                OptimizerPolicy::Raw => compress(CodecId::Raw, &e.tensor)?,
+                OptimizerPolicy::ClusterQuant => {
+                    let (payload, t_c, t_q) = super::cluster_quant::encode_with_timing(
+                        &e.tensor,
+                        super::cluster_quant::DEFAULT_CLUSTERS,
+                    )?;
+                    timings.clustering += t_c;
+                    timings.quantization += t_q;
+                    CompressedTensor {
+                        codec: CodecId::ClusterQuant,
+                        dtype: e.tensor.dtype(),
+                        shape: e.tensor.shape().to_vec(),
+                        payload,
+                    }
+                }
+                OptimizerPolicy::NaiveQuant8 => {
+                    let t0 = std::time::Instant::now();
+                    let c = compress(CodecId::NaiveQuant8, &e.tensor)?;
+                    timings.quantization += t0.elapsed();
+                    c
+                }
+                OptimizerPolicy::BlockQuant8 => {
+                    let t0 = std::time::Instant::now();
+                    let c = compress(CodecId::BlockQuant8, &e.tensor)?;
+                    timings.quantization += t0.elapsed();
+                    c
+                }
+                OptimizerPolicy::ExcpPrune => {
+                    let t0 = std::time::Instant::now();
+                    let keep = if e.kind == StateKind::MasterWeight { 0.5 } else { 0.1 };
+                    let payload = super::prune::encode(&e.tensor, keep)?;
+                    timings.quantization += t0.elapsed();
+                    CompressedTensor {
+                        codec: CodecId::Prune,
+                        dtype: e.tensor.dtype(),
+                        shape: e.tensor.shape().to_vec(),
+                        payload,
+                    }
+                }
+            },
+            _ => compress(CodecId::Raw, &e.tensor)?,
+        };
+        entries.push(CompressedEntry { name: e.name.clone(), kind: e.kind, compressed });
+    }
+    Ok((CompressedCheckpoint { entries, iteration, base_iteration }, timings))
+}
+
+/// Reconstruct a state dict. `base` must be the *reconstructed* base
+/// state dict when the checkpoint contains delta entries.
+pub fn decompress_state_dict(
+    ckpt: &CompressedCheckpoint,
+    base: Option<&StateDict>,
+) -> Result<StateDict, CompressError> {
+    let mut sd = StateDict::new();
+    for e in &ckpt.entries {
+        let tensor = if e.compressed.codec.is_delta() {
+            let base_sd = base.ok_or_else(|| {
+                CompressError::Format(format!("entry {} is a delta but no base given", e.name))
+            })?;
+            let base_t = base_sd.get(&e.name).ok_or_else(|| {
+                CompressError::Format(format!("base missing tensor {}", e.name))
+            })?;
+            decompress_delta(&e.compressed, &base_t.tensor)?
+        } else {
+            decompress(&e.compressed)?
+        };
+        sd.push(e.name.clone(), e.kind, tensor);
+    }
+    Ok(sd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::StateDict;
+
+    fn small_dict(seed: u64) -> StateDict {
+        StateDict::synthetic_gpt(1 << 14, seed)
+    }
+
+    #[test]
+    fn base_then_delta_roundtrip_lossless() {
+        let base = small_dict(1);
+        let mut curr = base.clone();
+        curr.perturb_model_states(0.1, 2);
+        let policy = Policy::lossless();
+        let cb = compress_state_dict(&base, None, policy, 100, 100).unwrap();
+        let cd = compress_state_dict(&curr, Some(&base), policy, 120, 100).unwrap();
+        assert!(cb.is_base());
+        assert!(!cd.is_base());
+        let rb = decompress_state_dict(&cb, None).unwrap();
+        let rd = decompress_state_dict(&cd, Some(&rb)).unwrap();
+        for (a, b) in curr.entries().iter().zip(rd.entries()) {
+            assert_eq!(a.tensor, b.tensor, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn bitsnap_policy_quantizes_optimizer() {
+        let sd = small_dict(3);
+        let c = compress_state_dict(&sd, None, Policy::bitsnap(), 0, 0).unwrap();
+        for e in &c.entries {
+            match e.kind {
+                StateKind::ModelState => assert_eq!(e.compressed.codec, CodecId::Raw),
+                k if k.is_optimizer() => assert_eq!(e.compressed.codec, CodecId::ClusterQuant),
+                _ => {}
+            }
+        }
+        // optimizer states shrink by ~2.67x
+        let opt_raw: usize = sd
+            .entries()
+            .iter()
+            .filter(|e| e.kind.is_optimizer())
+            .map(|e| e.tensor.byte_len())
+            .sum();
+        let opt_comp: usize = c
+            .entries
+            .iter()
+            .filter(|e| e.kind.is_optimizer())
+            .map(|e| e.compressed.payload.len())
+            .sum();
+        let ratio = opt_raw as f64 / opt_comp as f64;
+        assert!(ratio > 2.5 && ratio < 2.8, "ratio {ratio}");
+    }
+
+    #[test]
+    fn delta_without_base_fails_decode() {
+        let base = small_dict(4);
+        let mut curr = base.clone();
+        curr.perturb_model_states(0.05, 5);
+        let cd =
+            compress_state_dict(&curr, Some(&base), Policy::lossless(), 20, 0).unwrap();
+        assert!(decompress_state_dict(&cd, None).is_err());
+    }
+
+    #[test]
+    fn auto_picks_sparse_codec_when_little_changed() {
+        let base = small_dict(6);
+        let mut curr = base.clone();
+        curr.perturb_model_states(0.01, 7);
+        let policy = Policy { model: ModelPolicy::Auto, optimizer: OptimizerPolicy::Raw };
+        let cd = compress_state_dict(&curr, Some(&base), policy, 1, 0).unwrap();
+        let model_entry =
+            cd.entries.iter().find(|e| e.kind == StateKind::ModelState).unwrap();
+        assert_ne!(model_entry.compressed.codec, CodecId::Raw);
+        let rd = decompress_state_dict(&cd, Some(&base)).unwrap();
+        assert_eq!(rd.get("layers.0.weight").unwrap().tensor, curr.get("layers.0.weight").unwrap().tensor);
+    }
+
+    #[test]
+    fn auto_falls_back_to_raw_when_everything_changed() {
+        let base = small_dict(8);
+        let mut curr = base.clone();
+        curr.perturb_model_states(1.0, 9);
+        let policy = Policy { model: ModelPolicy::Auto, optimizer: OptimizerPolicy::Raw };
+        let cd = compress_state_dict(&curr, Some(&base), policy, 1, 0).unwrap();
+        let model_entry =
+            cd.entries.iter().find(|e| e.kind == StateKind::ModelState).unwrap();
+        assert_eq!(model_entry.compressed.codec, CodecId::Raw);
+    }
+
+    #[test]
+    fn quantized_roundtrip_close_but_lossy() {
+        let sd = small_dict(10);
+        let c = compress_state_dict(&sd, None, Policy::bitsnap(), 0, 0).unwrap();
+        let r = decompress_state_dict(&c, None).unwrap();
+        let orig = sd.get("optimizer.0.exp_avg").unwrap().tensor.to_f32_vec().unwrap();
+        let back = r.get("optimizer.0.exp_avg").unwrap().tensor.to_f32_vec().unwrap();
+        let mse = crate::compress::metrics::mse(&orig, &back);
+        assert!(mse > 0.0 && mse < 1e-9, "mse {mse}");
+    }
+}

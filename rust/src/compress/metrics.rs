@@ -1,0 +1,170 @@
+//! Evaluation metrics (paper §3.5): compression ratio, speed, precision
+//! impact, and the unified quality score Q of Eq. 5.
+
+/// Mean squared error between original and reconstructed values.
+pub fn mse(original: &[f32], reconstructed: &[f32]) -> f64 {
+    assert_eq!(original.len(), reconstructed.len());
+    if original.is_empty() {
+        return 0.0;
+    }
+    original
+        .iter()
+        .zip(reconstructed)
+        .map(|(&a, &b)| {
+            let d = a as f64 - b as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / original.len() as f64
+}
+
+/// Mean relative error: mean(|x̂ − x| / |x|) over elements with x ≠ 0.
+/// This is the paper's Table-3 metric; Adam first moments cluster near
+/// zero, which is why their MRE is ~10 while the MSE is ~1e-9.
+pub fn mre(original: &[f32], reconstructed: &[f32]) -> f64 {
+    assert_eq!(original.len(), reconstructed.len());
+    let mut sum = 0.0f64;
+    let mut count = 0usize;
+    for (&a, &b) in original.iter().zip(reconstructed) {
+        if a != 0.0 {
+            sum += ((a as f64 - b as f64) / a as f64).abs();
+            count += 1;
+        }
+    }
+    if count == 0 {
+        0.0
+    } else {
+        sum / count as f64
+    }
+}
+
+/// Compression ratio: original bytes / compressed bytes.
+pub fn compression_ratio(original_bytes: usize, compressed_bytes: usize) -> f64 {
+    original_bytes as f64 / compressed_bytes.max(1) as f64
+}
+
+/// Weights of the unified quality metric Q (Eq. 5). The paper gives two
+/// presets: during *training* the speed and precision terms dominate;
+/// during *checkpointing* precision and ratio dominate.
+#[derive(Clone, Copy, Debug)]
+pub struct QualityWeights {
+    pub w_ratio: f64,
+    pub w_speed: f64,
+    pub w_precision: f64,
+}
+
+impl QualityWeights {
+    /// "In the training of an LLM, w2 ≈ w3 and both are greater than w1."
+    pub fn training() -> Self {
+        Self { w_ratio: 0.2, w_speed: 0.4, w_precision: 0.4 }
+    }
+
+    /// "In the checkpointing process, w3 ≈ w1 and both are greater than w2."
+    pub fn checkpointing() -> Self {
+        Self { w_ratio: 0.4, w_speed: 0.2, w_precision: 0.4 }
+    }
+
+    pub fn validate(&self) -> bool {
+        let s = self.w_ratio + self.w_speed + self.w_precision;
+        (s - 1.0).abs() < 1e-9
+            && self.w_ratio >= 0.0
+            && self.w_speed >= 0.0
+            && self.w_precision >= 0.0
+    }
+}
+
+/// One codec's raw measurements, before normalization.
+#[derive(Clone, Copy, Debug)]
+pub struct CodecMeasurement {
+    /// original bytes / compressed bytes
+    pub ratio: f64,
+    /// bytes/second through compress+decompress
+    pub throughput: f64,
+    /// MSE of reconstruction (0 for lossless codecs)
+    pub mse: f64,
+}
+
+/// Q = w1·CR + w2·CS + w3·PS (Eq. 5) over a *set* of candidate codecs;
+/// scores are min-max normalized within the set as the paper's
+/// "normalized ... score" wording prescribes. Precision score uses
+/// `1/(1+mse)` so lossless ⇒ 1.0 before normalization.
+pub fn quality_scores(measurements: &[CodecMeasurement], w: QualityWeights) -> Vec<f64> {
+    assert!(w.validate(), "weights must be normalized");
+    let norm = |xs: Vec<f64>| -> Vec<f64> {
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        if hi > lo {
+            xs.iter().map(|x| (x - lo) / (hi - lo)).collect()
+        } else {
+            vec![1.0; xs.len()]
+        }
+    };
+    let cr = norm(measurements.iter().map(|m| m.ratio).collect());
+    let cs = norm(measurements.iter().map(|m| m.throughput).collect());
+    let ps = norm(measurements.iter().map(|m| 1.0 / (1.0 + m.mse)).collect());
+    (0..measurements.len())
+        .map(|i| w.w_ratio * cr[i] + w.w_speed * cs[i] + w.w_precision * ps[i])
+        .collect()
+}
+
+/// Histogram helper for Fig. 6 (optimizer value distribution).
+pub fn histogram(values: &[f32], bins: usize, lo: f32, hi: f32) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f32;
+    if w <= 0.0 {
+        return h;
+    }
+    for &v in values {
+        if v >= lo && v < hi {
+            h[((v - lo) / w) as usize] += 1;
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mse_mre_basics() {
+        let a = [1.0f32, 2.0, 4.0];
+        let b = [1.0f32, 2.2, 3.6];
+        assert!((mse(&a, &b) - ((0.04 + 0.16) / 3.0)).abs() < 1e-6);
+        assert!((mre(&a, &b) - ((0.1 + 0.1) / 3.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mre_skips_zeros() {
+        let a = [0.0f32, 2.0];
+        let b = [5.0f32, 2.0];
+        assert_eq!(mre(&a, &b), 0.0);
+    }
+
+    #[test]
+    fn presets_are_normalized_and_match_paper_ordering() {
+        let t = QualityWeights::training();
+        assert!(t.validate());
+        assert!(t.w_speed > t.w_ratio && (t.w_speed - t.w_precision).abs() < 1e-9);
+        let c = QualityWeights::checkpointing();
+        assert!(c.validate());
+        assert!(c.w_ratio > c.w_speed && (c.w_ratio - c.w_precision).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quality_prefers_dominating_codec() {
+        let ms = [
+            CodecMeasurement { ratio: 16.0, throughput: 2e9, mse: 0.0 },
+            CodecMeasurement { ratio: 2.0, throughput: 1e9, mse: 1e-3 },
+        ];
+        let q = quality_scores(&ms, QualityWeights::checkpointing());
+        assert!(q[0] > q[1]);
+        assert!((q[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let h = histogram(&[0.1, 0.1, 0.9, -0.5, 2.0], 2, 0.0, 1.0);
+        assert_eq!(h, vec![2, 1]); // -0.5 and 2.0 out of range
+    }
+}

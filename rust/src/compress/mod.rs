@@ -1,0 +1,284 @@
+//! Checkpoint compression codecs.
+//!
+//! BitSnap's two contributions (paper §3.3, §3.4):
+//! * [`bitmask`] — lossless delta sparsification of model states: save a
+//!   base checkpoint, then only changed elements plus a packed bitmask.
+//! * [`cluster_quant`] — lossy fp32→uint8 quantization of optimizer
+//!   states with normal-distribution-aware clusters.
+//!
+//! Plus the baseline zoo the paper compares against or argues about:
+//! [`coo`] (uint16/uint32 COO sparse storage), [`naive_quant`] (global-range
+//! 8-bit), [`blockwise_quant`] (Dettmers-style 8-bit block-wise),
+//! [`huffman`] (entropy coding — §3.3 argues it cannot beat the packed
+//! bitmask; we implement it to check), and [`byte_group`]
+//! (Hershcovitch-style byte grouping + entropy stage, the lossless SOTA).
+
+pub mod bitmask;
+pub mod blockwise_quant;
+pub mod byte_group;
+pub mod cluster_quant;
+pub mod coo;
+pub mod delta;
+pub mod huffman;
+pub mod metrics;
+pub mod naive_quant;
+pub mod prune;
+
+use crate::tensor::{DType, HostTensor};
+
+/// Errors from codecs and tensor plumbing.
+#[derive(Debug, thiserror::Error)]
+pub enum CompressError {
+    #[error("shape error: {0}")]
+    Shape(String),
+    #[error("dtype error: {0}")]
+    Dtype(String),
+    #[error("malformed payload: {0}")]
+    Format(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Identifies the codec used for a tensor payload inside a checkpoint
+/// container. Stable tags — they are written to disk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CodecId {
+    /// Raw little-endian bytes, no compression.
+    Raw,
+    /// Packed-bit delta sparsification (paper's improved bitmask, §3.3).
+    BitmaskPacked,
+    /// uint8-per-element bitmask delta (paper's naive bitmask).
+    BitmaskNaive,
+    /// COO sparse delta with u16 coordinates (baseline in Fig. 8).
+    CooU16,
+    /// COO sparse delta with u32 coordinates.
+    CooU32,
+    /// Cluster-based quantization (paper §3.4), fp32 -> u8 + u4 labels.
+    ClusterQuant,
+    /// Naive global-range 8-bit quantization (baseline in Table 4).
+    NaiveQuant8,
+    /// Dettmers-style block-wise 8-bit quantization.
+    BlockQuant8,
+    /// Canonical Huffman over bytes (entropy-coding baseline).
+    Huffman,
+    /// Byte grouping + zstd entropy stage (lossless baseline).
+    ByteGroupZstd,
+    /// ExCP-style magnitude prune + 8-bit quantization (aggressive lossy
+    /// baseline; §2.2.1's loss-jump cautionary tale).
+    Prune,
+}
+
+impl CodecId {
+    pub fn tag(self) -> u8 {
+        match self {
+            CodecId::Raw => 0,
+            CodecId::BitmaskPacked => 1,
+            CodecId::BitmaskNaive => 2,
+            CodecId::CooU16 => 3,
+            CodecId::CooU32 => 4,
+            CodecId::ClusterQuant => 5,
+            CodecId::NaiveQuant8 => 6,
+            CodecId::BlockQuant8 => 7,
+            CodecId::Huffman => 8,
+            CodecId::ByteGroupZstd => 9,
+            CodecId::Prune => 10,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<Self> {
+        Some(match tag {
+            0 => CodecId::Raw,
+            1 => CodecId::BitmaskPacked,
+            2 => CodecId::BitmaskNaive,
+            3 => CodecId::CooU16,
+            4 => CodecId::CooU32,
+            5 => CodecId::ClusterQuant,
+            6 => CodecId::NaiveQuant8,
+            7 => CodecId::BlockQuant8,
+            8 => CodecId::Huffman,
+            9 => CodecId::ByteGroupZstd,
+            10 => CodecId::Prune,
+            _ => return None,
+        })
+    }
+
+    /// Does decoding need the previous (base) tensor?
+    pub fn is_delta(self) -> bool {
+        matches!(
+            self,
+            CodecId::BitmaskPacked | CodecId::BitmaskNaive | CodecId::CooU16 | CodecId::CooU32
+        )
+    }
+
+    /// Does a decode reproduce the input bit-exactly?
+    pub fn is_lossless(self) -> bool {
+        !matches!(
+            self,
+            CodecId::ClusterQuant | CodecId::NaiveQuant8 | CodecId::BlockQuant8 | CodecId::Prune
+        )
+    }
+}
+
+/// A compressed tensor payload plus everything needed to restore it.
+#[derive(Clone, Debug)]
+pub struct CompressedTensor {
+    pub codec: CodecId,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub payload: Vec<u8>,
+}
+
+impl CompressedTensor {
+    /// Compression ratio relative to the dense tensor.
+    pub fn ratio(&self) -> f64 {
+        let n: usize = self.shape.iter().product();
+        (n * self.dtype.size()) as f64 / self.payload.len().max(1) as f64
+    }
+}
+
+/// Compress a standalone tensor (non-delta codecs).
+pub fn compress(codec: CodecId, t: &HostTensor) -> Result<CompressedTensor, CompressError> {
+    let payload = match codec {
+        CodecId::Raw => t.bytes().to_vec(),
+        CodecId::ClusterQuant => cluster_quant::encode(t, cluster_quant::DEFAULT_CLUSTERS)?,
+        CodecId::NaiveQuant8 => naive_quant::encode(t)?,
+        CodecId::BlockQuant8 => blockwise_quant::encode(t, blockwise_quant::DEFAULT_BLOCK)?,
+        CodecId::Huffman => huffman::encode(t.bytes()),
+        CodecId::ByteGroupZstd => byte_group::encode(t)?,
+        CodecId::Prune => prune::encode(t, prune::DEFAULT_KEEP)?,
+        other => {
+            return Err(CompressError::Format(format!(
+                "{other:?} is a delta codec; use compress_delta"
+            )))
+        }
+    };
+    Ok(CompressedTensor { codec, dtype: t.dtype(), shape: t.shape().to_vec(), payload })
+}
+
+/// Decompress a standalone tensor.
+pub fn decompress(c: &CompressedTensor) -> Result<HostTensor, CompressError> {
+    match c.codec {
+        CodecId::Raw => HostTensor::from_bytes(c.dtype, &c.shape, c.payload.clone()),
+        CodecId::ClusterQuant => cluster_quant::decode(&c.payload, c.dtype, &c.shape),
+        CodecId::NaiveQuant8 => naive_quant::decode(&c.payload, c.dtype, &c.shape),
+        CodecId::BlockQuant8 => blockwise_quant::decode(&c.payload, c.dtype, &c.shape),
+        CodecId::Huffman => {
+            HostTensor::from_bytes(c.dtype, &c.shape, huffman::decode(&c.payload)?)
+        }
+        CodecId::ByteGroupZstd => byte_group::decode(&c.payload, c.dtype, &c.shape),
+        CodecId::Prune => prune::decode(&c.payload, c.dtype, &c.shape),
+        other => Err(CompressError::Format(format!(
+            "{other:?} is a delta codec; use decompress_delta"
+        ))),
+    }
+}
+
+/// Compress `curr` as a delta against `base` (same dtype + shape).
+pub fn compress_delta(
+    codec: CodecId,
+    base: &HostTensor,
+    curr: &HostTensor,
+) -> Result<CompressedTensor, CompressError> {
+    if base.dtype() != curr.dtype() || base.shape() != curr.shape() {
+        return Err(CompressError::Shape("delta base/curr mismatch".into()));
+    }
+    let es = curr.dtype().size();
+    let payload = match codec {
+        CodecId::BitmaskPacked => bitmask::encode_packed(base.bytes(), curr.bytes(), es)?,
+        CodecId::BitmaskNaive => bitmask::encode_naive(base.bytes(), curr.bytes(), es)?,
+        CodecId::CooU16 => coo::encode(base.bytes(), curr.bytes(), es, coo::IndexWidth::U16)?,
+        CodecId::CooU32 => coo::encode(base.bytes(), curr.bytes(), es, coo::IndexWidth::U32)?,
+        other => {
+            return Err(CompressError::Format(format!(
+                "{other:?} is not a delta codec; use compress"
+            )))
+        }
+    };
+    Ok(CompressedTensor { codec, dtype: curr.dtype(), shape: curr.shape().to_vec(), payload })
+}
+
+/// Reconstruct the tensor compressed by [`compress_delta`] given the same
+/// base it was encoded against.
+pub fn decompress_delta(
+    c: &CompressedTensor,
+    base: &HostTensor,
+) -> Result<HostTensor, CompressError> {
+    if base.dtype() != c.dtype || base.shape() != c.shape {
+        return Err(CompressError::Shape("delta base mismatch on decode".into()));
+    }
+    let es = c.dtype.size();
+    let bytes = match c.codec {
+        CodecId::BitmaskPacked => bitmask::decode_packed(base.bytes(), &c.payload, es)?,
+        CodecId::BitmaskNaive => bitmask::decode_naive(base.bytes(), &c.payload, es)?,
+        CodecId::CooU16 | CodecId::CooU32 => coo::decode(base.bytes(), &c.payload, es)?,
+        other => return Err(CompressError::Format(format!("{other:?} is not a delta codec"))),
+    };
+    HostTensor::from_bytes(c.dtype, &c.shape, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::XorShiftRng;
+
+    #[test]
+    fn codec_tags_roundtrip() {
+        for c in [
+            CodecId::Raw,
+            CodecId::BitmaskPacked,
+            CodecId::BitmaskNaive,
+            CodecId::CooU16,
+            CodecId::CooU32,
+            CodecId::ClusterQuant,
+            CodecId::NaiveQuant8,
+            CodecId::BlockQuant8,
+            CodecId::Huffman,
+            CodecId::ByteGroupZstd,
+        ] {
+            assert_eq!(CodecId::from_tag(c.tag()), Some(c));
+        }
+        assert_eq!(CodecId::from_tag(99), None);
+    }
+
+    #[test]
+    fn raw_roundtrip() {
+        let t = HostTensor::from_f32(&[8], &[1., 2., 3., 4., 5., 6., 7., 8.]).unwrap();
+        let c = compress(CodecId::Raw, &t).unwrap();
+        assert_eq!(decompress(&c).unwrap(), t);
+        assert!((c.ratio() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn delta_codec_dispatch_roundtrip() {
+        let mut rng = XorShiftRng::new(11);
+        let base_vals = rng.normal_vec(1000, 0.0, 1.0);
+        let mut curr_vals = base_vals.clone();
+        for i in (0..1000).step_by(7) {
+            curr_vals[i] += 0.5;
+        }
+        let base = HostTensor::from_f32_as_f16(&[10, 100], &base_vals).unwrap();
+        let curr = HostTensor::from_f32_as_f16(&[10, 100], &curr_vals).unwrap();
+        for codec in
+            [CodecId::BitmaskPacked, CodecId::BitmaskNaive, CodecId::CooU16, CodecId::CooU32]
+        {
+            let c = compress_delta(codec, &base, &curr).unwrap();
+            let back = decompress_delta(&c, &base).unwrap();
+            assert_eq!(back, curr, "{codec:?}");
+            assert!(c.ratio() > 1.0, "{codec:?} ratio {}", c.ratio());
+        }
+    }
+
+    #[test]
+    fn wrong_dispatch_is_an_error() {
+        let t = HostTensor::from_f32(&[4], &[1., 2., 3., 4.]).unwrap();
+        assert!(compress(CodecId::BitmaskPacked, &t).is_err());
+        assert!(compress_delta(CodecId::ClusterQuant, &t, &t).is_err());
+    }
+
+    #[test]
+    fn delta_shape_mismatch_rejected() {
+        let a = HostTensor::from_f32(&[4], &[1., 2., 3., 4.]).unwrap();
+        let b = HostTensor::from_f32(&[5], &[1., 2., 3., 4., 5.]).unwrap();
+        assert!(compress_delta(CodecId::BitmaskPacked, &a, &b).is_err());
+    }
+}

@@ -1,0 +1,123 @@
+//! Naive global-range 8-bit quantization — the baseline of Table 4.
+//!
+//! "The naive 8-bit quantization just packs tensor values into range
+//! [0, 255]" (paper §5.1): one global `S = max−min`, `b = min` for the
+//! whole tensor. A single outlier (and Adam second moments always have
+//! them) collapses every other value onto a handful of levels, which is
+//! why its Adam1-MRE blows up to ~4e5 in the paper.
+//!
+//! Payload: `n u64 | S f32 | b f32 | q u8 * n`.
+
+use super::CompressError;
+use crate::tensor::{DType, HostTensor};
+
+const HEADER: usize = 8 + 4 + 4;
+
+pub fn encode(t: &HostTensor) -> Result<Vec<u8>, CompressError> {
+    if t.dtype() != DType::F32 {
+        return Err(CompressError::Dtype(format!("naive quant expects f32, got {:?}", t.dtype())));
+    }
+    let owned;
+    let values: &[f32] = match t.as_f32_slice() {
+        Ok(s) => s,
+        Err(_) => {
+            owned = t.to_f32_vec()?;
+            &owned
+        }
+    };
+    let n = values.len();
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in values {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if n == 0 {
+        lo = 0.0;
+        hi = 0.0;
+    }
+    let scale = if hi > lo { hi - lo } else { 0.0 };
+    let mut out = Vec::with_capacity(HEADER + n);
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+    out.extend_from_slice(&scale.to_le_bytes());
+    out.extend_from_slice(&lo.to_le_bytes());
+    for &v in values {
+        let q = if scale > 0.0 {
+            (((v - lo) / scale) * 255.0).round().clamp(0.0, 255.0) as u8
+        } else {
+            0
+        };
+        out.push(q);
+    }
+    Ok(out)
+}
+
+pub fn decode(payload: &[u8], dtype: DType, shape: &[usize]) -> Result<HostTensor, CompressError> {
+    if dtype != DType::F32 {
+        return Err(CompressError::Dtype("naive quant decodes to f32".into()));
+    }
+    if payload.len() < HEADER {
+        return Err(CompressError::Format("naive quant: short payload".into()));
+    }
+    let n = u64::from_le_bytes(payload[0..8].try_into().unwrap()) as usize;
+    if n != shape.iter().product::<usize>() || payload.len() != HEADER + n {
+        return Err(CompressError::Format("naive quant: length mismatch".into()));
+    }
+    let scale = f32::from_le_bytes(payload[8..12].try_into().unwrap());
+    let lo = f32::from_le_bytes(payload[12..16].try_into().unwrap());
+    let mut data = Vec::with_capacity(n * 4);
+    for &q in &payload[HEADER..] {
+        let v = q as f32 / 255.0 * scale + lo;
+        data.extend_from_slice(&v.to_le_bytes());
+    }
+    HostTensor::from_bytes(dtype, shape, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::metrics;
+    use crate::tensor::XorShiftRng;
+
+    #[test]
+    fn roundtrip_uniform_data() {
+        let vals: Vec<f32> = (0..=255).map(|i| i as f32).collect();
+        let t = HostTensor::from_f32(&[256], &vals).unwrap();
+        let back = decode(&encode(&t).unwrap(), DType::F32, &[256]).unwrap();
+        // exactly representable: 256 levels over [0,255]
+        assert_eq!(back.to_f32_vec().unwrap(), vals);
+    }
+
+    #[test]
+    fn error_within_half_step() {
+        let mut rng = XorShiftRng::new(1);
+        let vals = rng.normal_vec(5000, 0.0, 1.0);
+        let t = HostTensor::from_f32(&[5000], &vals).unwrap();
+        let back =
+            decode(&encode(&t).unwrap(), DType::F32, &[5000]).unwrap().to_f32_vec().unwrap();
+        let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let step = (hi - lo) / 255.0;
+        for (v, d) in vals.iter().zip(&back) {
+            assert!((v - d).abs() <= step * 0.5001 + 1e-6);
+        }
+        assert!(metrics::mse(&vals, &back) > 0.0);
+    }
+
+    #[test]
+    fn constant_and_empty() {
+        let t = HostTensor::from_f32(&[3], &[5.0, 5.0, 5.0]).unwrap();
+        let back = decode(&encode(&t).unwrap(), DType::F32, &[3]).unwrap();
+        assert_eq!(back.to_f32_vec().unwrap(), vec![5.0, 5.0, 5.0]);
+        let e = HostTensor::from_f32(&[0], &[]).unwrap();
+        assert_eq!(decode(&encode(&e).unwrap(), DType::F32, &[0]).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn corrupt_rejected() {
+        let t = HostTensor::from_f32(&[4], &[1., 2., 3., 4.]).unwrap();
+        let p = encode(&t).unwrap();
+        assert!(decode(&p[..p.len() - 1], DType::F32, &[4]).is_err());
+        assert!(decode(&p, DType::F32, &[5]).is_err());
+    }
+}

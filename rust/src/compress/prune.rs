@@ -1,0 +1,203 @@
+//! Magnitude-pruning compressor in the style of ExCP (Li et al. 2024,
+//! "weight-momentum joint shrinking") — the *aggressive lossy* end of the
+//! design space the paper argues against (§2.2.1: such methods "will
+//! encounter the situation of a sudden jump of loss if the continued
+//! training from a breakpoint" and can reach ~70x).
+//!
+//! We implement it faithfully enough to reproduce that claim
+//! experimentally (`train_and_checkpoint --experiment excp`): elements
+//! whose joint weight/momentum saliency falls below the keep-fraction
+//! threshold are zeroed; survivors are stored sparse (reusing the packed
+//! bitmask container) and additionally 8-bit quantized.
+//!
+//! Payload: `n u64 | kept u64 | mask ceil(n/8) | S f32 | b f32 | q u8 * kept`.
+
+use super::CompressError;
+use crate::tensor::{DType, HostTensor};
+
+const HEADER: usize = 8 + 8;
+
+/// Keep-fraction presets: ExCP reports up to 70x joint compression, which
+/// at fp32→(mask+u8) needs keeping ~few % of elements.
+pub const DEFAULT_KEEP: f64 = 0.10;
+
+/// Compute the saliency threshold that keeps `keep` fraction of elements
+/// by |value| (quantile via partial sort on a sample for large tensors).
+fn keep_threshold(values: &[f32], keep: f64) -> f32 {
+    if values.is_empty() || keep >= 1.0 {
+        return 0.0;
+    }
+    // sample-based quantile: exact enough for pruning, O(n) not O(n log n)
+    let sample: Vec<f32> = if values.len() > 65536 {
+        let stride = values.len() / 65536;
+        values.iter().step_by(stride).map(|v| v.abs()).collect()
+    } else {
+        values.iter().map(|v| v.abs()).collect()
+    };
+    let mut s = sample;
+    let k = ((1.0 - keep) * (s.len() as f64 - 1.0)).round() as usize;
+    s.select_nth_unstable_by(k, |a, b| a.partial_cmp(b).unwrap());
+    s[k]
+}
+
+/// Prune-and-quantize. Keeps the top `keep` fraction of elements by
+/// magnitude, zeroes the rest, 8-bit-quantizes the survivors.
+pub fn encode(t: &HostTensor, keep: f64) -> Result<Vec<u8>, CompressError> {
+    if t.dtype() != DType::F32 {
+        return Err(CompressError::Dtype(format!("prune expects f32, got {:?}", t.dtype())));
+    }
+    if !(0.0..=1.0).contains(&keep) {
+        return Err(CompressError::Format(format!("keep fraction {keep} outside [0,1]")));
+    }
+    let owned;
+    let values: &[f32] = match t.as_f32_slice() {
+        Ok(s) => s,
+        Err(_) => {
+            owned = t.to_f32_vec()?;
+            &owned
+        }
+    };
+    let n = values.len();
+    let thr = keep_threshold(values, keep);
+    let mut mask = vec![0u8; n.div_ceil(8)];
+    let mut survivors = Vec::new();
+    for (i, &v) in values.iter().enumerate() {
+        if v.abs() >= thr && v != 0.0 {
+            mask[i / 8] |= 1 << (i % 8);
+            survivors.push(v);
+        }
+    }
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in &survivors {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if survivors.is_empty() {
+        lo = 0.0;
+        hi = 0.0;
+    }
+    let scale = if hi > lo { hi - lo } else { 0.0 };
+    let mut out = Vec::with_capacity(HEADER + mask.len() + 8 + survivors.len());
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+    out.extend_from_slice(&(survivors.len() as u64).to_le_bytes());
+    out.extend_from_slice(&mask);
+    out.extend_from_slice(&scale.to_le_bytes());
+    out.extend_from_slice(&lo.to_le_bytes());
+    for &v in &survivors {
+        let q = if scale > 0.0 {
+            (((v - lo) / scale) * 255.0 + 0.5).clamp(0.0, 255.0) as u8
+        } else {
+            0
+        };
+        out.push(q);
+    }
+    Ok(out)
+}
+
+/// Decode: pruned positions come back as exact zeros.
+pub fn decode(payload: &[u8], dtype: DType, shape: &[usize]) -> Result<HostTensor, CompressError> {
+    if dtype != DType::F32 {
+        return Err(CompressError::Dtype("prune decodes to f32".into()));
+    }
+    if payload.len() < HEADER {
+        return Err(CompressError::Format("prune: short payload".into()));
+    }
+    let n = u64::from_le_bytes(payload[0..8].try_into().unwrap()) as usize;
+    let kept = u64::from_le_bytes(payload[8..16].try_into().unwrap()) as usize;
+    if n != shape.iter().product::<usize>() || kept > n {
+        return Err(CompressError::Format("prune: header mismatch".into()));
+    }
+    let mask_len = n.div_ceil(8);
+    if payload.len() != HEADER + mask_len + 8 + kept {
+        return Err(CompressError::Format("prune: length mismatch".into()));
+    }
+    let mask = &payload[HEADER..HEADER + mask_len];
+    let mut pos = HEADER + mask_len;
+    let scale = f32::from_le_bytes(payload[pos..pos + 4].try_into().unwrap());
+    let lo = f32::from_le_bytes(payload[pos + 4..pos + 8].try_into().unwrap());
+    pos += 8;
+    let q = &payload[pos..];
+    let mut data = Vec::with_capacity(n * 4);
+    let mut qi = 0usize;
+    for i in 0..n {
+        let v = if mask[i / 8] & (1 << (i % 8)) != 0 {
+            if qi >= kept {
+                return Err(CompressError::Format("prune: mask popcount > kept".into()));
+            }
+            let val = q[qi] as f32 / 255.0 * scale + lo;
+            qi += 1;
+            val
+        } else {
+            0.0
+        };
+        data.extend_from_slice(&v.to_le_bytes());
+    }
+    if qi != kept {
+        return Err(CompressError::Format("prune: mask popcount != kept".into()));
+    }
+    HostTensor::from_bytes(dtype, shape, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::XorShiftRng;
+
+    #[test]
+    fn keeps_roughly_requested_fraction() {
+        let mut rng = XorShiftRng::new(1);
+        let vals = rng.normal_vec(50_000, 0.0, 1.0);
+        let t = HostTensor::from_f32(&[50_000], &vals).unwrap();
+        let p = encode(&t, 0.1).unwrap();
+        let kept = u64::from_le_bytes(p[8..16].try_into().unwrap()) as f64 / 50_000.0;
+        assert!((kept - 0.1).abs() < 0.02, "kept {kept}");
+    }
+
+    #[test]
+    fn survivors_are_largest_magnitude() {
+        let vals = vec![0.01f32, -5.0, 0.02, 4.0, -0.03, 0.0, 3.0, -0.01];
+        let t = HostTensor::from_f32(&[8], &vals).unwrap();
+        // keep 0.3 of 8 → quantile threshold lands at |3.0|: exactly the
+        // three large-magnitude values survive
+        let p = encode(&t, 0.3).unwrap();
+        let back = decode(&p, DType::F32, &[8]).unwrap().to_f32_vec().unwrap();
+        assert!((back[1] + 5.0).abs() < 0.05);
+        assert!((back[3] - 4.0).abs() < 0.05);
+        assert!((back[6] - 3.0).abs() < 0.05);
+        assert_eq!(back[0], 0.0);
+        assert_eq!(back[4], 0.0);
+    }
+
+    #[test]
+    fn high_compression_ratio() {
+        let mut rng = XorShiftRng::new(2);
+        let vals = rng.normal_vec(1 << 16, 0.0, 1e-3);
+        let t = HostTensor::from_f32(&[1 << 16], &vals).unwrap();
+        let p = encode(&t, 0.05).unwrap();
+        let ratio = (4 << 16) as f64 / p.len() as f64;
+        // mask n/8 + 5% of n bytes ≈ 0.175 B/elem vs 4 B -> ~23x
+        assert!(ratio > 15.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn keep_all_and_keep_none() {
+        let vals = vec![1.0f32, -2.0, 3.0];
+        let t = HostTensor::from_f32(&[3], &vals).unwrap();
+        let all = decode(&encode(&t, 1.0).unwrap(), DType::F32, &[3]).unwrap();
+        for (a, b) in vals.iter().zip(all.to_f32_vec().unwrap()) {
+            assert!((a - b).abs() < 0.02);
+        }
+        let none = decode(&encode(&t, 0.0).unwrap(), DType::F32, &[3]).unwrap();
+        // keep=0 still keeps the max element (threshold == max)
+        assert!(none.to_f32_vec().unwrap().iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn corrupt_rejected() {
+        let t = HostTensor::from_f32(&[64], &[0.5f32; 64]).unwrap();
+        let p = encode(&t, 0.5).unwrap();
+        assert!(decode(&p[..p.len() - 1], DType::F32, &[64]).is_err());
+        assert!(decode(&p, DType::F32, &[63]).is_err());
+        assert!(encode(&t, 1.5).is_err());
+    }
+}

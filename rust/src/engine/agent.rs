@@ -1,0 +1,478 @@
+//! The asynchronous checkpoint engine (paper §3.2, Fig. 3).
+//!
+//! One [`CheckpointEngine`] lives inside each training rank. `save()` is
+//! the only call on the training critical path and does exactly what the
+//! paper's engine does there:
+//!
+//! 1. sparsify + quantize the state dict (the "non-memory-consuming data"),
+//! 2. copy the container into shared memory (the stand-in for D2H), and
+//! 3. hand the metadata to the **async agent** — a daemon thread that
+//!    persists shm → storage off the critical path and maintains the
+//!    tracker file.
+//!
+//! `save()` returns as soon as (1)–(3) are queued; training resumes while
+//! the agent drains. The shm store keeps `redundancy` iterations resident
+//! (in-memory redundancy), so recovery usually never touches the slow
+//! storage tier.
+//!
+//! Delta chaining: every `max_cached_iteration`-th checkpoint is a full
+//! *base*; the ones in between store model states as bitmask deltas
+//! against it (env `MAX_CACHED_ITERATION` in the paper's Megatron patch).
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::compress::delta::{
+    compress_state_dict_timed, decompress_state_dict, CompressTimings, Policy,
+};
+use crate::compress::CompressError;
+use crate::tensor::StateDict;
+
+use super::container;
+use super::shm::ShmStore;
+use super::storage::Storage;
+use super::tracker::Tracker;
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Job name; namespaces the shm area.
+    pub job: String,
+    /// This rank's index and the world size.
+    pub rank: usize,
+    pub world: usize,
+    /// Where shm staging lives (tmpfs; [`ShmStore::default_root`] in prod).
+    pub shm_root: PathBuf,
+    /// Persistent storage backend.
+    pub storage: Storage,
+    /// Checkpoint iterations kept resident in shm (in-memory redundancy).
+    pub redundancy: usize,
+    /// Compression policy.
+    pub policy: Policy,
+    /// Checkpoints per base (1 = every checkpoint is a full base).
+    pub max_cached_iteration: u64,
+}
+
+impl EngineConfig {
+    /// Single-rank config with BitSnap defaults, shm under the OS temp dir
+    /// (tests) — production uses `/dev/shm` via [`ShmStore::default_root`].
+    pub fn single_rank(job: &str, storage: Storage) -> Self {
+        Self {
+            job: job.to_string(),
+            rank: 0,
+            world: 1,
+            shm_root: std::env::temp_dir().join(format!("bitsnap-{job}")),
+            storage,
+            redundancy: 2,
+            policy: Policy::bitsnap(),
+            max_cached_iteration: 5,
+        }
+    }
+
+    /// Honor the paper's `MAX_CACHED_ITERATION` environment variable.
+    pub fn with_env_overrides(mut self) -> Self {
+        if let Ok(v) = std::env::var("MAX_CACHED_ITERATION") {
+            if let Ok(k) = v.parse::<u64>() {
+                self.max_cached_iteration = k.max(1);
+            }
+        }
+        self
+    }
+}
+
+/// What `save()` reports back to the trainer.
+#[derive(Clone, Debug)]
+pub struct SaveReport {
+    pub iteration: u64,
+    pub is_base: bool,
+    /// Wall time the training loop was blocked (compress + shm write + enqueue).
+    pub blocking: Duration,
+    /// Compression phase breakdown.
+    pub timings: CompressTimings,
+    pub raw_bytes: usize,
+    pub compressed_bytes: usize,
+}
+
+impl SaveReport {
+    pub fn ratio(&self) -> f64 {
+        self.raw_bytes as f64 / self.compressed_bytes.max(1) as f64
+    }
+}
+
+enum AgentMsg {
+    Persist { iteration: u64, is_base: bool },
+    Flush(mpsc::SyncSender<()>),
+    Stop,
+}
+
+/// Counters exported by the agent for tests and the CLI.
+#[derive(Clone, Debug, Default)]
+pub struct AgentStats {
+    pub persisted: u64,
+    pub persist_errors: u64,
+    pub bytes_written: u64,
+}
+
+/// The per-rank checkpoint engine. See module docs.
+pub struct CheckpointEngine {
+    cfg: EngineConfig,
+    shm: ShmStore,
+    tx: mpsc::Sender<AgentMsg>,
+    agent: Option<thread::JoinHandle<()>>,
+    stats: Arc<Mutex<AgentStats>>,
+    /// Reconstructed state dict of the current base checkpoint, kept in
+    /// memory for delta encoding (the paper keeps it in GPU/CPU memory).
+    base: Option<(u64, StateDict)>,
+    saves_since_base: u64,
+}
+
+impl CheckpointEngine {
+    pub fn new(cfg: EngineConfig) -> Result<Self, CompressError> {
+        let shm = ShmStore::new(&cfg.shm_root, cfg.rank, cfg.redundancy)?;
+        let (tx, rx) = mpsc::channel::<AgentMsg>();
+        let stats = Arc::new(Mutex::new(AgentStats::default()));
+        let agent = {
+            let shm = shm.clone();
+            let storage = cfg.storage.clone();
+            let rank = cfg.rank;
+            let stats = Arc::clone(&stats);
+            thread::Builder::new()
+                .name(format!("bitsnap-agent-r{rank}"))
+                .spawn(move || agent_loop(rx, shm, storage, rank, stats))
+                .map_err(CompressError::Io)?
+        };
+        Ok(Self { cfg, shm, tx, agent: Some(agent), stats, base: None, saves_since_base: 0 })
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    pub fn shm(&self) -> &ShmStore {
+        &self.shm
+    }
+
+    /// Save a checkpoint. Blocking time is the returned `blocking`
+    /// duration; persistence continues asynchronously.
+    pub fn save(&mut self, iteration: u64, sd: &StateDict) -> Result<SaveReport, CompressError> {
+        let t0 = Instant::now();
+        // a base every `max_cached_iteration` checkpoints: base + (k-1) deltas
+        let make_base = match &self.base {
+            None => true,
+            Some(_) => self.saves_since_base >= self.cfg.max_cached_iteration,
+        };
+        let (base_iter, base_sd) = if make_base {
+            (iteration, None)
+        } else {
+            let (bi, bsd) = self.base.as_ref().unwrap();
+            (*bi, Some(bsd))
+        };
+        let (ckpt, timings) =
+            compress_state_dict_timed(sd, base_sd, self.cfg.policy, iteration, base_iter)?;
+        let bytes = container::serialize(&ckpt);
+        self.shm.put(iteration, &bytes, make_base)?;
+        self.tx
+            .send(AgentMsg::Persist { iteration, is_base: make_base })
+            .map_err(|_| CompressError::Format("agent thread died".into()))?;
+        if make_base {
+            self.base = Some((iteration, sd.clone()));
+            self.saves_since_base = 1;
+        } else {
+            self.saves_since_base += 1;
+        }
+        Ok(SaveReport {
+            iteration,
+            is_base: make_base,
+            blocking: t0.elapsed(),
+            timings,
+            raw_bytes: sd.total_bytes(),
+            compressed_bytes: bytes.len(),
+        })
+    }
+
+    /// Block until the agent has drained every queued persist.
+    pub fn flush(&self) -> Result<(), CompressError> {
+        let (tx, rx) = mpsc::sync_channel(0);
+        self.tx
+            .send(AgentMsg::Flush(tx))
+            .map_err(|_| CompressError::Format("agent thread died".into()))?;
+        rx.recv().map_err(|_| CompressError::Format("agent thread died".into()))
+    }
+
+    pub fn agent_stats(&self) -> AgentStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Load the newest restorable checkpoint *from this rank's view*
+    /// (shm first, storage fallback), reconstructing delta chains.
+    /// Multi-rank recovery with the all-gather check lives in
+    /// [`super::recovery`].
+    pub fn load_latest(&self) -> Result<Option<(u64, StateDict)>, CompressError> {
+        let mut iters = self.shm.iterations()?;
+        iters.reverse();
+        for i in iters {
+            if let Ok(sd) = self.load_iteration(i) {
+                return Ok(Some((i, sd)));
+            }
+        }
+        // storage fallback
+        let mut persisted = self.cfg.storage.iterations()?;
+        persisted.reverse();
+        for i in persisted {
+            if let Ok(sd) = self.load_iteration(i) {
+                return Ok(Some((i, sd)));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Load one iteration (shm first, then storage), following the delta
+    /// chain to its base when necessary.
+    pub fn load_iteration(&self, iteration: u64) -> Result<StateDict, CompressError> {
+        let bytes = self.read_container(iteration)?;
+        let ckpt = container::deserialize(&bytes)?;
+        if ckpt.is_base() {
+            return decompress_state_dict(&ckpt, None);
+        }
+        let base_bytes = self.read_container(ckpt.base_iteration)?;
+        let base_ckpt = container::deserialize(&base_bytes)?;
+        if !base_ckpt.is_base() {
+            return Err(CompressError::Format("base checkpoint is itself a delta".into()));
+        }
+        let base_sd = decompress_state_dict(&base_ckpt, None)?;
+        decompress_state_dict(&ckpt, Some(&base_sd))
+    }
+
+    fn read_container(&self, iteration: u64) -> Result<Vec<u8>, CompressError> {
+        if self.shm.has(iteration) {
+            Ok(self.shm.get(iteration)?)
+        } else {
+            Ok(self.cfg.storage.get(iteration, self.cfg.rank)?)
+        }
+    }
+}
+
+impl Drop for CheckpointEngine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(AgentMsg::Stop);
+        if let Some(h) = self.agent.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn agent_loop(
+    rx: mpsc::Receiver<AgentMsg>,
+    shm: ShmStore,
+    storage: Storage,
+    rank: usize,
+    stats: Arc<Mutex<AgentStats>>,
+) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            AgentMsg::Persist { iteration, is_base } => {
+                match shm.get(iteration) {
+                    Ok(bytes) => match storage.put(iteration, rank, &bytes, is_base) {
+                        Ok(_) => {
+                            let mut s = stats.lock().unwrap();
+                            s.persisted += 1;
+                            s.bytes_written += bytes.len() as u64;
+                            drop(s);
+                            // rank 0 owns the tracker (paper: one tracker
+                            // file per checkpoint root)
+                            if rank == 0 {
+                                let tracker = match container::deserialize(&bytes) {
+                                    Ok(c) => Tracker {
+                                        latest_iteration: iteration,
+                                        base_iteration: c.base_iteration,
+                                        base_name: format!("iter{:010}", c.base_iteration),
+                                    },
+                                    Err(_) => Tracker {
+                                        latest_iteration: iteration,
+                                        base_iteration: iteration,
+                                        base_name: format!("iter{iteration:010}"),
+                                    },
+                                };
+                                let _ = tracker.store(storage.root());
+                            }
+                        }
+                        Err(_) => stats.lock().unwrap().persist_errors += 1,
+                    },
+                    Err(_) => stats.lock().unwrap().persist_errors += 1,
+                }
+            }
+            AgentMsg::Flush(done) => {
+                let _ = done.send(());
+            }
+            AgentMsg::Stop => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::StateKind;
+    use std::fs;
+
+    fn setup(tag: &str, policy: Policy, max_cached: u64) -> (CheckpointEngine, PathBuf, PathBuf) {
+        let pid = std::process::id();
+        let shm_root = std::env::temp_dir().join(format!("bsnp-agent-shm-{tag}-{pid}"));
+        let store_root = std::env::temp_dir().join(format!("bsnp-agent-store-{tag}-{pid}"));
+        let _ = fs::remove_dir_all(&shm_root);
+        let _ = fs::remove_dir_all(&store_root);
+        let storage = Storage::new(&store_root).unwrap();
+        let cfg = EngineConfig {
+            job: tag.into(),
+            rank: 0,
+            world: 1,
+            shm_root: shm_root.clone(),
+            storage,
+            redundancy: 3,
+            policy,
+            max_cached_iteration: max_cached,
+        };
+        (CheckpointEngine::new(cfg).unwrap(), shm_root, store_root)
+    }
+
+    fn cleanup(a: PathBuf, b: PathBuf) {
+        let _ = fs::remove_dir_all(a);
+        let _ = fs::remove_dir_all(b);
+    }
+
+    #[test]
+    fn save_flush_persists_and_tracks() {
+        let (mut eng, shm_root, store_root) = setup("basic", Policy::lossless(), 3);
+        let sd = StateDict::synthetic_gpt(1 << 12, 1);
+        let r = eng.save(100, &sd).unwrap();
+        assert!(r.is_base);
+        eng.flush().unwrap();
+        let stats = eng.agent_stats();
+        assert_eq!(stats.persisted, 1);
+        assert_eq!(stats.persist_errors, 0);
+        assert!(eng.config().storage.validate(100, 0));
+        let t = Tracker::load(&store_root).unwrap();
+        assert_eq!(t.latest_iteration, 100);
+        assert_eq!(t.base_iteration, 100);
+        cleanup(shm_root, store_root);
+    }
+
+    #[test]
+    fn base_delta_cadence_follows_max_cached_iteration() {
+        let (mut eng, shm_root, store_root) = setup("cadence", Policy::lossless(), 3);
+        let mut sd = StateDict::synthetic_gpt(1 << 12, 2);
+        let mut kinds = Vec::new();
+        for i in 0..7u64 {
+            sd.perturb_model_states(0.05, 100 + i);
+            kinds.push(eng.save(i * 10, &sd).unwrap().is_base);
+        }
+        // base, delta, delta, base, delta, delta, base
+        assert_eq!(kinds, vec![true, false, false, true, false, false, true]);
+        eng.flush().unwrap();
+        cleanup(shm_root, store_root);
+    }
+
+    #[test]
+    fn delta_checkpoints_are_much_smaller() {
+        let (mut eng, shm_root, store_root) = setup("ratio", Policy::lossless(), 5);
+        let mut sd = StateDict::synthetic_gpt(1 << 14, 3);
+        let r_base = eng.save(0, &sd).unwrap();
+        sd.perturb_model_states(0.05, 42);
+        let r_delta = eng.save(10, &sd).unwrap();
+        assert!(!r_delta.is_base);
+        // model states shrink to ~ mask + 5% values; optimizer stays raw
+        assert!(r_delta.compressed_bytes < r_base.compressed_bytes);
+        assert!(r_delta.timings.delta_encoding > Duration::ZERO);
+        eng.flush().unwrap();
+        cleanup(shm_root, store_root);
+    }
+
+    #[test]
+    fn load_latest_roundtrips_delta_chain() {
+        let (mut eng, shm_root, store_root) = setup("load", Policy::lossless(), 4);
+        let mut sd = StateDict::synthetic_gpt(1 << 12, 4);
+        eng.save(0, &sd).unwrap();
+        sd.perturb_model_states(0.02, 50);
+        eng.save(10, &sd).unwrap();
+        sd.perturb_model_states(0.02, 51);
+        eng.save(20, &sd).unwrap();
+        eng.flush().unwrap();
+        let (iter, loaded) = eng.load_latest().unwrap().unwrap();
+        assert_eq!(iter, 20);
+        for (a, b) in sd.entries().iter().zip(loaded.entries()) {
+            assert_eq!(a.tensor, b.tensor, "{}", a.name);
+        }
+        cleanup(shm_root, store_root);
+    }
+
+    #[test]
+    fn load_falls_back_to_storage_when_shm_lost() {
+        let (mut eng, shm_root, store_root) = setup("fallback", Policy::lossless(), 1);
+        let sd = StateDict::synthetic_gpt(1 << 12, 5);
+        eng.save(30, &sd).unwrap();
+        eng.flush().unwrap();
+        // simulate machine reboot: wipe shm
+        fs::remove_dir_all(&shm_root).unwrap();
+        fs::create_dir_all(shm_root.join("rank0")).unwrap();
+        let (iter, loaded) = eng.load_latest().unwrap().unwrap();
+        assert_eq!(iter, 30);
+        assert_eq!(loaded.entries().len(), sd.entries().len());
+        cleanup(shm_root, store_root);
+    }
+
+    #[test]
+    fn bitsnap_policy_optimizer_roundtrip_is_close() {
+        let (mut eng, shm_root, store_root) = setup("quant", Policy::bitsnap(), 2);
+        let sd = StateDict::synthetic_gpt(1 << 12, 6);
+        let r = eng.save(0, &sd).unwrap();
+        assert!(r.ratio() > 2.0, "ratio {}", r.ratio());
+        assert!(r.timings.clustering > Duration::ZERO);
+        assert!(r.timings.quantization > Duration::ZERO);
+        eng.flush().unwrap();
+        let (_, loaded) = eng.load_latest().unwrap().unwrap();
+        for (a, b) in sd.entries().iter().zip(loaded.entries()) {
+            if a.kind == StateKind::ModelState {
+                assert_eq!(a.tensor, b.tensor); // lossless path
+            } else if a.kind.is_optimizer() {
+                let diff = a.tensor.max_abs_diff(&b.tensor).unwrap();
+                assert!(diff < 0.05, "{} diff {diff}", a.name);
+            }
+        }
+        cleanup(shm_root, store_root);
+    }
+
+    #[test]
+    fn blocking_time_excludes_persistence() {
+        // throttle storage to be very slow; save() must still return fast
+        let pid = std::process::id();
+        let shm_root = std::env::temp_dir().join(format!("bsnp-agent-shm-slow-{pid}"));
+        let store_root = std::env::temp_dir().join(format!("bsnp-agent-store-slow-{pid}"));
+        let _ = fs::remove_dir_all(&shm_root);
+        let _ = fs::remove_dir_all(&store_root);
+        let storage = Storage::new(&store_root).unwrap().with_throttle(2e6); // 2 MB/s
+        let cfg = EngineConfig {
+            job: "slow".into(),
+            rank: 0,
+            world: 1,
+            shm_root: shm_root.clone(),
+            storage,
+            redundancy: 2,
+            policy: Policy::raw(),
+            max_cached_iteration: 1,
+        };
+        let mut eng = CheckpointEngine::new(cfg).unwrap();
+        let sd = StateDict::synthetic_gpt(1 << 16, 7); // ~0.9 MiB ckpt
+        let t0 = Instant::now();
+        let r = eng.save(0, &sd).unwrap();
+        let returned_after = t0.elapsed();
+        // persisting ~0.9MiB at 2MB/s takes ~450ms; save must be much faster
+        assert!(returned_after < Duration::from_millis(200), "blocked {returned_after:?}");
+        assert!(r.blocking < Duration::from_millis(200));
+        eng.flush().unwrap();
+        assert!(eng.agent_stats().persisted == 1);
+        cleanup(shm_root, store_root);
+    }
+}

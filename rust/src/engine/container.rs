@@ -1,0 +1,239 @@
+//! The `.bsnp` checkpoint container: binary serialization of a
+//! [`CompressedCheckpoint`] with a CRC-64 trailer so torn shared-memory
+//! writes and bit rot are detected at load time — the failure mode the
+//! in-memory-redundancy protocol (paper Fig. 4) exists to survive.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic  "BSNP"          4
+//! version u32            4
+//! iteration u64          8
+//! base_iteration u64     8
+//! kind u8                1   (0 = full base, 1 = delta)  — paper's type.txt
+//! n_entries u32          4
+//! entries:
+//!   name_len u16 | name utf-8
+//!   kind u8 | dtype u8 | codec u8
+//!   ndim u8 | dims u64 * ndim
+//!   payload_len u64 | payload
+//! crc64 u64              8   (ECMA-182, over everything above)
+//! ```
+
+use crate::compress::delta::{CompressedCheckpoint, CompressedEntry};
+use crate::compress::{CodecId, CompressError, CompressedTensor};
+use crate::tensor::{DType, StateKind};
+
+pub const MAGIC: &[u8; 4] = b"BSNP";
+pub const VERSION: u32 = 1;
+
+/// CRC-64/ECMA-182 (poly 0x42F0E1EBA9EA3693), table-driven.
+pub fn crc64(data: &[u8]) -> u64 {
+    static TABLE: once_cell::sync::Lazy<[u64; 256]> = once_cell::sync::Lazy::new(|| {
+        let mut table = [0u64; 256];
+        for (i, t) in table.iter_mut().enumerate() {
+            let mut crc = (i as u64) << 56;
+            for _ in 0..8 {
+                crc = if crc & 0x8000_0000_0000_0000 != 0 {
+                    (crc << 1) ^ 0x42F0_E1EB_A9EA_3693
+                } else {
+                    crc << 1
+                };
+            }
+            *t = crc;
+        }
+        table
+    });
+    let mut crc = 0u64;
+    for &b in data {
+        crc = TABLE[(((crc >> 56) as u8) ^ b) as usize] ^ (crc << 8);
+    }
+    crc
+}
+
+/// Serialize a compressed checkpoint to container bytes.
+pub fn serialize(ckpt: &CompressedCheckpoint) -> Vec<u8> {
+    let payload: usize = ckpt.payload_bytes();
+    let mut out = Vec::with_capacity(payload + 64 * ckpt.entries.len() + 64);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&ckpt.iteration.to_le_bytes());
+    out.extend_from_slice(&ckpt.base_iteration.to_le_bytes());
+    out.push(if ckpt.is_base() { 0 } else { 1 });
+    out.extend_from_slice(&(ckpt.entries.len() as u32).to_le_bytes());
+    for e in &ckpt.entries {
+        let name = e.name.as_bytes();
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name);
+        out.push(e.kind.tag());
+        out.push(e.compressed.dtype.tag());
+        out.push(e.compressed.codec.tag());
+        out.push(e.compressed.shape.len() as u8);
+        for &d in &e.compressed.shape {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        out.extend_from_slice(&(e.compressed.payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&e.compressed.payload);
+    }
+    let crc = crc64(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+struct Reader<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CompressError> {
+        if self.pos + n > self.data.len() {
+            return Err(CompressError::Format("container truncated".into()));
+        }
+        let s = &self.data[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CompressError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, CompressError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, CompressError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, CompressError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Deserialize and CRC-verify a container. A CRC mismatch (torn write,
+/// corrupt memory) is an error — the recovery protocol treats it as a
+/// broken checkpoint and falls back to an older iteration.
+pub fn deserialize(data: &[u8]) -> Result<CompressedCheckpoint, CompressError> {
+    if data.len() < 4 + 4 + 8 + 8 + 1 + 4 + 8 {
+        return Err(CompressError::Format("container too short".into()));
+    }
+    let (body, trailer) = data.split_at(data.len() - 8);
+    let stored_crc = u64::from_le_bytes(trailer.try_into().unwrap());
+    if crc64(body) != stored_crc {
+        return Err(CompressError::Format("container crc mismatch".into()));
+    }
+    let mut r = Reader { data: body, pos: 0 };
+    if r.take(4)? != MAGIC {
+        return Err(CompressError::Format("bad magic".into()));
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(CompressError::Format(format!("unsupported version {version}")));
+    }
+    let iteration = r.u64()?;
+    let base_iteration = r.u64()?;
+    let kind_flag = r.u8()?;
+    let n_entries = r.u32()? as usize;
+    let mut entries = Vec::with_capacity(n_entries);
+    for _ in 0..n_entries {
+        let name_len = r.u16()? as usize;
+        let name = String::from_utf8(r.take(name_len)?.to_vec())
+            .map_err(|_| CompressError::Format("bad entry name".into()))?;
+        let kind = StateKind::from_tag(r.u8()?)
+            .ok_or_else(|| CompressError::Format("bad state kind".into()))?;
+        let dtype = DType::from_tag(r.u8()?)
+            .ok_or_else(|| CompressError::Format("bad dtype".into()))?;
+        let codec = CodecId::from_tag(r.u8()?)
+            .ok_or_else(|| CompressError::Format("bad codec".into()))?;
+        let ndim = r.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u64()? as usize);
+        }
+        let payload_len = r.u64()? as usize;
+        let payload = r.take(payload_len)?.to_vec();
+        entries.push(CompressedEntry {
+            name,
+            kind,
+            compressed: CompressedTensor { codec, dtype, shape, payload },
+        });
+    }
+    if r.pos != body.len() {
+        return Err(CompressError::Format("trailing bytes in container".into()));
+    }
+    let ckpt = CompressedCheckpoint { entries, iteration, base_iteration };
+    let expect_flag = if ckpt.is_base() { 0 } else { 1 };
+    if kind_flag != expect_flag {
+        return Err(CompressError::Format("kind flag inconsistent with iterations".into()));
+    }
+    Ok(ckpt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::delta::{compress_state_dict, Policy};
+    use crate::tensor::StateDict;
+
+    fn ckpt(seed: u64, iter: u64, base: u64) -> CompressedCheckpoint {
+        let sd = StateDict::synthetic_gpt(1 << 12, seed);
+        if iter == base {
+            compress_state_dict(&sd, None, Policy::bitsnap(), iter, base).unwrap()
+        } else {
+            let mut cur = sd.clone();
+            cur.perturb_model_states(0.1, seed + 1);
+            compress_state_dict(&cur, Some(&sd), Policy::lossless(), iter, base).unwrap()
+        }
+    }
+
+    #[test]
+    fn roundtrip_base() {
+        let c = ckpt(1, 100, 100);
+        let bytes = serialize(&c);
+        let back = deserialize(&bytes).unwrap();
+        assert_eq!(back.iteration, 100);
+        assert_eq!(back.base_iteration, 100);
+        assert_eq!(back.entries.len(), c.entries.len());
+        for (a, b) in c.entries.iter().zip(&back.entries) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.compressed.codec, b.compressed.codec);
+            assert_eq!(a.compressed.shape, b.compressed.shape);
+            assert_eq!(a.compressed.payload, b.compressed.payload);
+        }
+    }
+
+    #[test]
+    fn roundtrip_delta() {
+        let c = ckpt(2, 120, 100);
+        let back = deserialize(&serialize(&c)).unwrap();
+        assert_eq!(back.iteration, 120);
+        assert_eq!(back.base_iteration, 100);
+        assert!(!back.is_base());
+    }
+
+    #[test]
+    fn crc_detects_single_bit_flip() {
+        let bytes = serialize(&ckpt(3, 7, 7));
+        for pos in [0usize, 10, bytes.len() / 2, bytes.len() - 9] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x01;
+            assert!(deserialize(&bad).is_err(), "flip at {pos} undetected");
+        }
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let bytes = serialize(&ckpt(4, 7, 7));
+        for cut in [1usize, 8, 100] {
+            assert!(deserialize(&bytes[..bytes.len() - cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn crc64_known_vector() {
+        // CRC-64/ECMA-182 of "123456789"
+        assert_eq!(crc64(b"123456789"), 0x6C40_DF5F_0B49_7347);
+    }
+}

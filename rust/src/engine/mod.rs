@@ -1,0 +1,25 @@
+//! The BitSnap asynchronous checkpoint engine (paper §3.2 + §4).
+//!
+//! * [`agent`] — per-rank engine: compress → shm → async persist daemon.
+//! * [`shm`] — shared-memory staging with in-memory redundancy.
+//! * [`storage`] — persistent backend (+ bandwidth model for Table 1/2).
+//! * [`tracker`] — Megatron tracker file extended with base-checkpoint
+//!   metadata (paper §4.4).
+//! * [`container`] — the `.bsnp` on-disk/in-shm format with CRC-64.
+//! * [`recovery`] — the multi-rank all-gather recovery check (Fig. 4).
+//! * [`failure`] — failure injection used by tests and the
+//!   `failure_recovery` example.
+
+pub mod agent;
+pub mod container;
+pub mod failure;
+pub mod recovery;
+pub mod shm;
+pub mod storage;
+pub mod tracker;
+
+pub use agent::{CheckpointEngine, EngineConfig, SaveReport};
+pub use recovery::{all_gather_check, RankView, RecoveryDecision};
+pub use shm::ShmStore;
+pub use storage::{AnalyticalModel, Storage};
+pub use tracker::Tracker;

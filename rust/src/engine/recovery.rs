@@ -1,0 +1,181 @@
+//! Multi-rank recovery protocol (paper Fig. 4).
+//!
+//! After a crash-and-restart every rank reports the newest checkpoint
+//! iteration it can *validate* from shared memory (falling back to
+//! storage). An **all-gather check** determines the newest iteration valid
+//! on *all* ranks; newer, partially-written iterations are pruned and all
+//! ranks load the agreed one. This is why rank 1 failing to stage
+//! iteration 100 makes everyone restart from 80 in the paper's walkthrough.
+
+use crate::compress::CompressError;
+
+use super::shm::ShmStore;
+use super::storage::Storage;
+
+/// One rank's recovery view.
+#[derive(Clone, Debug)]
+pub struct RankView {
+    pub rank: usize,
+    /// Iterations this rank can CRC-validate in shm, ascending.
+    pub shm_valid: Vec<u64>,
+    /// Iterations this rank can CRC-validate in storage, ascending.
+    pub storage_valid: Vec<u64>,
+}
+
+impl RankView {
+    /// Gather the view for `rank` (the per-rank half of the all-gather).
+    pub fn gather(shm: &ShmStore, storage: &Storage, rank: usize) -> Result<Self, CompressError> {
+        let shm_valid =
+            shm.iterations()?.into_iter().filter(|&i| shm.validate(i)).collect::<Vec<_>>();
+        let storage_valid = storage
+            .iterations()?
+            .into_iter()
+            .filter(|&i| storage.validate(i, rank))
+            .collect::<Vec<_>>();
+        Ok(Self { rank, shm_valid, storage_valid })
+    }
+
+
+    fn has(&self, iter: u64) -> bool {
+        self.shm_valid.contains(&iter) || self.storage_valid.contains(&iter)
+    }
+}
+
+/// Decision of the all-gather check.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RecoveryDecision {
+    /// The iteration all ranks will load.
+    pub iteration: u64,
+    /// True if every rank can serve it from shm (fast path).
+    pub all_from_memory: bool,
+    /// Iterations that were newer on some ranks but broken/missing on
+    /// others — pruned, Fig. 4 style.
+    pub pruned: Vec<u64>,
+}
+
+/// The all-gather check: newest iteration valid on every rank.
+/// Returns `None` if no common iteration exists.
+pub fn all_gather_check(views: &[RankView]) -> Option<RecoveryDecision> {
+    assert!(!views.is_empty());
+    // candidate iterations: union of everything anyone has
+    let mut candidates: Vec<u64> = views
+        .iter()
+        .flat_map(|v| v.shm_valid.iter().chain(v.storage_valid.iter()).copied())
+        .collect();
+    candidates.sort_unstable();
+    candidates.dedup();
+
+    let chosen = candidates.iter().rev().find(|&&i| views.iter().all(|v| v.has(i))).copied()?;
+    let pruned = candidates.into_iter().filter(|&i| i > chosen).collect();
+    let all_from_memory = views.iter().all(|v| v.shm_valid.contains(&chosen));
+    Some(RecoveryDecision { iteration: chosen, all_from_memory, pruned })
+}
+
+/// Execute a decision against one rank's stores: prune broken/newer
+/// iterations from shm so they cannot be picked up later.
+pub fn apply_pruning(shm: &ShmStore, decision: &RecoveryDecision) -> Result<(), CompressError> {
+    for &i in &decision.pruned {
+        shm.remove(i)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(rank: usize, shm: &[u64], storage: &[u64]) -> RankView {
+        RankView { rank, shm_valid: shm.to_vec(), storage_valid: storage.to_vec() }
+    }
+
+    #[test]
+    fn paper_fig4_walkthrough() {
+        // 4 ranks, interval 20, iterations 60/80 staged everywhere; rank 1
+        // failed to stage 100.
+        let views = vec![
+            view(0, &[60, 80, 100], &[]),
+            view(1, &[60, 80], &[]),
+            view(2, &[60, 80, 100], &[]),
+            view(3, &[60, 80, 100], &[]),
+        ];
+        let d = all_gather_check(&views).unwrap();
+        assert_eq!(d.iteration, 80);
+        assert!(d.all_from_memory);
+        assert_eq!(d.pruned, vec![100]);
+    }
+
+    #[test]
+    fn storage_fills_shm_gaps() {
+        // rank 0 lost shm entirely (host rebooted) but storage has 80
+        let views = vec![view(0, &[], &[60, 80]), view(1, &[80, 100], &[60, 80])];
+        let d = all_gather_check(&views).unwrap();
+        assert_eq!(d.iteration, 80);
+        assert!(!d.all_from_memory);
+        assert_eq!(d.pruned, vec![100]);
+    }
+
+    #[test]
+    fn no_common_iteration() {
+        let views = vec![view(0, &[100], &[]), view(1, &[80], &[])];
+        assert_eq!(all_gather_check(&views), None);
+    }
+
+    #[test]
+    fn single_rank_takes_its_latest() {
+        let views = vec![view(0, &[60, 80, 100], &[40])];
+        let d = all_gather_check(&views).unwrap();
+        assert_eq!(d.iteration, 100);
+        assert!(d.pruned.is_empty());
+    }
+
+    #[test]
+    fn end_to_end_prune_on_real_stores() {
+        use crate::compress::delta::{compress_state_dict, Policy};
+        use crate::engine::container;
+        use crate::tensor::StateDict;
+        use std::fs;
+
+        let pid = std::process::id();
+        let shm_root = std::env::temp_dir().join(format!("bsnp-rec-shm-{pid}"));
+        let store_root = std::env::temp_dir().join(format!("bsnp-rec-store-{pid}"));
+        let _ = fs::remove_dir_all(&shm_root);
+        let _ = fs::remove_dir_all(&store_root);
+        let storage = Storage::new(&store_root).unwrap();
+
+        let world = 3;
+        let shms: Vec<ShmStore> =
+            (0..world).map(|r| ShmStore::new(&shm_root, r, 8).unwrap()).collect();
+        let sd = StateDict::synthetic_gpt(1 << 10, 1);
+        let mk = |iter: u64| {
+            container::serialize(
+                &compress_state_dict(&sd, None, Policy::raw(), iter, iter).unwrap(),
+            )
+        };
+        for &i in &[60u64, 80] {
+            for s in &shms {
+                s.put(i, &mk(i), true).unwrap();
+            }
+        }
+        // iteration 100: rank 1 writes a torn container
+        let full = mk(100);
+        shms[0].put(100, &full, true).unwrap();
+        shms[1].put(100, &full[..full.len() / 3], true).unwrap();
+        shms[2].put(100, &full, true).unwrap();
+
+        let views: Vec<RankView> = shms
+            .iter()
+            .enumerate()
+            .map(|(r, s)| RankView::gather(s, &storage, r).unwrap())
+            .collect();
+        assert_eq!(views[1].shm_valid, vec![60, 80]); // torn write rejected by CRC
+        let d = all_gather_check(&views).unwrap();
+        assert_eq!(d.iteration, 80);
+        assert_eq!(d.pruned, vec![100]);
+        for s in &shms {
+            apply_pruning(s, &d).unwrap();
+            assert!(!s.has(100));
+        }
+        let _ = fs::remove_dir_all(&shm_root);
+        let _ = fs::remove_dir_all(&store_root);
+    }
+}

@@ -1,0 +1,263 @@
+//! Shared-memory checkpoint store with in-memory redundancy (paper §3.2).
+//!
+//! Checkpoints are staged into tmpfs (`/dev/shm` by default) before the
+//! async agent persists them to real storage. tmpfs gives the same two
+//! properties the paper relies on: memory-bandwidth writes (the training
+//! step only blocks for a memcpy, the stand-in for the GPU D2H copy), and
+//! survival across a *process* crash-and-restart — which is exactly the
+//! recovery scenario of Fig. 4. A machine reboot loses shm, which is why
+//! the agent still persists to storage behind the scenes.
+//!
+//! Layout: `<root>/rank<k>/iter<N>.bsnp` (+ `type.txt`, paper §4.4).
+//! The store keeps the newest `redundancy` iterations per rank and prunes
+//! older ones — "in-memory redundancy will save a number of iterations in
+//! memory", bounded so compression keeps the footprint tolerable.
+//!
+//! Writes are torn-write-safe: write to `*.tmp`, fsync-less rename (tmpfs)
+//! — a crash mid-write leaves only a `.tmp` the loader ignores, and a
+//! corrupted rename target is caught by the container CRC.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+
+
+/// One rank's view of the shared-memory checkpoint area.
+#[derive(Clone, Debug)]
+pub struct ShmStore {
+    root: PathBuf,
+    rank: usize,
+    /// How many checkpoint iterations to keep resident (>= 1).
+    redundancy: usize,
+}
+
+impl ShmStore {
+    /// Open (creating directories) the store for `rank` under `root`.
+    pub fn new(root: impl Into<PathBuf>, rank: usize, redundancy: usize) -> std::io::Result<Self> {
+        let root = root.into();
+        let s = Self { root, rank, redundancy: redundancy.max(1) };
+        fs::create_dir_all(s.rank_dir())?;
+        Ok(s)
+    }
+
+    /// Default root under /dev/shm, namespaced by job name.
+    pub fn default_root(job: &str) -> PathBuf {
+        PathBuf::from("/dev/shm").join(format!("bitsnap-{job}"))
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn rank_dir(&self) -> PathBuf {
+        self.root.join(format!("rank{}", self.rank))
+    }
+
+    fn iter_path(&self, iteration: u64) -> PathBuf {
+        self.rank_dir().join(format!("iter{iteration:010}.bsnp"))
+    }
+
+    /// Stage container bytes for `iteration`, then prune beyond the
+    /// redundancy window. Returns the final path.
+    pub fn put(&self, iteration: u64, container: &[u8], is_base: bool) -> std::io::Result<PathBuf> {
+        let final_path = self.iter_path(iteration);
+        let tmp = final_path.with_extension("tmp");
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(container)?;
+        }
+        fs::rename(&tmp, &final_path)?;
+        // paper §4.4: a type indicator file inside each checkpoint location
+        fs::write(
+            self.rank_dir().join(format!("iter{iteration:010}.type.txt")),
+            if is_base { "base\n" } else { "delta\n" },
+        )?;
+        self.prune()?;
+        Ok(final_path)
+    }
+
+    /// Iterations currently staged for this rank, ascending.
+    pub fn iterations(&self) -> std::io::Result<Vec<u64>> {
+        let mut out = Vec::new();
+        for entry in fs::read_dir(self.rank_dir())? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(num) = name.strip_prefix("iter").and_then(|s| s.strip_suffix(".bsnp")) {
+                if let Ok(i) = num.parse::<u64>() {
+                    out.push(i);
+                }
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    /// Read the container bytes for `iteration` (no CRC check here; the
+    /// container deserializer does that).
+    pub fn get(&self, iteration: u64) -> std::io::Result<Vec<u8>> {
+        fs::read(self.iter_path(iteration))
+    }
+
+    /// Does this rank hold a (syntactically present) checkpoint for `iteration`?
+    pub fn has(&self, iteration: u64) -> bool {
+        self.iter_path(iteration).exists()
+    }
+
+    /// Validate `iteration` by CRC (cheap compared to a failed restore).
+    pub fn validate(&self, iteration: u64) -> bool {
+        match self.get(iteration) {
+            Ok(bytes) => super::container::deserialize(&bytes).is_ok(),
+            Err(_) => false,
+        }
+    }
+
+    /// Remove a (broken) iteration — Fig. 4's "the broken checkpoint at
+    /// iteration 100 is pruned".
+    pub fn remove(&self, iteration: u64) -> std::io::Result<()> {
+        let p = self.iter_path(iteration);
+        if p.exists() {
+            fs::remove_file(p)?;
+        }
+        let t = self.rank_dir().join(format!("iter{iteration:010}.type.txt"));
+        if t.exists() {
+            fs::remove_file(t)?;
+        }
+        Ok(())
+    }
+
+    /// Keep only the newest `redundancy` iterations, but never prune the
+    /// base checkpoint a kept delta still depends on.
+    fn prune(&self) -> std::io::Result<()> {
+        let iters = self.iterations()?;
+        if iters.len() <= self.redundancy {
+            return Ok(());
+        }
+        let keep: std::collections::HashSet<u64> =
+            iters[iters.len() - self.redundancy..].iter().copied().collect();
+        // find bases required by kept deltas
+        let mut required = keep.clone();
+        for &i in &keep {
+            if let Ok(bytes) = self.get(i) {
+                if let Ok(c) = super::container::deserialize(&bytes) {
+                    required.insert(c.base_iteration);
+                }
+            }
+        }
+        for &i in &iters {
+            if !required.contains(&i) {
+                self.remove(i)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Bytes currently resident in shm for this rank.
+    pub fn resident_bytes(&self) -> std::io::Result<u64> {
+        let mut total = 0;
+        for entry in fs::read_dir(self.rank_dir())? {
+            total += entry?.metadata()?.len();
+        }
+        Ok(total)
+    }
+
+    /// Destroy the whole job's shm area (all ranks).
+    pub fn destroy_root(root: &Path) -> std::io::Result<()> {
+        if root.exists() {
+            fs::remove_dir_all(root)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::delta::{compress_state_dict, Policy};
+    use crate::engine::container;
+    use crate::tensor::StateDict;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("bitsnap-test-shm-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&p);
+        p
+    }
+
+    fn container_bytes(iter: u64) -> Vec<u8> {
+        let sd = StateDict::synthetic_gpt(1 << 10, iter);
+        let c = compress_state_dict(&sd, None, Policy::raw(), iter, iter).unwrap();
+        container::serialize(&c)
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let root = tmp_root("putget");
+        let s = ShmStore::new(&root, 0, 4).unwrap();
+        let bytes = container_bytes(10);
+        s.put(10, &bytes, true).unwrap();
+        assert_eq!(s.get(10).unwrap(), bytes);
+        assert!(s.has(10));
+        assert!(s.validate(10));
+        ShmStore::destroy_root(&root).unwrap();
+    }
+
+    #[test]
+    fn redundancy_window_prunes() {
+        let root = tmp_root("prune");
+        let s = ShmStore::new(&root, 0, 2).unwrap();
+        for i in [10u64, 20, 30, 40] {
+            s.put(i, &container_bytes(i), true).unwrap();
+        }
+        assert_eq!(s.iterations().unwrap(), vec![30, 40]);
+        ShmStore::destroy_root(&root).unwrap();
+    }
+
+    #[test]
+    fn prune_keeps_base_of_kept_delta() {
+        let root = tmp_root("prunebase");
+        let s = ShmStore::new(&root, 0, 1).unwrap();
+        // base at 10, deltas at 20 and 30 referencing base 10
+        let sd = StateDict::synthetic_gpt(1 << 10, 1);
+        let base = compress_state_dict(&sd, None, Policy::lossless(), 10, 10).unwrap();
+        s.put(10, &container::serialize(&base), true).unwrap();
+        let mut cur = sd.clone();
+        for i in [20u64, 30] {
+            cur.perturb_model_states(0.05, i);
+            let d = compress_state_dict(&cur, Some(&sd), Policy::lossless(), i, 10).unwrap();
+            s.put(i, &container::serialize(&d), false).unwrap();
+        }
+        let iters = s.iterations().unwrap();
+        assert!(iters.contains(&30), "newest kept: {iters:?}");
+        assert!(iters.contains(&10), "base of kept delta retained: {iters:?}");
+        assert!(!iters.contains(&20), "middle delta pruned: {iters:?}");
+        ShmStore::destroy_root(&root).unwrap();
+    }
+
+    #[test]
+    fn torn_write_is_invalid_but_detected() {
+        let root = tmp_root("torn");
+        let s = ShmStore::new(&root, 1, 4).unwrap();
+        let bytes = container_bytes(5);
+        s.put(5, &bytes[..bytes.len() / 2], true).unwrap(); // simulate torn copy
+        assert!(s.has(5));
+        assert!(!s.validate(5));
+        s.remove(5).unwrap();
+        assert!(!s.has(5));
+        ShmStore::destroy_root(&root).unwrap();
+    }
+
+    #[test]
+    fn ranks_are_isolated() {
+        let root = tmp_root("ranks");
+        let s0 = ShmStore::new(&root, 0, 4).unwrap();
+        let s1 = ShmStore::new(&root, 1, 4).unwrap();
+        s0.put(7, &container_bytes(7), true).unwrap();
+        assert!(s0.has(7));
+        assert!(!s1.has(7));
+        ShmStore::destroy_root(&root).unwrap();
+    }
+}

@@ -1,0 +1,271 @@
+//! Persistent storage backend for checkpoints, plus the analytical
+//! save-time model behind the paper's Table 1.
+//!
+//! The backend is a directory tree (`<root>/iter<N>/rank<k>.bsnp`) with
+//! atomic tmp+rename writes. An optional **bandwidth throttle** models the
+//! production situation the paper measures against — a 3.5 GB/s NVMe (or
+//! slower NFS) that is orders of magnitude slower than memory — so the
+//! Table-2 bench reproduces the sync-vs-async *shape* even though this
+//! host's page cache would otherwise absorb small writes instantly.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// Persistent checkpoint storage rooted at a directory.
+#[derive(Clone, Debug)]
+pub struct Storage {
+    root: PathBuf,
+    /// Simulated sustained write bandwidth in bytes/sec (None = unthrottled).
+    throttle_bps: Option<f64>,
+}
+
+impl Storage {
+    pub fn new(root: impl Into<PathBuf>) -> std::io::Result<Self> {
+        let root = root.into();
+        fs::create_dir_all(&root)?;
+        Ok(Self { root, throttle_bps: None })
+    }
+
+    /// Apply a simulated write-bandwidth cap (see module docs).
+    pub fn with_throttle(mut self, bytes_per_sec: f64) -> Self {
+        self.throttle_bps = Some(bytes_per_sec);
+        self
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn iter_dir(&self, iteration: u64) -> PathBuf {
+        self.root.join(format!("iter{iteration:010}"))
+    }
+
+    fn rank_path(&self, iteration: u64, rank: usize) -> PathBuf {
+        self.iter_dir(iteration).join(format!("rank{rank}.bsnp"))
+    }
+
+    /// Persist container bytes. Blocks for the simulated write time when a
+    /// throttle is configured. Returns the wall time spent.
+    pub fn put(
+        &self,
+        iteration: u64,
+        rank: usize,
+        container: &[u8],
+        is_base: bool,
+    ) -> std::io::Result<Duration> {
+        let t0 = Instant::now();
+        fs::create_dir_all(self.iter_dir(iteration))?;
+        let final_path = self.rank_path(iteration, rank);
+        let tmp = final_path.with_extension("tmp");
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(container)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, &final_path)?;
+        // paper §4.4: type.txt inside each checkpoint folder
+        fs::write(
+            self.iter_dir(iteration).join("type.txt"),
+            if is_base { "base\n" } else { "delta\n" },
+        )?;
+        if let Some(bps) = self.throttle_bps {
+            let want = Duration::from_secs_f64(container.len() as f64 / bps);
+            let elapsed = t0.elapsed();
+            if want > elapsed {
+                std::thread::sleep(want - elapsed);
+            }
+        }
+        Ok(t0.elapsed())
+    }
+
+    pub fn get(&self, iteration: u64, rank: usize) -> std::io::Result<Vec<u8>> {
+        fs::read(self.rank_path(iteration, rank))
+    }
+
+    pub fn has(&self, iteration: u64, rank: usize) -> bool {
+        self.rank_path(iteration, rank).exists()
+    }
+
+    /// CRC-validate a persisted checkpoint shard.
+    pub fn validate(&self, iteration: u64, rank: usize) -> bool {
+        match self.get(iteration, rank) {
+            Ok(bytes) => super::container::deserialize(&bytes).is_ok(),
+            Err(_) => false,
+        }
+    }
+
+    /// All iterations with at least one rank shard, ascending.
+    pub fn iterations(&self) -> std::io::Result<Vec<u64>> {
+        let mut out = Vec::new();
+        if !self.root.exists() {
+            return Ok(out);
+        }
+        for entry in fs::read_dir(&self.root)? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(num) = name.strip_prefix("iter") {
+                if let Ok(i) = num.parse::<u64>() {
+                    out.push(i);
+                }
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    /// Read the checkpoint-kind indicator (paper §4.4 `type.txt`).
+    pub fn checkpoint_type(&self, iteration: u64) -> std::io::Result<String> {
+        Ok(fs::read_to_string(self.iter_dir(iteration).join("type.txt"))?.trim().to_string())
+    }
+
+    /// Garbage-collect old checkpoints: keep the newest `keep` iterations
+    /// plus any base checkpoint a kept delta still chains to (same
+    /// dependency rule as the shm ring). Returns the pruned iterations.
+    pub fn prune_keep(&self, keep: usize) -> std::io::Result<Vec<u64>> {
+        let iters = self.iterations()?;
+        if iters.len() <= keep {
+            return Ok(Vec::new());
+        }
+        let kept: std::collections::HashSet<u64> =
+            iters[iters.len() - keep..].iter().copied().collect();
+        let mut required = kept.clone();
+        for &i in &kept {
+            // any rank shard tells us the base (they share base_iteration)
+            for entry in fs::read_dir(self.iter_dir(i))? {
+                let path = entry?.path();
+                if path.extension().map(|e| e == "bsnp").unwrap_or(false) {
+                    if let Ok(bytes) = fs::read(&path) {
+                        if let Ok(c) = super::container::deserialize(&bytes) {
+                            required.insert(c.base_iteration);
+                        }
+                    }
+                    break;
+                }
+            }
+        }
+        let mut pruned = Vec::new();
+        for &i in &iters {
+            if !required.contains(&i) {
+                fs::remove_dir_all(self.iter_dir(i))?;
+                pruned.push(i);
+            }
+        }
+        Ok(pruned)
+    }
+}
+
+/// Analytical checkpoint-size / save-time model — reproduces Table 1.
+///
+/// Mixed-precision training checkpoints store ~16 bytes per parameter
+/// (2 B fp16 weights + 4 B fp32 master + 4 B Adam-m + 4 B Adam-v + ~2 B
+/// metadata slack; the paper quotes GPT-3 175B → 2.3 TB ≈ 13 B/param, so
+/// we expose the factor).
+#[derive(Clone, Copy, Debug)]
+pub struct AnalyticalModel {
+    /// Bytes of checkpoint per parameter.
+    pub bytes_per_param: f64,
+    /// Sustained storage write bandwidth, bytes/sec.
+    pub write_bps: f64,
+}
+
+impl AnalyticalModel {
+    /// The paper's Table-1 assumptions: NVMe M.2 at 3500 MB/s and the
+    /// GPT-3 datum (175B params → 2.3 TB → 10.8 minutes).
+    pub fn paper() -> Self {
+        // 2.3 TB / 175e9 params = 13.14 B/param (paper's own numbers)
+        Self { bytes_per_param: 2.3e12 / 175e9, write_bps: 3500e6 }
+    }
+
+    pub fn checkpoint_bytes(&self, params: f64) -> f64 {
+        params * self.bytes_per_param
+    }
+
+    pub fn save_seconds(&self, params: f64) -> f64 {
+        self.checkpoint_bytes(params) / self.write_bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::delta::{compress_state_dict, Policy};
+    use crate::engine::container;
+    use crate::tensor::StateDict;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let p =
+            std::env::temp_dir().join(format!("bitsnap-test-store-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&p);
+        p
+    }
+
+    fn container_bytes(iter: u64) -> Vec<u8> {
+        let sd = StateDict::synthetic_gpt(1 << 10, iter);
+        container::serialize(&compress_state_dict(&sd, None, Policy::raw(), iter, iter).unwrap())
+    }
+
+    #[test]
+    fn put_get_validate() {
+        let root = tmp_root("basic");
+        let s = Storage::new(&root).unwrap();
+        let bytes = container_bytes(42);
+        s.put(42, 0, &bytes, true).unwrap();
+        assert_eq!(s.get(42, 0).unwrap(), bytes);
+        assert!(s.validate(42, 0));
+        assert_eq!(s.checkpoint_type(42).unwrap(), "base");
+        assert_eq!(s.iterations().unwrap(), vec![42]);
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn throttle_enforces_write_time() {
+        let root = tmp_root("throttle");
+        let s = Storage::new(&root).unwrap().with_throttle(1e6); // 1 MB/s
+        let bytes = vec![0u8; 200_000];
+        let d = s.put(1, 0, &bytes, true).unwrap();
+        assert!(d >= Duration::from_millis(190), "took {d:?}");
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn prune_keep_respects_delta_chains() {
+        use crate::compress::delta::{compress_state_dict, Policy};
+        let root = tmp_root("gc");
+        let s = Storage::new(&root).unwrap();
+        let sd = StateDict::synthetic_gpt(1 << 10, 1);
+        // base at 10; deltas at 20,30 chained to 10; base at 40
+        let base = compress_state_dict(&sd, None, Policy::lossless(), 10, 10).unwrap();
+        s.put(10, 0, &container::serialize(&base), true).unwrap();
+        let mut cur = sd.clone();
+        for i in [20u64, 30] {
+            cur.perturb_model_states(0.05, i);
+            let d = compress_state_dict(&cur, Some(&sd), Policy::lossless(), i, 10).unwrap();
+            s.put(i, 0, &container::serialize(&d), false).unwrap();
+        }
+        let b40 = compress_state_dict(&cur, None, Policy::lossless(), 40, 40).unwrap();
+        s.put(40, 0, &container::serialize(&b40), true).unwrap();
+
+        // keep 2 -> newest {30, 40}; 30 is a delta chained to 10, so 10
+        // must survive; only 20 is pruned
+        let pruned = s.prune_keep(2).unwrap();
+        assert_eq!(pruned, vec![20]);
+        assert_eq!(s.iterations().unwrap(), vec![10, 30, 40]);
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn table1_model_matches_paper_rows() {
+        let m = AnalyticalModel::paper();
+        // GPT-3 175B: paper says 10.8 minutes
+        let gpt3_min = m.save_seconds(175e9) / 60.0;
+        assert!((gpt3_min - 10.8).abs() < 0.3, "{gpt3_min}");
+        // PaLM 540B: 34.5 minutes at the same ratio (paper uses ~const B/param)
+        let palm_min = m.save_seconds(540e9) / 60.0;
+        assert!((palm_min - 34.5).abs() < 1.5, "{palm_min}");
+        // LLaMA-2 13B: 0.8 minutes
+        let llama13 = m.save_seconds(13e9) / 60.0;
+        assert!((llama13 - 0.8).abs() < 0.05, "{llama13}");
+    }
+}

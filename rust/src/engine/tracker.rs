@@ -1,0 +1,115 @@
+//! Megatron-style tracker file, extended per paper §4.4: besides the
+//! latest checkpointed iteration it records "the latest base checkpoint
+//! and the iteration number corresponding to that base checkpoint", which
+//! the loader combines with each checkpoint's `type.txt` to restore a
+//! delta chain.
+//!
+//! File format (`latest_checkpointed_iteration.txt` in the storage root):
+//! ```text
+//! <latest_iteration>
+//! base_iteration: <iteration of the base the latest delta refers to>
+//! base_name: <checkpoint folder name of that base>
+//! ```
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::compress::CompressError;
+
+pub const TRACKER_FILE: &str = "latest_checkpointed_iteration.txt";
+
+/// Contents of the tracker file.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tracker {
+    pub latest_iteration: u64,
+    pub base_iteration: u64,
+    pub base_name: String,
+}
+
+impl Tracker {
+    pub fn path(root: &Path) -> PathBuf {
+        root.join(TRACKER_FILE)
+    }
+
+    /// Atomically write the tracker under `root`.
+    pub fn store(&self, root: &Path) -> std::io::Result<()> {
+        let body = format!(
+            "{}\nbase_iteration: {}\nbase_name: {}\n",
+            self.latest_iteration, self.base_iteration, self.base_name
+        );
+        let path = Self::path(root);
+        let tmp = path.with_extension("tmp");
+        fs::write(&tmp, body)?;
+        fs::rename(tmp, path)
+    }
+
+    /// Load and parse the tracker.
+    pub fn load(root: &Path) -> Result<Self, CompressError> {
+        let body = fs::read_to_string(Self::path(root))?;
+        Self::parse(&body)
+    }
+
+    pub fn parse(body: &str) -> Result<Self, CompressError> {
+        let mut lines = body.lines();
+        let latest = lines
+            .next()
+            .ok_or_else(|| CompressError::Format("tracker: empty".into()))?
+            .trim()
+            .parse::<u64>()
+            .map_err(|_| CompressError::Format("tracker: bad latest iteration".into()))?;
+        let mut base_iteration = latest;
+        let mut base_name = String::new();
+        for line in lines {
+            if let Some(v) = line.strip_prefix("base_iteration:") {
+                base_iteration = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| CompressError::Format("tracker: bad base_iteration".into()))?;
+            } else if let Some(v) = line.strip_prefix("base_name:") {
+                base_name = v.trim().to_string();
+            }
+        }
+        Ok(Self { latest_iteration: latest, base_iteration, base_name })
+    }
+
+    pub fn exists(root: &Path) -> bool {
+        Self::path(root).exists()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("bitsnap-tracker-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let t = Tracker {
+            latest_iteration: 25010,
+            base_iteration: 25000,
+            base_name: "iter0000025000".into(),
+        };
+        t.store(&dir).unwrap();
+        assert!(Tracker::exists(&dir));
+        assert_eq!(Tracker::load(&dir).unwrap(), t);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn parse_plain_megatron_format() {
+        // a stock Megatron tracker (just the iteration) must still parse
+        let t = Tracker::parse("1500\n").unwrap();
+        assert_eq!(t.latest_iteration, 1500);
+        assert_eq!(t.base_iteration, 1500);
+        assert_eq!(t.base_name, "");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Tracker::parse("").is_err());
+        assert!(Tracker::parse("not-a-number\n").is_err());
+        assert!(Tracker::parse("10\nbase_iteration: zap\n").is_err());
+    }
+}

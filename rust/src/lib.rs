@@ -1,0 +1,24 @@
+//! # BitSnap
+//!
+//! Reproduction of *"BitSnap: Checkpoint Sparsification and Quantization in
+//! LLM Training"* as a three-layer rust + JAX + Pallas system:
+//!
+//! * [`compress`] — the paper's two codecs (bitmask delta sparsification,
+//!   cluster-based quantization) plus every baseline the evaluation
+//!   compares against.
+//! * [`engine`] — the asynchronous checkpoint engine: shared-memory
+//!   staging, daemon persister, in-memory redundancy, tracker files and
+//!   the all-gather recovery protocol.
+//! * [`runtime`] — PJRT runtime loading AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`); python never runs on the checkpoint path.
+//! * [`train`] — the training substrate: a GPT model driven from rust via
+//!   the runtime, producing the real state dicts the experiments compress.
+//! * [`tensor`] — host tensors, dtypes, f16/bf16 conversion, state dicts.
+//! * [`bench`] — micro-benchmark harness used by `cargo bench` targets.
+
+pub mod bench;
+pub mod compress;
+pub mod engine;
+pub mod runtime;
+pub mod tensor;
+pub mod train;

@@ -1,0 +1,292 @@
+//! `bitsnap` CLI — the launcher for the checkpoint engine, training
+//! driver and experiment harnesses.
+//!
+//! Subcommands (run `bitsnap help`):
+//!   train       train a model config with BitSnap checkpointing
+//!   compress    compress a synthetic state dict and report timings/ratio
+//!   inspect     inspect a checkpoint dir / dump optimizer histograms (Fig. 6)
+//!   table1      print the analytical save-time table (Table 1)
+//!   recover     run the multi-rank recovery demo (Fig. 4)
+
+mod cli;
+
+use bitsnap::compress::delta::Policy;
+use bitsnap::engine::{AnalyticalModel, CheckpointEngine, EngineConfig, Storage};
+use bitsnap::runtime::{default_artifacts_dir, PjrtRuntime};
+use bitsnap::tensor::StateKind;
+use bitsnap::train::Trainer;
+
+use cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let code = match args.subcommand() {
+        Some("train") => cmd_train(&args),
+        Some("compress") => cmd_compress(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("table1") => cmd_table1(),
+        Some("recover") => cmd_recover(&args),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "bitsnap — checkpoint sparsification & quantization engine\n\
+         \n\
+         USAGE: bitsnap <subcommand> [--flag value ...]\n\
+         \n\
+         SUBCOMMANDS\n\
+           train     --model gpt-nano --steps 50 --save-every 10 [--policy bitsnap|lossless|raw]\n\
+                     [--out results/run] [--redundancy 2] [--max-cached 5]\n\
+           compress  --params 1048576 [--change-rate 0.15] [--policy bitsnap|lossless]\n\
+           inspect   --dir <storage root> | --histogram --model gpt-nano --steps 20\n\
+           table1    (no flags) print the paper's Table-1 analytical model\n\
+           recover   --ranks 4 --fail-rank 1 (Fig. 4 walkthrough on real stores)\n\
+           help      this text"
+    );
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let model = args.get("model").unwrap_or("gpt-nano");
+    let steps: u64 = args.get_parse("steps").unwrap_or(50);
+    let save_every: u64 = args.get_parse("save-every").unwrap_or(10);
+    let out = args.get("out").unwrap_or("results/train_run");
+    let policy = parse_policy(args.get("policy").unwrap_or("bitsnap"))?;
+    let redundancy: usize = args.get_parse("redundancy").unwrap_or(2);
+    let max_cached: u64 = args.get_parse("max-cached").unwrap_or(5);
+
+    let rt = PjrtRuntime::cpu(default_artifacts_dir()).map_err(|e| e.to_string())?;
+    let mut trainer = Trainer::new(rt, model, 1).map_err(|e| e.to_string())?;
+    println!(
+        "model {model}: {:.2}M params, seq {}, batch {}",
+        trainer.manifest().param_count() as f64 / 1e6,
+        trainer.manifest().seq,
+        trainer.manifest().batch
+    );
+    let storage = Storage::new(format!("{out}/storage")).map_err(|e| e.to_string())?;
+    let cfg = EngineConfig {
+        job: format!("train-{model}"),
+        rank: 0,
+        world: 1,
+        shm_root: std::path::PathBuf::from(format!("{out}/shm")),
+        storage,
+        redundancy,
+        policy,
+        max_cached_iteration: max_cached,
+    }
+    .with_env_overrides();
+    let mut engine = CheckpointEngine::new(cfg).map_err(|e| e.to_string())?;
+
+    for i in 1..=steps {
+        let loss = trainer.step().map_err(|e| e.to_string())?;
+        if i % 5 == 0 || i == 1 {
+            println!("iter {i:>6}  loss {loss:.4}");
+        }
+        if i % save_every == 0 {
+            let sd = trainer.state_dict().map_err(|e| e.to_string())?;
+            let r = engine.save(i, &sd).map_err(|e| e.to_string())?;
+            println!(
+                "  ckpt @{i} {}  blocked {:.1} ms  ratio {:.2}x ({} -> {})",
+                if r.is_base { "base " } else { "delta" },
+                r.blocking.as_secs_f64() * 1e3,
+                r.ratio(),
+                bitsnap::bench::fmt_bytes(r.raw_bytes),
+                bitsnap::bench::fmt_bytes(r.compressed_bytes),
+            );
+        }
+    }
+    engine.flush().map_err(|e| e.to_string())?;
+    let stats = engine.agent_stats();
+    println!(
+        "done: {} checkpoints persisted, {} written to {out}/storage",
+        stats.persisted,
+        bitsnap::bench::fmt_bytes(stats.bytes_written as usize)
+    );
+    Ok(())
+}
+
+fn cmd_compress(args: &Args) -> Result<(), String> {
+    use bitsnap::compress::delta::compress_state_dict_timed;
+    use bitsnap::tensor::StateDict;
+    let params: usize = args.get_parse("params").unwrap_or(1 << 20);
+    let change_rate: f64 = args.get_parse("change-rate").unwrap_or(0.15);
+    let policy = parse_policy(args.get("policy").unwrap_or("bitsnap"))?;
+    let base = StateDict::synthetic_gpt(params, 1);
+    let mut curr = base.clone();
+    curr.perturb_model_states(change_rate, 2);
+    let t0 = std::time::Instant::now();
+    let (ckpt, timings) =
+        compress_state_dict_timed(&curr, Some(&base), policy, 1, 0).map_err(|e| e.to_string())?;
+    let wall = t0.elapsed();
+    let raw = curr.total_bytes();
+    let comp = ckpt.payload_bytes();
+    println!("params           {params}");
+    println!("change rate      {change_rate:.4}");
+    println!("raw bytes        {}", bitsnap::bench::fmt_bytes(raw));
+    println!("compressed       {}", bitsnap::bench::fmt_bytes(comp));
+    println!("ratio            {:.2}x", raw as f64 / comp as f64);
+    println!("delta encoding   {:.1} ms", timings.delta_encoding.as_secs_f64() * 1e3);
+    println!("clustering       {:.1} ms", timings.clustering.as_secs_f64() * 1e3);
+    println!("quantization     {:.1} ms", timings.quantization.as_secs_f64() * 1e3);
+    println!("total wall       {:.1} ms", wall.as_secs_f64() * 1e3);
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<(), String> {
+    if args.has("histogram") {
+        // Fig. 6: histogram of optimizer tensor values from a real run
+        let model = args.get("model").unwrap_or("gpt-nano");
+        let steps: u64 = args.get_parse("steps").unwrap_or(20);
+        let rt = PjrtRuntime::cpu(default_artifacts_dir()).map_err(|e| e.to_string())?;
+        let mut trainer = Trainer::new(rt, model, 1).map_err(|e| e.to_string())?;
+        for _ in 0..steps {
+            trainer.step().map_err(|e| e.to_string())?;
+        }
+        let sd = trainer.state_dict().map_err(|e| e.to_string())?;
+        for kind in [StateKind::AdamM, StateKind::AdamV] {
+            let mut values = Vec::new();
+            for e in sd.entries().iter().filter(|e| e.kind == kind) {
+                values.extend(e.tensor.to_f32_vec().map_err(|e| e.to_string())?);
+            }
+            let lo = values.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = values.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let h = bitsnap::compress::metrics::histogram(&values, 40, lo, hi + 1e-12);
+            let peak = *h.iter().max().unwrap_or(&1) as f64;
+            println!(
+                "\n{kind:?} histogram ({} values, range [{lo:.2e}, {hi:.2e}]):",
+                values.len()
+            );
+            for (i, &c) in h.iter().enumerate() {
+                let x = lo + (hi - lo) * (i as f32 + 0.5) / 40.0;
+                let bar = "#".repeat((c as f64 / peak * 60.0) as usize);
+                println!("{x:>10.3e} |{bar}");
+            }
+        }
+        return Ok(());
+    }
+    let dir = args.get("dir").ok_or("inspect needs --dir or --histogram")?;
+    let storage = Storage::new(dir).map_err(|e| e.to_string())?;
+    let iters = storage.iterations().map_err(|e| e.to_string())?;
+    println!("checkpoints under {dir}: {iters:?}");
+    if bitsnap::engine::Tracker::exists(std::path::Path::new(dir)) {
+        let t = bitsnap::engine::Tracker::load(std::path::Path::new(dir))
+            .map_err(|e| e.to_string())?;
+        println!(
+            "tracker: latest {} (base {} = {})",
+            t.latest_iteration, t.base_iteration, t.base_name
+        );
+    }
+    for i in iters {
+        let kind = storage.checkpoint_type(i).unwrap_or_else(|_| "?".into());
+        println!("  iter {i}: {kind}");
+    }
+    Ok(())
+}
+
+fn cmd_table1() -> Result<(), String> {
+    let m = AnalyticalModel::paper();
+    let rows: &[(&str, f64, &str)] = &[
+        ("PaLM 540B", 540e9, "2022"),
+        ("Llama3.1 405B", 405e9, "2024"),
+        ("GPT-3 175B", 175e9, "2020"),
+        ("OPT 175B", 175e9, "2023"),
+        ("LLaMA-2 70B", 70e9, "2023"),
+        ("LLaMA-2 13B", 13e9, "2023"),
+        ("GPT-2 XL", 1.5e9, "2019"),
+    ];
+    let mut table = bitsnap::bench::Table::new(&[
+        "Model",
+        "Parameters",
+        "Checkpoint size",
+        "Save time (min)",
+        "Year",
+    ]);
+    for (name, p, year) in rows {
+        table.row(&[
+            name.to_string(),
+            format!("{:.0}B", p / 1e9),
+            bitsnap::bench::fmt_bytes(m.checkpoint_bytes(*p) as usize),
+            format!("{:.1}", m.save_seconds(*p) / 60.0),
+            year.to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_recover(args: &Args) -> Result<(), String> {
+    use bitsnap::compress::delta::compress_state_dict;
+    use bitsnap::engine::container;
+    use bitsnap::engine::failure::{FailureInjector, FailureKind};
+    use bitsnap::engine::{all_gather_check, RankView, ShmStore};
+    use bitsnap::tensor::StateDict;
+
+    let ranks: usize = args.get_parse("ranks").unwrap_or(4);
+    let fail_rank: usize = args.get_parse("fail-rank").unwrap_or(1);
+    let pid = std::process::id();
+    let shm_root = std::env::temp_dir().join(format!("bitsnap-recover-demo-{pid}"));
+    let store_root = std::env::temp_dir().join(format!("bitsnap-recover-store-{pid}"));
+    let storage = Storage::new(&store_root).map_err(|e| e.to_string())?;
+
+    println!("staging checkpoints at iterations 60, 80, 100 on {ranks} ranks...");
+    let shms: Vec<ShmStore> =
+        (0..ranks).map(|r| ShmStore::new(&shm_root, r, 8).unwrap()).collect();
+    let sd = StateDict::synthetic_gpt(1 << 14, 0);
+    for iter in [60u64, 80, 100] {
+        let c = compress_state_dict(&sd, None, Policy::raw(), iter, iter)
+            .map_err(|e| e.to_string())?;
+        let bytes = container::serialize(&c);
+        for s in &shms {
+            s.put(iter, &bytes, true).map_err(|e| e.to_string())?;
+        }
+    }
+    println!("injecting torn write into rank {fail_rank} @ iteration 100 (Fig. 4)...");
+    let mut inj = FailureInjector::new(9);
+    inj.inject(&shms[fail_rank.min(ranks - 1)], 100, FailureKind::TornWrite)
+        .map_err(|e| e.to_string())?;
+
+    let views: Vec<RankView> = shms
+        .iter()
+        .enumerate()
+        .map(|(r, s)| RankView::gather(s, &storage, r).unwrap())
+        .collect();
+    for v in &views {
+        println!("  rank {}: shm-valid {:?}", v.rank, v.shm_valid);
+    }
+    let decision = all_gather_check(&views).ok_or("no common iteration")?;
+    println!(
+        "all-gather check: recover from iteration {} (from memory: {}), pruning {:?}",
+        decision.iteration, decision.all_from_memory, decision.pruned
+    );
+    for s in &shms {
+        bitsnap::engine::recovery::apply_pruning(s, &decision).map_err(|e| e.to_string())?;
+    }
+    println!("recovery complete");
+    let _ = std::fs::remove_dir_all(&shm_root);
+    let _ = std::fs::remove_dir_all(&store_root);
+    Ok(())
+}
+
+fn parse_policy(s: &str) -> Result<Policy, String> {
+    match s {
+        "bitsnap" => Ok(Policy::bitsnap()),
+        "lossless" => Ok(Policy::lossless()),
+        "raw" => Ok(Policy::raw()),
+        other => Err(format!("unknown policy {other:?} (bitsnap|lossless|raw)")),
+    }
+}

@@ -1,0 +1,170 @@
+//! XLA-backed compression kernels: the L1 Pallas pipeline
+//! (`cluster_quant_<block>.hlo.txt`, `bitmask_pack_<block>.hlo.txt`)
+//! invoked from the L3 hot path.
+//!
+//! The native rust codecs in [`crate::compress`] are the production path
+//! on CPU; these XLA-backed twins exist because on a TPU host the same
+//! artifacts execute on-device (the paper's GPUs quantize where the
+//! states live, avoiding a D2H of uncompressed fp32). bench_codecs
+//! compares the two; the integration tests assert they agree.
+
+use crate::compress::{cluster_quant, CompressError};
+use crate::tensor::{DType, HostTensor};
+
+use super::{PjrtRuntime, RuntimeError};
+
+/// Cluster quantization through the AOT Pallas artifact.
+pub struct XlaClusterQuant {
+    block: usize,
+}
+
+/// Outputs of one quantized chunk.
+pub struct XlaQuantChunk {
+    pub labels: Vec<u8>,
+    pub scales: Vec<f32>,
+    pub offsets: Vec<f32>,
+    pub q: Vec<u8>,
+}
+
+impl XlaClusterQuant {
+    /// `block` must match an AOT-lowered artifact (65536 or 1048576 by
+    /// default; see aot.py QUANT_BLOCKS).
+    pub fn new(block: usize) -> Self {
+        Self { block }
+    }
+
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Quantize one `block`-sized f32 chunk. `values.len()` must equal the
+    /// artifact block size; rust pads the final chunk (padding values land
+    /// in some cluster but are sliced off by the caller).
+    pub fn quantize_chunk(
+        &self,
+        rt: &mut PjrtRuntime,
+        values: &[f32],
+        boundaries: &[f32],
+    ) -> Result<XlaQuantChunk, RuntimeError> {
+        if values.len() != self.block {
+            return Err(RuntimeError::Compress(CompressError::Shape(format!(
+                "chunk len {} != artifact block {}",
+                values.len(),
+                self.block
+            ))));
+        }
+        let v = HostTensor::from_f32(&[self.block], values)?;
+        let b = HostTensor::from_f32(&[boundaries.len()], boundaries)?;
+        let exe = rt.load(&format!("cluster_quant_{}.hlo.txt", self.block))?;
+        let out = exe.run(&[v, b])?;
+        if out.len() != 4 {
+            return Err(RuntimeError::Xla(format!("quant artifact returned {}", out.len())));
+        }
+        let labels_i32 = &out[0];
+        let labels = labels_i32
+            .bytes()
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()) as u8)
+            .collect();
+        Ok(XlaQuantChunk {
+            labels,
+            scales: out[1].to_f32_vec()?,
+            offsets: out[2].to_f32_vec()?,
+            q: out[3].bytes().to_vec(),
+        })
+    }
+
+    /// Quantize a full tensor chunk-by-chunk into the *same payload format*
+    /// as the native [`cluster_quant::encode`] — one independent
+    /// cluster-table per chunk is the only difference (documented as
+    /// chunked mode; the decoder below understands it).
+    pub fn quantize_tensor(
+        &self,
+        rt: &mut PjrtRuntime,
+        t: &HostTensor,
+    ) -> Result<Vec<Vec<u8>>, RuntimeError> {
+        if t.dtype() != DType::F32 {
+            return Err(RuntimeError::Compress(CompressError::Dtype(
+                "xla quant expects f32".into(),
+            )));
+        }
+        let values = t.to_f32_vec()?;
+        let mut payloads = Vec::new();
+        for chunk in values.chunks(self.block) {
+            let mut padded;
+            let chunk_slice: &[f32] = if chunk.len() == self.block {
+                chunk
+            } else {
+                padded = chunk.to_vec();
+                padded.resize(self.block, 0.0);
+                &padded
+            };
+            // boundaries from this chunk's own stats, like the native codec
+            let n = chunk.len() as f64;
+            let mean = chunk.iter().map(|&x| x as f64).sum::<f64>() / n.max(1.0);
+            let var =
+                chunk.iter().map(|&x| (x as f64 - mean) * (x as f64 - mean)).sum::<f64>() / n.max(1.0);
+            let boundaries = cluster_quant::normal_boundaries(
+                16,
+                mean as f32,
+                (var.sqrt() as f32).max(f32::MIN_POSITIVE),
+            );
+            let out = self.quantize_chunk(rt, chunk_slice, &boundaries)?;
+            // assemble the native payload layout for this chunk
+            let real = chunk.len();
+            let mut payload = Vec::with_capacity(9 + 128 + real.div_ceil(2) + real);
+            payload.extend_from_slice(&(real as u64).to_le_bytes());
+            payload.push(16u8);
+            for s in &out.scales {
+                payload.extend_from_slice(&s.to_le_bytes());
+            }
+            for b in &out.offsets {
+                payload.extend_from_slice(&b.to_le_bytes());
+            }
+            let mut packed = vec![0u8; real.div_ceil(2)];
+            for i in 0..real {
+                packed[i / 2] |= out.labels[i] << ((i % 2) * 4);
+            }
+            payload.extend_from_slice(&packed);
+            payload.extend_from_slice(&out.q[..real]);
+            payloads.push(payload);
+        }
+        Ok(payloads)
+    }
+}
+
+/// Bitmask pack through the AOT Pallas artifact: returns (packed mask,
+/// changed count) for one block of 16-bit words.
+pub struct XlaBitmaskPack {
+    block: usize,
+}
+
+impl XlaBitmaskPack {
+    pub fn new(block: usize) -> Self {
+        Self { block }
+    }
+
+    pub fn pack_chunk(
+        &self,
+        rt: &mut PjrtRuntime,
+        prev: &[u8],
+        curr: &[u8],
+    ) -> Result<(Vec<u8>, u32), RuntimeError> {
+        if prev.len() != curr.len() || prev.len() != self.block * 2 {
+            return Err(RuntimeError::Compress(CompressError::Shape(format!(
+                "pack chunk needs {} bytes, got {}",
+                self.block * 2,
+                prev.len()
+            ))));
+        }
+        let p = HostTensor::from_bytes(DType::U16, &[self.block], prev.to_vec())?;
+        let c = HostTensor::from_bytes(DType::U16, &[self.block], curr.to_vec())?;
+        let exe = rt.load(&format!("bitmask_pack_{}.hlo.txt", self.block))?;
+        let out = exe.run(&[p, c])?;
+        if out.len() != 2 {
+            return Err(RuntimeError::Xla(format!("pack artifact returned {}", out.len())));
+        }
+        let count = i32::from_le_bytes(out[1].bytes()[0..4].try_into().unwrap()) as u32;
+        Ok((out[0].bytes().to_vec(), count))
+    }
+}

@@ -1,0 +1,126 @@
+//! HostTensor ⇄ xla::Literal conversion.
+
+use crate::compress::CompressError;
+use crate::tensor::{DType, HostTensor};
+
+fn element_type(d: DType) -> xla::ElementType {
+    match d {
+        DType::F32 => xla::ElementType::F32,
+        DType::F16 => xla::ElementType::F16,
+        DType::BF16 => xla::ElementType::Bf16,
+        DType::U8 => xla::ElementType::U8,
+        DType::U16 => xla::ElementType::U16,
+        DType::U32 => xla::ElementType::U32,
+        DType::I32 => xla::ElementType::S32,
+        DType::I64 => xla::ElementType::S64,
+    }
+}
+
+fn dtype_of(ty: xla::ElementType) -> Option<DType> {
+    Some(match ty {
+        xla::ElementType::F32 => DType::F32,
+        xla::ElementType::F16 => DType::F16,
+        xla::ElementType::Bf16 => DType::BF16,
+        xla::ElementType::U8 => DType::U8,
+        xla::ElementType::U16 => DType::U16,
+        xla::ElementType::U32 => DType::U32,
+        xla::ElementType::S32 => DType::I32,
+        xla::ElementType::S64 => DType::I64,
+        _ => return None,
+    })
+}
+
+/// Host tensor → literal (bytes are copied; layout is dense row-major on
+/// both sides).
+pub fn tensor_to_literal(t: &HostTensor) -> Result<xla::Literal, CompressError> {
+    xla::Literal::create_from_shape_and_untyped_data(element_type(t.dtype()), t.shape(), t.bytes())
+        .map_err(|e| CompressError::Format(format!("literal: {e}")))
+}
+
+/// Literal → host tensor. Scalars come back with shape `[]`.
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<HostTensor, CompressError> {
+    let shape =
+        l.array_shape().map_err(|e| CompressError::Format(format!("literal shape: {e}")))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let dtype = dtype_of(shape.ty())
+        .ok_or_else(|| CompressError::Dtype(format!("unsupported literal type {:?}", shape.ty())))?;
+    let mut bytes = vec![0u8; l.size_bytes()];
+    extract_bytes(l, dtype, &mut bytes)?;
+    HostTensor::from_bytes(dtype, &dims, bytes)
+}
+
+fn extract_bytes(l: &xla::Literal, dtype: DType, out: &mut [u8]) -> Result<(), CompressError> {
+    macro_rules! typed {
+        ($t:ty) => {{
+            let v: Vec<$t> =
+                l.to_vec().map_err(|e| CompressError::Format(format!("to_vec: {e}")))?;
+            let byte_len = v.len() * std::mem::size_of::<$t>();
+            let src = unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, byte_len) };
+            out.copy_from_slice(src);
+        }};
+    }
+    match dtype {
+        DType::F32 => typed!(f32),
+        DType::U8 => typed!(u8),
+        DType::U16 => typed!(u16),
+        DType::U32 => typed!(u32),
+        DType::I32 => typed!(i32),
+        DType::I64 => typed!(i64),
+        DType::F16 | DType::BF16 => {
+            // The crate has no host storage type for these; round-trip
+            // through f32. Exact: half → f32 is injective and the
+            // round-to-nearest re-narrowing restores the original bits.
+            let as_f32 = l
+                .convert(xla::PrimitiveType::F32)
+                .map_err(|e| CompressError::Format(format!("convert: {e}")))?;
+            let v: Vec<f32> =
+                as_f32.to_vec().map_err(|e| CompressError::Format(format!("to_vec: {e}")))?;
+            for (i, &x) in v.iter().enumerate() {
+                let h = if dtype == DType::F16 {
+                    crate::tensor::f32_to_f16(x)
+                } else {
+                    crate::tensor::f32_to_bf16(x)
+                };
+                out[2 * i..2 * i + 2].copy_from_slice(&h.to_le_bytes());
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::XorShiftRng;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = HostTensor::from_f32(&[2, 3], &[1., -2., 3., 4.5, 0., -0.5]).unwrap();
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn half_roundtrips_bit_exact() {
+        let mut rng = XorShiftRng::new(1);
+        let vals = rng.normal_vec(256, 0.0, 1.0);
+        for mk in [HostTensor::from_f32_as_f16, HostTensor::from_f32_as_bf16] {
+            let t = mk(&[256], &vals).unwrap();
+            let l = tensor_to_literal(&t).unwrap();
+            let back = literal_to_tensor(&l).unwrap();
+            assert_eq!(back, t);
+        }
+    }
+
+    #[test]
+    fn int_types_roundtrip() {
+        let data: Vec<u8> = (0..12).collect();
+        let t = HostTensor::from_bytes(DType::I32, &[3], data.clone()).unwrap();
+        let back = literal_to_tensor(&tensor_to_literal(&t).unwrap()).unwrap();
+        assert_eq!(back.bytes(), &data[..]);
+        let t8 = HostTensor::from_bytes(DType::U8, &[4, 3], data).unwrap();
+        let back8 = literal_to_tensor(&tensor_to_literal(&t8).unwrap()).unwrap();
+        assert_eq!(back8, t8);
+    }
+}

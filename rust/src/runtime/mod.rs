@@ -1,0 +1,135 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts and execute them
+//! from rust. Python never runs here — `make artifacts` lowered the L2
+//! model (which calls the L1 Pallas kernels) to HLO *text* once, and this
+//! module compiles + runs those modules via the PJRT CPU client.
+//!
+//! HLO text — not serialized `HloModuleProto` — is the interchange format:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md).
+
+pub mod kernels;
+mod literal;
+
+pub use literal::{literal_to_tensor, tensor_to_literal};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::compress::CompressError;
+use crate::tensor::HostTensor;
+
+/// Runtime errors.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("artifact not found: {0}")]
+    ArtifactNotFound(PathBuf),
+    #[error("{0}")]
+    Compress(#[from] CompressError),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute on host tensors. The artifact must have been lowered with
+    /// `return_tuple=True`; the result tuple is flattened to tensors.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>, RuntimeError> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(tensor_to_literal).collect::<Result<_, _>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute on pre-converted literals (hot path: callers keep weights
+    /// as literals between steps and skip the byte conversion).
+    pub fn run_literals(
+        &self,
+        literals: &[xla::Literal],
+    ) -> Result<Vec<HostTensor>, RuntimeError> {
+        let out = self.exe.execute::<xla::Literal>(literals)?;
+        let result = out[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts.into_iter().map(|l| literal_to_tensor(&l).map_err(RuntimeError::from)).collect()
+    }
+
+    /// Execute returning raw literals (for callers that feed outputs back
+    /// in as the next step's inputs without touching host bytes).
+    pub fn run_literals_raw(
+        &self,
+        literals: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>, RuntimeError> {
+        let out = self.exe.execute::<xla::Literal>(literals)?;
+        let result = out[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// PJRT client + executable cache keyed by artifact path.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, Executable>,
+    artifacts_dir: PathBuf,
+}
+
+impl PjrtRuntime {
+    /// CPU client. `artifacts_dir` is where `make artifacts` puts the
+    /// lowered modules (usually `<repo>/artifacts`).
+    pub fn cpu(artifacts_dir: impl Into<PathBuf>) -> Result<Self, RuntimeError> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu()?,
+            cache: HashMap::new(),
+            artifacts_dir: artifacts_dir.into(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Load + compile (cached) an artifact by file name, e.g.
+    /// `"train_step_gpt_nano.hlo.txt"`.
+    pub fn load(&mut self, artifact: &str) -> Result<&Executable, RuntimeError> {
+        let path = self.artifacts_dir.join(artifact);
+        if !self.cache.contains_key(&path) {
+            if !path.exists() {
+                return Err(RuntimeError::ArtifactNotFound(path));
+            }
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache
+                .insert(path.clone(), Executable { exe, name: artifact.to_string() });
+        }
+        Ok(&self.cache[&path])
+    }
+
+    /// Convert a host tensor to a literal (device upload happens inside
+    /// PJRT on execute).
+    pub fn to_literal(&self, t: &HostTensor) -> Result<xla::Literal, RuntimeError> {
+        Ok(tensor_to_literal(t)?)
+    }
+}
+
+/// Default artifacts directory: `$BITSNAP_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("BITSNAP_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+}

@@ -1,0 +1,107 @@
+//! Element types that appear in LLM checkpoints.
+
+/// Supported element dtypes. Mixed-precision checkpoints store model states
+/// as `F16`/`BF16` and optimizer states as `F32` (paper §1); the integer
+/// types appear in compressed payloads and token batches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    BF16,
+    U8,
+    U16,
+    U32,
+    I32,
+    I64,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::U32 | DType::I32 => 4,
+            DType::F16 | DType::BF16 | DType::U16 => 2,
+            DType::U8 => 1,
+            DType::I64 => 8,
+        }
+    }
+
+    /// Stable numeric tag used by the on-disk checkpoint container.
+    pub fn tag(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::F16 => 1,
+            DType::BF16 => 2,
+            DType::U8 => 3,
+            DType::U16 => 4,
+            DType::U32 => 5,
+            DType::I32 => 6,
+            DType::I64 => 7,
+        }
+    }
+
+    /// Inverse of [`DType::tag`].
+    pub fn from_tag(tag: u8) -> Option<DType> {
+        Some(match tag {
+            0 => DType::F32,
+            1 => DType::F16,
+            2 => DType::BF16,
+            3 => DType::U8,
+            4 => DType::U16,
+            5 => DType::U32,
+            6 => DType::I32,
+            7 => DType::I64,
+            _ => return None,
+        })
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F32 | DType::F16 | DType::BF16)
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            DType::F32 => "f32",
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+            DType::U8 => "u8",
+            DType::U16 => "u16",
+            DType::U32 => "u32",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+        };
+        f.write_str(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tag_roundtrip() {
+        for d in [
+            DType::F32,
+            DType::F16,
+            DType::BF16,
+            DType::U8,
+            DType::U16,
+            DType::U32,
+            DType::I32,
+            DType::I64,
+        ] {
+            assert_eq!(DType::from_tag(d.tag()), Some(d));
+        }
+        assert_eq!(DType::from_tag(200), None);
+    }
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::F32.size(), 4);
+        assert_eq!(DType::BF16.size(), 2);
+        assert_eq!(DType::U8.size(), 1);
+        assert_eq!(DType::I64.size(), 8);
+    }
+}

@@ -1,0 +1,173 @@
+//! Software f16 / bf16 conversion (the `half` crate is unavailable in this
+//! offline build; these are the standard bit-twiddling conversions with
+//! round-to-nearest-even for the f32→f16 direction).
+
+/// Convert an IEEE-754 binary16 bit pattern to f32.
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = (h >> 15) as u32;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let frac = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign << 31 // signed zero
+        } else {
+            // subnormal: normalize
+            let mut e = 127 - 15 + 1;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            (sign << 31) | ((e as u32) << 23) | ((f & 0x3ff) << 13)
+        }
+    } else if exp == 0x1f {
+        (sign << 31) | (0xff << 23) | (frac << 13) // inf / nan
+    } else {
+        (sign << 31) | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Convert f32 to the nearest binary16 bit pattern (round-to-nearest-even).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let frac = bits & 0x7f_ffff;
+
+    if exp == 0xff {
+        // inf / nan
+        return sign | 0x7c00 | if frac != 0 { 0x200 } else { 0 };
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // normal range: round 23-bit mantissa to 10 bits
+        let mant = frac >> 13;
+        let rest = frac & 0x1fff;
+        let mut h = sign | (((unbiased + 15) as u16) << 10) | mant as u16;
+        // round-to-nearest-even
+        if rest > 0x1000 || (rest == 0x1000 && (mant & 1) == 1) {
+            h = h.wrapping_add(1); // may carry into exponent — that is correct
+        }
+        h
+    } else if unbiased >= -25 {
+        // subnormal: target mantissa = round(1.frac * 2^(unbiased+24)).
+        // With full = frac | 2^23 that is round(full >> (-unbiased - 1)),
+        // so we shift by (shift + 1) where shift = -unbiased - 2 (13..=23;
+        // -25 can still round up to the smallest subnormal).
+        let shift = (-unbiased - 2) as u32;
+        let full = frac | 0x80_0000;
+        let mant = full >> (shift + 1);
+        let rest = full & ((1 << (shift + 1)) - 1);
+        let half = 1u32 << shift;
+        let mut h = sign | mant as u16;
+        if rest > half || (rest == half && (mant & 1) == 1) {
+            h = h.wrapping_add(1);
+        }
+        h
+    } else {
+        sign // underflow -> signed zero
+    }
+}
+
+/// Convert a bfloat16 bit pattern to f32 (exact: bf16 is truncated f32).
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Convert f32 to bfloat16 with round-to-nearest-even.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x40; // quiet the nan
+    }
+    let round_bit = 0x8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rest = bits & 0x7fff;
+    let mut h = (bits >> 16) as u16;
+    if (bits & round_bit) != 0 && (rest != 0 || lsb == 1) {
+        h = h.wrapping_add(1);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_exact_values() {
+        assert_eq!(f16_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_to_f32(0xbc00), -1.0);
+        assert_eq!(f16_to_f32(0x0000), 0.0);
+        assert_eq!(f16_to_f32(0x7c00), f32::INFINITY);
+        assert!(f16_to_f32(0x7e00).is_nan());
+        assert_eq!(f32_to_f16(1.0), 0x3c00);
+        assert_eq!(f32_to_f16(-2.0), 0xc000);
+        assert_eq!(f32_to_f16(65504.0), 0x7bff); // f16 max
+        assert_eq!(f32_to_f16(1e6), 0x7c00); // overflow
+    }
+
+    #[test]
+    fn f16_roundtrip_all_finite_patterns() {
+        // every finite f16 must roundtrip bit-exactly through f32
+        for h in 0u16..=0xffff {
+            let exp = (h >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // skip inf/nan
+            }
+            let f = f16_to_f32(h);
+            let back = f32_to_f16(f);
+            // -0.0 and 0.0 keep their sign bit
+            assert_eq!(back, h, "pattern {h:#06x} -> {f} -> {back:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let smallest = f16_to_f32(0x0001);
+        assert!((smallest - 5.9604645e-8).abs() < 1e-12);
+        assert_eq!(f32_to_f16(smallest), 0x0001);
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even() {
+        // 1.0 + 2^-11 is exactly halfway between 1.0 and the next f16; it
+        // must round to even mantissa (i.e. 1.0).
+        let halfway = 1.0 + 2f32.powi(-11);
+        assert_eq!(f32_to_f16(halfway), 0x3c00);
+        // a hair above the midpoint must round up
+        let above = 1.0 + 2f32.powi(-11) + 2f32.powi(-20);
+        assert_eq!(f32_to_f16(above), 0x3c01);
+    }
+
+    #[test]
+    fn bf16_roundtrip_all_finite_patterns() {
+        for h in 0u16..=0xffff {
+            let exp = (h >> 7) & 0xff;
+            if exp == 0xff {
+                continue;
+            }
+            let f = bf16_to_f32(h);
+            assert_eq!(f32_to_bf16(f), h);
+        }
+    }
+
+    #[test]
+    fn bf16_rounding() {
+        // bf16(1.0 + eps) where eps < half-ulp stays 1.0
+        assert_eq!(bf16_to_f32(f32_to_bf16(1.001)), 1.0);
+        // value halfway between two bf16s rounds to even
+        let one = 0x3f80u16; // 1.0
+        let halfway = f32::from_bits(((one as u32) << 16) | 0x8000);
+        assert_eq!(f32_to_bf16(halfway), one); // even mantissa
+    }
+
+    #[test]
+    fn bf16_nan_stays_nan() {
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+}

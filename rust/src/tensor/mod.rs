@@ -1,0 +1,210 @@
+//! Host-side tensor representation shared by the checkpoint engine, the
+//! compression codecs and the PJRT runtime.
+//!
+//! Checkpoints in mixed-precision training hold **model states** in
+//! fp16/bf16 and **optimizer states** (fp32 master weights, Adam first and
+//! second moments) in fp32 — see §1 of the paper. `HostTensor` stores the
+//! raw little-endian bytes plus dtype/shape so codecs can work on exact bit
+//! patterns (delta sparsification is defined on bit equality, not float
+//! equality semantics like `-0.0 == 0.0`).
+
+mod dtype;
+mod half;
+mod state_dict;
+mod rng;
+
+pub use dtype::DType;
+pub use half::{bf16_to_f32, f16_to_f32, f32_to_bf16, f32_to_f16};
+pub use rng::XorShiftRng;
+pub use state_dict::{StateDict, StateKind, TensorEntry};
+
+use crate::compress::CompressError;
+
+/// A dense host tensor: raw little-endian bytes + shape + dtype.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    dtype: DType,
+    shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl HostTensor {
+    /// Build a tensor from raw bytes. `data.len()` must equal
+    /// `shape.product() * dtype.size()`.
+    pub fn from_bytes(dtype: DType, shape: &[usize], data: Vec<u8>) -> Result<Self, CompressError> {
+        let n: usize = shape.iter().product();
+        if data.len() != n * dtype.size() {
+            return Err(CompressError::Shape(format!(
+                "byte length {} != {} elements * {} bytes ({dtype:?} {shape:?})",
+                data.len(),
+                n,
+                dtype.size()
+            )));
+        }
+        Ok(Self { dtype, shape: shape.to_vec(), data })
+    }
+
+    /// Zero-filled tensor.
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { dtype, shape: shape.to_vec(), data: vec![0u8; n * dtype.size()] }
+    }
+
+    /// Build an f32 tensor from a slice.
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> Result<Self, CompressError> {
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Self::from_bytes(DType::F32, shape, data)
+    }
+
+    /// Build an f16 tensor from f32 values (values are converted).
+    pub fn from_f32_as_f16(shape: &[usize], values: &[f32]) -> Result<Self, CompressError> {
+        let mut data = Vec::with_capacity(values.len() * 2);
+        for v in values {
+            data.extend_from_slice(&f32_to_f16(*v).to_le_bytes());
+        }
+        Self::from_bytes(DType::F16, shape, data)
+    }
+
+    /// Build a bf16 tensor from f32 values (values are converted).
+    pub fn from_f32_as_bf16(shape: &[usize], values: &[f32]) -> Result<Self, CompressError> {
+        let mut data = Vec::with_capacity(values.len() * 2);
+        for v in values {
+            data.extend_from_slice(&f32_to_bf16(*v).to_le_bytes());
+        }
+        Self::from_bytes(DType::BF16, shape, data)
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Size of the raw payload in bytes.
+    pub fn byte_len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        &mut self.data
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.data
+    }
+
+    /// Decode to f32, whatever the storage dtype (F32/F16/BF16 only).
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>, CompressError> {
+        match self.dtype {
+            DType::F32 => Ok(self
+                .data
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()),
+            DType::F16 => Ok(self
+                .data
+                .chunks_exact(2)
+                .map(|c| f16_to_f32(u16::from_le_bytes([c[0], c[1]])))
+                .collect()),
+            DType::BF16 => Ok(self
+                .data
+                .chunks_exact(2)
+                .map(|c| bf16_to_f32(u16::from_le_bytes([c[0], c[1]])))
+                .collect()),
+            other => Err(CompressError::Dtype(format!("to_f32_vec on {other:?}"))),
+        }
+    }
+
+    /// View the payload as f32 without copying. Errors unless dtype is F32
+    /// and the allocation happens to be 4-aligned (Vec<u8> gives no
+    /// guarantee; callers fall back to `to_f32_vec`).
+    pub fn as_f32_slice(&self) -> Result<&[f32], CompressError> {
+        if self.dtype != DType::F32 {
+            return Err(CompressError::Dtype(format!("as_f32_slice on {:?}", self.dtype)));
+        }
+        let (pre, mid, post) = unsafe { self.data.align_to::<f32>() };
+        if pre.is_empty() && post.is_empty() {
+            Ok(mid)
+        } else {
+            Err(CompressError::Dtype("unaligned f32 payload".into()))
+        }
+    }
+
+    /// Reinterpret the payload as 16-bit words (F16/BF16/U16).
+    pub fn as_u16_words(&self) -> Result<Vec<u16>, CompressError> {
+        if self.dtype.size() != 2 {
+            return Err(CompressError::Dtype(format!("as_u16_words on {:?}", self.dtype)));
+        }
+        Ok(self.data.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect())
+    }
+
+    /// Elementwise maximum absolute difference against another tensor,
+    /// computed in f32. Shapes and dtypes must match.
+    pub fn max_abs_diff(&self, other: &HostTensor) -> Result<f32, CompressError> {
+        if self.shape != other.shape || self.dtype != other.dtype {
+            return Err(CompressError::Shape("max_abs_diff shape/dtype mismatch".into()));
+        }
+        let a = self.to_f32_vec()?;
+        let b = other.to_f32_vec()?;
+        Ok(a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_bytes_checks_length() {
+        assert!(HostTensor::from_bytes(DType::F32, &[2, 2], vec![0u8; 16]).is_ok());
+        assert!(HostTensor::from_bytes(DType::F32, &[2, 2], vec![0u8; 15]).is_err());
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = HostTensor::from_f32(&[4], &[1.0, -2.5, 0.0, 3.25]).unwrap();
+        assert_eq!(t.to_f32_vec().unwrap(), vec![1.0, -2.5, 0.0, 3.25]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.byte_len(), 16);
+    }
+
+    #[test]
+    fn f16_storage_quantizes() {
+        let t = HostTensor::from_f32_as_f16(&[2], &[1.0, 0.333333]).unwrap();
+        let back = t.to_f32_vec().unwrap();
+        assert_eq!(back[0], 1.0);
+        assert!((back[1] - 0.333333).abs() < 1e-3);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = HostTensor::from_f32(&[3], &[1.0, 2.0, 3.0]).unwrap();
+        let b = HostTensor::from_f32(&[3], &[1.0, 2.5, 2.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn zeros_is_all_zero() {
+        let t = HostTensor::zeros(DType::BF16, &[8]);
+        assert!(t.bytes().iter().all(|&b| b == 0));
+        assert_eq!(t.byte_len(), 16);
+    }
+}

@@ -1,0 +1,136 @@
+//! Small deterministic RNG (xorshift64*) used by tests, synthetic-state
+//! generators and workload generators. `rand` is unavailable offline and we
+//! want bit-reproducible experiments anyway.
+
+/// xorshift64* PRNG. Deterministic, seedable, fast enough to synthesize
+/// multi-GB state dicts.
+#[derive(Clone, Debug)]
+pub struct XorShiftRng {
+    state: u64,
+}
+
+impl XorShiftRng {
+    pub fn new(seed: u64) -> Self {
+        // avoid the all-zero fixed point
+        Self { state: seed.max(1).wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1 }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [0, n).
+    pub fn next_below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller. Optimizer moments are approximately
+    /// normally distributed (paper Fig. 6), so synthetic states use this.
+    pub fn next_normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.next_f32();
+            if u1 <= f32::EPSILON {
+                continue;
+            }
+            let u2 = self.next_f32();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return r * (2.0 * std::f32::consts::PI * u2).cos();
+        }
+    }
+
+    /// Fill a fresh Vec with normal(mu, sigma) samples.
+    pub fn normal_vec(&mut self, n: usize, mu: f32, sigma: f32) -> Vec<f32> {
+        (0..n).map(|_| mu + sigma * self.next_normal()).collect()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose exactly k distinct indices out of n (reservoir-free, for
+    /// sparsity patterns in tests and Fig. 8 sweeps).
+    pub fn choose_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // partial Fisher-Yates over an index array is O(n) but memory heavy
+        // for huge n; for k << n use rejection sampling instead.
+        if k * 8 < n {
+            let mut seen = std::collections::HashSet::with_capacity(k * 2);
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let i = self.next_below(n);
+                if seen.insert(i) {
+                    out.push(i);
+                }
+            }
+            out
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut idx);
+            idx.truncate(k);
+            idx
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = XorShiftRng::new(42);
+        let mut b = XorShiftRng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = XorShiftRng::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments_roughly_right() {
+        let mut r = XorShiftRng::new(3);
+        let xs = r.normal_vec(50_000, 0.0, 1.0);
+        let mean: f32 = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var: f32 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / xs.len() as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn choose_indices_distinct_and_in_range() {
+        let mut r = XorShiftRng::new(9);
+        for &(n, k) in &[(100usize, 5usize), (100, 60), (8, 8), (1000, 0)] {
+            let idx = r.choose_indices(n, k);
+            assert_eq!(idx.len(), k);
+            let set: std::collections::HashSet<_> = idx.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(idx.iter().all(|&i| i < n));
+        }
+    }
+}

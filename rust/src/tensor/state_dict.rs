@@ -1,0 +1,242 @@
+//! The checkpointed state of a training job: named tensors tagged with
+//! their role. Mirrors a Megatron-LM `state_dict` flattened to
+//! (name, tensor) pairs.
+
+use super::{HostTensor, XorShiftRng};
+
+/// Role of a tensor inside a checkpoint. BitSnap routes compression by
+/// role: bitmask delta-sparsification for model states (lossless),
+/// cluster-based quantization for optimizer states (lossy but tight).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StateKind {
+    /// fp16/bf16 training weights ("model states").
+    ModelState,
+    /// fp32 master copy of the weights held by the optimizer.
+    MasterWeight,
+    /// Adam first moment estimate (fp32).
+    AdamM,
+    /// Adam second moment estimate (fp32).
+    AdamV,
+    /// Anything else (RNG state, schedulers, token counters...).
+    Other,
+}
+
+impl StateKind {
+    pub fn tag(self) -> u8 {
+        match self {
+            StateKind::ModelState => 0,
+            StateKind::MasterWeight => 1,
+            StateKind::AdamM => 2,
+            StateKind::AdamV => 3,
+            StateKind::Other => 4,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<Self> {
+        Some(match tag {
+            0 => StateKind::ModelState,
+            1 => StateKind::MasterWeight,
+            2 => StateKind::AdamM,
+            3 => StateKind::AdamV,
+            4 => StateKind::Other,
+            _ => return None,
+        })
+    }
+
+    /// Is this part of the optimizer state (stored fp32 in mixed precision)?
+    pub fn is_optimizer(self) -> bool {
+        matches!(self, StateKind::MasterWeight | StateKind::AdamM | StateKind::AdamV)
+    }
+}
+
+/// One named tensor in a checkpoint.
+#[derive(Clone, Debug)]
+pub struct TensorEntry {
+    pub name: String,
+    pub kind: StateKind,
+    pub tensor: HostTensor,
+}
+
+/// A flattened state dict: ordered list of named tensors.
+#[derive(Clone, Debug, Default)]
+pub struct StateDict {
+    entries: Vec<TensorEntry>,
+}
+
+impl StateDict {
+    pub fn new() -> Self {
+        Self { entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, kind: StateKind, tensor: HostTensor) {
+        self.entries.push(TensorEntry { name: name.into(), kind, tensor });
+    }
+
+    pub fn entries(&self) -> &[TensorEntry] {
+        &self.entries
+    }
+
+    pub fn entries_mut(&mut self) -> &mut [TensorEntry] {
+        &mut self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&TensorEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Total payload bytes across all tensors (the uncompressed
+    /// checkpoint size, ignoring metadata).
+    pub fn total_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.tensor.byte_len()).sum()
+    }
+
+    /// Total number of parameters counted over model states only.
+    pub fn model_params(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == StateKind::ModelState)
+            .map(|e| e.tensor.len())
+            .sum()
+    }
+
+    /// Synthesize a mixed-precision GPT-like state dict with `params`
+    /// total parameters: fp16 model states plus fp32 master weights and
+    /// Adam moments with the paper's Fig.-6 style distributions
+    /// (weights ~ N(0, 0.02); Adam-m ~ N(0, 1e-3) — small signed updates;
+    /// Adam-v ~ |N(0, 1e-4)|^2 — tiny positive values).
+    ///
+    /// Used by storage/size benches where *running* a model of that size is
+    /// impossible on this host; value distributions drive compression
+    /// behaviour, so they are what we reproduce (DESIGN.md §Substitutions).
+    pub fn synthetic_gpt(params: usize, seed: u64) -> Self {
+        let mut rng = XorShiftRng::new(seed);
+        let mut sd = StateDict::new();
+        // split into layer-sized tensors of ~4M params to mimic real dicts
+        let chunk = 4 << 20;
+        let mut remaining = params;
+        let mut li = 0usize;
+        while remaining > 0 {
+            let n = remaining.min(chunk);
+            let w = rng.normal_vec(n, 0.0, 0.02);
+            sd.push(
+                format!("layers.{li}.weight"),
+                StateKind::ModelState,
+                HostTensor::from_f32_as_f16(&[n], &w).unwrap(),
+            );
+            sd.push(
+                format!("optimizer.{li}.master"),
+                StateKind::MasterWeight,
+                HostTensor::from_f32(&[n], &w).unwrap(),
+            );
+            let m = rng.normal_vec(n, 0.0, 1e-3);
+            sd.push(
+                format!("optimizer.{li}.exp_avg"),
+                StateKind::AdamM,
+                HostTensor::from_f32(&[n], &m).unwrap(),
+            );
+            let v: Vec<f32> = (0..n)
+                .map(|_| {
+                    let x = rng.next_normal() * 1e-4;
+                    x * x + 1e-12
+                })
+                .collect();
+            sd.push(
+                format!("optimizer.{li}.exp_avg_sq"),
+                StateKind::AdamV,
+                HostTensor::from_f32(&[n], &v).unwrap(),
+            );
+            remaining -= n;
+            li += 1;
+        }
+        sd
+    }
+
+    /// Perturb `fraction` of the elements of every model-state tensor in
+    /// place (simulates one training step's delta for Fig.-8-style sweeps).
+    pub fn perturb_model_states(&mut self, fraction: f64, seed: u64) {
+        let mut rng = XorShiftRng::new(seed);
+        for e in &mut self.entries {
+            if e.kind != StateKind::ModelState {
+                continue;
+            }
+            let n = e.tensor.len();
+            let k = ((n as f64) * fraction).round() as usize;
+            let idx = rng.choose_indices(n, k.min(n));
+            let esize = e.tensor.dtype().size();
+            let bytes = e.tensor.bytes_mut();
+            for i in idx {
+                // Mimic a real optimizer update at fp16 granularity: the
+                // mantissa byte takes an essentially random new value while
+                // the sign/exponent byte usually survives (small updates
+                // rarely change magnitude class). A plain low-bit flip
+                // would make deltas artificially entropy-free and flatter
+                // codecs like Huffman; random whole elements would
+                // overstate entropy.
+                let r = rng.next_u32();
+                bytes[i * esize] ^= 1 + (r & 0xff) as u8 % 255;
+                if esize >= 2 && (r >> 8) & 0x3 == 0 {
+                    bytes[i * esize + 1] ^= 1 << ((r >> 10) % 7);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_sizes() {
+        let sd = StateDict::synthetic_gpt(1 << 20, 1);
+        // 1M params: 2 bytes model + 12 bytes optimizer = 14 MiB
+        assert_eq!(sd.model_params(), 1 << 20);
+        assert_eq!(sd.total_bytes(), (1 << 20) * 14);
+    }
+
+    #[test]
+    fn kinds_roundtrip() {
+        for k in [
+            StateKind::ModelState,
+            StateKind::MasterWeight,
+            StateKind::AdamM,
+            StateKind::AdamV,
+            StateKind::Other,
+        ] {
+            assert_eq!(StateKind::from_tag(k.tag()), Some(k));
+        }
+    }
+
+    #[test]
+    fn perturb_changes_requested_fraction() {
+        let mut sd = StateDict::synthetic_gpt(1 << 16, 2);
+        let before = sd.get("layers.0.weight").unwrap().tensor.clone();
+        sd.perturb_model_states(0.25, 3);
+        let after = &sd.get("layers.0.weight").unwrap().tensor;
+        let changed = before
+            .bytes()
+            .chunks_exact(2)
+            .zip(after.bytes().chunks_exact(2))
+            .filter(|(a, b)| a != b)
+            .count();
+        let n = before.len();
+        let frac = changed as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.01, "frac {frac}");
+    }
+
+    #[test]
+    fn perturb_leaves_optimizer_untouched() {
+        let mut sd = StateDict::synthetic_gpt(1 << 14, 4);
+        let before = sd.get("optimizer.0.exp_avg").unwrap().tensor.clone();
+        sd.perturb_model_states(0.5, 5);
+        assert_eq!(sd.get("optimizer.0.exp_avg").unwrap().tensor, before);
+    }
+}

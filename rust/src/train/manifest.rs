@@ -1,0 +1,124 @@
+//! Parser for the `train_step_<cfg>.manifest.txt` files `aot.py` writes
+//! next to each model artifact: the canonical parameter order plus the
+//! hyperparameters the rust trainer needs (batch/seq/vocab).
+
+use std::path::Path;
+
+use crate::compress::CompressError;
+use crate::tensor::DType;
+
+/// One parameter tensor in canonical artifact order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub params: Vec<ParamSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self, CompressError> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn parse(body: &str) -> Result<Self, CompressError> {
+        let mut model = String::new();
+        let (mut vocab, mut d_model, mut n_layers, mut n_heads, mut seq, mut batch) =
+            (0usize, 0usize, 0usize, 0usize, 0usize, 0usize);
+        let mut lr = 0f64;
+        let mut declared_params = 0usize;
+        let mut params = Vec::new();
+        let bad = |what: &str| CompressError::Format(format!("manifest: bad {what}"));
+        for line in body.lines() {
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("model") => model = it.next().ok_or_else(|| bad("model"))?.to_string(),
+                Some("vocab") => vocab = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("vocab"))?,
+                Some("d_model") => d_model = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("d_model"))?,
+                Some("n_layers") => n_layers = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("n_layers"))?,
+                Some("n_heads") => n_heads = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("n_heads"))?,
+                Some("seq") => seq = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("seq"))?,
+                Some("batch") => batch = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("batch"))?,
+                Some("lr") => lr = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("lr"))?,
+                Some("params") => declared_params = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("params"))?,
+                Some("param") => {
+                    let name = it.next().ok_or_else(|| bad("param name"))?.to_string();
+                    let dtype = match it.next() {
+                        Some("f32") => DType::F32,
+                        Some("f16") => DType::F16,
+                        Some("bf16") => DType::BF16,
+                        other => return Err(bad(&format!("param dtype {other:?}"))),
+                    };
+                    let dims = it.next().ok_or_else(|| bad("param dims"))?;
+                    let shape = dims
+                        .split('x')
+                        .map(|d| d.parse::<usize>())
+                        .collect::<Result<Vec<_>, _>>()
+                        .map_err(|_| bad("param dims"))?;
+                    params.push(ParamSpec { name, dtype, shape });
+                }
+                _ => {}
+            }
+        }
+        if model.is_empty() || params.is_empty() {
+            return Err(bad("missing model/params"));
+        }
+        if declared_params != 0 && declared_params != params.len() {
+            return Err(bad("param count mismatch"));
+        }
+        Ok(Self { model, vocab, d_model, n_layers, n_heads, seq, batch, lr, params })
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "model gpt-nano\nvocab 256\nd_model 64\nn_layers 2\nn_heads 2\nseq 64\nbatch 8\nlr 0.0003\nparams 2\nparam wte f32 256x64\nparam wpe f32 64x64\n";
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model, "gpt-nano");
+        assert_eq!(m.vocab, 256);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].name, "wte");
+        assert_eq!(m.params[0].shape, vec![256, 64]);
+        assert_eq!(m.param_count(), 256 * 64 + 64 * 64);
+    }
+
+    #[test]
+    fn rejects_mismatched_count() {
+        let bad = SAMPLE.replace("params 2", "params 3");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(Manifest::parse("").is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Training substrate: the GPT model driven from rust via the PJRT
+//! runtime, the synthetic corpus, and the mp×pp parallelism simulation
+//! used by the Figs. 10–11 experiments.
+
+pub mod data;
+pub mod manifest;
+pub mod parallel;
+pub mod trainer;
+
+pub use data::SyntheticCorpus;
+pub use manifest::{Manifest, ParamSpec};
+pub use parallel::{compress_sharded, shard_state_dict, Parallelism, ShardedCompressReport};
+pub use trainer::Trainer;

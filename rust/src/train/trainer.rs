@@ -1,0 +1,140 @@
+//! The training driver: owns the model/optimizer state as XLA literals,
+//! runs the AOT-compiled `train_step` artifact, and snapshots state dicts
+//! for the checkpoint engine.
+//!
+//! This is the L3 view of mixed-precision training (paper §1): the
+//! *optimizer* state (fp32 master weights + Adam moments) lives in the
+//! train loop; checkpoints additionally carry an fp16 copy of the weights
+//! as "model states". On restore, parameters come back from the master
+//! weights, exactly like Megatron.
+
+use crate::compress::CompressError;
+use crate::runtime::{PjrtRuntime, RuntimeError};
+use crate::tensor::{DType, HostTensor, StateDict, StateKind};
+
+use super::data::SyntheticCorpus;
+use super::manifest::Manifest;
+
+/// Training driver for one model config.
+pub struct Trainer {
+    runtime: PjrtRuntime,
+    manifest: Manifest,
+    model: String,
+    /// 3n state literals: params, m, v — in artifact order.
+    state: Vec<xla::Literal>,
+    step: u64,
+    corpus: SyntheticCorpus,
+}
+
+impl Trainer {
+    /// Load artifacts for `model` (e.g. "gpt-micro") and initialize state
+    /// by executing the `init_<model>` artifact.
+    pub fn new(mut runtime: PjrtRuntime, model: &str, data_seed: u64) -> Result<Self, RuntimeError> {
+        let manifest =
+            Manifest::load(&runtime.artifacts_dir().join(format!("train_step_{model}.manifest.txt")))?;
+        let init = runtime.load(&format!("init_{model}.hlo.txt"))?;
+        let state = init.run_literals_raw(&[])?;
+        let expect = manifest.params.len() * 3;
+        if state.len() != expect {
+            return Err(RuntimeError::Xla(format!(
+                "init artifact returned {} tensors, manifest says {expect}",
+                state.len()
+            )));
+        }
+        // compile the step function now so the first step isn't slow
+        runtime.load(&format!("train_step_{model}.hlo.txt"))?;
+        let corpus = SyntheticCorpus::new(manifest.vocab, data_seed);
+        Ok(Self { runtime, manifest, model: model.to_string(), state, step: 0, corpus })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn iteration(&self) -> u64 {
+        self.step
+    }
+
+    /// Run one training step on the next synthetic batch; returns the loss.
+    pub fn step(&mut self) -> Result<f32, RuntimeError> {
+        let tokens = self.corpus.next_batch(self.manifest.batch, self.manifest.seq);
+        self.step_on(&tokens)
+    }
+
+    /// Run one training step on caller-supplied tokens `[batch, seq+1] i32`.
+    pub fn step_on(&mut self, tokens: &HostTensor) -> Result<f32, RuntimeError> {
+        let step_scalar = HostTensor::from_bytes(
+            DType::I32,
+            &[],
+            (self.step as i32).to_le_bytes().to_vec(),
+        )?;
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.state.len() + 2);
+        for l in &self.state {
+            inputs.push(l.clone());
+        }
+        inputs.push(crate::runtime::tensor_to_literal(&step_scalar)?);
+        inputs.push(crate::runtime::tensor_to_literal(tokens)?);
+        let exe = {
+            let name = format!("train_step_{}.hlo.txt", self.model);
+            self.runtime.load(&name)?
+        };
+        let mut out = exe.run_literals_raw(&inputs)?;
+        let loss_lit = out.pop().ok_or_else(|| RuntimeError::Xla("empty output".into()))?;
+        let loss_t = crate::runtime::literal_to_tensor(&loss_lit)?;
+        let loss = f32::from_le_bytes(loss_t.bytes()[0..4].try_into().unwrap());
+        self.state = out;
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Snapshot the full mixed-precision state dict for checkpointing:
+    /// fp16 model states + fp32 master weights + Adam moments.
+    pub fn state_dict(&self) -> Result<StateDict, CompressError> {
+        let n = self.manifest.params.len();
+        let mut sd = StateDict::new();
+        for (i, spec) in self.manifest.params.iter().enumerate() {
+            let p = crate::runtime::literal_to_tensor(&self.state[i])?;
+            let vals = p.to_f32_vec()?;
+            sd.push(
+                spec.name.clone(),
+                StateKind::ModelState,
+                HostTensor::from_f32_as_f16(p.shape(), &vals)?,
+            );
+            sd.push(format!("optimizer.master.{}", spec.name), StateKind::MasterWeight, p);
+            let m = crate::runtime::literal_to_tensor(&self.state[n + i])?;
+            sd.push(format!("optimizer.exp_avg.{}", spec.name), StateKind::AdamM, m);
+            let v = crate::runtime::literal_to_tensor(&self.state[2 * n + i])?;
+            sd.push(format!("optimizer.exp_avg_sq.{}", spec.name), StateKind::AdamV, v);
+        }
+        Ok(sd)
+    }
+
+    /// Restore from a state dict (as produced by [`Trainer::state_dict`],
+    /// possibly after a lossy compression round-trip). Parameters are taken
+    /// from the fp32 master weights; `iteration` resets the Adam step.
+    pub fn load_state_dict(&mut self, sd: &StateDict, iteration: u64) -> Result<(), RuntimeError> {
+        let n = self.manifest.params.len();
+        for (i, spec) in self.manifest.params.iter().enumerate() {
+            let master = sd
+                .get(&format!("optimizer.master.{}", spec.name))
+                .ok_or_else(|| RuntimeError::Xla(format!("missing master for {}", spec.name)))?;
+            self.state[i] = crate::runtime::tensor_to_literal(&master.tensor)?;
+            let m = sd
+                .get(&format!("optimizer.exp_avg.{}", spec.name))
+                .ok_or_else(|| RuntimeError::Xla(format!("missing exp_avg for {}", spec.name)))?;
+            self.state[n + i] = crate::runtime::tensor_to_literal(&m.tensor)?;
+            let v = sd
+                .get(&format!("optimizer.exp_avg_sq.{}", spec.name))
+                .ok_or_else(|| RuntimeError::Xla(format!("missing exp_avg_sq for {}", spec.name)))?;
+            self.state[2 * n + i] = crate::runtime::tensor_to_literal(&v.tensor)?;
+        }
+        self.step = iteration;
+        Ok(())
+    }
+
+    /// Reset the data stream (used to replay identical batches across the
+    /// Fig. 12/13 resume-comparison arms).
+    pub fn reset_corpus(&mut self, seed: u64) {
+        self.corpus = SyntheticCorpus::new(self.manifest.vocab, seed);
+    }
+}

@@ -1,0 +1,121 @@
+//! Engine soak test: multi-rank checkpointing with random failure
+//! injection, exercising the full save → corrupt → all-gather → prune →
+//! reload cycle across many rounds. No artifacts required.
+
+use bitsnap::compress::delta::{compress_state_dict, decompress_state_dict, Policy};
+use bitsnap::engine::container;
+use bitsnap::engine::failure::FailureInjector;
+use bitsnap::engine::recovery::{all_gather_check, apply_pruning, RankView};
+use bitsnap::engine::{ShmStore, Storage};
+use bitsnap::tensor::{StateDict, XorShiftRng};
+
+#[test]
+fn multi_rank_soak_with_random_failures() {
+    let pid = std::process::id();
+    let shm_root = std::env::temp_dir().join(format!("bsnp-soak-shm-{pid}"));
+    let store_root = std::env::temp_dir().join(format!("bsnp-soak-store-{pid}"));
+    let _ = std::fs::remove_dir_all(&shm_root);
+    let _ = std::fs::remove_dir_all(&store_root);
+
+    let world = 4usize;
+    let redundancy = 3usize;
+    let storage = Storage::new(&store_root).unwrap();
+    let shms: Vec<ShmStore> =
+        (0..world).map(|r| ShmStore::new(&shm_root, r, redundancy).unwrap()).collect();
+
+    // each rank owns a distinct shard of the (synthetic) training state
+    let mut rank_state: Vec<StateDict> =
+        (0..world).map(|r| StateDict::synthetic_gpt(1 << 12, r as u64)).collect();
+
+    let mut inj = FailureInjector::new(0xFA11);
+    let mut good = XorShiftRng::new(77);
+    let mut last_recoverable: Option<u64> = None;
+
+    for round in 1..=30u64 {
+        let iteration = round * 10;
+        // every rank "trains" (perturb) then checkpoints into shm
+        let mut wrote_ok = true;
+        for (r, sd) in rank_state.iter_mut().enumerate() {
+            sd.perturb_model_states(0.05, round * 100 + r as u64);
+            let ckpt =
+                compress_state_dict(sd, None, Policy::lossless(), iteration, iteration).unwrap();
+            let bytes = container::serialize(&ckpt);
+            shms[r].put(iteration, &bytes, true).unwrap();
+            // also persist (the agent's job; done inline for determinism)
+            storage.put(iteration, r, &bytes, true).unwrap();
+        }
+        // random failure: corrupt one rank's newest shm entry 30% of rounds
+        if inj.should_fail(0.3) {
+            let victim = good.next_below(world);
+            let kind = inj.random_kind();
+            inj.inject(&shms[victim], iteration, kind).unwrap();
+            wrote_ok = false;
+        }
+        if wrote_ok {
+            last_recoverable = Some(iteration);
+        }
+
+        // crash-and-recover every 5 rounds
+        if round % 5 == 0 {
+            let views: Vec<RankView> = shms
+                .iter()
+                .enumerate()
+                .map(|(r, s)| RankView::gather(s, &storage, r).unwrap())
+                .collect();
+            let decision = all_gather_check(&views).expect("some common iteration");
+            // storage has every iteration persisted, so recovery always
+            // reaches the newest one even when shm lost it
+            assert_eq!(decision.iteration, iteration);
+            let _ = last_recoverable;
+            for s in &shms {
+                apply_pruning(s, &decision).unwrap();
+            }
+            // every rank must be able to reload the chosen iteration
+            for (r, s) in shms.iter().enumerate() {
+                let bytes = if s.validate(decision.iteration) {
+                    s.get(decision.iteration).unwrap()
+                } else {
+                    storage.get(decision.iteration, r).unwrap()
+                };
+                let ckpt = container::deserialize(&bytes).unwrap();
+                let sd = decompress_state_dict(&ckpt, None).unwrap();
+                assert_eq!(sd.entries().len(), rank_state[r].entries().len());
+            }
+        }
+    }
+
+    // redundancy window respected
+    for s in &shms {
+        assert!(s.iterations().unwrap().len() <= redundancy + 1);
+    }
+
+    let _ = std::fs::remove_dir_all(&shm_root);
+    let _ = std::fs::remove_dir_all(&store_root);
+}
+
+#[test]
+fn shm_survives_simulated_process_restart() {
+    // the paper's fast path: a *process* crash keeps shm intact, so
+    // recovery never touches storage
+    let pid = std::process::id();
+    let shm_root = std::env::temp_dir().join(format!("bsnp-restart-shm-{pid}"));
+    let _ = std::fs::remove_dir_all(&shm_root);
+    let sd = StateDict::synthetic_gpt(1 << 12, 9);
+    {
+        // "process 1"
+        let shm = ShmStore::new(&shm_root, 0, 2).unwrap();
+        let c = compress_state_dict(&sd, None, Policy::lossless(), 40, 40).unwrap();
+        shm.put(40, &container::serialize(&c), true).unwrap();
+    } // drops everything — simulated crash
+    {
+        // "process 2" re-opens the same shm root
+        let shm = ShmStore::new(&shm_root, 0, 2).unwrap();
+        assert!(shm.validate(40));
+        let ckpt = container::deserialize(&shm.get(40).unwrap()).unwrap();
+        let loaded = decompress_state_dict(&ckpt, None).unwrap();
+        for (a, b) in sd.entries().iter().zip(loaded.entries()) {
+            assert_eq!(a.tensor, b.tensor);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&shm_root);
+}

@@ -1,0 +1,104 @@
+//! Integration: rust PJRT runtime executing AOT Pallas artifacts, checked
+//! against the native rust codecs.
+//!
+//! Requires `make artifacts` (tests self-skip when artifacts are absent so
+//! `cargo test` works on a fresh checkout).
+
+use bitsnap::compress::{cluster_quant, bitmask, metrics};
+use bitsnap::runtime::kernels::{XlaBitmaskPack, XlaClusterQuant};
+use bitsnap::runtime::{default_artifacts_dir, PjrtRuntime};
+use bitsnap::tensor::{DType, HostTensor, XorShiftRng};
+
+fn runtime_or_skip() -> Option<PjrtRuntime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("cluster_quant_65536.hlo.txt").exists() {
+        eprintln!("artifacts missing under {dir:?}; run `make artifacts` — skipping");
+        return None;
+    }
+    Some(PjrtRuntime::cpu(dir).expect("pjrt cpu client"))
+}
+
+#[test]
+fn xla_cluster_quant_agrees_with_native() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let block = 65536;
+    let mut rng = XorShiftRng::new(42);
+    let vals = rng.normal_vec(block, 0.0, 1e-3);
+    let t = HostTensor::from_f32(&[block], &vals).unwrap();
+
+    // native payload
+    let native = cluster_quant::encode(&t, 16).unwrap();
+    let native_deq = cluster_quant::decode(&native, DType::F32, &[block])
+        .unwrap()
+        .to_f32_vec()
+        .unwrap();
+
+    // xla payload (one chunk == whole tensor here)
+    let xq = XlaClusterQuant::new(block);
+    let payloads = xq.quantize_tensor(&mut rt, &t).unwrap();
+    assert_eq!(payloads.len(), 1);
+    let xla_deq = cluster_quant::decode(&payloads[0], DType::F32, &[block])
+        .unwrap()
+        .to_f32_vec()
+        .unwrap();
+
+    // Same algorithm, two engines: dequantized outputs must agree to
+    // within one quant step (round-half-even in XLA vs half-away in rust).
+    let mse_native = metrics::mse(&vals, &native_deq);
+    let mse_xla = metrics::mse(&vals, &xla_deq);
+    assert!(mse_xla < mse_native * 1.5 + 1e-15, "{mse_xla} vs {mse_native}");
+    let max_pair: f32 = native_deq
+        .iter()
+        .zip(&xla_deq)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    let step = 8.0 * 1e-3 / 255.0; // conservative widest-cluster step
+    assert!(max_pair <= step, "max pairwise {max_pair}");
+}
+
+#[test]
+fn xla_cluster_quant_handles_tail_chunk() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let block = 65536;
+    let n = block + 1234;
+    let mut rng = XorShiftRng::new(7);
+    let vals = rng.normal_vec(n, 0.5, 0.1);
+    let t = HostTensor::from_f32(&[n], &vals).unwrap();
+    let xq = XlaClusterQuant::new(block);
+    let payloads = xq.quantize_tensor(&mut rt, &t).unwrap();
+    assert_eq!(payloads.len(), 2);
+    let d0 = cluster_quant::decode(&payloads[0], DType::F32, &[block]).unwrap();
+    let d1 = cluster_quant::decode(&payloads[1], DType::F32, &[1234]).unwrap();
+    let mut all = d0.to_f32_vec().unwrap();
+    all.extend(d1.to_f32_vec().unwrap());
+    let mse = metrics::mse(&vals, &all);
+    assert!(mse < 1e-6, "mse {mse}");
+}
+
+#[test]
+fn xla_bitmask_pack_agrees_with_native() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let block = 65536usize;
+    let mut rng = XorShiftRng::new(3);
+    let prev: Vec<u8> = (0..block * 2).map(|_| rng.next_u32() as u8).collect();
+    let mut curr = prev.clone();
+    let changed = rng.choose_indices(block, 5000);
+    for &i in &changed {
+        curr[2 * i] ^= 0xff;
+    }
+    let xp = XlaBitmaskPack::new(block);
+    let (packed, count) = xp.pack_chunk(&mut rt, &prev, &curr).unwrap();
+    assert_eq!(count as usize, changed.len());
+
+    // native packed mask (strip the header to compare raw masks)
+    let native = bitmask::encode_packed(&prev, &curr, 2).unwrap();
+    let mask_native = &native[17..17 + block / 8];
+    assert_eq!(&packed[..], mask_native);
+}
+
+#[test]
+fn artifact_not_found_is_clean_error() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let err = rt.load("no_such_artifact.hlo.txt");
+    assert!(err.is_err());
+}

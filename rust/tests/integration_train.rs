@@ -1,0 +1,148 @@
+//! Integration: the full three-layer stack — rust trainer executing the
+//! AOT train_step (which embeds the Pallas attention kernel), snapshotting
+//! through the checkpoint engine, and resuming bit-exactly.
+//!
+//! Requires `make artifacts` (self-skips otherwise).
+
+use bitsnap::compress::delta::Policy;
+use bitsnap::engine::{CheckpointEngine, EngineConfig, Storage};
+use bitsnap::runtime::{default_artifacts_dir, PjrtRuntime};
+use bitsnap::tensor::StateKind;
+use bitsnap::train::Trainer;
+
+const MODEL: &str = "gpt-nano";
+
+fn trainer_or_skip(seed: u64) -> Option<Trainer> {
+    let dir = default_artifacts_dir();
+    if !dir.join(format!("train_step_{MODEL}.hlo.txt")).exists() {
+        eprintln!("artifacts missing under {dir:?}; run `make artifacts` — skipping");
+        return None;
+    }
+    let rt = PjrtRuntime::cpu(dir).expect("pjrt cpu client");
+    Some(Trainer::new(rt, MODEL, seed).expect("trainer"))
+}
+
+#[test]
+fn loss_decreases_over_training() {
+    let Some(mut t) = trainer_or_skip(1) else { return };
+    let first = t.step().unwrap();
+    let mut last = first;
+    for _ in 0..39 {
+        last = t.step().unwrap();
+    }
+    // random init ≈ ln(256) ≈ 5.55; Markov corpus entropy floor ≈ ln(4)
+    assert!(first > 4.5, "first loss {first}");
+    assert!(last < first - 0.5, "no learning: {first} -> {last}");
+}
+
+#[test]
+fn snapshot_restore_is_bit_exact_and_resumes_identically() {
+    let Some(mut t) = trainer_or_skip(2) else { return };
+    for _ in 0..5 {
+        t.step().unwrap();
+    }
+    let sd = t.state_dict().unwrap();
+    assert_eq!(t.iteration(), 5);
+
+    // train 3 more steps, recording losses
+    t.reset_corpus(99);
+    let after: Vec<f32> = (0..3).map(|_| t.step().unwrap()).collect();
+
+    // restore the snapshot into a *fresh* trainer and replay
+    let Some(mut t2) = trainer_or_skip(3) else { return };
+    t2.load_state_dict(&sd, 5).unwrap();
+    t2.reset_corpus(99);
+    let replay: Vec<f32> = (0..3).map(|_| t2.step().unwrap()).collect();
+    assert_eq!(after, replay, "resume must be bit-identical");
+}
+
+#[test]
+fn engine_roundtrip_with_real_training_state() {
+    let Some(mut t) = trainer_or_skip(4) else { return };
+    for _ in 0..3 {
+        t.step().unwrap();
+    }
+    let pid = std::process::id();
+    let shm_root = std::env::temp_dir().join(format!("bsnp-it-shm-{pid}"));
+    let store_root = std::env::temp_dir().join(format!("bsnp-it-store-{pid}"));
+    let _ = std::fs::remove_dir_all(&shm_root);
+    let _ = std::fs::remove_dir_all(&store_root);
+    let cfg = EngineConfig {
+        job: "it".into(),
+        rank: 0,
+        world: 1,
+        shm_root: shm_root.clone(),
+        storage: Storage::new(&store_root).unwrap(),
+        redundancy: 2,
+        policy: Policy::lossless(),
+        max_cached_iteration: 3,
+    };
+    let mut eng = CheckpointEngine::new(cfg).unwrap();
+
+    let sd3 = t.state_dict().unwrap();
+    eng.save(3, &sd3).unwrap();
+    for _ in 0..2 {
+        t.step().unwrap();
+    }
+    let sd5 = t.state_dict().unwrap();
+    let report = eng.save(5, &sd5).unwrap();
+    assert!(!report.is_base, "second save within window is a delta");
+    eng.flush().unwrap();
+
+    let (iter, loaded) = eng.load_latest().unwrap().unwrap();
+    assert_eq!(iter, 5);
+    for (a, b) in sd5.entries().iter().zip(loaded.entries()) {
+        assert_eq!(a.tensor, b.tensor, "{}", a.name);
+    }
+
+    // resume from the loaded dict and verify the loss trajectory matches
+    t.reset_corpus(55);
+    let cont: Vec<f32> = (0..2).map(|_| t.step().unwrap()).collect();
+    let Some(mut t2) = trainer_or_skip(5) else { return };
+    t2.load_state_dict(&loaded, 5).unwrap();
+    t2.reset_corpus(55);
+    let cont2: Vec<f32> = (0..2).map(|_| t2.step().unwrap()).collect();
+    assert_eq!(cont, cont2);
+
+    let _ = std::fs::remove_dir_all(&shm_root);
+    let _ = std::fs::remove_dir_all(&store_root);
+}
+
+#[test]
+fn quantized_checkpoint_resume_stays_close() {
+    // the Fig. 13 mechanism in miniature: resume from a cluster-quantized
+    // checkpoint and verify the loss stays near the lossless trajectory
+    let Some(mut t) = trainer_or_skip(6) else { return };
+    for _ in 0..10 {
+        t.step().unwrap();
+    }
+    let sd = t.state_dict().unwrap();
+
+    // lossless continuation
+    t.reset_corpus(77);
+    let clean: Vec<f32> = (0..5).map(|_| t.step().unwrap()).collect();
+
+    // quantized round-trip continuation
+    let ckpt = bitsnap::compress::delta::compress_state_dict(
+        &sd,
+        None,
+        Policy::bitsnap(),
+        10,
+        10,
+    )
+    .unwrap();
+    let lossy = bitsnap::compress::delta::decompress_state_dict(&ckpt, None).unwrap();
+    // master weights went through uint8 quantization: close but not equal
+    let orig = sd.entries().iter().find(|e| e.kind == StateKind::MasterWeight).unwrap();
+    let back = lossy.entries().iter().find(|e| e.kind == StateKind::MasterWeight).unwrap();
+    assert_ne!(orig.tensor, back.tensor);
+
+    let Some(mut t2) = trainer_or_skip(7) else { return };
+    t2.load_state_dict(&lossy, 10).unwrap();
+    t2.reset_corpus(77);
+    let quant: Vec<f32> = (0..5).map(|_| t2.step().unwrap()).collect();
+    for (c, q) in clean.iter().zip(&quant) {
+        let rel = ((c - q) / c).abs();
+        assert!(rel < 0.10, "loss diverged: clean {c} vs quant {q}");
+    }
+}
