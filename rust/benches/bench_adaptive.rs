@@ -1,0 +1,183 @@
+//! Adaptive vs. static codec selection over a simulated 3-stage training
+//! trajectory (early: 90% of model-state elements churn per checkpoint;
+//! mid: 25%; late: 2%), with identical state dicts and base cadence in
+//! both arms (the shared [`bitsnap::adapt::sim`] harness guarantees it).
+//!
+//! The **static** arm is the paper-default `Policy::bitsnap()` (packed
+//! bitmask + cluster quantization everywhere). The **adaptive** arm is the
+//! [`AdaptivePolicy`] controller with throughput measured on this host and
+//! the paper's Table-1 NVMe write bandwidth. Reported per stage and in
+//! total: compression ratio and end-to-end save seconds
+//! (= encode wall time, min-of-two runs, + payload/write-bandwidth — the
+//! persist leg is simulated so the numbers reproduce the production
+//! bottleneck, not this host's page cache).
+//!
+//! Emits `BENCH_adaptive.json` (override with env `BENCH_OUT`) so future
+//! PRs have a perf trajectory to compare against.
+//!
+//! Run: `cargo bench --bench bench_adaptive` (env N=2097152 for bigger
+//! dicts, WRITE_BPS to model a different storage tier)
+
+use bitsnap::adapt::{
+    default_stages, simulate_trajectory, AdaptiveConfig, AdaptivePolicy, Calibration, CostModel,
+    PolicySource, SimSave, StageConfig, StaticPolicySource, DEFAULT_WRITE_BPS,
+};
+use bitsnap::bench::{fmt_bytes, Table};
+use bitsnap::compress::delta::Policy;
+
+const SAVES_PER_STAGE: u64 = 3;
+const MAX_CACHED: u64 = 3;
+
+#[derive(Clone, Copy, Default)]
+struct StageResult {
+    raw_bytes: usize,
+    compressed_bytes: usize,
+    save_secs: f64,
+}
+
+impl StageResult {
+    fn ratio(&self) -> f64 {
+        self.raw_bytes as f64 / self.compressed_bytes.max(1) as f64
+    }
+}
+
+/// Fold per-save results into per-stage accumulators (index = stage).
+fn by_stage(saves: &[SimSave], write_bps: f64, n_stages: usize) -> Vec<StageResult> {
+    let mut out = vec![StageResult::default(); n_stages];
+    for s in saves {
+        let acc = &mut out[s.stage_index];
+        acc.raw_bytes += s.raw_bytes;
+        acc.compressed_bytes += s.payload_bytes;
+        acc.save_secs += s.encode_secs + s.payload_bytes as f64 / write_bps;
+    }
+    out
+}
+
+fn totals(stages: &[StageResult]) -> StageResult {
+    stages.iter().fold(StageResult::default(), |mut acc, r| {
+        acc.raw_bytes += r.raw_bytes;
+        acc.compressed_bytes += r.compressed_bytes;
+        acc.save_secs += r.save_secs;
+        acc
+    })
+}
+
+fn main() {
+    let params: usize = std::env::var("N").ok().and_then(|v| v.parse().ok()).unwrap_or(1 << 20);
+    let write_bps: f64 = std::env::var("WRITE_BPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(DEFAULT_WRITE_BPS);
+    println!(
+        "== adaptive vs static bitsnap: {params} params, 3 stages x {SAVES_PER_STAGE} saves, \
+         write {:.2} GB/s ==\n",
+        write_bps / 1e9
+    );
+    let stages = default_stages(SAVES_PER_STAGE);
+
+    // static arm: the paper-default policy every save
+    let mut static_source = StaticPolicySource::new(Policy::bitsnap());
+    let static_saves =
+        simulate_trajectory(params, &stages, MAX_CACHED, &mut static_source).unwrap();
+    let static_results = by_stage(&static_saves, write_bps, stages.len());
+
+    // adaptive arm: host-calibrated cost model, short stage window so the
+    // 9-save trajectory can traverse all three stages
+    let cfg = AdaptiveConfig {
+        stage: StageConfig { window: 2, ..StageConfig::default() },
+        ..AdaptiveConfig::default()
+    };
+    let cost = CostModel::new(Calibration::measure(1 << 18), Some(write_bps));
+    let mut policy = AdaptivePolicy::new(cfg, cost);
+    let adaptive_saves = simulate_trajectory(params, &stages, MAX_CACHED, &mut policy).unwrap();
+    let adaptive_results = by_stage(&adaptive_saves, write_bps, stages.len());
+    println!("adaptive policy after trajectory: {}\n", policy.describe());
+
+    let stage_names = ["early (90% churn)", "mid (25% churn)", "late (2% churn)"];
+    let mut table = Table::new(&[
+        "stage",
+        "static ratio",
+        "adaptive ratio",
+        "static save",
+        "adaptive save",
+        "winner",
+    ]);
+    for (i, name) in stage_names.iter().enumerate() {
+        let s = &static_results[i];
+        let a = &adaptive_results[i];
+        let winner = if a.save_secs < s.save_secs || a.ratio() > s.ratio() {
+            "adaptive"
+        } else {
+            "static"
+        };
+        table.row(&[
+            name.to_string(),
+            format!("{:.2}x", s.ratio()),
+            format!("{:.2}x", a.ratio()),
+            format!("{:.3} s", s.save_secs),
+            format!("{:.3} s", a.save_secs),
+            winner.to_string(),
+        ]);
+    }
+    table.print();
+
+    let st = totals(&static_results);
+    let at = totals(&adaptive_results);
+    println!(
+        "\ntotal: static {:.2}x / {:.3} s   adaptive {:.2}x / {:.3} s   ({} raw per arm)",
+        st.ratio(),
+        st.save_secs,
+        at.ratio(),
+        at.save_secs,
+        fmt_bytes(st.raw_bytes),
+    );
+    let beats = at.save_secs < st.save_secs || at.ratio() > st.ratio();
+    println!(
+        "adaptive beats static on {}",
+        if at.save_secs < st.save_secs && at.ratio() > st.ratio() {
+            "both save time and ratio"
+        } else if at.save_secs < st.save_secs {
+            "save time"
+        } else if at.ratio() > st.ratio() {
+            "ratio"
+        } else {
+            "NEITHER — regression!"
+        }
+    );
+    assert!(beats, "adaptive selection must beat static bitsnap on save time or ratio");
+
+    // machine-readable trajectory for future PRs
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_adaptive.json".to_string());
+    let stage_json = |rs: &[StageResult]| {
+        rs.iter()
+            .zip(["early", "mid", "late"])
+            .map(|(r, name)| {
+                format!(
+                    "      {{\"stage\": \"{name}\", \"ratio\": {:.4}, \"save_secs\": {:.6}, \
+                     \"raw_bytes\": {}, \"compressed_bytes\": {}}}",
+                    r.ratio(),
+                    r.save_secs,
+                    r.raw_bytes,
+                    r.compressed_bytes
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",\n")
+    };
+    let json = format!(
+        "{{\n  \"params\": {params},\n  \"write_bps\": {write_bps},\n  \"saves_per_stage\": \
+         {SAVES_PER_STAGE},\n  \"static\": {{\n    \"total_ratio\": {:.4},\n    \
+         \"total_save_secs\": {:.6},\n    \"stages\": [\n{}\n    ]\n  }},\n  \"adaptive\": {{\n    \
+         \"total_ratio\": {:.4},\n    \"total_save_secs\": {:.6},\n    \"stages\": \
+         [\n{}\n    ]\n  }}\n}}\n",
+        st.ratio(),
+        st.save_secs,
+        stage_json(&static_results),
+        at.ratio(),
+        at.save_secs,
+        stage_json(&adaptive_results),
+    );
+    std::fs::write(&out_path, json).expect("write bench json");
+    println!("wrote {out_path}");
+}

@@ -190,6 +190,19 @@ fn main() {
     qt.print();
 
     // ----- native vs XLA/Pallas artifact path ----------------------------
+    #[cfg(feature = "xla")]
+    xla_comparison();
+}
+
+/// Compare the native rust cluster-quant hot path against the Pallas
+/// artifact executed via PJRT. Needs a build with `--features xla` and
+/// `make artifacts`.
+#[cfg(feature = "xla")]
+fn xla_comparison() {
+    use bitsnap::bench::{bench, fmt_throughput, Table};
+    use bitsnap::compress::cluster_quant;
+    use bitsnap::tensor::{HostTensor, XorShiftRng};
+
     let dir = bitsnap::runtime::default_artifacts_dir();
     if dir.join("cluster_quant_1048576.hlo.txt").exists() {
         println!("\n== native rust vs XLA(Pallas artifact) cluster quantization ==\n");

@@ -1,0 +1,328 @@
+//! Storage cost model: predict end-to-end save cost per candidate codec.
+//!
+//! For a tensor with probe stats `p` and a codec `c`, the model predicts
+//!
+//! * **payload bytes** from the codecs' analytic size formulas fed with the
+//!   sampled delta density (sparse codecs), the element count (quantizers)
+//!   or the sampled byte entropy (entropy coders), and
+//! * **save seconds** = `raw_bytes / encode_bps(c) + bytes / write_bps`,
+//!   where `encode_bps` comes from a [`Calibration`] (constants, or
+//!   [`Calibration::measure`]d on this host) and `write_bps` from the
+//!   [`Storage`] bandwidth throttle (the paper's Table-1 NVMe figure when
+//!   the store is unthrottled — memory is never the bottleneck in
+//!   production, so an infinite default would mislead the controller).
+//!
+//! The controller minimizes total save seconds; payload bytes double as
+//! the storage-footprint tiebreak.
+
+use std::collections::HashMap;
+
+use crate::compress::{bitmask, cluster_quant, coo, prune, CodecId};
+use crate::engine::Storage;
+use crate::tensor::{HostTensor, XorShiftRng};
+
+use super::probe::TensorProbe;
+
+/// Write bandwidth assumed when the storage backend is unthrottled —
+/// the paper's Table-1 NVMe M.2 figure (3500 MB/s).
+pub const DEFAULT_WRITE_BPS: f64 = 3500e6;
+
+/// Per-codec sustained encode throughput in raw bytes/sec.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    encode_bps: HashMap<CodecId, f64>,
+}
+
+impl Calibration {
+    /// Conservative single-core constants for a host this class; good
+    /// enough for codec *ordering*, which is all the controller needs.
+    /// Use [`Calibration::measure`] when absolute predictions matter.
+    pub fn default_host() -> Self {
+        let mut t = HashMap::new();
+        t.insert(CodecId::Raw, 12e9); // memcpy
+        t.insert(CodecId::BitmaskPacked, 5e9); // u128 compare hot path
+        t.insert(CodecId::BitmaskNaive, 3e9);
+        t.insert(CodecId::CooU16, 2e9);
+        t.insert(CodecId::CooU32, 2e9);
+        t.insert(CodecId::ClusterQuant, 0.9e9);
+        t.insert(CodecId::NaiveQuant8, 1.5e9);
+        t.insert(CodecId::BlockQuant8, 1.2e9);
+        t.insert(CodecId::Huffman, 0.25e9);
+        t.insert(CodecId::ByteGroupZstd, 0.3e9);
+        t.insert(CodecId::Prune, 0.8e9);
+        Self { encode_bps: t }
+    }
+
+    /// Micro-calibrate the codecs the adaptive controller actually
+    /// chooses between, on synthetic data of `sample_elems` elements.
+    /// One warmup + best-of-three timed runs each (a single scheduler
+    /// preemption must not mis-order the throughput table — downstream,
+    /// `bench_adaptive` hard-asserts on comparisons built from it).
+    pub fn measure(sample_elems: usize) -> Self {
+        let mut cal = Self::default_host();
+        let n = sample_elems.max(1 << 12);
+        let mut rng = XorShiftRng::new(0xCA11);
+        let base_vals = rng.normal_vec(n, 0.0, 0.02);
+        let base = HostTensor::from_f32_as_f16(&[n], &base_vals).unwrap();
+        let mut curr = base.clone();
+        {
+            let bytes = curr.bytes_mut();
+            for i in rng.choose_indices(n, n / 10) {
+                bytes[2 * i] ^= 1;
+            }
+        }
+        fn best_of_three(raw: usize, f: &mut dyn FnMut()) -> f64 {
+            f(); // warmup
+            let mut best = f64::INFINITY;
+            for _ in 0..3 {
+                let t0 = std::time::Instant::now();
+                f();
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            raw as f64 / best.max(1e-9)
+        }
+        let raw = n * 2;
+        let mut time = |f: &mut dyn FnMut()| best_of_three(raw, f);
+        let bps = time(&mut || {
+            std::hint::black_box(base.bytes().to_vec());
+        });
+        cal.encode_bps.insert(CodecId::Raw, bps);
+        let bps = time(&mut || {
+            std::hint::black_box(bitmask::encode_packed(base.bytes(), curr.bytes(), 2).unwrap());
+        });
+        cal.encode_bps.insert(CodecId::BitmaskPacked, bps);
+        let bps = time(&mut || {
+            std::hint::black_box(bitmask::encode_naive(base.bytes(), curr.bytes(), 2).unwrap());
+        });
+        cal.encode_bps.insert(CodecId::BitmaskNaive, bps);
+        let bps = time(&mut || {
+            std::hint::black_box(
+                coo::encode(base.bytes(), curr.bytes(), 2, coo::IndexWidth::U16).unwrap(),
+            );
+        });
+        cal.encode_bps.insert(CodecId::CooU16, bps);
+        let bps = time(&mut || {
+            std::hint::black_box(
+                coo::encode(base.bytes(), curr.bytes(), 2, coo::IndexWidth::U32).unwrap(),
+            );
+        });
+        cal.encode_bps.insert(CodecId::CooU32, bps);
+
+        let opt_vals = rng.normal_vec(n, 0.0, 1e-3);
+        let opt = HostTensor::from_f32(&[n], &opt_vals).unwrap();
+        let raw = n * 4;
+        let mut time = |f: &mut dyn FnMut()| best_of_three(raw, f);
+        let bps = time(&mut || {
+            std::hint::black_box(
+                cluster_quant::encode(&opt, cluster_quant::DEFAULT_CLUSTERS).unwrap(),
+            );
+        });
+        cal.encode_bps.insert(CodecId::ClusterQuant, bps);
+        cal
+    }
+
+    pub fn encode_bps(&self, codec: CodecId) -> f64 {
+        self.encode_bps.get(&codec).copied().unwrap_or(1e9)
+    }
+
+    /// Override one codec's throughput (tests, external calibration).
+    pub fn set(&mut self, codec: CodecId, bps: f64) {
+        self.encode_bps.insert(codec, bps);
+    }
+}
+
+/// Predicted cost of compressing one tensor with one codec.
+#[derive(Clone, Copy, Debug)]
+pub struct CostEstimate {
+    pub codec: CodecId,
+    /// Predicted payload bytes.
+    pub bytes: usize,
+    pub encode_secs: f64,
+    pub write_secs: f64,
+}
+
+impl CostEstimate {
+    /// Predicted end-to-end save seconds (encode + persist).
+    pub fn total_secs(&self) -> f64 {
+        self.encode_secs + self.write_secs
+    }
+
+    pub fn ratio(&self, raw_bytes: usize) -> f64 {
+        raw_bytes as f64 / self.bytes.max(1) as f64
+    }
+}
+
+/// The cost model: calibration + effective write bandwidth.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    calibration: Calibration,
+    write_bps: f64,
+}
+
+impl CostModel {
+    pub fn new(calibration: Calibration, write_bps: Option<f64>) -> Self {
+        Self { calibration, write_bps: write_bps.unwrap_or(DEFAULT_WRITE_BPS) }
+    }
+
+    /// Derive the write bandwidth from a storage backend's throttle.
+    pub fn for_storage(storage: &Storage, calibration: Calibration) -> Self {
+        Self::new(calibration, storage.throttle_bps())
+    }
+
+    pub fn write_bps(&self) -> f64 {
+        self.write_bps
+    }
+
+    pub fn calibration(&self) -> &Calibration {
+        &self.calibration
+    }
+
+    /// Predicted payload bytes for `codec` on the probed tensor.
+    pub fn predicted_bytes(&self, codec: CodecId, p: &TensorProbe) -> usize {
+        let n = p.elems;
+        let es = p.elem_size;
+        let changed = p.estimated_changed();
+        match codec {
+            CodecId::Raw => n * es,
+            CodecId::BitmaskPacked => bitmask::packed_size(n, changed, es),
+            CodecId::BitmaskNaive => bitmask::naive_size(n, changed, es),
+            CodecId::CooU16 => coo::u16_size(n, changed, es),
+            CodecId::CooU32 => coo::u32_size(n, changed, es),
+            CodecId::ClusterQuant => {
+                cluster_quant::analytic_size(n, cluster_quant::DEFAULT_CLUSTERS)
+            }
+            CodecId::NaiveQuant8 => 16 + n,
+            CodecId::BlockQuant8 => 24 + n + 8 * n.div_ceil(2048),
+            // entropy coders approach the sampled byte entropy plus table
+            // overhead; byte grouping typically shaves a little more
+            CodecId::Huffman => 1024 + ((n * es) as f64 * p.byte_entropy / 8.0).ceil() as usize,
+            CodecId::ByteGroupZstd => {
+                256 + ((n * es) as f64 * p.byte_entropy / 8.0 * 0.95).ceil() as usize
+            }
+            CodecId::Prune => {
+                16 + n.div_ceil(8) + 8 + ((n as f64) * prune::DEFAULT_KEEP).ceil() as usize
+            }
+        }
+    }
+
+    /// Full cost estimate for `codec` on the probed tensor.
+    pub fn estimate(&self, codec: CodecId, p: &TensorProbe) -> CostEstimate {
+        let bytes = self.predicted_bytes(codec, p);
+        CostEstimate {
+            codec,
+            bytes,
+            encode_secs: p.raw_bytes() as f64 / self.calibration.encode_bps(codec),
+            write_secs: bytes as f64 / self.write_bps,
+        }
+    }
+
+    /// Cheapest candidate by predicted total save time (payload bytes as
+    /// the tiebreak). Panics on an empty candidate list.
+    pub fn best(&self, candidates: &[CodecId], p: &TensorProbe) -> CostEstimate {
+        assert!(!candidates.is_empty(), "cost model needs at least one candidate");
+        let mut best: Option<CostEstimate> = None;
+        for &c in candidates {
+            let e = self.estimate(c, p);
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    e.total_secs() < b.total_secs()
+                        || (e.total_secs() == b.total_secs() && e.bytes < b.bytes)
+                }
+            };
+            if better {
+                best = Some(e);
+            }
+        }
+        best.unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapt::probe::{probe_tensor, ProbeConfig};
+    use crate::compress::{compress_delta, CompressedTensor};
+    use crate::tensor::StateKind;
+
+    fn exact_probe(base: &HostTensor, curr: &HostTensor) -> TensorProbe {
+        // sample every element so density (hence size prediction) is exact
+        let cfg = ProbeConfig { max_samples: usize::MAX, seed: 0 };
+        probe_tensor("t", StateKind::ModelState, curr, Some(base), &cfg)
+    }
+
+    fn perturbed_pair(n: usize, changed: usize) -> (HostTensor, HostTensor) {
+        let mut rng = XorShiftRng::new(42);
+        let vals = rng.normal_vec(n, 0.0, 0.02);
+        let base = HostTensor::from_f32_as_f16(&[n], &vals).unwrap();
+        let mut curr = base.clone();
+        let bytes = curr.bytes_mut();
+        for i in rng.choose_indices(n, changed) {
+            bytes[2 * i] ^= 0x5a;
+        }
+        (base, curr)
+    }
+
+    #[test]
+    fn sparse_size_predictions_match_encoders_exactly() {
+        let (base, curr) = perturbed_pair(10_000, 1500);
+        let p = exact_probe(&base, &curr);
+        let m = CostModel::new(Calibration::default_host(), None);
+        for codec in [CodecId::BitmaskPacked, CodecId::BitmaskNaive, CodecId::CooU16] {
+            let c: CompressedTensor = compress_delta(codec, &base, &curr).unwrap();
+            assert_eq!(m.predicted_bytes(codec, &p), c.payload.len(), "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn best_prefers_sparse_when_little_changed_raw_when_everything_did() {
+        let m = CostModel::new(Calibration::default_host(), None);
+        let candidates = [
+            CodecId::Raw,
+            CodecId::BitmaskPacked,
+            CodecId::BitmaskNaive,
+            CodecId::CooU16,
+        ];
+        let (base, curr) = perturbed_pair(50_000, 1000); // 2% changed
+        let sparse = m.best(&candidates, &exact_probe(&base, &curr));
+        assert_eq!(sparse.codec, CodecId::BitmaskPacked, "2% changed");
+        let (base, curr) = perturbed_pair(50_000, 47_500); // 95% changed
+        let dense = m.best(&candidates, &exact_probe(&base, &curr));
+        assert_eq!(dense.codec, CodecId::Raw, "95% changed");
+    }
+
+    #[test]
+    fn slower_storage_shifts_the_choice_toward_smaller_payloads() {
+        // at 95% density raw wins on NVMe (encode-dominated), but on a
+        // 100 MB/s NFS-class link the smaller packed payload wins
+        let (base, curr) = perturbed_pair(50_000, 42_000); // 84% changed
+        let p = exact_probe(&base, &curr);
+        let candidates = [CodecId::Raw, CodecId::BitmaskPacked];
+        let nvme = CostModel::new(Calibration::default_host(), Some(3500e6));
+        assert_eq!(nvme.best(&candidates, &p).codec, CodecId::Raw);
+        let nfs = CostModel::new(Calibration::default_host(), Some(100e6));
+        assert_eq!(nfs.best(&candidates, &p).codec, CodecId::BitmaskPacked);
+    }
+
+    #[test]
+    fn estimate_components_are_consistent() {
+        let (base, curr) = perturbed_pair(10_000, 500);
+        let p = exact_probe(&base, &curr);
+        let m = CostModel::new(Calibration::default_host(), Some(1e9));
+        let e = m.estimate(CodecId::BitmaskPacked, &p);
+        assert!(e.total_secs() > 0.0);
+        assert!((e.total_secs() - (e.encode_secs + e.write_secs)).abs() < 1e-15);
+        assert!(e.ratio(p.raw_bytes()) > 1.0);
+        assert_eq!(e.write_secs, e.bytes as f64 / 1e9);
+    }
+
+    #[test]
+    fn measured_calibration_is_sane() {
+        let cal = Calibration::measure(1 << 14);
+        for codec in [CodecId::Raw, CodecId::BitmaskPacked, CodecId::ClusterQuant] {
+            let bps = cal.encode_bps(codec);
+            assert!(bps > 1e6, "{codec:?} {bps}");
+            assert!(bps.is_finite());
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Adaptive codec selection — the closed feedback loop behind the paper's
+//! "adapts dynamically to different training stages and model
+//! architectures" claim.
+//!
+//! * [`probe`] — cheap sampled per-tensor statistics (delta density,
+//!   value range, byte entropy) off the live state dict.
+//! * [`cost`] — a storage cost model: calibrated codec throughput + the
+//!   [`crate::engine::Storage`] bandwidth → predicted end-to-end save
+//!   time and payload size per candidate codec.
+//! * [`stage`] — early/mid/late classification from a sliding window of
+//!   delta density and trainer-reported loss.
+//! * [`policy`] — the [`AdaptivePolicy`] controller that turns all of the
+//!   above into a per-tensor [`CheckpointPlan`] each save, with
+//!   hysteresis so codec choice doesn't thrash.
+//!
+//! The engine talks to any of this only through the [`PolicySource`]
+//! trait; a static [`Policy`] is the trivial implementation
+//! ([`StaticPolicySource`]), so existing configurations behave exactly as
+//! before. Decisions are self-describing on disk: every entry's codec tag
+//! is in the checkpoint container, so decode needs no side channel.
+
+pub mod cost;
+pub mod policy;
+pub mod probe;
+pub mod sim;
+pub mod stage;
+
+pub use cost::{Calibration, CostEstimate, CostModel, DEFAULT_WRITE_BPS};
+pub use policy::{AdaptiveConfig, AdaptivePolicy, DecisionRecord, SaveDecisionSummary};
+pub use probe::{mean_model_density, probe_state_dict, probe_tensor, ProbeConfig, TensorProbe};
+pub use sim::{default_stages, simulate_trajectory, SimSave, SimStage};
+pub use stage::{StageConfig, StageDetector, TelemetrySample, TrainingStage};
+
+use crate::compress::delta::{CheckpointPlan, Policy};
+use crate::tensor::StateDict;
+
+/// Everything a policy source may inspect when planning one save.
+pub struct SaveContext<'a> {
+    pub iteration: u64,
+    /// Whether the engine is writing a full base checkpoint (no delta
+    /// codecs possible — `base` is `None`).
+    pub is_base: bool,
+    pub sd: &'a StateDict,
+    pub base: Option<&'a StateDict>,
+}
+
+/// What actually happened, reported back after the save's blocking phase.
+#[derive(Clone, Debug)]
+pub struct SaveOutcome {
+    pub iteration: u64,
+    pub is_base: bool,
+    pub raw_bytes: usize,
+    /// Compressed *payload* bytes — what the cost model predicts —
+    /// excluding container framing (names, headers, CRC).
+    pub compressed_bytes: usize,
+    pub blocking: std::time::Duration,
+}
+
+/// Source of per-save compression plans. Implemented trivially by
+/// [`StaticPolicySource`] and adaptively by [`AdaptivePolicy`].
+pub trait PolicySource: Send {
+    /// Plan the save. Runs on the save critical path — implementations
+    /// must stay cheap (sampling, not full scans).
+    fn plan(&mut self, ctx: &SaveContext<'_>) -> CheckpointPlan;
+
+    /// Training-loop telemetry (one loss sample per step), for stage
+    /// detection. Default: ignored.
+    fn telemetry(&mut self, _iteration: u64, _loss: f32) {}
+
+    /// Post-save feedback (actual sizes and blocking time). Default:
+    /// ignored.
+    fn observe(&mut self, _outcome: &SaveOutcome) {}
+
+    /// Human-readable description for logs and reports.
+    fn describe(&self) -> String;
+}
+
+/// The trivial policy source: the same checkpoint-wide [`Policy`] every
+/// save — exactly the pre-adaptive engine behaviour.
+pub struct StaticPolicySource {
+    policy: Policy,
+}
+
+impl StaticPolicySource {
+    pub fn new(policy: Policy) -> Self {
+        Self { policy }
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+}
+
+impl PolicySource for StaticPolicySource {
+    fn plan(&mut self, _ctx: &SaveContext<'_>) -> CheckpointPlan {
+        CheckpointPlan::uniform(self.policy)
+    }
+
+    fn describe(&self) -> String {
+        format!("static({:?}/{:?})", self.policy.model, self.policy.optimizer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::delta::TensorDirective;
+
+    #[test]
+    fn static_source_emits_uniform_plans() {
+        let mut src = StaticPolicySource::new(Policy::lossless());
+        let sd = StateDict::synthetic_gpt(1 << 12, 1);
+        let ctx = SaveContext { iteration: 0, is_base: true, sd: &sd, base: None };
+        let plan = src.plan(&ctx);
+        assert_eq!(plan.overrides(), 0);
+        assert_eq!(plan.directive("layers.0.weight"), TensorDirective::Inherit);
+        assert_eq!(plan.default_policy().model, Policy::lossless().model);
+        assert!(src.describe().starts_with("static("));
+    }
+}

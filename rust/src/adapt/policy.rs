@@ -1,0 +1,599 @@
+//! The adaptive policy controller: probe → stage → cost → per-tensor plan.
+//!
+//! Closes the feedback loop the paper's abstract promises: each save, the
+//! controller samples the live state dict ([`super::probe`]), updates the
+//! stage detector ([`super::stage`]), asks the cost model
+//! ([`super::cost`]) for the cheapest codec per tensor, and emits a
+//! [`CheckpointPlan`]:
+//!
+//! * **model states** race the sparse delta codecs against raw on
+//!   predicted end-to-end save time (early: dense change → raw wins;
+//!   late: sparse change → packed bitmask wins), with *hysteresis* — an
+//!   incumbent codec is only unseated by a challenger that predicts at
+//!   least [`AdaptiveConfig::hysteresis`] relative improvement, so noisy
+//!   density estimates cannot thrash the choice save-over-save;
+//! * **optimizer states** follow the stage: cluster quantization while
+//!   the run is early/mid (the paper's §3.4 default, well inside its
+//!   precision budget), but near convergence the fp32 master weights go
+//!   back to raw — the checkpoint that resumes final convergence should
+//!   not eat quantization noise — while the Adam moments stay quantized.
+//!   Tensors with non-finite values are never quantized (no 8-bit codec
+//!   represents ±inf/NaN), nor tensors whose sampled value range
+//!   overflows f32 (the quantizers' `max − min` scale would be inf), nor
+//!   tiny tensors (header overhead and unstable statistics).
+//!
+//! Every decision lands in a [`DecisionRecord`] log (the `adapt-report`
+//! CLI renders it). The *chosen codec of every entry is written into the
+//! checkpoint container*, so decode needs no side channel.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::compress::delta::{CheckpointPlan, Policy, TensorDirective};
+use crate::compress::CodecId;
+use crate::tensor::StateKind;
+
+use super::cost::{Calibration, CostModel};
+use super::probe::{self, ProbeConfig, TensorProbe};
+use super::stage::{StageConfig, StageDetector, TelemetrySample, TrainingStage};
+use super::{PolicySource, SaveContext, SaveOutcome};
+
+/// Controller configuration.
+#[derive(Clone, Debug)]
+pub struct AdaptiveConfig {
+    pub probe: ProbeConfig,
+    pub stage: StageConfig,
+    /// Relative predicted-cost improvement a challenger codec must show
+    /// before it unseats the incumbent for a tensor (anti-thrash).
+    pub hysteresis: f64,
+    /// Optimizer tensors smaller than this stay raw.
+    pub min_quant_elems: usize,
+    /// Cap on retained decision records (oldest dropped first).
+    pub max_history: usize,
+    /// Policy for tensors the controller has no opinion on.
+    pub fallback: Policy,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        Self {
+            probe: ProbeConfig::default(),
+            stage: StageConfig::default(),
+            hysteresis: 0.15,
+            min_quant_elems: 1024,
+            max_history: 100_000,
+            fallback: Policy::bitsnap(),
+        }
+    }
+}
+
+/// One per-tensor decision, as logged every save.
+#[derive(Clone, Debug)]
+pub struct DecisionRecord {
+    pub iteration: u64,
+    pub stage: TrainingStage,
+    pub name: String,
+    pub kind: StateKind,
+    pub codec: CodecId,
+    pub predicted_bytes: usize,
+    pub predicted_secs: f64,
+    pub raw_bytes: usize,
+    /// Whether this choice replaced a different incumbent codec.
+    pub switched: bool,
+}
+
+/// Per-save aggregate of the decision log.
+#[derive(Clone, Debug)]
+pub struct SaveDecisionSummary {
+    pub iteration: u64,
+    pub stage: TrainingStage,
+    /// Codec → tensor count over model states.
+    pub model_codecs: Vec<(CodecId, usize)>,
+    /// Codec → tensor count over optimizer states.
+    pub optimizer_codecs: Vec<(CodecId, usize)>,
+    pub predicted_bytes: usize,
+    pub raw_bytes: usize,
+    pub predicted_secs: f64,
+    /// Actual container payload bytes, once the engine reported back.
+    pub actual_bytes: Option<usize>,
+}
+
+impl SaveDecisionSummary {
+    pub fn predicted_ratio(&self) -> f64 {
+        self.raw_bytes as f64 / self.predicted_bytes.max(1) as f64
+    }
+}
+
+/// The adaptive [`PolicySource`]. See module docs.
+pub struct AdaptivePolicy {
+    cfg: AdaptiveConfig,
+    cost: CostModel,
+    detector: StageDetector,
+    incumbent: HashMap<String, CodecId>,
+    /// Master weights deliberately taken lossless by the Late-stage rule
+    /// (and only those — not tensors the quantizable guard forced raw),
+    /// kept lossless through Mid/Late flapping.
+    sticky_lossless: HashSet<String>,
+    decisions: Vec<DecisionRecord>,
+    outcomes: HashMap<u64, usize>,
+}
+
+impl AdaptivePolicy {
+    pub fn new(cfg: AdaptiveConfig, cost: CostModel) -> Self {
+        let detector = StageDetector::new(cfg.stage);
+        Self {
+            cfg,
+            cost,
+            detector,
+            incumbent: HashMap::new(),
+            sticky_lossless: HashSet::new(),
+            decisions: Vec::new(),
+            outcomes: HashMap::new(),
+        }
+    }
+
+    /// Controller with default config, constant calibration, and the
+    /// paper's NVMe write bandwidth.
+    pub fn default_host() -> Self {
+        Self::new(AdaptiveConfig::default(), CostModel::new(Calibration::default_host(), None))
+    }
+
+    pub fn stage(&self) -> TrainingStage {
+        self.detector.stage()
+    }
+
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost
+    }
+
+    /// The full decision log, oldest first.
+    pub fn decisions(&self) -> &[DecisionRecord] {
+        &self.decisions
+    }
+
+    /// Aggregate the decision log per save.
+    pub fn summaries(&self) -> Vec<SaveDecisionSummary> {
+        let mut out: Vec<SaveDecisionSummary> = Vec::new();
+        for d in &self.decisions {
+            if out.last().map(|s| s.iteration) != Some(d.iteration) {
+                out.push(SaveDecisionSummary {
+                    iteration: d.iteration,
+                    stage: d.stage,
+                    model_codecs: Vec::new(),
+                    optimizer_codecs: Vec::new(),
+                    predicted_bytes: 0,
+                    raw_bytes: 0,
+                    predicted_secs: 0.0,
+                    actual_bytes: self.outcomes.get(&d.iteration).copied(),
+                });
+            }
+            let s = out.last_mut().unwrap();
+            s.predicted_bytes += d.predicted_bytes;
+            s.raw_bytes += d.raw_bytes;
+            s.predicted_secs += d.predicted_secs;
+            let bucket = if d.kind == StateKind::ModelState {
+                &mut s.model_codecs
+            } else {
+                &mut s.optimizer_codecs
+            };
+            match bucket.iter_mut().find(|(c, _)| *c == d.codec) {
+                Some((_, count)) => *count += 1,
+                None => bucket.push((d.codec, 1)),
+            }
+        }
+        out
+    }
+
+    fn decide_model(&mut self, p: &TensorProbe, has_base: bool) -> (CodecId, bool) {
+        if !has_base || p.delta_density.is_none() {
+            // base checkpoint (or no usable base tensor): dense is the only
+            // option; leave the incumbent alone so the next delta save
+            // still competes against the last delta-phase choice
+            return (CodecId::Raw, false);
+        }
+        let candidates = [
+            CodecId::BitmaskPacked,
+            CodecId::BitmaskNaive,
+            CodecId::CooU16,
+            CodecId::CooU32,
+            CodecId::Raw,
+        ];
+        let best = self.cost.best(&candidates, p);
+        let chosen = match self.incumbent.get(&p.name).copied() {
+            Some(inc) if candidates.contains(&inc) => {
+                let inc_est = self.cost.estimate(inc, p);
+                if best.total_secs() < inc_est.total_secs() * (1.0 - self.cfg.hysteresis) {
+                    best.codec
+                } else {
+                    inc
+                }
+            }
+            _ => best.codec,
+        };
+        let switched = self
+            .incumbent
+            .insert(p.name.clone(), chosen)
+            .map(|prev| prev != chosen)
+            .unwrap_or(false);
+        (chosen, switched)
+    }
+
+    fn decide_optimizer(&mut self, p: &TensorProbe, stage: TrainingStage) -> (CodecId, bool) {
+        // the sampled value range guards the quantizers' scale arithmetic:
+        // `max - min` overflowing f32 turns every scale into inf and the
+        // dequantized tensor into NaN — keep such tensors raw
+        let range_ok = (p.value_max as f64 - p.value_min as f64) < f32::MAX as f64;
+        let quantizable = !p.has_non_finite && range_ok && p.elems >= self.cfg.min_quant_elems;
+        let chosen = match (stage, p.kind) {
+            // guard-forced raw does NOT latch — a transient bad probe must
+            // not disable quantization for the rest of the run
+            _ if !quantizable => CodecId::Raw,
+            // near convergence, master weights carry the resume precision
+            (TrainingStage::Late, StateKind::MasterWeight) => {
+                self.sticky_lossless.insert(p.name.clone());
+                CodecId::Raw
+            }
+            // sticky on the way back: a master weight deliberately taken
+            // lossless stays lossless through Mid/Late flapping near the
+            // stage thresholds — only a genuine return to the early
+            // high-churn regime re-quantizes it (anti-thrash, same intent
+            // as the model-codec hysteresis)
+            (TrainingStage::Mid, StateKind::MasterWeight)
+                if self.sticky_lossless.contains(&p.name) =>
+            {
+                CodecId::Raw
+            }
+            _ => {
+                self.sticky_lossless.remove(&p.name);
+                CodecId::ClusterQuant
+            }
+        };
+        let switched = self
+            .incumbent
+            .insert(p.name.clone(), chosen)
+            .map(|prev| prev != chosen)
+            .unwrap_or(false);
+        (chosen, switched)
+    }
+
+    fn record_decision(
+        &mut self,
+        iteration: u64,
+        stage: TrainingStage,
+        p: &TensorProbe,
+        codec: CodecId,
+        switched: bool,
+    ) {
+        let est = self.cost.estimate(codec, p);
+        self.decisions.push(DecisionRecord {
+            iteration,
+            stage,
+            name: p.name.clone(),
+            kind: p.kind,
+            codec,
+            predicted_bytes: est.bytes,
+            predicted_secs: est.total_secs(),
+            raw_bytes: p.raw_bytes(),
+            switched,
+        });
+        if self.decisions.len() > self.cfg.max_history {
+            let excess = self.decisions.len() - self.cfg.max_history;
+            self.decisions.drain(..excess);
+        }
+    }
+}
+
+impl PolicySource for AdaptivePolicy {
+    fn plan(&mut self, ctx: &SaveContext<'_>) -> CheckpointPlan {
+        let probes = probe::probe_state_dict(ctx.sd, ctx.base, &self.cfg.probe);
+        self.detector.record(TelemetrySample {
+            iteration: ctx.iteration,
+            loss: None,
+            model_delta_density: probe::mean_model_density(&probes),
+        });
+        let stage = self.detector.stage();
+        let mut plan = CheckpointPlan::uniform(self.cfg.fallback);
+        for p in &probes {
+            let (codec, switched) = match p.kind {
+                StateKind::ModelState => self.decide_model(p, ctx.base.is_some()),
+                k if k.is_optimizer() => self.decide_optimizer(p, stage),
+                _ => (CodecId::Raw, false),
+            };
+            let directive = match codec {
+                CodecId::Raw => TensorDirective::Raw,
+                c if c.is_delta() => TensorDirective::Delta(c),
+                c => TensorDirective::Quantize(c),
+            };
+            plan.set(p.name.clone(), directive);
+            self.record_decision(ctx.iteration, stage, p, codec, switched);
+        }
+        plan
+    }
+
+    fn telemetry(&mut self, iteration: u64, loss: f32) {
+        self.detector.record(TelemetrySample {
+            iteration,
+            loss: Some(loss),
+            model_delta_density: None,
+        });
+    }
+
+    fn observe(&mut self, outcome: &SaveOutcome) {
+        self.outcomes.insert(outcome.iteration, outcome.compressed_bytes);
+        if self.outcomes.len() > self.cfg.max_history {
+            // bounded memory; exact eviction order does not matter here
+            let min = self.outcomes.keys().copied().min().unwrap();
+            self.outcomes.remove(&min);
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "adaptive(stage={}, write={:.2}GB/s, hysteresis={:.0}%)",
+            self.detector.stage().as_str(),
+            self.cost.write_bps() / 1e9,
+            self.cfg.hysteresis * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::delta::compress_state_dict_planned;
+    use crate::tensor::StateDict;
+
+    fn ctx<'a>(
+        iteration: u64,
+        sd: &'a StateDict,
+        base: Option<&'a StateDict>,
+    ) -> SaveContext<'a> {
+        SaveContext { iteration, is_base: base.is_none(), sd, base }
+    }
+
+    fn plan_codec(policy: &mut AdaptivePolicy, c: &SaveContext<'_>, name: &str) -> CodecId {
+        let plan = policy.plan(c);
+        // materialize via the compressor so the directive→codec mapping is
+        // the one checkpoints will actually see
+        let (ckpt, _) =
+            compress_state_dict_planned(c.sd, c.base, &plan, c.iteration, 0).unwrap();
+        ckpt.entries.iter().find(|e| e.name == name).unwrap().compressed.codec
+    }
+
+    #[test]
+    fn dense_change_picks_raw_sparse_change_picks_bitmask() {
+        let base = StateDict::synthetic_gpt(1 << 16, 1);
+        let mut policy = AdaptivePolicy::default_host();
+        let mut early = base.clone();
+        early.perturb_model_states(0.9, 2);
+        let c = ctx(10, &early, Some(&base));
+        assert_eq!(plan_codec(&mut policy, &c, "layers.0.weight"), CodecId::Raw);
+
+        let mut policy = AdaptivePolicy::default_host();
+        let mut late = base.clone();
+        late.perturb_model_states(0.02, 3);
+        let c = ctx(10, &late, Some(&base));
+        assert_eq!(plan_codec(&mut policy, &c, "layers.0.weight"), CodecId::BitmaskPacked);
+    }
+
+    #[test]
+    fn hysteresis_keeps_incumbent_near_the_crossover() {
+        // with default calibration the raw/packed crossover sits near 53%
+        // density; 50% predicts a ~2% win for packed — far below the 15%
+        // hysteresis, so the incumbent (raw) must survive
+        let base = StateDict::synthetic_gpt(1 << 16, 4);
+        let mut policy = AdaptivePolicy::default_host();
+        let mut sd = base.clone();
+        sd.perturb_model_states(0.60, 5);
+        let c = ctx(10, &sd, Some(&base));
+        assert_eq!(plan_codec(&mut policy, &c, "layers.0.weight"), CodecId::Raw);
+        let mut sd = base.clone();
+        sd.perturb_model_states(0.50, 6);
+        let c = ctx(20, &sd, Some(&base));
+        assert_eq!(plan_codec(&mut policy, &c, "layers.0.weight"), CodecId::Raw);
+        assert!(policy.decisions().iter().all(|d| !d.switched));
+        // a decisive drop in density does switch
+        let mut sd = base.clone();
+        sd.perturb_model_states(0.03, 7);
+        let c = ctx(30, &sd, Some(&base));
+        assert_eq!(plan_codec(&mut policy, &c, "layers.0.weight"), CodecId::BitmaskPacked);
+        let last = policy.decisions().last().unwrap();
+        assert!(policy
+            .decisions()
+            .iter()
+            .any(|d| d.iteration == 30 && d.kind == StateKind::ModelState && d.switched));
+        assert_eq!(last.iteration, 30);
+    }
+
+    #[test]
+    fn late_stage_keeps_master_weights_raw_but_quantizes_moments() {
+        let base = StateDict::synthetic_gpt(1 << 16, 8);
+        let mut policy = AdaptivePolicy::default_host();
+        // drive the detector late: sparse deltas + plateaued loss
+        for i in 0..8u64 {
+            policy.telemetry(i, 2.0);
+        }
+        let mut sd = base.clone();
+        sd.perturb_model_states(0.02, 9);
+        let c = ctx(10, &sd, Some(&base));
+        let plan = policy.plan(&c);
+        assert_eq!(policy.stage(), TrainingStage::Late);
+        assert_eq!(
+            plan.directive("optimizer.0.master"),
+            TensorDirective::Raw,
+            "master weights must stay lossless near convergence"
+        );
+        assert_eq!(
+            plan.directive("optimizer.0.exp_avg"),
+            TensorDirective::Quantize(CodecId::ClusterQuant)
+        );
+    }
+
+    #[test]
+    fn master_weight_choice_does_not_thrash_across_mid_late_flapping() {
+        let base = StateDict::synthetic_gpt(1 << 16, 21);
+        // short window so three saves can traverse late -> mid -> early
+        let cfg = AdaptiveConfig {
+            stage: StageConfig { window: 2, ..StageConfig::default() },
+            ..AdaptiveConfig::default()
+        };
+        let mut policy =
+            AdaptivePolicy::new(cfg, CostModel::new(Calibration::default_host(), None));
+        for i in 0..8u64 {
+            policy.telemetry(i, 2.0); // plateaued
+        }
+        // Late (sparse deltas): master goes lossless
+        let mut sd = base.clone();
+        sd.perturb_model_states(0.02, 22);
+        let plan = policy.plan(&ctx(10, &sd, Some(&base)));
+        assert_eq!(policy.stage(), TrainingStage::Late);
+        assert_eq!(plan.directive("optimizer.0.master"), TensorDirective::Raw);
+        // density flaps just above late_density -> Mid; master must stay raw
+        let mut sd = base.clone();
+        sd.perturb_model_states(0.15, 23);
+        let plan = policy.plan(&ctx(20, &sd, Some(&base)));
+        assert_eq!(policy.stage(), TrainingStage::Mid);
+        assert_eq!(
+            plan.directive("optimizer.0.master"),
+            TensorDirective::Raw,
+            "Mid/Late flapping must not re-quantize master weights"
+        );
+        // a genuine return to the early regime re-quantizes
+        let mut sd = base.clone();
+        sd.perturb_model_states(0.95, 24);
+        let plan = policy.plan(&ctx(30, &sd, Some(&base)));
+        assert_eq!(policy.stage(), TrainingStage::Early);
+        assert_eq!(
+            plan.directive("optimizer.0.master"),
+            TensorDirective::Quantize(CodecId::ClusterQuant)
+        );
+    }
+
+    #[test]
+    fn guard_forced_raw_does_not_latch() {
+        // a transient inf in a Mid-stage master weight forces one raw
+        // save, but once the values are finite again quantization resumes
+        let base = StateDict::synthetic_gpt(1 << 16, 25);
+        let mut policy = AdaptivePolicy::default_host();
+        for i in 0..8u64 {
+            policy.telemetry(i, 2.0);
+        }
+        let mut poisoned = base.clone();
+        poisoned.perturb_model_states(0.15, 26); // Mid-stage churn
+        for e in poisoned.entries_mut() {
+            if e.name == "optimizer.0.master" {
+                let inf = f32::INFINITY.to_le_bytes();
+                for i in 0..64 {
+                    e.tensor.bytes_mut()[4 * i..4 * i + 4].copy_from_slice(&inf);
+                }
+            }
+        }
+        let plan = policy.plan(&ctx(10, &poisoned, Some(&base)));
+        assert_eq!(policy.stage(), TrainingStage::Mid);
+        assert_eq!(plan.directive("optimizer.0.master"), TensorDirective::Raw);
+        // next save: finite again, still Mid -> quantization resumes
+        let mut clean = base.clone();
+        clean.perturb_model_states(0.15, 27);
+        let plan = policy.plan(&ctx(20, &clean, Some(&base)));
+        assert_eq!(policy.stage(), TrainingStage::Mid);
+        assert_eq!(
+            plan.directive("optimizer.0.master"),
+            TensorDirective::Quantize(CodecId::ClusterQuant),
+            "guard-forced raw must not disable quantization permanently"
+        );
+    }
+
+    #[test]
+    fn early_stage_quantizes_all_optimizer_states() {
+        let base = StateDict::synthetic_gpt(1 << 16, 10);
+        let mut policy = AdaptivePolicy::default_host();
+        let mut sd = base.clone();
+        sd.perturb_model_states(0.9, 11);
+        let c = ctx(10, &sd, Some(&base));
+        let plan = policy.plan(&c);
+        assert_eq!(policy.stage(), TrainingStage::Early);
+        for name in ["optimizer.0.master", "optimizer.0.exp_avg", "optimizer.0.exp_avg_sq"] {
+            assert_eq!(
+                plan.directive(name),
+                TensorDirective::Quantize(CodecId::ClusterQuant),
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn scale_overflow_range_stays_raw() {
+        // finite values whose range overflows f32 (max - min = inf) would
+        // turn the quantizers' scales into inf; the range guard keeps the
+        // tensor raw
+        let mut sd = StateDict::synthetic_gpt(1 << 14, 20);
+        for e in sd.entries_mut() {
+            if e.name == "optimizer.0.exp_avg" {
+                let n = e.tensor.len();
+                let bytes = e.tensor.bytes_mut();
+                for i in 0..n {
+                    let v = if i % 2 == 0 { 3.0e38f32 } else { -3.0e38f32 };
+                    bytes[4 * i..4 * i + 4].copy_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        let mut policy = AdaptivePolicy::default_host();
+        let c = ctx(0, &sd, None);
+        let plan = policy.plan(&c);
+        assert_eq!(plan.directive("optimizer.0.exp_avg"), TensorDirective::Raw);
+        assert_eq!(
+            plan.directive("optimizer.0.exp_avg_sq"),
+            TensorDirective::Quantize(CodecId::ClusterQuant)
+        );
+    }
+
+    #[test]
+    fn non_finite_optimizer_tensors_stay_raw() {
+        let mut sd = StateDict::synthetic_gpt(1 << 14, 12);
+        // poison a stretch of one Adam moment with inf (wide enough that
+        // the strided probe is guaranteed to sample at least one)
+        for e in sd.entries_mut() {
+            if e.name == "optimizer.0.exp_avg" {
+                let inf = f32::INFINITY.to_le_bytes();
+                for i in 0..64 {
+                    e.tensor.bytes_mut()[4 * i..4 * i + 4].copy_from_slice(&inf);
+                }
+            }
+        }
+        let mut policy = AdaptivePolicy::default_host();
+        let c = ctx(0, &sd, None);
+        let plan = policy.plan(&c);
+        assert_eq!(plan.directive("optimizer.0.exp_avg"), TensorDirective::Raw);
+        assert_eq!(
+            plan.directive("optimizer.0.exp_avg_sq"),
+            TensorDirective::Quantize(CodecId::ClusterQuant)
+        );
+    }
+
+    #[test]
+    fn summaries_aggregate_per_save() {
+        let base = StateDict::synthetic_gpt(1 << 14, 13);
+        let mut policy = AdaptivePolicy::default_host();
+        let c = ctx(0, &base, None);
+        policy.plan(&c);
+        let mut sd = base.clone();
+        sd.perturb_model_states(0.02, 14);
+        let c = ctx(10, &sd, Some(&base));
+        policy.plan(&c);
+        policy.observe(&SaveOutcome {
+            iteration: 10,
+            is_base: false,
+            raw_bytes: sd.total_bytes(),
+            compressed_bytes: 12345,
+            blocking: std::time::Duration::ZERO,
+        });
+        let sums = policy.summaries();
+        assert_eq!(sums.len(), 2);
+        assert_eq!(sums[0].iteration, 0);
+        assert_eq!(sums[1].iteration, 10);
+        assert_eq!(sums[1].actual_bytes, Some(12345));
+        assert!(sums[1].predicted_bytes > 0);
+        assert!(sums[1].raw_bytes > 0);
+        assert!(!sums[1].model_codecs.is_empty());
+        assert!(!sums[1].optimizer_codecs.is_empty());
+    }
+}

@@ -1,0 +1,292 @@
+//! Cheap per-tensor statistics sampled from the live state dict.
+//!
+//! The probe runs on the save critical path, so it never scans a whole
+//! tensor: it visits at most [`ProbeConfig::max_samples`] elements with a
+//! fixed stride (a seed-derived phase avoids always probing offset 0).
+//! From that sample it estimates the three quantities the cost model and
+//! the stage detector consume:
+//!
+//! * **delta density** — fraction of elements whose bytes differ from the
+//!   base checkpoint (drives the sparse-codec size predictions and the
+//!   early/late stage classification),
+//! * **value range** and non-finite flags (a quantizer precision guard:
+//!   ±inf/NaN survive no 8-bit codec losslessly),
+//! * **byte entropy** in bits/byte over the sampled elements (bounds what
+//!   entropy coders could achieve, paper §3.3's Huffman argument).
+
+use std::collections::HashMap;
+
+use crate::tensor::{bf16_to_f32, f16_to_f32, DType, HostTensor, StateDict, StateKind};
+
+/// Probe sampling parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeConfig {
+    /// Upper bound on elements visited per tensor.
+    pub max_samples: usize,
+    /// Seed for the stride phase (keeps repeated probes of an unchanged
+    /// tensor deterministic while decorrelating tensors from each other).
+    pub seed: u64,
+}
+
+impl Default for ProbeConfig {
+    fn default() -> Self {
+        Self { max_samples: 4096, seed: 0x9e37_79b9_7f4a_7c15 }
+    }
+}
+
+/// Sampled statistics for one tensor.
+#[derive(Clone, Debug)]
+pub struct TensorProbe {
+    pub name: String,
+    pub kind: StateKind,
+    /// Total elements in the tensor (not the sample).
+    pub elems: usize,
+    pub elem_size: usize,
+    /// Elements actually visited.
+    pub sampled: usize,
+    /// Sampled elements whose bytes differ from the base (only meaningful
+    /// when `delta_density` is `Some`).
+    pub changed_in_sample: usize,
+    /// Estimated fraction of changed elements vs. the base checkpoint;
+    /// `None` when no compatible base tensor was available.
+    pub delta_density: Option<f64>,
+    /// Min/max over sampled finite values (0.0/0.0 when no float values
+    /// were sampled).
+    pub value_min: f32,
+    pub value_max: f32,
+    /// Shannon entropy of the sampled bytes, bits/byte.
+    pub byte_entropy: f64,
+    /// Whether any sampled value was ±inf or NaN.
+    pub has_non_finite: bool,
+}
+
+impl TensorProbe {
+    /// Dense size of the whole tensor in bytes.
+    pub fn raw_bytes(&self) -> usize {
+        self.elems * self.elem_size
+    }
+
+    /// Estimated changed-element count, scaled up from the sample in
+    /// integer arithmetic (exact when the probe visited every element).
+    /// Rounds up: underestimating density would make the cost model
+    /// promise payloads smaller than the encoder then produces.
+    pub fn estimated_changed(&self) -> usize {
+        if self.delta_density.is_none() || self.sampled == 0 {
+            return self.elems;
+        }
+        (self.changed_in_sample * self.elems).div_ceil(self.sampled)
+    }
+}
+
+fn decode_f32(dtype: DType, le: &[u8]) -> Option<f32> {
+    match dtype {
+        DType::F32 => Some(f32::from_le_bytes([le[0], le[1], le[2], le[3]])),
+        DType::F16 => Some(f16_to_f32(u16::from_le_bytes([le[0], le[1]]))),
+        DType::BF16 => Some(bf16_to_f32(u16::from_le_bytes([le[0], le[1]]))),
+        _ => None,
+    }
+}
+
+/// Probe one tensor (optionally against its base-checkpoint counterpart).
+pub fn probe_tensor(
+    name: &str,
+    kind: StateKind,
+    curr: &HostTensor,
+    base: Option<&HostTensor>,
+    cfg: &ProbeConfig,
+) -> TensorProbe {
+    let es = curr.dtype().size();
+    let n = curr.len();
+    let stride = n.div_ceil(cfg.max_samples.max(1)).max(1);
+    let phase = (cfg.seed as usize) % stride;
+    let curr_bytes = curr.bytes();
+    let base_bytes = base
+        .filter(|b| b.dtype() == curr.dtype() && b.shape() == curr.shape())
+        .map(|b| b.bytes());
+
+    let mut sampled = 0usize;
+    let mut changed = 0usize;
+    let mut freq = [0u64; 256];
+    let mut vmin = f32::INFINITY;
+    let mut vmax = f32::NEG_INFINITY;
+    let mut non_finite = false;
+
+    let mut i = phase;
+    while i < n {
+        let off = i * es;
+        let eb = &curr_bytes[off..off + es];
+        for &b in eb {
+            freq[b as usize] += 1;
+        }
+        if let Some(bb) = base_bytes {
+            if bb[off..off + es] != *eb {
+                changed += 1;
+            }
+        }
+        if let Some(v) = decode_f32(curr.dtype(), eb) {
+            if v.is_finite() {
+                vmin = vmin.min(v);
+                vmax = vmax.max(v);
+            } else {
+                non_finite = true;
+            }
+        }
+        sampled += 1;
+        i += stride;
+    }
+
+    let total_bytes = (sampled * es) as f64;
+    let byte_entropy = if total_bytes > 0.0 {
+        freq.iter()
+            .filter(|&&f| f > 0)
+            .map(|&f| {
+                let p = f as f64 / total_bytes;
+                -p * p.log2()
+            })
+            .sum()
+    } else {
+        0.0
+    };
+    let delta_density = match (base_bytes, sampled) {
+        (Some(_), s) if s > 0 => Some(changed as f64 / s as f64),
+        _ => None,
+    };
+    if !vmin.is_finite() {
+        vmin = 0.0;
+        vmax = 0.0;
+    }
+    TensorProbe {
+        name: name.to_string(),
+        kind,
+        elems: n,
+        elem_size: es,
+        sampled,
+        changed_in_sample: changed,
+        delta_density,
+        value_min: vmin,
+        value_max: vmax,
+        byte_entropy,
+        has_non_finite: non_finite,
+    }
+}
+
+/// Probe every entry of a state dict against the (optional) base dict.
+/// The base is indexed once up front — `StateDict::get` is a linear scan,
+/// and this runs on the save critical path for LLM-scale dicts.
+pub fn probe_state_dict(
+    sd: &StateDict,
+    base: Option<&StateDict>,
+    cfg: &ProbeConfig,
+) -> Vec<TensorProbe> {
+    let base_index: HashMap<&str, &HostTensor> = base
+        .map(|b| b.entries().iter().map(|e| (e.name.as_str(), &e.tensor)).collect())
+        .unwrap_or_default();
+    sd.entries()
+        .iter()
+        .map(|e| {
+            let base_t = base_index.get(e.name.as_str()).copied();
+            probe_tensor(&e.name, e.kind, &e.tensor, base_t, cfg)
+        })
+        .collect()
+}
+
+/// Element-weighted mean delta density over the model-state probes, the
+/// signal the stage detector tracks. `None` while no probe has a base.
+pub fn mean_model_density(probes: &[TensorProbe]) -> Option<f64> {
+    let mut weighted = 0.0f64;
+    let mut elems = 0usize;
+    for p in probes {
+        if p.kind == StateKind::ModelState {
+            if let Some(d) = p.delta_density {
+                weighted += d * p.elems as f64;
+                elems += p.elems;
+            }
+        }
+    }
+    if elems == 0 {
+        None
+    } else {
+        Some(weighted / elems as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::XorShiftRng;
+
+    #[test]
+    fn density_estimate_tracks_true_change_fraction() {
+        let mut sd = StateDict::synthetic_gpt(1 << 16, 1);
+        let base = sd.clone();
+        sd.perturb_model_states(0.2, 2);
+        let probes = probe_state_dict(&sd, Some(&base), &ProbeConfig::default());
+        let d = mean_model_density(&probes).unwrap();
+        assert!((d - 0.2).abs() < 0.05, "density {d}");
+        // optimizer states untouched -> density 0 on those probes
+        for p in probes.iter().filter(|p| p.kind.is_optimizer()) {
+            assert_eq!(p.delta_density, Some(0.0), "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn sample_budget_respected() {
+        let t = HostTensor::zeros(DType::F16, &[100_000]);
+        let cfg = ProbeConfig { max_samples: 1000, seed: 7 };
+        let p = probe_tensor("t", StateKind::ModelState, &t, None, &cfg);
+        assert!(p.sampled <= 1000, "sampled {}", p.sampled);
+        assert!(p.sampled >= 900, "sampled {}", p.sampled);
+        assert_eq!(p.elems, 100_000);
+    }
+
+    #[test]
+    fn entropy_zero_for_zeros_high_for_noise() {
+        let z = HostTensor::zeros(DType::F32, &[4096]);
+        let pz = probe_tensor("z", StateKind::Other, &z, None, &ProbeConfig::default());
+        assert_eq!(pz.byte_entropy, 0.0);
+        let mut rng = XorShiftRng::new(3);
+        let vals = rng.normal_vec(4096, 0.0, 1.0);
+        let t = HostTensor::from_f32(&[4096], &vals).unwrap();
+        let pt = probe_tensor("t", StateKind::Other, &t, None, &ProbeConfig::default());
+        assert!(pt.byte_entropy > 3.0, "entropy {}", pt.byte_entropy);
+        assert!(pt.byte_entropy <= 8.0);
+    }
+
+    #[test]
+    fn value_range_and_non_finite_flag() {
+        let t = HostTensor::from_f32(&[4], &[-2.0, 0.5, 3.0, f32::NAN]).unwrap();
+        let p = probe_tensor("t", StateKind::AdamM, &t, None, &ProbeConfig::default());
+        assert_eq!(p.value_min, -2.0);
+        assert_eq!(p.value_max, 3.0);
+        assert!(p.has_non_finite);
+        let clean = HostTensor::from_f32(&[2], &[1.0, 2.0]).unwrap();
+        let pc = probe_tensor("c", StateKind::AdamM, &clean, None, &ProbeConfig::default());
+        assert!(!pc.has_non_finite);
+    }
+
+    #[test]
+    fn empty_and_mismatched_base_are_safe() {
+        let e = HostTensor::from_f32(&[0], &[]).unwrap();
+        let p = probe_tensor("e", StateKind::Other, &e, None, &ProbeConfig::default());
+        assert_eq!(p.sampled, 0);
+        assert_eq!(p.delta_density, None);
+        assert_eq!((p.value_min, p.value_max), (0.0, 0.0));
+        // base with a different shape is ignored, not an error
+        let t = HostTensor::from_f32(&[4], &[1., 2., 3., 4.]).unwrap();
+        let b = HostTensor::from_f32(&[5], &[1., 2., 3., 4., 5.]).unwrap();
+        let p = probe_tensor("t", StateKind::Other, &t, Some(&b), &ProbeConfig::default());
+        assert_eq!(p.delta_density, None);
+    }
+
+    #[test]
+    fn estimated_changed_rounds_up_and_caps() {
+        let mut sd = StateDict::synthetic_gpt(1 << 14, 4);
+        let base = sd.clone();
+        sd.perturb_model_states(0.1, 5);
+        let probes = probe_state_dict(&sd, Some(&base), &ProbeConfig::default());
+        let p = probes.iter().find(|p| p.kind == StateKind::ModelState).unwrap();
+        let est = p.estimated_changed();
+        assert!(est <= p.elems);
+        assert!(est > 0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Deterministic training-trajectory simulator shared by the
+//! `bitsnap adapt-report` CLI and the `bench_adaptive` bench, so the two
+//! can never drift apart — and so both stay in lockstep with the engine's
+//! base cadence (`base.is_none() || saves_since_base >= max_cached`,
+//! mirroring [`crate::engine::CheckpointEngine::save`]).
+//!
+//! The simulated run perturbs a synthetic mixed-precision state dict by a
+//! per-stage churn rate, feeds per-stage loss telemetry to the policy
+//! source, plans and compresses every save, and reports per-save payload
+//! sizes plus an encode wall time taken as the **minimum of two identical
+//! compression runs** — a one-off scheduler preemption would otherwise
+//! flip close static-vs-adaptive comparisons on noisy CI runners.
+
+use std::time::{Duration, Instant};
+
+use crate::compress::delta::compress_state_dict_planned;
+use crate::compress::CompressError;
+use crate::tensor::StateDict;
+
+use super::{PolicySource, SaveContext, SaveOutcome};
+
+/// One simulated training stage.
+#[derive(Clone, Copy, Debug)]
+pub struct SimStage {
+    /// Checkpoint saves spent in this stage.
+    pub saves: u64,
+    /// Fraction of model-state elements perturbed before each save.
+    pub change_rate: f64,
+    /// Loss reported to the policy source while in this stage.
+    pub loss: f32,
+}
+
+/// One simulated save's outcome.
+#[derive(Clone, Copy, Debug)]
+pub struct SimSave {
+    pub iteration: u64,
+    pub is_base: bool,
+    /// Index into the stage list this save belongs to.
+    pub stage_index: usize,
+    pub raw_bytes: usize,
+    /// Compressed payload bytes (no container framing).
+    pub payload_bytes: usize,
+    /// Critical-path wall seconds: plan + min-of-two compression runs.
+    pub encode_secs: f64,
+}
+
+/// The paper-shaped early→mid→late trajectory: 90% / 25% / 2% churn with
+/// losses 8.0 / 4.0 / 2.0, `saves_per_stage` saves each.
+pub fn default_stages(saves_per_stage: u64) -> [SimStage; 3] {
+    [
+        SimStage { saves: saves_per_stage, change_rate: 0.90, loss: 8.0 },
+        SimStage { saves: saves_per_stage, change_rate: 0.25, loss: 4.0 },
+        SimStage { saves: saves_per_stage, change_rate: 0.02, loss: 2.0 },
+    ]
+}
+
+/// Drive `source` through the trajectory. Fully deterministic for a given
+/// (`params`, `stages`, `max_cached`): seeds are fixed, so two arms with
+/// different policy sources compress bit-identical state dicts.
+pub fn simulate_trajectory(
+    params: usize,
+    stages: &[SimStage],
+    max_cached: u64,
+    source: &mut dyn PolicySource,
+) -> Result<Vec<SimSave>, CompressError> {
+    let mut sd = StateDict::synthetic_gpt(params, 1);
+    let mut base: Option<(u64, StateDict)> = None;
+    let mut saves_since_base = 0u64;
+    let mut out = Vec::new();
+    let mut save_no = 0u64;
+    for (stage_index, stage) in stages.iter().enumerate() {
+        for _ in 0..stage.saves {
+            save_no += 1;
+            let iteration = save_no * 10;
+            // a few trainer steps' worth of loss telemetry per save
+            for t in 0..3u64 {
+                source.telemetry(iteration + t, stage.loss);
+            }
+            if save_no > 1 {
+                sd.perturb_model_states(stage.change_rate, 7000 + save_no);
+            }
+            let make_base = base.is_none() || saves_since_base >= max_cached;
+            let (base_iter, base_ref) = if make_base {
+                (iteration, None)
+            } else {
+                let (bi, bsd) = base.as_ref().unwrap();
+                (*bi, Some(bsd))
+            };
+            let t_plan = Instant::now();
+            let plan = source.plan(&SaveContext {
+                iteration,
+                is_base: make_base,
+                sd: &sd,
+                base: base_ref,
+            });
+            let plan_secs = t_plan.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            let (ckpt, _) =
+                compress_state_dict_planned(&sd, base_ref, &plan, iteration, base_iter)?;
+            let c1 = t1.elapsed().as_secs_f64();
+            let t2 = Instant::now();
+            let _ = compress_state_dict_planned(&sd, base_ref, &plan, iteration, base_iter)?;
+            let c2 = t2.elapsed().as_secs_f64();
+            let encode_secs = plan_secs + c1.min(c2);
+            let payload_bytes = ckpt.payload_bytes();
+            let raw_bytes = sd.total_bytes();
+            source.observe(&SaveOutcome {
+                iteration,
+                is_base: make_base,
+                raw_bytes,
+                compressed_bytes: payload_bytes,
+                blocking: Duration::from_secs_f64(encode_secs),
+            });
+            out.push(SimSave {
+                iteration,
+                is_base: make_base,
+                stage_index,
+                raw_bytes,
+                payload_bytes,
+                encode_secs,
+            });
+            if make_base {
+                base = Some((iteration, sd.clone()));
+                saves_since_base = 1;
+            } else {
+                saves_since_base += 1;
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapt::StaticPolicySource;
+    use crate::compress::delta::Policy;
+
+    #[test]
+    fn cadence_and_accounting_match_the_engine_rule() {
+        let mut src = StaticPolicySource::new(Policy::lossless());
+        let saves = simulate_trajectory(1 << 12, &default_stages(2), 3, &mut src).unwrap();
+        assert_eq!(saves.len(), 6);
+        // base at save 1, then every 3rd: 1(base) 2 3 4(base) 5 6
+        let bases: Vec<bool> = saves.iter().map(|s| s.is_base).collect();
+        assert_eq!(bases, vec![true, false, false, true, false, false]);
+        for s in &saves {
+            assert!(s.payload_bytes > 0);
+            assert!(s.raw_bytes > 0);
+            assert!(s.encode_secs > 0.0);
+            assert_eq!(s.iteration % 10, 0);
+        }
+        assert_eq!(saves[0].stage_index, 0);
+        assert_eq!(saves[5].stage_index, 2);
+        // lossless deltas in the sparse late stage compress hard
+        let late = &saves[5];
+        assert!(late.payload_bytes < late.raw_bytes);
+    }
+
+    #[test]
+    fn deterministic_across_arms() {
+        let mut a = StaticPolicySource::new(Policy::raw());
+        let mut b = StaticPolicySource::new(Policy::raw());
+        let ra = simulate_trajectory(1 << 12, &default_stages(1), 2, &mut a).unwrap();
+        let rb = simulate_trajectory(1 << 12, &default_stages(1), 2, &mut b).unwrap();
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.raw_bytes, y.raw_bytes);
+            assert_eq!(x.payload_bytes, y.payload_bytes);
+            assert_eq!(x.is_base, y.is_base);
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Training-stage detection from a sliding telemetry window.
+//!
+//! The abstract's promise — a method that "adapts dynamically to different
+//! training stages" — needs something that can *tell* the stages apart.
+//! Two cheap signals do it (paper Fig. 9 shows both):
+//!
+//! * **delta density**: early training churns most parameters every
+//!   optimizer step; near convergence fp16 rounding swallows most updates
+//!   and the bitwise delta goes sparse,
+//! * **loss slope**: the loss falls steeply early and plateaus late.
+//!
+//! The trainer reports a loss sample per step; the adaptive controller
+//! reports a density sample per save. The detector keeps the last
+//! [`StageConfig::window`] samples of each and classifies the run.
+
+use std::collections::VecDeque;
+
+/// Coarse phase of the training run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TrainingStage {
+    /// High churn: most parameters change between checkpoints.
+    Early,
+    /// Transitional: deltas are sparse but the loss is still moving.
+    Mid,
+    /// Converged: sparse deltas and a plateaued loss.
+    Late,
+}
+
+impl TrainingStage {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TrainingStage::Early => "early",
+            TrainingStage::Mid => "mid",
+            TrainingStage::Late => "late",
+        }
+    }
+}
+
+/// One telemetry observation. Trainer steps carry a loss; saves carry a
+/// model-delta density; either field may be absent.
+#[derive(Clone, Copy, Debug)]
+pub struct TelemetrySample {
+    pub iteration: u64,
+    pub loss: Option<f32>,
+    pub model_delta_density: Option<f64>,
+}
+
+/// Stage classification thresholds.
+#[derive(Clone, Copy, Debug)]
+pub struct StageConfig {
+    /// Samples of each signal kept in the sliding window.
+    pub window: usize,
+    /// Mean density at or above which the run counts as early.
+    pub early_density: f64,
+    /// Mean density at or below which the run is a late candidate.
+    pub late_density: f64,
+    /// Per-step |loss slope| below which the loss counts as plateaued.
+    pub plateau_slope: f32,
+}
+
+impl Default for StageConfig {
+    fn default() -> Self {
+        Self { window: 8, early_density: 0.40, late_density: 0.08, plateau_slope: 0.01 }
+    }
+}
+
+/// Sliding-window stage detector. See module docs.
+#[derive(Clone, Debug)]
+pub struct StageDetector {
+    cfg: StageConfig,
+    losses: VecDeque<(u64, f32)>,
+    densities: VecDeque<f64>,
+}
+
+impl StageDetector {
+    pub fn new(cfg: StageConfig) -> Self {
+        Self { cfg, losses: VecDeque::new(), densities: VecDeque::new() }
+    }
+
+    pub fn config(&self) -> &StageConfig {
+        &self.cfg
+    }
+
+    /// Record one telemetry sample.
+    pub fn record(&mut self, s: TelemetrySample) {
+        if let Some(l) = s.loss {
+            self.losses.push_back((s.iteration, l));
+            while self.losses.len() > self.cfg.window {
+                self.losses.pop_front();
+            }
+        }
+        if let Some(d) = s.model_delta_density {
+            self.densities.push_back(d);
+            while self.densities.len() > self.cfg.window {
+                self.densities.pop_front();
+            }
+        }
+    }
+
+    /// Mean delta density over the window (`None` before the first save
+    /// with a base).
+    pub fn mean_density(&self) -> Option<f64> {
+        if self.densities.is_empty() {
+            return None;
+        }
+        Some(self.densities.iter().sum::<f64>() / self.densities.len() as f64)
+    }
+
+    /// Mean per-step loss delta over the window (`None` with fewer than
+    /// two loss samples). Negative while the loss is still falling.
+    pub fn loss_slope(&self) -> Option<f32> {
+        if self.losses.len() < 2 {
+            return None;
+        }
+        let (first_it, first) = *self.losses.front().unwrap();
+        let (last_it, last) = *self.losses.back().unwrap();
+        let steps = last_it.saturating_sub(first_it).max(1) as f32;
+        Some((last - first) / steps)
+    }
+
+    /// Classify the run. With no density evidence yet (run start, or the
+    /// first save of a delta chain) the run counts as early — the
+    /// conservative answer, since early-stage choices assume dense change.
+    pub fn stage(&self) -> TrainingStage {
+        let d = match self.mean_density() {
+            None => return TrainingStage::Early,
+            Some(d) => d,
+        };
+        if d >= self.cfg.early_density {
+            return TrainingStage::Early;
+        }
+        if d <= self.cfg.late_density {
+            // a plateaued (or unknown) loss confirms convergence
+            let plateaued =
+                self.loss_slope().map(|s| s.abs() <= self.cfg.plateau_slope).unwrap_or(true);
+            if plateaued {
+                return TrainingStage::Late;
+            }
+        }
+        TrainingStage::Mid
+    }
+}
+
+impl Default for StageDetector {
+    fn default() -> Self {
+        Self::new(StageConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn density(it: u64, d: f64) -> TelemetrySample {
+        TelemetrySample { iteration: it, loss: None, model_delta_density: Some(d) }
+    }
+
+    fn loss(it: u64, l: f32) -> TelemetrySample {
+        TelemetrySample { iteration: it, loss: Some(l), model_delta_density: None }
+    }
+
+    #[test]
+    fn no_evidence_means_early() {
+        let det = StageDetector::default();
+        assert_eq!(det.stage(), TrainingStage::Early);
+    }
+
+    #[test]
+    fn dense_deltas_mean_early() {
+        let mut det = StageDetector::default();
+        det.record(density(10, 0.9));
+        det.record(density(20, 0.8));
+        assert_eq!(det.stage(), TrainingStage::Early);
+    }
+
+    #[test]
+    fn sparse_deltas_with_falling_loss_mean_mid() {
+        let mut det = StageDetector::default();
+        det.record(density(10, 0.05));
+        for i in 0..5u64 {
+            det.record(loss(10 + i, 8.0 - i as f32)); // slope -1/step
+        }
+        assert_eq!(det.stage(), TrainingStage::Mid);
+    }
+
+    #[test]
+    fn sparse_deltas_with_plateaued_loss_mean_late() {
+        let mut det = StageDetector::default();
+        det.record(density(100, 0.02));
+        for i in 0..5u64 {
+            det.record(loss(100 + i, 2.0 - 0.001 * i as f32));
+        }
+        assert_eq!(det.stage(), TrainingStage::Late);
+        assert!(det.loss_slope().unwrap().abs() < 0.01);
+    }
+
+    #[test]
+    fn intermediate_density_means_mid() {
+        let mut det = StageDetector::default();
+        det.record(density(10, 0.2));
+        assert_eq!(det.stage(), TrainingStage::Mid);
+    }
+
+    #[test]
+    fn window_slides_old_samples_out() {
+        let cfg = StageConfig { window: 4, ..StageConfig::default() };
+        let mut det = StageDetector::new(cfg);
+        // early history...
+        for i in 0..4u64 {
+            det.record(density(i * 10, 0.9));
+        }
+        assert_eq!(det.stage(), TrainingStage::Early);
+        // ...fully displaced by sparse recent saves
+        for i in 4..8u64 {
+            det.record(density(i * 10, 0.02));
+        }
+        assert_eq!(det.mean_density().unwrap(), 0.02);
+        assert_eq!(det.stage(), TrainingStage::Late);
+        // loss window independent of density window
+        for i in 0..10u64 {
+            det.record(loss(i, 5.0));
+        }
+        assert!(det.loss_slope().unwrap().abs() < 1e-6);
+    }
+}

@@ -1,5 +1,20 @@
 //! Tiny argument parser (clap is unavailable in this offline build).
-//! Grammar: `bitsnap <subcommand> [--key value | --flag]...`
+//! Grammar: `bitsnap <subcommand> [--key value | --key=value | --flag]...`
+//!
+//! Disambiguation rules:
+//!
+//! * `--key=value` always binds `value` to `key` — the unambiguous form,
+//!   and the only safe way to pass values that start with `--`.
+//! * `--key value` binds the next token unless it starts with `--`.
+//!   Negative numbers work (`--lr -0.5` → `lr = -0.5`) because a single
+//!   leading dash is not a flag prefix here. The flip side, documented
+//!   rather than "fixed" (the parser cannot know which keys are boolean):
+//!   a *boolean* flag followed by a single-dash token swallows it as a
+//!   value (`--verbose -3` → `verbose = -3`). Write `--verbose=` or
+//!   reorder so boolean flags precede `--key value` pairs or trail the
+//!   command line.
+//! * `--flag` (at end of input, or followed by another `--` token) is a
+//!   boolean flag.
 
 use std::collections::HashMap;
 
@@ -19,7 +34,10 @@ impl Args {
         let mut i = 0;
         while i < rest.len() {
             if let Some(key) = rest[i].strip_prefix("--") {
-                if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    values.insert(k.to_string(), v.to_string());
+                    i += 1;
+                } else if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
                     values.insert(key.to_string(), rest[i + 1].clone());
                     i += 2;
                 } else {
@@ -72,5 +90,55 @@ mod tests {
     fn empty() {
         let a = parse(&[]);
         assert_eq!(a.subcommand(), None);
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse(&["compress", "--params=4096", "--policy=bitsnap", "--fast"]);
+        assert_eq!(a.get_parse::<usize>("params"), Some(4096));
+        assert_eq!(a.get("policy"), Some("bitsnap"));
+        assert!(a.has("fast"));
+        assert!(a.has("params")); // values count as present
+    }
+
+    #[test]
+    fn key_equals_binds_even_dashed_values() {
+        // the unambiguous form: everything after the first '=' is the value
+        let a = parse(&["x", "--lr=-0.5", "--name=", "--expr=a=b"]);
+        assert_eq!(a.get_parse::<f64>("lr"), Some(-0.5));
+        assert_eq!(a.get("name"), Some(""));
+        assert_eq!(a.get("expr"), Some("a=b"));
+    }
+
+    #[test]
+    fn mixed_syntaxes() {
+        let a = parse(&["train", "--model=gpt-nano", "--steps", "50", "--check"]);
+        assert_eq!(a.get("model"), Some("gpt-nano"));
+        assert_eq!(a.get_parse::<u64>("steps"), Some(50));
+        assert!(a.has("check"));
+    }
+
+    #[test]
+    fn negative_space_separated_value_is_bound() {
+        let a = parse(&["x", "--lr", "-0.5", "--steps", "3"]);
+        assert_eq!(a.get_parse::<f64>("lr"), Some(-0.5));
+        assert_eq!(a.get_parse::<u64>("steps"), Some(3));
+    }
+
+    #[test]
+    fn documented_quirk_flag_swallows_negative_token() {
+        // see module docs: a boolean flag followed by a single-dash token
+        // takes it as a value; --key=value is the unambiguous escape
+        let a = parse(&["x", "--verbose", "-3"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), Some("-3"));
+    }
+
+    #[test]
+    fn flag_before_another_flag_stays_boolean() {
+        let a = parse(&["x", "--verbose", "--steps=3"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), None);
+        assert_eq!(a.get_parse::<u64>("steps"), Some(3));
     }
 }

@@ -90,20 +90,29 @@ pub fn normal_boundaries(m: usize, mu: f32, sigma: f32) -> Vec<f32> {
 
 fn mean_std(values: &[f32]) -> (f32, f32) {
     // Chunked two-level accumulation: f32 SIMD-friendly inner sums, f64
-    // outer accumulation for stability on multi-GB tensors.
-    let n = values.len().max(1) as f64;
+    // outer accumulation for stability on multi-GB tensors. Non-finite
+    // values are excluded: a single ±inf/NaN would otherwise poison the
+    // stats, every cluster boundary, and thereby the *whole* tensor —
+    // this keeps the damage confined to the non-representable elements.
+    let mut n = 0u64;
     let mut sum = 0f64;
     let mut sum_sq = 0f64;
     for chunk in values.chunks(4096) {
         let mut s = 0f32;
         let mut s2 = 0f32;
+        let mut c = 0u64;
         for &v in chunk {
+            let keep = v.is_finite();
+            let v = if keep { v } else { 0.0 };
             s += v;
             s2 += v * v;
+            c += keep as u64;
         }
         sum += s as f64;
         sum_sq += s2 as f64;
+        n += c;
     }
+    let n = n.max(1) as f64;
     let mean = sum / n;
     let var = (sum_sq / n - mean * mean).max(0.0);
     (mean as f32, var.sqrt() as f32)
@@ -173,12 +182,19 @@ pub fn encode_with_timing(
         }
         *l = acc as u8;
     }
+    // per-cluster ranges over finite values only: an inf in cmax would
+    // make the cluster's scale inf and dequantize every member to NaN;
+    // with finite ranges, ±inf clamps to the cluster edge and NaN lands
+    // on the cluster minimum — lossy for those elements (nothing 8-bit
+    // can represent them), harmless for the rest
     let mut cmin = [f32::INFINITY; 16];
     let mut cmax = [f32::NEG_INFINITY; 16];
     for (&l, &v) in labels.iter().zip(values) {
-        let l = l as usize;
-        cmin[l] = cmin[l].min(v);
-        cmax[l] = cmax[l].max(v);
+        if v.is_finite() {
+            let l = l as usize;
+            cmin[l] = cmin[l].min(v);
+            cmax[l] = cmax[l].max(v);
+        }
     }
     let mut scales = vec![0f32; m];
     let mut offsets = vec![0f32; m];
@@ -371,6 +387,60 @@ mod tests {
         let p = encode(&t, 8).unwrap();
         let back = decode(&p, DType::F32, &[0]).unwrap();
         assert_eq!(back.len(), 0);
+    }
+
+    #[test]
+    fn length_one_roundtrips_exactly() {
+        // n=1: σ=0 collapses to one cluster of width 0, so the single
+        // value must come back bit-exact through the offset
+        for v in [3.75f32, -1e-30, 0.0, 1e30] {
+            let t = HostTensor::from_f32(&[1], &[v]).unwrap();
+            let p = encode(&t, 16).unwrap();
+            let back = decode(&p, DType::F32, &[1]).unwrap().to_f32_vec().unwrap();
+            assert_eq!(back, vec![v]);
+        }
+    }
+
+    #[test]
+    fn sparse_non_finite_does_not_corrupt_the_rest() {
+        // one inf in a large tensor (a diverging run) must not poison the
+        // stats: every *other* element still round-trips with normal
+        // quantization error, and nothing decodes to NaN
+        let mut rng = XorShiftRng::new(7);
+        let mut vals = rng.normal_vec(10_000, 0.0, 1e-3);
+        vals[4321] = f32::INFINITY;
+        let t = HostTensor::from_f32(&[10_000], &vals).unwrap();
+        let p = encode(&t, 16).unwrap();
+        let back = decode(&p, DType::F32, &[10_000]).unwrap().to_f32_vec().unwrap();
+        for (i, (&v, &d)) in vals.iter().zip(&back).enumerate() {
+            assert!(d.is_finite(), "element {i} decoded non-finite");
+            if i != 4321 {
+                assert!((v - d).abs() < 1e-4, "element {i}: {v} vs {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_finite_inputs_do_not_panic() {
+        // ±inf/NaN poison the stats (and cannot be represented by any
+        // 8-bit code) — the contract here is only that encode/decode
+        // never panic and preserve the shape. The adaptive policy's
+        // probe guard keeps such tensors on the raw path in practice.
+        let cases: [&[f32]; 5] = [
+            &[f32::INFINITY; 8],
+            &[f32::NEG_INFINITY; 8],
+            &[f32::NAN; 8],
+            &[1.0, f32::INFINITY, -2.0, f32::NAN, 0.5, -0.5, 3.0, f32::NEG_INFINITY],
+            &[f32::NAN],
+        ];
+        for vals in cases {
+            let t = HostTensor::from_f32(&[vals.len()], vals).unwrap();
+            for m in [2usize, 4, 16] {
+                let p = encode(&t, m).unwrap();
+                let back = decode(&p, DType::F32, &[vals.len()]).unwrap();
+                assert_eq!(back.len(), vals.len());
+            }
+        }
     }
 
     #[test]

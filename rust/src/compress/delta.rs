@@ -9,6 +9,8 @@
 //! cluster-quantized in either kind (or kept raw in lossless mode — the
 //! Fig. 12 experiment needs sparsification without quantization).
 
+use std::collections::HashMap;
+
 use super::{
     bitmask, compress, compress_delta, decompress, decompress_delta, CodecId, CompressError,
     CompressedTensor,
@@ -102,6 +104,62 @@ impl CompressedCheckpoint {
     }
 }
 
+/// What to do with *one* tensor, as resolved by a policy source (the
+/// adaptive controller in [`crate::adapt`], or anything else that wants
+/// finer-than-checkpoint-wide control).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorDirective {
+    /// Fall back to the checkpoint-wide [`Policy`] for this tensor.
+    Inherit,
+    /// Store the dense little-endian bytes.
+    Raw,
+    /// Delta-sparsify against the base checkpoint with this delta codec.
+    /// Falls back to raw when the checkpoint has no base (a base
+    /// checkpoint has nothing to delta against).
+    Delta(CodecId),
+    /// Quantize standalone with this (non-delta, lossy) codec.
+    Quantize(CodecId),
+}
+
+/// A per-tensor compression plan for one checkpoint: a checkpoint-wide
+/// default [`Policy`] plus tensor-name overrides. Produced once per save
+/// by a [`crate::adapt::PolicySource`]; the chosen codec of every entry is
+/// written into the container (per-entry codec tags), so decoding needs no
+/// side channel — the plan itself never has to be persisted.
+#[derive(Clone, Debug)]
+pub struct CheckpointPlan {
+    default: Policy,
+    per_tensor: HashMap<String, TensorDirective>,
+}
+
+impl CheckpointPlan {
+    /// A plan with no overrides: every tensor follows `default` (exactly
+    /// the behaviour of [`compress_state_dict_timed`] with that policy).
+    pub fn uniform(default: Policy) -> Self {
+        Self { default, per_tensor: HashMap::new() }
+    }
+
+    pub fn default_policy(&self) -> Policy {
+        self.default
+    }
+
+    /// Override the directive for one tensor.
+    pub fn set(&mut self, name: impl Into<String>, directive: TensorDirective) {
+        self.per_tensor.insert(name.into(), directive);
+    }
+
+    /// The directive for `name` ([`TensorDirective::Inherit`] when no
+    /// override was set).
+    pub fn directive(&self, name: &str) -> TensorDirective {
+        self.per_tensor.get(name).copied().unwrap_or(TensorDirective::Inherit)
+    }
+
+    /// Number of per-tensor overrides in this plan.
+    pub fn overrides(&self) -> usize {
+        self.per_tensor.len()
+    }
+}
+
 fn pick_auto(base: &HostTensor, curr: &HostTensor) -> Result<CodecId, CompressError> {
     let es = curr.dtype().size();
     let n = curr.len();
@@ -154,78 +212,144 @@ pub fn compress_state_dict_timed(
     iteration: u64,
     base_iteration: u64,
 ) -> Result<(CompressedCheckpoint, CompressTimings), CompressError> {
+    let plan = CheckpointPlan::uniform(policy);
+    compress_state_dict_planned(sd, base, &plan, iteration, base_iteration)
+}
+
+fn compress_model_entry(
+    model: ModelPolicy,
+    base_t: Option<&HostTensor>,
+    t: &HostTensor,
+    timings: &mut CompressTimings,
+) -> Result<CompressedTensor, CompressError> {
+    let t0 = std::time::Instant::now();
+    let c = match (model, base_t) {
+        (ModelPolicy::Raw, _) | (_, None) => compress(CodecId::Raw, t)?,
+        (ModelPolicy::BitmaskPacked, Some(b)) => compress_delta(CodecId::BitmaskPacked, b, t)?,
+        (ModelPolicy::BitmaskNaive, Some(b)) => compress_delta(CodecId::BitmaskNaive, b, t)?,
+        (ModelPolicy::CooU16, Some(b)) => compress_delta(CodecId::CooU16, b, t)?,
+        (ModelPolicy::Auto, Some(b)) => {
+            let codec = pick_auto(b, t)?;
+            if codec == CodecId::Raw {
+                compress(CodecId::Raw, t)?
+            } else {
+                compress_delta(codec, b, t)?
+            }
+        }
+    };
+    timings.delta_encoding += t0.elapsed();
+    Ok(c)
+}
+
+fn compress_quantized_entry(
+    codec: CodecId,
+    kind: StateKind,
+    t: &HostTensor,
+    timings: &mut CompressTimings,
+) -> Result<CompressedTensor, CompressError> {
+    match codec {
+        CodecId::ClusterQuant => {
+            let (payload, t_c, t_q) = super::cluster_quant::encode_with_timing(
+                t,
+                super::cluster_quant::DEFAULT_CLUSTERS,
+            )?;
+            timings.clustering += t_c;
+            timings.quantization += t_q;
+            Ok(CompressedTensor {
+                codec: CodecId::ClusterQuant,
+                dtype: t.dtype(),
+                shape: t.shape().to_vec(),
+                payload,
+            })
+        }
+        CodecId::NaiveQuant8 | CodecId::BlockQuant8 => {
+            let t0 = std::time::Instant::now();
+            let c = compress(codec, t)?;
+            timings.quantization += t0.elapsed();
+            Ok(c)
+        }
+        CodecId::Prune => {
+            // keep rate is kind-dependent (ExCP: moderate on master
+            // weights, aggressive on Adam moments) on every path that
+            // knows the kind — the §2.2.1 loss-jump safeguard
+            let t0 = std::time::Instant::now();
+            let keep = if kind == StateKind::MasterWeight { 0.5 } else { 0.1 };
+            let payload = super::prune::encode(t, keep)?;
+            timings.quantization += t0.elapsed();
+            Ok(CompressedTensor {
+                codec: CodecId::Prune,
+                dtype: t.dtype(),
+                shape: t.shape().to_vec(),
+                payload,
+            })
+        }
+        other => Err(CompressError::Format(format!("{other:?} is not a quantizing codec"))),
+    }
+}
+
+fn compress_optimizer_entry(
+    optimizer: OptimizerPolicy,
+    kind: StateKind,
+    t: &HostTensor,
+    timings: &mut CompressTimings,
+) -> Result<CompressedTensor, CompressError> {
+    let codec = match optimizer {
+        OptimizerPolicy::Raw => return compress(CodecId::Raw, t),
+        OptimizerPolicy::ClusterQuant => CodecId::ClusterQuant,
+        OptimizerPolicy::NaiveQuant8 => CodecId::NaiveQuant8,
+        OptimizerPolicy::BlockQuant8 => CodecId::BlockQuant8,
+        OptimizerPolicy::ExcpPrune => CodecId::Prune,
+    };
+    compress_quantized_entry(codec, kind, t, timings)
+}
+
+/// [`compress_state_dict_timed`] generalized to a per-tensor
+/// [`CheckpointPlan`]. Tensors without an override follow the plan's
+/// default policy exactly as before; overridden tensors follow their
+/// [`TensorDirective`]. Delta directives degrade to raw when no base is
+/// given (base checkpoints have nothing to delta against).
+pub fn compress_state_dict_planned(
+    sd: &StateDict,
+    base: Option<&StateDict>,
+    plan: &CheckpointPlan,
+    iteration: u64,
+    base_iteration: u64,
+) -> Result<(CompressedCheckpoint, CompressTimings), CompressError> {
+    let policy = plan.default_policy();
     let mut timings = CompressTimings::default();
     let mut entries = Vec::with_capacity(sd.len());
     for e in sd.entries() {
-        let compressed = match e.kind {
-            StateKind::ModelState => {
+        // the base lookup is a linear scan — only pay for it on the arms
+        // that can actually delta-encode (Raw/Quantize never do)
+        let lookup_base = || base.and_then(|b| b.get(&e.name)).map(|be| &be.tensor);
+        let compressed = match plan.directive(&e.name) {
+            TensorDirective::Inherit => match e.kind {
+                StateKind::ModelState => {
+                    compress_model_entry(policy.model, lookup_base(), &e.tensor, &mut timings)?
+                }
+                k if k.is_optimizer() => {
+                    compress_optimizer_entry(policy.optimizer, k, &e.tensor, &mut timings)?
+                }
+                _ => compress(CodecId::Raw, &e.tensor)?,
+            },
+            TensorDirective::Raw => compress(CodecId::Raw, &e.tensor)?,
+            TensorDirective::Delta(codec) => {
+                if !codec.is_delta() {
+                    return Err(CompressError::Format(format!(
+                        "plan directive Delta({codec:?}) is not a delta codec"
+                    )));
+                }
                 let t0 = std::time::Instant::now();
-                let base_t = base.and_then(|b| b.get(&e.name)).map(|be| &be.tensor);
-                let c = match (policy.model, base_t) {
-                    (ModelPolicy::Raw, _) | (_, None) => compress(CodecId::Raw, &e.tensor)?,
-                    (ModelPolicy::BitmaskPacked, Some(b)) => {
-                        compress_delta(CodecId::BitmaskPacked, b, &e.tensor)?
-                    }
-                    (ModelPolicy::BitmaskNaive, Some(b)) => {
-                        compress_delta(CodecId::BitmaskNaive, b, &e.tensor)?
-                    }
-                    (ModelPolicy::CooU16, Some(b)) => {
-                        compress_delta(CodecId::CooU16, b, &e.tensor)?
-                    }
-                    (ModelPolicy::Auto, Some(b)) => {
-                        let codec = pick_auto(b, &e.tensor)?;
-                        if codec == CodecId::Raw {
-                            compress(CodecId::Raw, &e.tensor)?
-                        } else {
-                            compress_delta(codec, b, &e.tensor)?
-                        }
-                    }
+                let c = match lookup_base() {
+                    Some(b) => compress_delta(codec, b, &e.tensor)?,
+                    None => compress(CodecId::Raw, &e.tensor)?,
                 };
                 timings.delta_encoding += t0.elapsed();
                 c
             }
-            k if k.is_optimizer() => match policy.optimizer {
-                OptimizerPolicy::Raw => compress(CodecId::Raw, &e.tensor)?,
-                OptimizerPolicy::ClusterQuant => {
-                    let (payload, t_c, t_q) = super::cluster_quant::encode_with_timing(
-                        &e.tensor,
-                        super::cluster_quant::DEFAULT_CLUSTERS,
-                    )?;
-                    timings.clustering += t_c;
-                    timings.quantization += t_q;
-                    CompressedTensor {
-                        codec: CodecId::ClusterQuant,
-                        dtype: e.tensor.dtype(),
-                        shape: e.tensor.shape().to_vec(),
-                        payload,
-                    }
-                }
-                OptimizerPolicy::NaiveQuant8 => {
-                    let t0 = std::time::Instant::now();
-                    let c = compress(CodecId::NaiveQuant8, &e.tensor)?;
-                    timings.quantization += t0.elapsed();
-                    c
-                }
-                OptimizerPolicy::BlockQuant8 => {
-                    let t0 = std::time::Instant::now();
-                    let c = compress(CodecId::BlockQuant8, &e.tensor)?;
-                    timings.quantization += t0.elapsed();
-                    c
-                }
-                OptimizerPolicy::ExcpPrune => {
-                    let t0 = std::time::Instant::now();
-                    let keep = if e.kind == StateKind::MasterWeight { 0.5 } else { 0.1 };
-                    let payload = super::prune::encode(&e.tensor, keep)?;
-                    timings.quantization += t0.elapsed();
-                    CompressedTensor {
-                        codec: CodecId::Prune,
-                        dtype: e.tensor.dtype(),
-                        shape: e.tensor.shape().to_vec(),
-                        payload,
-                    }
-                }
-            },
-            _ => compress(CodecId::Raw, &e.tensor)?,
+            TensorDirective::Quantize(codec) => {
+                compress_quantized_entry(codec, e.kind, &e.tensor, &mut timings)?
+            }
         };
         entries.push(CompressedEntry { name: e.name.clone(), kind: e.kind, compressed });
     }
@@ -344,6 +468,71 @@ mod tests {
         let model_entry =
             cd.entries.iter().find(|e| e.kind == StateKind::ModelState).unwrap();
         assert_eq!(model_entry.compressed.codec, CodecId::Raw);
+    }
+
+    #[test]
+    fn uniform_plan_matches_policy_path() {
+        let base = small_dict(11);
+        let mut curr = base.clone();
+        curr.perturb_model_states(0.1, 12);
+        let plan = CheckpointPlan::uniform(Policy::bitsnap());
+        let (planned, _) =
+            compress_state_dict_planned(&curr, Some(&base), &plan, 10, 0).unwrap();
+        let legacy = compress_state_dict(&curr, Some(&base), Policy::bitsnap(), 10, 0).unwrap();
+        assert_eq!(planned.entries.len(), legacy.entries.len());
+        for (a, b) in planned.entries.iter().zip(&legacy.entries) {
+            assert_eq!(a.compressed.codec, b.compressed.codec, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn per_tensor_overrides_are_applied_and_roundtrip() {
+        let base = small_dict(13);
+        let mut curr = base.clone();
+        curr.perturb_model_states(0.05, 14);
+        let mut plan = CheckpointPlan::uniform(Policy::lossless());
+        plan.set("layers.0.weight", TensorDirective::Delta(CodecId::CooU16));
+        plan.set("optimizer.0.exp_avg", TensorDirective::Quantize(CodecId::ClusterQuant));
+        plan.set("optimizer.0.master", TensorDirective::Raw);
+        assert_eq!(plan.overrides(), 3);
+        let (ckpt, _) = compress_state_dict_planned(&curr, Some(&base), &plan, 20, 0).unwrap();
+        let codec_of = |name: &str| {
+            ckpt.entries.iter().find(|e| e.name == name).unwrap().compressed.codec
+        };
+        assert_eq!(codec_of("layers.0.weight"), CodecId::CooU16);
+        assert_eq!(codec_of("optimizer.0.exp_avg"), CodecId::ClusterQuant);
+        assert_eq!(codec_of("optimizer.0.master"), CodecId::Raw);
+        // lossless entries round-trip bit-exactly
+        let rd = decompress_state_dict(&ckpt, Some(&base)).unwrap();
+        assert_eq!(
+            rd.get("layers.0.weight").unwrap().tensor,
+            curr.get("layers.0.weight").unwrap().tensor
+        );
+        assert_eq!(
+            rd.get("optimizer.0.master").unwrap().tensor,
+            curr.get("optimizer.0.master").unwrap().tensor
+        );
+    }
+
+    #[test]
+    fn delta_directive_degrades_to_raw_without_base() {
+        let sd = small_dict(15);
+        let mut plan = CheckpointPlan::uniform(Policy::raw());
+        plan.set("layers.0.weight", TensorDirective::Delta(CodecId::BitmaskPacked));
+        let (ckpt, _) = compress_state_dict_planned(&sd, None, &plan, 0, 0).unwrap();
+        let e = ckpt.entries.iter().find(|e| e.name == "layers.0.weight").unwrap();
+        assert_eq!(e.compressed.codec, CodecId::Raw);
+    }
+
+    #[test]
+    fn invalid_directives_rejected() {
+        let sd = small_dict(16);
+        let mut plan = CheckpointPlan::uniform(Policy::raw());
+        plan.set("layers.0.weight", TensorDirective::Delta(CodecId::ClusterQuant));
+        assert!(compress_state_dict_planned(&sd, None, &plan, 0, 0).is_err());
+        let mut plan = CheckpointPlan::uniform(Policy::raw());
+        plan.set("optimizer.0.master", TensorDirective::Quantize(CodecId::BitmaskPacked));
+        assert!(compress_state_dict_planned(&sd, None, &plan, 0, 0).is_err());
     }
 
     #[test]

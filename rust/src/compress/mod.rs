@@ -27,16 +27,38 @@ pub mod prune;
 use crate::tensor::{DType, HostTensor};
 
 /// Errors from codecs and tensor plumbing.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CompressError {
-    #[error("shape error: {0}")]
     Shape(String),
-    #[error("dtype error: {0}")]
     Dtype(String),
-    #[error("malformed payload: {0}")]
     Format(String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for CompressError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompressError::Shape(s) => write!(f, "shape error: {s}"),
+            CompressError::Dtype(s) => write!(f, "dtype error: {s}"),
+            CompressError::Format(s) => write!(f, "malformed payload: {s}"),
+            CompressError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CompressError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CompressError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CompressError {
+    fn from(e: std::io::Error) -> Self {
+        CompressError::Io(e)
+    }
 }
 
 /// Identifies the codec used for a tensor payload inside a checkpoint
@@ -223,7 +245,7 @@ mod tests {
 
     #[test]
     fn codec_tags_roundtrip() {
-        for c in [
+        let all = [
             CodecId::Raw,
             CodecId::BitmaskPacked,
             CodecId::BitmaskNaive,
@@ -234,9 +256,17 @@ mod tests {
             CodecId::BlockQuant8,
             CodecId::Huffman,
             CodecId::ByteGroupZstd,
-        ] {
+            CodecId::Prune,
+        ];
+        for c in all {
             assert_eq!(CodecId::from_tag(c.tag()), Some(c));
         }
+        // tags are dense 0..len: no gaps, nothing beyond is decodable
+        // (catches a codec added to the enum but missing from this list)
+        for tag in 0..all.len() as u8 {
+            assert!(CodecId::from_tag(tag).is_some(), "gap at tag {tag}");
+        }
+        assert_eq!(CodecId::from_tag(all.len() as u8), None);
         assert_eq!(CodecId::from_tag(99), None);
     }
 

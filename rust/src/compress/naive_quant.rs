@@ -114,6 +114,58 @@ mod tests {
     }
 
     #[test]
+    fn length_one_roundtrips_exactly() {
+        // n=1: lo == hi, scale 0, the value must come back via the offset
+        for v in [7.5f32, -3.25, 0.0, 1e30, -1e-30] {
+            let t = HostTensor::from_f32(&[1], &[v]).unwrap();
+            let back = decode(&encode(&t).unwrap(), DType::F32, &[1]).unwrap();
+            assert_eq!(back.to_f32_vec().unwrap(), vec![v]);
+        }
+    }
+
+    #[test]
+    fn non_finite_inputs_do_not_panic() {
+        // an inf blows the global range to inf and a NaN falls outside any
+        // range — either way encode/decode must survive without panicking
+        // and preserve the element count
+        let cases: [&[f32]; 4] = [
+            &[f32::INFINITY; 4],
+            &[f32::NAN; 4],
+            &[1.0, f32::INFINITY, -2.0, f32::NAN],
+            &[f32::NEG_INFINITY, 0.0, 2.0, 4.0],
+        ];
+        for vals in cases {
+            let t = HostTensor::from_f32(&[vals.len()], vals).unwrap();
+            let p = encode(&t).unwrap();
+            let back = decode(&p, DType::F32, &[vals.len()]).unwrap();
+            assert_eq!(back.len(), vals.len());
+        }
+    }
+
+    #[test]
+    fn prop_error_within_half_step_for_random_finite_tensors() {
+        // property: for any finite tensor, every dequantized value is
+        // within half a quantization step of the original
+        let mut rng = XorShiftRng::new(0xE1);
+        for _ in 0..25 {
+            let n = 1 + rng.next_below(2000);
+            let sigma = 10f32.powi(rng.next_below(10) as i32 - 5);
+            let mu = rng.next_normal() * sigma * 10.0;
+            let vals = rng.normal_vec(n, mu, sigma);
+            let t = HostTensor::from_f32(&[n], &vals).unwrap();
+            let back =
+                decode(&encode(&t).unwrap(), DType::F32, &[n]).unwrap().to_f32_vec().unwrap();
+            let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let step = (hi - lo) / 255.0;
+            for (v, d) in vals.iter().zip(&back) {
+                let tol = step * 0.5001 + (v.abs() + d.abs()) * f32::EPSILON * 8.0 + 1e-30;
+                assert!((v - d).abs() <= tol, "n={n} v={v} d={d} step={step}");
+            }
+        }
+    }
+
+    #[test]
     fn corrupt_rejected() {
         let t = HostTensor::from_f32(&[4], &[1., 2., 3., 4.]).unwrap();
         let p = encode(&t).unwrap();

@@ -25,8 +25,9 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
+use crate::adapt::{PolicySource, SaveContext, SaveOutcome, StaticPolicySource};
 use crate::compress::delta::{
-    compress_state_dict_timed, decompress_state_dict, CompressTimings, Policy,
+    compress_state_dict_planned, decompress_state_dict, CompressTimings, Policy,
 };
 use crate::compress::CompressError;
 use crate::tensor::StateDict;
@@ -127,10 +128,25 @@ pub struct CheckpointEngine {
     /// memory for delta encoding (the paper keeps it in GPU/CPU memory).
     base: Option<(u64, StateDict)>,
     saves_since_base: u64,
+    /// Where per-save compression plans come from. `EngineConfig::policy`
+    /// wrapped in a [`StaticPolicySource`] unless the engine was built
+    /// via [`CheckpointEngine::with_policy_source`].
+    policy_source: Box<dyn PolicySource>,
 }
 
 impl CheckpointEngine {
     pub fn new(cfg: EngineConfig) -> Result<Self, CompressError> {
+        let source = Box::new(StaticPolicySource::new(cfg.policy));
+        Self::with_policy_source(cfg, source)
+    }
+
+    /// Build an engine whose save plans come from `source` (e.g. an
+    /// [`crate::adapt::AdaptivePolicy`]) instead of the static
+    /// `cfg.policy`.
+    pub fn with_policy_source(
+        cfg: EngineConfig,
+        source: Box<dyn PolicySource>,
+    ) -> Result<Self, CompressError> {
         let shm = ShmStore::new(&cfg.shm_root, cfg.rank, cfg.redundancy)?;
         let (tx, rx) = mpsc::channel::<AgentMsg>();
         let stats = Arc::new(Mutex::new(AgentStats::default()));
@@ -144,11 +160,32 @@ impl CheckpointEngine {
                 .spawn(move || agent_loop(rx, shm, storage, rank, stats))
                 .map_err(CompressError::Io)?
         };
-        Ok(Self { cfg, shm, tx, agent: Some(agent), stats, base: None, saves_since_base: 0 })
+        Ok(Self {
+            cfg,
+            shm,
+            tx,
+            agent: Some(agent),
+            stats,
+            base: None,
+            saves_since_base: 0,
+            policy_source: source,
+        })
     }
 
     pub fn config(&self) -> &EngineConfig {
         &self.cfg
+    }
+
+    /// Describe the active policy source (for logs and reports).
+    pub fn policy_description(&self) -> String {
+        self.policy_source.describe()
+    }
+
+    /// Forward one training-loop loss sample to the policy source (the
+    /// adaptive controller's stage detector feeds on these; a static
+    /// source ignores them).
+    pub fn record_telemetry(&mut self, iteration: u64, loss: f32) {
+        self.policy_source.telemetry(iteration, loss);
     }
 
     pub fn shm(&self) -> &ShmStore {
@@ -170,8 +207,15 @@ impl CheckpointEngine {
             let (bi, bsd) = self.base.as_ref().unwrap();
             (*bi, Some(bsd))
         };
+        let plan = self.policy_source.plan(&SaveContext {
+            iteration,
+            is_base: make_base,
+            sd,
+            base: base_sd,
+        });
         let (ckpt, timings) =
-            compress_state_dict_timed(sd, base_sd, self.cfg.policy, iteration, base_iter)?;
+            compress_state_dict_planned(sd, base_sd, &plan, iteration, base_iter)?;
+        let payload_bytes = ckpt.payload_bytes();
         let bytes = container::serialize(&ckpt);
         self.shm.put(iteration, &bytes, make_base)?;
         self.tx
@@ -183,14 +227,24 @@ impl CheckpointEngine {
         } else {
             self.saves_since_base += 1;
         }
-        Ok(SaveReport {
+        let report = SaveReport {
             iteration,
             is_base: make_base,
             blocking: t0.elapsed(),
             timings,
             raw_bytes: sd.total_bytes(),
             compressed_bytes: bytes.len(),
-        })
+        };
+        // the policy source sees payload bytes (what its cost model
+        // predicts), not the container length with framing and CRC
+        self.policy_source.observe(&SaveOutcome {
+            iteration,
+            is_base: make_base,
+            raw_bytes: report.raw_bytes,
+            compressed_bytes: payload_bytes,
+            blocking: report.blocking,
+        });
+        Ok(report)
     }
 
     /// Block until the agent has drained every queued persist.

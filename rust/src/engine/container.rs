@@ -28,7 +28,8 @@ pub const VERSION: u32 = 1;
 
 /// CRC-64/ECMA-182 (poly 0x42F0E1EBA9EA3693), table-driven.
 pub fn crc64(data: &[u8]) -> u64 {
-    static TABLE: once_cell::sync::Lazy<[u64; 256]> = once_cell::sync::Lazy::new(|| {
+    static TABLE: std::sync::OnceLock<[u64; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
         let mut table = [0u64; 256];
         for (i, t) in table.iter_mut().enumerate() {
             let mut crc = (i as u64) << 56;
@@ -45,7 +46,7 @@ pub fn crc64(data: &[u8]) -> u64 {
     });
     let mut crc = 0u64;
     for &b in data {
-        crc = TABLE[(((crc >> 56) as u8) ^ b) as usize] ^ (crc << 8);
+        crc = table[(((crc >> 56) as u8) ^ b) as usize] ^ (crc << 8);
     }
     crc
 }

@@ -34,6 +34,12 @@ impl Storage {
         self
     }
 
+    /// The configured write-bandwidth cap, if any (consumed by the
+    /// adaptive cost model to price the persist leg of a save).
+    pub fn throttle_bps(&self) -> Option<f64> {
+        self.throttle_bps
+    }
+
     pub fn root(&self) -> &Path {
         &self.root
     }

@@ -6,6 +6,9 @@
 //! * [`compress`] — the paper's two codecs (bitmask delta sparsification,
 //!   cluster-based quantization) plus every baseline the evaluation
 //!   compares against.
+//! * [`adapt`] — the adaptive policy engine: sampled tensor probes, a
+//!   storage cost model, training-stage detection, and the per-tensor
+//!   codec controller the engine consults each save.
 //! * [`engine`] — the asynchronous checkpoint engine: shared-memory
 //!   staging, daemon persister, in-memory redundancy, tracker files and
 //!   the all-gather recovery protocol.
@@ -16,9 +19,11 @@
 //! * [`tensor`] — host tensors, dtypes, f16/bf16 conversion, state dicts.
 //! * [`bench`] — micro-benchmark harness used by `cargo bench` targets.
 
+pub mod adapt;
 pub mod bench;
 pub mod compress;
 pub mod engine;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod tensor;
 pub mod train;

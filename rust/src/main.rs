@@ -2,19 +2,22 @@
 //! driver and experiment harnesses.
 //!
 //! Subcommands (run `bitsnap help`):
-//!   train       train a model config with BitSnap checkpointing
-//!   compress    compress a synthetic state dict and report timings/ratio
-//!   inspect     inspect a checkpoint dir / dump optimizer histograms (Fig. 6)
-//!   table1      print the analytical save-time table (Table 1)
-//!   recover     run the multi-rank recovery demo (Fig. 4)
+//!   train         train a model config with BitSnap checkpointing
+//!   compress      compress a synthetic state dict and report timings/ratio
+//!   inspect       inspect a checkpoint dir / dump optimizer histograms (Fig. 6)
+//!   adapt-report  simulate a 3-stage run and print the adaptive
+//!                 controller's per-save codec decisions
+//!   table1        print the analytical save-time table (Table 1)
+//!   recover       run the multi-rank recovery demo (Fig. 4)
+//!
+//! `train` and `inspect --histogram` execute AOT-compiled XLA artifacts
+//! and need the crate built with `--features xla`; everything else is
+//! pure rust.
 
 mod cli;
 
 use bitsnap::compress::delta::Policy;
-use bitsnap::engine::{AnalyticalModel, CheckpointEngine, EngineConfig, Storage};
-use bitsnap::runtime::{default_artifacts_dir, PjrtRuntime};
-use bitsnap::tensor::StateKind;
-use bitsnap::train::Trainer;
+use bitsnap::engine::{AnalyticalModel, Storage};
 
 use cli::Args;
 
@@ -24,6 +27,7 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("compress") => cmd_compress(&args),
         Some("inspect") => cmd_inspect(&args),
+        Some("adapt-report") => cmd_adapt_report(&args),
         Some("table1") => cmd_table1(),
         Some("recover") => cmd_recover(&args),
         Some("help") | None => {
@@ -48,20 +52,29 @@ fn print_help() {
     println!(
         "bitsnap — checkpoint sparsification & quantization engine\n\
          \n\
-         USAGE: bitsnap <subcommand> [--flag value ...]\n\
+         USAGE: bitsnap <subcommand> [--flag value | --flag=value ...]\n\
          \n\
          SUBCOMMANDS\n\
-           train     --model gpt-nano --steps 50 --save-every 10 [--policy bitsnap|lossless|raw]\n\
-                     [--out results/run] [--redundancy 2] [--max-cached 5]\n\
-           compress  --params 1048576 [--change-rate 0.15] [--policy bitsnap|lossless]\n\
-           inspect   --dir <storage root> | --histogram --model gpt-nano --steps 20\n\
-           table1    (no flags) print the paper's Table-1 analytical model\n\
-           recover   --ranks 4 --fail-rank 1 (Fig. 4 walkthrough on real stores)\n\
-           help      this text"
+           train         --model gpt-nano --steps 50 --save-every 10 [--policy bitsnap|lossless|raw]\n\
+                         [--adaptive] [--out results/run] [--redundancy 2] [--max-cached 5]\n\
+                         (needs a build with --features xla)\n\
+           compress      --params 1048576 [--change-rate 0.15] [--policy bitsnap|lossless]\n\
+           inspect       --dir <storage root> | --histogram --model gpt-nano --steps 20\n\
+           adapt-report  [--params 1048576] [--saves 9] [--write-bps 3.5e9] [--measure]\n\
+                         [--json results/adapt_report.json]\n\
+           table1        (no flags) print the paper's Table-1 analytical model\n\
+           recover       --ranks 4 --fail-rank 1 (Fig. 4 walkthrough on real stores)\n\
+           help          this text"
     );
 }
 
+#[cfg(feature = "xla")]
 fn cmd_train(args: &Args) -> Result<(), String> {
+    use bitsnap::adapt::{AdaptivePolicy, Calibration, CostModel};
+    use bitsnap::engine::{CheckpointEngine, EngineConfig};
+    use bitsnap::runtime::{default_artifacts_dir, PjrtRuntime};
+    use bitsnap::train::Trainer;
+
     let model = args.get("model").unwrap_or("gpt-nano");
     let steps: u64 = args.get_parse("steps").unwrap_or(50);
     let save_every: u64 = args.get_parse("save-every").unwrap_or(10);
@@ -90,10 +103,24 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         max_cached_iteration: max_cached,
     }
     .with_env_overrides();
-    let mut engine = CheckpointEngine::new(cfg).map_err(|e| e.to_string())?;
+    let mut engine = if args.has("adaptive") {
+        let cost = CostModel::for_storage(&cfg.storage, Calibration::measure(1 << 18));
+        CheckpointEngine::with_policy_source(cfg, Box::new(AdaptivePolicy::new(
+            Default::default(),
+            cost,
+        )))
+        .map_err(|e| e.to_string())?
+    } else {
+        CheckpointEngine::new(cfg).map_err(|e| e.to_string())?
+    };
+    println!("policy source: {}", engine.policy_description());
 
     for i in 1..=steps {
         let loss = trainer.step().map_err(|e| e.to_string())?;
+        // the EMA is steadier than the raw loss for plateau detection
+        if let Some(t) = trainer.telemetry() {
+            engine.record_telemetry(t.iteration, t.loss_ema);
+        }
         if i % 5 == 0 || i == 1 {
             println!("iter {i:>6}  loss {loss:.4}");
         }
@@ -118,6 +145,13 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         bitsnap::bench::fmt_bytes(stats.bytes_written as usize)
     );
     Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_train(_args: &Args) -> Result<(), String> {
+    Err("the `train` subcommand runs XLA artifacts; rebuild with `--features xla` \
+         (see README.md)"
+        .into())
 }
 
 fn cmd_compress(args: &Args) -> Result<(), String> {
@@ -147,37 +181,103 @@ fn cmd_compress(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Simulate an early→mid→late trajectory on a synthetic state dict and
+/// print the adaptive controller's per-save decisions: the report the
+/// paper's "adapts dynamically" claim can be eyeballed against.
+fn cmd_adapt_report(args: &Args) -> Result<(), String> {
+    use bitsnap::adapt::{
+        default_stages, simulate_trajectory, AdaptiveConfig, AdaptivePolicy, Calibration,
+        CostModel, PolicySource, StageConfig,
+    };
+
+    let params: usize = args.get_parse("params").unwrap_or(1 << 20);
+    let saves: u64 = args.get_parse("saves").unwrap_or(9);
+    let write_bps: f64 = args.get_parse("write-bps").unwrap_or(bitsnap::adapt::DEFAULT_WRITE_BPS);
+    let max_cached: u64 = args.get_parse("max-cached").unwrap_or(3);
+    let calibration = if args.has("measure") {
+        println!("calibrating codec throughput on this host...");
+        Calibration::measure(1 << 18)
+    } else {
+        Calibration::default_host()
+    };
+    let cfg = AdaptiveConfig {
+        stage: StageConfig { window: 2, ..StageConfig::default() },
+        ..AdaptiveConfig::default()
+    };
+    let mut policy = AdaptivePolicy::new(cfg, CostModel::new(calibration, Some(write_bps)));
+
+    println!(
+        "simulating {saves} saves over {params} params (base every {max_cached}), \
+         write bandwidth {:.2} GB/s\n",
+        write_bps / 1e9
+    );
+    // the canonical 3-stage trajectory, split across the requested save
+    // count with the remainder going to the early stage
+    let per = saves / 3;
+    let mut stages = default_stages(per);
+    stages[0].saves = saves - 2 * per;
+    simulate_trajectory(params, &stages, max_cached, &mut policy)
+        .map_err(|e| e.to_string())?;
+
+    let codec_mix = |codecs: &[(bitsnap::compress::CodecId, usize)]| {
+        codecs
+            .iter()
+            .map(|(c, n)| format!("{c:?}x{n}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    };
+    let mut table = bitsnap::bench::Table::new(&[
+        "iter", "stage", "model codecs", "optimizer codecs", "predicted", "actual", "ratio",
+        "est save",
+    ]);
+    for s in policy.summaries() {
+        let actual = s.actual_bytes.unwrap_or(0);
+        table.row(&[
+            s.iteration.to_string(),
+            s.stage.as_str().to_string(),
+            codec_mix(&s.model_codecs),
+            codec_mix(&s.optimizer_codecs),
+            bitsnap::bench::fmt_bytes(s.predicted_bytes),
+            bitsnap::bench::fmt_bytes(actual),
+            format!("{:.2}x", s.raw_bytes as f64 / actual.max(1) as f64),
+            format!("{:.1} ms", s.predicted_secs * 1e3),
+        ]);
+    }
+    table.print();
+    println!("\npolicy: {}", policy.describe());
+
+    if let Some(path) = args.get("json") {
+        let mut rows = Vec::new();
+        for s in policy.summaries() {
+            rows.push(format!(
+                "    {{\"iteration\": {}, \"stage\": \"{}\", \"predicted_bytes\": {}, \
+                 \"actual_bytes\": {}, \"raw_bytes\": {}, \"predicted_secs\": {:.6}}}",
+                s.iteration,
+                s.stage.as_str(),
+                s.predicted_bytes,
+                s.actual_bytes.unwrap_or(0),
+                s.raw_bytes,
+                s.predicted_secs
+            ));
+        }
+        let json = format!(
+            "{{\n  \"params\": {params},\n  \"write_bps\": {write_bps},\n  \"saves\": [\n{}\n  ]\n}}\n",
+            rows.join(",\n")
+        );
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+            }
+        }
+        std::fs::write(path, json).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_inspect(args: &Args) -> Result<(), String> {
     if args.has("histogram") {
-        // Fig. 6: histogram of optimizer tensor values from a real run
-        let model = args.get("model").unwrap_or("gpt-nano");
-        let steps: u64 = args.get_parse("steps").unwrap_or(20);
-        let rt = PjrtRuntime::cpu(default_artifacts_dir()).map_err(|e| e.to_string())?;
-        let mut trainer = Trainer::new(rt, model, 1).map_err(|e| e.to_string())?;
-        for _ in 0..steps {
-            trainer.step().map_err(|e| e.to_string())?;
-        }
-        let sd = trainer.state_dict().map_err(|e| e.to_string())?;
-        for kind in [StateKind::AdamM, StateKind::AdamV] {
-            let mut values = Vec::new();
-            for e in sd.entries().iter().filter(|e| e.kind == kind) {
-                values.extend(e.tensor.to_f32_vec().map_err(|e| e.to_string())?);
-            }
-            let lo = values.iter().cloned().fold(f32::INFINITY, f32::min);
-            let hi = values.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let h = bitsnap::compress::metrics::histogram(&values, 40, lo, hi + 1e-12);
-            let peak = *h.iter().max().unwrap_or(&1) as f64;
-            println!(
-                "\n{kind:?} histogram ({} values, range [{lo:.2e}, {hi:.2e}]):",
-                values.len()
-            );
-            for (i, &c) in h.iter().enumerate() {
-                let x = lo + (hi - lo) * (i as f32 + 0.5) / 40.0;
-                let bar = "#".repeat((c as f64 / peak * 60.0) as usize);
-                println!("{x:>10.3e} |{bar}");
-            }
-        }
-        return Ok(());
+        return cmd_inspect_histogram(args);
     }
     let dir = args.get("dir").ok_or("inspect needs --dir or --histogram")?;
     let storage = Storage::new(dir).map_err(|e| e.to_string())?;
@@ -196,6 +296,48 @@ fn cmd_inspect(args: &Args) -> Result<(), String> {
         println!("  iter {i}: {kind}");
     }
     Ok(())
+}
+
+#[cfg(feature = "xla")]
+fn cmd_inspect_histogram(args: &Args) -> Result<(), String> {
+    use bitsnap::runtime::{default_artifacts_dir, PjrtRuntime};
+    use bitsnap::tensor::StateKind;
+    use bitsnap::train::Trainer;
+
+    // Fig. 6: histogram of optimizer tensor values from a real run
+    let model = args.get("model").unwrap_or("gpt-nano");
+    let steps: u64 = args.get_parse("steps").unwrap_or(20);
+    let rt = PjrtRuntime::cpu(default_artifacts_dir()).map_err(|e| e.to_string())?;
+    let mut trainer = Trainer::new(rt, model, 1).map_err(|e| e.to_string())?;
+    for _ in 0..steps {
+        trainer.step().map_err(|e| e.to_string())?;
+    }
+    let sd = trainer.state_dict().map_err(|e| e.to_string())?;
+    for kind in [StateKind::AdamM, StateKind::AdamV] {
+        let mut values = Vec::new();
+        for e in sd.entries().iter().filter(|e| e.kind == kind) {
+            values.extend(e.tensor.to_f32_vec().map_err(|e| e.to_string())?);
+        }
+        let lo = values.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = values.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let h = bitsnap::compress::metrics::histogram(&values, 40, lo, hi + 1e-12);
+        let peak = *h.iter().max().unwrap_or(&1) as f64;
+        println!(
+            "\n{kind:?} histogram ({} values, range [{lo:.2e}, {hi:.2e}]):",
+            values.len()
+        );
+        for (i, &c) in h.iter().enumerate() {
+            let x = lo + (hi - lo) * (i as f32 + 0.5) / 40.0;
+            let bar = "#".repeat((c as f64 / peak * 60.0) as usize);
+            println!("{x:>10.3e} |{bar}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_inspect_histogram(_args: &Args) -> Result<(), String> {
+    Err("inspect --histogram trains a real model via XLA; rebuild with `--features xla`".into())
 }
 
 fn cmd_table1() -> Result<(), String> {

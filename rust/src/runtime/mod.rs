@@ -20,14 +20,36 @@ use crate::compress::CompressError;
 use crate::tensor::HostTensor;
 
 /// Runtime errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("xla: {0}")]
     Xla(String),
-    #[error("artifact not found: {0}")]
     ArtifactNotFound(PathBuf),
-    #[error("{0}")]
-    Compress(#[from] CompressError),
+    Compress(CompressError),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(s) => write!(f, "xla: {s}"),
+            RuntimeError::ArtifactNotFound(p) => write!(f, "artifact not found: {}", p.display()),
+            RuntimeError::Compress(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Compress(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<CompressError> for RuntimeError {
+    fn from(e: CompressError) -> Self {
+        RuntimeError::Compress(e)
+    }
 }
 
 impl From<xla::Error> for RuntimeError {

@@ -5,9 +5,11 @@
 pub mod data;
 pub mod manifest;
 pub mod parallel;
+#[cfg(feature = "xla")]
 pub mod trainer;
 
 pub use data::SyntheticCorpus;
 pub use manifest::{Manifest, ParamSpec};
 pub use parallel::{compress_sharded, shard_state_dict, Parallelism, ShardedCompressReport};
-pub use trainer::Trainer;
+#[cfg(feature = "xla")]
+pub use trainer::{TrainTelemetry, Trainer};

@@ -15,6 +15,19 @@ use crate::tensor::{DType, HostTensor, StateDict, StateKind};
 use super::data::SyntheticCorpus;
 use super::manifest::Manifest;
 
+/// One step's telemetry, as consumed by the adaptive policy engine's
+/// stage detector (via [`crate::engine::CheckpointEngine::record_telemetry`]).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainTelemetry {
+    /// Iteration the sample belongs to (the step just completed).
+    pub iteration: u64,
+    /// Raw loss of that step.
+    pub loss: f32,
+    /// Exponential moving average of the loss (smoothing factor 0.1);
+    /// steadier than the raw loss for plateau detection.
+    pub loss_ema: f32,
+}
+
 /// Training driver for one model config.
 pub struct Trainer {
     runtime: PjrtRuntime,
@@ -24,6 +37,7 @@ pub struct Trainer {
     state: Vec<xla::Literal>,
     step: u64,
     corpus: SyntheticCorpus,
+    telemetry: Option<TrainTelemetry>,
 }
 
 impl Trainer {
@@ -44,7 +58,15 @@ impl Trainer {
         // compile the step function now so the first step isn't slow
         runtime.load(&format!("train_step_{model}.hlo.txt"))?;
         let corpus = SyntheticCorpus::new(manifest.vocab, data_seed);
-        Ok(Self { runtime, manifest, model: model.to_string(), state, step: 0, corpus })
+        Ok(Self {
+            runtime,
+            manifest,
+            model: model.to_string(),
+            state,
+            step: 0,
+            corpus,
+            telemetry: None,
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -84,7 +106,17 @@ impl Trainer {
         let loss = f32::from_le_bytes(loss_t.bytes()[0..4].try_into().unwrap());
         self.state = out;
         self.step += 1;
+        let ema = match self.telemetry {
+            Some(t) => t.loss_ema * 0.9 + loss * 0.1,
+            None => loss,
+        };
+        self.telemetry = Some(TrainTelemetry { iteration: self.step, loss, loss_ema: ema });
         Ok(loss)
+    }
+
+    /// Telemetry of the most recent step (`None` before the first step).
+    pub fn telemetry(&self) -> Option<TrainTelemetry> {
+        self.telemetry
     }
 
     /// Snapshot the full mixed-precision state dict for checkpointing:
