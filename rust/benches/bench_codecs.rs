@@ -41,10 +41,22 @@ fn main() {
 
     type EncFn<'a> = Box<dyn Fn() -> Vec<u8> + 'a>;
     let encoders: Vec<(&str, EncFn)> = vec![
-        ("bitmask packed", Box::new(|| bitmask::encode_packed(base.bytes(), curr.bytes(), 2).unwrap())),
-        ("bitmask naive", Box::new(|| bitmask::encode_naive(base.bytes(), curr.bytes(), 2).unwrap())),
-        ("coo u16", Box::new(|| coo::encode(base.bytes(), curr.bytes(), 2, coo::IndexWidth::U16).unwrap())),
-        ("coo u32", Box::new(|| coo::encode(base.bytes(), curr.bytes(), 2, coo::IndexWidth::U32).unwrap())),
+        (
+            "bitmask packed",
+            Box::new(|| bitmask::encode_packed(base.bytes(), curr.bytes(), 2).unwrap()),
+        ),
+        (
+            "bitmask naive",
+            Box::new(|| bitmask::encode_naive(base.bytes(), curr.bytes(), 2).unwrap()),
+        ),
+        (
+            "coo u16",
+            Box::new(|| coo::encode(base.bytes(), curr.bytes(), 2, coo::IndexWidth::U16).unwrap()),
+        ),
+        (
+            "coo u32",
+            Box::new(|| coo::encode(base.bytes(), curr.bytes(), 2, coo::IndexWidth::U32).unwrap()),
+        ),
     ];
     for (name, enc) in &encoders {
         let payload = enc();
@@ -131,9 +143,10 @@ fn main() {
     );
 
     // Eq. 5 quality scores under both weight presets
-    for (label, w) in
-        [("training", QualityWeights::training()), ("checkpointing", QualityWeights::checkpointing())]
-    {
+    for (label, w) in [
+        ("training", QualityWeights::training()),
+        ("checkpointing", QualityWeights::checkpointing()),
+    ] {
         let q = quality_scores(&measurements, w);
         let best = names[q
             .iter()
@@ -142,7 +155,10 @@ fn main() {
             .unwrap()
             .0]
             .clone();
-        println!("Q ({label}): best codec = {best}  scores = {:?}", q.iter().map(|x| (x * 100.0).round() / 100.0).collect::<Vec<_>>());
+        println!(
+            "Q ({label}): best codec = {best}  scores = {:?}",
+            q.iter().map(|x| (x * 100.0).round() / 100.0).collect::<Vec<_>>()
+        );
     }
 
     // ----- optimizer-state quantizers ------------------------------------

@@ -45,10 +45,8 @@ fn main() {
         // measured payloads (not just the analytic sizes)
         let packed = bitmask::encode_packed(base.bytes(), curr.bytes(), 2).unwrap().len();
         let naive = bitmask::encode_naive(base.bytes(), curr.bytes(), 2).unwrap().len();
-        let coo16 =
-            coo::encode(base.bytes(), curr.bytes(), 2, coo::IndexWidth::U16).unwrap().len();
-        let coo32 =
-            coo::encode(base.bytes(), curr.bytes(), 2, coo::IndexWidth::U32).unwrap().len();
+        let coo16 = coo::encode(base.bytes(), curr.bytes(), 2, coo::IndexWidth::U16).unwrap().len();
+        let coo32 = coo::encode(base.bytes(), curr.bytes(), 2, coo::IndexWidth::U32).unwrap().len();
         let ratios = [
             raw as f64 / packed as f64,
             raw as f64 / naive as f64,

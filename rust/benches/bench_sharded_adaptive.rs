@@ -1,0 +1,146 @@
+//! Static vs adaptive per-rank codec selection across mp×pp layouts
+//! (paper §5.3.1, Figs. 10–11, extended to the planned path).
+//!
+//! For every layout the same deterministic 3-stage trajectory (early 90%
+//! churn / mid 25% / late 2%) is sharded and compressed twice: once with
+//! the paper-default static `Policy::bitsnap()` on every rank, once with
+//! one [`AdaptivePolicy`] per rank probing its own shard, all ranks
+//! pooling encode-throughput feedback through a [`SharedCalibration`].
+//! Per save, the **simulated parallel time** is the slowest rank's
+//! encode (min-of-two runs) plus that rank's payload over the modeled
+//! write bandwidth — ranks compress and persist independently.
+//!
+//! Hard assertion per layout: adaptive ≤ static on simulated parallel
+//! time or on compressed bytes. Emits `BENCH_sharded_adaptive.json`
+//! (override with env `BENCH_OUT`).
+//!
+//! Run: `cargo bench --bench bench_sharded_adaptive` (env N for dict
+//! size, WRITE_BPS for a different storage tier)
+
+use bitsnap::adapt::{
+    default_stages, simulate_sharded_trajectory, AdaptiveConfig, AdaptivePolicy, Calibration,
+    ShardedSimSave, SharedCalibration, StageConfig, StaticPolicySource, DEFAULT_WRITE_BPS,
+};
+use bitsnap::bench::{fmt_bytes, Table};
+use bitsnap::compress::delta::Policy;
+use bitsnap::train::Parallelism;
+
+const SAVES_PER_STAGE: u64 = 3;
+const MAX_CACHED: u64 = 3;
+const LAYOUTS: [(usize, usize); 5] = [(1, 1), (4, 1), (2, 2), (1, 4), (8, 1)];
+
+#[derive(Clone, Copy, Default)]
+struct ArmTotals {
+    raw_bytes: usize,
+    compressed_bytes: usize,
+    parallel_secs: f64,
+}
+
+impl ArmTotals {
+    fn ratio(&self) -> f64 {
+        self.raw_bytes as f64 / self.compressed_bytes.max(1) as f64
+    }
+}
+
+/// Fold per-save results into totals: each save costs the slowest rank's
+/// encode + write (ranks run concurrently in a real fleet).
+fn totals(saves: &[ShardedSimSave], write_bps: f64) -> ArmTotals {
+    let mut t = ArmTotals::default();
+    for s in saves {
+        t.raw_bytes += s.raw_bytes;
+        t.compressed_bytes += s.payload_bytes;
+        t.parallel_secs += s.parallel_secs(write_bps);
+    }
+    t
+}
+
+fn main() {
+    let params: usize = std::env::var("N").ok().and_then(|v| v.parse().ok()).unwrap_or(1 << 20);
+    let write_bps: f64 = std::env::var("WRITE_BPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(DEFAULT_WRITE_BPS);
+    println!(
+        "== sharded adaptive vs static: {params} params, 3 stages x {SAVES_PER_STAGE} saves, \
+         write {:.2} GB/s ==\n",
+        write_bps / 1e9
+    );
+    let stages = default_stages(SAVES_PER_STAGE);
+    // one host-measured calibration reused as every layout's starting
+    // point; each adaptive arm then self-corrects it from its own saves
+    let measured = Calibration::measure(1 << 18);
+
+    let mut table = Table::new(&[
+        "layout", "static ratio", "adaptive ratio", "static par", "adaptive par", "winner",
+    ]);
+    let mut rows = Vec::new();
+    for (mp, pp) in LAYOUTS {
+        let p = Parallelism::new(mp, pp);
+        let mut static_sources: Vec<StaticPolicySource> =
+            (0..p.world()).map(|_| StaticPolicySource::new(Policy::bitsnap())).collect();
+        let static_saves =
+            simulate_sharded_trajectory(params, &stages, MAX_CACHED, p, &mut static_sources)
+                .unwrap();
+        let st = totals(&static_saves, write_bps);
+
+        let cfg = AdaptiveConfig {
+            stage: StageConfig { window: 2, ..StageConfig::default() },
+            ..AdaptiveConfig::default()
+        };
+        let shared = SharedCalibration::new(measured.clone());
+        let mut adaptive_sources =
+            AdaptivePolicy::per_rank(p.world(), cfg, shared, Some(write_bps));
+        let adaptive_saves =
+            simulate_sharded_trajectory(params, &stages, MAX_CACHED, p, &mut adaptive_sources)
+                .unwrap();
+        let at = totals(&adaptive_saves, write_bps);
+
+        let time_win = at.parallel_secs <= st.parallel_secs;
+        let bytes_win = at.compressed_bytes <= st.compressed_bytes;
+        assert!(
+            time_win || bytes_win,
+            "{}: adaptive lost both axes (time {:.4}s vs {:.4}s, bytes {} vs {})",
+            p.label(),
+            at.parallel_secs,
+            st.parallel_secs,
+            at.compressed_bytes,
+            st.compressed_bytes
+        );
+        table.row(&[
+            p.label(),
+            format!("{:.2}x", st.ratio()),
+            format!("{:.2}x", at.ratio()),
+            format!("{:.3} s", st.parallel_secs),
+            format!("{:.3} s", at.parallel_secs),
+            match (time_win, bytes_win) {
+                (true, true) => "adaptive (both)".to_string(),
+                (true, false) => "adaptive (time)".to_string(),
+                (false, true) => "adaptive (bytes)".to_string(),
+                (false, false) => unreachable!(),
+            },
+        ]);
+        rows.push(format!(
+            "    {{\"mp\": {mp}, \"pp\": {pp}, \"static\": {{\"ratio\": {:.4}, \
+             \"parallel_secs\": {:.6}, \"compressed_bytes\": {}}}, \"adaptive\": \
+             {{\"ratio\": {:.4}, \"parallel_secs\": {:.6}, \"compressed_bytes\": {}}}}}",
+            st.ratio(),
+            st.parallel_secs,
+            st.compressed_bytes,
+            at.ratio(),
+            at.parallel_secs,
+            at.compressed_bytes
+        ));
+    }
+    table.print();
+    println!("\nadaptive ≤ static on parallel time or bytes for every layout (hard-asserted)");
+
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_sharded_adaptive.json".to_string());
+    let json = format!(
+        "{{\n  \"params\": {params},\n  \"write_bps\": {write_bps},\n  \"saves_per_stage\": \
+         {SAVES_PER_STAGE},\n  \"layouts\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write(&out_path, json).expect("write bench json");
+    println!("wrote {out_path}");
+}

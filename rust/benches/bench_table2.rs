@@ -104,5 +104,7 @@ fn main() {
         let _ = std::fs::remove_dir_all(&store_root);
     }
     table.print();
-    println!("\n(BitSnap column = training-blocking time; persistence continues async, as in the paper)");
+    println!(
+        "\n(BitSnap column = training-blocking time; persistence continues async, as in the paper)"
+    );
 }

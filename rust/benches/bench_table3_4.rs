@@ -83,7 +83,9 @@ fn main() {
     }
 
     println!("Table 3: MRE / MSE of dequantized optimizer states (cluster quantization)\n");
-    let mut t3 = Table::new(&["Metric"].iter().map(|s| *s).chain(rows.iter().map(|r| r.label.as_str())).collect::<Vec<_>>().as_slice());
+    let headers: Vec<&str> =
+        ["Metric"].iter().copied().chain(rows.iter().map(|r| r.label.as_str())).collect();
+    let mut t3 = Table::new(headers.as_slice());
     let mut cells_mre1 = vec!["Adam1-MRE".to_string()];
     let mut cells_mse1 = vec!["Adam1-MSE".to_string()];
     let mut cells_mre2 = vec!["Adam2-MRE".to_string()];

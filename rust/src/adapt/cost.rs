@@ -16,6 +16,7 @@
 //! the storage-footprint tiebreak.
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use crate::compress::{bitmask, cluster_quant, coo, prune, CodecId};
 use crate::engine::Storage;
@@ -26,6 +27,14 @@ use super::probe::TensorProbe;
 /// Write bandwidth assumed when the storage backend is unthrottled —
 /// the paper's Table-1 NVMe M.2 figure (3500 MB/s).
 pub const DEFAULT_WRITE_BPS: f64 = 3500e6;
+
+/// Weight a fresh throughput observation carries against the running
+/// estimate (see [`Calibration::observe_encode`]).
+const OBSERVE_EWMA: f64 = 0.3;
+
+/// Cap on how far a single observation may move a throughput estimate —
+/// one preempted save must not wreck the codec ordering.
+const OBSERVE_MAX_STEP: f64 = 4.0;
 
 /// Per-codec sustained encode throughput in raw bytes/sec.
 #[derive(Clone, Debug)]
@@ -129,6 +138,58 @@ impl Calibration {
     pub fn set(&mut self, codec: CodecId, bps: f64) {
         self.encode_bps.insert(codec, bps);
     }
+
+    /// Fold one observed encode measurement (`raw_bytes` compressed in
+    /// `secs`) into the codec's throughput estimate. This is the
+    /// feedback half of the loop: the controller predicts from the
+    /// calibration, the engine reports what the save actually cost, and
+    /// the EWMA drags the estimate toward reality over a run. A single
+    /// observation moves the estimate at most [`OBSERVE_MAX_STEP`]x in
+    /// either direction, so one preempted save cannot flip codec order.
+    pub fn observe_encode(&mut self, codec: CodecId, raw_bytes: usize, secs: f64) {
+        if raw_bytes == 0 || !secs.is_finite() || secs <= 0.0 {
+            return;
+        }
+        let current = self.encode_bps(codec);
+        let observed = (raw_bytes as f64 / secs)
+            .clamp(current / OBSERVE_MAX_STEP, current * OBSERVE_MAX_STEP);
+        self.encode_bps.insert(codec, current * (1.0 - OBSERVE_EWMA) + observed * OBSERVE_EWMA);
+    }
+}
+
+/// A [`Calibration`] shared by several controllers — the per-rank
+/// [`super::AdaptivePolicy`] instances of an mp×pp sharded save all feed
+/// their [`super::SaveOutcome`]s into one table, so every rank's
+/// predictions improve from every rank's measurements (the paper's
+/// compression cost is per-rank, but the codecs' throughput is a property
+/// of the host class, not of the shard).
+#[derive(Clone, Debug)]
+pub struct SharedCalibration {
+    inner: Arc<Mutex<Calibration>>,
+}
+
+impl SharedCalibration {
+    pub fn new(calibration: Calibration) -> Self {
+        Self { inner: Arc::new(Mutex::new(calibration)) }
+    }
+
+    pub fn encode_bps(&self, codec: CodecId) -> f64 {
+        self.inner.lock().unwrap().encode_bps(codec)
+    }
+
+    pub fn set(&self, codec: CodecId, bps: f64) {
+        self.inner.lock().unwrap().set(codec, bps);
+    }
+
+    /// See [`Calibration::observe_encode`].
+    pub fn observe_encode(&self, codec: CodecId, raw_bytes: usize, secs: f64) {
+        self.inner.lock().unwrap().observe_encode(codec, raw_bytes, secs);
+    }
+
+    /// A point-in-time copy of the table (reports, tests).
+    pub fn snapshot(&self) -> Calibration {
+        self.inner.lock().unwrap().clone()
+    }
 }
 
 /// Predicted cost of compressing one tensor with one codec.
@@ -155,12 +216,18 @@ impl CostEstimate {
 /// The cost model: calibration + effective write bandwidth.
 #[derive(Clone, Debug)]
 pub struct CostModel {
-    calibration: Calibration,
+    calibration: SharedCalibration,
     write_bps: f64,
 }
 
 impl CostModel {
     pub fn new(calibration: Calibration, write_bps: Option<f64>) -> Self {
+        Self::shared(SharedCalibration::new(calibration), write_bps)
+    }
+
+    /// A model reading (and feeding back into) a calibration shared with
+    /// other controllers — the mp×pp per-rank construction.
+    pub fn shared(calibration: SharedCalibration, write_bps: Option<f64>) -> Self {
         Self { calibration, write_bps: write_bps.unwrap_or(DEFAULT_WRITE_BPS) }
     }
 
@@ -173,8 +240,13 @@ impl CostModel {
         self.write_bps
     }
 
-    pub fn calibration(&self) -> &Calibration {
-        &self.calibration
+    pub fn calibration(&self) -> Calibration {
+        self.calibration.snapshot()
+    }
+
+    /// See [`Calibration::observe_encode`].
+    pub fn observe_encode(&self, codec: CodecId, raw_bytes: usize, secs: f64) {
+        self.calibration.observe_encode(codec, raw_bytes, secs);
     }
 
     /// Predicted payload bytes for `codec` on the probed tensor.
@@ -324,5 +396,44 @@ mod tests {
             assert!(bps > 1e6, "{codec:?} {bps}");
             assert!(bps.is_finite());
         }
+    }
+
+    #[test]
+    fn observe_encode_converges_with_bounded_steps() {
+        let mut cal = Calibration::default_host();
+        let start = cal.encode_bps(CodecId::BitmaskPacked); // 5e9
+        // a wildly slow observation (raw 1 GB in 10 s = 0.1 GB/s) is
+        // clamped: one step can shrink the estimate at most 4x-worth
+        cal.observe_encode(CodecId::BitmaskPacked, 1 << 30, 10.0);
+        let after_one = cal.encode_bps(CodecId::BitmaskPacked);
+        assert!(after_one < start);
+        assert!(after_one > start / 4.0, "single step overshot: {after_one}");
+        // repeated consistent observations converge toward the truth
+        for _ in 0..64 {
+            cal.observe_encode(CodecId::BitmaskPacked, 1 << 30, 1.0); // ~1.07e9
+        }
+        let settled = cal.encode_bps(CodecId::BitmaskPacked);
+        assert!((settled - (1u64 << 30) as f64).abs() / 1e9 < 0.2, "settled {settled}");
+        // junk observations are ignored
+        let before = cal.encode_bps(CodecId::Raw);
+        cal.observe_encode(CodecId::Raw, 0, 1.0);
+        cal.observe_encode(CodecId::Raw, 100, 0.0);
+        cal.observe_encode(CodecId::Raw, 100, f64::NAN);
+        assert_eq!(cal.encode_bps(CodecId::Raw), before);
+    }
+
+    #[test]
+    fn shared_calibration_propagates_across_clones() {
+        let shared = SharedCalibration::new(Calibration::default_host());
+        let a = CostModel::shared(shared.clone(), Some(1e9));
+        let b = CostModel::shared(shared.clone(), Some(1e9));
+        let before = b.calibration().encode_bps(CodecId::Raw);
+        // rank A observes; rank B's predictions must move too
+        for _ in 0..8 {
+            a.observe_encode(CodecId::Raw, 1 << 20, 1.0); // ~1 MB/s, far below default
+        }
+        let after = b.calibration().encode_bps(CodecId::Raw);
+        assert!(after < before, "shared update not visible: {before} -> {after}");
+        assert_eq!(shared.snapshot().encode_bps(CodecId::Raw), after);
     }
 }

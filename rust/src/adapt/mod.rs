@@ -25,10 +25,13 @@ pub mod probe;
 pub mod sim;
 pub mod stage;
 
-pub use cost::{Calibration, CostEstimate, CostModel, DEFAULT_WRITE_BPS};
+pub use cost::{Calibration, CostEstimate, CostModel, SharedCalibration, DEFAULT_WRITE_BPS};
 pub use policy::{AdaptiveConfig, AdaptivePolicy, DecisionRecord, SaveDecisionSummary};
 pub use probe::{mean_model_density, probe_state_dict, probe_tensor, ProbeConfig, TensorProbe};
-pub use sim::{default_stages, simulate_trajectory, SimSave, SimStage};
+pub use sim::{
+    default_stages, simulate_sharded_trajectory, simulate_trajectory, ShardedSimSave, SimSave,
+    SimStage,
+};
 pub use stage::{StageConfig, StageDetector, TelemetrySample, TrainingStage};
 
 use crate::compress::delta::{CheckpointPlan, Policy};
@@ -53,6 +56,13 @@ pub struct SaveOutcome {
     /// Compressed *payload* bytes — what the cost model predicts —
     /// excluding container framing (names, headers, CRC).
     pub compressed_bytes: usize,
+    /// Wall time of the compression pass alone — what encode-throughput
+    /// estimates are corrected against. Excludes planning, container
+    /// framing and shm staging (folding those in would bias the
+    /// calibration's bytes/sec systematically low).
+    pub encode: std::time::Duration,
+    /// Full critical-path time the trainer was blocked (compress +
+    /// serialize + shm stage + enqueue).
     pub blocking: std::time::Duration,
 }
 

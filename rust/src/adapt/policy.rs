@@ -32,7 +32,7 @@ use crate::compress::delta::{CheckpointPlan, Policy, TensorDirective};
 use crate::compress::CodecId;
 use crate::tensor::StateKind;
 
-use super::cost::{Calibration, CostModel};
+use super::cost::{Calibration, CostModel, SharedCalibration};
 use super::probe::{self, ProbeConfig, TensorProbe};
 use super::stage::{StageConfig, StageDetector, TelemetrySample, TrainingStage};
 use super::{PolicySource, SaveContext, SaveOutcome};
@@ -115,6 +115,10 @@ pub struct AdaptivePolicy {
     sticky_lossless: HashSet<String>,
     decisions: Vec<DecisionRecord>,
     outcomes: HashMap<u64, usize>,
+    /// Per-iteration predicted encode work — (codec, raw bytes, predicted
+    /// seconds) per tensor — awaiting the engine's [`SaveOutcome`] so the
+    /// calibration can be corrected from the measured blocking time.
+    pending_encode: HashMap<u64, Vec<(CodecId, usize, f64)>>,
 }
 
 impl AdaptivePolicy {
@@ -128,7 +132,25 @@ impl AdaptivePolicy {
             sticky_lossless: HashSet::new(),
             decisions: Vec::new(),
             outcomes: HashMap::new(),
+            pending_encode: HashMap::new(),
         }
+    }
+
+    /// One controller per mp×pp rank, all reading and correcting the same
+    /// [`SharedCalibration`] — the construction sharded saves use. Probes
+    /// run on each rank's shard, so density and range decisions reflect
+    /// what that rank actually compresses; throughput knowledge is pooled.
+    pub fn per_rank(
+        world: usize,
+        cfg: AdaptiveConfig,
+        calibration: SharedCalibration,
+        write_bps: Option<f64>,
+    ) -> Vec<AdaptivePolicy> {
+        (0..world)
+            .map(|_| {
+                AdaptivePolicy::new(cfg.clone(), CostModel::shared(calibration.clone(), write_bps))
+            })
+            .collect()
     }
 
     /// Controller with default config, constant calibration, and the
@@ -264,6 +286,10 @@ impl AdaptivePolicy {
         switched: bool,
     ) {
         let est = self.cost.estimate(codec, p);
+        self.pending_encode
+            .entry(iteration)
+            .or_default()
+            .push((codec, p.raw_bytes(), est.encode_secs));
         self.decisions.push(DecisionRecord {
             iteration,
             stage,
@@ -324,6 +350,26 @@ impl PolicySource for AdaptivePolicy {
             let min = self.outcomes.keys().copied().min().unwrap();
             self.outcomes.remove(&min);
         }
+        // close the throughput loop: split the measured *encode* time
+        // (compression only — framing and shm staging would bias the
+        // estimates low) across the codecs this save used, proportional
+        // to each one's predicted share, and fold the implied bytes/sec
+        // back into the (possibly shared) calibration
+        if let Some(items) = self.pending_encode.remove(&outcome.iteration) {
+            let predicted: f64 = items.iter().map(|(_, _, secs)| secs).sum();
+            let actual = outcome.encode.as_secs_f64();
+            if predicted > 0.0 && actual > 0.0 {
+                for (codec, raw_bytes, pred_secs) in items {
+                    self.cost.observe_encode(codec, raw_bytes, actual * (pred_secs / predicted));
+                }
+            }
+        }
+        if self.pending_encode.len() > 64 {
+            // a save that never reported back (crashed engine) must not
+            // leak its prediction forever
+            let min = self.pending_encode.keys().copied().min().unwrap();
+            self.pending_encode.remove(&min);
+        }
     }
 
     fn describe(&self) -> String {
@@ -354,8 +400,7 @@ mod tests {
         let plan = policy.plan(c);
         // materialize via the compressor so the directive→codec mapping is
         // the one checkpoints will actually see
-        let (ckpt, _) =
-            compress_state_dict_planned(c.sd, c.base, &plan, c.iteration, 0).unwrap();
+        let (ckpt, _) = compress_state_dict_planned(c.sd, c.base, &plan, c.iteration, 0).unwrap();
         ckpt.entries.iter().find(|e| e.name == name).unwrap().compressed.codec
     }
 
@@ -570,6 +615,37 @@ mod tests {
     }
 
     #[test]
+    fn save_outcomes_correct_the_shared_calibration() {
+        let base = StateDict::synthetic_gpt(1 << 14, 30);
+        let shared = SharedCalibration::new(Calibration::default_host());
+        let mut ranks =
+            AdaptivePolicy::per_rank(2, AdaptiveConfig::default(), shared.clone(), None);
+        assert_eq!(ranks.len(), 2);
+        let mut sd = base.clone();
+        sd.perturb_model_states(0.1, 31);
+        let c = ctx(10, &sd, Some(&base));
+        let plan = ranks[0].plan(&c);
+        assert!(plan.overrides() > 0);
+        let before = shared.snapshot().encode_bps(CodecId::ClusterQuant);
+        // rank 0 reports a save that took far longer than predicted: the
+        // throughput table must drop (bounded by the per-step clamp)
+        ranks[0].observe(&SaveOutcome {
+            iteration: 10,
+            is_base: false,
+            raw_bytes: sd.total_bytes(),
+            compressed_bytes: 1,
+            encode: std::time::Duration::from_secs(60),
+            blocking: std::time::Duration::from_secs(61),
+        });
+        let after = shared.snapshot().encode_bps(CodecId::ClusterQuant);
+        assert!(after < before, "calibration did not move: {before} -> {after}");
+        assert!(after >= before / 4.0, "single outcome moved too far: {before} -> {after}");
+        // the correction is visible to the other rank's cost model
+        let peer = ranks[1].cost_model().calibration().encode_bps(CodecId::ClusterQuant);
+        assert_eq!(peer, after);
+    }
+
+    #[test]
     fn summaries_aggregate_per_save() {
         let base = StateDict::synthetic_gpt(1 << 14, 13);
         let mut policy = AdaptivePolicy::default_host();
@@ -584,6 +660,7 @@ mod tests {
             is_base: false,
             raw_bytes: sd.total_bytes(),
             compressed_bytes: 12345,
+            encode: std::time::Duration::ZERO,
             blocking: std::time::Duration::ZERO,
         });
         let sums = policy.summaries();

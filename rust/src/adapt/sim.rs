@@ -16,6 +16,7 @@ use std::time::{Duration, Instant};
 use crate::compress::delta::compress_state_dict_planned;
 use crate::compress::CompressError;
 use crate::tensor::StateDict;
+use crate::train::parallel::{shard_state_dict, Parallelism};
 
 use super::{PolicySource, SaveContext, SaveOutcome};
 
@@ -109,6 +110,7 @@ pub fn simulate_trajectory(
                 is_base: make_base,
                 raw_bytes,
                 compressed_bytes: payload_bytes,
+                encode: Duration::from_secs_f64(c1.min(c2)),
                 blocking: Duration::from_secs_f64(encode_secs),
             });
             out.push(SimSave {
@@ -121,6 +123,139 @@ pub fn simulate_trajectory(
             });
             if make_base {
                 base = Some((iteration, sd.clone()));
+                saves_since_base = 1;
+            } else {
+                saves_since_base += 1;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// One simulated save of an mp×pp sharded trajectory.
+#[derive(Clone, Debug)]
+pub struct ShardedSimSave {
+    pub iteration: u64,
+    pub is_base: bool,
+    /// Index into the stage list this save belongs to.
+    pub stage_index: usize,
+    /// Raw bytes of the full (unsharded) state dict.
+    pub raw_bytes: usize,
+    /// Compressed payload bytes summed over every rank shard.
+    pub payload_bytes: usize,
+    /// Per-rank critical-path seconds (plan + min-of-two compression),
+    /// indexed `pp_stage * mp + mp_rank`.
+    pub per_rank_encode_secs: Vec<f64>,
+    /// Per-rank compressed payload bytes.
+    pub per_rank_payload: Vec<usize>,
+}
+
+impl ShardedSimSave {
+    /// What an mp×pp fleet would block for: the slowest rank's encode
+    /// (ranks compress independently, no cross-rank communication).
+    pub fn parallel_encode_secs(&self) -> f64 {
+        self.per_rank_encode_secs.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// The save's simulated end-to-end parallel cost under a modeled
+    /// write bandwidth: the slowest rank's encode + its own shard's
+    /// persist (each rank writes its shard concurrently). The single
+    /// definition the `adapt-report --sharded` CLI and
+    /// `bench_sharded_adaptive` both fold over.
+    pub fn parallel_secs(&self, write_bps: f64) -> f64 {
+        self.per_rank_encode_secs
+            .iter()
+            .zip(&self.per_rank_payload)
+            .map(|(secs, payload)| secs + *payload as f64 / write_bps)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Drive per-rank policy sources through the trajectory under an mp×pp
+/// layout: each save shards the state dict (and its base) exactly like
+/// [`crate::train::parallel::compress_sharded`], plans and compresses
+/// every shard with its own source, and reports per-rank outcomes back so
+/// shared calibrations self-correct. `sources` must hold one source per
+/// rank (`p.world()`). Deterministic for fixed inputs, like
+/// [`simulate_trajectory`].
+pub fn simulate_sharded_trajectory<S: PolicySource>(
+    params: usize,
+    stages: &[SimStage],
+    max_cached: u64,
+    p: Parallelism,
+    sources: &mut [S],
+) -> Result<Vec<ShardedSimSave>, CompressError> {
+    assert_eq!(sources.len(), p.world(), "one policy source per rank");
+    let mut sd = StateDict::synthetic_gpt(params, 1);
+    let mut base_shards: Option<(u64, Vec<StateDict>)> = None;
+    let mut saves_since_base = 0u64;
+    let mut out = Vec::new();
+    let mut save_no = 0u64;
+    for (stage_index, stage) in stages.iter().enumerate() {
+        for _ in 0..stage.saves {
+            save_no += 1;
+            let iteration = save_no * 10;
+            if save_no > 1 {
+                sd.perturb_model_states(stage.change_rate, 7000 + save_no);
+            }
+            let curr_shards = shard_state_dict(&sd, p);
+            let make_base = base_shards.is_none() || saves_since_base >= max_cached;
+            let base_iter = match (&base_shards, make_base) {
+                (Some((bi, _)), false) => *bi,
+                _ => iteration,
+            };
+            let mut per_rank_encode_secs = Vec::with_capacity(curr_shards.len());
+            let mut per_rank_payload = Vec::with_capacity(curr_shards.len());
+            for (rank, shard) in curr_shards.iter().enumerate() {
+                let source = &mut sources[rank];
+                // a few trainer steps' worth of loss telemetry per save
+                for t in 0..3u64 {
+                    source.telemetry(iteration + t, stage.loss);
+                }
+                let base_ref = if make_base {
+                    None
+                } else {
+                    base_shards.as_ref().map(|(_, b)| &b[rank])
+                };
+                let t_plan = Instant::now();
+                let plan = source.plan(&SaveContext {
+                    iteration,
+                    is_base: make_base,
+                    sd: shard,
+                    base: base_ref,
+                });
+                let plan_secs = t_plan.elapsed().as_secs_f64();
+                let t1 = Instant::now();
+                let (ckpt, _) =
+                    compress_state_dict_planned(shard, base_ref, &plan, iteration, base_iter)?;
+                let c1 = t1.elapsed().as_secs_f64();
+                let t2 = Instant::now();
+                let _ = compress_state_dict_planned(shard, base_ref, &plan, iteration, base_iter)?;
+                let c2 = t2.elapsed().as_secs_f64();
+                let encode_secs = plan_secs + c1.min(c2);
+                let payload = ckpt.payload_bytes();
+                source.observe(&SaveOutcome {
+                    iteration,
+                    is_base: make_base,
+                    raw_bytes: shard.total_bytes(),
+                    compressed_bytes: payload,
+                    encode: Duration::from_secs_f64(c1.min(c2)),
+                    blocking: Duration::from_secs_f64(encode_secs),
+                });
+                per_rank_encode_secs.push(encode_secs);
+                per_rank_payload.push(payload);
+            }
+            out.push(ShardedSimSave {
+                iteration,
+                is_base: make_base,
+                stage_index,
+                raw_bytes: sd.total_bytes(),
+                payload_bytes: per_rank_payload.iter().sum(),
+                per_rank_encode_secs,
+                per_rank_payload,
+            });
+            if make_base {
+                base_shards = Some((iteration, curr_shards));
                 saves_since_base = 1;
             } else {
                 saves_since_base += 1;
@@ -167,6 +302,46 @@ mod tests {
             assert_eq!(x.raw_bytes, y.raw_bytes);
             assert_eq!(x.payload_bytes, y.payload_bytes);
             assert_eq!(x.is_base, y.is_base);
+        }
+    }
+
+    fn static_sources(policy: Policy, world: usize) -> Vec<StaticPolicySource> {
+        (0..world).map(|_| StaticPolicySource::new(policy)).collect()
+    }
+
+    #[test]
+    fn sharded_trajectory_matches_unsharded_payloads_and_cadence() {
+        // mp1 pp1 with a static policy is exactly the unsharded simulator
+        let p = Parallelism::new(1, 1);
+        let mut sharded = static_sources(Policy::lossless(), 1);
+        let rs = simulate_sharded_trajectory(1 << 12, &default_stages(2), 3, p, &mut sharded)
+            .unwrap();
+        let mut flat = StaticPolicySource::new(Policy::lossless());
+        let rf = simulate_trajectory(1 << 12, &default_stages(2), 3, &mut flat).unwrap();
+        assert_eq!(rs.len(), rf.len());
+        for (s, f) in rs.iter().zip(&rf) {
+            assert_eq!(s.iteration, f.iteration);
+            assert_eq!(s.is_base, f.is_base);
+            assert_eq!(s.raw_bytes, f.raw_bytes);
+            assert_eq!(s.payload_bytes, f.payload_bytes);
+            assert_eq!(s.per_rank_payload.len(), 1);
+        }
+    }
+
+    #[test]
+    fn sharded_trajectory_partitions_bytes_across_ranks() {
+        let p = Parallelism::new(2, 2);
+        let mut sources = static_sources(Policy::raw(), p.world());
+        let rs = simulate_sharded_trajectory(1 << 12, &default_stages(1), 2, p, &mut sources)
+            .unwrap();
+        for s in &rs {
+            assert_eq!(s.per_rank_payload.len(), 4);
+            assert_eq!(s.per_rank_encode_secs.len(), 4);
+            // raw policy: shard payloads must sum to the full dict
+            assert_eq!(s.payload_bytes, s.raw_bytes);
+            assert_eq!(s.per_rank_payload.iter().sum::<usize>(), s.payload_bytes);
+            assert!(s.parallel_encode_secs() > 0.0);
+            assert!(s.parallel_encode_secs() <= s.per_rank_encode_secs.iter().sum::<f64>());
         }
     }
 }

@@ -261,7 +261,9 @@ mod tests {
 
     #[test]
     fn packed_roundtrip_various_sizes() {
-        for &(n, c) in &[(1usize, 0usize), (1, 1), (8, 3), (9, 9), (1000, 0), (1000, 137), (1000, 1000)] {
+        for &(n, c) in
+            &[(1usize, 0usize), (1, 1), (8, 3), (9, 9), (1000, 0), (1000, 137), (1000, 1000)]
+        {
             let (base, curr) = mk_pair(n, c, 2, n as u64 * 31 + c as u64);
             let p = encode_packed(&base, &curr, 2).unwrap();
             assert_eq!(decode_packed(&base, &p, 2).unwrap(), curr, "n={n} c={c}");

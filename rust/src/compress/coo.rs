@@ -47,7 +47,9 @@ pub fn encode(
         return Err(CompressError::Shape("coo u32: tensor too long".into()));
     }
     let changed: Vec<usize> = (0..n)
-        .filter(|&i| base[i * elem_size..(i + 1) * elem_size] != curr[i * elem_size..(i + 1) * elem_size])
+        .filter(|&i| {
+            base[i * elem_size..(i + 1) * elem_size] != curr[i * elem_size..(i + 1) * elem_size]
+        })
         .collect();
     let mut out = Vec::new();
     out.extend_from_slice(&(n as u64).to_le_bytes());

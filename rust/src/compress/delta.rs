@@ -102,6 +102,13 @@ impl CompressedCheckpoint {
     pub fn payload_bytes(&self) -> usize {
         self.entries.iter().map(|e| e.compressed.payload.len()).sum()
     }
+
+    /// (name, codec) of every entry in container order — what a sharded
+    /// save records into its manifest so recovery tooling can audit codec
+    /// choices without re-reading the rank containers.
+    pub fn entry_codecs(&self) -> Vec<(String, CodecId)> {
+        self.entries.iter().map(|e| (e.name.clone(), e.compressed.codec)).collect()
+    }
 }
 
 /// What to do with *one* tensor, as resolved by a policy source (the
@@ -439,8 +446,7 @@ mod tests {
         let base = small_dict(4);
         let mut curr = base.clone();
         curr.perturb_model_states(0.05, 5);
-        let cd =
-            compress_state_dict(&curr, Some(&base), Policy::lossless(), 20, 0).unwrap();
+        let cd = compress_state_dict(&curr, Some(&base), Policy::lossless(), 20, 0).unwrap();
         assert!(decompress_state_dict(&cd, None).is_err());
     }
 
@@ -451,11 +457,13 @@ mod tests {
         curr.perturb_model_states(0.01, 7);
         let policy = Policy { model: ModelPolicy::Auto, optimizer: OptimizerPolicy::Raw };
         let cd = compress_state_dict(&curr, Some(&base), policy, 1, 0).unwrap();
-        let model_entry =
-            cd.entries.iter().find(|e| e.kind == StateKind::ModelState).unwrap();
+        let model_entry = cd.entries.iter().find(|e| e.kind == StateKind::ModelState).unwrap();
         assert_ne!(model_entry.compressed.codec, CodecId::Raw);
         let rd = decompress_state_dict(&cd, Some(&base)).unwrap();
-        assert_eq!(rd.get("layers.0.weight").unwrap().tensor, curr.get("layers.0.weight").unwrap().tensor);
+        assert_eq!(
+            rd.get("layers.0.weight").unwrap().tensor,
+            curr.get("layers.0.weight").unwrap().tensor
+        );
     }
 
     #[test]
@@ -465,8 +473,7 @@ mod tests {
         curr.perturb_model_states(1.0, 9);
         let policy = Policy { model: ModelPolicy::Auto, optimizer: OptimizerPolicy::Raw };
         let cd = compress_state_dict(&curr, Some(&base), policy, 1, 0).unwrap();
-        let model_entry =
-            cd.entries.iter().find(|e| e.kind == StateKind::ModelState).unwrap();
+        let model_entry = cd.entries.iter().find(|e| e.kind == StateKind::ModelState).unwrap();
         assert_eq!(model_entry.compressed.codec, CodecId::Raw);
     }
 
@@ -476,8 +483,7 @@ mod tests {
         let mut curr = base.clone();
         curr.perturb_model_states(0.1, 12);
         let plan = CheckpointPlan::uniform(Policy::bitsnap());
-        let (planned, _) =
-            compress_state_dict_planned(&curr, Some(&base), &plan, 10, 0).unwrap();
+        let (planned, _) = compress_state_dict_planned(&curr, Some(&base), &plan, 10, 0).unwrap();
         let legacy = compress_state_dict(&curr, Some(&base), Policy::bitsnap(), 10, 0).unwrap();
         assert_eq!(planned.entries.len(), legacy.entries.len());
         for (a, b) in planned.entries.iter().zip(&legacy.entries) {

@@ -164,7 +164,8 @@ pub fn decode(payload: &[u8]) -> Result<Vec<u8>, CompressError> {
                 && code >= first_code[len as usize]
                 && (code - first_code[len as usize]) < count_per_len[len as usize] as u32
             {
-                let sym = order[first_idx[len as usize] + (code - first_code[len as usize]) as usize];
+                let sym =
+                    order[first_idx[len as usize] + (code - first_code[len as usize]) as usize];
                 out.push(sym as u8);
                 break;
             }

@@ -93,8 +93,7 @@ mod tests {
         let mut rng = XorShiftRng::new(1);
         let vals = rng.normal_vec(5000, 0.0, 1.0);
         let t = HostTensor::from_f32(&[5000], &vals).unwrap();
-        let back =
-            decode(&encode(&t).unwrap(), DType::F32, &[5000]).unwrap().to_f32_vec().unwrap();
+        let back = decode(&encode(&t).unwrap(), DType::F32, &[5000]).unwrap().to_f32_vec().unwrap();
         let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
         let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let step = (hi - lo) / 255.0;

@@ -75,12 +75,18 @@ impl EngineConfig {
 
     /// Honor the paper's `MAX_CACHED_ITERATION` environment variable.
     pub fn with_env_overrides(mut self) -> Self {
-        if let Ok(v) = std::env::var("MAX_CACHED_ITERATION") {
-            if let Ok(k) = v.parse::<u64>() {
-                self.max_cached_iteration = k.max(1);
-            }
-        }
+        self.max_cached_iteration = env_max_cached(self.max_cached_iteration);
         self
+    }
+}
+
+/// The paper's `MAX_CACHED_ITERATION` environment override, shared by the
+/// single-rank and sharded engine configs: parse, clamp to >= 1, fall
+/// back to `current` when unset or unparsable.
+pub(crate) fn env_max_cached(current: u64) -> u64 {
+    match std::env::var("MAX_CACHED_ITERATION").ok().and_then(|v| v.parse::<u64>().ok()) {
+        Some(k) => k.max(1),
+        None => current,
     }
 }
 
@@ -89,12 +95,18 @@ impl EngineConfig {
 pub struct SaveReport {
     pub iteration: u64,
     pub is_base: bool,
+    /// Iteration of the base this save chains to (== `iteration` for a
+    /// base checkpoint).
+    pub base_iteration: u64,
     /// Wall time the training loop was blocked (compress + shm write + enqueue).
     pub blocking: Duration,
     /// Compression phase breakdown.
     pub timings: CompressTimings,
     pub raw_bytes: usize,
     pub compressed_bytes: usize,
+    /// Codec actually written per entry, in container order — what a
+    /// sharded save records into its manifest.
+    pub entry_codecs: Vec<(String, crate::compress::CodecId)>,
 }
 
 impl SaveReport {
@@ -192,15 +204,22 @@ impl CheckpointEngine {
         &self.shm
     }
 
+    /// Whether the next [`CheckpointEngine::save`] will write a full base
+    /// checkpoint (a base every `max_cached_iteration` checkpoints: base
+    /// + (k-1) deltas). The sharded engine uses this to verify fleet-wide
+    /// cadence agreement *before* any rank stages bytes.
+    pub fn next_save_is_base(&self) -> bool {
+        match &self.base {
+            None => true,
+            Some(_) => self.saves_since_base >= self.cfg.max_cached_iteration,
+        }
+    }
+
     /// Save a checkpoint. Blocking time is the returned `blocking`
     /// duration; persistence continues asynchronously.
     pub fn save(&mut self, iteration: u64, sd: &StateDict) -> Result<SaveReport, CompressError> {
         let t0 = Instant::now();
-        // a base every `max_cached_iteration` checkpoints: base + (k-1) deltas
-        let make_base = match &self.base {
-            None => true,
-            Some(_) => self.saves_since_base >= self.cfg.max_cached_iteration,
-        };
+        let make_base = self.next_save_is_base();
         let (base_iter, base_sd) = if make_base {
             (iteration, None)
         } else {
@@ -213,9 +232,12 @@ impl CheckpointEngine {
             sd,
             base: base_sd,
         });
+        let t_enc = Instant::now();
         let (ckpt, timings) =
             compress_state_dict_planned(sd, base_sd, &plan, iteration, base_iter)?;
+        let encode = t_enc.elapsed();
         let payload_bytes = ckpt.payload_bytes();
+        let entry_codecs = ckpt.entry_codecs();
         let bytes = container::serialize(&ckpt);
         self.shm.put(iteration, &bytes, make_base)?;
         self.tx
@@ -230,10 +252,12 @@ impl CheckpointEngine {
         let report = SaveReport {
             iteration,
             is_base: make_base,
+            base_iteration: base_iter,
             blocking: t0.elapsed(),
             timings,
             raw_bytes: sd.total_bytes(),
             compressed_bytes: bytes.len(),
+            entry_codecs,
         };
         // the policy source sees payload bytes (what its cost model
         // predicts), not the container length with framing and CRC
@@ -242,6 +266,7 @@ impl CheckpointEngine {
             is_base: make_base,
             raw_bytes: report.raw_bytes,
             compressed_bytes: payload_bytes,
+            encode,
             blocking: report.blocking,
         });
         Ok(report)

@@ -171,6 +171,167 @@ pub fn deserialize(data: &[u8]) -> Result<CompressedCheckpoint, CompressError> {
     Ok(ckpt)
 }
 
+pub const MANIFEST_MAGIC: &[u8; 4] = b"BSNM";
+pub const MANIFEST_VERSION: u32 = 1;
+
+/// One global tensor's record in a sharded-checkpoint manifest: where its
+/// slices live (pipeline stage + mp boundaries) and how each rank encoded
+/// its slice.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub kind: StateKind,
+    pub dtype: DType,
+    /// Global (unsharded) shape.
+    pub shape: Vec<usize>,
+    /// Pipeline stage whose mp ranks hold this tensor.
+    pub stage: usize,
+    /// `mp + 1` element offsets: mp rank `r` holds `[bounds[r], bounds[r + 1])`.
+    pub bounds: Vec<usize>,
+    /// Codec each mp rank wrote for its slice (index = mp rank).
+    pub codecs: Vec<CodecId>,
+}
+
+impl ManifestEntry {
+    /// Global element count.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The manifest of one mp×pp sharded checkpoint: rank layout, per-entry
+/// codec tags, and the shard boundaries recovery reslices along. Written
+/// next to the per-rank containers (`manifest.bsnm`); CRC-64 trailed like
+/// them so a torn write is detected at load time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardManifest {
+    pub iteration: u64,
+    /// Base the per-rank delta containers chain to (== `iteration` for a
+    /// base checkpoint).
+    pub base_iteration: u64,
+    pub mp: usize,
+    pub pp: usize,
+    /// Global entries in state-dict order.
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl ShardManifest {
+    pub fn world(&self) -> usize {
+        self.mp * self.pp
+    }
+
+    pub fn is_base(&self) -> bool {
+        self.iteration == self.base_iteration
+    }
+}
+
+/// Serialize a shard manifest (layout mirrors the container format).
+pub fn serialize_manifest(m: &ShardManifest) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + 96 * m.entries.len());
+    out.extend_from_slice(MANIFEST_MAGIC);
+    out.extend_from_slice(&MANIFEST_VERSION.to_le_bytes());
+    out.extend_from_slice(&m.iteration.to_le_bytes());
+    out.extend_from_slice(&m.base_iteration.to_le_bytes());
+    out.extend_from_slice(&(m.mp as u32).to_le_bytes());
+    out.extend_from_slice(&(m.pp as u32).to_le_bytes());
+    out.extend_from_slice(&(m.entries.len() as u32).to_le_bytes());
+    for e in &m.entries {
+        let name = e.name.as_bytes();
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name);
+        out.push(e.kind.tag());
+        out.push(e.dtype.tag());
+        out.push(e.shape.len() as u8);
+        for &d in &e.shape {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        out.extend_from_slice(&(e.stage as u32).to_le_bytes());
+        for &b in &e.bounds {
+            out.extend_from_slice(&(b as u64).to_le_bytes());
+        }
+        for &c in &e.codecs {
+            out.push(c.tag());
+        }
+    }
+    let crc = crc64(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Deserialize and CRC-verify a shard manifest, validating the recorded
+/// layout (monotonic exhaustive bounds, stages inside the pp range) so a
+/// corrupt manifest cannot direct a restore to misassemble tensors.
+pub fn deserialize_manifest(data: &[u8]) -> Result<ShardManifest, CompressError> {
+    if data.len() < 4 + 4 + 8 + 8 + 4 + 4 + 4 + 8 {
+        return Err(CompressError::Format("manifest too short".into()));
+    }
+    let (body, trailer) = data.split_at(data.len() - 8);
+    let stored_crc = u64::from_le_bytes(trailer.try_into().unwrap());
+    if crc64(body) != stored_crc {
+        return Err(CompressError::Format("manifest crc mismatch".into()));
+    }
+    let mut r = Reader { data: body, pos: 0 };
+    if r.take(4)? != MANIFEST_MAGIC {
+        return Err(CompressError::Format("bad manifest magic".into()));
+    }
+    let version = r.u32()?;
+    if version != MANIFEST_VERSION {
+        return Err(CompressError::Format(format!("unsupported manifest version {version}")));
+    }
+    let iteration = r.u64()?;
+    let base_iteration = r.u64()?;
+    let mp = r.u32()? as usize;
+    let pp = r.u32()? as usize;
+    if mp == 0 || pp == 0 {
+        return Err(CompressError::Format("manifest mp/pp must be >= 1".into()));
+    }
+    let n_entries = r.u32()? as usize;
+    let mut entries = Vec::with_capacity(n_entries);
+    for _ in 0..n_entries {
+        let name_len = r.u16()? as usize;
+        let name = String::from_utf8(r.take(name_len)?.to_vec())
+            .map_err(|_| CompressError::Format("bad manifest entry name".into()))?;
+        let kind = StateKind::from_tag(r.u8()?)
+            .ok_or_else(|| CompressError::Format("bad manifest state kind".into()))?;
+        let dtype = DType::from_tag(r.u8()?)
+            .ok_or_else(|| CompressError::Format("bad manifest dtype".into()))?;
+        let ndim = r.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u64()? as usize);
+        }
+        let stage = r.u32()? as usize;
+        if stage >= pp {
+            return Err(CompressError::Format(format!("manifest stage {stage} >= pp {pp}")));
+        }
+        let mut bounds = Vec::with_capacity(mp + 1);
+        for _ in 0..=mp {
+            bounds.push(r.u64()? as usize);
+        }
+        let len: usize = shape.iter().product();
+        if bounds[0] != 0 || bounds[mp] != len || bounds.windows(2).any(|w| w[0] > w[1]) {
+            return Err(CompressError::Format(format!(
+                "manifest entry {name}: bounds {bounds:?} do not cover 0..{len}"
+            )));
+        }
+        let mut codecs = Vec::with_capacity(mp);
+        for _ in 0..mp {
+            let codec = CodecId::from_tag(r.u8()?)
+                .ok_or_else(|| CompressError::Format("bad manifest codec".into()))?;
+            codecs.push(codec);
+        }
+        entries.push(ManifestEntry { name, kind, dtype, shape, stage, bounds, codecs });
+    }
+    if r.pos != body.len() {
+        return Err(CompressError::Format("trailing bytes in manifest".into()));
+    }
+    Ok(ShardManifest { iteration, base_iteration, mp, pp, entries })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -236,5 +397,72 @@ mod tests {
     fn crc64_known_vector() {
         // CRC-64/ECMA-182 of "123456789"
         assert_eq!(crc64(b"123456789"), 0x6C40_DF5F_0B49_7347);
+    }
+
+    fn sample_manifest() -> ShardManifest {
+        ShardManifest {
+            iteration: 120,
+            base_iteration: 100,
+            mp: 2,
+            pp: 2,
+            entries: vec![
+                ManifestEntry {
+                    name: "layers.0.weight".into(),
+                    kind: StateKind::ModelState,
+                    dtype: DType::F16,
+                    shape: vec![64],
+                    stage: 0,
+                    bounds: vec![0, 32, 64],
+                    codecs: vec![CodecId::BitmaskPacked, CodecId::Raw],
+                },
+                ManifestEntry {
+                    name: "optimizer.0.master".into(),
+                    kind: StateKind::MasterWeight,
+                    dtype: DType::F32,
+                    shape: vec![64],
+                    stage: 1,
+                    bounds: vec![0, 32, 64],
+                    codecs: vec![CodecId::ClusterQuant, CodecId::ClusterQuant],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips() {
+        let m = sample_manifest();
+        let bytes = serialize_manifest(&m);
+        let back = deserialize_manifest(&bytes).unwrap();
+        assert_eq!(back, m);
+        assert!(!back.is_base());
+        assert_eq!(back.world(), 4);
+    }
+
+    #[test]
+    fn manifest_crc_detects_corruption() {
+        let bytes = serialize_manifest(&sample_manifest());
+        for pos in [0usize, 12, bytes.len() / 2, bytes.len() - 9] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x01;
+            assert!(deserialize_manifest(&bad).is_err(), "flip at {pos} undetected");
+        }
+        assert!(deserialize_manifest(&bytes[..bytes.len() - 4]).is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_inconsistent_layout() {
+        // bounds that do not cover the tensor
+        let mut m = sample_manifest();
+        m.entries[0].bounds = vec![0, 32, 63];
+        assert!(deserialize_manifest(&serialize_manifest(&m)).is_err());
+        // non-monotonic bounds
+        let mut m = sample_manifest();
+        m.entries[0].bounds = vec![0, 40, 64];
+        m.entries[0].bounds[1] = 65; // > bounds[2]
+        assert!(deserialize_manifest(&serialize_manifest(&m)).is_err());
+        // stage outside the pp range
+        let mut m = sample_manifest();
+        m.entries[1].stage = 2;
+        assert!(deserialize_manifest(&serialize_manifest(&m)).is_err());
     }
 }

@@ -5,8 +5,12 @@
 //! * [`storage`] — persistent backend (+ bandwidth model for Table 1/2).
 //! * [`tracker`] — Megatron tracker file extended with base-checkpoint
 //!   metadata (paper §4.4).
-//! * [`container`] — the `.bsnp` on-disk/in-shm format with CRC-64.
-//! * [`recovery`] — the multi-rank all-gather recovery check (Fig. 4).
+//! * [`container`] — the `.bsnp` on-disk/in-shm format with CRC-64, plus
+//!   the sharded-checkpoint manifest (`.bsnm`).
+//! * [`sharded`] — the mp×pp multi-rank engine: one per-rank engine per
+//!   shard, a manifest per iteration, reassembly + resharding restore.
+//! * [`recovery`] — the multi-rank all-gather recovery check (Fig. 4) and
+//!   the shard reassembly/reshard helpers.
 //! * [`failure`] — failure injection used by tests and the
 //!   `failure_recovery` example.
 
@@ -14,12 +18,17 @@ pub mod agent;
 pub mod container;
 pub mod failure;
 pub mod recovery;
+pub mod sharded;
 pub mod shm;
 pub mod storage;
 pub mod tracker;
 
 pub use agent::{CheckpointEngine, EngineConfig, SaveReport};
-pub use recovery::{all_gather_check, RankView, RecoveryDecision};
+pub use container::{ManifestEntry, ShardManifest};
+pub use recovery::{
+    all_gather_check, reassemble_state_dict, reshard_state_dict, RankView, RecoveryDecision,
+};
+pub use sharded::{ShardedCheckpointEngine, ShardedEngineConfig, ShardedSaveReport};
 pub use shm::ShmStore;
 pub use storage::{AnalyticalModel, Storage};
 pub use tracker::Tracker;

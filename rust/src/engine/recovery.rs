@@ -6,9 +6,17 @@
 //! on *all* ranks; newer, partially-written iterations are pruned and all
 //! ranks load the agreed one. This is why rank 1 failing to stage
 //! iteration 100 makes everyone restart from 80 in the paper's walkthrough.
+//!
+//! For mp×pp sharded checkpoints this module also owns **reassembly**: the
+//! per-rank shard dicts plus the manifest's recorded boundaries reproduce
+//! the full state dict bit-exactly, and [`reshard_state_dict`] reslices it
+//! into a *different* (mp′, pp′) layout — the elastic-restart path.
 
 use crate::compress::CompressError;
+use crate::tensor::{HostTensor, StateDict};
+use crate::train::parallel::{shard_state_dict, Parallelism};
 
+use super::container::ShardManifest;
 use super::shm::ShmStore;
 use super::storage::Storage;
 
@@ -34,7 +42,6 @@ impl RankView {
             .collect::<Vec<_>>();
         Ok(Self { rank, shm_valid, storage_valid })
     }
-
 
     fn has(&self, iter: u64) -> bool {
         self.shm_valid.contains(&iter) || self.storage_valid.contains(&iter)
@@ -78,6 +85,62 @@ pub fn apply_pruning(shm: &ShmStore, decision: &RecoveryDecision) -> Result<(), 
         shm.remove(i)?;
     }
     Ok(())
+}
+
+/// Reassemble the full state dict from per-rank shard dicts (indexed
+/// `pp_stage * mp + mp_rank`, as produced by
+/// [`crate::train::parallel::shard_state_dict`] and decoded from the rank
+/// containers), concatenating each tensor's mp slices along the
+/// boundaries the manifest recorded. Bit-exact for lossless codecs: the
+/// output bytes are the concatenation of the slice bytes, in order.
+pub fn reassemble_state_dict(
+    manifest: &ShardManifest,
+    shards: &[StateDict],
+) -> Result<StateDict, CompressError> {
+    if shards.len() != manifest.world() {
+        return Err(CompressError::Shape(format!(
+            "manifest expects {} rank shards, got {}",
+            manifest.world(),
+            shards.len()
+        )));
+    }
+    let mut sd = StateDict::new();
+    for e in &manifest.entries {
+        let es = e.dtype.size();
+        let mut bytes = Vec::with_capacity(e.len() * es);
+        for r in 0..manifest.mp {
+            let rank = e.stage * manifest.mp + r;
+            let name = format!("{}#mp{r}", e.name);
+            let entry = shards[rank].get(&name).ok_or_else(|| {
+                CompressError::Format(format!("rank {rank} shard missing entry {name}"))
+            })?;
+            let want = e.bounds[r + 1] - e.bounds[r];
+            if entry.tensor.dtype() != e.dtype || entry.tensor.len() != want {
+                return Err(CompressError::Shape(format!(
+                    "shard entry {name}: {:?} x {} but manifest records {:?} x {want}",
+                    entry.tensor.dtype(),
+                    entry.tensor.len(),
+                    e.dtype
+                )));
+            }
+            bytes.extend_from_slice(entry.tensor.bytes());
+        }
+        sd.push(e.name.clone(), e.kind, HostTensor::from_bytes(e.dtype, &e.shape, bytes)?);
+    }
+    Ok(sd)
+}
+
+/// Restore into a *different* (mp′, pp′) layout: reassemble along the
+/// recorded boundaries, then reslice with the same deterministic
+/// contiguous split a fresh run of that layout would use. The returned
+/// shards are exactly what `shard_state_dict(full, new_p)` yields, so a
+/// restarted fleet of the new shape can adopt them directly.
+pub fn reshard_state_dict(
+    manifest: &ShardManifest,
+    shards: &[StateDict],
+    new_p: Parallelism,
+) -> Result<Vec<StateDict>, CompressError> {
+    Ok(shard_state_dict(&reassemble_state_dict(manifest, shards)?, new_p))
 }
 
 #[cfg(test)]
@@ -126,6 +189,69 @@ mod tests {
         let d = all_gather_check(&views).unwrap();
         assert_eq!(d.iteration, 100);
         assert!(d.pruned.is_empty());
+    }
+
+    fn manifest_for(sd: &StateDict, p: Parallelism, iteration: u64) -> ShardManifest {
+        use crate::engine::container::ManifestEntry;
+        use crate::train::parallel::{entry_stage, shard_bounds};
+        let entries: Vec<ManifestEntry> = sd
+            .entries()
+            .iter()
+            .enumerate()
+            .map(|(ei, e)| ManifestEntry {
+                name: e.name.clone(),
+                kind: e.kind,
+                dtype: e.tensor.dtype(),
+                shape: e.tensor.shape().to_vec(),
+                stage: entry_stage(ei, sd.len(), p.pp),
+                bounds: shard_bounds(e.tensor.len(), p.mp),
+                codecs: vec![crate::compress::CodecId::Raw; p.mp],
+            })
+            .collect();
+        ShardManifest { iteration, base_iteration: iteration, mp: p.mp, pp: p.pp, entries }
+    }
+
+    #[test]
+    fn reassemble_and_reshard_are_bit_exact() {
+        let sd = StateDict::synthetic_gpt(1 << 12, 5);
+        let p = Parallelism::new(2, 2);
+        let shards = shard_state_dict(&sd, p);
+        let manifest = manifest_for(&sd, p, 10);
+        let full = reassemble_state_dict(&manifest, &shards).unwrap();
+        assert_eq!(full.len(), sd.len());
+        for (a, b) in sd.entries().iter().zip(full.entries()) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.tensor, b.tensor, "{}", a.name);
+        }
+        // restoring into a different layout == sharding the original directly
+        for (mp, pp) in [(3, 1), (1, 3), (4, 1), (1, 1)] {
+            let new_p = Parallelism::new(mp, pp);
+            let resharded = reshard_state_dict(&manifest, &shards, new_p).unwrap();
+            let direct = shard_state_dict(&sd, new_p);
+            assert_eq!(resharded.len(), direct.len());
+            for (rs, ds) in resharded.iter().zip(&direct) {
+                assert_eq!(rs.len(), ds.len());
+                for (a, b) in rs.entries().iter().zip(ds.entries()) {
+                    assert_eq!(a.name, b.name);
+                    assert_eq!(a.tensor, b.tensor, "{} under mp{mp} pp{pp}", a.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reassemble_rejects_mismatched_shards() {
+        let sd = StateDict::synthetic_gpt(1 << 12, 6);
+        let p = Parallelism::new(2, 1);
+        let shards = shard_state_dict(&sd, p);
+        let manifest = manifest_for(&sd, p, 10);
+        // wrong world size
+        assert!(reassemble_state_dict(&manifest, &shards[..1]).is_err());
+        // a rank missing one of its entries
+        let mut broken = shards.clone();
+        broken[1] = StateDict::new();
+        assert!(reassemble_state_dict(&manifest, &broken).is_err());
     }
 
     #[test]

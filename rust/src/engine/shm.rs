@@ -21,8 +21,6 @@ use std::fs;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
-
-
 /// One rank's view of the shared-memory checkpoint area.
 #[derive(Clone, Debug)]
 pub struct ShmStore {

@@ -94,6 +94,47 @@ impl Storage {
         self.rank_path(iteration, rank).exists()
     }
 
+    /// Remove one rank's shard (failure injection, targeted GC). The
+    /// iteration directory itself is left in place.
+    pub fn remove(&self, iteration: u64, rank: usize) -> std::io::Result<()> {
+        let p = self.rank_path(iteration, rank);
+        if p.exists() {
+            fs::remove_file(p)?;
+        }
+        Ok(())
+    }
+
+    fn manifest_path(&self, iteration: u64) -> PathBuf {
+        self.iter_dir(iteration).join("manifest.bsnm")
+    }
+
+    /// Persist a sharded-checkpoint manifest next to the rank shards
+    /// (atomic tmp+rename; tiny, so never throttled).
+    pub fn put_manifest(&self, iteration: u64, bytes: &[u8]) -> std::io::Result<()> {
+        fs::create_dir_all(self.iter_dir(iteration))?;
+        let path = self.manifest_path(iteration);
+        let tmp = path.with_extension("tmp");
+        fs::write(&tmp, bytes)?;
+        fs::rename(tmp, path)
+    }
+
+    pub fn get_manifest(&self, iteration: u64) -> std::io::Result<Vec<u8>> {
+        fs::read(self.manifest_path(iteration))
+    }
+
+    pub fn has_manifest(&self, iteration: u64) -> bool {
+        self.manifest_path(iteration).exists()
+    }
+
+    /// Remove an iteration's manifest (failure injection, tests).
+    pub fn remove_manifest(&self, iteration: u64) -> std::io::Result<()> {
+        let p = self.manifest_path(iteration);
+        if p.exists() {
+            fs::remove_file(p)?;
+        }
+        Ok(())
+    }
+
     /// CRC-validate a persisted checkpoint shard.
     pub fn validate(&self, iteration: u64, rank: usize) -> bool {
         match self.get(iteration, rank) {

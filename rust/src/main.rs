@@ -56,24 +56,25 @@ fn print_help() {
          \n\
          SUBCOMMANDS\n\
            train         --model gpt-nano --steps 50 --save-every 10 [--policy bitsnap|lossless|raw]\n\
-                         [--adaptive] [--out results/run] [--redundancy 2] [--max-cached 5]\n\
-                         (needs a build with --features xla)\n\
+                         [--adaptive] [--mp 2] [--pp 2] [--out results/run] [--redundancy 2]\n\
+                         [--max-cached 5] (needs a build with --features xla)\n\
            compress      --params 1048576 [--change-rate 0.15] [--policy bitsnap|lossless]\n\
            inspect       --dir <storage root> | --histogram --model gpt-nano --steps 20\n\
            adapt-report  [--params 1048576] [--saves 9] [--write-bps 3.5e9] [--measure]\n\
-                         [--json results/adapt_report.json]\n\
+                         [--sharded --mp 2 --pp 2] [--json results/adapt_report.json]\n\
            table1        (no flags) print the paper's Table-1 analytical model\n\
            recover       --ranks 4 --fail-rank 1 (Fig. 4 walkthrough on real stores)\n\
+                         [--sharded --mp 2 --pp 2] (mp x pp save / recover / reshard demo)\n\
            help          this text"
     );
 }
 
 #[cfg(feature = "xla")]
 fn cmd_train(args: &Args) -> Result<(), String> {
-    use bitsnap::adapt::{AdaptivePolicy, Calibration, CostModel};
-    use bitsnap::engine::{CheckpointEngine, EngineConfig};
+    use bitsnap::adapt::{AdaptivePolicy, Calibration, CostModel, SharedCalibration};
+    use bitsnap::engine::{ShardedCheckpointEngine, ShardedEngineConfig};
     use bitsnap::runtime::{default_artifacts_dir, PjrtRuntime};
-    use bitsnap::train::Trainer;
+    use bitsnap::train::{Parallelism, Trainer};
 
     let model = args.get("model").unwrap_or("gpt-nano");
     let steps: u64 = args.get_parse("steps").unwrap_or(50);
@@ -82,20 +83,23 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     let policy = parse_policy(args.get("policy").unwrap_or("bitsnap"))?;
     let redundancy: usize = args.get_parse("redundancy").unwrap_or(2);
     let max_cached: u64 = args.get_parse("max-cached").unwrap_or(5);
+    let mp: usize = args.get_parse("mp").unwrap_or(1);
+    let pp: usize = args.get_parse("pp").unwrap_or(1);
+    let parallelism = Parallelism::new(mp.max(1), pp.max(1));
 
     let rt = PjrtRuntime::cpu(default_artifacts_dir()).map_err(|e| e.to_string())?;
     let mut trainer = Trainer::new(rt, model, 1).map_err(|e| e.to_string())?;
     println!(
-        "model {model}: {:.2}M params, seq {}, batch {}",
+        "model {model}: {:.2}M params, seq {}, batch {}, checkpoint layout {}",
         trainer.manifest().param_count() as f64 / 1e6,
         trainer.manifest().seq,
-        trainer.manifest().batch
+        trainer.manifest().batch,
+        parallelism.label()
     );
     let storage = Storage::new(format!("{out}/storage")).map_err(|e| e.to_string())?;
-    let cfg = EngineConfig {
+    let cfg = ShardedEngineConfig {
         job: format!("train-{model}"),
-        rank: 0,
-        world: 1,
+        parallelism,
         shm_root: std::path::PathBuf::from(format!("{out}/shm")),
         storage,
         redundancy,
@@ -104,16 +108,19 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     }
     .with_env_overrides();
     let mut engine = if args.has("adaptive") {
-        let cost = CostModel::for_storage(&cfg.storage, Calibration::measure(1 << 18));
-        CheckpointEngine::with_policy_source(cfg, Box::new(AdaptivePolicy::new(
-            Default::default(),
-            cost,
-        )))
+        // one controller per rank probing its own shard; throughput
+        // knowledge is pooled through the shared calibration
+        let write_bps = cfg.storage.throttle_bps();
+        let shared = SharedCalibration::new(Calibration::measure(1 << 18));
+        ShardedCheckpointEngine::with_policy_sources(cfg, move |_| {
+            let cost = CostModel::shared(shared.clone(), write_bps);
+            Box::new(AdaptivePolicy::new(Default::default(), cost))
+        })
         .map_err(|e| e.to_string())?
     } else {
-        CheckpointEngine::new(cfg).map_err(|e| e.to_string())?
+        ShardedCheckpointEngine::new(cfg).map_err(|e| e.to_string())?
     };
-    println!("policy source: {}", engine.policy_description());
+    println!("policy source (rank 0): {}", engine.engines()[0].policy_description());
 
     for i in 1..=steps {
         let loss = trainer.step().map_err(|e| e.to_string())?;
@@ -128,9 +135,9 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             let sd = trainer.state_dict().map_err(|e| e.to_string())?;
             let r = engine.save(i, &sd).map_err(|e| e.to_string())?;
             println!(
-                "  ckpt @{i} {}  blocked {:.1} ms  ratio {:.2}x ({} -> {})",
+                "  ckpt @{i} {}  fleet blocked {:.1} ms  ratio {:.2}x ({} -> {})",
                 if r.is_base { "base " } else { "delta" },
-                r.blocking.as_secs_f64() * 1e3,
+                r.simulated_parallel.as_secs_f64() * 1e3,
                 r.ratio(),
                 bitsnap::bench::fmt_bytes(r.raw_bytes),
                 bitsnap::bench::fmt_bytes(r.compressed_bytes),
@@ -140,7 +147,7 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     engine.flush().map_err(|e| e.to_string())?;
     let stats = engine.agent_stats();
     println!(
-        "done: {} checkpoints persisted, {} written to {out}/storage",
+        "done: {} rank checkpoints persisted, {} written to {out}/storage",
         stats.persisted,
         bitsnap::bench::fmt_bytes(stats.bytes_written as usize)
     );
@@ -183,7 +190,10 @@ fn cmd_compress(args: &Args) -> Result<(), String> {
 
 /// Simulate an early→mid→late trajectory on a synthetic state dict and
 /// print the adaptive controller's per-save decisions: the report the
-/// paper's "adapts dynamically" claim can be eyeballed against.
+/// paper's "adapts dynamically" claim can be eyeballed against. With
+/// `--sharded`, the trajectory runs under an mp×pp layout with one
+/// controller per rank sharing a calibration, compared against the static
+/// paper-default policy.
 fn cmd_adapt_report(args: &Args) -> Result<(), String> {
     use bitsnap::adapt::{
         default_stages, simulate_trajectory, AdaptiveConfig, AdaptivePolicy, Calibration,
@@ -200,6 +210,9 @@ fn cmd_adapt_report(args: &Args) -> Result<(), String> {
     } else {
         Calibration::default_host()
     };
+    if args.has("sharded") {
+        return cmd_adapt_report_sharded(args, params, saves, write_bps, max_cached, calibration);
+    }
     let cfg = AdaptiveConfig {
         stage: StageConfig { window: 2, ..StageConfig::default() },
         ..AdaptiveConfig::default()
@@ -216,8 +229,7 @@ fn cmd_adapt_report(args: &Args) -> Result<(), String> {
     let per = saves / 3;
     let mut stages = default_stages(per);
     stages[0].saves = saves - 2 * per;
-    simulate_trajectory(params, &stages, max_cached, &mut policy)
-        .map_err(|e| e.to_string())?;
+    simulate_trajectory(params, &stages, max_cached, &mut policy).map_err(|e| e.to_string())?;
 
     let codec_mix = |codecs: &[(bitsnap::compress::CodecId, usize)]| {
         codecs
@@ -263,6 +275,103 @@ fn cmd_adapt_report(args: &Args) -> Result<(), String> {
         let json = format!(
             "{{\n  \"params\": {params},\n  \"write_bps\": {write_bps},\n  \"saves\": [\n{}\n  ]\n}}\n",
             rows.join(",\n")
+        );
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+            }
+        }
+        std::fs::write(path, json).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// The `adapt-report --sharded` arm: static vs adaptive per-rank planning
+/// under one mp×pp layout, over the same deterministic trajectory.
+fn cmd_adapt_report_sharded(
+    args: &Args,
+    params: usize,
+    saves: u64,
+    write_bps: f64,
+    max_cached: u64,
+    calibration: bitsnap::adapt::Calibration,
+) -> Result<(), String> {
+    use bitsnap::adapt::{
+        default_stages, simulate_sharded_trajectory, AdaptiveConfig, AdaptivePolicy,
+        PolicySource, SharedCalibration, ShardedSimSave, StageConfig, StaticPolicySource,
+    };
+    use bitsnap::compress::delta::Policy;
+    use bitsnap::train::Parallelism;
+
+    let mp: usize = args.get_parse("mp").unwrap_or(2);
+    let pp: usize = args.get_parse("pp").unwrap_or(2);
+    let p = Parallelism::new(mp.max(1), pp.max(1));
+    let per = saves / 3;
+    let mut stages = default_stages(per);
+    stages[0].saves = saves - 2 * per;
+    println!(
+        "simulating {saves} sharded saves over {params} params under {} \
+         (base every {max_cached}), write bandwidth {:.2} GB/s\n",
+        p.label(),
+        write_bps / 1e9
+    );
+
+    let mut static_sources: Vec<StaticPolicySource> =
+        (0..p.world()).map(|_| StaticPolicySource::new(Policy::bitsnap())).collect();
+    let static_saves =
+        simulate_sharded_trajectory(params, &stages, max_cached, p, &mut static_sources)
+            .map_err(|e| e.to_string())?;
+
+    let shared = SharedCalibration::new(calibration);
+    let cfg = AdaptiveConfig {
+        stage: StageConfig { window: 2, ..StageConfig::default() },
+        ..AdaptiveConfig::default()
+    };
+    let mut adaptive_sources = AdaptivePolicy::per_rank(p.world(), cfg, shared, Some(write_bps));
+    let adaptive_saves =
+        simulate_sharded_trajectory(params, &stages, max_cached, p, &mut adaptive_sources)
+            .map_err(|e| e.to_string())?;
+
+    let fleet_secs = |s: &ShardedSimSave| s.parallel_secs(write_bps);
+    let mut table = bitsnap::bench::Table::new(&[
+        "iter", "kind", "static bytes", "adaptive bytes", "static save", "adaptive save",
+    ]);
+    let mut st = (0usize, 0.0f64);
+    let mut at = (0usize, 0.0f64);
+    for (s, a) in static_saves.iter().zip(&adaptive_saves) {
+        st = (st.0 + s.payload_bytes, st.1 + fleet_secs(s));
+        at = (at.0 + a.payload_bytes, at.1 + fleet_secs(a));
+        table.row(&[
+            s.iteration.to_string(),
+            if s.is_base { "base" } else { "delta" }.to_string(),
+            bitsnap::bench::fmt_bytes(s.payload_bytes),
+            bitsnap::bench::fmt_bytes(a.payload_bytes),
+            format!("{:.1} ms", fleet_secs(s) * 1e3),
+            format!("{:.1} ms", fleet_secs(a) * 1e3),
+        ]);
+    }
+    table.print();
+    println!(
+        "\ntotal: static {} / {:.3} s   adaptive {} / {:.3} s   ({} ranks)",
+        bitsnap::bench::fmt_bytes(st.0),
+        st.1,
+        bitsnap::bench::fmt_bytes(at.0),
+        at.1,
+        p.world()
+    );
+    println!("rank 0 policy after trajectory: {}", adaptive_sources[0].describe());
+
+    if let Some(path) = args.get("json") {
+        let json = format!(
+            "{{\n  \"params\": {params},\n  \"mp\": {mp},\n  \"pp\": {pp},\n  \
+             \"write_bps\": {write_bps},\n  \"static\": {{\"payload_bytes\": {}, \
+             \"parallel_secs\": {:.6}}},\n  \"adaptive\": {{\"payload_bytes\": {}, \
+             \"parallel_secs\": {:.6}}}\n}}\n",
+            st.0,
+            st.1,
+            at.0,
+            at.1
         );
         if let Some(dir) = std::path::Path::new(path).parent() {
             if !dir.as_os_str().is_empty() {
@@ -371,6 +480,97 @@ fn cmd_table1() -> Result<(), String> {
     Ok(())
 }
 
+/// The `recover --sharded` demo: save an mp×pp checkpoint series through
+/// the sharded engine, tear one rank's newest shard in both tiers, then
+/// run the all-gather recovery and a resharding restore.
+fn cmd_recover_sharded(args: &Args) -> Result<(), String> {
+    use bitsnap::engine::{ShardedCheckpointEngine, ShardedEngineConfig};
+    use bitsnap::tensor::StateDict;
+    use bitsnap::train::{shard_state_dict, Parallelism};
+
+    let mp: usize = args.get_parse("mp").unwrap_or(2);
+    let pp: usize = args.get_parse("pp").unwrap_or(2);
+    let p = Parallelism::new(mp.max(1), pp.max(1));
+    let fail_rank: usize = args.get_parse("fail-rank").unwrap_or(1).min(p.world() - 1);
+    let pid = std::process::id();
+    let shm_root = std::env::temp_dir().join(format!("bitsnap-sharded-demo-shm-{pid}"));
+    let store_root = std::env::temp_dir().join(format!("bitsnap-sharded-demo-store-{pid}"));
+    let storage = Storage::new(&store_root).map_err(|e| e.to_string())?;
+    let cfg = ShardedEngineConfig {
+        job: "sharded-demo".into(),
+        parallelism: p,
+        shm_root: shm_root.clone(),
+        storage: storage.clone(),
+        redundancy: 4,
+        policy: Policy::lossless(),
+        max_cached_iteration: 2,
+    };
+    let mut eng = ShardedCheckpointEngine::new(cfg).map_err(|e| e.to_string())?;
+
+    println!("saving sharded checkpoints at iterations 60, 80, 100 under {}...", p.label());
+    let mut sd = StateDict::synthetic_gpt(1 << 14, 0);
+    let mut at_80 = sd.clone();
+    for iter in [60u64, 80, 100] {
+        sd.perturb_model_states(0.05, iter);
+        if iter == 80 {
+            at_80 = sd.clone();
+        }
+        let r = eng.save(iter, &sd).map_err(|e| e.to_string())?;
+        println!(
+            "  iter {iter}: {} ranks, fleet blocked {:.1} ms, ratio {:.2}x",
+            r.per_rank.len(),
+            r.simulated_parallel.as_secs_f64() * 1e3,
+            r.ratio()
+        );
+    }
+    eng.flush().map_err(|e| e.to_string())?;
+
+    println!("tearing rank {fail_rank} @ iteration 100 in shm and storage (Fig. 4)...");
+    let bytes = eng.engines()[fail_rank].shm().get(100).map_err(|e| e.to_string())?;
+    eng.engines()[fail_rank]
+        .shm()
+        .put(100, &bytes[..bytes.len() / 3], false)
+        .map_err(|e| e.to_string())?;
+    storage.remove(100, fail_rank).map_err(|e| e.to_string())?;
+
+    let (iter, recovered) =
+        eng.recover_latest().map_err(|e| e.to_string())?.ok_or("no common iteration")?;
+    println!("all-gather check: recovered iteration {iter} ({} entries)", recovered.len());
+    for (a, b) in at_80.entries().iter().zip(recovered.entries()) {
+        if a.tensor != b.tensor {
+            return Err(format!("recovered tensor {} is not bit-exact", a.name));
+        }
+    }
+    println!("recovered state dict is bit-exact vs the iteration-{iter} snapshot");
+
+    // elastic restart: reslice the recovered checkpoint into a new layout
+    let new_p = Parallelism::new(p.pp, p.mp); // swap the axes for the demo
+    let resharded = eng.load_resharded(iter, new_p).map_err(|e| e.to_string())?;
+    let direct = shard_state_dict(&recovered, new_p);
+    let shards_equal = |a: &StateDict, b: &StateDict| {
+        a.len() == b.len()
+            && a.entries()
+                .iter()
+                .zip(b.entries())
+                .all(|(x, y)| x.name == y.name && x.tensor == y.tensor)
+    };
+    let ok = resharded.len() == direct.len()
+        && resharded.iter().zip(&direct).all(|(a, b)| shards_equal(a, b));
+    println!(
+        "resharded restore {} -> {}: {} shards ({})",
+        p.label(),
+        new_p.label(),
+        resharded.len(),
+        if ok { "bit-exact vs a direct shard of the recovered dict" } else { "shard MISMATCH" }
+    );
+    if !ok {
+        return Err("resharded restore does not match a direct shard of the recovered dict".into());
+    }
+    let _ = std::fs::remove_dir_all(&shm_root);
+    let _ = std::fs::remove_dir_all(&store_root);
+    Ok(())
+}
+
 fn cmd_recover(args: &Args) -> Result<(), String> {
     use bitsnap::compress::delta::compress_state_dict;
     use bitsnap::engine::container;
@@ -378,6 +578,9 @@ fn cmd_recover(args: &Args) -> Result<(), String> {
     use bitsnap::engine::{all_gather_check, RankView, ShmStore};
     use bitsnap::tensor::StateDict;
 
+    if args.has("sharded") {
+        return cmd_recover_sharded(args);
+    }
     let ranks: usize = args.get_parse("ranks").unwrap_or(4);
     let fail_rank: usize = args.get_parse("fail-rank").unwrap_or(1);
     let pid = std::process::id();
@@ -386,8 +589,7 @@ fn cmd_recover(args: &Args) -> Result<(), String> {
     let storage = Storage::new(&store_root).map_err(|e| e.to_string())?;
 
     println!("staging checkpoints at iterations 60, 80, 100 on {ranks} ranks...");
-    let shms: Vec<ShmStore> =
-        (0..ranks).map(|r| ShmStore::new(&shm_root, r, 8).unwrap()).collect();
+    let shms: Vec<ShmStore> = (0..ranks).map(|r| ShmStore::new(&shm_root, r, 8).unwrap()).collect();
     let sd = StateDict::synthetic_gpt(1 << 14, 0);
     for iter in [60u64, 80, 100] {
         let c = compress_state_dict(&sd, None, Policy::raw(), iter, iter)

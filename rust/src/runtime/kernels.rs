@@ -102,8 +102,8 @@ impl XlaClusterQuant {
             // boundaries from this chunk's own stats, like the native codec
             let n = chunk.len() as f64;
             let mean = chunk.iter().map(|&x| x as f64).sum::<f64>() / n.max(1.0);
-            let var =
-                chunk.iter().map(|&x| (x as f64 - mean) * (x as f64 - mean)).sum::<f64>() / n.max(1.0);
+            let var = chunk.iter().map(|&x| (x as f64 - mean) * (x as f64 - mean)).sum::<f64>()
+                / n.max(1.0);
             let boundaries = cluster_quant::normal_boundaries(
                 16,
                 mean as f32,

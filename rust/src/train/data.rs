@@ -75,8 +75,7 @@ mod tests {
         // successor entropy must be far below uniform: count distinct
         // successors observed per token
         let mut c = SyntheticCorpus::new(128, 3);
-        let mut seen: Vec<std::collections::HashSet<u32>> =
-            vec![Default::default(); 128];
+        let mut seen: Vec<std::collections::HashSet<u32>> = vec![Default::default(); 128];
         let mut prev = c.next_token(); // sync with the chain's hidden state
         for _ in 0..50_000 {
             let t = c.next_token();

@@ -52,14 +52,30 @@ impl Manifest {
             let mut it = line.split_whitespace();
             match it.next() {
                 Some("model") => model = it.next().ok_or_else(|| bad("model"))?.to_string(),
-                Some("vocab") => vocab = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("vocab"))?,
-                Some("d_model") => d_model = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("d_model"))?,
-                Some("n_layers") => n_layers = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("n_layers"))?,
-                Some("n_heads") => n_heads = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("n_heads"))?,
-                Some("seq") => seq = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("seq"))?,
-                Some("batch") => batch = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("batch"))?,
+                Some("vocab") => {
+                    vocab = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("vocab"))?
+                }
+                Some("d_model") => {
+                    d_model = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("d_model"))?
+                }
+                Some("n_layers") => {
+                    n_layers =
+                        it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("n_layers"))?
+                }
+                Some("n_heads") => {
+                    n_heads = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("n_heads"))?
+                }
+                Some("seq") => {
+                    seq = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("seq"))?
+                }
+                Some("batch") => {
+                    batch = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("batch"))?
+                }
                 Some("lr") => lr = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("lr"))?,
-                Some("params") => declared_params = it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("params"))?,
+                Some("params") => {
+                    declared_params =
+                        it.next().and_then(|v| v.parse().ok()).ok_or_else(|| bad("params"))?
+                }
                 Some("param") => {
                     let name = it.next().ok_or_else(|| bad("param name"))?.to_string();
                     let dtype = match it.next() {

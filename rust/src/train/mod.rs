@@ -10,6 +10,9 @@ pub mod trainer;
 
 pub use data::SyntheticCorpus;
 pub use manifest::{Manifest, ParamSpec};
-pub use parallel::{compress_sharded, shard_state_dict, Parallelism, ShardedCompressReport};
+pub use parallel::{
+    compress_sharded, compress_sharded_planned, entry_stage, shard_bounds, shard_range,
+    shard_state_dict, Parallelism, ShardedCompressReport,
+};
 #[cfg(feature = "xla")]
 pub use trainer::{TrainTelemetry, Trainer};

@@ -14,7 +14,10 @@
 
 use std::time::Duration;
 
-use crate::compress::delta::{compress_state_dict_timed, CompressTimings, Policy};
+use crate::adapt::{PolicySource, SaveContext, SaveOutcome, StaticPolicySource};
+use crate::compress::delta::{
+    compress_state_dict_planned, CompressTimings, CompressedCheckpoint, Policy,
+};
 use crate::compress::CompressError;
 use crate::tensor::{HostTensor, StateDict};
 
@@ -40,11 +43,31 @@ impl Parallelism {
     }
 }
 
+/// Element range `[start, end)` of contiguous part `part` of `of` when a
+/// length-`n` tensor is split evenly. Parts near the tail absorb the
+/// remainder; a tensor shorter than `of` yields zero-length parts.
+pub fn shard_range(n: usize, part: usize, of: usize) -> (usize, usize) {
+    (n * part / of, n * (part + 1) / of)
+}
+
+/// The `mp + 1` element offsets of a length-`n` tensor split across `mp`
+/// model-parallel ranks: rank `r` holds `[bounds[r], bounds[r + 1])`.
+/// These are the boundaries a sharded-checkpoint manifest records so a
+/// restore can reslice into any other layout.
+pub fn shard_bounds(n: usize, mp: usize) -> Vec<usize> {
+    (0..=mp).map(|r| n * r / mp).collect()
+}
+
+/// Pipeline stage owning entry `ei` of `n_entries` under `pp` stages:
+/// contiguous blocks of entries per stage. With fewer entries than
+/// stages, some stages own nothing (their shards are empty).
+pub fn entry_stage(ei: usize, n_entries: usize, pp: usize) -> usize {
+    (ei * pp / n_entries.max(1)).min(pp - 1)
+}
+
 fn slice_tensor(t: &HostTensor, part: usize, of: usize) -> HostTensor {
-    let n = t.len();
     let es = t.dtype().size();
-    let start = n * part / of;
-    let end = n * (part + 1) / of;
+    let (start, end) = shard_range(t.len(), part, of);
     HostTensor::from_bytes(t.dtype(), &[end - start], t.bytes()[start * es..end * es].to_vec())
         .expect("slice arithmetic")
 }
@@ -52,13 +75,15 @@ fn slice_tensor(t: &HostTensor, part: usize, of: usize) -> HostTensor {
 /// Shard a state dict across `mp × pp` ranks: entries are dealt to pp
 /// stages in order (layer partitioning), then every tensor is split into
 /// mp contiguous chunks (tensor partitioning). Returns `world()` shards
-/// indexed `pp_stage * mp + mp_rank`.
+/// indexed `pp_stage * mp + mp_rank`. Degenerate inputs shard cleanly: an
+/// empty dict yields `world()` empty shards, fewer entries than stages
+/// leaves some stage shards empty, and tensors shorter than `mp` yield
+/// zero-length slices on the surplus ranks.
 pub fn shard_state_dict(sd: &StateDict, p: Parallelism) -> Vec<StateDict> {
     let mut shards = vec![StateDict::new(); p.world()];
     let n_entries = sd.len();
     for (ei, e) in sd.entries().iter().enumerate() {
-        // contiguous blocks of entries per pipeline stage
-        let stage = (ei * p.pp / n_entries.max(1)).min(p.pp - 1);
+        let stage = entry_stage(ei, n_entries, p.pp);
         for mp_rank in 0..p.mp {
             let shard = &mut shards[stage * p.mp + mp_rank];
             shard.push(
@@ -105,13 +130,36 @@ impl ShardedCompressReport {
 }
 
 /// Compress `sd` (optionally as a delta against `base`) under parallelism
-/// `p`, one worker thread per shard.
+/// `p` with the same fixed `policy` on every rank — the planned path of
+/// [`compress_sharded_planned`] behind a [`StaticPolicySource`] per rank.
 pub fn compress_sharded(
     sd: &StateDict,
     base: Option<&StateDict>,
     policy: Policy,
     p: Parallelism,
 ) -> Result<ShardedCompressReport, CompressError> {
+    let mut sources: Vec<StaticPolicySource> =
+        (0..p.world()).map(|_| StaticPolicySource::new(policy)).collect();
+    let base_iteration = if base.is_some() { 0 } else { 1 };
+    compress_sharded_planned(sd, base, p, 1, base_iteration, &mut sources).map(|(_, r)| r)
+}
+
+/// Compress each rank's shard under its own per-rank plan: shard `sd`
+/// (and `base`), ask `sources[rank]` to plan from the *sharded* tensors —
+/// so probes see exactly what that rank compresses — run
+/// [`compress_state_dict_planned`] per shard, and report each shard's
+/// [`SaveOutcome`] back to its source (actual bytes + blocking time feed
+/// the shared calibration). Returns the per-rank containers, indexed
+/// `pp_stage * mp + mp_rank`, plus the timing report.
+pub fn compress_sharded_planned<S: PolicySource>(
+    sd: &StateDict,
+    base: Option<&StateDict>,
+    p: Parallelism,
+    iteration: u64,
+    base_iteration: u64,
+    sources: &mut [S],
+) -> Result<(Vec<CompressedCheckpoint>, ShardedCompressReport), CompressError> {
+    assert_eq!(sources.len(), p.world(), "one policy source per rank");
     let shards = shard_state_dict(sd, p);
     let base_shards = base.map(|b| shard_state_dict(b, p));
     // Shards are timed *serially*: each rank in a real mp×pp fleet runs its
@@ -119,42 +167,58 @@ pub fn compress_sharded(
     // the uncontended serial one. Running threads here would only timeshare
     // this host's single core and inflate every shard's wall time.
     let t0 = std::time::Instant::now();
-    let results: Vec<Result<(CompressTimings, usize), CompressError>> = shards
-        .iter()
-        .enumerate()
-        .map(|(i, shard)| {
-            let base_shard = base_shards.as_ref().map(|bs| &bs[i]);
-            let (ckpt, timings) = compress_state_dict_timed(shard, base_shard, policy, 1, 0)?;
-            Ok((timings, ckpt.payload_bytes()))
-        })
-        .collect();
-    let measured_wall = t0.elapsed();
-    let mut per_shard = Vec::with_capacity(results.len());
+    let mut per_shard = Vec::with_capacity(shards.len());
+    let mut checkpoints = Vec::with_capacity(shards.len());
     let mut compressed_bytes = 0usize;
-    for r in results {
-        let (timings, bytes) = r?;
+    for (i, shard) in shards.iter().enumerate() {
+        let base_shard = base_shards.as_ref().map(|bs| &bs[i]);
+        let t_rank = std::time::Instant::now();
+        let plan = sources[i].plan(&SaveContext {
+            iteration,
+            is_base: base_shard.is_none(),
+            sd: shard,
+            base: base_shard,
+        });
+        let t_enc = std::time::Instant::now();
+        let (ckpt, timings) =
+            compress_state_dict_planned(shard, base_shard, &plan, iteration, base_iteration)?;
+        let encode = t_enc.elapsed();
+        let payload = ckpt.payload_bytes();
+        sources[i].observe(&SaveOutcome {
+            iteration,
+            is_base: base_shard.is_none(),
+            raw_bytes: shard.total_bytes(),
+            compressed_bytes: payload,
+            encode,
+            blocking: t_rank.elapsed(),
+        });
+        compressed_bytes += payload;
         per_shard.push(timings);
-        compressed_bytes += bytes;
+        checkpoints.push(ckpt);
     }
+    let measured_wall = t0.elapsed();
     let simulated_parallel = per_shard
         .iter()
         .map(|t| t.delta_encoding + t.clustering + t.quantization)
         .max()
         .unwrap_or_default();
-    Ok(ShardedCompressReport {
+    let report = ShardedCompressReport {
         parallelism: p,
         per_shard,
         measured_wall,
         simulated_parallel,
         compressed_bytes,
         raw_bytes: sd.total_bytes(),
-    })
+    };
+    Ok((checkpoints, report))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::compress::delta::{decompress_state_dict, compress_state_dict};
+    use crate::compress::CodecId;
+    use crate::tensor::{DType, StateKind};
 
     #[test]
     fn shards_partition_every_byte() {
@@ -173,10 +237,8 @@ mod tests {
         let sd = StateDict::synthetic_gpt(1 << 16, 2); // 4 layer-chunks
         let p = Parallelism::new(1, 2);
         let shards = shard_state_dict(&sd, p);
-        let names0: Vec<&str> =
-            shards[0].entries().iter().map(|e| e.name.as_str()).collect();
-        let names1: Vec<&str> =
-            shards[1].entries().iter().map(|e| e.name.as_str()).collect();
+        let names0: Vec<&str> = shards[0].entries().iter().map(|e| e.name.as_str()).collect();
+        let names1: Vec<&str> = shards[1].entries().iter().map(|e| e.name.as_str()).collect();
         assert!(!names0.is_empty() && !names1.is_empty());
         for n in &names0 {
             assert!(!names1.contains(n));
@@ -196,6 +258,118 @@ mod tests {
             let back = decompress_state_dict(&ckpt, Some(bs)).unwrap();
             for (a, b) in cs.entries().iter().zip(back.entries()) {
                 assert_eq!(a.tensor, b.tensor, "{}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_bounds_are_contiguous_and_exhaustive() {
+        for (n, mp) in [(0usize, 3usize), (2, 4), (7, 3), (100, 1)] {
+            let b = shard_bounds(n, mp);
+            assert_eq!(b.len(), mp + 1);
+            assert_eq!(b[0], 0);
+            assert_eq!(b[mp], n);
+            for r in 0..mp {
+                assert!(b[r] <= b[r + 1]);
+                assert_eq!((b[r], b[r + 1]), shard_range(n, r, mp));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_state_dict_shards_cleanly() {
+        let sd = StateDict::new();
+        for (mp, pp) in [(1, 1), (3, 2)] {
+            let p = Parallelism::new(mp, pp);
+            let shards = shard_state_dict(&sd, p);
+            assert_eq!(shards.len(), p.world());
+            assert!(shards.iter().all(|s| s.is_empty()));
+            let r = compress_sharded(&sd, None, Policy::bitsnap(), p).unwrap();
+            assert_eq!(r.compressed_bytes, 0);
+            assert_eq!(r.raw_bytes, 0);
+        }
+    }
+
+    #[test]
+    fn fewer_entries_than_stages_leaves_empty_stage_shards() {
+        let mut sd = StateDict::new();
+        sd.push("a", StateKind::ModelState, HostTensor::zeros(DType::F16, &[8]));
+        sd.push("b", StateKind::ModelState, HostTensor::zeros(DType::F16, &[8]));
+        let p = Parallelism::new(1, 4); // 2 entries over 4 stages
+        let shards = shard_state_dict(&sd, p);
+        assert_eq!(shards.len(), 4);
+        let counts: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        assert_eq!(counts.iter().sum::<usize>(), 2);
+        assert!(counts.iter().any(|&c| c == 0), "{counts:?}");
+        let total: usize = shards.iter().map(|s| s.total_bytes()).sum();
+        assert_eq!(total, sd.total_bytes());
+        // empty stage shards still compress (to empty containers)
+        let r = compress_sharded(&sd, None, Policy::lossless(), p).unwrap();
+        assert_eq!(r.per_shard.len(), 4);
+    }
+
+    #[test]
+    fn short_tensors_yield_zero_length_slices_that_roundtrip() {
+        let mut sd = StateDict::new();
+        let tiny = HostTensor::from_f32_as_f16(&[2], &[1.0, 2.0]).unwrap();
+        sd.push("tiny", StateKind::ModelState, tiny);
+        let p = Parallelism::new(4, 1);
+        let shards = shard_state_dict(&sd, p);
+        let lens: Vec<usize> = shards.iter().map(|s| s.entries()[0].tensor.len()).collect();
+        assert_eq!(lens.iter().sum::<usize>(), 2);
+        assert!(lens.contains(&0), "{lens:?}");
+        let total: usize = shards.iter().map(|s| s.total_bytes()).sum();
+        assert_eq!(total, sd.total_bytes());
+        // zero-length slices survive a lossless delta compress + decode
+        let base_shards = shard_state_dict(&sd, p);
+        for (cs, bs) in shards.iter().zip(&base_shards) {
+            let ckpt = compress_state_dict(cs, Some(bs), Policy::lossless(), 1, 0).unwrap();
+            let back = decompress_state_dict(&ckpt, Some(bs)).unwrap();
+            for (a, b) in cs.entries().iter().zip(back.entries()) {
+                assert_eq!(a.tensor, b.tensor);
+            }
+        }
+    }
+
+    #[test]
+    fn planned_path_with_static_sources_matches_compress_sharded() {
+        let base = StateDict::synthetic_gpt(1 << 14, 7);
+        let mut curr = base.clone();
+        curr.perturb_model_states(0.1, 8);
+        let p = Parallelism::new(2, 2);
+        let r = compress_sharded(&curr, Some(&base), Policy::lossless(), p).unwrap();
+        let mut sources: Vec<StaticPolicySource> =
+            (0..p.world()).map(|_| StaticPolicySource::new(Policy::lossless())).collect();
+        let (ckpts, r2) =
+            compress_sharded_planned(&curr, Some(&base), p, 1, 0, &mut sources).unwrap();
+        assert_eq!(ckpts.len(), p.world());
+        assert_eq!(r.compressed_bytes, r2.compressed_bytes);
+        // the containers decode back to exactly the shards
+        let curr_shards = shard_state_dict(&curr, p);
+        let base_shards = shard_state_dict(&base, p);
+        for ((ckpt, cs), bs) in ckpts.iter().zip(&curr_shards).zip(&base_shards) {
+            let back = decompress_state_dict(ckpt, Some(bs)).unwrap();
+            for (a, b) in cs.entries().iter().zip(back.entries()) {
+                assert_eq!(a.tensor, b.tensor, "{}", a.name);
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_sources_plan_per_shard_densities() {
+        use crate::adapt::{AdaptiveConfig, AdaptivePolicy, Calibration, SharedCalibration};
+        let base = StateDict::synthetic_gpt(1 << 16, 9);
+        let mut curr = base.clone();
+        curr.perturb_model_states(0.02, 10); // sparse: bitmask wins on every rank
+        let p = Parallelism::new(2, 1);
+        let shared = SharedCalibration::new(Calibration::default_host());
+        let cfg = AdaptiveConfig::default();
+        let mut sources = AdaptivePolicy::per_rank(p.world(), cfg, shared, None);
+        let (ckpts, _) =
+            compress_sharded_planned(&curr, Some(&base), p, 10, 0, &mut sources).unwrap();
+        for ckpt in &ckpts {
+            for e in ckpt.entries.iter().filter(|e| e.kind == StateKind::ModelState) {
+                assert_eq!(e.compressed.codec, CodecId::BitmaskPacked, "{}", e.name);
             }
         }
     }

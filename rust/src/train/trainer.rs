@@ -43,9 +43,14 @@ pub struct Trainer {
 impl Trainer {
     /// Load artifacts for `model` (e.g. "gpt-micro") and initialize state
     /// by executing the `init_<model>` artifact.
-    pub fn new(mut runtime: PjrtRuntime, model: &str, data_seed: u64) -> Result<Self, RuntimeError> {
-        let manifest =
-            Manifest::load(&runtime.artifacts_dir().join(format!("train_step_{model}.manifest.txt")))?;
+    pub fn new(
+        mut runtime: PjrtRuntime,
+        model: &str,
+        data_seed: u64,
+    ) -> Result<Self, RuntimeError> {
+        let manifest = Manifest::load(
+            &runtime.artifacts_dir().join(format!("train_step_{model}.manifest.txt")),
+        )?;
         let init = runtime.load(&format!("init_{model}.hlo.txt"))?;
         let state = init.run_literals_raw(&[])?;
         let expect = manifest.params.len() * 3;

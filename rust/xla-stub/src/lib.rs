@@ -1,0 +1,205 @@
+//! Type-level stub of the xla-rs API surface `bitsnap --features xla`
+//! compiles against. Every method the runtime, trainer, and CLI touch is
+//! present with its real signature; bodies that would need the
+//! xla_extension C++ runtime return [`Error`] instead. This exists so CI
+//! can `cargo check --features xla` offline and reproducibly — it is NOT
+//! a runtime, and executing any artifact through it fails cleanly.
+
+use std::fmt;
+use std::path::Path;
+
+/// The stub's single error: raised by any operation that would need the
+/// real PJRT runtime.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Self {
+        Self(format!("xla stub: {what} needs the real xla_extension runtime"))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Mirror of `xla::ElementType` (superset of what bitsnap matches on, so
+/// wildcard arms downstream stay reachable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Invalid,
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    F32,
+    F64,
+    Bf16,
+    C64,
+    C128,
+    TupleType,
+    OpaqueType,
+    Token,
+}
+
+/// Mirror of `xla::PrimitiveType` (only the conversions bitsnap requests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    F32,
+    F64,
+    Bf16,
+}
+
+/// Dense array shape: element type + dimensions.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host-side literal. The stub stores the bytes it was created from so
+/// shape/size queries work; anything touching device execution errors.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    shape: ArrayShape,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal, Error> {
+        let dims = dims.iter().map(|&d| d as i64).collect();
+        Ok(Literal { shape: ArrayShape { ty, dims }, data: data.to_vec() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        Ok(self.shape.clone())
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error::stub("Literal::to_vec"))
+    }
+
+    pub fn convert(&self, _ty: PrimitiveType) -> Result<Literal, Error> {
+        Err(Error::stub("Literal::convert"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(Error::stub("Literal::to_tuple"))
+    }
+}
+
+/// Device buffer handle returned by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::stub("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Error> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self, Error> {
+        Err(Error::stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation wrapper accepted by [`PjRtClient::compile`].
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_queries_work_without_a_runtime() {
+        let l = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 3], &[0u8; 24])
+            .unwrap();
+        let shape = l.array_shape().unwrap();
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(shape.dims(), &[2, 3]);
+        assert_eq!(l.size_bytes(), 24);
+    }
+
+    #[test]
+    fn runtime_operations_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+        let l = Literal::create_from_shape_and_untyped_data(ElementType::U8, &[1], &[7]).unwrap();
+        assert!(l.to_vec::<u8>().is_err());
+        assert!(l.convert(PrimitiveType::F32).is_err());
+        assert!(l.clone().to_tuple().is_err());
+    }
+}
