@@ -19,8 +19,9 @@
 //! dicts, WRITE_BPS to model a different storage tier)
 
 use bitsnap::adapt::{
-    default_stages, simulate_trajectory, AdaptiveConfig, AdaptivePolicy, Calibration, CostModel,
-    PolicySource, SimSave, StageConfig, StaticPolicySource, DEFAULT_WRITE_BPS,
+    default_stages, simulate_trajectory, AdaptiveConfig, AdaptivePolicy, Calibration,
+    ClusterSelection, CostModel, PolicySource, SimSave, StageConfig, StaticPolicySource,
+    DEFAULT_WRITE_BPS,
 };
 use bitsnap::bench::{fmt_bytes, Table};
 use bitsnap::compress::delta::Policy;
@@ -82,12 +83,15 @@ fn main() {
     let static_results = by_stage(&static_saves, write_bps, stages.len());
 
     // adaptive arm: host-calibrated cost model, short stage window so the
-    // 9-save trajectory can traverse all three stages
+    // 9-save trajectory can traverse all three stages. The measurement is
+    // reused by the fixed-16 comparison arm below so the two differ only
+    // in cluster selection.
+    let measured = Calibration::measure(1 << 18);
     let cfg = AdaptiveConfig {
         stage: StageConfig { window: 2, ..StageConfig::default() },
         ..AdaptiveConfig::default()
     };
-    let cost = CostModel::new(Calibration::measure(1 << 18), Some(write_bps));
+    let cost = CostModel::new(measured.clone(), Some(write_bps));
     let mut policy = AdaptivePolicy::new(cfg, cost);
     let adaptive_saves = simulate_trajectory(params, &stages, MAX_CACHED, &mut policy).unwrap();
     let adaptive_results = by_stage(&adaptive_saves, write_bps, stages.len());
@@ -145,6 +149,34 @@ fn main() {
         }
     );
     assert!(beats, "adaptive selection must beat static bitsnap on save time or ratio");
+
+    // ratio-targeted vs fixed-16 clusters: the same controller pinned to
+    // the paper's m=16 on the identical trajectory. Both arms operate
+    // within the same per-stage modeled precision budgets (m=16 satisfies
+    // every stage budget by construction — asserted in the policy unit
+    // tests), so the budgeted arm's smaller early/mid cluster counts must
+    // buy strictly fewer compressed bytes at equal precision guarantees.
+    let cfg16 = AdaptiveConfig {
+        stage: StageConfig { window: 2, ..StageConfig::default() },
+        clusters: ClusterSelection::Fixed(16),
+        ..AdaptiveConfig::default()
+    };
+    let cost16 = CostModel::new(measured, Some(write_bps));
+    let mut fixed16 = AdaptivePolicy::new(cfg16, cost16);
+    let fixed16_saves = simulate_trajectory(params, &stages, MAX_CACHED, &mut fixed16).unwrap();
+    let f16_total = totals(&by_stage(&fixed16_saves, write_bps, stages.len()));
+    println!(
+        "cluster tuning: ratio-targeted {} vs fixed-16 {} compressed",
+        fmt_bytes(at.compressed_bytes),
+        fmt_bytes(f16_total.compressed_bytes),
+    );
+    assert!(
+        at.compressed_bytes < f16_total.compressed_bytes,
+        "ratio-targeted clusters must beat fixed-16 bytes at equal precision budget \
+         ({} vs {})",
+        at.compressed_bytes,
+        f16_total.compressed_bytes
+    );
 
     // machine-readable trajectory for future PRs
     let out_path =

@@ -205,6 +205,51 @@ fn main() {
     }
     qt.print();
 
+    // ----- cluster-count sweep (the CodecSpec ratio/precision dial) ------
+    println!("\n== cluster-quant sweep over the ladder ({qn} fp32 values) ==\n");
+    let mut sweep = Table::new(&["m", "ratio", "measured rel MSE", "modeled rel MSE", "labels"]);
+    let mut rows = Vec::new();
+    let mut prev_ratio = f64::INFINITY;
+    let mut prev_mse = f64::INFINITY;
+    let sigma2 = {
+        let mean = vals.iter().map(|&v| v as f64).sum::<f64>() / qn as f64;
+        vals.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / qn as f64
+    };
+    for m in bitsnap::adapt::CLUSTER_LADDER {
+        let payload = cluster_quant::encode(&t, m).unwrap();
+        let back = cluster_quant::decode(&payload, DType::F32, &[qn])
+            .unwrap()
+            .to_f32_vec()
+            .unwrap();
+        let ratio = (qn * 4) as f64 / payload.len() as f64;
+        let rel_mse = metrics::mse(&vals, &back) / sigma2;
+        let modeled = cluster_quant::modeled_rel_mse(m);
+        sweep.row(&[
+            m.to_string(),
+            format!("{ratio:.3}x"),
+            format!("{rel_mse:.3e}"),
+            format!("{modeled:.3e}"),
+            format!("u{}", cluster_quant::label_bits(m)),
+        ]);
+        rows.push(format!(
+            "    {{\"m\": {m}, \"ratio\": {ratio:.6}, \"rel_mse\": {rel_mse:.6e}, \
+             \"modeled_rel_mse\": {modeled:.6e}, \"payload_bytes\": {}}}",
+            payload.len()
+        ));
+        // the dial must be monotone: more clusters always trade ratio for
+        // precision, never both ways
+        assert!(ratio < prev_ratio, "ratio must fall as m grows (m={m})");
+        assert!(rel_mse < prev_mse, "precision loss must fall as m grows (m={m})");
+        prev_ratio = ratio;
+        prev_mse = rel_mse;
+    }
+    sweep.print();
+    let default_sweep = "BENCH_cluster_sweep.json".to_string();
+    let sweep_path = std::env::var("BENCH_SWEEP_OUT").unwrap_or(default_sweep);
+    let json = format!("{{\n  \"n\": {qn},\n  \"points\": [\n{}\n  ]\n}}\n", rows.join(",\n"));
+    std::fs::write(&sweep_path, json).expect("write sweep json");
+    println!("\nwrote {sweep_path}");
+
     // ----- native vs XLA/Pallas artifact path ----------------------------
     #[cfg(feature = "xla")]
     xla_comparison();

@@ -1,0 +1,280 @@
+#!/usr/bin/env python3
+"""Generate the PR-2-era (container VERSION 1 / manifest VERSION 1) golden
+fixtures under rust/tests/fixtures/.
+
+These bytes pin the on-disk format BitSnap wrote *before* parameterized
+codec specs landed: entry headers carry a bare codec tag (no params field)
+and cluster-quant payloads use the legacy `m u8 (2..=16) | u4 labels`
+layout. The compat_golden integration test decodes them through the
+versioned legacy read path and asserts bit-exact reconstruction.
+
+Every float in the fixtures is chosen so the decode arithmetic
+(`q/255 * S + b` in f32) is exact: clusters either have scale 0 (decode
+== offset) or scale 2.0 with q in {0, 255} (255/255 == 1.0 exactly in
+IEEE single precision). That makes the expected bytes derivable by hand,
+with no dependence on encoder float behaviour.
+
+Run from rust/: python3 scripts/gen_pr2_fixtures.py
+"""
+
+import struct
+from pathlib import Path
+
+FIXTURES = Path(__file__).resolve().parent.parent / "tests" / "fixtures"
+
+# ---------------------------------------------------------------- crc64
+POLY = 0x42F0E1EBA9EA3693
+MASK = (1 << 64) - 1
+TABLE = []
+for i in range(256):
+    crc = (i << 56) & MASK
+    for _ in range(8):
+        crc = ((crc << 1) ^ POLY) & MASK if crc & (1 << 63) else (crc << 1) & MASK
+    TABLE.append(crc)
+
+
+def crc64(data: bytes) -> int:
+    crc = 0
+    for b in data:
+        crc = TABLE[((crc >> 56) ^ b) & 0xFF] ^ ((crc << 8) & MASK)
+    return crc
+
+
+assert crc64(b"123456789") == 0x6C40DF5F0B497347, "CRC-64/ECMA-182 self-check"
+
+# ------------------------------------------------------- state-kind tags
+MODEL, MASTER, ADAM_M, ADAM_V = 0, 1, 2, 3
+# dtype tags
+F32, F16 = 0, 1
+# codec tags (PR-2 CodecId::tag values)
+RAW, BITMASK_PACKED, COO_U16, CLUSTER_QUANT = 0, 1, 3, 5
+
+
+def u64(v):
+    return struct.pack("<Q", v)
+
+
+def u32(v):
+    return struct.pack("<I", v)
+
+
+def u16(v):
+    return struct.pack("<H", v)
+
+
+def f32(v):
+    return struct.pack("<f", v)
+
+
+def entry_v1(name, kind, dtype, codec, shape, payload):
+    out = u16(len(name)) + name.encode()
+    out += bytes([kind, dtype, codec, len(shape)])
+    for d in shape:
+        out += u64(d)
+    out += u64(len(payload)) + payload
+    return out
+
+
+def container_v1(iteration, base_iteration, entries):
+    out = b"BSNP" + u32(1) + u64(iteration) + u64(base_iteration)
+    out += bytes([0 if iteration == base_iteration else 1])
+    out += u32(len(entries))
+    for e in entries:
+        out += e
+    return out + u64(crc64(out))
+
+
+def manifest_entry_v1(name, kind, dtype, shape, stage, bounds, codec_tags):
+    out = u16(len(name)) + name.encode()
+    out += bytes([kind, dtype, len(shape)])
+    for d in shape:
+        out += u64(d)
+    out += u32(stage)
+    for b in bounds:
+        out += u64(b)
+    out += bytes(codec_tags)
+    return out
+
+
+def manifest_v1(iteration, base_iteration, mp, pp, entries):
+    out = b"BSNM" + u32(1) + u64(iteration) + u64(base_iteration)
+    out += u32(mp) + u32(pp) + u32(len(entries))
+    for e in entries:
+        out += e
+    return out + u64(crc64(out))
+
+
+# ------------------------------------------------- codec payload authors
+def bitmask_packed_payload(n, es, changed):  # changed: {index: value_bytes}
+    mask = bytearray((n + 7) // 8)
+    values = b""
+    for i in sorted(changed):
+        mask[i // 8] |= 1 << (i % 8)
+        values += changed[i]
+    return u64(n) + bytes([es]) + u64(len(changed)) + bytes(mask) + values
+
+
+def coo_u16_payload(n, es, changed):
+    n_blocks = (n + (1 << 16) - 1) >> 16
+    per_block = [0] * n_blocks
+    for i in changed:
+        per_block[i >> 16] += 1
+    out = u64(n) + bytes([es, 2]) + u64(len(changed)) + u32(n_blocks)
+    for c in per_block:
+        out += u32(c)
+    for i in sorted(changed):
+        out += u16(i & 0xFFFF)
+    for i in sorted(changed):
+        out += changed[i]
+    return out
+
+
+def cluster_quant_v1_payload(n, m, scales, offsets, labels, q):
+    assert 2 <= m <= 16 and len(scales) == len(offsets) == m
+    assert len(labels) == len(q) == n and all(l < m for l in labels)
+    out = u64(n) + bytes([m])
+    for s in scales:
+        out += f32(s)
+    for b in offsets:
+        out += f32(b)
+    packed = bytearray((n + 1) // 2)
+    for i, l in enumerate(labels):
+        packed[i // 2] |= l << ((i % 2) * 4)
+    out += bytes(packed)
+    out += bytes(q)
+    return out
+
+
+def cluster_quant_decode(scales, offsets, labels, q):
+    """Mirror of the rust decode for the exact-arithmetic fixtures."""
+    vals = []
+    for l, qi in zip(labels, q):
+        assert qi in (0, 255) or scales[l] == 0.0, "fixture must stay exact"
+        vals.append((qi / 255) * scales[l] + offsets[l])
+    return b"".join(f32(v) for v in vals)
+
+
+# ---------------------------------------------------------- the fixtures
+def main():
+    FIXTURES.mkdir(parents=True, exist_ok=True)
+
+    # -------- flat base (iter 100) + delta (iter 120) container pair ----
+    w_base = bytes.fromhex("003c 0040 0042 0044 00c0 0000 0080 ff7b".replace(" ", ""))
+    w_curr = bytearray(w_base)
+    w_curr[2:4] = bytes.fromhex("0045")  # element 1
+    w_curr[12:14] = bytes.fromhex("5535")  # element 6
+    w_curr = bytes(w_curr)
+
+    b_base = b"".join(u16(v) for v in [1, 2, 3, 4, 5])
+    b_curr = bytearray(b_base)
+    b_curr[6:8] = u16(0x0999)  # element 3
+    b_curr = bytes(b_curr)
+
+    # exp_avg: legacy m=16 cluster-quant payloads (exact-decode clusters)
+    ea_scales = [2.0] + [0.0] * 15
+    ea_offsets = [1.5, -3.0, 0.25, 7.0, -0.5, 100.0] + [0.0] * 10
+    ea_labels_base = [0, 1, 2, 3, 4, 5, 0, 1]
+    ea_q_base = [0, 0, 0, 0, 0, 0, 255, 0]
+    ea_labels_delta = [5, 4, 3, 2, 1, 0, 0, 2]
+    ea_q_delta = [0, 0, 0, 0, 0, 255, 0, 0]
+    ea_payload_base = cluster_quant_v1_payload(
+        8, 16, ea_scales, ea_offsets, ea_labels_base, ea_q_base
+    )
+    ea_payload_delta = cluster_quant_v1_payload(
+        8, 16, ea_scales, ea_offsets, ea_labels_delta, ea_q_delta
+    )
+
+    master = b"".join(f32(v) for v in [0.5, -1.25, 3.0, 1e30])
+
+    base_entries = [
+        entry_v1("layers.0.weight", MODEL, F16, RAW, [8], w_base),
+        entry_v1("layers.0.bias", MODEL, F16, RAW, [5], b_base),
+        entry_v1("optimizer.0.exp_avg", ADAM_M, F32, CLUSTER_QUANT, [8], ea_payload_base),
+        entry_v1("optimizer.0.master", MASTER, F32, RAW, [4], master),
+    ]
+    delta_entries = [
+        entry_v1(
+            "layers.0.weight",
+            MODEL,
+            F16,
+            BITMASK_PACKED,
+            [8],
+            bitmask_packed_payload(8, 2, {1: w_curr[2:4], 6: w_curr[12:14]}),
+        ),
+        entry_v1(
+            "layers.0.bias",
+            MODEL,
+            F16,
+            COO_U16,
+            [5],
+            coo_u16_payload(5, 2, {3: b_curr[6:8]}),
+        ),
+        entry_v1("optimizer.0.exp_avg", ADAM_M, F32, CLUSTER_QUANT, [8], ea_payload_delta),
+        entry_v1("optimizer.0.master", MASTER, F32, RAW, [4], master),
+    ]
+
+    (FIXTURES / "pr2_base.bsnp").write_bytes(container_v1(100, 100, base_entries))
+    (FIXTURES / "pr2_delta.bsnp").write_bytes(container_v1(120, 100, delta_entries))
+
+    base_expected = (
+        w_base
+        + b_base
+        + cluster_quant_decode(ea_scales, ea_offsets, ea_labels_base, ea_q_base)
+        + master
+    )
+    delta_expected = (
+        w_curr
+        + b_curr
+        + cluster_quant_decode(ea_scales, ea_offsets, ea_labels_delta, ea_q_delta)
+        + master
+    )
+    (FIXTURES / "pr2_base_expected.bin").write_bytes(base_expected)
+    (FIXTURES / "pr2_delta_expected.bin").write_bytes(delta_expected)
+
+    # -------- sharded fixture: v1 manifest + two mp rank containers -----
+    mw = b"".join(f32(v) for v in [10.0, 20.0, 30.0, 40.0])
+    mw0_payload = cluster_quant_v1_payload(
+        2, 16, [0.0] * 16, [10.0, 20.0] + [0.0] * 14, [0, 1], [0, 0]
+    )
+    rank0 = container_v1(
+        100,
+        100,
+        [
+            entry_v1("layers.0.weight#mp0", MODEL, F16, RAW, [4], w_base[:8]),
+            entry_v1("optimizer.0.master#mp0", MASTER, F32, CLUSTER_QUANT, [2], mw0_payload),
+        ],
+    )
+    rank1 = container_v1(
+        100,
+        100,
+        [
+            entry_v1("layers.0.weight#mp1", MODEL, F16, RAW, [4], w_base[8:]),
+            entry_v1("optimizer.0.master#mp1", MASTER, F32, RAW, [2], mw[8:]),
+        ],
+    )
+    manifest = manifest_v1(
+        100,
+        100,
+        2,
+        1,
+        [
+            manifest_entry_v1(
+                "layers.0.weight", MODEL, F16, [8], 0, [0, 4, 8], [RAW, RAW]
+            ),
+            manifest_entry_v1(
+                "optimizer.0.master", MASTER, F32, [4], 0, [0, 2, 4], [CLUSTER_QUANT, RAW]
+            ),
+        ],
+    )
+    (FIXTURES / "pr2_rank0.bsnp").write_bytes(rank0)
+    (FIXTURES / "pr2_rank1.bsnp").write_bytes(rank1)
+    (FIXTURES / "pr2_manifest.bsnm").write_bytes(manifest)
+    # reassembled: weight = w_base, master = [10, 20, 30, 40] f32
+    (FIXTURES / "pr2_sharded_expected.bin").write_bytes(w_base + mw)
+
+    for f in sorted(FIXTURES.iterdir()):
+        print(f"{f.name:28} {f.stat().st_size:5} bytes")
+
+
+if __name__ == "__main__":
+    main()

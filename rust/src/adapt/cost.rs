@@ -18,7 +18,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::compress::{bitmask, cluster_quant, coo, prune, CodecId};
+use crate::compress::{bitmask, cluster_quant, coo, CodecId, CodecSpec};
 use crate::engine::Storage;
 use crate::tensor::{HostTensor, XorShiftRng};
 
@@ -192,10 +192,10 @@ impl SharedCalibration {
     }
 }
 
-/// Predicted cost of compressing one tensor with one codec.
+/// Predicted cost of compressing one tensor with one codec spec.
 #[derive(Clone, Copy, Debug)]
 pub struct CostEstimate {
-    pub codec: CodecId,
+    pub spec: CodecSpec,
     /// Predicted payload bytes.
     pub bytes: usize,
     pub encode_secs: f64,
@@ -249,22 +249,25 @@ impl CostModel {
         self.calibration.observe_encode(codec, raw_bytes, secs);
     }
 
-    /// Predicted payload bytes for `codec` on the probed tensor.
-    pub fn predicted_bytes(&self, codec: CodecId, p: &TensorProbe) -> usize {
+    /// Predicted payload bytes for `spec` on the probed tensor — the
+    /// analytic size formulas as a function of the spec's parameters
+    /// (cluster count, block size, prune threshold, COO index width).
+    pub fn predicted_bytes(&self, spec: CodecSpec, p: &TensorProbe) -> usize {
         let n = p.elems;
         let es = p.elem_size;
         let changed = p.estimated_changed();
-        match codec {
+        match spec.id {
             CodecId::Raw => n * es,
             CodecId::BitmaskPacked => bitmask::packed_size(n, changed, es),
             CodecId::BitmaskNaive => bitmask::naive_size(n, changed, es),
             CodecId::CooU16 => coo::u16_size(n, changed, es),
             CodecId::CooU32 => coo::u32_size(n, changed, es),
             CodecId::ClusterQuant => {
-                cluster_quant::analytic_size(n, cluster_quant::DEFAULT_CLUSTERS)
+                let m = spec.clusters().unwrap_or(cluster_quant::DEFAULT_CLUSTERS);
+                cluster_quant::analytic_size(n, m)
             }
             CodecId::NaiveQuant8 => 16 + n,
-            CodecId::BlockQuant8 => 24 + n + 8 * n.div_ceil(2048),
+            CodecId::BlockQuant8 => 24 + n + 8 * n.div_ceil(spec.block_size()),
             // entropy coders approach the sampled byte entropy plus table
             // overhead; byte grouping typically shaves a little more
             CodecId::Huffman => 1024 + ((n * es) as f64 * p.byte_entropy / 8.0).ceil() as usize,
@@ -272,25 +275,28 @@ impl CostModel {
                 256 + ((n * es) as f64 * p.byte_entropy / 8.0 * 0.95).ceil() as usize
             }
             CodecId::Prune => {
-                16 + n.div_ceil(8) + 8 + ((n as f64) * prune::DEFAULT_KEEP).ceil() as usize
+                16 + n.div_ceil(8) + 8 + ((n as f64) * spec.keep_fraction()).ceil() as usize
             }
         }
     }
 
-    /// Full cost estimate for `codec` on the probed tensor.
-    pub fn estimate(&self, codec: CodecId, p: &TensorProbe) -> CostEstimate {
-        let bytes = self.predicted_bytes(codec, p);
+    /// Full cost estimate for `spec` on the probed tensor. Encode
+    /// throughput is calibrated per codec *family* — parameters move the
+    /// payload size, not the order-of-magnitude encode speed.
+    pub fn estimate(&self, spec: impl Into<CodecSpec>, p: &TensorProbe) -> CostEstimate {
+        let spec = spec.into();
+        let bytes = self.predicted_bytes(spec, p);
         CostEstimate {
-            codec,
+            spec,
             bytes,
-            encode_secs: p.raw_bytes() as f64 / self.calibration.encode_bps(codec),
+            encode_secs: p.raw_bytes() as f64 / self.calibration.encode_bps(spec.id),
             write_secs: bytes as f64 / self.write_bps,
         }
     }
 
     /// Cheapest candidate by predicted total save time (payload bytes as
     /// the tiebreak). Panics on an empty candidate list.
-    pub fn best(&self, candidates: &[CodecId], p: &TensorProbe) -> CostEstimate {
+    pub fn best(&self, candidates: &[CodecSpec], p: &TensorProbe) -> CostEstimate {
         assert!(!candidates.is_empty(), "cost model needs at least one candidate");
         let mut best: Option<CostEstimate> = None;
         for &c in candidates {
@@ -317,6 +323,10 @@ mod tests {
     use crate::compress::{compress_delta, CompressedTensor};
     use crate::tensor::StateKind;
 
+    fn specs(ids: &[CodecId]) -> Vec<CodecSpec> {
+        ids.iter().map(|&id| CodecSpec::of(id)).collect()
+    }
+
     fn exact_probe(base: &HostTensor, curr: &HostTensor) -> TensorProbe {
         // sample every element so density (hence size prediction) is exact
         let cfg = ProbeConfig { max_samples: usize::MAX, seed: 0 };
@@ -342,25 +352,25 @@ mod tests {
         let m = CostModel::new(Calibration::default_host(), None);
         for codec in [CodecId::BitmaskPacked, CodecId::BitmaskNaive, CodecId::CooU16] {
             let c: CompressedTensor = compress_delta(codec, &base, &curr).unwrap();
-            assert_eq!(m.predicted_bytes(codec, &p), c.payload.len(), "{codec:?}");
+            assert_eq!(m.predicted_bytes(CodecSpec::of(codec), &p), c.payload.len(), "{codec:?}");
         }
     }
 
     #[test]
     fn best_prefers_sparse_when_little_changed_raw_when_everything_did() {
         let m = CostModel::new(Calibration::default_host(), None);
-        let candidates = [
+        let candidates = specs(&[
             CodecId::Raw,
             CodecId::BitmaskPacked,
             CodecId::BitmaskNaive,
             CodecId::CooU16,
-        ];
+        ]);
         let (base, curr) = perturbed_pair(50_000, 1000); // 2% changed
         let sparse = m.best(&candidates, &exact_probe(&base, &curr));
-        assert_eq!(sparse.codec, CodecId::BitmaskPacked, "2% changed");
+        assert_eq!(sparse.spec.id, CodecId::BitmaskPacked, "2% changed");
         let (base, curr) = perturbed_pair(50_000, 47_500); // 95% changed
         let dense = m.best(&candidates, &exact_probe(&base, &curr));
-        assert_eq!(dense.codec, CodecId::Raw, "95% changed");
+        assert_eq!(dense.spec, CodecSpec::raw(), "95% changed");
     }
 
     #[test]
@@ -369,11 +379,11 @@ mod tests {
         // 100 MB/s NFS-class link the smaller packed payload wins
         let (base, curr) = perturbed_pair(50_000, 42_000); // 84% changed
         let p = exact_probe(&base, &curr);
-        let candidates = [CodecId::Raw, CodecId::BitmaskPacked];
+        let candidates = specs(&[CodecId::Raw, CodecId::BitmaskPacked]);
         let nvme = CostModel::new(Calibration::default_host(), Some(3500e6));
-        assert_eq!(nvme.best(&candidates, &p).codec, CodecId::Raw);
+        assert_eq!(nvme.best(&candidates, &p).spec.id, CodecId::Raw);
         let nfs = CostModel::new(Calibration::default_host(), Some(100e6));
-        assert_eq!(nfs.best(&candidates, &p).codec, CodecId::BitmaskPacked);
+        assert_eq!(nfs.best(&candidates, &p).spec.id, CodecId::BitmaskPacked);
     }
 
     #[test]

@@ -26,7 +26,10 @@ pub mod sim;
 pub mod stage;
 
 pub use cost::{Calibration, CostEstimate, CostModel, SharedCalibration, DEFAULT_WRITE_BPS};
-pub use policy::{AdaptiveConfig, AdaptivePolicy, DecisionRecord, SaveDecisionSummary};
+pub use policy::{
+    stage_precision_budget, AdaptiveConfig, AdaptivePolicy, ClusterSelection, DecisionRecord,
+    SaveDecisionSummary, CLUSTER_LADDER,
+};
 pub use probe::{mean_model_density, probe_state_dict, probe_tensor, ProbeConfig, TensorProbe};
 pub use sim::{
     default_stages, simulate_sharded_trajectory, simulate_trajectory, ShardedSimSave, SimSave,

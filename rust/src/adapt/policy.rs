@@ -13,10 +13,14 @@
 //!   least [`AdaptiveConfig::hysteresis`] relative improvement, so noisy
 //!   density estimates cannot thrash the choice save-over-save;
 //! * **optimizer states** follow the stage: cluster quantization while
-//!   the run is early/mid (the paper's §3.4 default, well inside its
-//!   precision budget), but near convergence the fp32 master weights go
-//!   back to raw — the checkpoint that resumes final convergence should
-//!   not eat quantization noise — while the Adam moments stay quantized.
+//!   the run is early/mid, with the cluster count itself *tuned* per
+//!   stage — the smallest ladder m whose modeled precision loss
+//!   ([`cluster_quant::modeled_rel_mse`]) fits the stage budget, coarse
+//!   (m=4, u2 labels) early and the paper's m=16 near convergence, with
+//!   `--target-ratio` as a user-level ratio floor on the search — but
+//!   near convergence the fp32 master weights go back to raw — the
+//!   checkpoint that resumes final convergence should not eat
+//!   quantization noise — while the Adam moments stay quantized.
 //!   Tensors with non-finite values are never quantized (no 8-bit codec
 //!   represents ±inf/NaN), nor tensors whose sampled value range
 //!   overflows f32 (the quantizers' `max − min` scale would be inf), nor
@@ -29,13 +33,45 @@
 use std::collections::{HashMap, HashSet};
 
 use crate::compress::delta::{CheckpointPlan, Policy, TensorDirective};
-use crate::compress::CodecId;
+use crate::compress::{cluster_quant, CodecId, CodecSpec};
 use crate::tensor::StateKind;
 
 use super::cost::{Calibration, CostModel, SharedCalibration};
 use super::probe::{self, ProbeConfig, TensorProbe};
 use super::stage::{StageConfig, StageDetector, TelemetrySample, TrainingStage};
 use super::{PolicySource, SaveContext, SaveOutcome};
+
+/// The cluster counts the ratio-targeted search walks, smallest (best
+/// ratio, coarsest precision) first. Spans the u2/u4/u8 label widths.
+pub const CLUSTER_LADDER: [usize; 7] = [4, 8, 16, 32, 64, 128, 256];
+
+/// How the controller picks the cluster count for quantized optimizer
+/// states.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ClusterSelection {
+    /// Always this m — the pre-spec behaviour is `Fixed(16)`, the paper's
+    /// operating point.
+    Fixed(usize),
+    /// Inshrinkerator-style ratio targeting: the smallest ladder m whose
+    /// [`cluster_quant::modeled_rel_mse`] fits the current training
+    /// stage's precision budget. Early stages tolerate coarse clusters
+    /// (better ratio); near convergence the budget tightens.
+    Budgeted,
+}
+
+/// Modeled relative-MSE the stage is willing to eat on quantized
+/// optimizer states. The thresholds sit between ladder points so the
+/// budgeted search resolves to m=4 early, m=8 mid, m=16 late — the
+/// paper's fixed 16 is always *within* every budget, so a fixed-16
+/// policy and the budgeted one operate under the same precision
+/// guarantee while the budgeted one spends fewer bytes.
+pub fn stage_precision_budget(stage: TrainingStage) -> f64 {
+    match stage {
+        TrainingStage::Early => 1.0e-5,
+        TrainingStage::Mid => 3.0e-6,
+        TrainingStage::Late => 2.0e-6,
+    }
+}
 
 /// Controller configuration.
 #[derive(Clone, Debug)]
@@ -51,6 +87,14 @@ pub struct AdaptiveConfig {
     pub max_history: usize,
     /// Policy for tensors the controller has no opinion on.
     pub fallback: Policy,
+    /// Cluster-count selection for quantized optimizer states.
+    pub clusters: ClusterSelection,
+    /// User-level compression-ratio floor for quantized optimizer states
+    /// (`train --target-ratio`): the cluster search only considers ladder
+    /// points whose analytic ratio meets it, trading precision for bytes
+    /// when the budget alone would pick a larger m. `None` leaves the
+    /// choice purely to the stage budget.
+    pub target_ratio: Option<f64>,
 }
 
 impl Default for AdaptiveConfig {
@@ -62,8 +106,45 @@ impl Default for AdaptiveConfig {
             min_quant_elems: 1024,
             max_history: 100_000,
             fallback: Policy::bitsnap(),
+            clusters: ClusterSelection::Budgeted,
+            target_ratio: None,
         }
     }
+}
+
+/// Modeled precision loss for each ladder point, computed once — this
+/// sits on the blocking save path, evaluated per optimizer tensor, and
+/// the inverse-normal-CDF sums behind [`cluster_quant::modeled_rel_mse`]
+/// depend only on m.
+fn ladder_rel_mse(index: usize) -> f64 {
+    static TABLE: std::sync::OnceLock<[f64; 7]> = std::sync::OnceLock::new();
+    TABLE.get_or_init(|| CLUSTER_LADDER.map(cluster_quant::modeled_rel_mse))[index]
+}
+
+/// Resolve the cluster count for one tensor of `elems` f32 values:
+/// among ladder points meeting the ratio floor (all of them when no
+/// target is set), the smallest m whose modeled precision loss fits the
+/// stage budget; if none fits, the most precise qualifying m. An
+/// unachievable ratio target degrades to the coarsest ladder point
+/// (maximum ratio) rather than refusing to quantize.
+fn choose_clusters(stage: TrainingStage, target_ratio: Option<f64>, elems: usize) -> usize {
+    let budget = stage_precision_budget(stage);
+    let raw = (elems * 4) as f64;
+    let mut most_precise_qualifying = None;
+    for (i, &m) in CLUSTER_LADDER.iter().enumerate() {
+        let ratio_ok = match target_ratio {
+            Some(t) => raw / cluster_quant::analytic_size(elems, m) as f64 >= t,
+            None => true,
+        };
+        if !ratio_ok {
+            continue;
+        }
+        if ladder_rel_mse(i) <= budget {
+            return m;
+        }
+        most_precise_qualifying = Some(m);
+    }
+    most_precise_qualifying.unwrap_or(CLUSTER_LADDER[0])
 }
 
 /// One per-tensor decision, as logged every save.
@@ -73,11 +154,12 @@ pub struct DecisionRecord {
     pub stage: TrainingStage,
     pub name: String,
     pub kind: StateKind,
-    pub codec: CodecId,
+    pub spec: CodecSpec,
     pub predicted_bytes: usize,
     pub predicted_secs: f64,
     pub raw_bytes: usize,
-    /// Whether this choice replaced a different incumbent codec.
+    /// Whether this choice replaced a different incumbent spec (a
+    /// parameter change alone counts — retuning is a switch).
     pub switched: bool,
 }
 
@@ -86,10 +168,10 @@ pub struct DecisionRecord {
 pub struct SaveDecisionSummary {
     pub iteration: u64,
     pub stage: TrainingStage,
-    /// Codec → tensor count over model states.
-    pub model_codecs: Vec<(CodecId, usize)>,
-    /// Codec → tensor count over optimizer states.
-    pub optimizer_codecs: Vec<(CodecId, usize)>,
+    /// Spec → tensor count over model states.
+    pub model_codecs: Vec<(CodecSpec, usize)>,
+    /// Spec → tensor count over optimizer states.
+    pub optimizer_codecs: Vec<(CodecSpec, usize)>,
     pub predicted_bytes: usize,
     pub raw_bytes: usize,
     pub predicted_secs: f64,
@@ -108,7 +190,7 @@ pub struct AdaptivePolicy {
     cfg: AdaptiveConfig,
     cost: CostModel,
     detector: StageDetector,
-    incumbent: HashMap<String, CodecId>,
+    incumbent: HashMap<String, CodecSpec>,
     /// Master weights deliberately taken lossless by the Late-stage rule
     /// (and only those — not tensors the quantizable guard forced raw),
     /// kept lossless through Mid/Late flapping.
@@ -122,7 +204,14 @@ pub struct AdaptivePolicy {
 }
 
 impl AdaptivePolicy {
+    /// Panics if `cfg.clusters` pins an out-of-range m — a config error
+    /// should fail at construction, not on every quantized save mid-run.
     pub fn new(cfg: AdaptiveConfig, cost: CostModel) -> Self {
+        if let ClusterSelection::Fixed(m) = cfg.clusters {
+            CodecSpec::cluster_quant(m)
+                .validate()
+                .unwrap_or_else(|e| panic!("AdaptiveConfig::clusters: {e}"));
+        }
         let detector = StageDetector::new(cfg.stage);
         Self {
             cfg,
@@ -197,39 +286,42 @@ impl AdaptivePolicy {
             } else {
                 &mut s.optimizer_codecs
             };
-            match bucket.iter_mut().find(|(c, _)| *c == d.codec) {
+            match bucket.iter_mut().find(|(c, _)| *c == d.spec) {
                 Some((_, count)) => *count += 1,
-                None => bucket.push((d.codec, 1)),
+                None => bucket.push((d.spec, 1)),
             }
         }
         out
     }
 
-    fn decide_model(&mut self, p: &TensorProbe, has_base: bool) -> (CodecId, bool) {
+    fn decide_model(&mut self, p: &TensorProbe, has_base: bool) -> (CodecSpec, bool) {
         if !has_base || p.delta_density.is_none() {
             // base checkpoint (or no usable base tensor): dense is the only
             // option; leave the incumbent alone so the next delta save
             // still competes against the last delta-phase choice
-            return (CodecId::Raw, false);
+            return (CodecSpec::raw(), false);
         }
+        // both COO index widths compete: the cost model prices the u16
+        // block table against the wider indices, so probed density picks
+        // the width (u32 wins only on very sparse late-stage deltas)
         let candidates = [
-            CodecId::BitmaskPacked,
-            CodecId::BitmaskNaive,
-            CodecId::CooU16,
-            CodecId::CooU32,
-            CodecId::Raw,
+            CodecSpec::of(CodecId::BitmaskPacked),
+            CodecSpec::of(CodecId::BitmaskNaive),
+            CodecSpec::of(CodecId::CooU16),
+            CodecSpec::of(CodecId::CooU32),
+            CodecSpec::raw(),
         ];
         let best = self.cost.best(&candidates, p);
         let chosen = match self.incumbent.get(&p.name).copied() {
             Some(inc) if candidates.contains(&inc) => {
                 let inc_est = self.cost.estimate(inc, p);
                 if best.total_secs() < inc_est.total_secs() * (1.0 - self.cfg.hysteresis) {
-                    best.codec
+                    best.spec
                 } else {
                     inc
                 }
             }
-            _ => best.codec,
+            _ => best.spec,
         };
         let switched = self
             .incumbent
@@ -239,7 +331,7 @@ impl AdaptivePolicy {
         (chosen, switched)
     }
 
-    fn decide_optimizer(&mut self, p: &TensorProbe, stage: TrainingStage) -> (CodecId, bool) {
+    fn decide_optimizer(&mut self, p: &TensorProbe, stage: TrainingStage) -> (CodecSpec, bool) {
         // the sampled value range guards the quantizers' scale arithmetic:
         // `max - min` overflowing f32 turns every scale into inf and the
         // dequantized tensor into NaN — keep such tensors raw
@@ -248,11 +340,11 @@ impl AdaptivePolicy {
         let chosen = match (stage, p.kind) {
             // guard-forced raw does NOT latch — a transient bad probe must
             // not disable quantization for the rest of the run
-            _ if !quantizable => CodecId::Raw,
+            _ if !quantizable => CodecSpec::raw(),
             // near convergence, master weights carry the resume precision
             (TrainingStage::Late, StateKind::MasterWeight) => {
                 self.sticky_lossless.insert(p.name.clone());
-                CodecId::Raw
+                CodecSpec::raw()
             }
             // sticky on the way back: a master weight deliberately taken
             // lossless stays lossless through Mid/Late flapping near the
@@ -262,11 +354,17 @@ impl AdaptivePolicy {
             (TrainingStage::Mid, StateKind::MasterWeight)
                 if self.sticky_lossless.contains(&p.name) =>
             {
-                CodecId::Raw
+                CodecSpec::raw()
             }
             _ => {
                 self.sticky_lossless.remove(&p.name);
-                CodecId::ClusterQuant
+                let m = match self.cfg.clusters {
+                    ClusterSelection::Fixed(m) => m,
+                    ClusterSelection::Budgeted => {
+                        choose_clusters(stage, self.cfg.target_ratio, p.elems)
+                    }
+                };
+                CodecSpec::cluster_quant(m)
             }
         };
         let switched = self
@@ -282,20 +380,20 @@ impl AdaptivePolicy {
         iteration: u64,
         stage: TrainingStage,
         p: &TensorProbe,
-        codec: CodecId,
+        spec: CodecSpec,
         switched: bool,
     ) {
-        let est = self.cost.estimate(codec, p);
+        let est = self.cost.estimate(spec, p);
         self.pending_encode
             .entry(iteration)
             .or_default()
-            .push((codec, p.raw_bytes(), est.encode_secs));
+            .push((spec.id, p.raw_bytes(), est.encode_secs));
         self.decisions.push(DecisionRecord {
             iteration,
             stage,
             name: p.name.clone(),
             kind: p.kind,
-            codec,
+            spec,
             predicted_bytes: est.bytes,
             predicted_secs: est.total_secs(),
             raw_bytes: p.raw_bytes(),
@@ -319,18 +417,18 @@ impl PolicySource for AdaptivePolicy {
         let stage = self.detector.stage();
         let mut plan = CheckpointPlan::uniform(self.cfg.fallback);
         for p in &probes {
-            let (codec, switched) = match p.kind {
+            let (spec, switched) = match p.kind {
                 StateKind::ModelState => self.decide_model(p, ctx.base.is_some()),
                 k if k.is_optimizer() => self.decide_optimizer(p, stage),
-                _ => (CodecId::Raw, false),
+                _ => (CodecSpec::raw(), false),
             };
-            let directive = match codec {
-                CodecId::Raw => TensorDirective::Raw,
-                c if c.is_delta() => TensorDirective::Delta(c),
-                c => TensorDirective::Quantize(c),
+            let directive = match spec {
+                s if s.id == CodecId::Raw => TensorDirective::Raw,
+                s if s.is_delta() => TensorDirective::Delta(s),
+                s => TensorDirective::Quantize(s),
             };
             plan.set(p.name.clone(), directive);
-            self.record_decision(ctx.iteration, stage, p, codec, switched);
+            self.record_decision(ctx.iteration, stage, p, spec, switched);
         }
         plan
     }
@@ -373,11 +471,19 @@ impl PolicySource for AdaptivePolicy {
     }
 
     fn describe(&self) -> String {
+        let clusters = match self.cfg.clusters {
+            ClusterSelection::Fixed(m) => format!("fixed m={m}"),
+            ClusterSelection::Budgeted => match self.cfg.target_ratio {
+                Some(t) => format!("budgeted, target {t:.2}x"),
+                None => "budgeted".to_string(),
+            },
+        };
         format!(
-            "adaptive(stage={}, write={:.2}GB/s, hysteresis={:.0}%)",
+            "adaptive(stage={}, write={:.2}GB/s, hysteresis={:.0}%, clusters={})",
             self.detector.stage().as_str(),
             self.cost.write_bps() / 1e9,
-            self.cfg.hysteresis * 100.0
+            self.cfg.hysteresis * 100.0,
+            clusters
         )
     }
 }
@@ -396,12 +502,12 @@ mod tests {
         SaveContext { iteration, is_base: base.is_none(), sd, base }
     }
 
-    fn plan_codec(policy: &mut AdaptivePolicy, c: &SaveContext<'_>, name: &str) -> CodecId {
+    fn plan_spec(policy: &mut AdaptivePolicy, c: &SaveContext<'_>, name: &str) -> CodecSpec {
         let plan = policy.plan(c);
-        // materialize via the compressor so the directive→codec mapping is
+        // materialize via the compressor so the directive→spec mapping is
         // the one checkpoints will actually see
         let (ckpt, _) = compress_state_dict_planned(c.sd, c.base, &plan, c.iteration, 0).unwrap();
-        ckpt.entries.iter().find(|e| e.name == name).unwrap().compressed.codec
+        ckpt.entries.iter().find(|e| e.name == name).unwrap().compressed.spec
     }
 
     #[test]
@@ -411,13 +517,13 @@ mod tests {
         let mut early = base.clone();
         early.perturb_model_states(0.9, 2);
         let c = ctx(10, &early, Some(&base));
-        assert_eq!(plan_codec(&mut policy, &c, "layers.0.weight"), CodecId::Raw);
+        assert_eq!(plan_spec(&mut policy, &c, "layers.0.weight"), CodecSpec::raw());
 
         let mut policy = AdaptivePolicy::default_host();
         let mut late = base.clone();
         late.perturb_model_states(0.02, 3);
         let c = ctx(10, &late, Some(&base));
-        assert_eq!(plan_codec(&mut policy, &c, "layers.0.weight"), CodecId::BitmaskPacked);
+        assert_eq!(plan_spec(&mut policy, &c, "layers.0.weight").id, CodecId::BitmaskPacked);
     }
 
     #[test]
@@ -430,17 +536,17 @@ mod tests {
         let mut sd = base.clone();
         sd.perturb_model_states(0.60, 5);
         let c = ctx(10, &sd, Some(&base));
-        assert_eq!(plan_codec(&mut policy, &c, "layers.0.weight"), CodecId::Raw);
+        assert_eq!(plan_spec(&mut policy, &c, "layers.0.weight"), CodecSpec::raw());
         let mut sd = base.clone();
         sd.perturb_model_states(0.50, 6);
         let c = ctx(20, &sd, Some(&base));
-        assert_eq!(plan_codec(&mut policy, &c, "layers.0.weight"), CodecId::Raw);
+        assert_eq!(plan_spec(&mut policy, &c, "layers.0.weight"), CodecSpec::raw());
         assert!(policy.decisions().iter().all(|d| !d.switched));
         // a decisive drop in density does switch
         let mut sd = base.clone();
         sd.perturb_model_states(0.03, 7);
         let c = ctx(30, &sd, Some(&base));
-        assert_eq!(plan_codec(&mut policy, &c, "layers.0.weight"), CodecId::BitmaskPacked);
+        assert_eq!(plan_spec(&mut policy, &c, "layers.0.weight").id, CodecId::BitmaskPacked);
         let last = policy.decisions().last().unwrap();
         assert!(policy
             .decisions()
@@ -469,7 +575,8 @@ mod tests {
         );
         assert_eq!(
             plan.directive("optimizer.0.exp_avg"),
-            TensorDirective::Quantize(CodecId::ClusterQuant)
+            TensorDirective::Quantize(CodecSpec::cluster_quant(16)),
+            "Late stage budget resolves to the paper's m=16"
         );
     }
 
@@ -509,7 +616,8 @@ mod tests {
         assert_eq!(policy.stage(), TrainingStage::Early);
         assert_eq!(
             plan.directive("optimizer.0.master"),
-            TensorDirective::Quantize(CodecId::ClusterQuant)
+            TensorDirective::Quantize(CodecSpec::cluster_quant(4)),
+            "Early stage budget tolerates the coarsest clusters"
         );
     }
 
@@ -542,7 +650,7 @@ mod tests {
         assert_eq!(policy.stage(), TrainingStage::Mid);
         assert_eq!(
             plan.directive("optimizer.0.master"),
-            TensorDirective::Quantize(CodecId::ClusterQuant),
+            TensorDirective::Quantize(CodecSpec::cluster_quant(8)),
             "guard-forced raw must not disable quantization permanently"
         );
     }
@@ -559,7 +667,7 @@ mod tests {
         for name in ["optimizer.0.master", "optimizer.0.exp_avg", "optimizer.0.exp_avg_sq"] {
             assert_eq!(
                 plan.directive(name),
-                TensorDirective::Quantize(CodecId::ClusterQuant),
+                TensorDirective::Quantize(CodecSpec::cluster_quant(4)),
                 "{name}"
             );
         }
@@ -587,7 +695,7 @@ mod tests {
         assert_eq!(plan.directive("optimizer.0.exp_avg"), TensorDirective::Raw);
         assert_eq!(
             plan.directive("optimizer.0.exp_avg_sq"),
-            TensorDirective::Quantize(CodecId::ClusterQuant)
+            TensorDirective::Quantize(CodecSpec::cluster_quant(4))
         );
     }
 
@@ -610,7 +718,7 @@ mod tests {
         assert_eq!(plan.directive("optimizer.0.exp_avg"), TensorDirective::Raw);
         assert_eq!(
             plan.directive("optimizer.0.exp_avg_sq"),
-            TensorDirective::Quantize(CodecId::ClusterQuant)
+            TensorDirective::Quantize(CodecSpec::cluster_quant(4))
         );
     }
 
@@ -643,6 +751,71 @@ mod tests {
         // the correction is visible to the other rank's cost model
         let peer = ranks[1].cost_model().calibration().encode_bps(CodecId::ClusterQuant);
         assert_eq!(peer, after);
+    }
+
+    #[test]
+    fn cluster_search_follows_stage_budgets_and_ratio_targets() {
+        let n = 1 << 14;
+        // fixed-16 always meets every stage budget: the budgeted policy
+        // and the paper default operate under the same precision guarantee
+        for stage in [TrainingStage::Early, TrainingStage::Mid, TrainingStage::Late] {
+            assert!(cluster_quant::modeled_rel_mse(16) <= stage_precision_budget(stage));
+        }
+        // stage budgets alone: coarse early, paper's 16 late
+        assert_eq!(choose_clusters(TrainingStage::Early, None, n), 4);
+        assert_eq!(choose_clusters(TrainingStage::Mid, None, n), 8);
+        assert_eq!(choose_clusters(TrainingStage::Late, None, n), 16);
+        // a 3x ratio floor only m=4 can meet overrides the late budget
+        assert_eq!(choose_clusters(TrainingStage::Late, Some(3.0), n), 4);
+        // a 2.5x floor admits {4, 8, 16}; the late budget then picks 16
+        assert_eq!(choose_clusters(TrainingStage::Late, Some(2.5), n), 16);
+        // an unachievable floor degrades to the max-ratio ladder point
+        assert_eq!(choose_clusters(TrainingStage::Late, Some(100.0), n), 4);
+        // budgeted choices are strictly smaller payloads than fixed-16
+        // in the early stage — the acceptance property the bench asserts
+        assert!(
+            cluster_quant::analytic_size(n, 4) < cluster_quant::analytic_size(n, 16),
+            "early-stage m=4 must out-compress fixed 16"
+        );
+    }
+
+    #[test]
+    fn fixed_cluster_selection_reproduces_the_paper_default() {
+        let sd = StateDict::synthetic_gpt(1 << 14, 40);
+        let cfg = AdaptiveConfig {
+            clusters: ClusterSelection::Fixed(16),
+            ..AdaptiveConfig::default()
+        };
+        let mut policy =
+            AdaptivePolicy::new(cfg, CostModel::new(Calibration::default_host(), None));
+        let plan = policy.plan(&ctx(0, &sd, None));
+        assert_eq!(
+            plan.directive("optimizer.0.exp_avg"),
+            TensorDirective::Quantize(CodecSpec::cluster_quant(16))
+        );
+        assert!(policy.describe().contains("fixed m=16"), "{}", policy.describe());
+    }
+
+    #[test]
+    fn target_ratio_flows_into_the_plan() {
+        let sd = StateDict::synthetic_gpt(1 << 14, 41);
+        let cfg = AdaptiveConfig { target_ratio: Some(3.0), ..AdaptiveConfig::default() };
+        let mut policy =
+            AdaptivePolicy::new(cfg, CostModel::new(Calibration::default_host(), None));
+        // drive Late: even the tight late budget must yield to the floor
+        for i in 0..8u64 {
+            policy.telemetry(i, 2.0);
+        }
+        let mut curr = sd.clone();
+        curr.perturb_model_states(0.02, 42);
+        let plan = policy.plan(&ctx(10, &curr, Some(&sd)));
+        assert_eq!(policy.stage(), TrainingStage::Late);
+        assert_eq!(
+            plan.directive("optimizer.0.exp_avg"),
+            TensorDirective::Quantize(CodecSpec::cluster_quant(4)),
+            "the user ratio floor caps the cluster count"
+        );
+        assert!(policy.describe().contains("target 3.00x"), "{}", policy.describe());
     }
 
     #[test]

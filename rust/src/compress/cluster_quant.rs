@@ -14,14 +14,25 @@
 //!    `q = argmin_j |Q_map(j) − (v−b)/S|` which for a linear uint8 map is
 //!    `round((v−b)/S · 255)` (Eq. 3); dequantization is `q/255·S + b`.
 //!
-//! With `m ≤ 16` the labels pack into uint4, so storage is
-//! `n/2 (labels) + n (payload) + 8m (scales) + O(1)` ≈ `1.5n + 136` bytes
-//! against `4n` raw — the paper's ≈2.67x analytic ratio.
+//! The label width follows the cluster count: `m ≤ 4` packs labels into
+//! uint2, `m ≤ 16` into uint4 (the paper's operating point — storage
+//! `n/2 + n + 8m + O(1)` ≈ `1.5n + 136` bytes against `4n` raw, the
+//! ≈2.67x analytic ratio), and `m ≤ 256` into uint8. Inshrinkerator-style
+//! ratio targeting picks `m` per training stage; [`modeled_rel_mse`] is
+//! the precision side of that trade.
 //!
-//! Payload layout:
+//! Payload layout (current, written by [`encode`]):
 //! ```text
-//! n u64 | m u8 | scales f32*m | offsets f32*m | labels u4*ceil(n/2) | q u8*n
+//! n u64 | 0u8 | m u16 | scales f32*m | offsets f32*m
+//!   | labels u{2,4,8}*ceil(n*w/8) | q u8*n
 //! ```
+//! The `0` marker byte distinguishes this from the legacy (pre-spec)
+//! layout, whose byte at that offset was `m ∈ 2..=16`:
+//! ```text
+//! n u64 | m u8 (2..=16) | scales f32*m | offsets f32*m
+//!   | labels u4*ceil(n/2) | q u8*n
+//! ```
+//! [`decode`] accepts both, so PR-2-era checkpoints keep loading.
 
 use super::CompressError;
 use crate::tensor::{DType, HostTensor};
@@ -30,7 +41,22 @@ use crate::tensor::{DType, HostTensor};
 /// in uint4 data type and it proves to be effective".
 pub const DEFAULT_CLUSTERS: usize = 16;
 
-const HEADER: usize = 8 + 1;
+/// Upper bound on the cluster count: labels must fit a byte.
+pub const MAX_CLUSTERS: usize = 256;
+
+/// Legacy header: n u64 | m u8.
+const HEADER_V1: usize = 8 + 1;
+/// Current header: n u64 | 0u8 marker | m u16.
+const HEADER_V2: usize = 8 + 1 + 2;
+
+/// Bits per packed label for `m` clusters.
+pub fn label_bits(m: usize) -> usize {
+    match m {
+        0..=4 => 2,
+        5..=16 => 4,
+        _ => 8,
+    }
+}
 
 /// Inverse standard-normal CDF (Acklam's rational approximation,
 /// |relative error| < 1.15e-9 — far below uint8 quantization noise).
@@ -122,9 +148,8 @@ fn mean_std(values: &[f32]) -> (f32, f32) {
 #[inline]
 #[cfg(test)]
 fn label_of(v: f32, boundaries: &[f32]) -> u8 {
-    // boundaries is tiny (m-1 <= 15): a linear scan beats binary search and
-    // vectorizes as a compare+sum, which is also exactly what the Pallas
-    // kernel does on TPU (DESIGN.md §Hardware-Adaptation).
+    // reference implementation: count boundaries below v (linear scan,
+    // any m ≤ 256 — the count fits u8 because there are ≤ 255 boundaries)
     let mut l = 0u8;
     for &b in boundaries {
         l += (v > b) as u8;
@@ -132,7 +157,7 @@ fn label_of(v: f32, boundaries: &[f32]) -> u8 {
     l
 }
 
-/// Quantize an f32 tensor. `m` must be in 2..=16.
+/// Quantize an f32 tensor. `m` must be in 2..=[`MAX_CLUSTERS`].
 pub fn encode(t: &HostTensor, m: usize) -> Result<Vec<u8>, CompressError> {
     encode_with_timing(t, m).map(|(p, _, _)| p)
 }
@@ -151,8 +176,8 @@ pub fn encode_with_timing(
             t.dtype()
         )));
     }
-    if !(2..=16).contains(&m) {
-        return Err(CompressError::Format(format!("cluster count {m} outside 2..=16")));
+    if !(2..=MAX_CLUSTERS).contains(&m) {
+        return Err(CompressError::Format(format!("cluster count {m} outside 2..={MAX_CLUSTERS}")));
     }
     let owned;
     let values: &[f32] = match t.as_f32_slice() {
@@ -168,27 +193,37 @@ pub fn encode_with_timing(
     let boundaries = normal_boundaries(m, mu, sigma.max(f32::MIN_POSITIVE));
 
     // pass 1 (clustering, T_c): labels, then per-cluster min/max.
-    // The label loop compares each value against all m-1 boundaries from a
-    // fixed-size array — branch-free and auto-vectorizable (the same
-    // broadcast-compare shape the Pallas kernel uses on the TPU VPU);
-    // padding boundaries with +inf contributes 0 to every sum.
-    let mut bpad = [f32::INFINITY; 15];
-    bpad[..boundaries.len()].copy_from_slice(&boundaries);
     let mut labels = vec![0u8; n];
-    for (l, &v) in labels.iter_mut().zip(values) {
-        let mut acc = 0i32;
-        for b in bpad {
-            acc += (v > b) as i32;
+    if m <= 16 {
+        // The label loop compares each value against all m-1 boundaries
+        // from a fixed-size array — branch-free and auto-vectorizable (the
+        // same broadcast-compare shape the Pallas kernel uses on the TPU
+        // VPU); padding boundaries with +inf contributes 0 to every sum.
+        let mut bpad = [f32::INFINITY; 15];
+        bpad[..boundaries.len()].copy_from_slice(&boundaries);
+        for (l, &v) in labels.iter_mut().zip(values) {
+            let mut acc = 0i32;
+            for b in bpad {
+                acc += (v > b) as i32;
+            }
+            *l = acc as u8;
         }
-        *l = acc as u8;
+    } else {
+        // large m: a 255-wide compare sweep costs more than a binary
+        // search (≤ 8 probes). partition_point counts boundaries < v,
+        // which is exactly the linear scan's (v > b) count — including
+        // for NaN, which compares false everywhere and lands in cluster 0.
+        for (l, &v) in labels.iter_mut().zip(values) {
+            *l = boundaries.partition_point(|&b| b < v) as u8;
+        }
     }
     // per-cluster ranges over finite values only: an inf in cmax would
     // make the cluster's scale inf and dequantize every member to NaN;
     // with finite ranges, ±inf clamps to the cluster edge and NaN lands
     // on the cluster minimum — lossy for those elements (nothing 8-bit
     // can represent them), harmless for the rest
-    let mut cmin = [f32::INFINITY; 16];
-    let mut cmax = [f32::NEG_INFINITY; 16];
+    let mut cmin = vec![f32::INFINITY; m];
+    let mut cmax = vec![f32::NEG_INFINITY; m];
     for (&l, &v) in labels.iter().zip(values) {
         if v.is_finite() {
             let l = l as usize;
@@ -209,66 +244,83 @@ pub fn encode_with_timing(
     let t_quant0 = std::time::Instant::now();
 
     // pass 2 (quantization, T_q): emit
-    let mut out = Vec::with_capacity(HEADER + 8 * m + n.div_ceil(2) + n);
+    let w = label_bits(m);
+    let label_bytes = (n * w).div_ceil(8);
+    let mut out = Vec::with_capacity(HEADER_V2 + 8 * m + label_bytes + n);
     out.extend_from_slice(&(n as u64).to_le_bytes());
-    out.push(m as u8);
+    out.push(0); // format marker: distinguishes from legacy m u8 in 2..=16
+    out.extend_from_slice(&(m as u16).to_le_bytes());
     for s in &scales {
         out.extend_from_slice(&s.to_le_bytes());
     }
     for b in &offsets {
         out.extend_from_slice(&b.to_le_bytes());
     }
-    // labels packed two per byte, low nibble first
-    let mut packed = vec![0u8; n.div_ceil(2)];
+    // labels packed w bits each, LSB-first within the byte
+    let mut packed = vec![0u8; label_bytes];
     for (i, &l) in labels.iter().enumerate() {
-        packed[i / 2] |= l << ((i % 2) * 4);
+        let bit = i * w;
+        packed[bit / 8] |= l << (bit % 8);
     }
     out.extend_from_slice(&packed);
     // quantized payload: round((v - b) / S * 255), computed as a fused
     // multiply by a per-cluster reciprocal (division and f32::round are
     // the two serial bottlenecks in the naive loop; `+0.5` floor-rounding
     // is exact here because the operand is clamped non-negative)
-    let mut inv = [0f32; 16];
-    let mut offs = [0f32; 16];
+    let mut inv = vec![0f32; m];
     for c in 0..m {
         inv[c] = if scales[c] > 0.0 { 255.0 / scales[c] } else { 0.0 };
-        offs[c] = offsets[c];
     }
     let start = out.len();
     out.resize(start + n, 0);
     let q = &mut out[start..];
     for ((qi, &l), &v) in q.iter_mut().zip(&labels).zip(values) {
         let c = l as usize;
-        let t = ((v - offs[c]) * inv[c]).clamp(0.0, 255.0);
+        let t = ((v - offsets[c]) * inv[c]).clamp(0.0, 255.0);
         *qi = (t + 0.5) as u8;
     }
     Ok((out, t_cluster, t_quant0.elapsed()))
 }
 
 /// Dequantize. `dtype`/`shape` come from the checkpoint container entry.
+/// Accepts both the current marker-byte format and the legacy PR-2-era
+/// `m u8 | u4 labels` layout (see module docs).
 pub fn decode(payload: &[u8], dtype: DType, shape: &[usize]) -> Result<HostTensor, CompressError> {
     if dtype != DType::F32 {
         return Err(CompressError::Dtype("cluster quant decodes to f32".into()));
     }
-    if payload.len() < HEADER {
+    if payload.len() < HEADER_V1 {
         return Err(CompressError::Format("cluster quant: payload too short".into()));
     }
     let n = u64::from_le_bytes(payload[0..8].try_into().unwrap()) as usize;
-    let m = payload[8] as usize;
-    if !(2..=16).contains(&m) {
-        return Err(CompressError::Format("cluster quant: bad m".into()));
-    }
+    // byte 8 disambiguates the formats: 0 marks the current layout (m u16
+    // follows), 2..=16 *is* the legacy m, anything else is corrupt.
+    let (m, w, header) = match payload[8] {
+        0 => {
+            if payload.len() < HEADER_V2 {
+                return Err(CompressError::Format("cluster quant: payload too short".into()));
+            }
+            let m = u16::from_le_bytes(payload[9..11].try_into().unwrap()) as usize;
+            if !(2..=MAX_CLUSTERS).contains(&m) {
+                return Err(CompressError::Format("cluster quant: bad m".into()));
+            }
+            (m, label_bits(m), HEADER_V2)
+        }
+        legacy_m @ 2..=16 => (legacy_m as usize, 4, HEADER_V1),
+        _ => return Err(CompressError::Format("cluster quant: bad m".into())),
+    };
     if n != shape.iter().product::<usize>() {
         return Err(CompressError::Format("cluster quant: n != shape product".into()));
     }
-    let expect = HEADER + 8 * m + n.div_ceil(2) + n;
+    let label_bytes = (n * w).div_ceil(8);
+    let expect = header + 8 * m + label_bytes + n;
     if payload.len() != expect {
         return Err(CompressError::Format(format!(
             "cluster quant: payload {} != expected {expect}",
             payload.len()
         )));
     }
-    let mut pos = HEADER;
+    let mut pos = header;
     let mut scales = Vec::with_capacity(m);
     for _ in 0..m {
         scales.push(f32::from_le_bytes(payload[pos..pos + 4].try_into().unwrap()));
@@ -279,12 +331,14 @@ pub fn decode(payload: &[u8], dtype: DType, shape: &[usize]) -> Result<HostTenso
         offsets.push(f32::from_le_bytes(payload[pos..pos + 4].try_into().unwrap()));
         pos += 4;
     }
-    let labels = &payload[pos..pos + n.div_ceil(2)];
-    pos += n.div_ceil(2);
+    let labels = &payload[pos..pos + label_bytes];
+    pos += label_bytes;
     let q = &payload[pos..pos + n];
+    let mask = if w == 8 { 0xff } else { (1u8 << w) - 1 };
     let mut data = Vec::with_capacity(n * 4);
     for i in 0..n {
-        let l = ((labels[i / 2] >> ((i % 2) * 4)) & 0x0f) as usize;
+        let bit = i * w;
+        let l = ((labels[bit / 8] >> (bit % 8)) & mask) as usize;
         if l >= m {
             return Err(CompressError::Format("cluster quant: label >= m".into()));
         }
@@ -294,9 +348,32 @@ pub fn decode(payload: &[u8], dtype: DType, shape: &[usize]) -> Result<HostTenso
     HostTensor::from_bytes(dtype, shape, data)
 }
 
-/// Analytic compressed size (paper: `8m + 1.5n + O(1)` for m ≤ 16).
+/// Analytic compressed size of the current format: `8m` scale table,
+/// `label_bits(m)` per label, one quantized byte per element (paper:
+/// `8m + 1.5n + O(1)` at the m ≤ 16 operating point).
 pub fn analytic_size(n: usize, m: usize) -> usize {
-    HEADER + 8 * m + n.div_ceil(2) + n
+    HEADER_V2 + 8 * m + (n * label_bits(m)).div_ceil(8) + n
+}
+
+/// Modeled quantization error for `m` clusters on N(μ, σ²) data, as a
+/// fraction of the variance (relative MSE, unitless). Each cluster spans
+/// a normal quantile slice and quantizes uniformly to 255 steps, so its
+/// contribution is `width²/(12·255²)` with probability `1/m`; tail
+/// clusters use an effective ±4σ edge (where the empirical min/max of
+/// any realistically sized tensor lands). The adaptive policy searches
+/// the smallest `m` whose modeled loss fits the training stage's
+/// precision budget — the Inshrinkerator-style ratio/precision dial.
+pub fn modeled_rel_mse(m: usize) -> f64 {
+    const TAIL_SIGMA: f64 = 4.0;
+    debug_assert!((2..=MAX_CLUSTERS).contains(&m));
+    let mut prev = -TAIL_SIGMA;
+    let mut sum_w2 = 0.0f64;
+    for i in 1..=m {
+        let edge = if i == m { TAIL_SIGMA } else { inv_normal_cdf(i as f64 / m as f64) };
+        sum_w2 += (edge - prev) * (edge - prev);
+        prev = edge;
+    }
+    sum_w2 / m as f64 / 12.0 / (255.0 * 255.0)
 }
 
 #[cfg(test)]
@@ -435,11 +512,120 @@ mod tests {
         ];
         for vals in cases {
             let t = HostTensor::from_f32(&[vals.len()], vals).unwrap();
-            for m in [2usize, 4, 16] {
+            for m in [2usize, 4, 16, 64, 256] {
                 let p = encode(&t, m).unwrap();
                 let back = decode(&p, DType::F32, &[vals.len()]).unwrap();
                 assert_eq!(back.len(), vals.len());
             }
+        }
+    }
+
+    #[test]
+    fn roundtrip_across_the_m_range_with_monotone_ratio() {
+        // the full cluster ladder: every m round-trips within its own
+        // error bound, inf/NaN stay contained, len-1 is exact, and the
+        // compression ratio decreases monotonically as m grows (bigger
+        // label width + scale table buy precision, never bytes back)
+        let mut rng = XorShiftRng::new(77);
+        let n = 1 << 14;
+        let vals = rng.normal_vec(n, 0.0, 1e-3);
+        let t = HostTensor::from_f32(&[n], &vals).unwrap();
+        let mut prev_len = 0usize;
+        let mut prev_mse = f64::INFINITY;
+        for m in [4usize, 16, 64, 256] {
+            let p = encode(&t, m).unwrap();
+            assert_eq!(p.len(), analytic_size(n, m), "m={m}");
+            assert!(p.len() > prev_len, "payload must grow with m (m={m})");
+            prev_len = p.len();
+            let back = decode(&p, DType::F32, &[n]).unwrap().to_f32_vec().unwrap();
+            let mse = metrics::mse(&vals, &back);
+            assert!(mse < prev_mse, "precision must improve with m (m={m}: {mse})");
+            prev_mse = mse;
+
+            // inf/NaN containment at every m
+            let mut poisoned = vals.clone();
+            poisoned[7] = f32::INFINITY;
+            poisoned[11] = f32::NAN;
+            let pt = HostTensor::from_f32(&[n], &poisoned).unwrap();
+            let pp = encode(&pt, m).unwrap();
+            let back = decode(&pp, DType::F32, &[n]).unwrap().to_f32_vec().unwrap();
+            for (i, (&v, &d)) in poisoned.iter().zip(&back).enumerate() {
+                assert!(d.is_finite(), "m={m}: element {i} decoded non-finite");
+                if i != 7 && i != 11 {
+                    assert!((v - d).abs() < 1e-4, "m={m} element {i}: {v} vs {d}");
+                }
+            }
+
+            // len-1 is exact at every m (σ=0 collapses to one cluster)
+            for v in [3.75f32, -1e-30, 0.0] {
+                let one = HostTensor::from_f32(&[1], &[v]).unwrap();
+                let p1 = encode(&one, m).unwrap();
+                let back = decode(&p1, DType::F32, &[1]).unwrap().to_f32_vec().unwrap();
+                assert_eq!(back, vec![v], "m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn legacy_u4_payload_still_decodes() {
+        // a hand-built PR-2-era payload (m u8 at offset 8, u4 labels):
+        // n=4, m=16, cluster 0 = [scale 2, offset 1], clusters 1.. zero
+        let mut p = Vec::new();
+        p.extend_from_slice(&4u64.to_le_bytes());
+        p.push(16);
+        for c in 0..16 {
+            p.extend_from_slice(&(if c == 0 { 2.0f32 } else { 0.0 }).to_le_bytes());
+        }
+        for c in 0..16 {
+            p.extend_from_slice(&(if c == 0 { 1.0f32 } else { 0.0 }).to_le_bytes());
+        }
+        p.extend_from_slice(&[0x10, 0x00]); // labels [0, 1, 0, 0] packed u4
+        p.extend_from_slice(&[0, 0, 255, 0]); // q
+        let back = decode(&p, DType::F32, &[4]).unwrap().to_f32_vec().unwrap();
+        // label 0, q 0 -> 1.0; label 1 -> 0.0; label 0, q 255 -> 3.0
+        assert_eq!(back, vec![1.0, 0.0, 3.0, 1.0]);
+        // and the current encoder no longer emits that layout
+        let t = HostTensor::from_f32(&[4], &back).unwrap();
+        assert_eq!(encode(&t, 16).unwrap()[8], 0, "marker byte");
+    }
+
+    #[test]
+    fn label_widths_follow_m() {
+        assert_eq!(label_bits(4), 2);
+        assert_eq!(label_bits(16), 4);
+        assert_eq!(label_bits(17), 8);
+        assert_eq!(label_bits(256), 8);
+        // u2 packing: 4 labels/byte; u8: 1 label/byte
+        let n = 1000;
+        assert_eq!(analytic_size(n, 4), 11 + 32 + 250 + n);
+        assert_eq!(analytic_size(n, 256), 11 + 2048 + n + n);
+    }
+
+    #[test]
+    fn modeled_rel_mse_decreases_with_m() {
+        let ladder = [4usize, 8, 16, 32, 64, 128, 256];
+        let mut prev = f64::INFINITY;
+        for m in ladder {
+            let mse = modeled_rel_mse(m);
+            assert!(mse > 0.0 && mse < prev, "m={m}: {mse} vs {prev}");
+            prev = mse;
+        }
+        // the model tracks reality: measured relative MSE on N(0, σ²)
+        // data lands within ~3x of the analytic value
+        let mut rng = XorShiftRng::new(31);
+        let n = 1 << 16;
+        let sigma = 1e-3f32;
+        let vals = rng.normal_vec(n, 0.0, sigma);
+        let t = HostTensor::from_f32(&[n], &vals).unwrap();
+        for m in [4usize, 16, 64] {
+            let p = encode(&t, m).unwrap();
+            let back = decode(&p, DType::F32, &[n]).unwrap().to_f32_vec().unwrap();
+            let rel = metrics::mse(&vals, &back) / (sigma as f64 * sigma as f64);
+            let model = modeled_rel_mse(m);
+            assert!(
+                rel < model * 3.0 && rel > model / 10.0,
+                "m={m}: measured {rel:.3e} vs modeled {model:.3e}"
+            );
         }
     }
 
@@ -453,7 +639,8 @@ mod tests {
     fn rejects_bad_m() {
         let t = HostTensor::from_f32(&[4], &[1., 2., 3., 4.]).unwrap();
         assert!(encode(&t, 1).is_err());
-        assert!(encode(&t, 17).is_err());
+        assert!(encode(&t, 257).is_err());
+        assert!(encode(&t, 17).is_ok(), "17..=256 is in range now");
     }
 
     #[test]
@@ -473,7 +660,7 @@ mod tests {
         for &n in &[1usize, 7, 100, 4097] {
             let vals = rng.normal_vec(n, 0.5, 2.0);
             let t = HostTensor::from_f32(&[n], &vals).unwrap();
-            for m in [2usize, 8, 16] {
+            for m in [2usize, 8, 16, 32, 256] {
                 assert_eq!(encode(&t, m).unwrap().len(), analytic_size(n, m));
             }
         }
@@ -490,7 +677,7 @@ mod tests {
             let mu = rng.next_normal();
             let vals = rng.normal_vec(n, mu, sigma);
             let t = HostTensor::from_f32(&[n], &vals).unwrap();
-            let m = 2 + rng.next_below(15);
+            let m = 2 + rng.next_below(255);
             let p = encode(&t, m).unwrap();
             let back = decode(&p, DType::F32, &[n]).unwrap().to_f32_vec().unwrap();
             // recompute boundaries to find each value's cluster width

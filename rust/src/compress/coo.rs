@@ -172,6 +172,21 @@ pub fn u32_size(_n: usize, n_changed: usize, elem_size: usize) -> usize {
     HEADER + 4 * n_changed + n_changed * elem_size
 }
 
+/// The index width with the smaller payload for this change profile.
+/// u16 stores 2 bytes/index plus a fixed 4-byte count per 64Ki block, so
+/// u32 (4 bytes/index, no table) wins only on *very* sparse deltas —
+/// the crossover sits at `n_changed ≈ 2 + 2·n/65536`, i.e. a few
+/// thousandths of a percent density on LLM-sized tensors. The adaptive
+/// policy feeds its probed density through this via the cost model;
+/// ties go to u16 (the paper's Fig. 8 baseline).
+pub fn cheapest_width(n: usize, n_changed: usize, elem_size: usize) -> IndexWidth {
+    if u32_size(n, n_changed, elem_size) < u16_size(n, n_changed, elem_size) {
+        IndexWidth::U32
+    } else {
+        IndexWidth::U16
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,6 +244,27 @@ mod tests {
         assert!(bitmask2 < coo16_2, "bitmask {bitmask2} vs coo {coo16_2}");
         // and document the low-rate side
         assert!(coo16 < bitmask, "coo {coo16} vs bitmask {bitmask}");
+    }
+
+    #[test]
+    fn width_crossover_tracks_the_block_table_overhead() {
+        // the u16 block table costs 4 bytes per 64Ki elements; u32 wins
+        // below n_changed = 2 + 2·n/65536 and loses above
+        let n = 1 << 22; // 64 blocks -> crossover at 130 changed elements
+        let cross = 2 + 2 * (n >> 16);
+        assert_eq!(cheapest_width(n, cross - 1, 2), IndexWidth::U32);
+        assert_eq!(cheapest_width(n, cross + 1, 2), IndexWidth::U16);
+        // the analytic sizes the choice is made from match the encoders
+        let (base, curr) = mk_pair(n, cross + 1, 2, 9);
+        let p16 = encode(&base, &curr, 2, IndexWidth::U16).unwrap();
+        let p32 = encode(&base, &curr, 2, IndexWidth::U32).unwrap();
+        assert_eq!(p16.len(), u16_size(n, cross + 1, 2));
+        assert_eq!(p32.len(), u32_size(n, cross + 1, 2));
+        assert!(p16.len() < p32.len());
+        // ordinary densities (0.1%+) are firmly u16 territory; only the
+        // sub-0.01% tail of a converged run flips to u32
+        assert_eq!(cheapest_width(n, n / 1000, 2), IndexWidth::U16);
+        assert_eq!(cheapest_width(n, n / 100_000, 2), IndexWidth::U32);
     }
 
     #[test]

@@ -12,8 +12,8 @@
 use std::collections::HashMap;
 
 use super::{
-    bitmask, compress, compress_delta, decompress, decompress_delta, CodecId, CompressError,
-    CompressedTensor,
+    bitmask, compress, compress_delta, decompress, decompress_delta, CodecId, CodecSpec,
+    CompressError, CompressedTensor,
 };
 use crate::tensor::{HostTensor, StateDict, StateKind};
 
@@ -103,11 +103,12 @@ impl CompressedCheckpoint {
         self.entries.iter().map(|e| e.compressed.payload.len()).sum()
     }
 
-    /// (name, codec) of every entry in container order — what a sharded
+    /// (name, spec) of every entry in container order — what a sharded
     /// save records into its manifest so recovery tooling can audit codec
-    /// choices without re-reading the rank containers.
-    pub fn entry_codecs(&self) -> Vec<(String, CodecId)> {
-        self.entries.iter().map(|e| (e.name.clone(), e.compressed.codec)).collect()
+    /// choices (including their parameters) without re-reading the rank
+    /// containers.
+    pub fn entry_specs(&self) -> Vec<(String, CodecSpec)> {
+        self.entries.iter().map(|e| (e.name.clone(), e.compressed.spec)).collect()
     }
 }
 
@@ -120,12 +121,19 @@ pub enum TensorDirective {
     Inherit,
     /// Store the dense little-endian bytes.
     Raw,
-    /// Delta-sparsify against the base checkpoint with this delta codec.
-    /// Falls back to raw when the checkpoint has no base (a base
-    /// checkpoint has nothing to delta against).
-    Delta(CodecId),
-    /// Quantize standalone with this (non-delta, lossy) codec.
-    Quantize(CodecId),
+    /// Delta-sparsify against the base checkpoint with this delta codec
+    /// spec (the spec's id picks the COO index width). Falls back to raw
+    /// when the checkpoint has no base (a base checkpoint has nothing to
+    /// delta against).
+    Delta(CodecSpec),
+    /// Quantize standalone with this (non-delta, lossy) codec spec —
+    /// cluster count, block size or prune threshold ride along. The spec
+    /// is authoritative: a `Prune` directive prunes at exactly its
+    /// `keep_fraction`, so a plan that prunes master weights must choose
+    /// the keep rate itself (the kind-dependent ExCP safeguard lives on
+    /// the [`OptimizerPolicy::ExcpPrune`] policy path, which knows the
+    /// tensor kind).
+    Quantize(CodecSpec),
 }
 
 /// A per-tensor compression plan for one checkpoint: a checkpoint-wide
@@ -171,10 +179,17 @@ fn pick_auto(base: &HostTensor, curr: &HostTensor) -> Result<CodecId, CompressEr
     let es = curr.dtype().size();
     let n = curr.len();
     let n_changed = bitmask::count_changed(base.bytes(), curr.bytes(), es)?;
+    // the COO candidate enters at its cheaper index width (u32 wins only
+    // on very sparse deltas, where the u16 block table dominates)
+    let coo_width = super::coo::cheapest_width(n, n_changed, es);
+    let coo_size = match coo_width {
+        super::coo::IndexWidth::U16 => super::coo::u16_size(n, n_changed, es),
+        super::coo::IndexWidth::U32 => super::coo::u32_size(n, n_changed, es),
+    };
     let candidates = [
         (CodecId::BitmaskPacked, bitmask::packed_size(n, n_changed, es)),
         (CodecId::BitmaskNaive, bitmask::naive_size(n, n_changed, es)),
-        (CodecId::CooU16, super::coo::u16_size(n, n_changed, es)),
+        (CodecSpec::coo(coo_width).id, coo_size),
         (CodecId::Raw, n * es),
     ];
     Ok(candidates.iter().min_by_key(|(_, s)| *s).unwrap().0)
@@ -249,46 +264,24 @@ fn compress_model_entry(
 }
 
 fn compress_quantized_entry(
-    codec: CodecId,
-    kind: StateKind,
+    spec: CodecSpec,
     t: &HostTensor,
     timings: &mut CompressTimings,
 ) -> Result<CompressedTensor, CompressError> {
-    match codec {
+    spec.validate()?;
+    match spec.id {
         CodecId::ClusterQuant => {
-            let (payload, t_c, t_q) = super::cluster_quant::encode_with_timing(
-                t,
-                super::cluster_quant::DEFAULT_CLUSTERS,
-            )?;
+            let m = spec.clusters().unwrap_or(super::cluster_quant::DEFAULT_CLUSTERS);
+            let (payload, t_c, t_q) = super::cluster_quant::encode_with_timing(t, m)?;
             timings.clustering += t_c;
             timings.quantization += t_q;
-            Ok(CompressedTensor {
-                codec: CodecId::ClusterQuant,
-                dtype: t.dtype(),
-                shape: t.shape().to_vec(),
-                payload,
-            })
+            Ok(CompressedTensor { spec, dtype: t.dtype(), shape: t.shape().to_vec(), payload })
         }
-        CodecId::NaiveQuant8 | CodecId::BlockQuant8 => {
+        CodecId::NaiveQuant8 | CodecId::BlockQuant8 | CodecId::Prune => {
             let t0 = std::time::Instant::now();
-            let c = compress(codec, t)?;
+            let c = compress(spec, t)?;
             timings.quantization += t0.elapsed();
             Ok(c)
-        }
-        CodecId::Prune => {
-            // keep rate is kind-dependent (ExCP: moderate on master
-            // weights, aggressive on Adam moments) on every path that
-            // knows the kind — the §2.2.1 loss-jump safeguard
-            let t0 = std::time::Instant::now();
-            let keep = if kind == StateKind::MasterWeight { 0.5 } else { 0.1 };
-            let payload = super::prune::encode(t, keep)?;
-            timings.quantization += t0.elapsed();
-            Ok(CompressedTensor {
-                codec: CodecId::Prune,
-                dtype: t.dtype(),
-                shape: t.shape().to_vec(),
-                payload,
-            })
         }
         other => Err(CompressError::Format(format!("{other:?} is not a quantizing codec"))),
     }
@@ -300,14 +293,18 @@ fn compress_optimizer_entry(
     t: &HostTensor,
     timings: &mut CompressTimings,
 ) -> Result<CompressedTensor, CompressError> {
-    let codec = match optimizer {
+    let spec = match optimizer {
         OptimizerPolicy::Raw => return compress(CodecId::Raw, t),
-        OptimizerPolicy::ClusterQuant => CodecId::ClusterQuant,
-        OptimizerPolicy::NaiveQuant8 => CodecId::NaiveQuant8,
-        OptimizerPolicy::BlockQuant8 => CodecId::BlockQuant8,
-        OptimizerPolicy::ExcpPrune => CodecId::Prune,
+        OptimizerPolicy::ClusterQuant => CodecSpec::of(CodecId::ClusterQuant),
+        OptimizerPolicy::NaiveQuant8 => CodecSpec::of(CodecId::NaiveQuant8),
+        OptimizerPolicy::BlockQuant8 => CodecSpec::of(CodecId::BlockQuant8),
+        // keep rate is kind-dependent (ExCP: moderate on master weights,
+        // aggressive on Adam moments) — the §2.2.1 loss-jump safeguard
+        OptimizerPolicy::ExcpPrune => {
+            CodecSpec::prune(if kind == StateKind::MasterWeight { 0.5 } else { 0.1 })
+        }
     };
-    compress_quantized_entry(codec, kind, t, timings)
+    compress_quantized_entry(spec, t, timings)
 }
 
 /// [`compress_state_dict_timed`] generalized to a per-tensor
@@ -340,22 +337,22 @@ pub fn compress_state_dict_planned(
                 _ => compress(CodecId::Raw, &e.tensor)?,
             },
             TensorDirective::Raw => compress(CodecId::Raw, &e.tensor)?,
-            TensorDirective::Delta(codec) => {
-                if !codec.is_delta() {
+            TensorDirective::Delta(spec) => {
+                if !spec.is_delta() {
                     return Err(CompressError::Format(format!(
-                        "plan directive Delta({codec:?}) is not a delta codec"
+                        "plan directive Delta({spec:?}) is not a delta codec"
                     )));
                 }
                 let t0 = std::time::Instant::now();
                 let c = match lookup_base() {
-                    Some(b) => compress_delta(codec, b, &e.tensor)?,
+                    Some(b) => compress_delta(spec, b, &e.tensor)?,
                     None => compress(CodecId::Raw, &e.tensor)?,
                 };
                 timings.delta_encoding += t0.elapsed();
                 c
             }
-            TensorDirective::Quantize(codec) => {
-                compress_quantized_entry(codec, e.kind, &e.tensor, &mut timings)?
+            TensorDirective::Quantize(spec) => {
+                compress_quantized_entry(spec, &e.tensor, &mut timings)?
             }
         };
         entries.push(CompressedEntry { name: e.name.clone(), kind: e.kind, compressed });
@@ -371,7 +368,7 @@ pub fn decompress_state_dict(
 ) -> Result<StateDict, CompressError> {
     let mut sd = StateDict::new();
     for e in &ckpt.entries {
-        let tensor = if e.compressed.codec.is_delta() {
+        let tensor = if e.compressed.spec.is_delta() {
             let base_sd = base.ok_or_else(|| {
                 CompressError::Format(format!("entry {} is a delta but no base given", e.name))
             })?;
@@ -419,8 +416,10 @@ mod tests {
         let c = compress_state_dict(&sd, None, Policy::bitsnap(), 0, 0).unwrap();
         for e in &c.entries {
             match e.kind {
-                StateKind::ModelState => assert_eq!(e.compressed.codec, CodecId::Raw),
-                k if k.is_optimizer() => assert_eq!(e.compressed.codec, CodecId::ClusterQuant),
+                StateKind::ModelState => assert_eq!(e.compressed.codec(), CodecId::Raw),
+                k if k.is_optimizer() => {
+                    assert_eq!(e.compressed.spec, CodecSpec::cluster_quant(16))
+                }
                 _ => {}
             }
         }
@@ -458,7 +457,7 @@ mod tests {
         let policy = Policy { model: ModelPolicy::Auto, optimizer: OptimizerPolicy::Raw };
         let cd = compress_state_dict(&curr, Some(&base), policy, 1, 0).unwrap();
         let model_entry = cd.entries.iter().find(|e| e.kind == StateKind::ModelState).unwrap();
-        assert_ne!(model_entry.compressed.codec, CodecId::Raw);
+        assert_ne!(model_entry.compressed.codec(), CodecId::Raw);
         let rd = decompress_state_dict(&cd, Some(&base)).unwrap();
         assert_eq!(
             rd.get("layers.0.weight").unwrap().tensor,
@@ -474,7 +473,7 @@ mod tests {
         let policy = Policy { model: ModelPolicy::Auto, optimizer: OptimizerPolicy::Raw };
         let cd = compress_state_dict(&curr, Some(&base), policy, 1, 0).unwrap();
         let model_entry = cd.entries.iter().find(|e| e.kind == StateKind::ModelState).unwrap();
-        assert_eq!(model_entry.compressed.codec, CodecId::Raw);
+        assert_eq!(model_entry.compressed.codec(), CodecId::Raw);
     }
 
     #[test]
@@ -487,7 +486,7 @@ mod tests {
         let legacy = compress_state_dict(&curr, Some(&base), Policy::bitsnap(), 10, 0).unwrap();
         assert_eq!(planned.entries.len(), legacy.entries.len());
         for (a, b) in planned.entries.iter().zip(&legacy.entries) {
-            assert_eq!(a.compressed.codec, b.compressed.codec, "{}", a.name);
+            assert_eq!(a.compressed.spec, b.compressed.spec, "{}", a.name);
         }
     }
 
@@ -497,17 +496,17 @@ mod tests {
         let mut curr = base.clone();
         curr.perturb_model_states(0.05, 14);
         let mut plan = CheckpointPlan::uniform(Policy::lossless());
-        plan.set("layers.0.weight", TensorDirective::Delta(CodecId::CooU16));
-        plan.set("optimizer.0.exp_avg", TensorDirective::Quantize(CodecId::ClusterQuant));
+        plan.set("layers.0.weight", TensorDirective::Delta(CodecId::CooU16.into()));
+        plan.set("optimizer.0.exp_avg", TensorDirective::Quantize(CodecSpec::cluster_quant(64)));
         plan.set("optimizer.0.master", TensorDirective::Raw);
         assert_eq!(plan.overrides(), 3);
         let (ckpt, _) = compress_state_dict_planned(&curr, Some(&base), &plan, 20, 0).unwrap();
-        let codec_of = |name: &str| {
-            ckpt.entries.iter().find(|e| e.name == name).unwrap().compressed.codec
+        let spec_of = |name: &str| {
+            ckpt.entries.iter().find(|e| e.name == name).unwrap().compressed.spec
         };
-        assert_eq!(codec_of("layers.0.weight"), CodecId::CooU16);
-        assert_eq!(codec_of("optimizer.0.exp_avg"), CodecId::ClusterQuant);
-        assert_eq!(codec_of("optimizer.0.master"), CodecId::Raw);
+        assert_eq!(spec_of("layers.0.weight").id, CodecId::CooU16);
+        assert_eq!(spec_of("optimizer.0.exp_avg"), CodecSpec::cluster_quant(64));
+        assert_eq!(spec_of("optimizer.0.master"), CodecSpec::raw());
         // lossless entries round-trip bit-exactly
         let rd = decompress_state_dict(&ckpt, Some(&base)).unwrap();
         assert_eq!(
@@ -524,20 +523,20 @@ mod tests {
     fn delta_directive_degrades_to_raw_without_base() {
         let sd = small_dict(15);
         let mut plan = CheckpointPlan::uniform(Policy::raw());
-        plan.set("layers.0.weight", TensorDirective::Delta(CodecId::BitmaskPacked));
+        plan.set("layers.0.weight", TensorDirective::Delta(CodecId::BitmaskPacked.into()));
         let (ckpt, _) = compress_state_dict_planned(&sd, None, &plan, 0, 0).unwrap();
         let e = ckpt.entries.iter().find(|e| e.name == "layers.0.weight").unwrap();
-        assert_eq!(e.compressed.codec, CodecId::Raw);
+        assert_eq!(e.compressed.spec, CodecSpec::raw());
     }
 
     #[test]
     fn invalid_directives_rejected() {
         let sd = small_dict(16);
         let mut plan = CheckpointPlan::uniform(Policy::raw());
-        plan.set("layers.0.weight", TensorDirective::Delta(CodecId::ClusterQuant));
+        plan.set("layers.0.weight", TensorDirective::Delta(CodecId::ClusterQuant.into()));
         assert!(compress_state_dict_planned(&sd, None, &plan, 0, 0).is_err());
         let mut plan = CheckpointPlan::uniform(Policy::raw());
-        plan.set("optimizer.0.master", TensorDirective::Quantize(CodecId::BitmaskPacked));
+        plan.set("optimizer.0.master", TensorDirective::Quantize(CodecId::BitmaskPacked.into()));
         assert!(compress_state_dict_planned(&sd, None, &plan, 0, 0).is_err());
     }
 

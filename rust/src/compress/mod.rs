@@ -141,16 +141,181 @@ impl CodecId {
     }
 }
 
+/// Tunable parameters of a codec. One variant per parameter family; which
+/// family a [`CodecId`] takes is fixed ([`CodecSpec::validate`] enforces
+/// it). Integer representations keep the type `Eq + Hash` so specs can key
+/// incumbent tables, and serialize losslessly into container entries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CodecParams {
+    /// The codec has no tunables (or they live in the payload itself).
+    None,
+    /// Cluster count `m` for [`cluster_quant`] (2..=256). Label width
+    /// follows: m ≤ 4 packs u2, m ≤ 16 packs u4, larger packs u8.
+    Clusters(u16),
+    /// Block size for [`blockwise_quant`].
+    BlockSize(u32),
+    /// Keep fraction for [`prune`] in 1/1000 units (0..=1000).
+    KeepPerMille(u16),
+}
+
+/// A fully parameterized codec choice: the currency of the planning and
+/// encoding stack. Plans ([`delta::CheckpointPlan`]), the adaptive cost
+/// model, container entry headers and sharded manifests all carry specs,
+/// so "adaptive" can tune codec *parameters* (cluster count, index width,
+/// block size, prune threshold) rather than merely selecting among
+/// fixed-parameter codecs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CodecSpec {
+    pub id: CodecId,
+    pub params: CodecParams,
+}
+
+impl CodecSpec {
+    /// The spec a bare [`CodecId`] historically meant: the parameters that
+    /// were hardwired at call sites before specs existed. This is also the
+    /// spec the versioned legacy read path assigns to PR-2-era container
+    /// entries, which carry only a codec tag.
+    pub fn of(id: CodecId) -> Self {
+        let params = match id {
+            CodecId::ClusterQuant => CodecParams::Clusters(cluster_quant::DEFAULT_CLUSTERS as u16),
+            CodecId::BlockQuant8 => CodecParams::BlockSize(blockwise_quant::DEFAULT_BLOCK as u32),
+            // same rounding as [`CodecSpec::prune`], so the two
+            // constructors agree for any DEFAULT_KEEP
+            CodecId::Prune => {
+                CodecParams::KeepPerMille((prune::DEFAULT_KEEP * 1000.0).round() as u16)
+            }
+            _ => CodecParams::None,
+        };
+        Self { id, params }
+    }
+
+    pub fn raw() -> Self {
+        Self::of(CodecId::Raw)
+    }
+
+    /// Cluster quantization with `m` clusters (2..=256). Out-of-range
+    /// values saturate rather than wrap, so [`CodecSpec::validate`] still
+    /// rejects them loudly.
+    pub fn cluster_quant(m: usize) -> Self {
+        let m = u16::try_from(m).unwrap_or(u16::MAX);
+        Self { id: CodecId::ClusterQuant, params: CodecParams::Clusters(m) }
+    }
+
+    /// Block-wise 8-bit quantization with the given block size
+    /// (saturating, like [`CodecSpec::cluster_quant`]).
+    pub fn block_quant(block: usize) -> Self {
+        let block = u32::try_from(block).unwrap_or(u32::MAX);
+        Self { id: CodecId::BlockQuant8, params: CodecParams::BlockSize(block) }
+    }
+
+    /// Magnitude prune keeping `keep` (0..=1) of the elements.
+    pub fn prune(keep: f64) -> Self {
+        Self {
+            id: CodecId::Prune,
+            params: CodecParams::KeepPerMille((keep * 1000.0).round().clamp(0.0, 1000.0) as u16),
+        }
+    }
+
+    /// COO sparse delta with the given index width.
+    pub fn coo(width: coo::IndexWidth) -> Self {
+        Self::of(match width {
+            coo::IndexWidth::U16 => CodecId::CooU16,
+            coo::IndexWidth::U32 => CodecId::CooU32,
+        })
+    }
+
+    /// See [`CodecId::is_delta`].
+    pub fn is_delta(self) -> bool {
+        self.id.is_delta()
+    }
+
+    /// See [`CodecId::is_lossless`].
+    pub fn is_lossless(self) -> bool {
+        self.id.is_lossless()
+    }
+
+    /// Cluster count when this is a cluster-quant spec.
+    pub fn clusters(self) -> Option<usize> {
+        match self.params {
+            CodecParams::Clusters(m) => Some(m as usize),
+            _ => None,
+        }
+    }
+
+    /// Block size for block-wise quantization (default when unset).
+    pub fn block_size(self) -> usize {
+        match self.params {
+            CodecParams::BlockSize(b) => b as usize,
+            _ => blockwise_quant::DEFAULT_BLOCK,
+        }
+    }
+
+    /// Keep fraction for pruning (default when unset).
+    pub fn keep_fraction(self) -> f64 {
+        match self.params {
+            CodecParams::KeepPerMille(k) => k as f64 / 1000.0,
+            _ => prune::DEFAULT_KEEP,
+        }
+    }
+
+    /// Check that the params family matches the codec and the values are
+    /// in range. Every encode dispatch and container read goes through
+    /// this, so a corrupt or hand-rolled spec fails loudly.
+    pub fn validate(self) -> Result<(), CompressError> {
+        let ok = match (self.id, self.params) {
+            (CodecId::ClusterQuant, CodecParams::Clusters(m)) => {
+                (2..=cluster_quant::MAX_CLUSTERS as u16).contains(&m)
+            }
+            (CodecId::BlockQuant8, CodecParams::BlockSize(b)) => b > 0,
+            (CodecId::Prune, CodecParams::KeepPerMille(k)) => k <= 1000,
+            (CodecId::ClusterQuant | CodecId::BlockQuant8 | CodecId::Prune, _) => false,
+            (_, CodecParams::None) => true,
+            _ => false,
+        };
+        if ok {
+            Ok(())
+        } else {
+            Err(CompressError::Format(format!(
+                "invalid codec spec: {:?} with params {:?}",
+                self.id, self.params
+            )))
+        }
+    }
+
+    /// Human-readable label with the parameters spelled out, for reports.
+    pub fn label(self) -> String {
+        match self.params {
+            CodecParams::None => format!("{:?}", self.id),
+            CodecParams::Clusters(m) => format!("{:?}(m={m})", self.id),
+            CodecParams::BlockSize(b) => format!("{:?}(block={b})", self.id),
+            CodecParams::KeepPerMille(k) => {
+                format!("{:?}(keep={:.1}%)", self.id, k as f64 / 10.0)
+            }
+        }
+    }
+}
+
+impl From<CodecId> for CodecSpec {
+    fn from(id: CodecId) -> Self {
+        Self::of(id)
+    }
+}
+
 /// A compressed tensor payload plus everything needed to restore it.
 #[derive(Clone, Debug)]
 pub struct CompressedTensor {
-    pub codec: CodecId,
+    pub spec: CodecSpec,
     pub dtype: DType,
     pub shape: Vec<usize>,
     pub payload: Vec<u8>,
 }
 
 impl CompressedTensor {
+    /// The codec family this payload was written with.
+    pub fn codec(&self) -> CodecId {
+        self.spec.id
+    }
+
     /// Compression ratio relative to the dense tensor.
     pub fn ratio(&self) -> f64 {
         let n: usize = self.shape.iter().product();
@@ -158,28 +323,38 @@ impl CompressedTensor {
     }
 }
 
-/// Compress a standalone tensor (non-delta codecs).
-pub fn compress(codec: CodecId, t: &HostTensor) -> Result<CompressedTensor, CompressError> {
-    let payload = match codec {
+/// Compress a standalone tensor (non-delta codecs). Takes anything
+/// convertible to a [`CodecSpec`]; a bare [`CodecId`] means its
+/// historical default parameters.
+pub fn compress(
+    spec: impl Into<CodecSpec>,
+    t: &HostTensor,
+) -> Result<CompressedTensor, CompressError> {
+    let spec = spec.into();
+    spec.validate()?;
+    let payload = match spec.id {
         CodecId::Raw => t.bytes().to_vec(),
-        CodecId::ClusterQuant => cluster_quant::encode(t, cluster_quant::DEFAULT_CLUSTERS)?,
+        CodecId::ClusterQuant => {
+            cluster_quant::encode(t, spec.clusters().unwrap_or(cluster_quant::DEFAULT_CLUSTERS))?
+        }
         CodecId::NaiveQuant8 => naive_quant::encode(t)?,
-        CodecId::BlockQuant8 => blockwise_quant::encode(t, blockwise_quant::DEFAULT_BLOCK)?,
+        CodecId::BlockQuant8 => blockwise_quant::encode(t, spec.block_size())?,
         CodecId::Huffman => huffman::encode(t.bytes()),
         CodecId::ByteGroupZstd => byte_group::encode(t)?,
-        CodecId::Prune => prune::encode(t, prune::DEFAULT_KEEP)?,
+        CodecId::Prune => prune::encode(t, spec.keep_fraction())?,
         other => {
             return Err(CompressError::Format(format!(
                 "{other:?} is a delta codec; use compress_delta"
             )))
         }
     };
-    Ok(CompressedTensor { codec, dtype: t.dtype(), shape: t.shape().to_vec(), payload })
+    Ok(CompressedTensor { spec, dtype: t.dtype(), shape: t.shape().to_vec(), payload })
 }
 
-/// Decompress a standalone tensor.
+/// Decompress a standalone tensor. Payloads are self-describing, so this
+/// needs only the codec family; the spec's params are audit metadata.
 pub fn decompress(c: &CompressedTensor) -> Result<HostTensor, CompressError> {
-    match c.codec {
+    match c.spec.id {
         CodecId::Raw => HostTensor::from_bytes(c.dtype, &c.shape, c.payload.clone()),
         CodecId::ClusterQuant => cluster_quant::decode(&c.payload, c.dtype, &c.shape),
         CodecId::NaiveQuant8 => naive_quant::decode(&c.payload, c.dtype, &c.shape),
@@ -197,15 +372,17 @@ pub fn decompress(c: &CompressedTensor) -> Result<HostTensor, CompressError> {
 
 /// Compress `curr` as a delta against `base` (same dtype + shape).
 pub fn compress_delta(
-    codec: CodecId,
+    spec: impl Into<CodecSpec>,
     base: &HostTensor,
     curr: &HostTensor,
 ) -> Result<CompressedTensor, CompressError> {
+    let spec = spec.into();
+    spec.validate()?;
     if base.dtype() != curr.dtype() || base.shape() != curr.shape() {
         return Err(CompressError::Shape("delta base/curr mismatch".into()));
     }
     let es = curr.dtype().size();
-    let payload = match codec {
+    let payload = match spec.id {
         CodecId::BitmaskPacked => bitmask::encode_packed(base.bytes(), curr.bytes(), es)?,
         CodecId::BitmaskNaive => bitmask::encode_naive(base.bytes(), curr.bytes(), es)?,
         CodecId::CooU16 => coo::encode(base.bytes(), curr.bytes(), es, coo::IndexWidth::U16)?,
@@ -216,7 +393,7 @@ pub fn compress_delta(
             )))
         }
     };
-    Ok(CompressedTensor { codec, dtype: curr.dtype(), shape: curr.shape().to_vec(), payload })
+    Ok(CompressedTensor { spec, dtype: curr.dtype(), shape: curr.shape().to_vec(), payload })
 }
 
 /// Reconstruct the tensor compressed by [`compress_delta`] given the same
@@ -229,7 +406,7 @@ pub fn decompress_delta(
         return Err(CompressError::Shape("delta base mismatch on decode".into()));
     }
     let es = c.dtype.size();
-    let bytes = match c.codec {
+    let bytes = match c.spec.id {
         CodecId::BitmaskPacked => bitmask::decode_packed(base.bytes(), &c.payload, es)?,
         CodecId::BitmaskNaive => bitmask::decode_naive(base.bytes(), &c.payload, es)?,
         CodecId::CooU16 | CodecId::CooU32 => coo::decode(base.bytes(), &c.payload, es)?,
@@ -274,8 +451,78 @@ mod tests {
     fn raw_roundtrip() {
         let t = HostTensor::from_f32(&[8], &[1., 2., 3., 4., 5., 6., 7., 8.]).unwrap();
         let c = compress(CodecId::Raw, &t).unwrap();
+        assert_eq!(c.spec, CodecSpec::raw());
         assert_eq!(decompress(&c).unwrap(), t);
         assert!((c.ratio() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bare_codec_ids_mean_their_historical_defaults() {
+        assert_eq!(
+            CodecSpec::of(CodecId::ClusterQuant),
+            CodecSpec::cluster_quant(cluster_quant::DEFAULT_CLUSTERS)
+        );
+        assert_eq!(
+            CodecSpec::of(CodecId::BlockQuant8),
+            CodecSpec::block_quant(blockwise_quant::DEFAULT_BLOCK)
+        );
+        assert_eq!(CodecSpec::of(CodecId::Prune), CodecSpec::prune(prune::DEFAULT_KEEP));
+        assert_eq!(CodecSpec::of(CodecId::Raw).params, CodecParams::None);
+        // every id's default spec validates
+        for tag in 0.. {
+            match CodecId::from_tag(tag) {
+                Some(id) => CodecSpec::of(id).validate().unwrap(),
+                None => break,
+            }
+        }
+    }
+
+    #[test]
+    fn spec_validation_rejects_mismatched_and_out_of_range_params() {
+        // params family must match the codec
+        let bad = CodecSpec { id: CodecId::Raw, params: CodecParams::Clusters(16) };
+        assert!(bad.validate().is_err());
+        let bad = CodecSpec { id: CodecId::ClusterQuant, params: CodecParams::None };
+        assert!(bad.validate().is_err());
+        let bad = CodecSpec { id: CodecId::Prune, params: CodecParams::BlockSize(64) };
+        assert!(bad.validate().is_err());
+        // out-of-range values
+        assert!(CodecSpec::cluster_quant(1).validate().is_err());
+        assert!(CodecSpec::cluster_quant(257).validate().is_err());
+        assert!(CodecSpec::cluster_quant(256).validate().is_ok());
+        assert!(CodecSpec::block_quant(0).validate().is_err());
+        let bad = CodecSpec { id: CodecId::Prune, params: CodecParams::KeepPerMille(1001) };
+        assert!(bad.validate().is_err());
+        // an invalid spec is refused at the encode dispatch
+        let t = HostTensor::from_f32(&[4], &[1., 2., 3., 4.]).unwrap();
+        assert!(compress(CodecSpec::cluster_quant(300), &t).is_err());
+    }
+
+    #[test]
+    fn parameterized_specs_drive_the_encoders() {
+        let vals: Vec<f32> = (0..512).map(|i| i as f32).collect();
+        let t = HostTensor::from_f32(&[512], &vals).unwrap();
+        // cluster count flows through: more clusters -> bigger payload
+        let small = compress(CodecSpec::cluster_quant(4), &t).unwrap();
+        let big = compress(CodecSpec::cluster_quant(64), &t).unwrap();
+        assert!(small.payload.len() < big.payload.len());
+        assert_eq!(small.spec.clusters(), Some(4));
+        // block size flows through: smaller blocks -> more scale overhead
+        let coarse = compress(CodecSpec::block_quant(256), &t).unwrap();
+        let fine = compress(CodecSpec::block_quant(32), &t).unwrap();
+        assert!(coarse.payload.len() < fine.payload.len());
+        // prune keep flows through: keeping more -> bigger payload
+        let sparse = compress(CodecSpec::prune(0.1), &t).unwrap();
+        let dense = compress(CodecSpec::prune(0.9), &t).unwrap();
+        assert!(sparse.payload.len() < dense.payload.len());
+    }
+
+    #[test]
+    fn spec_labels_spell_out_params() {
+        assert_eq!(CodecSpec::raw().label(), "Raw");
+        assert_eq!(CodecSpec::cluster_quant(64).label(), "ClusterQuant(m=64)");
+        assert_eq!(CodecSpec::block_quant(2048).label(), "BlockQuant8(block=2048)");
+        assert_eq!(CodecSpec::prune(0.1).label(), "Prune(keep=10.0%)");
     }
 
     #[test]

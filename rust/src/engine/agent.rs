@@ -104,9 +104,9 @@ pub struct SaveReport {
     pub timings: CompressTimings,
     pub raw_bytes: usize,
     pub compressed_bytes: usize,
-    /// Codec actually written per entry, in container order — what a
-    /// sharded save records into its manifest.
-    pub entry_codecs: Vec<(String, crate::compress::CodecId)>,
+    /// Codec spec actually written per entry (parameters included), in
+    /// container order — what a sharded save records into its manifest.
+    pub entry_specs: Vec<(String, crate::compress::CodecSpec)>,
 }
 
 impl SaveReport {
@@ -237,7 +237,7 @@ impl CheckpointEngine {
             compress_state_dict_planned(sd, base_sd, &plan, iteration, base_iter)?;
         let encode = t_enc.elapsed();
         let payload_bytes = ckpt.payload_bytes();
-        let entry_codecs = ckpt.entry_codecs();
+        let entry_specs = ckpt.entry_specs();
         let bytes = container::serialize(&ckpt);
         self.shm.put(iteration, &bytes, make_base)?;
         self.tx
@@ -257,7 +257,7 @@ impl CheckpointEngine {
             timings,
             raw_bytes: sd.total_bytes(),
             compressed_bytes: bytes.len(),
-            entry_codecs,
+            entry_specs,
         };
         // the policy source sees payload bytes (what its cost model
         // predicts), not the container length with framing and CRC

@@ -3,7 +3,7 @@
 //! writes and bit rot are detected at load time — the failure mode the
 //! in-memory-redundancy protocol (paper Fig. 4) exists to survive.
 //!
-//! Layout (little-endian):
+//! Layout (little-endian, version 2):
 //! ```text
 //! magic  "BSNP"          4
 //! version u32            4
@@ -14,17 +14,25 @@
 //! entries:
 //!   name_len u16 | name utf-8
 //!   kind u8 | dtype u8 | codec u8
+//!   params_tag u8 | params value   (0 none | 1 clusters u16
+//!                                   | 2 block u32 | 3 keep‰ u16)
 //!   ndim u8 | dims u64 * ndim
 //!   payload_len u64 | payload
 //! crc64 u64              8   (ECMA-182, over everything above)
 //! ```
+//! Version 1 (PR-2 era) entries had no params field — bare codec tags.
+//! The reader keeps a legacy path that assigns those entries their
+//! historical default parameters ([`CodecSpec::of`]), so old checkpoints
+//! load bit-exactly.
 
 use crate::compress::delta::{CompressedCheckpoint, CompressedEntry};
-use crate::compress::{CodecId, CompressError, CompressedTensor};
+use crate::compress::{CodecId, CodecParams, CodecSpec, CompressError, CompressedTensor};
 use crate::tensor::{DType, StateKind};
 
 pub const MAGIC: &[u8; 4] = b"BSNP";
-pub const VERSION: u32 = 1;
+pub const VERSION: u32 = 2;
+/// PR-2-era container version: entry headers carry a bare codec tag.
+pub const VERSION_LEGACY: u32 = 1;
 
 /// CRC-64/ECMA-182 (poly 0x42F0E1EBA9EA3693), table-driven.
 pub fn crc64(data: &[u8]) -> u64 {
@@ -51,7 +59,54 @@ pub fn crc64(data: &[u8]) -> u64 {
     crc
 }
 
-/// Serialize a compressed checkpoint to container bytes.
+/// Append a [`CodecParams`] field: a family tag plus its fixed-width
+/// value. Shared by the container entry and manifest serializers.
+fn write_params(out: &mut Vec<u8>, params: CodecParams) {
+    match params {
+        CodecParams::None => out.push(0),
+        CodecParams::Clusters(m) => {
+            out.push(1);
+            out.extend_from_slice(&m.to_le_bytes());
+        }
+        CodecParams::BlockSize(b) => {
+            out.push(2);
+            out.extend_from_slice(&b.to_le_bytes());
+        }
+        CodecParams::KeepPerMille(k) => {
+            out.push(3);
+            out.extend_from_slice(&k.to_le_bytes());
+        }
+    }
+}
+
+/// Read a codec tag plus its params field and validate the combination.
+fn read_spec(r: &mut Reader<'_>) -> Result<CodecSpec, CompressError> {
+    let codec = CodecId::from_tag(r.u8()?)
+        .ok_or_else(|| CompressError::Format("bad codec".into()))?;
+    let params = match r.u8()? {
+        0 => CodecParams::None,
+        1 => CodecParams::Clusters(r.u16()?),
+        2 => CodecParams::BlockSize(r.u32()?),
+        3 => CodecParams::KeepPerMille(r.u16()?),
+        t => return Err(CompressError::Format(format!("bad codec params tag {t}"))),
+    };
+    let spec = CodecSpec { id: codec, params };
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// Read a bare (version-1) codec tag, assigning the codec's historical
+/// default parameters. For params the PR-2 encoder varied at call sites
+/// (the kind-dependent ExCP prune keep rate), the default is a best-effort
+/// *audit* label only — decode always reads the true parameters from the
+/// self-describing payload, so reconstruction is unaffected.
+fn read_legacy_spec(r: &mut Reader<'_>) -> Result<CodecSpec, CompressError> {
+    let codec = CodecId::from_tag(r.u8()?)
+        .ok_or_else(|| CompressError::Format("bad codec".into()))?;
+    Ok(CodecSpec::of(codec))
+}
+
+/// Serialize a compressed checkpoint to container bytes (version 2).
 pub fn serialize(ckpt: &CompressedCheckpoint) -> Vec<u8> {
     let payload: usize = ckpt.payload_bytes();
     let mut out = Vec::with_capacity(payload + 64 * ckpt.entries.len() + 64);
@@ -67,7 +122,8 @@ pub fn serialize(ckpt: &CompressedCheckpoint) -> Vec<u8> {
         out.extend_from_slice(name);
         out.push(e.kind.tag());
         out.push(e.compressed.dtype.tag());
-        out.push(e.compressed.codec.tag());
+        out.push(e.compressed.spec.id.tag());
+        write_params(&mut out, e.compressed.spec.params);
         out.push(e.compressed.shape.len() as u8);
         for &d in &e.compressed.shape {
             out.extend_from_slice(&(d as u64).to_le_bytes());
@@ -114,7 +170,9 @@ impl<'a> Reader<'a> {
 
 /// Deserialize and CRC-verify a container. A CRC mismatch (torn write,
 /// corrupt memory) is an error — the recovery protocol treats it as a
-/// broken checkpoint and falls back to an older iteration.
+/// broken checkpoint and falls back to an older iteration. Accepts both
+/// the current version and [`VERSION_LEGACY`] containers (whose entries
+/// get their historical default codec params).
 pub fn deserialize(data: &[u8]) -> Result<CompressedCheckpoint, CompressError> {
     if data.len() < 4 + 4 + 8 + 8 + 1 + 4 + 8 {
         return Err(CompressError::Format("container too short".into()));
@@ -129,7 +187,7 @@ pub fn deserialize(data: &[u8]) -> Result<CompressedCheckpoint, CompressError> {
         return Err(CompressError::Format("bad magic".into()));
     }
     let version = r.u32()?;
-    if version != VERSION {
+    if version != VERSION && version != VERSION_LEGACY {
         return Err(CompressError::Format(format!("unsupported version {version}")));
     }
     let iteration = r.u64()?;
@@ -145,8 +203,11 @@ pub fn deserialize(data: &[u8]) -> Result<CompressedCheckpoint, CompressError> {
             .ok_or_else(|| CompressError::Format("bad state kind".into()))?;
         let dtype = DType::from_tag(r.u8()?)
             .ok_or_else(|| CompressError::Format("bad dtype".into()))?;
-        let codec = CodecId::from_tag(r.u8()?)
-            .ok_or_else(|| CompressError::Format("bad codec".into()))?;
+        let spec = if version == VERSION_LEGACY {
+            read_legacy_spec(&mut r)?
+        } else {
+            read_spec(&mut r)?
+        };
         let ndim = r.u8()? as usize;
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
@@ -157,7 +218,7 @@ pub fn deserialize(data: &[u8]) -> Result<CompressedCheckpoint, CompressError> {
         entries.push(CompressedEntry {
             name,
             kind,
-            compressed: CompressedTensor { codec, dtype, shape, payload },
+            compressed: CompressedTensor { spec, dtype, shape, payload },
         });
     }
     if r.pos != body.len() {
@@ -172,7 +233,9 @@ pub fn deserialize(data: &[u8]) -> Result<CompressedCheckpoint, CompressError> {
 }
 
 pub const MANIFEST_MAGIC: &[u8; 4] = b"BSNM";
-pub const MANIFEST_VERSION: u32 = 1;
+pub const MANIFEST_VERSION: u32 = 2;
+/// PR-2-era manifest version: per-rank codecs are bare tags.
+pub const MANIFEST_VERSION_LEGACY: u32 = 1;
 
 /// One global tensor's record in a sharded-checkpoint manifest: where its
 /// slices live (pipeline stage + mp boundaries) and how each rank encoded
@@ -188,8 +251,10 @@ pub struct ManifestEntry {
     pub stage: usize,
     /// `mp + 1` element offsets: mp rank `r` holds `[bounds[r], bounds[r + 1])`.
     pub bounds: Vec<usize>,
-    /// Codec each mp rank wrote for its slice (index = mp rank).
-    pub codecs: Vec<CodecId>,
+    /// Codec spec each mp rank wrote for its slice (index = mp rank) —
+    /// parameters included, so recovery tooling can audit cluster
+    /// counts/thresholds without re-reading the rank containers.
+    pub codecs: Vec<CodecSpec>,
 }
 
 impl ManifestEntry {
@@ -254,7 +319,8 @@ pub fn serialize_manifest(m: &ShardManifest) -> Vec<u8> {
             out.extend_from_slice(&(b as u64).to_le_bytes());
         }
         for &c in &e.codecs {
-            out.push(c.tag());
+            out.push(c.id.tag());
+            write_params(&mut out, c.params);
         }
     }
     let crc = crc64(&out);
@@ -265,6 +331,8 @@ pub fn serialize_manifest(m: &ShardManifest) -> Vec<u8> {
 /// Deserialize and CRC-verify a shard manifest, validating the recorded
 /// layout (monotonic exhaustive bounds, stages inside the pp range) so a
 /// corrupt manifest cannot direct a restore to misassemble tensors.
+/// Accepts both the current version and [`MANIFEST_VERSION_LEGACY`]
+/// (bare codec tags → historical default params).
 pub fn deserialize_manifest(data: &[u8]) -> Result<ShardManifest, CompressError> {
     if data.len() < 4 + 4 + 8 + 8 + 4 + 4 + 4 + 8 {
         return Err(CompressError::Format("manifest too short".into()));
@@ -279,7 +347,7 @@ pub fn deserialize_manifest(data: &[u8]) -> Result<ShardManifest, CompressError>
         return Err(CompressError::Format("bad manifest magic".into()));
     }
     let version = r.u32()?;
-    if version != MANIFEST_VERSION {
+    if version != MANIFEST_VERSION && version != MANIFEST_VERSION_LEGACY {
         return Err(CompressError::Format(format!("unsupported manifest version {version}")));
     }
     let iteration = r.u64()?;
@@ -320,9 +388,12 @@ pub fn deserialize_manifest(data: &[u8]) -> Result<ShardManifest, CompressError>
         }
         let mut codecs = Vec::with_capacity(mp);
         for _ in 0..mp {
-            let codec = CodecId::from_tag(r.u8()?)
-                .ok_or_else(|| CompressError::Format("bad manifest codec".into()))?;
-            codecs.push(codec);
+            let spec = if version == MANIFEST_VERSION_LEGACY {
+                read_legacy_spec(&mut r)?
+            } else {
+                read_spec(&mut r)?
+            };
+            codecs.push(spec);
         }
         entries.push(ManifestEntry { name, kind, dtype, shape, stage, bounds, codecs });
     }
@@ -335,7 +406,8 @@ pub fn deserialize_manifest(data: &[u8]) -> Result<ShardManifest, CompressError>
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::delta::{compress_state_dict, Policy};
+    use crate::compress::delta::{compress_state_dict, compress_state_dict_planned, Policy};
+    use crate::compress::delta::{CheckpointPlan, TensorDirective};
     use crate::tensor::StateDict;
 
     fn ckpt(seed: u64, iter: u64, base: u64) -> CompressedCheckpoint {
@@ -360,7 +432,7 @@ mod tests {
         for (a, b) in c.entries.iter().zip(&back.entries) {
             assert_eq!(a.name, b.name);
             assert_eq!(a.kind, b.kind);
-            assert_eq!(a.compressed.codec, b.compressed.codec);
+            assert_eq!(a.compressed.spec, b.compressed.spec);
             assert_eq!(a.compressed.shape, b.compressed.shape);
             assert_eq!(a.compressed.payload, b.compressed.payload);
         }
@@ -373,6 +445,23 @@ mod tests {
         assert_eq!(back.iteration, 120);
         assert_eq!(back.base_iteration, 100);
         assert!(!back.is_base());
+    }
+
+    #[test]
+    fn entry_params_roundtrip_through_the_container() {
+        let sd = StateDict::synthetic_gpt(1 << 12, 9);
+        let mut plan = CheckpointPlan::uniform(Policy::raw());
+        plan.set("optimizer.0.exp_avg", TensorDirective::Quantize(CodecSpec::cluster_quant(64)));
+        plan.set("optimizer.0.exp_avg_sq", TensorDirective::Quantize(CodecSpec::prune(0.25)));
+        plan.set("optimizer.0.master", TensorDirective::Quantize(CodecSpec::block_quant(512)));
+        let (ckpt, _) = compress_state_dict_planned(&sd, None, &plan, 5, 5).unwrap();
+        let back = deserialize(&serialize(&ckpt)).unwrap();
+        let spec_of = |name: &str| {
+            back.entries.iter().find(|e| e.name == name).unwrap().compressed.spec
+        };
+        assert_eq!(spec_of("optimizer.0.exp_avg"), CodecSpec::cluster_quant(64));
+        assert_eq!(spec_of("optimizer.0.exp_avg_sq"), CodecSpec::prune(0.25));
+        assert_eq!(spec_of("optimizer.0.master"), CodecSpec::block_quant(512));
     }
 
     #[test]
@@ -413,7 +502,7 @@ mod tests {
                     shape: vec![64],
                     stage: 0,
                     bounds: vec![0, 32, 64],
-                    codecs: vec![CodecId::BitmaskPacked, CodecId::Raw],
+                    codecs: vec![CodecSpec::of(CodecId::BitmaskPacked), CodecSpec::raw()],
                 },
                 ManifestEntry {
                     name: "optimizer.0.master".into(),
@@ -422,7 +511,7 @@ mod tests {
                     shape: vec![64],
                     stage: 1,
                     bounds: vec![0, 32, 64],
-                    codecs: vec![CodecId::ClusterQuant, CodecId::ClusterQuant],
+                    codecs: vec![CodecSpec::cluster_quant(64), CodecSpec::cluster_quant(16)],
                 },
             ],
         }

@@ -205,7 +205,7 @@ mod tests {
                 shape: e.tensor.shape().to_vec(),
                 stage: entry_stage(ei, sd.len(), p.pp),
                 bounds: shard_bounds(e.tensor.len(), p.mp),
-                codecs: vec![crate::compress::CodecId::Raw; p.mp],
+                codecs: vec![crate::compress::CodecSpec::raw(); p.mp],
             })
             .collect();
         ShardManifest { iteration, base_iteration: iteration, mp: p.mp, pp: p.pp, entries }

@@ -25,7 +25,7 @@ use std::time::Duration;
 
 use crate::adapt::{PolicySource, StaticPolicySource};
 use crate::compress::delta::Policy;
-use crate::compress::{CodecId, CompressError};
+use crate::compress::{CodecSpec, CompressError};
 use crate::tensor::StateDict;
 use crate::train::parallel::{entry_stage, shard_bounds, shard_state_dict, Parallelism};
 
@@ -310,11 +310,11 @@ fn build_manifest(
     base_iteration: u64,
     per_rank: &[SaveReport],
 ) -> Result<ShardManifest, CompressError> {
-    // index each rank's codec list once — this runs on the blocking save
+    // index each rank's spec list once — this runs on the blocking save
     // path, and a linear scan per (entry, rank) would be quadratic
-    let rank_codecs: Vec<HashMap<&str, CodecId>> = per_rank
+    let rank_codecs: Vec<HashMap<&str, CodecSpec>> = per_rank
         .iter()
-        .map(|r| r.entry_codecs.iter().map(|(n, c)| (n.as_str(), *c)).collect())
+        .map(|r| r.entry_specs.iter().map(|(n, c)| (n.as_str(), *c)).collect())
         .collect();
     let n_entries = sd.len();
     let mut entries = Vec::with_capacity(n_entries);
@@ -442,13 +442,13 @@ mod tests {
         let base = eng.manifest(0).unwrap();
         assert!(base.is_base());
         for e in &base.entries {
-            assert_eq!(e.codecs, vec![CodecId::Raw; 2], "{}", e.name);
+            assert_eq!(e.codecs, vec![CodecSpec::raw(); 2], "{}", e.name);
         }
         let delta = eng.manifest(10).unwrap();
         for e in &delta.entries {
             assert_eq!(e.codecs.len(), 2);
             if e.kind == crate::tensor::StateKind::ModelState {
-                assert_eq!(e.codecs, vec![CodecId::BitmaskPacked; 2], "{}", e.name);
+                assert_eq!(e.codecs, vec![CodecSpec::of(CodecId::BitmaskPacked); 2], "{}", e.name);
             }
         }
         cleanup(&cfg_copy);

@@ -56,11 +56,12 @@ fn print_help() {
          \n\
          SUBCOMMANDS\n\
            train         --model gpt-nano --steps 50 --save-every 10 [--policy bitsnap|lossless|raw]\n\
-                         [--adaptive] [--mp 2] [--pp 2] [--out results/run] [--redundancy 2]\n\
-                         [--max-cached 5] (needs a build with --features xla)\n\
+                         [--adaptive] [--target-ratio 3.0] [--mp 2] [--pp 2] [--out results/run]\n\
+                         [--redundancy 2] [--max-cached 5] (needs a build with --features xla)\n\
            compress      --params 1048576 [--change-rate 0.15] [--policy bitsnap|lossless]\n\
            inspect       --dir <storage root> | --histogram --model gpt-nano --steps 20\n\
            adapt-report  [--params 1048576] [--saves 9] [--write-bps 3.5e9] [--measure]\n\
+                         [--target-ratio 3.0] [--fixed-clusters 16]\n\
                          [--sharded --mp 2 --pp 2] [--json results/adapt_report.json]\n\
            table1        (no flags) print the paper's Table-1 analytical model\n\
            recover       --ranks 4 --fail-rank 1 (Fig. 4 walkthrough on real stores)\n\
@@ -109,12 +110,16 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     .with_env_overrides();
     let mut engine = if args.has("adaptive") {
         // one controller per rank probing its own shard; throughput
-        // knowledge is pooled through the shared calibration
+        // knowledge is pooled through the shared calibration. The
+        // user-level --target-ratio becomes the cluster search's ratio
+        // floor on every rank.
+        let target_ratio: Option<f64> = parse_opt_flag(args, "target-ratio")?;
         let write_bps = cfg.storage.throttle_bps();
         let shared = SharedCalibration::new(Calibration::measure(1 << 18));
         ShardedCheckpointEngine::with_policy_sources(cfg, move |_| {
             let cost = CostModel::shared(shared.clone(), write_bps);
-            Box::new(AdaptivePolicy::new(Default::default(), cost))
+            let acfg = bitsnap::adapt::AdaptiveConfig { target_ratio, ..Default::default() };
+            Box::new(AdaptivePolicy::new(acfg, cost))
         })
         .map_err(|e| e.to_string())?
     } else {
@@ -195,10 +200,8 @@ fn cmd_compress(args: &Args) -> Result<(), String> {
 /// controller per rank sharing a calibration, compared against the static
 /// paper-default policy.
 fn cmd_adapt_report(args: &Args) -> Result<(), String> {
-    use bitsnap::adapt::{
-        default_stages, simulate_trajectory, AdaptiveConfig, AdaptivePolicy, Calibration,
-        CostModel, PolicySource, StageConfig,
-    };
+    use bitsnap::adapt::{default_stages, simulate_trajectory, Calibration, CostModel};
+    use bitsnap::adapt::{AdaptivePolicy, PolicySource};
 
     let params: usize = args.get_parse("params").unwrap_or(1 << 20);
     let saves: u64 = args.get_parse("saves").unwrap_or(9);
@@ -213,10 +216,7 @@ fn cmd_adapt_report(args: &Args) -> Result<(), String> {
     if args.has("sharded") {
         return cmd_adapt_report_sharded(args, params, saves, write_bps, max_cached, calibration);
     }
-    let cfg = AdaptiveConfig {
-        stage: StageConfig { window: 2, ..StageConfig::default() },
-        ..AdaptiveConfig::default()
-    };
+    let cfg = adaptive_config_from_args(args)?;
     let mut policy = AdaptivePolicy::new(cfg, CostModel::new(calibration, Some(write_bps)));
 
     println!(
@@ -231,10 +231,10 @@ fn cmd_adapt_report(args: &Args) -> Result<(), String> {
     stages[0].saves = saves - 2 * per;
     simulate_trajectory(params, &stages, max_cached, &mut policy).map_err(|e| e.to_string())?;
 
-    let codec_mix = |codecs: &[(bitsnap::compress::CodecId, usize)]| {
+    let codec_mix = |codecs: &[(bitsnap::compress::CodecSpec, usize)]| {
         codecs
             .iter()
-            .map(|(c, n)| format!("{c:?}x{n}"))
+            .map(|(c, n)| format!("{}x{n}", c.label()))
             .collect::<Vec<_>>()
             .join(" ")
     };
@@ -298,8 +298,8 @@ fn cmd_adapt_report_sharded(
     calibration: bitsnap::adapt::Calibration,
 ) -> Result<(), String> {
     use bitsnap::adapt::{
-        default_stages, simulate_sharded_trajectory, AdaptiveConfig, AdaptivePolicy,
-        PolicySource, SharedCalibration, ShardedSimSave, StageConfig, StaticPolicySource,
+        default_stages, simulate_sharded_trajectory, AdaptivePolicy, PolicySource,
+        SharedCalibration, ShardedSimSave, StaticPolicySource,
     };
     use bitsnap::compress::delta::Policy;
     use bitsnap::train::Parallelism;
@@ -324,10 +324,7 @@ fn cmd_adapt_report_sharded(
             .map_err(|e| e.to_string())?;
 
     let shared = SharedCalibration::new(calibration);
-    let cfg = AdaptiveConfig {
-        stage: StageConfig { window: 2, ..StageConfig::default() },
-        ..AdaptiveConfig::default()
-    };
+    let cfg = adaptive_config_from_args(args)?;
     let mut adaptive_sources = AdaptivePolicy::per_rank(p.world(), cfg, shared, Some(write_bps));
     let adaptive_saves =
         simulate_sharded_trajectory(params, &stages, max_cached, p, &mut adaptive_sources)
@@ -624,6 +621,35 @@ fn cmd_recover(args: &Args) -> Result<(), String> {
     let _ = std::fs::remove_dir_all(&shm_root);
     let _ = std::fs::remove_dir_all(&store_root);
     Ok(())
+}
+
+/// Parse an optional numeric flag, turning an unparsable value into an
+/// error instead of silently behaving as if the flag were absent.
+fn parse_opt_flag<T: std::str::FromStr>(args: &Args, key: &str) -> Result<Option<T>, String> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(v) => v.parse().map(Some).map_err(|_| format!("--{key} {v:?} is not a number")),
+    }
+}
+
+/// The adapt-report controller config: the short stage window both report
+/// arms always used, plus the spec-era knobs — `--target-ratio <x>` (ratio
+/// floor for the cluster search) and `--fixed-clusters <m>` (pin m, the
+/// pre-spec behaviour at 16).
+fn adaptive_config_from_args(args: &Args) -> Result<bitsnap::adapt::AdaptiveConfig, String> {
+    use bitsnap::adapt::{AdaptiveConfig, ClusterSelection, StageConfig};
+    use bitsnap::compress::cluster_quant::MAX_CLUSTERS;
+    let clusters = match parse_opt_flag::<usize>(args, "fixed-clusters")? {
+        Some(m) if (2..=MAX_CLUSTERS).contains(&m) => ClusterSelection::Fixed(m),
+        Some(m) => return Err(format!("--fixed-clusters {m} outside 2..={MAX_CLUSTERS}")),
+        None => ClusterSelection::Budgeted,
+    };
+    Ok(AdaptiveConfig {
+        stage: StageConfig { window: 2, ..StageConfig::default() },
+        clusters,
+        target_ratio: parse_opt_flag(args, "target-ratio")?,
+        ..AdaptiveConfig::default()
+    })
 }
 
 fn parse_policy(s: &str) -> Result<Policy, String> {

@@ -74,10 +74,12 @@ impl XlaClusterQuant {
         })
     }
 
-    /// Quantize a full tensor chunk-by-chunk into the *same payload format*
-    /// as the native [`cluster_quant::encode`] — one independent
-    /// cluster-table per chunk is the only difference (documented as
-    /// chunked mode; the decoder below understands it).
+    /// Quantize a full tensor chunk-by-chunk into the fixed-16-cluster
+    /// legacy payload layout (`m u8 | u4 labels`), which
+    /// [`cluster_quant::decode`] still accepts alongside the current
+    /// variable-m format — one independent cluster-table per chunk is the
+    /// only difference from the native encoder (documented as chunked
+    /// mode; the decoder understands it).
     pub fn quantize_tensor(
         &self,
         rt: &mut PjrtRuntime,

@@ -369,7 +369,7 @@ mod tests {
             compress_sharded_planned(&curr, Some(&base), p, 10, 0, &mut sources).unwrap();
         for ckpt in &ckpts {
             for e in ckpt.entries.iter().filter(|e| e.kind == StateKind::ModelState) {
-                assert_eq!(e.compressed.codec, CodecId::BitmaskPacked, "{}", e.name);
+                assert_eq!(e.compressed.codec(), CodecId::BitmaskPacked, "{}", e.name);
             }
         }
     }

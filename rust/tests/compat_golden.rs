@@ -1,0 +1,110 @@
+//! Golden-fixture backward compatibility: checked-in PR-2-era artifacts
+//! (container VERSION 1, manifest VERSION 1, legacy `m u8 | u4 labels`
+//! cluster-quant payloads) must keep decoding bit-exactly through the
+//! versioned legacy read path after the CodecSpec refactor.
+//!
+//! The fixtures under `tests/fixtures/` were authored byte-for-byte in the
+//! PR-2 formats (`scripts/gen_pr2_fixtures.py`); the `*_expected.bin`
+//! files are the exact little-endian bytes each state dict must decode
+//! to. Every float in the quantized payloads was chosen so the decode
+//! arithmetic is exact in f32, making "bit-exact" a meaningful check
+//! rather than a tolerance.
+
+use bitsnap::compress::delta::decompress_state_dict;
+use bitsnap::compress::{CodecId, CodecSpec};
+use bitsnap::engine::container::{
+    deserialize, deserialize_manifest, serialize, MANIFEST_VERSION_LEGACY, VERSION_LEGACY,
+};
+use bitsnap::engine::reassemble_state_dict;
+use bitsnap::tensor::StateDict;
+
+fn fixture(name: &str) -> Vec<u8> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name);
+    std::fs::read(&path).unwrap_or_else(|e| panic!("fixture {name}: {e}"))
+}
+
+fn concat_bytes(sd: &StateDict) -> Vec<u8> {
+    let mut out = Vec::new();
+    for e in sd.entries() {
+        out.extend_from_slice(e.tensor.bytes());
+    }
+    out
+}
+
+#[test]
+fn pr2_base_container_decodes_bit_exactly() {
+    let ckpt = deserialize(&fixture("pr2_base.bsnp")).unwrap();
+    assert_eq!(ckpt.iteration, 100);
+    assert!(ckpt.is_base());
+    assert_eq!(ckpt.entries.len(), 4);
+    // tag-only entries resolve to the historical default params
+    let spec_of = |name: &str| {
+        ckpt.entries.iter().find(|e| e.name == name).unwrap().compressed.spec
+    };
+    assert_eq!(spec_of("layers.0.weight"), CodecSpec::raw());
+    assert_eq!(
+        spec_of("optimizer.0.exp_avg"),
+        CodecSpec::cluster_quant(16),
+        "legacy ClusterQuant tags mean the paper's fixed 16"
+    );
+    let sd = decompress_state_dict(&ckpt, None).unwrap();
+    assert_eq!(concat_bytes(&sd), fixture("pr2_base_expected.bin"));
+}
+
+#[test]
+fn pr2_delta_chain_decodes_bit_exactly() {
+    let base_ckpt = deserialize(&fixture("pr2_base.bsnp")).unwrap();
+    let base = decompress_state_dict(&base_ckpt, None).unwrap();
+    let delta = deserialize(&fixture("pr2_delta.bsnp")).unwrap();
+    assert_eq!((delta.iteration, delta.base_iteration), (120, 100));
+    assert!(!delta.is_base());
+    let spec_of = |name: &str| {
+        delta.entries.iter().find(|e| e.name == name).unwrap().compressed.spec
+    };
+    assert_eq!(spec_of("layers.0.weight").id, CodecId::BitmaskPacked);
+    assert_eq!(spec_of("layers.0.bias").id, CodecId::CooU16);
+    let sd = decompress_state_dict(&delta, Some(&base)).unwrap();
+    assert_eq!(concat_bytes(&sd), fixture("pr2_delta_expected.bin"));
+}
+
+#[test]
+fn pr2_sharded_manifest_and_rank_containers_reassemble_bit_exactly() {
+    let manifest = deserialize_manifest(&fixture("pr2_manifest.bsnm")).unwrap();
+    assert_eq!((manifest.mp, manifest.pp), (2, 1));
+    assert!(manifest.is_base());
+    // legacy manifest codec tags resolve to default-param specs
+    let master = manifest.entries.iter().find(|e| e.name == "optimizer.0.master").unwrap();
+    assert_eq!(master.codecs, vec![CodecSpec::cluster_quant(16), CodecSpec::raw()]);
+    let shards: Vec<StateDict> = ["pr2_rank0.bsnp", "pr2_rank1.bsnp"]
+        .iter()
+        .map(|f| decompress_state_dict(&deserialize(&fixture(f)).unwrap(), None).unwrap())
+        .collect();
+    let full = reassemble_state_dict(&manifest, &shards).unwrap();
+    assert_eq!(concat_bytes(&full), fixture("pr2_sharded_expected.bin"));
+}
+
+#[test]
+fn reserializing_a_legacy_container_upgrades_it_in_place() {
+    // loading a v1 container and writing it back produces a v2 container
+    // with the legacy-default specs now explicit — and identical payloads
+    let legacy = fixture("pr2_base.bsnp");
+    assert_eq!(u32::from_le_bytes(legacy[4..8].try_into().unwrap()), VERSION_LEGACY);
+    let ckpt = deserialize(&legacy).unwrap();
+    let upgraded = serialize(&ckpt);
+    assert_eq!(
+        u32::from_le_bytes(upgraded[4..8].try_into().unwrap()),
+        bitsnap::engine::container::VERSION
+    );
+    let back = deserialize(&upgraded).unwrap();
+    assert_eq!(back.entries.len(), ckpt.entries.len());
+    for (a, b) in ckpt.entries.iter().zip(&back.entries) {
+        assert_eq!(a.compressed.spec, b.compressed.spec, "{}", a.name);
+        assert_eq!(a.compressed.payload, b.compressed.payload, "{}", a.name);
+    }
+}
+
+#[test]
+fn legacy_manifest_version_constant_is_pinned() {
+    let m = fixture("pr2_manifest.bsnm");
+    assert_eq!(u32::from_le_bytes(m[4..8].try_into().unwrap()), MANIFEST_VERSION_LEGACY);
+}

@@ -16,7 +16,7 @@ use std::path::PathBuf;
 
 use bitsnap::adapt::{AdaptiveConfig, AdaptivePolicy, Calibration, CostModel, StageConfig};
 use bitsnap::compress::delta::Policy;
-use bitsnap::compress::CodecId;
+use bitsnap::compress::{CodecId, CodecSpec};
 use bitsnap::engine::{container, CheckpointEngine, EngineConfig, Storage};
 use bitsnap::tensor::{StateDict, StateKind};
 
@@ -83,15 +83,15 @@ fn adaptive_policy_switches_codecs_across_training_stages() {
 
     // inspect what actually landed in storage: per-entry codec tags
     let mut delta_model_codecs: HashSet<CodecId> = HashSet::new();
-    let mut master_codec_at: Vec<(u64, CodecId)> = Vec::new();
+    let mut master_spec_at: Vec<(u64, CodecSpec)> = Vec::new();
     for &(iteration, _) in &snapshots {
         let ckpt = container::deserialize(&storage.get(iteration, 0).unwrap()).unwrap();
         for e in &ckpt.entries {
             if e.kind == StateKind::ModelState && !ckpt.is_base() {
-                delta_model_codecs.insert(e.compressed.codec);
+                delta_model_codecs.insert(e.compressed.codec());
             }
             if e.name == "optimizer.0.master" {
-                master_codec_at.push((iteration, e.compressed.codec));
+                master_spec_at.push((iteration, e.compressed.spec));
             }
         }
     }
@@ -106,11 +106,24 @@ fn adaptive_policy_switches_codecs_across_training_stages() {
         delta_model_codecs.contains(&CodecId::BitmaskPacked),
         "sparse late saves should delta-sparsify"
     );
-    // stage rules on optimizer state: quantized early, master raw late
-    let early_master = master_codec_at.iter().find(|(i, _)| *i == 20).unwrap().1;
-    assert_eq!(early_master, CodecId::ClusterQuant);
-    let late_master = master_codec_at.iter().find(|(i, _)| *i == 90).unwrap().1;
-    assert_eq!(late_master, CodecId::Raw, "master weights must be lossless near convergence");
+    // stage rules on optimizer state: quantized early (with the coarse
+    // early-budget cluster count riding in the container header), master
+    // raw late
+    let early_master = master_spec_at.iter().find(|(i, _)| *i == 20).unwrap().1;
+    assert_eq!(early_master, CodecSpec::cluster_quant(4), "early budget -> coarse clusters");
+    let late_master = master_spec_at.iter().find(|(i, _)| *i == 90).unwrap().1;
+    assert_eq!(late_master, CodecSpec::raw(), "master stays lossless near convergence");
+    // the cluster count itself adapted across stages: containers carry
+    // more than one distinct ClusterQuant parameterization over the run
+    let distinct_cluster_specs: HashSet<CodecSpec> = master_spec_at
+        .iter()
+        .map(|(_, s)| *s)
+        .filter(|s| s.id == CodecId::ClusterQuant)
+        .collect();
+    assert!(
+        distinct_cluster_specs.len() >= 2,
+        "expected the cluster count to retune across stages, got {distinct_cluster_specs:?}"
+    );
 
     // every checkpoint restores from the container alone; lossless
     // selections round-trip bit-exactly, quantized optimizer state stays
@@ -121,7 +134,7 @@ fn adaptive_policy_switches_codecs_across_training_stages() {
         for (entry, orig) in ckpt.entries.iter().zip(expect.entries()) {
             assert_eq!(entry.name, orig.name);
             let got = loaded.get(&entry.name).unwrap();
-            if entry.compressed.codec.is_lossless() {
+            if entry.compressed.spec.is_lossless() {
                 assert_eq!(
                     got.tensor, orig.tensor,
                     "lossless entry {} @{iteration} must be bit-exact",

@@ -138,8 +138,9 @@ fn prop_auto_never_loses_to_fixed_choices() {
                     .map(|e| e.compressed.payload.len())
                     .sum::<usize>()
             };
-            // Auto picks per-tensor minimum over its candidate set; COO-u32
-            // is not in that set, so compare against the three that are.
+            // Auto picks the per-tensor minimum over its candidate set
+            // (which now includes COO at its cheaper index width), so it
+            // can never lose to any fixed member of that set.
             assert!(
                 model_bytes(&auto) <= model_bytes(&c) + 64,
                 "auto {} > {fixed:?} {}",
