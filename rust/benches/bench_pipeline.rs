@@ -1,0 +1,199 @@
+//! Worker-pool encode pipeline: workers=4 vs workers=1 on the same
+//! sharded save trajectory.
+//!
+//! Both arms drive an identical base+delta save sequence through
+//! [`ShardedCheckpointEngine`] under an mp×pp layout, differing only in
+//! [`PersistConfig::workers`]. Hard assertions:
+//!
+//! * **Determinism**: every persisted artifact (`rank*.bsnp` shards and
+//!   `manifest.bsnm`) is byte-identical across arms (CRC-64 over the
+//!   concatenated artifacts, and equal compressed byte counts) — the
+//!   pipeline's ordered-assembly guarantee.
+//! * **Speedup**: on a multi-core host the workers=4 arm's encode
+//!   wall-clock (min over reps, so one preempted run cannot flip the
+//!   comparison) is strictly below the workers=1 arm's. On a one-core
+//!   host the assertion is physically unsatisfiable and is skipped with
+//!   a loud warning (determinism is still asserted).
+//!
+//! Emits `BENCH_pipeline.json` (override with env `BENCH_OUT`) — the CI
+//! bench-regression gate re-checks the equal-bytes fields and ratio
+//! floor from `bench_baselines/`.
+//!
+//! Run: `cargo bench --bench bench_pipeline` (env N for dict size,
+//! MP/PP for the layout)
+
+use bitsnap::bench::{fmt_bytes, Table};
+use bitsnap::compress::delta::Policy;
+use bitsnap::engine::{
+    container, PersistConfig, ShardedCheckpointEngine, ShardedEngineConfig, Storage,
+};
+use bitsnap::tensor::StateDict;
+use bitsnap::train::Parallelism;
+
+const SAVES: [u64; 4] = [10, 20, 30, 40];
+const MAX_CACHED: u64 = 2;
+const REPS: usize = 3;
+
+struct ArmResult {
+    workers: usize,
+    /// Min over reps of the summed per-save encode wall-clock.
+    encode_secs: f64,
+    compressed_bytes: usize,
+    raw_bytes: usize,
+    /// CRC-64 over every persisted artifact, in a fixed order.
+    output_crc: u64,
+}
+
+impl ArmResult {
+    fn ratio(&self) -> f64 {
+        self.raw_bytes as f64 / self.compressed_bytes.max(1) as f64
+    }
+}
+
+fn run_arm(params: usize, p: Parallelism, workers: usize) -> ArmResult {
+    let pid = std::process::id();
+    let mut best = f64::INFINITY;
+    let mut compressed = 0usize;
+    let mut raw = 0usize;
+    let mut crc_ref: Option<u64> = None;
+    for rep in 0..REPS {
+        let tag = format!("bench-pipe-w{workers}-r{rep}-{pid}");
+        let shm_root = std::env::temp_dir().join(format!("{tag}-shm"));
+        let store_root = std::env::temp_dir().join(format!("{tag}-store"));
+        let _ = std::fs::remove_dir_all(&shm_root);
+        let _ = std::fs::remove_dir_all(&store_root);
+        let storage = Storage::new(&store_root).unwrap();
+        let cfg = ShardedEngineConfig {
+            job: tag.clone(),
+            parallelism: p,
+            shm_root: shm_root.clone(),
+            storage: storage.clone(),
+            redundancy: 2,
+            policy: Policy::bitsnap(),
+            max_cached_iteration: MAX_CACHED,
+            persist: PersistConfig::with_workers(workers),
+        };
+        let mut eng = ShardedCheckpointEngine::new(cfg).unwrap();
+        let mut sd = StateDict::synthetic_gpt(params, 1);
+        let mut encode_secs = 0.0;
+        let mut rep_compressed = 0usize;
+        let mut rep_raw = 0usize;
+        for (i, iter) in SAVES.into_iter().enumerate() {
+            sd.perturb_model_states(0.05, 900 + i as u64);
+            let r = eng.save(iter, &sd).unwrap();
+            assert_eq!(r.encode_workers, workers);
+            encode_secs += r.encode_wall.as_secs_f64();
+            rep_compressed += r.compressed_bytes;
+            rep_raw += r.raw_bytes;
+        }
+        eng.flush().unwrap();
+        // digest every persisted artifact in a fixed order so arms (and
+        // reps within an arm) can be compared byte-for-byte
+        let mut artifact_bytes = Vec::new();
+        for iter in SAVES {
+            for rank in 0..p.world() {
+                artifact_bytes.extend_from_slice(&storage.get(iter, rank).unwrap());
+            }
+            artifact_bytes.extend_from_slice(&storage.get_manifest(iter).unwrap());
+        }
+        let crc = container::crc64(&artifact_bytes);
+        match crc_ref {
+            None => crc_ref = Some(crc),
+            Some(c) => assert_eq!(c, crc, "workers={workers}: output varies across reps"),
+        }
+        best = best.min(encode_secs);
+        compressed = rep_compressed;
+        raw = rep_raw;
+        drop(eng);
+        let _ = std::fs::remove_dir_all(&shm_root);
+        let _ = std::fs::remove_dir_all(&store_root);
+    }
+    ArmResult {
+        workers,
+        encode_secs: best,
+        compressed_bytes: compressed,
+        raw_bytes: raw,
+        output_crc: crc_ref.unwrap(),
+    }
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let params = env_usize("N", 1 << 20);
+    let mp = env_usize("MP", 2);
+    let pp = env_usize("PP", 2);
+    let p = Parallelism::new(mp.max(1), pp.max(1));
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "== parallel persist pipeline: {params} params under {}, {} saves, \
+         {cores} cores ==\n",
+        p.label(),
+        SAVES.len()
+    );
+
+    let serial = run_arm(params, p, 1);
+    let pooled = run_arm(params, p, 4);
+
+    // determinism: equal output bytes is a hard invariant, not a goal
+    assert_eq!(
+        serial.compressed_bytes, pooled.compressed_bytes,
+        "workers must not change compressed byte counts"
+    );
+    assert_eq!(
+        serial.output_crc, pooled.output_crc,
+        "workers must not change a single persisted byte"
+    );
+
+    let mut table = Table::new(&["workers", "encode wall", "compressed", "ratio"]);
+    for arm in [&serial, &pooled] {
+        table.row(&[
+            arm.workers.to_string(),
+            format!("{:.1} ms", arm.encode_secs * 1e3),
+            fmt_bytes(arm.compressed_bytes),
+            format!("{:.2}x", arm.ratio()),
+        ]);
+    }
+    table.print();
+
+    let speedup = serial.encode_secs / pooled.encode_secs.max(1e-12);
+    println!(
+        "\noutput byte-identical across arms (crc64 {:#018x}); speedup {speedup:.2}x",
+        serial.output_crc
+    );
+    if cores >= 2 {
+        assert!(
+            pooled.encode_secs < serial.encode_secs,
+            "workers=4 must strictly beat workers=1 on encode wall-clock \
+             ({:.4}s vs {:.4}s on a {cores}-core host)",
+            pooled.encode_secs,
+            serial.encode_secs
+        );
+    } else {
+        println!("WARNING: single-core host — skipping the strict speedup assertion");
+    }
+
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_pipeline.json".to_string());
+    let arm_json = |a: &ArmResult| {
+        format!(
+            "    {{\"workers\": {}, \"encode_wall_secs\": {:.6}, \"compressed_bytes\": {}, \
+             \"ratio\": {:.4}}}",
+            a.workers,
+            a.encode_secs,
+            a.compressed_bytes,
+            a.ratio()
+        )
+    };
+    let json = format!(
+        "{{\n  \"params\": {params},\n  \"mp\": {mp},\n  \"pp\": {pp},\n  \"saves\": {},\n  \
+         \"arms\": [\n{},\n{}\n  ],\n  \"identical_output\": true,\n  \"speedup_wall\": \
+         {speedup:.4}\n}}\n",
+        SAVES.len(),
+        arm_json(&serial),
+        arm_json(&pooled),
+    );
+    std::fs::write(&out_path, json).expect("write bench json");
+    println!("wrote {out_path}");
+}

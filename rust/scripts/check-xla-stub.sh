@@ -12,8 +12,14 @@
 set -eu
 cd "$(dirname "$0")/.."
 
+# Cargo.lock is committed (CI runs --locked everywhere else); the patched
+# manifest adds the path dep, which would rewrite the lockfile — restore
+# both so a subsequent `cargo build --locked` in the same tree still
+# resolves cleanly. This is the one cargo invocation that legitimately
+# cannot run --locked: it checks a deliberately modified manifest.
 cp Cargo.toml Cargo.toml.orig
-trap 'mv Cargo.toml.orig Cargo.toml' EXIT INT TERM
+cp Cargo.lock Cargo.lock.orig
+trap 'mv Cargo.toml.orig Cargo.toml; mv Cargo.lock.orig Cargo.lock' EXIT INT TERM
 
 sed -i.sedbak \
     -e 's|^\[dependencies\]$|[dependencies]\nxla = { path = "xla-stub", optional = true }|' \

@@ -1,0 +1,231 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare BENCH_*.json against committed baselines.
+
+The committed files under ``bench_baselines/`` define the *contract*: every
+key present in a baseline must exist in the freshly produced BENCH file and
+satisfy its rule. Keys only present in the current file are ignored, so
+baselines may be deliberately slim (e.g. ratio floors only).
+
+Rules, chosen by key name:
+
+* keys matching ``secs|seconds|bps|wall|time|speedup`` are **skipped** —
+  wall-clock and bandwidth are meaningless on shared CI runners;
+* keys containing ``ratio`` fail when ``current < baseline * (1 - tol)``
+  (compression ratio regressed);
+* keys containing ``bytes`` fail when ``current > baseline * (1 + tol)``
+  (output grew);
+* keys starting with ``_`` are baseline annotations and are skipped;
+* booleans/strings must match exactly;
+* any other number is configuration (params, mp, pp, m, n, workers, ...)
+  and must match exactly — comparing benches run under different configs
+  would be meaningless, so that is an error, not a skip.
+
+Additionally, any current file with a top-level ``arms`` list (the
+``BENCH_pipeline.json`` shape) gets a determinism check: every arm's
+``compressed_bytes`` must be identical and ``identical_output`` must be
+true — the worker pool must never change output bytes.
+
+Usage:
+  check_bench_regression.py [--baseline-dir D] [--current-dir D]
+                            [--tolerance 0.05] [--update] [--self-test]
+
+``--update`` refreshes the committed baselines from the current BENCH
+files (run locally from a downloaded CI artifact, then commit).
+``--self-test`` verifies the gate itself catches injected regressions.
+"""
+
+import argparse
+import glob
+import json
+import os
+import re
+import shutil
+import sys
+
+EXCLUDE = re.compile(r"(^_)|secs|seconds|bps|wall|time|speedup", re.IGNORECASE)
+RATIO = re.compile(r"ratio", re.IGNORECASE)
+BYTES = re.compile(r"bytes", re.IGNORECASE)
+
+
+def compare(baseline, current, tol, path="$"):
+    """Recursively compare, returning a list of human-readable failures."""
+    fails = []
+    if isinstance(baseline, dict):
+        if not isinstance(current, dict):
+            return [f"{path}: baseline is an object, current is {type(current).__name__}"]
+        for key, bval in baseline.items():
+            if EXCLUDE.search(key):
+                continue
+            kpath = f"{path}.{key}"
+            if key not in current:
+                fails.append(f"{kpath}: missing from current bench output")
+                continue
+            cval = current[key]
+            if isinstance(bval, (dict, list)):
+                fails.extend(compare(bval, cval, tol, kpath))
+            elif isinstance(bval, bool) or isinstance(bval, str):
+                if bval != cval:
+                    fails.append(f"{kpath}: expected {bval!r}, got {cval!r}")
+            elif isinstance(bval, (int, float)):
+                if not isinstance(cval, (int, float)) or isinstance(cval, bool):
+                    fails.append(f"{kpath}: expected a number, got {cval!r}")
+                elif RATIO.search(key):
+                    if cval < bval * (1.0 - tol):
+                        fails.append(
+                            f"{kpath}: ratio regressed: {cval:.4f} < baseline "
+                            f"{bval:.4f} - {tol:.0%}"
+                        )
+                elif BYTES.search(key):
+                    if cval > bval * (1.0 + tol):
+                        fails.append(
+                            f"{kpath}: bytes regressed: {cval} > baseline "
+                            f"{bval} + {tol:.0%}"
+                        )
+                elif cval != bval:
+                    fails.append(f"{kpath}: config mismatch: expected {bval}, got {cval}")
+            elif bval is None:
+                if cval is not None:
+                    fails.append(f"{kpath}: expected null, got {cval!r}")
+            else:
+                fails.append(f"{kpath}: unsupported baseline value {bval!r}")
+    elif isinstance(baseline, list):
+        if not isinstance(current, list):
+            return [f"{path}: baseline is an array, current is {type(current).__name__}"]
+        if len(baseline) != len(current):
+            return [f"{path}: array length {len(current)}, baseline has {len(baseline)}"]
+        for i, (b, c) in enumerate(zip(baseline, current)):
+            fails.extend(compare(b, c, tol, f"{path}[{i}]"))
+    else:
+        # bare scalar baselines are not produced by our benches
+        fails.append(f"{path}: unexpected bare scalar baseline")
+    return fails
+
+
+def determinism_check(current, path="$"):
+    """The worker pool must never change output bytes: all arms equal."""
+    fails = []
+    arms = current.get("arms")
+    if not isinstance(arms, list) or not arms:
+        return fails
+    sizes = [a.get("compressed_bytes") for a in arms if isinstance(a, dict)]
+    if len(set(sizes)) > 1:
+        fails.append(f"{path}.arms: compressed_bytes differ across worker counts: {sizes}")
+    if current.get("identical_output") is False:
+        fails.append(f"{path}.identical_output: bench reported non-identical output")
+    return fails
+
+
+def check_files(baseline_dir, current_dir, tol):
+    baselines = sorted(glob.glob(os.path.join(baseline_dir, "BENCH_*.json")))
+    if not baselines:
+        print(f"ERROR: no BENCH_*.json baselines under {baseline_dir}", file=sys.stderr)
+        return 1
+    total_fails = []
+    for bpath in baselines:
+        name = os.path.basename(bpath)
+        cpath = os.path.join(current_dir, name)
+        if not os.path.exists(cpath):
+            total_fails.append(f"{name}: bench output missing (expected at {cpath})")
+            continue
+        with open(bpath) as f:
+            baseline = json.load(f)
+        with open(cpath) as f:
+            current = json.load(f)
+        fails = compare(baseline, current, tol, name)
+        if isinstance(current, dict):
+            fails.extend(determinism_check(current, name))
+        if fails:
+            total_fails.extend(fails)
+        else:
+            print(f"OK   {name}")
+    if total_fails:
+        print(f"\nFAIL: {len(total_fails)} bench regression(s):", file=sys.stderr)
+        for f in total_fails:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nall bench outputs within tolerance of committed baselines")
+    return 0
+
+
+def update_baselines(baseline_dir, current_dir):
+    os.makedirs(baseline_dir, exist_ok=True)
+    copied = 0
+    for cpath in sorted(glob.glob(os.path.join(current_dir, "BENCH_*.json"))):
+        dest = os.path.join(baseline_dir, os.path.basename(cpath))
+        shutil.copyfile(cpath, dest)
+        print(f"updated {dest}")
+        copied += 1
+    if copied == 0:
+        print(f"ERROR: no BENCH_*.json found under {current_dir}", file=sys.stderr)
+        return 1
+    print("remember to review and commit the refreshed baselines")
+    return 0
+
+
+def self_test():
+    """The gate must catch what it claims to catch."""
+    tol = 0.05
+    baseline = {
+        "params": 1024,
+        "static": {"total_ratio": 2.5, "total_save_secs": 1.0},
+        "stages": [{"ratio": 2.0, "compressed_bytes": 1000}],
+    }
+    ok = {
+        "params": 1024,
+        "static": {"total_ratio": 2.6, "total_save_secs": 99.0},  # secs ignored
+        "stages": [{"ratio": 2.01, "compressed_bytes": 1010}],
+        "extra_key_is_fine": 42,
+    }
+    ratio_regressed = json.loads(json.dumps(ok))
+    ratio_regressed["stages"][0]["ratio"] = 1.5
+    bytes_regressed = json.loads(json.dumps(ok))
+    bytes_regressed["stages"][0]["compressed_bytes"] = 2000
+    config_changed = json.loads(json.dumps(ok))
+    config_changed["params"] = 2048
+    nondeterministic = {
+        "arms": [
+            {"workers": 1, "compressed_bytes": 100},
+            {"workers": 4, "compressed_bytes": 101},
+        ],
+        "identical_output": True,
+    }
+    cases = [
+        ("clean pass", compare(baseline, ok, tol), False),
+        ("injected ratio regression", compare(baseline, ratio_regressed, tol), True),
+        ("injected bytes regression", compare(baseline, bytes_regressed, tol), True),
+        ("config mismatch", compare(baseline, config_changed, tol), True),
+        ("worker-count nondeterminism", determinism_check(nondeterministic), True),
+    ]
+    failed = False
+    for name, fails, should_fail in cases:
+        caught = bool(fails)
+        verdict = "ok" if caught == should_fail else "BROKEN"
+        if caught != should_fail:
+            failed = True
+        print(f"self-test [{verdict}] {name}: {len(fails)} finding(s)")
+        for f in fails:
+            print(f"    {f}")
+    if failed:
+        print("self-test FAILED: the gate does not catch what it must", file=sys.stderr)
+        return 1
+    print("self-test passed: the gate fails on injected regressions and passes clean runs")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", default="bench_baselines")
+    ap.add_argument("--current-dir", default=".")
+    ap.add_argument("--tolerance", type=float, default=0.05)
+    ap.add_argument("--update", action="store_true")
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+    if args.self_test:
+        sys.exit(self_test())
+    if args.update:
+        sys.exit(update_baselines(args.baseline_dir, args.current_dir))
+    sys.exit(check_files(args.baseline_dir, args.current_dir, args.tolerance))
+
+
+if __name__ == "__main__":
+    main()

@@ -213,11 +213,18 @@ impl CostEstimate {
     }
 }
 
-/// The cost model: calibration + effective write bandwidth.
+/// The cost model: calibration + effective write bandwidth + the
+/// engine's encode-worker count.
 #[derive(Clone, Debug)]
 pub struct CostModel {
     calibration: SharedCalibration,
     write_bps: f64,
+    /// Encode workers the engine runs
+    /// ([`crate::engine::pipeline::PersistConfig::workers`]). The
+    /// calibration table is *per-worker* throughput; predictions divide
+    /// by this so a pooled engine's cost model stops assuming serial
+    /// encode.
+    encode_workers: usize,
 }
 
 impl CostModel {
@@ -228,12 +235,24 @@ impl CostModel {
     /// A model reading (and feeding back into) a calibration shared with
     /// other controllers — the mp×pp per-rank construction.
     pub fn shared(calibration: SharedCalibration, write_bps: Option<f64>) -> Self {
-        Self { calibration, write_bps: write_bps.unwrap_or(DEFAULT_WRITE_BPS) }
+        Self { calibration, write_bps: write_bps.unwrap_or(DEFAULT_WRITE_BPS), encode_workers: 1 }
     }
 
     /// Derive the write bandwidth from a storage backend's throttle.
     pub fn for_storage(storage: &Storage, calibration: Calibration) -> Self {
         Self::new(calibration, storage.throttle_bps())
+    }
+
+    /// Plan for an engine encoding through an `n`-worker pool: predicted
+    /// encode seconds scale down by `n` (payload sizes are unaffected —
+    /// parallelism changes wall-clock, not bytes).
+    pub fn with_encode_workers(mut self, n: usize) -> Self {
+        self.encode_workers = n.max(1);
+        self
+    }
+
+    pub fn encode_workers(&self) -> usize {
+        self.encode_workers
     }
 
     pub fn write_bps(&self) -> f64 {
@@ -282,14 +301,17 @@ impl CostModel {
 
     /// Full cost estimate for `spec` on the probed tensor. Encode
     /// throughput is calibrated per codec *family* — parameters move the
-    /// payload size, not the order-of-magnitude encode speed.
+    /// payload size, not the order-of-magnitude encode speed — and
+    /// scaled by the engine's encode-worker count (the calibration is
+    /// per-worker throughput).
     pub fn estimate(&self, spec: impl Into<CodecSpec>, p: &TensorProbe) -> CostEstimate {
         let spec = spec.into();
         let bytes = self.predicted_bytes(spec, p);
+        let effective_bps = self.calibration.encode_bps(spec.id) * self.encode_workers as f64;
         CostEstimate {
             spec,
             bytes,
-            encode_secs: p.raw_bytes() as f64 / self.calibration.encode_bps(spec.id),
+            encode_secs: p.raw_bytes() as f64 / effective_bps,
             write_secs: bytes as f64 / self.write_bps,
         }
     }
@@ -396,6 +418,33 @@ mod tests {
         assert!((e.total_secs() - (e.encode_secs + e.write_secs)).abs() < 1e-15);
         assert!(e.ratio(p.raw_bytes()) > 1.0);
         assert_eq!(e.write_secs, e.bytes as f64 / 1e9);
+    }
+
+    #[test]
+    fn encode_workers_scale_predicted_encode_time_not_bytes() {
+        let (base, curr) = perturbed_pair(50_000, 1000);
+        let p = exact_probe(&base, &curr);
+        let serial = CostModel::new(Calibration::default_host(), Some(1e9));
+        let pooled = serial.clone().with_encode_workers(4);
+        assert_eq!(serial.encode_workers(), 1);
+        assert_eq!(pooled.encode_workers(), 4);
+        let es = serial.estimate(CodecId::BitmaskPacked, &p);
+        let ep = pooled.estimate(CodecId::BitmaskPacked, &p);
+        // bytes are a property of the codec, not the pool
+        assert_eq!(es.bytes, ep.bytes);
+        assert_eq!(es.write_secs, ep.write_secs);
+        assert!((ep.encode_secs - es.encode_secs / 4.0).abs() < 1e-12);
+        // a pooled model can flip encode-bound choices: with encode 4x
+        // cheaper, smaller-payload codecs win earlier. At 84% density a
+        // serial NVMe model picks raw (encode-bound); 8 workers make the
+        // packed payload's write savings dominate.
+        let (base, curr) = perturbed_pair(50_000, 42_000);
+        let p = exact_probe(&base, &curr);
+        let candidates = specs(&[CodecId::Raw, CodecId::BitmaskPacked]);
+        let nvme = CostModel::new(Calibration::default_host(), Some(3500e6));
+        assert_eq!(nvme.best(&candidates, &p).spec.id, CodecId::Raw);
+        let nvme8 = nvme.clone().with_encode_workers(8);
+        assert_eq!(nvme8.best(&candidates, &p).spec.id, CodecId::BitmaskPacked);
     }
 
     #[test]

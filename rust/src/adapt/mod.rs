@@ -59,11 +59,21 @@ pub struct SaveOutcome {
     /// Compressed *payload* bytes — what the cost model predicts —
     /// excluding container framing (names, headers, CRC).
     pub compressed_bytes: usize,
-    /// Wall time of the compression pass alone — what encode-throughput
+    /// Time of the compression pass alone — what encode-throughput
     /// estimates are corrected against. Excludes planning, container
     /// framing and shm staging (folding those in would bias the
-    /// calibration's bytes/sec systematically low).
+    /// calibration's bytes/sec systematically low). This is the
+    /// **serial-equivalent** time: the sum of per-tensor encode wall
+    /// times, however many pool workers ran them — so the implied
+    /// bytes/sec is always *per-worker* throughput and the calibration
+    /// stays comparable across pool sizes.
     pub encode: std::time::Duration,
+    /// Worker-pool size that produced the encode (1 = serial path). The
+    /// wall clock of the encode phase was roughly `encode /
+    /// encode_workers`; cost models that plan for a pooled engine divide
+    /// predicted encode time accordingly
+    /// ([`CostModel::with_encode_workers`]).
+    pub encode_workers: usize,
     /// Full critical-path time the trainer was blocked (compress +
     /// serialize + shm stage + enqueue).
     pub blocking: std::time::Duration,

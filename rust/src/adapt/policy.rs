@@ -743,6 +743,7 @@ mod tests {
             raw_bytes: sd.total_bytes(),
             compressed_bytes: 1,
             encode: std::time::Duration::from_secs(60),
+            encode_workers: 1,
             blocking: std::time::Duration::from_secs(61),
         });
         let after = shared.snapshot().encode_bps(CodecId::ClusterQuant);
@@ -834,6 +835,7 @@ mod tests {
             raw_bytes: sd.total_bytes(),
             compressed_bytes: 12345,
             encode: std::time::Duration::ZERO,
+            encode_workers: 1,
             blocking: std::time::Duration::ZERO,
         });
         let sums = policy.summaries();

@@ -111,6 +111,7 @@ pub fn simulate_trajectory(
                 raw_bytes,
                 compressed_bytes: payload_bytes,
                 encode: Duration::from_secs_f64(c1.min(c2)),
+                encode_workers: 1,
                 blocking: Duration::from_secs_f64(encode_secs),
             });
             out.push(SimSave {
@@ -240,6 +241,7 @@ pub fn simulate_sharded_trajectory<S: PolicySource>(
                     raw_bytes: shard.total_bytes(),
                     compressed_bytes: payload,
                     encode: Duration::from_secs_f64(c1.min(c2)),
+                    encode_workers: 1,
                     blocking: Duration::from_secs_f64(encode_secs),
                 });
                 per_rank_encode_secs.push(encode_secs);

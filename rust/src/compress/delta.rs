@@ -307,6 +307,55 @@ fn compress_optimizer_entry(
     compress_quantized_entry(spec, t, timings)
 }
 
+/// Compress **one** entry of a planned save: the per-tensor unit of work
+/// the engine's parallel persist pipeline
+/// ([`crate::engine::pipeline::EncodePool`]) dispatches to its encode
+/// workers. A pure function of `(tensor, base, plan)`, so running entries
+/// concurrently and reassembling in entry order is byte-identical to the
+/// serial path — which is literally this, folded in order by
+/// [`compress_state_dict_planned`].
+pub fn compress_entry_planned(
+    name: &str,
+    kind: StateKind,
+    tensor: &HostTensor,
+    base: Option<&StateDict>,
+    plan: &CheckpointPlan,
+) -> Result<(CompressedTensor, CompressTimings), CompressError> {
+    let policy = plan.default_policy();
+    let mut timings = CompressTimings::default();
+    // the base lookup is a linear scan — only pay for it on the arms
+    // that can actually delta-encode (Raw/Quantize never do)
+    let lookup_base = || base.and_then(|b| b.get(name)).map(|be| &be.tensor);
+    let compressed = match plan.directive(name) {
+        TensorDirective::Inherit => match kind {
+            StateKind::ModelState => {
+                compress_model_entry(policy.model, lookup_base(), tensor, &mut timings)?
+            }
+            k if k.is_optimizer() => {
+                compress_optimizer_entry(policy.optimizer, k, tensor, &mut timings)?
+            }
+            _ => compress(CodecId::Raw, tensor)?,
+        },
+        TensorDirective::Raw => compress(CodecId::Raw, tensor)?,
+        TensorDirective::Delta(spec) => {
+            if !spec.is_delta() {
+                return Err(CompressError::Format(format!(
+                    "plan directive Delta({spec:?}) is not a delta codec"
+                )));
+            }
+            let t0 = std::time::Instant::now();
+            let c = match lookup_base() {
+                Some(b) => compress_delta(spec, b, tensor)?,
+                None => compress(CodecId::Raw, tensor)?,
+            };
+            timings.delta_encoding += t0.elapsed();
+            c
+        }
+        TensorDirective::Quantize(spec) => compress_quantized_entry(spec, tensor, &mut timings)?,
+    };
+    Ok((compressed, timings))
+}
+
 /// [`compress_state_dict_timed`] generalized to a per-tensor
 /// [`CheckpointPlan`]. Tensors without an override follow the plan's
 /// default policy exactly as before; overridden tensors follow their
@@ -319,42 +368,11 @@ pub fn compress_state_dict_planned(
     iteration: u64,
     base_iteration: u64,
 ) -> Result<(CompressedCheckpoint, CompressTimings), CompressError> {
-    let policy = plan.default_policy();
     let mut timings = CompressTimings::default();
     let mut entries = Vec::with_capacity(sd.len());
     for e in sd.entries() {
-        // the base lookup is a linear scan — only pay for it on the arms
-        // that can actually delta-encode (Raw/Quantize never do)
-        let lookup_base = || base.and_then(|b| b.get(&e.name)).map(|be| &be.tensor);
-        let compressed = match plan.directive(&e.name) {
-            TensorDirective::Inherit => match e.kind {
-                StateKind::ModelState => {
-                    compress_model_entry(policy.model, lookup_base(), &e.tensor, &mut timings)?
-                }
-                k if k.is_optimizer() => {
-                    compress_optimizer_entry(policy.optimizer, k, &e.tensor, &mut timings)?
-                }
-                _ => compress(CodecId::Raw, &e.tensor)?,
-            },
-            TensorDirective::Raw => compress(CodecId::Raw, &e.tensor)?,
-            TensorDirective::Delta(spec) => {
-                if !spec.is_delta() {
-                    return Err(CompressError::Format(format!(
-                        "plan directive Delta({spec:?}) is not a delta codec"
-                    )));
-                }
-                let t0 = std::time::Instant::now();
-                let c = match lookup_base() {
-                    Some(b) => compress_delta(spec, b, &e.tensor)?,
-                    None => compress(CodecId::Raw, &e.tensor)?,
-                };
-                timings.delta_encoding += t0.elapsed();
-                c
-            }
-            TensorDirective::Quantize(spec) => {
-                compress_quantized_entry(spec, &e.tensor, &mut timings)?
-            }
-        };
+        let (compressed, t) = compress_entry_planned(&e.name, e.kind, &e.tensor, base, plan)?;
+        timings.add(&t);
         entries.push(CompressedEntry { name: e.name.clone(), kind: e.kind, compressed });
     }
     Ok((CompressedCheckpoint { entries, iteration, base_iteration }, timings))

@@ -33,6 +33,12 @@ pub enum CompressError {
     Dtype(String),
     Format(String),
     Io(std::io::Error),
+    /// Engine-side execution failure — a dead or panicked agent/worker
+    /// thread, a poisoned pipeline, etc. Distinct from [`Format`]: the
+    /// payload may be perfectly fine, the machinery around it died.
+    ///
+    /// [`Format`]: CompressError::Format
+    Engine(String),
 }
 
 impl std::fmt::Display for CompressError {
@@ -42,6 +48,7 @@ impl std::fmt::Display for CompressError {
             CompressError::Dtype(s) => write!(f, "dtype error: {s}"),
             CompressError::Format(s) => write!(f, "malformed payload: {s}"),
             CompressError::Io(e) => write!(f, "io: {e}"),
+            CompressError::Engine(s) => write!(f, "engine failure: {s}"),
         }
     }
 }

@@ -27,12 +27,14 @@ use std::time::{Duration, Instant};
 
 use crate::adapt::{PolicySource, SaveContext, SaveOutcome, StaticPolicySource};
 use crate::compress::delta::{
-    compress_state_dict_planned, decompress_state_dict, CompressTimings, Policy,
+    compress_state_dict_planned, decompress_state_dict, CheckpointPlan, CompressTimings,
+    CompressedCheckpoint, Policy,
 };
 use crate::compress::CompressError;
 use crate::tensor::StateDict;
 
 use super::container;
+use super::pipeline::panic_message;
 use super::shm::ShmStore;
 use super::storage::Storage;
 use super::tracker::Tracker;
@@ -115,6 +117,36 @@ impl SaveReport {
     }
 }
 
+/// First half of a save, produced by [`CheckpointEngine::begin_save`]:
+/// the cadence decision plus the policy source's per-tensor plan. Holding
+/// one of these mutates nothing — counters and the base snapshot only
+/// move in [`CheckpointEngine::commit_encoded`] — so a save whose encode
+/// phase fails can simply drop it and the engine stays reusable.
+#[derive(Clone, Debug)]
+pub struct PlannedSave {
+    pub iteration: u64,
+    pub is_base: bool,
+    /// Iteration of the base this save chains to (== `iteration` when
+    /// `is_base`).
+    pub base_iteration: u64,
+    pub plan: CheckpointPlan,
+}
+
+/// Second half of a save: what the encode phase (serial or the
+/// [`super::pipeline::EncodePool`]) produced for one rank.
+#[derive(Clone, Debug)]
+pub struct EncodedSave {
+    pub ckpt: CompressedCheckpoint,
+    pub timings: CompressTimings,
+    /// Serial-equivalent encode time: the *sum* of per-tensor encode
+    /// wall times, regardless of how many workers ran them. This is what
+    /// per-worker throughput calibration divides raw bytes by; the wall
+    /// clock of a parallel encode is roughly `encode / encode_workers`.
+    pub encode: Duration,
+    /// Worker-pool size that produced this encode (1 = serial).
+    pub encode_workers: usize,
+}
+
 enum AgentMsg {
     Persist { iteration: u64, is_base: bool },
     Flush(mpsc::SyncSender<()>),
@@ -134,7 +166,9 @@ pub struct CheckpointEngine {
     cfg: EngineConfig,
     shm: ShmStore,
     tx: mpsc::Sender<AgentMsg>,
-    agent: Option<thread::JoinHandle<()>>,
+    /// Behind a mutex so `&self` paths (`flush`) can take the handle to
+    /// harvest a panic message when the agent turns out to be dead.
+    agent: Mutex<Option<thread::JoinHandle<()>>>,
     stats: Arc<Mutex<AgentStats>>,
     /// Reconstructed state dict of the current base checkpoint, kept in
     /// memory for delta encoding (the paper keeps it in GPU/CPU memory).
@@ -176,12 +210,28 @@ impl CheckpointEngine {
             cfg,
             shm,
             tx,
-            agent: Some(agent),
+            agent: Mutex::new(Some(agent)),
             stats,
             base: None,
             saves_since_base: 0,
             policy_source: source,
         })
+    }
+
+    /// Diagnose a dead agent: join the thread (its receiver is gone, so
+    /// it has already exited or panicked) and propagate the panic message
+    /// so the caller sees *why* persistence died, not just that it did.
+    fn agent_death(&self) -> CompressError {
+        let handle = self.agent.lock().unwrap().take();
+        let detail = match handle {
+            Some(h) => match h.join() {
+                Ok(()) => "agent thread exited unexpectedly".to_string(),
+                Err(p) => format!("agent thread panicked: {}", panic_message(p.as_ref())),
+            },
+            // already harvested by an earlier failure
+            None => "agent thread died".to_string(),
+        };
+        CompressError::Engine(detail)
     }
 
     pub fn config(&self) -> &EngineConfig {
@@ -215,46 +265,60 @@ impl CheckpointEngine {
         }
     }
 
-    /// Save a checkpoint. Blocking time is the returned `blocking`
-    /// duration; persistence continues asynchronously.
-    pub fn save(&mut self, iteration: u64, sd: &StateDict) -> Result<SaveReport, CompressError> {
-        let t0 = Instant::now();
-        let make_base = self.next_save_is_base();
-        let (base_iter, base_sd) = if make_base {
+    /// First half of a save: decide base-vs-delta and ask the policy
+    /// source for the per-tensor plan. Mutates only policy-source
+    /// bookkeeping — engine counters and the base snapshot move in
+    /// [`CheckpointEngine::commit_encoded`], so dropping the result (e.g.
+    /// because a parallel encode failed) leaves the engine reusable.
+    pub fn begin_save(&mut self, iteration: u64, sd: &StateDict) -> PlannedSave {
+        let is_base = self.next_save_is_base();
+        let (base_iteration, base) = if is_base {
             (iteration, None)
         } else {
             let (bi, bsd) = self.base.as_ref().unwrap();
             (*bi, Some(bsd))
         };
-        let plan = self.policy_source.plan(&SaveContext {
-            iteration,
-            is_base: make_base,
-            sd,
-            base: base_sd,
-        });
-        let t_enc = Instant::now();
-        let (ckpt, timings) =
-            compress_state_dict_planned(sd, base_sd, &plan, iteration, base_iter)?;
-        let encode = t_enc.elapsed();
-        let payload_bytes = ckpt.payload_bytes();
-        let entry_specs = ckpt.entry_specs();
-        let bytes = container::serialize(&ckpt);
-        self.shm.put(iteration, &bytes, make_base)?;
+        let plan = self.policy_source.plan(&SaveContext { iteration, is_base, sd, base });
+        PlannedSave { iteration, is_base, base_iteration, plan }
+    }
+
+    /// The base snapshot delta saves encode against (`None` until the
+    /// first base checkpoint lands).
+    pub fn base_state(&self) -> Option<&StateDict> {
+        self.base.as_ref().map(|(_, sd)| sd)
+    }
+
+    /// Second half of a save: stage the encoded checkpoint to shm, hand
+    /// it to the async agent, advance the delta-chain counters and report
+    /// the outcome back to the policy source. `started` is when the
+    /// blocking phase began (the reported `blocking` spans plan + encode
+    /// + staging).
+    pub fn commit_encoded(
+        &mut self,
+        prep: PlannedSave,
+        sd: &StateDict,
+        enc: EncodedSave,
+        started: Instant,
+    ) -> Result<SaveReport, CompressError> {
+        let payload_bytes = enc.ckpt.payload_bytes();
+        let entry_specs = enc.ckpt.entry_specs();
+        let bytes = container::serialize(&enc.ckpt);
+        self.shm.put(prep.iteration, &bytes, prep.is_base)?;
         self.tx
-            .send(AgentMsg::Persist { iteration, is_base: make_base })
-            .map_err(|_| CompressError::Format("agent thread died".into()))?;
-        if make_base {
-            self.base = Some((iteration, sd.clone()));
+            .send(AgentMsg::Persist { iteration: prep.iteration, is_base: prep.is_base })
+            .map_err(|_| self.agent_death())?;
+        if prep.is_base {
+            self.base = Some((prep.iteration, sd.clone()));
             self.saves_since_base = 1;
         } else {
             self.saves_since_base += 1;
         }
         let report = SaveReport {
-            iteration,
-            is_base: make_base,
-            base_iteration: base_iter,
-            blocking: t0.elapsed(),
-            timings,
+            iteration: prep.iteration,
+            is_base: prep.is_base,
+            base_iteration: prep.base_iteration,
+            blocking: started.elapsed(),
+            timings: enc.timings,
             raw_bytes: sd.total_bytes(),
             compressed_bytes: bytes.len(),
             entry_specs,
@@ -262,23 +326,40 @@ impl CheckpointEngine {
         // the policy source sees payload bytes (what its cost model
         // predicts), not the container length with framing and CRC
         self.policy_source.observe(&SaveOutcome {
-            iteration,
-            is_base: make_base,
+            iteration: prep.iteration,
+            is_base: prep.is_base,
             raw_bytes: report.raw_bytes,
             compressed_bytes: payload_bytes,
-            encode,
+            encode: enc.encode,
+            encode_workers: enc.encode_workers,
             blocking: report.blocking,
         });
         Ok(report)
     }
 
+    /// Save a checkpoint through the serial path: plan, encode inline,
+    /// commit. Blocking time is the returned `blocking` duration;
+    /// persistence continues asynchronously. (The sharded engine encodes
+    /// through [`super::pipeline::EncodePool`] instead and calls
+    /// [`CheckpointEngine::begin_save`] / [`CheckpointEngine::commit_encoded`]
+    /// directly.)
+    pub fn save(&mut self, iteration: u64, sd: &StateDict) -> Result<SaveReport, CompressError> {
+        let t0 = Instant::now();
+        let prep = self.begin_save(iteration, sd);
+        let base = if prep.is_base { None } else { self.base_state() };
+        let t_enc = Instant::now();
+        let (ckpt, timings) =
+            compress_state_dict_planned(sd, base, &prep.plan, iteration, prep.base_iteration)?;
+        let encode = t_enc.elapsed();
+        let enc = EncodedSave { ckpt, timings, encode, encode_workers: 1 };
+        self.commit_encoded(prep, sd, enc, t0)
+    }
+
     /// Block until the agent has drained every queued persist.
     pub fn flush(&self) -> Result<(), CompressError> {
         let (tx, rx) = mpsc::sync_channel(0);
-        self.tx
-            .send(AgentMsg::Flush(tx))
-            .map_err(|_| CompressError::Format("agent thread died".into()))?;
-        rx.recv().map_err(|_| CompressError::Format("agent thread died".into()))
+        self.tx.send(AgentMsg::Flush(tx)).map_err(|_| self.agent_death())?;
+        rx.recv().map_err(|_| self.agent_death())
     }
 
     pub fn agent_stats(&self) -> AgentStats {
@@ -337,7 +418,8 @@ impl CheckpointEngine {
 impl Drop for CheckpointEngine {
     fn drop(&mut self) {
         let _ = self.tx.send(AgentMsg::Stop);
-        if let Some(h) = self.agent.take() {
+        let handle = self.agent.lock().unwrap().take();
+        if let Some(h) = handle {
             let _ = h.join();
         }
     }

@@ -9,6 +9,8 @@
 //!   the sharded-checkpoint manifest (`.bsnm`).
 //! * [`sharded`] — the mp×pp multi-rank engine: one per-rank engine per
 //!   shard, a manifest per iteration, reassembly + resharding restore.
+//! * [`pipeline`] — the bounded encode worker pool sharded saves
+//!   compress through (deterministic ordered assembly).
 //! * [`recovery`] — the multi-rank all-gather recovery check (Fig. 4) and
 //!   the shard reassembly/reshard helpers.
 //! * [`failure`] — failure injection used by tests and the
@@ -17,13 +19,15 @@
 pub mod agent;
 pub mod container;
 pub mod failure;
+pub mod pipeline;
 pub mod recovery;
 pub mod sharded;
 pub mod shm;
 pub mod storage;
 pub mod tracker;
 
-pub use agent::{CheckpointEngine, EngineConfig, SaveReport};
+pub use agent::{CheckpointEngine, EncodedSave, EngineConfig, PlannedSave, SaveReport};
+pub use pipeline::{EncodePool, PersistConfig};
 pub use container::{ManifestEntry, ShardManifest};
 pub use recovery::{
     all_gather_check, reassemble_state_dict, reshard_state_dict, RankView, RecoveryDecision,

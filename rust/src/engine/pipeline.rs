@@ -1,0 +1,365 @@
+//! The worker-pool compression pipeline behind sharded saves.
+//!
+//! The sharded engine persists concurrently (one async agent per rank)
+//! but until this module existed it *compressed* serially — the encode
+//! leg of every mp×pp save ran rank after rank, tensor after tensor, on
+//! the training critical path. Checkpoint systems that overlap encode
+//! with training (Check-N-Run, Inshrinkerator) pipeline per-shard encode
+//! work across workers; [`EncodePool`] does the same for BitSnap: a
+//! bounded `std::thread` pool that executes per-tensor encode jobs from
+//! every rank concurrently and hands the results back **in submission
+//! order**, so the per-rank containers (and therefore the manifest) are
+//! byte-identical to what the serial path writes.
+//!
+//! Determinism is structural, not best-effort: each job is a pure
+//! function of its tensor + plan, results land in per-index slots, and
+//! assembly walks the slots in order. The only thing parallelism changes
+//! is wall-clock.
+//!
+//! Failure model: a job that returns an error — or **panics** — does not
+//! poison the pool. Panics are caught on the worker
+//! ([`std::panic::catch_unwind`]) and surface as
+//! [`CompressError::Engine`] with the panic message; remaining jobs
+//! still drain, the first failure in submission order is reported, and
+//! the pool (it holds no state across [`EncodePool::run`] calls) is
+//! immediately reusable. The engine only commits a save after the whole
+//! job set succeeded, so a mid-encode failure leaves engine counters,
+//! shm and storage untouched.
+//!
+//! Backpressure: jobs flow through a [`std::sync::mpsc::sync_channel`]
+//! of depth [`PersistConfig::queue_depth`]; the submitting thread blocks
+//! once `queue_depth` jobs are waiting, so no more than
+//! `queue_depth + workers` jobs are ever dequeued-but-unfinished. (The
+//! job list itself and the finished results are O(n) either way — the
+//! serial path holds every encoded tensor of a save too; the queue
+//! bounds the producer→worker handoff, not the save's working set.)
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::thread;
+
+use crate::compress::CompressError;
+
+/// Environment variable the CI thread matrix sets so the tier-1 test
+/// suite runs the whole engine under different real concurrency levels.
+pub const TEST_WORKERS_ENV: &str = "BITSNAP_TEST_WORKERS";
+
+/// Configuration of the persist pipeline: how many encode workers run
+/// concurrently and how many queued jobs they may have waiting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PersistConfig {
+    /// Encode worker threads. 1 = the serial path (no threads spawned).
+    pub workers: usize,
+    /// Bounded job-queue depth; submission blocks when it is full.
+    pub queue_depth: usize,
+}
+
+impl PersistConfig {
+    /// `workers` encode workers with the default queue depth (2 jobs per
+    /// worker keeps everyone fed without unbounded buffering).
+    pub fn with_workers(workers: usize) -> Self {
+        let workers = workers.max(1);
+        Self { workers, queue_depth: 2 * workers }
+    }
+
+    /// The strictly serial configuration (exactly the pre-pipeline
+    /// behaviour).
+    pub fn serial() -> Self {
+        Self { workers: 1, queue_depth: 1 }
+    }
+
+    /// Default, with a [`TEST_WORKERS_ENV`] override when set — the CI
+    /// thread matrix uses this to drive the engine test suite at
+    /// workers ∈ {1, 4} without touching every construction site.
+    pub fn from_env() -> Self {
+        match parse_workers(std::env::var(TEST_WORKERS_ENV).ok().as_deref()) {
+            Some(w) => Self::with_workers(w),
+            None => Self::default(),
+        }
+    }
+}
+
+impl Default for PersistConfig {
+    /// One worker per available core — encode is CPU-bound.
+    fn default() -> Self {
+        let cores = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::with_workers(cores)
+    }
+}
+
+/// Parse a worker-count override (the [`TEST_WORKERS_ENV`] value).
+/// `None`/empty/unparsable/zero all mean "no override".
+pub(crate) fn parse_workers(value: Option<&str>) -> Option<usize> {
+    value.and_then(|v| v.trim().parse::<usize>().ok()).filter(|&w| w >= 1)
+}
+
+/// Best-effort extraction of a panic payload's message.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run one job, converting a panic into [`CompressError::Engine`] so a
+/// single bad tensor cannot take down the worker (or, transitively, the
+/// whole pool).
+fn run_job<T>(job: impl FnOnce() -> Result<T, CompressError>) -> Result<T, CompressError> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)) {
+        Ok(r) => r,
+        Err(p) => Err(CompressError::Engine(format!(
+            "encode worker panicked: {}",
+            panic_message(p.as_ref())
+        ))),
+    }
+}
+
+/// The bounded encode worker pool. See module docs. Stateless between
+/// [`EncodePool::run`] calls: workers are scoped to one run, so the pool
+/// is trivially reusable after a failed run and owns no threads while
+/// idle.
+#[derive(Clone, Copy, Debug)]
+pub struct EncodePool {
+    cfg: PersistConfig,
+}
+
+impl EncodePool {
+    pub fn new(cfg: PersistConfig) -> Self {
+        let cfg =
+            PersistConfig { workers: cfg.workers.max(1), queue_depth: cfg.queue_depth.max(1) };
+        Self { cfg }
+    }
+
+    pub fn config(&self) -> PersistConfig {
+        self.cfg
+    }
+
+    pub fn workers(&self) -> usize {
+        self.cfg.workers
+    }
+
+    /// Execute `jobs`, returning their outputs **in submission order**.
+    ///
+    /// On failure the first error in submission order is returned —
+    /// deterministic error selection matters more than saving a few
+    /// milliseconds on the failure path (the pooled path drains the
+    /// remaining jobs; the inline `workers == 1` path, which spawns no
+    /// threads, short-circuits).
+    pub fn run<T, F>(&self, jobs: Vec<F>) -> Result<Vec<T>, CompressError>
+    where
+        T: Send,
+        F: FnOnce() -> Result<T, CompressError> + Send,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let workers = self.cfg.workers.min(n);
+        if workers == 1 {
+            let mut out = Vec::with_capacity(n);
+            for job in jobs {
+                out.push(run_job(job)?);
+            }
+            return Ok(out);
+        }
+        // one slot per job: workers write results by index, assembly
+        // reads them in order — this is where determinism comes from
+        let slots: Vec<Mutex<Option<Result<T, CompressError>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let (tx, rx) = mpsc::sync_channel::<(usize, F)>(self.cfg.queue_depth);
+        let rx = Mutex::new(rx);
+        // the lock guard lives only inside this call, so workers hold the
+        // receiver lock for the dequeue, never while encoding (a bare
+        // `while let ... = rx.lock()...` would keep the guard alive
+        // through the loop body and serialize the whole pool)
+        let next_job = || rx.lock().unwrap().recv().ok();
+        thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    while let Some((idx, job)) = next_job() {
+                        let result = run_job(job);
+                        *slots[idx].lock().unwrap() = Some(result);
+                    }
+                });
+            }
+            // this thread is the producer: send blocks once queue_depth
+            // jobs are waiting (backpressure); send only fails if every
+            // worker is gone, which cannot happen (workers never exit
+            // before the channel closes), but don't panic on it either
+            for item in jobs.into_iter().enumerate() {
+                if tx.send(item).is_err() {
+                    break;
+                }
+            }
+            drop(tx);
+        });
+        let mut out = Vec::with_capacity(n);
+        for slot in slots {
+            match slot.into_inner().unwrap() {
+                Some(Ok(v)) => out.push(v),
+                Some(Err(e)) => return Err(e),
+                None => {
+                    return Err(CompressError::Engine(
+                        "encode pool lost a job result (worker died before completing)".into(),
+                    ))
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn pool(workers: usize, queue_depth: usize) -> EncodePool {
+        EncodePool::new(PersistConfig { workers, queue_depth })
+    }
+
+    #[test]
+    fn results_come_back_in_submission_order() {
+        for workers in [1usize, 2, 8] {
+            let p = pool(workers, 4);
+            let jobs: Vec<_> = (0..64usize)
+                .map(|i| {
+                    move || {
+                        // stagger so completion order differs from
+                        // submission order under real concurrency
+                        if i % 7 == 0 {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Ok(i * 3)
+                    }
+                })
+                .collect();
+            let out = p.run(jobs).unwrap();
+            assert_eq!(out, (0..64).map(|i| i * 3).collect::<Vec<_>>(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn concurrency_never_exceeds_worker_count() {
+        let p = pool(3, 2);
+        let in_flight = AtomicUsize::new(0);
+        let max_seen = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..48usize)
+            .map(|i| {
+                let in_flight = &in_flight;
+                let max_seen = &max_seen;
+                move || {
+                    let now = in_flight.fetch_add(1, Ordering::SeqCst) + 1;
+                    max_seen.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                    Ok(i)
+                }
+            })
+            .collect();
+        p.run(jobs).unwrap();
+        let max = max_seen.load(Ordering::SeqCst);
+        assert!(max <= 3, "{max} jobs ran concurrently on a 3-worker pool");
+        assert!(max >= 2, "a 3-worker pool never overlapped work ({max})");
+    }
+
+    #[test]
+    fn queue_depth_one_backpressure_still_completes_everything() {
+        // the tightest legal pipeline: one queued job at a time; the
+        // producer must block-and-resume through all 200 jobs without
+        // deadlock, and ordering must survive
+        let p = pool(2, 1);
+        let done = AtomicUsize::new(0);
+        let jobs: Vec<_> = (0..200usize)
+            .map(|i| {
+                let done = &done;
+                move || {
+                    done.fetch_add(1, Ordering::SeqCst);
+                    Ok(i)
+                }
+            })
+            .collect();
+        let out = p.run(jobs).unwrap();
+        assert_eq!(out, (0..200).collect::<Vec<_>>());
+        assert_eq!(done.load(Ordering::SeqCst), 200);
+    }
+
+    #[test]
+    fn first_error_in_submission_order_wins() {
+        let p = pool(4, 2);
+        let jobs: Vec<_> = (0..16usize)
+            .map(|i| {
+                move || {
+                    if i == 5 || i == 11 {
+                        Err(CompressError::Format(format!("job {i} failed")))
+                    } else {
+                        Ok(i)
+                    }
+                }
+            })
+            .collect();
+        let err = p.run(jobs).unwrap_err();
+        assert!(err.to_string().contains("job 5"), "{err}");
+    }
+
+    #[test]
+    fn worker_panic_fails_cleanly_and_pool_is_reusable() {
+        let p = pool(4, 2);
+        let jobs: Vec<_> = (0..8usize)
+            .map(|i| {
+                move || {
+                    if i == 3 {
+                        panic!("synthetic encode panic on job {i}");
+                    }
+                    Ok(i)
+                }
+            })
+            .collect();
+        let err = p.run(jobs).unwrap_err();
+        match &err {
+            CompressError::Engine(msg) => {
+                assert!(msg.contains("synthetic encode panic on job 3"), "{msg}");
+            }
+            other => panic!("expected CompressError::Engine, got {other:?}"),
+        }
+        // the pool holds no state across runs: the next run is clean
+        let jobs: Vec<_> = (0..8usize).map(|i| move || Ok(i * 2)).collect();
+        assert_eq!(p.run(jobs).unwrap(), (0..8).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_pool_panic_is_also_an_engine_error() {
+        let p = pool(1, 1);
+        let jobs: Vec<Box<dyn FnOnce() -> Result<usize, CompressError> + Send>> =
+            vec![Box::new(|| Ok(1)), Box::new(|| panic!("serial panic"))];
+        let err = p.run(jobs).unwrap_err();
+        assert!(matches!(&err, CompressError::Engine(_)), "{err:?}");
+    }
+
+    #[test]
+    fn empty_job_list_is_fine() {
+        let p = pool(4, 2);
+        let out: Vec<usize> = p.run(Vec::<fn() -> Result<usize, CompressError>>::new()).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn persist_config_constructors_and_env_parsing() {
+        assert_eq!(PersistConfig::serial(), PersistConfig { workers: 1, queue_depth: 1 });
+        let c = PersistConfig::with_workers(4);
+        assert_eq!((c.workers, c.queue_depth), (4, 8));
+        // zero saturates to the serial minimum
+        assert_eq!(PersistConfig::with_workers(0).workers, 1);
+        assert!(PersistConfig::default().workers >= 1);
+        // env override parsing: unset/garbage/zero mean "no override"
+        assert_eq!(parse_workers(None), None);
+        assert_eq!(parse_workers(Some("")), None);
+        assert_eq!(parse_workers(Some("abc")), None);
+        assert_eq!(parse_workers(Some("0")), None);
+        assert_eq!(parse_workers(Some("4")), Some(4));
+        assert_eq!(parse_workers(Some(" 2 ")), Some(2));
+    }
+}

@@ -18,19 +18,30 @@
 //! its own [`crate::adapt::AdaptivePolicy`] probing that rank's shard,
 //! with one [`crate::adapt::SharedCalibration`] pooling the
 //! encode-throughput feedback from all of them.
+//!
+//! **Encode is pipelined**: every (rank, tensor) of a save is one work
+//! item on a bounded [`EncodePool`] ([`ShardedEngineConfig::persist`],
+//! CLI `train --workers N`), and finished tensors are reassembled into
+//! the per-rank containers in deterministic entry order — the `.bsnp`
+//! shards and `.bsnm` manifest are byte-identical whatever the worker
+//! count. A failed (or panicked) encode aborts the save *before* any
+//! counter, shm or storage mutation, so the engine stays reusable.
 
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::adapt::{PolicySource, StaticPolicySource};
-use crate::compress::delta::Policy;
+use crate::compress::delta::{
+    compress_entry_planned, CompressTimings, CompressedCheckpoint, CompressedEntry, Policy,
+};
 use crate::compress::{CodecSpec, CompressError};
 use crate::tensor::StateDict;
 use crate::train::parallel::{entry_stage, shard_bounds, shard_state_dict, Parallelism};
 
-use super::agent::{AgentStats, CheckpointEngine, EngineConfig, SaveReport};
+use super::agent::{AgentStats, CheckpointEngine, EncodedSave, EngineConfig, SaveReport};
 use super::container::{self, ManifestEntry, ShardManifest};
+use super::pipeline::{EncodePool, PersistConfig};
 use super::recovery::{all_gather_check, apply_pruning, reassemble_state_dict, RankView};
 use super::storage::Storage;
 
@@ -48,6 +59,10 @@ pub struct ShardedEngineConfig {
     pub redundancy: usize,
     pub policy: Policy,
     pub max_cached_iteration: u64,
+    /// Encode worker-pool shape for the save pipeline (worker count +
+    /// bounded queue depth). [`PersistConfig::serial`] reproduces the
+    /// pre-pipeline behaviour exactly, including byte-for-byte output.
+    pub persist: PersistConfig,
 }
 
 impl ShardedEngineConfig {
@@ -62,6 +77,7 @@ impl ShardedEngineConfig {
             redundancy: 2,
             policy: Policy::bitsnap(),
             max_cached_iteration: 5,
+            persist: PersistConfig::from_env(),
         }
     }
 
@@ -75,7 +91,7 @@ impl ShardedEngineConfig {
 }
 
 /// What a sharded `save()` reports: the per-rank reports plus the fleet
-/// view (max blocking across ranks — ranks compress independently).
+/// view (total blocking, pooled-encode wall time, worker count).
 #[derive(Clone, Debug)]
 pub struct ShardedSaveReport {
     pub iteration: u64,
@@ -85,8 +101,16 @@ pub struct ShardedSaveReport {
     pub raw_bytes: usize,
     /// Container bytes summed over ranks.
     pub compressed_bytes: usize,
-    /// What an mp×pp fleet would block for: the slowest rank.
+    /// What the training loop blocked for: the last rank to finish its
+    /// commit (encode runs pooled across ranks, so this is effectively
+    /// the save's wall time on this host).
     pub simulated_parallel: Duration,
+    /// Wall time of the pooled encode phase alone (all ranks' tensors
+    /// through the worker pool) — the number `bench_pipeline` races
+    /// across worker counts.
+    pub encode_wall: Duration,
+    /// Worker-pool size that encoded this save.
+    pub encode_workers: usize,
 }
 
 impl ShardedSaveReport {
@@ -100,6 +124,8 @@ pub struct ShardedCheckpointEngine {
     parallelism: Parallelism,
     engines: Vec<CheckpointEngine>,
     storage: Storage,
+    /// Encode worker pool shared by every rank's save work.
+    pool: EncodePool,
 }
 
 impl ShardedCheckpointEngine {
@@ -130,11 +156,21 @@ impl ShardedCheckpointEngine {
             };
             engines.push(CheckpointEngine::with_policy_source(rank_cfg, make_source(rank))?);
         }
-        Ok(Self { parallelism: cfg.parallelism, engines, storage: cfg.storage })
+        Ok(Self {
+            parallelism: cfg.parallelism,
+            engines,
+            storage: cfg.storage,
+            pool: EncodePool::new(cfg.persist),
+        })
     }
 
     pub fn parallelism(&self) -> Parallelism {
         self.parallelism
+    }
+
+    /// The encode worker-pool shape this engine saves through.
+    pub fn persist_config(&self) -> PersistConfig {
+        self.pool.config()
     }
 
     pub fn engines(&self) -> &[CheckpointEngine] {
@@ -148,20 +184,26 @@ impl ShardedCheckpointEngine {
         }
     }
 
-    /// Shard the full state dict and save every rank's shard through its
-    /// own engine (plan → compress → shm → async persist), then write the
-    /// iteration's manifest. Base cadence is identical on every rank (same
+    /// Shard the full state dict and save it through the three-phase
+    /// pipeline — **plan** (per-rank policy sources probe their own
+    /// shard), **encode** (every (rank, tensor) is one work item on the
+    /// bounded worker pool; results return in submission order, so the
+    /// containers are byte-identical to a serial encode), **commit**
+    /// (serialize → shm → async persist per rank, then the iteration's
+    /// manifest). Base cadence is identical on every rank (same
     /// `max_cached_iteration`, same save sequence), so the per-rank delta
-    /// chains stay aligned.
+    /// chains stay aligned. An encode failure aborts before any commit:
+    /// no counters move, nothing is staged, the engine stays reusable.
     pub fn save(
         &mut self,
         iteration: u64,
         sd: &StateDict,
     ) -> Result<ShardedSaveReport, CompressError> {
+        let t0 = Instant::now();
         // verify fleet-wide cadence agreement BEFORE any rank stages
-        // bytes — a prior save that failed mid-loop advanced some ranks'
-        // counters but not others, and saving through that would write a
-        // mixed base/delta iteration
+        // bytes — a prior save that failed mid-commit advanced some
+        // ranks' counters but not others, and saving through that would
+        // write a mixed base/delta iteration
         let will_base = self.engines[0].next_save_is_base();
         if self.engines.iter().any(|e| e.next_save_is_base() != will_base) {
             return Err(CompressError::Format(
@@ -171,22 +213,61 @@ impl ShardedCheckpointEngine {
             ));
         }
         let shards = shard_state_dict(sd, self.parallelism);
-        let mut per_rank = Vec::with_capacity(shards.len());
+        // phase 1 — plan
+        let mut preps = Vec::with_capacity(shards.len());
         for (rank, shard) in shards.iter().enumerate() {
-            per_rank.push(self.engines[rank].save(iteration, shard)?);
+            preps.push(self.engines[rank].begin_save(iteration, shard));
         }
-        let is_base = per_rank[0].is_base;
-        let base_iteration = per_rank[0].base_iteration;
-        // second line of defense: refuse to write a manifest that would
-        // misdescribe part of the fleet (delta chains anchored at
-        // different bases). Recovery skips manifest-less iterations, so
-        // this save degrades to a recoverable no-op, not a brick.
-        if per_rank.iter().any(|r| r.is_base != is_base || r.base_iteration != base_iteration) {
+        let base_iteration = preps[0].base_iteration;
+        // second line of defense: refuse to encode a fleet whose delta
+        // chains anchor at different bases. Nothing is staged yet, so
+        // this failure is a clean no-op.
+        if preps.iter().any(|p| p.is_base != will_base || p.base_iteration != base_iteration) {
             return Err(CompressError::Format(
                 "rank delta chains anchor at different base iterations; \
                  rebuild the engine before saving again"
                     .into(),
             ));
+        }
+        // phase 2 — encode through the worker pool, one job per tensor,
+        // in (rank, entry) submission order
+        let t_enc = Instant::now();
+        let mut jobs = Vec::new();
+        for (rank, shard) in shards.iter().enumerate() {
+            let prep = &preps[rank];
+            let base = if prep.is_base { None } else { self.engines[rank].base_state() };
+            let plan = &prep.plan;
+            for e in shard.entries() {
+                jobs.push(move || {
+                    let t = Instant::now();
+                    compress_entry_planned(&e.name, e.kind, &e.tensor, base, plan)
+                        .map(|(c, tm)| (c, tm, t.elapsed()))
+                });
+            }
+        }
+        let encoded = self.pool.run(jobs)?;
+        let encode_wall = t_enc.elapsed();
+        // phase 3 — reassemble per-rank containers in entry order and
+        // commit each rank
+        let encode_workers = self.pool.workers();
+        let mut encoded = encoded.into_iter();
+        let mut per_rank = Vec::with_capacity(shards.len());
+        for (rank, prep) in preps.into_iter().enumerate() {
+            let shard = &shards[rank];
+            let mut entries = Vec::with_capacity(shard.len());
+            let mut timings = CompressTimings::default();
+            let mut encode = Duration::ZERO;
+            for e in shard.entries() {
+                let (compressed, tm, item_wall) = encoded.next().expect("one result per job");
+                timings.add(&tm);
+                // summed per-item wall = serial-equivalent encode time:
+                // keeps the calibration's implied bytes/sec per-worker
+                encode += item_wall;
+                entries.push(CompressedEntry { name: e.name.clone(), kind: e.kind, compressed });
+            }
+            let ckpt = CompressedCheckpoint { entries, iteration, base_iteration };
+            let enc = EncodedSave { ckpt, timings, encode, encode_workers };
+            per_rank.push(self.engines[rank].commit_encoded(prep, shard, enc, t0)?);
         }
         let manifest = build_manifest(sd, self.parallelism, iteration, base_iteration, &per_rank)?;
         self.storage.put_manifest(iteration, &container::serialize_manifest(&manifest))?;
@@ -194,11 +275,13 @@ impl ShardedCheckpointEngine {
         let simulated_parallel = per_rank.iter().map(|r| r.blocking).max().unwrap_or_default();
         Ok(ShardedSaveReport {
             iteration,
-            is_base,
+            is_base: will_base,
             per_rank,
             raw_bytes: sd.total_bytes(),
             compressed_bytes,
             simulated_parallel,
+            encode_wall,
+            encode_workers,
         })
     }
 
@@ -364,6 +447,9 @@ mod tests {
             redundancy: 3,
             policy,
             max_cached_iteration: max_cached,
+            // honors BITSNAP_TEST_WORKERS: the CI thread matrix runs this
+            // whole module at workers ∈ {1, 4}
+            persist: PersistConfig::from_env(),
         }
     }
 
@@ -511,6 +597,24 @@ mod tests {
         let (iter, recovered) = eng.recover_latest().unwrap().unwrap();
         assert_eq!(iter, 20, "manifest-less iteration must be skipped");
         assert_dicts_equal(&at_20, &recovered);
+        cleanup(&cfg_copy);
+    }
+
+    #[test]
+    fn persist_config_flows_into_the_engine_and_reports() {
+        let p = Parallelism::new(2, 1);
+        let mut cfg = setup("poolcfg", p, Policy::lossless(), 3);
+        cfg.persist = PersistConfig { workers: 2, queue_depth: 1 };
+        let cfg_copy = cfg.clone();
+        let mut eng = ShardedCheckpointEngine::new(cfg).unwrap();
+        assert_eq!(eng.persist_config(), PersistConfig { workers: 2, queue_depth: 1 });
+        let sd = StateDict::synthetic_gpt(1 << 13, 14);
+        let r = eng.save(0, &sd).unwrap();
+        assert_eq!(r.encode_workers, 2);
+        assert!(r.encode_wall > Duration::ZERO);
+        eng.flush().unwrap();
+        let loaded = eng.load_iteration(0).unwrap();
+        assert_dicts_equal(&sd, &loaded);
         cleanup(&cfg_copy);
     }
 

@@ -57,7 +57,9 @@ fn print_help() {
          SUBCOMMANDS\n\
            train         --model gpt-nano --steps 50 --save-every 10 [--policy bitsnap|lossless|raw]\n\
                          [--adaptive] [--target-ratio 3.0] [--mp 2] [--pp 2] [--out results/run]\n\
-                         [--redundancy 2] [--max-cached 5] (needs a build with --features xla)\n\
+                         [--redundancy 2] [--max-cached 5] [--workers N] (encode worker pool;\n\
+                         default = available cores; output is byte-identical for any N)\n\
+                         (needs a build with --features xla)\n\
            compress      --params 1048576 [--change-rate 0.15] [--policy bitsnap|lossless]\n\
            inspect       --dir <storage root> | --histogram --model gpt-nano --steps 20\n\
            adapt-report  [--params 1048576] [--saves 9] [--write-bps 3.5e9] [--measure]\n\
@@ -73,7 +75,7 @@ fn print_help() {
 #[cfg(feature = "xla")]
 fn cmd_train(args: &Args) -> Result<(), String> {
     use bitsnap::adapt::{AdaptivePolicy, Calibration, CostModel, SharedCalibration};
-    use bitsnap::engine::{ShardedCheckpointEngine, ShardedEngineConfig};
+    use bitsnap::engine::{PersistConfig, ShardedCheckpointEngine, ShardedEngineConfig};
     use bitsnap::runtime::{default_artifacts_dir, PjrtRuntime};
     use bitsnap::train::{Parallelism, Trainer};
 
@@ -87,15 +89,24 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     let mp: usize = args.get_parse("mp").unwrap_or(1);
     let pp: usize = args.get_parse("pp").unwrap_or(1);
     let parallelism = Parallelism::new(mp.max(1), pp.max(1));
+    // --workers N pins the encode pool; default = available cores (the
+    // pooled encode is byte-identical to serial, so this only moves
+    // wall-clock)
+    let persist = match parse_opt_flag::<usize>(args, "workers")? {
+        Some(w) => PersistConfig::with_workers(w),
+        None => PersistConfig::from_env(),
+    };
 
     let rt = PjrtRuntime::cpu(default_artifacts_dir()).map_err(|e| e.to_string())?;
     let mut trainer = Trainer::new(rt, model, 1).map_err(|e| e.to_string())?;
     println!(
-        "model {model}: {:.2}M params, seq {}, batch {}, checkpoint layout {}",
+        "model {model}: {:.2}M params, seq {}, batch {}, checkpoint layout {}, \
+         encode workers {}",
         trainer.manifest().param_count() as f64 / 1e6,
         trainer.manifest().seq,
         trainer.manifest().batch,
-        parallelism.label()
+        parallelism.label(),
+        persist.workers
     );
     let storage = Storage::new(format!("{out}/storage")).map_err(|e| e.to_string())?;
     let cfg = ShardedEngineConfig {
@@ -106,18 +117,21 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         redundancy,
         policy,
         max_cached_iteration: max_cached,
+        persist,
     }
     .with_env_overrides();
     let mut engine = if args.has("adaptive") {
         // one controller per rank probing its own shard; throughput
         // knowledge is pooled through the shared calibration. The
         // user-level --target-ratio becomes the cluster search's ratio
-        // floor on every rank.
+        // floor on every rank, and the cost model knows the encode pool
+        // width so predicted save times stop assuming serial encode.
         let target_ratio: Option<f64> = parse_opt_flag(args, "target-ratio")?;
         let write_bps = cfg.storage.throttle_bps();
+        let workers = persist.workers;
         let shared = SharedCalibration::new(Calibration::measure(1 << 18));
         ShardedCheckpointEngine::with_policy_sources(cfg, move |_| {
-            let cost = CostModel::shared(shared.clone(), write_bps);
+            let cost = CostModel::shared(shared.clone(), write_bps).with_encode_workers(workers);
             let acfg = bitsnap::adapt::AdaptiveConfig { target_ratio, ..Default::default() };
             Box::new(AdaptivePolicy::new(acfg, cost))
         })
@@ -481,7 +495,7 @@ fn cmd_table1() -> Result<(), String> {
 /// the sharded engine, tear one rank's newest shard in both tiers, then
 /// run the all-gather recovery and a resharding restore.
 fn cmd_recover_sharded(args: &Args) -> Result<(), String> {
-    use bitsnap::engine::{ShardedCheckpointEngine, ShardedEngineConfig};
+    use bitsnap::engine::{PersistConfig, ShardedCheckpointEngine, ShardedEngineConfig};
     use bitsnap::tensor::StateDict;
     use bitsnap::train::{shard_state_dict, Parallelism};
 
@@ -501,6 +515,7 @@ fn cmd_recover_sharded(args: &Args) -> Result<(), String> {
         redundancy: 4,
         policy: Policy::lossless(),
         max_cached_iteration: 2,
+        persist: PersistConfig::from_env(),
     };
     let mut eng = ShardedCheckpointEngine::new(cfg).map_err(|e| e.to_string())?;
 

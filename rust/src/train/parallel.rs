@@ -190,6 +190,7 @@ pub fn compress_sharded_planned<S: PolicySource>(
             raw_bytes: shard.total_bytes(),
             compressed_bytes: payload,
             encode,
+            encode_workers: 1,
             blocking: t_rank.elapsed(),
         });
         compressed_bytes += payload;

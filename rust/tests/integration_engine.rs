@@ -114,6 +114,7 @@ fn sharded_engine_save_restore_reshard_lifecycle() {
         redundancy: 4,
         policy: Policy::lossless(),
         max_cached_iteration: 3,
+        persist: bitsnap::engine::PersistConfig::from_env(),
     };
     let mut eng = ShardedCheckpointEngine::new(cfg).unwrap();
 

@@ -1,0 +1,171 @@
+//! Parallel persist pipeline, end to end through the sharded engine:
+//! the determinism guarantee (worker count never changes a byte of
+//! `.bsnp`/`.bsnm` output), clean failure behaviour (a failed encode
+//! leaves the engine reusable, counters untouched), and the tightest
+//! legal backpressure configuration (`queue_depth = 1`).
+
+use bitsnap::adapt::{PolicySource, SaveContext};
+use bitsnap::compress::delta::{CheckpointPlan, Policy, TensorDirective};
+use bitsnap::compress::{CodecId, CodecSpec, CompressError};
+use bitsnap::engine::{PersistConfig, ShardedCheckpointEngine, ShardedEngineConfig, Storage};
+use bitsnap::tensor::StateDict;
+use bitsnap::train::Parallelism;
+use std::path::PathBuf;
+
+struct Roots {
+    shm: PathBuf,
+    store: PathBuf,
+}
+
+fn roots(tag: &str) -> Roots {
+    let pid = std::process::id();
+    let shm = std::env::temp_dir().join(format!("bsnp-pipe-shm-{tag}-{pid}"));
+    let store = std::env::temp_dir().join(format!("bsnp-pipe-store-{tag}-{pid}"));
+    let _ = std::fs::remove_dir_all(&shm);
+    let _ = std::fs::remove_dir_all(&store);
+    Roots { shm, store }
+}
+
+fn cleanup(r: &Roots) {
+    let _ = std::fs::remove_dir_all(&r.shm);
+    let _ = std::fs::remove_dir_all(&r.store);
+}
+
+fn config(tag: &str, p: Parallelism, persist: PersistConfig, r: &Roots) -> ShardedEngineConfig {
+    ShardedEngineConfig {
+        job: tag.into(),
+        parallelism: p,
+        shm_root: r.shm.clone(),
+        storage: Storage::new(&r.store).unwrap(),
+        redundancy: 3,
+        policy: Policy::bitsnap(),
+        max_cached_iteration: 2,
+        persist,
+    }
+}
+
+/// Drive a fixed save trajectory and return every persisted artifact's
+/// bytes: (iteration, rank) shard containers plus each manifest.
+fn run_trajectory(tag: &str, p: Parallelism, persist: PersistConfig) -> Vec<(String, Vec<u8>)> {
+    let r = roots(tag);
+    let cfg = config(tag, p, persist, &r);
+    let storage = cfg.storage.clone();
+    let mut eng = ShardedCheckpointEngine::new(cfg).unwrap();
+    let mut sd = StateDict::synthetic_gpt(1 << 13, 99);
+    let iters = [10u64, 20, 30, 40];
+    for (i, iter) in iters.into_iter().enumerate() {
+        sd.perturb_model_states(0.05, 500 + i as u64);
+        let report = eng.save(iter, &sd).unwrap();
+        assert_eq!(report.encode_workers, persist.workers);
+    }
+    eng.flush().unwrap();
+    let mut out = Vec::new();
+    for iter in iters {
+        for rank in 0..p.world() {
+            out.push((format!("iter{iter}/rank{rank}.bsnp"), storage.get(iter, rank).unwrap()));
+        }
+        out.push((format!("iter{iter}/manifest.bsnm"), storage.get_manifest(iter).unwrap()));
+    }
+    drop(eng);
+    cleanup(&r);
+    out
+}
+
+#[test]
+fn concurrent_saves_are_bit_identical_across_worker_counts() {
+    let p = Parallelism::new(2, 2);
+    let reference = run_trajectory("det-w1", p, PersistConfig { workers: 1, queue_depth: 1 });
+    for workers in [2usize, 8] {
+        let got = run_trajectory(
+            &format!("det-w{workers}"),
+            p,
+            PersistConfig { workers, queue_depth: 2 * workers },
+        );
+        assert_eq!(reference.len(), got.len());
+        for ((name_a, bytes_a), (name_b, bytes_b)) in reference.iter().zip(&got) {
+            assert_eq!(name_a, name_b);
+            assert_eq!(
+                bytes_a, bytes_b,
+                "{name_a} differs between workers=1 and workers={workers}"
+            );
+        }
+    }
+}
+
+/// A policy source that plans normally except at one iteration, where it
+/// emits a directive the encode dispatch must reject (`ClusterQuant` is
+/// not a delta codec) — simulating an encode-phase failure on a worker.
+struct PoisonOnce {
+    fail_iteration: u64,
+}
+
+impl PolicySource for PoisonOnce {
+    fn plan(&mut self, ctx: &SaveContext<'_>) -> CheckpointPlan {
+        let mut plan = CheckpointPlan::uniform(Policy::lossless());
+        if ctx.iteration == self.fail_iteration {
+            plan.set(
+                "layers.0.weight#mp0",
+                TensorDirective::Delta(CodecSpec::of(CodecId::ClusterQuant)),
+            );
+        }
+        plan
+    }
+
+    fn describe(&self) -> String {
+        format!("poison-once(@{})", self.fail_iteration)
+    }
+}
+
+#[test]
+fn failed_encode_leaves_engine_reusable_and_cadence_intact() {
+    let p = Parallelism::new(2, 1);
+    let r = roots("poison");
+    let mut cfg = config("poison", p, PersistConfig { workers: 4, queue_depth: 2 }, &r);
+    cfg.max_cached_iteration = 3;
+    let mut eng = ShardedCheckpointEngine::with_policy_sources(cfg, |_| {
+        Box::new(PoisonOnce { fail_iteration: 20 })
+    })
+    .unwrap();
+    let mut sd = StateDict::synthetic_gpt(1 << 12, 7);
+    let r10 = eng.save(10, &sd).unwrap();
+    assert!(r10.is_base);
+    // the poisoned save fails during encode — before any rank committed
+    sd.perturb_model_states(0.05, 8);
+    let err = eng.save(20, &sd).unwrap_err();
+    assert!(matches!(&err, CompressError::Format(_)), "{err:?}");
+    // the engine is immediately reusable and the delta chain is intact:
+    // iteration 30 is the *second* save after the base, not a fresh base
+    sd.perturb_model_states(0.05, 9);
+    let r30 = eng.save(30, &sd).unwrap();
+    assert!(!r30.is_base, "failed save must not advance the cadence");
+    assert_eq!(r30.per_rank[0].base_iteration, 10);
+    eng.flush().unwrap();
+    let loaded = eng.load_iteration(30).unwrap();
+    assert_eq!(loaded.len(), sd.len());
+    for (a, b) in sd.entries().iter().zip(loaded.entries()) {
+        assert_eq!(a.tensor, b.tensor, "{}", a.name);
+    }
+    // nothing for the failed iteration reached either tier
+    assert!(!eng.engines()[0].shm().has(20));
+    assert!(eng.manifest(20).is_err());
+    cleanup(&r);
+}
+
+#[test]
+fn queue_depth_one_backpressure_saves_and_restores() {
+    let p = Parallelism::new(2, 2);
+    let r = roots("qd1");
+    let cfg = config("qd1", p, PersistConfig { workers: 3, queue_depth: 1 }, &r);
+    let mut eng = ShardedCheckpointEngine::new(cfg).unwrap();
+    let mut sd = StateDict::synthetic_gpt(1 << 13, 42);
+    eng.save(10, &sd).unwrap();
+    sd.perturb_model_states(0.1, 43);
+    eng.save(20, &sd).unwrap();
+    eng.flush().unwrap();
+    let loaded = eng.load_iteration(20).unwrap();
+    assert_eq!(loaded.len(), sd.len());
+    for (a, b) in sd.entries().iter().zip(loaded.entries()) {
+        assert_eq!(a.tensor, b.tensor, "{}", a.name);
+    }
+    cleanup(&r);
+}
