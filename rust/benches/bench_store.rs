@@ -1,0 +1,324 @@
+//! Content-addressed store vs the per-rank-blob layout on a
+//! tied-embedding mp=4 workload.
+//!
+//! All arms drive the same base+delta save trajectory (tied `wte` /
+//! `lm_head` embeddings, optimizer states untouched between saves — the
+//! redundancy profile real training has) through
+//! [`ShardedCheckpointEngine`]. Hard assertions:
+//!
+//! * **Dedup wins bytes**: the CAS layout stores *strictly* fewer
+//!   physical bytes than [`Storage::plain`]'s one-opaque-file-per-rank
+//!   layout on the identical trajectory.
+//! * **Determinism**: the CAS layout's physical bytes are identical at
+//!   workers=1 and workers=4 (the pooled encode emits hashed blobs;
+//!   parallelism must not move a byte).
+//! * **GC is chain-aware and lossless**: after `RetentionPolicy
+//!   { keep_last: 1 }` collects the old chain, the surviving delta still
+//!   restores bit-exactly on a cold engine (its base was retained by
+//!   chain closure, not luck).
+//! * **Reshard-aware delta chains**: restarting the fleet under a
+//!   different (mp, pp) with [`ShardedCheckpointEngine::adopt_resharded`]
+//!   makes the *first* post-restart save a delta (not a fresh base), and
+//!   that cross-layout chain round-trips bit-exactly.
+//!
+//! Emits `BENCH_store.json` (override with env `BENCH_OUT`); the CI
+//! bench-regression gate checks the dedup-ratio floor, byte ceilings and
+//! the equal-bytes arms against `bench_baselines/BENCH_store.json`.
+//!
+//! Run: `cargo bench --bench bench_store` (env N for dict size, MP/PP
+//! for the layout)
+
+use std::path::{Path, PathBuf};
+
+use bitsnap::bench::{fmt_bytes, Table};
+use bitsnap::compress::delta::Policy;
+use bitsnap::engine::{PersistConfig, ShardedCheckpointEngine, ShardedEngineConfig, Storage};
+use bitsnap::store::RetentionPolicy;
+use bitsnap::tensor::{HostTensor, StateDict, StateKind, XorShiftRng};
+use bitsnap::train::Parallelism;
+
+const SAVES: [u64; 4] = [10, 20, 30, 40];
+const MAX_CACHED: u64 = 2;
+
+/// A GPT-ish dict with tied input/output embeddings (`wte.weight` ==
+/// `lm_head.weight`), the canonical cross-rank duplicate payload.
+fn tied_dict(params: usize, seed: u64) -> StateDict {
+    let core = StateDict::synthetic_gpt(params, seed);
+    let mut rng = XorShiftRng::new(seed ^ 0xE3BD);
+    let embed = rng.normal_vec(params / 2, 0.0, 0.02);
+    let wte = HostTensor::from_f32_as_f16(&[params / 2], &embed).unwrap();
+    let mut sd = StateDict::new();
+    sd.push("wte.weight", StateKind::ModelState, wte.clone());
+    for e in core.entries() {
+        sd.push(e.name.clone(), e.kind, e.tensor.clone());
+    }
+    sd.push("lm_head.weight", StateKind::ModelState, wte);
+    sd
+}
+
+/// Perturb model states, then re-tie the embeddings (tied weights get
+/// the same updates in real training).
+fn perturb_tied(sd: &mut StateDict, fraction: f64, seed: u64) {
+    sd.perturb_model_states(fraction, seed);
+    let wte = sd.get("wte.weight").unwrap().tensor.clone();
+    for e in sd.entries_mut() {
+        if e.name == "lm_head.weight" {
+            e.tensor = wte;
+            break;
+        }
+    }
+}
+
+fn assert_dicts_equal(a: &StateDict, b: &StateDict) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.entries().iter().zip(b.entries()) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.tensor, y.tensor, "{}", x.name);
+    }
+}
+
+/// Recursive physical size of a directory tree in bytes.
+fn du(path: &Path) -> u64 {
+    let mut total = 0;
+    let Ok(entries) = std::fs::read_dir(path) else { return 0 };
+    for entry in entries.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            total += du(&p);
+        } else if let Ok(meta) = entry.metadata() {
+            total += meta.len();
+        }
+    }
+    total
+}
+
+fn roots(tag: &str) -> (PathBuf, PathBuf) {
+    let pid = std::process::id();
+    let shm = std::env::temp_dir().join(format!("bench-store-shm-{tag}-{pid}"));
+    let store = std::env::temp_dir().join(format!("bench-store-store-{tag}-{pid}"));
+    let _ = std::fs::remove_dir_all(&shm);
+    let _ = std::fs::remove_dir_all(&store);
+    (shm, store)
+}
+
+fn cleanup(shm: &Path, store: &Path) {
+    let _ = std::fs::remove_dir_all(shm);
+    let _ = std::fs::remove_dir_all(store);
+}
+
+struct ArmOutcome {
+    /// Bytes on disk under the storage root after the trajectory.
+    physical_bytes: u64,
+    /// Store census (CAS arms only carry a meaningful dedup ratio).
+    dedup_ratio: f64,
+    final_state: StateDict,
+    storage: Storage,
+    shm_root: PathBuf,
+    store_root: PathBuf,
+}
+
+/// Drive the shared trajectory through one storage layout.
+fn run_arm(params: usize, p: Parallelism, workers: usize, plain: bool) -> ArmOutcome {
+    let tag = format!("{}-w{workers}", if plain { "plain" } else { "cas" });
+    let (shm_root, store_root) = roots(&tag);
+    let storage = if plain {
+        Storage::plain(&store_root).unwrap()
+    } else {
+        Storage::new(&store_root).unwrap()
+    };
+    let cfg = ShardedEngineConfig {
+        job: format!("bench-store-{tag}"),
+        parallelism: p,
+        shm_root: shm_root.clone(),
+        storage: storage.clone(),
+        redundancy: 2,
+        policy: Policy::lossless(),
+        max_cached_iteration: MAX_CACHED,
+        persist: PersistConfig::with_workers(workers),
+    };
+    let mut eng = ShardedCheckpointEngine::new(cfg).unwrap();
+    let mut sd = tied_dict(params, 1);
+    for (i, iter) in SAVES.into_iter().enumerate() {
+        perturb_tied(&mut sd, 0.05, 900 + i as u64);
+        eng.save(iter, &sd).unwrap();
+    }
+    eng.flush().unwrap();
+    drop(eng);
+    let stats = storage.stats().unwrap();
+    ArmOutcome {
+        physical_bytes: du(&store_root),
+        dedup_ratio: stats.dedup_ratio(),
+        final_state: sd,
+        storage,
+        shm_root,
+        store_root,
+    }
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let params = env_usize("N", 1 << 20);
+    let mp = env_usize("MP", 4);
+    let pp = env_usize("PP", 1);
+    let p = Parallelism::new(mp.max(1), pp.max(1));
+    println!(
+        "== content-addressed store: {params}-param tied-embedding dict under {}, {} saves ==\n",
+        p.label(),
+        SAVES.len()
+    );
+
+    let plain = run_arm(params, p, 1, true);
+    let cas_w1 = run_arm(params, p, 1, false);
+    let cas_w4 = run_arm(params, p, 4, false);
+
+    // determinism: the dedup'd layout is byte-identical across worker counts
+    assert_eq!(
+        cas_w1.physical_bytes, cas_w4.physical_bytes,
+        "encode workers must not change the store's physical layout"
+    );
+    // the whole point: CAS strictly beats the per-rank-blob layout
+    assert!(
+        cas_w1.physical_bytes < plain.physical_bytes,
+        "CAS must store strictly fewer bytes ({} vs {})",
+        cas_w1.physical_bytes,
+        plain.physical_bytes
+    );
+
+    let mut table = Table::new(&["layout", "workers", "physical bytes", "dedup ratio"]);
+    for (label, workers, arm) in
+        [("plain", 1, &plain), ("cas", 1, &cas_w1), ("cas", 4, &cas_w4)]
+    {
+        table.row(&[
+            label.to_string(),
+            workers.to_string(),
+            fmt_bytes(arm.physical_bytes as usize),
+            if label == "plain" { "-".to_string() } else { format!("{:.2}x", arm.dedup_ratio) },
+        ]);
+    }
+    table.print();
+
+    // --- GC: chain-aware retention, bit-exact restore after collection ---
+    let report = cas_w1.storage.gc(&RetentionPolicy::keep_last(1)).unwrap();
+    assert!(
+        report.deleted_blobs > 0 && !report.pruned_iterations.is_empty(),
+        "the old chain must actually be collected: {report:?}"
+    );
+    assert!(
+        report.live_iterations.contains(&SAVES[SAVES.len() - 2]),
+        "chain closure must retain the kept delta's base: {report:?}"
+    );
+    let (cold_shm, _cold_store) = roots("cold");
+    let cold_cfg = ShardedEngineConfig {
+        job: "bench-store-cold".into(),
+        parallelism: p,
+        shm_root: cold_shm.clone(),
+        storage: cas_w1.storage.clone(),
+        redundancy: 2,
+        policy: Policy::lossless(),
+        max_cached_iteration: MAX_CACHED,
+        persist: PersistConfig::with_workers(1),
+    };
+    let cold = ShardedCheckpointEngine::new(cold_cfg).unwrap();
+    let restored = cold.load_iteration(SAVES[SAVES.len() - 1]).unwrap();
+    assert_dicts_equal(&cas_w1.final_state, &restored);
+    drop(cold);
+    let _ = std::fs::remove_dir_all(&cold_shm);
+    println!(
+        "\ngc keep-last=1: pruned {:?}, {} blobs / {} reclaimed; restore after GC bit-exact",
+        report.pruned_iterations,
+        report.deleted_blobs,
+        fmt_bytes(report.reclaimed_bytes as usize)
+    );
+
+    // --- reshard-aware delta chains ---
+    let (rs_shm, rs_store) = roots("reshard");
+    let rs_storage = Storage::new(&rs_store).unwrap();
+    let rs_cfg = ShardedEngineConfig {
+        job: "bench-store-reshard-a".into(),
+        parallelism: p,
+        shm_root: rs_shm.clone(),
+        storage: rs_storage.clone(),
+        redundancy: 2,
+        policy: Policy::lossless(),
+        max_cached_iteration: 8,
+        persist: PersistConfig::with_workers(1),
+    };
+    let mut rs_eng = ShardedCheckpointEngine::new(rs_cfg).unwrap();
+    let mut rs_sd = tied_dict(params, 2);
+    rs_eng.save(10, &rs_sd).unwrap();
+    perturb_tied(&mut rs_sd, 0.05, 77);
+    rs_eng.save(20, &rs_sd).unwrap();
+    rs_eng.flush().unwrap();
+    drop(rs_eng);
+    // restart under a reshaped layout with a fresh shm (new hosts):
+    // mp4 pp1 -> mp2 pp2 by default
+    let new_p = if p.mp >= 2 {
+        Parallelism::new(p.mp / 2, p.pp * 2)
+    } else {
+        Parallelism::new(p.mp * 2, 1.max(p.pp / 2))
+    };
+    let (rs_shm2, _unused) = roots("reshard2");
+    let rs_cfg2 = ShardedEngineConfig {
+        job: "bench-store-reshard-b".into(),
+        parallelism: new_p,
+        shm_root: rs_shm2.clone(),
+        storage: rs_storage.clone(),
+        redundancy: 2,
+        policy: Policy::lossless(),
+        max_cached_iteration: 8,
+        persist: PersistConfig::with_workers(1),
+    };
+    let mut rs_eng2 = ShardedCheckpointEngine::new(rs_cfg2).unwrap();
+    let adopted = rs_eng2.adopt_resharded(20).unwrap();
+    assert_dicts_equal(&rs_sd, &adopted);
+    let mut rs_sd2 = adopted.clone();
+    perturb_tied(&mut rs_sd2, 0.05, 78);
+    let r = rs_eng2.save(30, &rs_sd2).unwrap();
+    assert!(!r.is_base, "the first save after a reshard must be a delta, not a fresh base");
+    rs_eng2.flush().unwrap();
+    let m = rs_eng2.manifest(30).unwrap();
+    assert_eq!((m.mp, m.pp), (new_p.mp, new_p.pp));
+    assert_eq!(m.base_iteration, 10, "the chain anchors at the pre-reshard base");
+    let back = rs_eng2.load_iteration(30).unwrap();
+    assert_dicts_equal(&rs_sd2, &back);
+    drop(rs_eng2);
+    println!(
+        "reshard {} -> {}: first save is a delta (base {}), round-trip bit-exact",
+        p.label(),
+        new_p.label(),
+        m.base_iteration
+    );
+    cleanup(&rs_shm, &rs_store);
+    let _ = std::fs::remove_dir_all(&rs_shm2);
+
+    let dedup_ratio = cas_w1.dedup_ratio;
+    println!(
+        "\nplain {} vs cas {} ({:.2}x dedup)",
+        fmt_bytes(plain.physical_bytes as usize),
+        fmt_bytes(cas_w1.physical_bytes as usize),
+        dedup_ratio
+    );
+
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_store.json".to_string());
+    let json = format!(
+        "{{\n  \"params\": {params},\n  \"mp\": {mp},\n  \"pp\": {pp},\n  \"saves\": {},\n  \
+         \"plain_bytes\": {},\n  \"cas_bytes\": {},\n  \"dedup_ratio\": {dedup_ratio:.4},\n  \
+         \"arms\": [\n    {{\"workers\": 1, \"compressed_bytes\": {}}},\n    {{\"workers\": 4, \
+         \"compressed_bytes\": {}}}\n  ],\n  \"identical_output\": true,\n  \
+         \"gc_restore_bit_exact\": true,\n  \"reshard_first_save_is_delta\": true\n}}\n",
+        SAVES.len(),
+        plain.physical_bytes,
+        cas_w1.physical_bytes,
+        cas_w1.physical_bytes,
+        cas_w4.physical_bytes,
+    );
+    std::fs::write(&out_path, json).expect("write bench json");
+    println!("wrote {out_path}");
+
+    for arm in [&plain, &cas_w1, &cas_w4] {
+        cleanup(&arm.shm_root, &arm.store_root);
+    }
+}

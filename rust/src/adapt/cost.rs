@@ -15,7 +15,7 @@
 //! The controller minimizes total save seconds; payload bytes double as
 //! the storage-footprint tiebreak.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 
 use crate::compress::{bitmask, cluster_quant, coo, CodecId, CodecSpec};
@@ -299,6 +299,28 @@ impl CostModel {
         }
     }
 
+    /// Total predicted payload bytes for a set of per-tensor codec
+    /// picks, **dedup-aware**: tensors whose
+    /// [`TensorProbe::payload_identity`] coincides are predicted to
+    /// produce byte-identical payloads (tied embeddings, frozen layers,
+    /// unchanged optimizer tensors), which the content-addressed store
+    /// writes once — so they are priced once. The plain per-tensor sum
+    /// ([`CostModel::predicted_bytes`]) overcounts exactly the payloads
+    /// the store dedups. The planner flags the same identity per record
+    /// ([`crate::adapt::policy::DecisionRecord::deduped`]); this is the
+    /// aggregate form for report tooling that starts from picks rather
+    /// than a decision log.
+    pub fn predicted_unique_bytes(&self, picks: &[(CodecSpec, &TensorProbe)]) -> usize {
+        let mut seen: HashSet<(u64, usize, usize, CodecSpec)> = HashSet::new();
+        let mut total = 0usize;
+        for &(spec, p) in picks {
+            if seen.insert(p.payload_identity(spec)) {
+                total += self.predicted_bytes(spec, p);
+            }
+        }
+        total
+    }
+
     /// Full cost estimate for `spec` on the probed tensor. Encode
     /// throughput is calibrated per codec *family* — parameters move the
     /// payload size, not the order-of-magnitude encode speed — and
@@ -445,6 +467,27 @@ mod tests {
         assert_eq!(nvme.best(&candidates, &p).spec.id, CodecId::Raw);
         let nvme8 = nvme.clone().with_encode_workers(8);
         assert_eq!(nvme8.best(&candidates, &p).spec.id, CodecId::BitmaskPacked);
+    }
+
+    #[test]
+    fn predicted_unique_bytes_counts_duplicate_shards_once() {
+        let (base, curr) = perturbed_pair(10_000, 800);
+        let p = exact_probe(&base, &curr);
+        let m = CostModel::new(Calibration::default_host(), None);
+        let spec = CodecSpec::of(CodecId::BitmaskPacked);
+        let one = m.predicted_bytes(spec, &p);
+        // a tied pair (same probe twice) prices as one payload
+        let deduped = m.predicted_unique_bytes(&[(spec, &p), (spec, &p)]);
+        assert_eq!(deduped, one);
+        // same content under a *different* spec is a different payload
+        let raw = CodecSpec::raw();
+        let both = m.predicted_unique_bytes(&[(spec, &p), (raw, &p)]);
+        assert_eq!(both, one + m.predicted_bytes(raw, &p));
+        // genuinely different content is summed
+        let (base2, curr2) = perturbed_pair(10_000, 2500);
+        let p2 = exact_probe(&base2, &curr2);
+        let sum = m.predicted_unique_bytes(&[(spec, &p), (spec, &p2)]);
+        assert_eq!(sum, one + m.predicted_bytes(spec, &p2));
     }
 
     #[test]

@@ -161,6 +161,15 @@ pub struct DecisionRecord {
     /// Whether this choice replaced a different incumbent spec (a
     /// parameter change alone counts — retuning is a switch).
     pub switched: bool,
+    /// An earlier tensor in the same save is **predicted** to produce a
+    /// byte-identical payload (same sampled-content fingerprint, size,
+    /// delta profile and spec — see
+    /// [`crate::adapt::TensorProbe::payload_identity`]), which the
+    /// content-addressed store would write once — this record's
+    /// `predicted_bytes` is therefore 0 and `predicted_secs` carries the
+    /// encode leg only (the write is free). Like every probe-derived
+    /// quantity this is a sampled prediction, not a store guarantee.
+    pub deduped: bool,
 }
 
 /// Per-save aggregate of the decision log.
@@ -382,8 +391,11 @@ impl AdaptivePolicy {
         p: &TensorProbe,
         spec: CodecSpec,
         switched: bool,
+        deduped: bool,
     ) {
         let est = self.cost.estimate(spec, p);
+        // the tensor is still *encoded* even when its payload dedups, so
+        // the throughput-calibration feedback always includes it
         self.pending_encode
             .entry(iteration)
             .or_default()
@@ -394,10 +406,11 @@ impl AdaptivePolicy {
             name: p.name.clone(),
             kind: p.kind,
             spec,
-            predicted_bytes: est.bytes,
-            predicted_secs: est.total_secs(),
+            predicted_bytes: if deduped { 0 } else { est.bytes },
+            predicted_secs: if deduped { est.encode_secs } else { est.total_secs() },
             raw_bytes: p.raw_bytes(),
             switched,
+            deduped,
         });
         if self.decisions.len() > self.cfg.max_history {
             let excess = self.decisions.len() - self.cfg.max_history;
@@ -416,6 +429,9 @@ impl PolicySource for AdaptivePolicy {
         });
         let stage = self.detector.stage();
         let mut plan = CheckpointPlan::uniform(self.cfg.fallback);
+        // payload-identity dedup within this save: the CAS stores
+        // byte-identical payloads once, so predicted bytes count them once
+        let mut seen_payloads: HashSet<(u64, usize, usize, CodecSpec)> = HashSet::new();
         for p in &probes {
             let (spec, switched) = match p.kind {
                 StateKind::ModelState => self.decide_model(p, ctx.base.is_some()),
@@ -428,7 +444,8 @@ impl PolicySource for AdaptivePolicy {
                 s => TensorDirective::Quantize(s),
             };
             plan.set(p.name.clone(), directive);
-            self.record_decision(ctx.iteration, stage, p, spec, switched);
+            let deduped = !seen_payloads.insert(p.payload_identity(spec));
+            self.record_decision(ctx.iteration, stage, p, spec, switched, deduped);
         }
         plan
     }
@@ -817,6 +834,41 @@ mod tests {
             "the user ratio floor caps the cluster count"
         );
         assert!(policy.describe().contains("target 3.00x"), "{}", policy.describe());
+    }
+
+    #[test]
+    fn tied_tensors_are_priced_once() {
+        use crate::tensor::HostTensor;
+        // a dict with tied embeddings: two identical model-state tensors
+        let n = 1 << 14;
+        let mut rng = crate::tensor::XorShiftRng::new(50);
+        let vals = rng.normal_vec(n, 0.0, 0.02);
+        let tied = HostTensor::from_f32_as_f16(&[n], &vals).unwrap();
+        let mut sd = StateDict::new();
+        sd.push("wte.weight", StateKind::ModelState, tied.clone());
+        sd.push("lm_head.weight", StateKind::ModelState, tied);
+        let mut policy = AdaptivePolicy::default_host();
+        policy.plan(&ctx(0, &sd, None));
+        let records = policy.decisions();
+        assert_eq!(records.len(), 2);
+        assert!(!records[0].deduped);
+        assert!(records[1].deduped, "the tied twin must dedup");
+        assert_eq!(records[1].predicted_bytes, 0);
+        let sums = policy.summaries();
+        assert_eq!(
+            sums[0].predicted_bytes, records[0].predicted_bytes,
+            "the pair is priced as one payload"
+        );
+        // predicted_secs still charges the twin's encode leg
+        assert!(records[1].predicted_secs > 0.0);
+        // a genuinely different tensor is priced in full
+        let mut sd2 = StateDict::new();
+        let other = HostTensor::from_f32_as_f16(&[n], &rng.normal_vec(n, 0.0, 0.02)).unwrap();
+        sd2.push("wte.weight", StateKind::ModelState, sd.entries()[0].tensor.clone());
+        sd2.push("head.weight", StateKind::ModelState, other);
+        let mut policy2 = AdaptivePolicy::default_host();
+        policy2.plan(&ctx(0, &sd2, None));
+        assert!(policy2.decisions().iter().all(|d| !d.deduped));
     }
 
     #[test]

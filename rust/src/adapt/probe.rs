@@ -16,6 +16,8 @@
 
 use std::collections::HashMap;
 
+use crate::compress::CodecSpec;
+use crate::store::Hasher64;
 use crate::tensor::{bf16_to_f32, f16_to_f32, DType, HostTensor, StateDict, StateKind};
 
 /// Probe sampling parameters.
@@ -58,6 +60,13 @@ pub struct TensorProbe {
     pub byte_entropy: f64,
     /// Whether any sampled value was ±inf or NaN.
     pub has_non_finite: bool,
+    /// 64-bit digest of the sampled bytes. Tensors with identical
+    /// content (tied embeddings, frozen layers) sample identical
+    /// positions — the stride phase depends only on the probe seed — so
+    /// their fingerprints collide, which is how the cost model stops
+    /// double-counting payloads the content-addressed store will write
+    /// once ([`crate::adapt::CostModel::predicted_unique_bytes`]).
+    pub content_fingerprint: u64,
 }
 
 impl TensorProbe {
@@ -75,6 +84,20 @@ impl TensorProbe {
             return self.elems;
         }
         (self.changed_in_sample * self.elems).div_ceil(self.sampled)
+    }
+
+    /// The identity under which two probed tensors are **predicted** to
+    /// produce byte-identical payloads for `spec`: same sampled content,
+    /// same size, same delta profile, same codec spec. It is a
+    /// *prediction* — built from the strided sample, blind to the delta
+    /// base's content — so rare false positives are possible; the
+    /// store's full-payload hashes remain the authority on what actually
+    /// dedups. This is the single definition both
+    /// [`crate::adapt::CostModel::predicted_unique_bytes`] and the
+    /// planner's per-save dedup flagging key on, so the two predictions
+    /// at least never disagree with each other.
+    pub fn payload_identity(&self, spec: CodecSpec) -> (u64, usize, usize, CodecSpec) {
+        (self.content_fingerprint, self.elems, self.changed_in_sample, spec)
     }
 }
 
@@ -110,11 +133,13 @@ pub fn probe_tensor(
     let mut vmin = f32::INFINITY;
     let mut vmax = f32::NEG_INFINITY;
     let mut non_finite = false;
+    let mut fingerprint = Hasher64::new();
 
     let mut i = phase;
     while i < n {
         let off = i * es;
         let eb = &curr_bytes[off..off + es];
+        fingerprint.update(eb);
         for &b in eb {
             freq[b as usize] += 1;
         }
@@ -167,6 +192,7 @@ pub fn probe_tensor(
         value_max: vmax,
         byte_entropy,
         has_non_finite: non_finite,
+        content_fingerprint: fingerprint.finish(),
     }
 }
 
@@ -276,6 +302,29 @@ mod tests {
         let b = HostTensor::from_f32(&[5], &[1., 2., 3., 4., 5.]).unwrap();
         let p = probe_tensor("t", StateKind::Other, &t, Some(&b), &ProbeConfig::default());
         assert_eq!(p.delta_density, None);
+    }
+
+    #[test]
+    fn identical_tensors_share_a_fingerprint_distinct_ones_do_not() {
+        let mut rng = XorShiftRng::new(9);
+        let vals = rng.normal_vec(1 << 12, 0.0, 0.02);
+        let a = HostTensor::from_f32_as_f16(&[1 << 12], &vals).unwrap();
+        let tied = a.clone();
+        let cfg = ProbeConfig::default();
+        let pa = probe_tensor("wte", StateKind::ModelState, &a, None, &cfg);
+        let pt = probe_tensor("lm_head", StateKind::ModelState, &tied, None, &cfg);
+        assert_eq!(
+            pa.content_fingerprint, pt.content_fingerprint,
+            "tied tensors must fingerprint identically"
+        );
+        let mut other = a.clone();
+        // flip a wide stretch so the strided sample is guaranteed to see
+        // a difference whatever the phase
+        for i in 0..256 {
+            other.bytes_mut()[2 * i] ^= 0x40;
+        }
+        let po = probe_tensor("other", StateKind::ModelState, &other, None, &cfg);
+        assert_ne!(pa.content_fingerprint, po.content_fingerprint);
     }
 
     #[test]

@@ -31,6 +31,7 @@ use crate::compress::delta::{
     CompressedCheckpoint, Policy,
 };
 use crate::compress::CompressError;
+use crate::store::BlobKey;
 use crate::tensor::StateDict;
 
 use super::container;
@@ -109,6 +110,11 @@ pub struct SaveReport {
     /// Codec spec actually written per entry (parameters included), in
     /// container order — what a sharded save records into its manifest.
     pub entry_specs: Vec<(String, crate::compress::CodecSpec)>,
+    /// Content key of every entry's encoded payload, in container order —
+    /// hashed during the encode phase (on the worker pool for sharded
+    /// saves), recorded into the version-3 manifest, and identical to
+    /// what the storage layer computes when it blobs the payloads.
+    pub entry_blobs: Vec<(String, BlobKey)>,
 }
 
 impl SaveReport {
@@ -137,6 +143,10 @@ pub struct PlannedSave {
 #[derive(Clone, Debug)]
 pub struct EncodedSave {
     pub ckpt: CompressedCheckpoint,
+    /// Content key per entry, in entry order — emitted by the encode
+    /// phase (each pooled worker hashes the payload it just produced, so
+    /// the blocking commit path never rescans the bytes).
+    pub blobs: Vec<BlobKey>,
     pub timings: CompressTimings,
     /// Serial-equivalent encode time: the *sum* of per-tensor encode
     /// wall times, regardless of how many workers ran them. This is what
@@ -300,8 +310,22 @@ impl CheckpointEngine {
         enc: EncodedSave,
         started: Instant,
     ) -> Result<SaveReport, CompressError> {
+        if enc.blobs.len() != enc.ckpt.entries.len() {
+            return Err(CompressError::Engine(format!(
+                "encoded save carries {} blob keys for {} entries",
+                enc.blobs.len(),
+                enc.ckpt.entries.len()
+            )));
+        }
         let payload_bytes = enc.ckpt.payload_bytes();
         let entry_specs = enc.ckpt.entry_specs();
+        let entry_blobs: Vec<(String, BlobKey)> = enc
+            .ckpt
+            .entries
+            .iter()
+            .zip(&enc.blobs)
+            .map(|(e, &k)| (e.name.clone(), k))
+            .collect();
         let bytes = container::serialize(&enc.ckpt);
         self.shm.put(prep.iteration, &bytes, prep.is_base)?;
         self.tx
@@ -322,6 +346,7 @@ impl CheckpointEngine {
             raw_bytes: sd.total_bytes(),
             compressed_bytes: bytes.len(),
             entry_specs,
+            entry_blobs,
         };
         // the policy source sees payload bytes (what its cost model
         // predicts), not the container length with framing and CRC
@@ -350,9 +375,24 @@ impl CheckpointEngine {
         let t_enc = Instant::now();
         let (ckpt, timings) =
             compress_state_dict_planned(sd, base, &prep.plan, iteration, prep.base_iteration)?;
+        let blobs = ckpt.entries.iter().map(|e| BlobKey::of(&e.compressed.payload)).collect();
         let encode = t_enc.elapsed();
-        let enc = EncodedSave { ckpt, timings, encode, encode_workers: 1 };
+        let enc = EncodedSave { ckpt, blobs, timings, encode, encode_workers: 1 };
         self.commit_encoded(prep, sd, enc, t0)
+    }
+
+    /// Seed the delta chain from a restored checkpoint instead of forcing
+    /// a fresh base: the next save deltas against `base` exactly as if
+    /// this engine had written it at `base_iteration` itself. This is the
+    /// per-rank half of reshard-aware delta chains — after an
+    /// (mp, pp) → (mp′, pp′) restart the sharded engine hands every new
+    /// rank its *resliced* cut of the old base
+    /// ([`super::ShardedCheckpointEngine::adopt_resharded`]), so the
+    /// first post-restart save is a delta whose base blobs resolve
+    /// through the CAS rather than a redundant full base.
+    pub fn adopt_base(&mut self, base_iteration: u64, base: StateDict) {
+        self.base = Some((base_iteration, base));
+        self.saves_since_base = 1;
     }
 
     /// Block until the agent has drained every queued persist.

@@ -24,15 +24,38 @@
 //! The reader keeps a legacy path that assigns those entries their
 //! historical default parameters ([`CodecSpec::of`]), so old checkpoints
 //! load bit-exactly.
+//!
+//! **Version 3** is the content-addressed *stub* form persistent storage
+//! writes: identical header and entry metadata, but each entry carries a
+//! [`BlobKey`] (64-bit content hash + length) instead of its payload —
+//! the payload lives in the [`crate::store::BlobStore`], written once no
+//! matter how many entries, ranks or iterations share it. Stubs never
+//! appear in shm (staging stays inline so recovery needs no blob
+//! resolution); [`crate::engine::Storage`] converts on the way down and
+//! back up.
 
 use crate::compress::delta::{CompressedCheckpoint, CompressedEntry};
 use crate::compress::{CodecId, CodecParams, CodecSpec, CompressError, CompressedTensor};
+use crate::store::BlobKey;
 use crate::tensor::{DType, StateKind};
 
 pub const MAGIC: &[u8; 4] = b"BSNP";
 pub const VERSION: u32 = 2;
 /// PR-2-era container version: entry headers carry a bare codec tag.
 pub const VERSION_LEGACY: u32 = 1;
+/// Content-addressed stub container: entries reference payloads by
+/// [`BlobKey`] instead of carrying them inline.
+pub const VERSION_CAS: u32 = 3;
+
+/// Peek a container's format version without CRC-verifying it (`None`
+/// when the bytes are too short or the magic is foreign) — how storage
+/// routes between the inline, stub and verbatim read paths.
+pub fn peek_version(data: &[u8]) -> Option<u32> {
+    if data.len() < 8 || &data[..4] != MAGIC {
+        return None;
+    }
+    Some(u32::from_le_bytes(data[4..8].try_into().unwrap()))
+}
 
 /// CRC-64/ECMA-182 (poly 0x42F0E1EBA9EA3693), table-driven.
 pub fn crc64(data: &[u8]) -> u64 {
@@ -187,6 +210,13 @@ pub fn deserialize(data: &[u8]) -> Result<CompressedCheckpoint, CompressError> {
         return Err(CompressError::Format("bad magic".into()));
     }
     let version = r.u32()?;
+    if version == VERSION_CAS {
+        return Err(CompressError::Format(
+            "version 3 container is a content-addressed stub; resolve it through Storage \
+             (deserialize_cas + blob fetch)"
+                .into(),
+        ));
+    }
     if version != VERSION && version != VERSION_LEGACY {
         return Err(CompressError::Format(format!("unsupported version {version}")));
     }
@@ -232,10 +262,182 @@ pub fn deserialize(data: &[u8]) -> Result<CompressedCheckpoint, CompressError> {
     Ok(ckpt)
 }
 
+/// One entry of a content-addressed (version 3) container: everything a
+/// [`CompressedEntry`] records except the payload, which lives in the
+/// blob store under `key`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CasEntry {
+    pub name: String,
+    pub kind: StateKind,
+    pub dtype: DType,
+    pub spec: CodecSpec,
+    pub shape: Vec<usize>,
+    pub key: BlobKey,
+}
+
+/// A content-addressed stub container: the checkpoint's metadata with
+/// every payload externalized into the blob store.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CasContainer {
+    pub iteration: u64,
+    pub base_iteration: u64,
+    pub entries: Vec<CasEntry>,
+}
+
+impl CasContainer {
+    pub fn is_base(&self) -> bool {
+        self.iteration == self.base_iteration
+    }
+
+    /// Derive the stub form of an inline checkpoint (hashing every
+    /// payload).
+    pub fn of(ckpt: &CompressedCheckpoint) -> Self {
+        let entries = ckpt
+            .entries
+            .iter()
+            .map(|e| CasEntry {
+                name: e.name.clone(),
+                kind: e.kind,
+                dtype: e.compressed.dtype,
+                spec: e.compressed.spec,
+                shape: e.compressed.shape.clone(),
+                key: BlobKey::of(&e.compressed.payload),
+            })
+            .collect();
+        Self { iteration: ckpt.iteration, base_iteration: ckpt.base_iteration, entries }
+    }
+
+    /// Rebuild the inline checkpoint by fetching every payload through
+    /// `fetch` (the blob store's verified read).
+    pub fn resolve(
+        &self,
+        mut fetch: impl FnMut(&BlobKey) -> Result<Vec<u8>, CompressError>,
+    ) -> Result<CompressedCheckpoint, CompressError> {
+        let mut entries = Vec::with_capacity(self.entries.len());
+        for e in &self.entries {
+            let payload = fetch(&e.key)?;
+            if payload.len() as u64 != e.key.len {
+                return Err(CompressError::Format(format!(
+                    "blob {} resolved to {} bytes",
+                    e.key,
+                    payload.len()
+                )));
+            }
+            entries.push(CompressedEntry {
+                name: e.name.clone(),
+                kind: e.kind,
+                compressed: CompressedTensor {
+                    spec: e.spec,
+                    dtype: e.dtype,
+                    shape: e.shape.clone(),
+                    payload,
+                },
+            });
+        }
+        Ok(CompressedCheckpoint {
+            entries,
+            iteration: self.iteration,
+            base_iteration: self.base_iteration,
+        })
+    }
+
+    /// Keys of every referenced blob, in entry order (with multiplicity).
+    pub fn keys(&self) -> Vec<BlobKey> {
+        self.entries.iter().map(|e| e.key).collect()
+    }
+}
+
+/// Serialize a stub container (version 3; layout mirrors the inline
+/// form, with `blob hash u64 | blob len u64` in place of
+/// `payload_len | payload`).
+pub fn serialize_cas(c: &CasContainer) -> Vec<u8> {
+    let mut out = Vec::with_capacity(96 * c.entries.len() + 64);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION_CAS.to_le_bytes());
+    out.extend_from_slice(&c.iteration.to_le_bytes());
+    out.extend_from_slice(&c.base_iteration.to_le_bytes());
+    out.push(if c.is_base() { 0 } else { 1 });
+    out.extend_from_slice(&(c.entries.len() as u32).to_le_bytes());
+    for e in &c.entries {
+        let name = e.name.as_bytes();
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name);
+        out.push(e.kind.tag());
+        out.push(e.dtype.tag());
+        out.push(e.spec.id.tag());
+        write_params(&mut out, e.spec.params);
+        out.push(e.shape.len() as u8);
+        for &d in &e.shape {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        out.extend_from_slice(&e.key.hash.to_le_bytes());
+        out.extend_from_slice(&e.key.len.to_le_bytes());
+    }
+    let crc = crc64(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Deserialize and CRC-verify a stub container.
+pub fn deserialize_cas(data: &[u8]) -> Result<CasContainer, CompressError> {
+    if data.len() < 4 + 4 + 8 + 8 + 1 + 4 + 8 {
+        return Err(CompressError::Format("stub container too short".into()));
+    }
+    let (body, trailer) = data.split_at(data.len() - 8);
+    let stored_crc = u64::from_le_bytes(trailer.try_into().unwrap());
+    if crc64(body) != stored_crc {
+        return Err(CompressError::Format("stub container crc mismatch".into()));
+    }
+    let mut r = Reader { data: body, pos: 0 };
+    if r.take(4)? != MAGIC {
+        return Err(CompressError::Format("bad magic".into()));
+    }
+    let version = r.u32()?;
+    if version != VERSION_CAS {
+        return Err(CompressError::Format(format!("not a stub container (version {version})")));
+    }
+    let iteration = r.u64()?;
+    let base_iteration = r.u64()?;
+    let kind_flag = r.u8()?;
+    let n_entries = r.u32()? as usize;
+    let mut entries = Vec::with_capacity(n_entries);
+    for _ in 0..n_entries {
+        let name_len = r.u16()? as usize;
+        let name = String::from_utf8(r.take(name_len)?.to_vec())
+            .map_err(|_| CompressError::Format("bad entry name".into()))?;
+        let kind = StateKind::from_tag(r.u8()?)
+            .ok_or_else(|| CompressError::Format("bad state kind".into()))?;
+        let dtype = DType::from_tag(r.u8()?)
+            .ok_or_else(|| CompressError::Format("bad dtype".into()))?;
+        let spec = read_spec(&mut r)?;
+        let ndim = r.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u64()? as usize);
+        }
+        let key = BlobKey { hash: r.u64()?, len: r.u64()? };
+        entries.push(CasEntry { name, kind, dtype, spec, shape, key });
+    }
+    if r.pos != body.len() {
+        return Err(CompressError::Format("trailing bytes in stub container".into()));
+    }
+    let c = CasContainer { iteration, base_iteration, entries };
+    let expect_flag = if c.is_base() { 0 } else { 1 };
+    if kind_flag != expect_flag {
+        return Err(CompressError::Format("kind flag inconsistent with iterations".into()));
+    }
+    Ok(c)
+}
+
 pub const MANIFEST_MAGIC: &[u8; 4] = b"BSNM";
 pub const MANIFEST_VERSION: u32 = 2;
 /// PR-2-era manifest version: per-rank codecs are bare tags.
 pub const MANIFEST_VERSION_LEGACY: u32 = 1;
+/// Content-addressed manifest version: entries additionally record the
+/// per-rank payload [`BlobKey`]s, so cross-rank dedup (tied embeddings
+/// saved by several ranks resolving to one blob) is visible — and
+/// auditable — at the manifest level without reading any rank container.
+pub const MANIFEST_VERSION_CAS: u32 = 3;
 
 /// One global tensor's record in a sharded-checkpoint manifest: where its
 /// slices live (pipeline stage + mp boundaries) and how each rank encoded
@@ -255,6 +457,11 @@ pub struct ManifestEntry {
     /// parameters included, so recovery tooling can audit cluster
     /// counts/thresholds without re-reading the rank containers.
     pub codecs: Vec<CodecSpec>,
+    /// Content key of each mp rank's encoded payload (index = mp rank).
+    /// Filled by CAS-era saves (len == mp, making the manifest version
+    /// 3); empty when the manifest predates the store — the rank
+    /// containers remain authoritative either way.
+    pub blobs: Vec<BlobKey>,
 }
 
 impl ManifestEntry {
@@ -295,10 +502,15 @@ impl ShardManifest {
 }
 
 /// Serialize a shard manifest (layout mirrors the container format).
+/// Writes version 3 when every entry carries its per-rank blob keys
+/// (CAS-era saves), version 2 otherwise — so manifests without blob
+/// information stay byte-identical to what PR-4 wrote.
 pub fn serialize_manifest(m: &ShardManifest) -> Vec<u8> {
+    let with_blobs = !m.entries.is_empty() && m.entries.iter().all(|e| e.blobs.len() == m.mp);
+    let version = if with_blobs { MANIFEST_VERSION_CAS } else { MANIFEST_VERSION };
     let mut out = Vec::with_capacity(64 + 96 * m.entries.len());
     out.extend_from_slice(MANIFEST_MAGIC);
-    out.extend_from_slice(&MANIFEST_VERSION.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&m.iteration.to_le_bytes());
     out.extend_from_slice(&m.base_iteration.to_le_bytes());
     out.extend_from_slice(&(m.mp as u32).to_le_bytes());
@@ -321,6 +533,12 @@ pub fn serialize_manifest(m: &ShardManifest) -> Vec<u8> {
         for &c in &e.codecs {
             out.push(c.id.tag());
             write_params(&mut out, c.params);
+        }
+        if with_blobs {
+            for k in &e.blobs {
+                out.extend_from_slice(&k.hash.to_le_bytes());
+                out.extend_from_slice(&k.len.to_le_bytes());
+            }
         }
     }
     let crc = crc64(&out);
@@ -347,7 +565,10 @@ pub fn deserialize_manifest(data: &[u8]) -> Result<ShardManifest, CompressError>
         return Err(CompressError::Format("bad manifest magic".into()));
     }
     let version = r.u32()?;
-    if version != MANIFEST_VERSION && version != MANIFEST_VERSION_LEGACY {
+    if version != MANIFEST_VERSION_CAS
+        && version != MANIFEST_VERSION
+        && version != MANIFEST_VERSION_LEGACY
+    {
         return Err(CompressError::Format(format!("unsupported manifest version {version}")));
     }
     let iteration = r.u64()?;
@@ -395,7 +616,14 @@ pub fn deserialize_manifest(data: &[u8]) -> Result<ShardManifest, CompressError>
             };
             codecs.push(spec);
         }
-        entries.push(ManifestEntry { name, kind, dtype, shape, stage, bounds, codecs });
+        let mut blobs = Vec::new();
+        if version == MANIFEST_VERSION_CAS {
+            blobs.reserve(mp);
+            for _ in 0..mp {
+                blobs.push(BlobKey { hash: r.u64()?, len: r.u64()? });
+            }
+        }
+        entries.push(ManifestEntry { name, kind, dtype, shape, stage, bounds, codecs, blobs });
     }
     if r.pos != body.len() {
         return Err(CompressError::Format("trailing bytes in manifest".into()));
@@ -503,6 +731,7 @@ mod tests {
                     stage: 0,
                     bounds: vec![0, 32, 64],
                     codecs: vec![CodecSpec::of(CodecId::BitmaskPacked), CodecSpec::raw()],
+                    blobs: vec![],
                 },
                 ManifestEntry {
                     name: "optimizer.0.master".into(),
@@ -512,6 +741,7 @@ mod tests {
                     stage: 1,
                     bounds: vec![0, 32, 64],
                     codecs: vec![CodecSpec::cluster_quant(64), CodecSpec::cluster_quant(16)],
+                    blobs: vec![],
                 },
             ],
         }
@@ -553,5 +783,94 @@ mod tests {
         let mut m = sample_manifest();
         m.entries[1].stage = 2;
         assert!(deserialize_manifest(&serialize_manifest(&m)).is_err());
+    }
+
+    #[test]
+    fn cas_stub_roundtrips_and_resolves() {
+        use std::collections::HashMap;
+        let ckpt = ckpt(5, 120, 100);
+        let stub = CasContainer::of(&ckpt);
+        assert!(!stub.is_base());
+        assert_eq!(stub.entries.len(), ckpt.entries.len());
+        let bytes = serialize_cas(&stub);
+        assert_eq!(peek_version(&bytes), Some(VERSION_CAS));
+        let back = deserialize_cas(&bytes).unwrap();
+        assert_eq!(back, stub);
+        // a stub is not an inline container — the strict reader refuses
+        // with a pointer at the resolution path
+        let err = deserialize(&bytes).unwrap_err();
+        assert!(err.to_string().contains("content-addressed"), "{err}");
+        // resolving through a payload table reproduces the checkpoint
+        let table: HashMap<BlobKey, Vec<u8>> = ckpt
+            .entries
+            .iter()
+            .map(|e| (BlobKey::of(&e.compressed.payload), e.compressed.payload.clone()))
+            .collect();
+        let resolved = stub
+            .resolve(|k| {
+                table.get(k).cloned().ok_or_else(|| CompressError::Format("missing".into()))
+            })
+            .unwrap();
+        assert_eq!(serialize(&resolved), serialize(&ckpt), "resolution must be bit-exact");
+        // a fetch returning wrong-length bytes is rejected
+        assert!(stub.resolve(|_| Ok(vec![0u8; 3])).is_err());
+    }
+
+    #[test]
+    fn cas_stub_crc_detects_corruption() {
+        let bytes = serialize_cas(&CasContainer::of(&ckpt(6, 7, 7)));
+        for pos in [0usize, 9, bytes.len() / 2, bytes.len() - 9] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x01;
+            assert!(deserialize_cas(&bad).is_err(), "flip at {pos} undetected");
+        }
+        assert!(deserialize_cas(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn manifest_with_blob_keys_roundtrips_as_version_3() {
+        let mut m = sample_manifest();
+        for (i, e) in m.entries.iter_mut().enumerate() {
+            e.blobs = vec![
+                BlobKey { hash: 0x1111 * (i as u64 + 1), len: 64 },
+                BlobKey { hash: 0x2222 * (i as u64 + 1), len: 64 },
+            ];
+        }
+        let bytes = serialize_manifest(&m);
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), MANIFEST_VERSION_CAS);
+        let back = deserialize_manifest(&bytes).unwrap();
+        assert_eq!(back, m);
+        // identical payloads across ranks are visible as repeated keys
+        let mut tied = sample_manifest();
+        let shared = BlobKey { hash: 0xfeed, len: 32 };
+        for e in tied.entries.iter_mut() {
+            e.blobs = vec![shared, shared];
+        }
+        let back = deserialize_manifest(&serialize_manifest(&tied)).unwrap();
+        assert_eq!(back.entries[0].blobs, vec![shared, shared]);
+    }
+
+    #[test]
+    fn manifest_without_blob_keys_stays_version_2() {
+        // partial blob info (not every entry, or not every rank) must not
+        // produce a half-v3 manifest
+        let bytes = serialize_manifest(&sample_manifest());
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), MANIFEST_VERSION);
+        let mut partial = sample_manifest();
+        partial.entries[0].blobs = vec![BlobKey { hash: 1, len: 2 }]; // len != mp
+        let bytes = serialize_manifest(&partial);
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), MANIFEST_VERSION);
+        let back = deserialize_manifest(&bytes).unwrap();
+        assert!(back.entries.iter().all(|e| e.blobs.is_empty()));
+    }
+
+    #[test]
+    fn peek_version_routes_formats() {
+        assert_eq!(peek_version(&serialize(&ckpt(8, 3, 3))), Some(VERSION));
+        assert_eq!(peek_version(&serialize_cas(&CasContainer::of(&ckpt(8, 3, 3)))), Some(3));
+        assert_eq!(peek_version(b"BSN"), None);
+        assert_eq!(peek_version(b"JUNKJUNK"), None);
+        // manifest magic is a different family
+        assert_eq!(peek_version(&serialize_manifest(&sample_manifest())), None);
     }
 }

@@ -2,7 +2,9 @@
 //!
 //! * [`agent`] — per-rank engine: compress → shm → async persist daemon.
 //! * [`shm`] — shared-memory staging with in-memory redundancy.
-//! * [`storage`] — persistent backend (+ bandwidth model for Table 1/2).
+//! * [`storage`] — persistent backend on the content-addressed store
+//!   (cross-rank/iteration payload dedup, chain-aware GC; + bandwidth
+//!   model for Table 1/2).
 //! * [`tracker`] — Megatron tracker file extended with base-checkpoint
 //!   metadata (paper §4.4).
 //! * [`container`] — the `.bsnp` on-disk/in-shm format with CRC-64, plus
@@ -30,7 +32,8 @@ pub use agent::{CheckpointEngine, EncodedSave, EngineConfig, PlannedSave, SaveRe
 pub use pipeline::{EncodePool, PersistConfig};
 pub use container::{ManifestEntry, ShardManifest};
 pub use recovery::{
-    all_gather_check, reassemble_state_dict, reshard_state_dict, RankView, RecoveryDecision,
+    all_gather_check, decode_rank_shards, reassemble_state_dict, reshard_state_dict, RankView,
+    RecoveryDecision,
 };
 pub use sharded::{ShardedCheckpointEngine, ShardedEngineConfig, ShardedSaveReport};
 pub use shm::ShmStore;

@@ -12,6 +12,7 @@
 //! the full state dict bit-exactly, and [`reshard_state_dict`] reslices it
 //! into a *different* (mp′, pp′) layout — the elastic-restart path.
 
+use crate::compress::delta::{decompress_state_dict, CompressedCheckpoint};
 use crate::compress::CompressError;
 use crate::tensor::{HostTensor, StateDict};
 use crate::train::parallel::{shard_state_dict, Parallelism};
@@ -85,6 +86,43 @@ pub fn apply_pruning(shm: &ShmStore, decision: &RecoveryDecision) -> Result<(), 
         shm.remove(i)?;
     }
     Ok(())
+}
+
+/// Decode every rank's container of one iteration into its shard dict,
+/// resolving delta entries against `base_full` — the **reassembled**
+/// base checkpoint, resliced along this manifest's layout. Giving the
+/// base as a full dict (rather than per-rank base containers) is what
+/// makes delta chains survive a reshard: the base may have been saved
+/// under a different (mp, pp), but its reslice under *this* manifest's
+/// layout is exactly what each rank's delta was (or would have been)
+/// encoded against. `base_full` may be `None` for a base checkpoint;
+/// a delta container will then fail its decode loudly.
+pub fn decode_rank_shards(
+    manifest: &ShardManifest,
+    containers: &[CompressedCheckpoint],
+    base_full: Option<&StateDict>,
+) -> Result<Vec<StateDict>, CompressError> {
+    if containers.len() != manifest.world() {
+        return Err(CompressError::Shape(format!(
+            "manifest expects {} rank containers, got {}",
+            manifest.world(),
+            containers.len()
+        )));
+    }
+    let base_shards =
+        base_full.map(|b| shard_state_dict(b, Parallelism::new(manifest.mp, manifest.pp)));
+    let mut out = Vec::with_capacity(containers.len());
+    for (rank, c) in containers.iter().enumerate() {
+        if c.iteration != manifest.iteration || c.base_iteration != manifest.base_iteration {
+            return Err(CompressError::Format(format!(
+                "rank {rank} container is iteration {} (base {}) but the manifest records \
+                 {} (base {})",
+                c.iteration, c.base_iteration, manifest.iteration, manifest.base_iteration
+            )));
+        }
+        out.push(decompress_state_dict(c, base_shards.as_ref().map(|s| &s[rank]))?);
+    }
+    Ok(out)
 }
 
 /// Reassemble the full state dict from per-rank shard dicts (indexed
@@ -206,6 +244,7 @@ mod tests {
                 stage: entry_stage(ei, sd.len(), p.pp),
                 bounds: shard_bounds(e.tensor.len(), p.mp),
                 codecs: vec![crate::compress::CodecSpec::raw(); p.mp],
+                blobs: vec![],
             })
             .collect();
         ShardManifest { iteration, base_iteration: iteration, mp: p.mp, pp: p.pp, entries }

@@ -33,16 +33,20 @@ use std::time::{Duration, Instant};
 
 use crate::adapt::{PolicySource, StaticPolicySource};
 use crate::compress::delta::{
-    compress_entry_planned, CompressTimings, CompressedCheckpoint, CompressedEntry, Policy,
+    compress_entry_planned, decompress_state_dict, CompressTimings, CompressedCheckpoint,
+    CompressedEntry, Policy,
 };
 use crate::compress::{CodecSpec, CompressError};
+use crate::store::BlobKey;
 use crate::tensor::StateDict;
 use crate::train::parallel::{entry_stage, shard_bounds, shard_state_dict, Parallelism};
 
 use super::agent::{AgentStats, CheckpointEngine, EncodedSave, EngineConfig, SaveReport};
 use super::container::{self, ManifestEntry, ShardManifest};
 use super::pipeline::{EncodePool, PersistConfig};
-use super::recovery::{all_gather_check, apply_pruning, reassemble_state_dict, RankView};
+use super::recovery::{
+    all_gather_check, apply_pruning, decode_rank_shards, reassemble_state_dict, RankView,
+};
 use super::storage::Storage;
 
 /// Configuration of a sharded engine: one [`EngineConfig`]'s worth of
@@ -240,8 +244,11 @@ impl ShardedCheckpointEngine {
             for e in shard.entries() {
                 jobs.push(move || {
                     let t = Instant::now();
+                    // the worker hashes the payload it just produced, so
+                    // the manifest's blob keys (and the storage layer's
+                    // dedup) cost nothing on the blocking commit path
                     compress_entry_planned(&e.name, e.kind, &e.tensor, base, plan)
-                        .map(|(c, tm)| (c, tm, t.elapsed()))
+                        .map(|(c, tm)| (BlobKey::of(&c.payload), c, tm, t.elapsed()))
                 });
             }
         }
@@ -255,18 +262,21 @@ impl ShardedCheckpointEngine {
         for (rank, prep) in preps.into_iter().enumerate() {
             let shard = &shards[rank];
             let mut entries = Vec::with_capacity(shard.len());
+            let mut blobs = Vec::with_capacity(shard.len());
             let mut timings = CompressTimings::default();
             let mut encode = Duration::ZERO;
             for e in shard.entries() {
-                let (compressed, tm, item_wall) = encoded.next().expect("one result per job");
+                let (key, compressed, tm, item_wall) =
+                    encoded.next().expect("one result per job");
                 timings.add(&tm);
                 // summed per-item wall = serial-equivalent encode time:
                 // keeps the calibration's implied bytes/sec per-worker
                 encode += item_wall;
+                blobs.push(key);
                 entries.push(CompressedEntry { name: e.name.clone(), kind: e.kind, compressed });
             }
             let ckpt = CompressedCheckpoint { entries, iteration, base_iteration };
-            let enc = EncodedSave { ckpt, timings, encode, encode_workers };
+            let enc = EncodedSave { ckpt, blobs, timings, encode, encode_workers };
             per_rank.push(self.engines[rank].commit_encoded(prep, shard, enc, t0)?);
         }
         let manifest = build_manifest(sd, self.parallelism, iteration, base_iteration, &per_rank)?;
@@ -310,23 +320,125 @@ impl ShardedCheckpointEngine {
         container::deserialize_manifest(&self.storage.get_manifest(iteration)?)
     }
 
-    /// Load one iteration on every rank (shm first, storage fallback,
-    /// delta chains resolved per rank) and reassemble the full state dict
-    /// along the manifest's recorded boundaries.
+    /// Load one iteration and reassemble the full state dict along its
+    /// manifest's recorded boundaries — **whatever layout it was saved
+    /// under**. Same-layout iterations read through the rank engines'
+    /// shm fast path; foreign-layout iterations (pre-reshard history)
+    /// read their rank containers straight from storage. Delta chains
+    /// resolve through the manifests, including across a reshard, where
+    /// each rank's delta decodes against the *resliced* base shard.
     pub fn load_iteration(&self, iteration: u64) -> Result<StateDict, CompressError> {
         let manifest = self.manifest(iteration)?;
-        if manifest.world() != self.engines.len() {
-            return Err(CompressError::Format(format!(
-                "manifest records {} ranks but engine runs {}",
-                manifest.world(),
-                self.engines.len()
-            )));
+        self.load_manifest_state(&manifest)
+    }
+
+    /// One rank container of one iteration: shm when the layout matches
+    /// this engine's world (storage fallback), storage otherwise.
+    fn read_rank_container(
+        &self,
+        iteration: u64,
+        rank: usize,
+        world: usize,
+    ) -> Result<CompressedCheckpoint, CompressError> {
+        if world == self.engines.len() && rank < self.engines.len() {
+            let shm = self.engines[rank].shm();
+            if shm.has(iteration) {
+                if let Ok(ckpt) = container::deserialize(&shm.get(iteration)?) {
+                    return Ok(ckpt);
+                }
+            }
         }
-        let mut shards = Vec::with_capacity(self.engines.len());
-        for e in &self.engines {
-            shards.push(e.load_iteration(iteration)?);
+        container::deserialize(&self.storage.get(iteration, rank)?)
+    }
+
+    /// See [`ShardedCheckpointEngine::load_iteration`]. Recursion depth
+    /// equals the delta-chain depth (1 for the base-then-deltas cadence).
+    fn load_manifest_state(&self, manifest: &ShardManifest) -> Result<StateDict, CompressError> {
+        self.load_manifest_state_with_base(manifest).map(|(full, _)| full)
+    }
+
+    /// [`Self::load_manifest_state`], also returning the reassembled
+    /// **base** checkpoint it resolved along the way (`None` when
+    /// `manifest` is itself a base) — so callers that need both, like
+    /// [`ShardedCheckpointEngine::adopt_resharded`], don't pay a second
+    /// full chain load.
+    fn load_manifest_state_with_base(
+        &self,
+        manifest: &ShardManifest,
+    ) -> Result<(StateDict, Option<StateDict>), CompressError> {
+        let base_full = if manifest.is_base() {
+            None
+        } else {
+            if manifest.base_iteration >= manifest.iteration {
+                return Err(CompressError::Format(format!(
+                    "manifest {} chains to a non-older base {}",
+                    manifest.iteration, manifest.base_iteration
+                )));
+            }
+            match self.manifest(manifest.base_iteration) {
+                Ok(base_manifest) => Some(self.load_manifest_state(&base_manifest)?),
+                // the base's own manifest is lost or torn, but its rank
+                // containers (and blobs) may be fine — fall back to
+                // resolving the base under *this* manifest's layout,
+                // which is correct whenever base and delta share it
+                // (always true except across a reshard, where a
+                // wrong-layout base surfaces as a loud shape error)
+                Err(_) => Some(self.load_base_without_manifest(manifest)?),
+            }
+        };
+        let mut containers = Vec::with_capacity(manifest.world());
+        for rank in 0..manifest.world() {
+            containers.push(self.read_rank_container(manifest.iteration, rank, manifest.world())?);
         }
-        reassemble_state_dict(&manifest, &shards)
+        let shards = decode_rank_shards(manifest, &containers, base_full.as_ref())?;
+        let full = reassemble_state_dict(manifest, &shards)?;
+        Ok((full, base_full))
+    }
+
+    /// Reassemble a delta's base checkpoint from its rank containers
+    /// alone, using the **delta's** manifest for the layout — the
+    /// manifest-less fallback (see
+    /// [`Self::load_manifest_state_with_base`]). Entry names, shapes,
+    /// stages and bounds are identical for every iteration of one layout
+    /// epoch, so the delta's boundaries describe the base too; only the
+    /// per-entry codecs differ, and reassembly never reads those.
+    fn load_base_without_manifest(
+        &self,
+        manifest: &ShardManifest,
+    ) -> Result<StateDict, CompressError> {
+        let mut base_shards = Vec::with_capacity(manifest.world());
+        for rank in 0..manifest.world() {
+            let c = self.read_rank_container(manifest.base_iteration, rank, manifest.world())?;
+            if !c.is_base() || c.iteration != manifest.base_iteration {
+                return Err(CompressError::Format(format!(
+                    "rank {rank}: iteration {} is not the base checkpoint iteration {} chains to",
+                    c.iteration, manifest.iteration
+                )));
+            }
+            base_shards.push(decompress_state_dict(&c, None)?);
+        }
+        reassemble_state_dict(manifest, &base_shards)
+    }
+
+    /// Reshard-aware restart: restore `iteration` (saved under *any*
+    /// layout) and seed every rank of **this** engine's layout with its
+    /// resliced cut of that iteration's base checkpoint, so the first
+    /// save after the restart is a **delta** whose base blobs resolve
+    /// through the content-addressed store — not a redundant fresh base.
+    /// Returns the reassembled full state dict for the trainer to resume
+    /// from (reslice it with
+    /// [`crate::train::parallel::shard_state_dict`] as needed).
+    pub fn adopt_resharded(&mut self, iteration: u64) -> Result<StateDict, CompressError> {
+        let manifest = self.manifest(iteration)?;
+        // one chain load serves both the restored state and the base the
+        // new layout's engines will delta against
+        let (full, base_full) = self.load_manifest_state_with_base(&manifest)?;
+        let base_full = base_full.unwrap_or_else(|| full.clone());
+        let base_shards = shard_state_dict(&base_full, self.parallelism);
+        for (rank, shard) in base_shards.into_iter().enumerate() {
+            self.engines[rank].adopt_base(manifest.base_iteration, shard);
+        }
+        Ok(full)
     }
 
     /// Restore `iteration` into a different (mp′, pp′) layout: the
@@ -393,17 +505,22 @@ fn build_manifest(
     base_iteration: u64,
     per_rank: &[SaveReport],
 ) -> Result<ShardManifest, CompressError> {
-    // index each rank's spec list once — this runs on the blocking save
-    // path, and a linear scan per (entry, rank) would be quadratic
+    // index each rank's spec/blob lists once — this runs on the blocking
+    // save path, and a linear scan per (entry, rank) would be quadratic
     let rank_codecs: Vec<HashMap<&str, CodecSpec>> = per_rank
         .iter()
         .map(|r| r.entry_specs.iter().map(|(n, c)| (n.as_str(), *c)).collect())
+        .collect();
+    let rank_blobs: Vec<HashMap<&str, BlobKey>> = per_rank
+        .iter()
+        .map(|r| r.entry_blobs.iter().map(|(n, k)| (n.as_str(), *k)).collect())
         .collect();
     let n_entries = sd.len();
     let mut entries = Vec::with_capacity(n_entries);
     for (ei, e) in sd.entries().iter().enumerate() {
         let stage = entry_stage(ei, n_entries, p.pp);
         let mut codecs = Vec::with_capacity(p.mp);
+        let mut blobs = Vec::with_capacity(p.mp);
         for r in 0..p.mp {
             let rank = stage * p.mp + r;
             let name = format!("{}#mp{r}", e.name);
@@ -411,6 +528,10 @@ fn build_manifest(
                 CompressError::Format(format!("rank {rank} report missing entry {name}"))
             })?;
             codecs.push(codec);
+            let blob = rank_blobs[rank].get(name.as_str()).copied().ok_or_else(|| {
+                CompressError::Format(format!("rank {rank} report missing blob for {name}"))
+            })?;
+            blobs.push(blob);
         }
         entries.push(ManifestEntry {
             name: e.name.clone(),
@@ -420,6 +541,7 @@ fn build_manifest(
             stage,
             bounds: shard_bounds(e.tensor.len(), p.mp),
             codecs,
+            blobs,
         });
     }
     Ok(ShardManifest { iteration, base_iteration, mp: p.mp, pp: p.pp, entries })
@@ -613,6 +735,89 @@ mod tests {
         assert_eq!(r.encode_workers, 2);
         assert!(r.encode_wall > Duration::ZERO);
         eng.flush().unwrap();
+        let loaded = eng.load_iteration(0).unwrap();
+        assert_dicts_equal(&sd, &loaded);
+        cleanup(&cfg_copy);
+    }
+
+    #[test]
+    fn adopt_resharded_first_save_is_a_delta_and_chains_across_layouts() {
+        // mp2 pp1 trajectory (base 0, delta 10), then an elastic restart
+        // as mp1 pp2 over the same storage with a fresh shm (new hosts)
+        let p = Parallelism::new(2, 1);
+        let cfg = setup("adopt", p, Policy::lossless(), 4);
+        let cfg_copy = cfg.clone();
+        let mut eng = ShardedCheckpointEngine::new(cfg).unwrap();
+        let mut sd = StateDict::synthetic_gpt(1 << 13, 21);
+        eng.save(0, &sd).unwrap();
+        sd.perturb_model_states(0.05, 22);
+        eng.save(10, &sd).unwrap();
+        eng.flush().unwrap();
+        drop(eng);
+
+        let pid = std::process::id();
+        let shm_root2 = std::env::temp_dir().join(format!("bsnp-sharded-shm-adopt2-{pid}"));
+        let _ = fs::remove_dir_all(&shm_root2);
+        let cfg2 = ShardedEngineConfig {
+            job: "adopt2".into(),
+            parallelism: Parallelism::new(1, 2),
+            shm_root: shm_root2.clone(),
+            storage: cfg_copy.storage.clone(),
+            redundancy: 3,
+            policy: Policy::lossless(),
+            max_cached_iteration: 4,
+            persist: PersistConfig::from_env(),
+        };
+        let mut eng2 = ShardedCheckpointEngine::new(cfg2).unwrap();
+        let restored = eng2.adopt_resharded(10).unwrap();
+        assert_dicts_equal(&sd, &restored);
+
+        // the first post-restart save deltas against the resliced base
+        let mut sd2 = restored.clone();
+        sd2.perturb_model_states(0.05, 23);
+        let r = eng2.save(20, &sd2).unwrap();
+        assert!(!r.is_base, "first save after a reshard must be a delta, not a fresh base");
+        assert!(r.per_rank.iter().all(|p| p.base_iteration == 0));
+        eng2.flush().unwrap();
+        let m = eng2.manifest(20).unwrap();
+        assert_eq!((m.mp, m.pp), (1, 2));
+        assert_eq!(m.base_iteration, 0, "the chain anchors at the old-layout base");
+
+        // the cross-layout chain restores bit-exactly...
+        let loaded = eng2.load_iteration(20).unwrap();
+        assert_dicts_equal(&sd2, &loaded);
+        // ...and pre-reshard history stays loadable through the new engine
+        let old = eng2.load_iteration(10).unwrap();
+        assert_dicts_equal(&sd, &old);
+        let _ = fs::remove_dir_all(&shm_root2);
+        cleanup(&cfg_copy);
+    }
+
+    #[test]
+    fn manifests_record_per_rank_blob_keys_and_dedup_tied_payloads() {
+        let p = Parallelism::new(2, 1);
+        let cfg = setup("blobs", p, Policy::lossless(), 5);
+        let cfg_copy = cfg.clone();
+        let mut eng = ShardedCheckpointEngine::new(cfg).unwrap();
+        // two tied entries: identical tensors, so each rank's slices are
+        // identical across the pair and their blob keys must collide
+        let base = StateDict::synthetic_gpt(1 << 12, 31);
+        let mut sd = StateDict::new();
+        let tied = base.entries()[0].tensor.clone();
+        sd.push("wte.weight", crate::tensor::StateKind::ModelState, tied.clone());
+        sd.push("lm_head.weight", crate::tensor::StateKind::ModelState, tied);
+        eng.save(0, &sd).unwrap();
+        eng.flush().unwrap();
+        let m = eng.manifest(0).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert!(m.entries.iter().all(|e| e.blobs.len() == 2));
+        assert_eq!(
+            m.entries[0].blobs, m.entries[1].blobs,
+            "tied embeddings must resolve to the same blobs"
+        );
+        // the storage layer stored each unique slice payload once
+        let stats = cfg_copy.storage.stats().unwrap();
+        assert!(stats.dedup_ratio() > 1.9, "{stats:?}");
         let loaded = eng.load_iteration(0).unwrap();
         assert_dicts_equal(&sd, &loaded);
         cleanup(&cfg_copy);

@@ -2,16 +2,46 @@
 //! save-time model behind the paper's Table 1.
 //!
 //! The backend is a directory tree (`<root>/iter<N>/rank<k>.bsnp`) with
-//! atomic tmp+rename writes. An optional **bandwidth throttle** models the
-//! production situation the paper measures against — a 3.5 GB/s NVMe (or
-//! slower NFS) that is orders of magnitude slower than memory — so the
-//! Table-2 bench reproduces the sync-vs-async *shape* even though this
-//! host's page cache would otherwise absorb small writes instantly.
+//! atomic tmp+rename writes. Since the content-addressed store landed,
+//! the rank files are **version-3 stubs**: entry metadata plus a
+//! [`BlobKey`] per payload, with the payload bytes living once in
+//! `<root>/cas/` ([`crate::store::BlobStore`]) no matter how many ranks,
+//! tensors or iterations share them. `put` runs a **three-phase commit**
+//! — (1) write+pin the payload blobs, (2) publish the stub container,
+//! (3) unpin — so a concurrent [`Storage::gc`] can never collect bytes a
+//! save in flight still needs, and a crash between phases leaves only
+//! unreferenced (collectible) blobs, never a stub with missing payloads.
+//! `get` reconstitutes the inline container bit-exactly; pre-store
+//! inline containers (and their VERSION 1/2 ancestors) are imported into
+//! the CAS on first touch. Bytes that never parsed as a container are
+//! stored verbatim, so the backend still works as a dumb byte sink.
+//!
+//! [`Storage::gc`] is **chain-aware**: a [`RetentionPolicy`] picks the
+//! iterations to keep, the keep set is closed over delta chains (every
+//! rank container is consulted — the old `prune_keep` trusted the first
+//! readable one and could lose a base behind a single torn file), and
+//! only blobs referenced by no live iteration and pinned by no in-flight
+//! save are deleted.
+//!
+//! An optional **bandwidth throttle** models the production situation
+//! the paper measures against — a 3.5 GB/s NVMe (or slower NFS) that is
+//! orders of magnitude slower than memory — so the Table-2 bench
+//! reproduces the sync-vs-async *shape* even though this host's page
+//! cache would otherwise absorb small writes instantly. The throttle
+//! prices the bytes *physically* written, so dedup hits are (correctly)
+//! free.
 
+use std::collections::HashMap;
 use std::fs;
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
+
+use crate::store::gc::{chain_closure, retained, ChainInfo};
+use crate::store::{BlobKey, BlobStore, GcReport, RefCounts, RetentionPolicy, StoreStats};
+
+use super::container::{self, CasContainer, CasEntry};
 
 /// Persistent checkpoint storage rooted at a directory.
 #[derive(Clone, Debug)]
@@ -19,13 +49,28 @@ pub struct Storage {
     root: PathBuf,
     /// Simulated sustained write bandwidth in bytes/sec (None = unthrottled).
     throttle_bps: Option<f64>,
+    /// The content-addressed payload store (`None` = the pre-store plain
+    /// layout, kept for the dedup bench's comparison arm).
+    cas: Option<BlobStore>,
 }
 
 impl Storage {
+    /// Open (creating) CAS-backed storage — the default substrate.
     pub fn new(root: impl Into<PathBuf>) -> std::io::Result<Self> {
         let root = root.into();
         fs::create_dir_all(&root)?;
-        Ok(Self { root, throttle_bps: None })
+        let cas = BlobStore::open(root.join("cas"))?;
+        Ok(Self { root, throttle_bps: None, cas: Some(cas) })
+    }
+
+    /// Open storage **without** content addressing: one opaque container
+    /// file per (iteration, rank), exactly the pre-store layout. Exists
+    /// so `bench_store` can race the two layouts on bytes; production
+    /// code should use [`Storage::new`].
+    pub fn plain(root: impl Into<PathBuf>) -> std::io::Result<Self> {
+        let root = root.into();
+        fs::create_dir_all(&root)?;
+        Ok(Self { root, throttle_bps: None, cas: None })
     }
 
     /// Apply a simulated write-bandwidth cap (see module docs).
@@ -44,6 +89,12 @@ impl Storage {
         &self.root
     }
 
+    /// The content-addressed payload store (`None` under
+    /// [`Storage::plain`]).
+    pub fn blob_store(&self) -> Option<&BlobStore> {
+        self.cas.as_ref()
+    }
+
     fn iter_dir(&self, iteration: u64) -> PathBuf {
         self.root.join(format!("iter{iteration:010}"))
     }
@@ -52,8 +103,85 @@ impl Storage {
         self.iter_dir(iteration).join(format!("rank{rank}.bsnp"))
     }
 
-    /// Persist container bytes. Blocks for the simulated write time when a
-    /// throttle is configured. Returns the wall time spent.
+    /// Atomic tmp+rename write of raw bytes to a rank path. The temp
+    /// name is writer-unique (pid + sequence): import-on-first-touch
+    /// makes `get` a writer too, so two threads reading the same legacy
+    /// file concurrently must not truncate each other's half-written
+    /// temp and rename a torn stub into place.
+    fn write_verbatim(&self, iteration: u64, rank: usize, bytes: &[u8]) -> std::io::Result<usize> {
+        static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
+        let final_path = self.rank_path(iteration, rank);
+        let tmp = final_path.with_extension(format!(
+            "tmp{}-{}",
+            std::process::id(),
+            WRITE_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(bytes)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, &final_path)?;
+        Ok(bytes.len())
+    }
+
+    /// The three-phase CAS write (see module docs): blobs pinned, stub
+    /// published, pins released. Returns the bytes physically written
+    /// (dedup hits are free). Pins are released on every exit path, so a
+    /// failed phase cannot leak pins and wedge GC.
+    fn write_ckpt(
+        &self,
+        iteration: u64,
+        rank: usize,
+        ckpt: &crate::compress::delta::CompressedCheckpoint,
+    ) -> std::io::Result<usize> {
+        let cas = self.cas.as_ref().expect("write_ckpt requires a blob store");
+        let mut pinned: Vec<BlobKey> = Vec::with_capacity(ckpt.entries.len());
+        let result = (|| {
+            let mut physical = 0usize;
+            // phase 1: payloads into the CAS, pinned against concurrent GC
+            let mut entries = Vec::with_capacity(ckpt.entries.len());
+            for e in &ckpt.entries {
+                let (key, written) = cas.put_pinned(&e.compressed.payload)?;
+                pinned.push(key);
+                physical += written;
+                entries.push(CasEntry {
+                    name: e.name.clone(),
+                    kind: e.kind,
+                    dtype: e.compressed.dtype,
+                    spec: e.compressed.spec,
+                    shape: e.compressed.shape.clone(),
+                    key,
+                });
+            }
+            // phase 2: publish the stub that makes the blobs reachable
+            let stub = CasContainer {
+                iteration: ckpt.iteration,
+                base_iteration: ckpt.base_iteration,
+                entries,
+            };
+            physical += self.write_verbatim(iteration, rank, &container::serialize_cas(&stub))?;
+            Ok(physical)
+        })();
+        // phase 3: unpin (GC may now rely on reachability alone)
+        for key in &pinned {
+            let _ = cas.unpin(key);
+        }
+        result
+    }
+
+    /// Persist container bytes. Parseable containers go through the CAS
+    /// (payloads dedup'd into blobs, a version-3 stub at the rank path);
+    /// anything else is stored verbatim. Blocks for the simulated write
+    /// time of the *physically written* bytes when a throttle is
+    /// configured. Returns the wall time spent.
+    ///
+    /// The parse + re-hash here is deliberate, not an oversight: the
+    /// async agent persists from the **shm bytes** (the crash-survivable
+    /// source of truth — after a process restart the daemon can only
+    /// resume from what shm holds), so structured checkpoints and the
+    /// encode workers' blob keys cannot be threaded through. All of it
+    /// runs on the persist daemon, off the training critical path.
     pub fn put(
         &self,
         iteration: u64,
@@ -63,21 +191,20 @@ impl Storage {
     ) -> std::io::Result<Duration> {
         let t0 = Instant::now();
         fs::create_dir_all(self.iter_dir(iteration))?;
-        let final_path = self.rank_path(iteration, rank);
-        let tmp = final_path.with_extension("tmp");
-        {
-            let mut f = fs::File::create(&tmp)?;
-            f.write_all(container)?;
-            f.sync_all()?;
-        }
-        fs::rename(&tmp, &final_path)?;
+        let physical = match &self.cas {
+            Some(_) => match container::deserialize(container) {
+                Ok(ckpt) => self.write_ckpt(iteration, rank, &ckpt)?,
+                Err(_) => self.write_verbatim(iteration, rank, container)?,
+            },
+            None => self.write_verbatim(iteration, rank, container)?,
+        };
         // paper §4.4: type.txt inside each checkpoint folder
         fs::write(
             self.iter_dir(iteration).join("type.txt"),
             if is_base { "base\n" } else { "delta\n" },
         )?;
         if let Some(bps) = self.throttle_bps {
-            let want = Duration::from_secs_f64(container.len() as f64 / bps);
+            let want = Duration::from_secs_f64(physical as f64 / bps);
             let elapsed = t0.elapsed();
             if want > elapsed {
                 std::thread::sleep(want - elapsed);
@@ -86,8 +213,38 @@ impl Storage {
         Ok(t0.elapsed())
     }
 
+    /// Read one rank's container, reconstituted to the inline (version 2)
+    /// form: stubs resolve their payloads through the CAS; inline
+    /// VERSION 1/2 files are **imported on first touch** (payloads into
+    /// the CAS, the rank file rewritten as a stub) so legacy checkpoint
+    /// trees converge to the dedup'd layout as they are read. Bytes that
+    /// never parsed as a container come back verbatim.
     pub fn get(&self, iteration: u64, rank: usize) -> std::io::Result<Vec<u8>> {
-        fs::read(self.rank_path(iteration, rank))
+        let bytes = fs::read(self.rank_path(iteration, rank))?;
+        let Some(cas) = &self.cas else {
+            return Ok(bytes);
+        };
+        match container::peek_version(&bytes) {
+            Some(container::VERSION_CAS) => {
+                let stub = container::deserialize_cas(&bytes).map_err(invalid_data)?;
+                let ckpt = stub
+                    .resolve(|k| cas.get(k).map_err(crate::compress::CompressError::Io))
+                    .map_err(invalid_data)?;
+                Ok(container::serialize(&ckpt))
+            }
+            Some(_) => match container::deserialize(&bytes) {
+                Ok(ckpt) => {
+                    // import on first touch; a failed import (read-only
+                    // tree) still serves the checkpoint
+                    let _ = self.write_ckpt(iteration, rank, &ckpt);
+                    Ok(container::serialize(&ckpt))
+                }
+                // undecodable (torn/corrupt): hand back verbatim — the
+                // caller's CRC check is the authority
+                Err(_) => Ok(bytes),
+            },
+            None => Ok(bytes),
+        }
     }
 
     pub fn has(&self, iteration: u64, rank: usize) -> bool {
@@ -168,39 +325,261 @@ impl Storage {
     }
 
     /// Garbage-collect old checkpoints: keep the newest `keep` iterations
-    /// plus any base checkpoint a kept delta still chains to (same
-    /// dependency rule as the shm ring). Returns the pruned iterations.
+    /// plus whatever their delta chains still need. A thin wrapper over
+    /// [`Storage::gc`] — retention semantics, chain closure and blob
+    /// sweeping all live there — kept for the historical call sites.
+    /// Returns the pruned iterations.
     pub fn prune_keep(&self, keep: usize) -> std::io::Result<Vec<u64>> {
-        let iters = self.iterations()?;
-        if iters.len() <= keep {
-            return Ok(Vec::new());
-        }
-        let kept: std::collections::HashSet<u64> =
-            iters[iters.len() - keep..].iter().copied().collect();
-        let mut required = kept.clone();
-        for &i in &kept {
-            // any rank shard tells us the base (they share base_iteration)
-            for entry in fs::read_dir(self.iter_dir(i))? {
-                let path = entry?.path();
-                if path.extension().map(|e| e == "bsnp").unwrap_or(false) {
-                    if let Ok(bytes) = fs::read(&path) {
-                        if let Ok(c) = super::container::deserialize(&bytes) {
-                            required.insert(c.base_iteration);
+        Ok(self.gc(&RetentionPolicy::keep_last(keep))?.pruned_iterations)
+    }
+
+    /// Everything one iteration's directory tells us about its lineage:
+    /// every rank container (stub or inline) is consulted, with the
+    /// manifest as a fallback — the old single-container shortcut let one
+    /// torn file hide a delta's base from the collector.
+    fn chain_info_one(&self, iteration: u64) -> std::io::Result<ChainInfo> {
+        let mut bases: Vec<u64> = Vec::new();
+        let mut decoded_any = false;
+        for entry in fs::read_dir(self.iter_dir(iteration))? {
+            let path = entry?.path();
+            if !path.extension().map(|e| e == "bsnp").unwrap_or(false) {
+                continue;
+            }
+            let Ok(bytes) = fs::read(&path) else { continue };
+            match container::peek_version(&bytes) {
+                Some(container::VERSION_CAS) => {
+                    if let Ok(stub) = container::deserialize_cas(&bytes) {
+                        decoded_any = true;
+                        if !stub.is_base() {
+                            bases.push(stub.base_iteration);
                         }
                     }
-                    break;
+                }
+                Some(_) => {
+                    if let Ok(c) = container::deserialize(&bytes) {
+                        decoded_any = true;
+                        if !c.is_base() {
+                            bases.push(c.base_iteration);
+                        }
+                    }
+                }
+                None => {}
+            }
+        }
+        if !decoded_any {
+            // no rank container decoded — the manifest still knows the base
+            if let Ok(mb) = self.get_manifest(iteration) {
+                if let Ok(m) = container::deserialize_manifest(&mb) {
+                    decoded_any = true;
+                    if !m.is_base() {
+                        bases.push(m.base_iteration);
+                    }
                 }
             }
         }
-        let mut pruned = Vec::new();
-        for &i in &iters {
-            if !required.contains(&i) {
-                fs::remove_dir_all(self.iter_dir(i))?;
-                pruned.push(i);
+        if !decoded_any {
+            return Ok(ChainInfo::Unknown);
+        }
+        bases.sort_unstable();
+        bases.dedup();
+        Ok(ChainInfo::Known(bases))
+    }
+
+    /// Reference counts over the blobs the given iterations point at:
+    /// every readable stub container **plus the manifest's per-rank blob
+    /// keys** (inline containers hold no blob references). Counting the
+    /// manifest matters for GC safety — if one rank's stub is torn, the
+    /// version-3 manifest still names that rank's payload blobs, and
+    /// sweeping them would turn a recoverable single-file corruption
+    /// into permanent loss.
+    fn refcounts_for(&self, iters: &[u64]) -> std::io::Result<RefCounts> {
+        let mut rc = RefCounts::new();
+        for &i in iters {
+            let dir = self.iter_dir(i);
+            if !dir.exists() {
+                continue;
+            }
+            for entry in fs::read_dir(&dir)? {
+                let path = entry?.path();
+                if !path.extension().map(|e| e == "bsnp").unwrap_or(false) {
+                    continue;
+                }
+                let Ok(bytes) = fs::read(&path) else { continue };
+                if container::peek_version(&bytes) == Some(container::VERSION_CAS) {
+                    if let Ok(stub) = container::deserialize_cas(&bytes) {
+                        for key in stub.keys() {
+                            rc.acquire(key);
+                        }
+                    }
+                }
+            }
+            if let Ok(mb) = self.get_manifest(i) {
+                if let Ok(m) = container::deserialize_manifest(&mb) {
+                    for e in &m.entries {
+                        for &key in &e.blobs {
+                            rc.acquire(key);
+                        }
+                    }
+                }
             }
         }
-        Ok(pruned)
+        Ok(rc)
     }
+
+    /// Chain-aware garbage collection. The policy picks the iterations to
+    /// retain; the keep set is closed over delta chains (a base can never
+    /// be collected while a retained delta needs it — iterations whose
+    /// lineage cannot be decoded conservatively keep everything older);
+    /// dead iteration directories are removed; finally every blob that no
+    /// live iteration references and no in-flight save has pinned is
+    /// deleted. Safe to run while async agents (sharing this store's pin
+    /// table — i.e. `Storage` clones in this process) are persisting:
+    /// phase-1 pins protect not-yet-published blobs, deletion re-checks
+    /// pins under the pin table's lock, blobs born after the candidate
+    /// scan are never considered, and iterations that commit mid-pass are
+    /// re-scanned before the sweep. GC from a *different process* has no
+    /// view of the pins and must only run while that process's saves are
+    /// quiesced.
+    pub fn gc(&self, policy: &RetentionPolicy) -> std::io::Result<GcReport> {
+        self.gc_inner(policy, true)
+    }
+
+    /// [`Storage::gc`] without deleting anything: reports what a real
+    /// pass would prune and reclaim (`bitsnap gc --dry-run`).
+    pub fn gc_dry_run(&self, policy: &RetentionPolicy) -> std::io::Result<GcReport> {
+        self.gc_inner(policy, false)
+    }
+
+    fn gc_inner(&self, policy: &RetentionPolicy, execute: bool) -> std::io::Result<GcReport> {
+        let iters = self.iterations()?;
+        let kept = retained(&iters, policy);
+        let mut info = HashMap::with_capacity(iters.len());
+        for &i in &iters {
+            info.insert(i, self.chain_info_one(i)?);
+        }
+        let live = chain_closure(&iters, &kept, &info);
+        let mut report = GcReport::default();
+        for &i in &iters {
+            if live.contains(&i) {
+                report.live_iterations.push(i);
+            } else {
+                if execute {
+                    fs::remove_dir_all(self.iter_dir(i))?;
+                }
+                report.pruned_iterations.push(i);
+            }
+        }
+        if let Some(cas) = &self.cas {
+            // sweep mark FIRST: every save pins its blobs *before*
+            // writing or dedup-deciding, so any blob that becomes
+            // reachable after the reachability snapshot below was pinned
+            // at-or-after this mark and `pinned_since` will protect it —
+            // even if the save has already unpinned by sweep time. A dry
+            // run must NOT open an epoch: bumping it drops the pin
+            // history a concurrent *real* pass depends on, so the report
+            // settles for the weaker active-pin check.
+            let mark = if execute { Some(cas.begin_sweep()) } else { None };
+            // candidate snapshot before the refcount scan: a blob born
+            // after this listing is never considered at all
+            let candidates = cas.keys()?;
+            let mut refs = self.refcounts_for(&report.live_iterations)?;
+            // fold in iterations that appeared since the retention
+            // snapshot — a save that committed mid-pass keeps its blobs
+            let latecomers: Vec<u64> =
+                self.iterations()?.into_iter().filter(|i| !info.contains_key(i)).collect();
+            if !latecomers.is_empty() {
+                refs.merge(&self.refcounts_for(&latecomers)?);
+            }
+            for key in candidates {
+                if refs.is_referenced(&key) {
+                    continue;
+                }
+                let pinned = match mark {
+                    Some(m) => cas.pinned_since(&key, m),
+                    None => cas.is_pinned(&key),
+                };
+                if pinned {
+                    report.pinned_blobs += 1;
+                    continue;
+                }
+                if execute {
+                    match cas.remove(&key) {
+                        Ok(freed) => {
+                            report.reclaimed_bytes += freed;
+                            report.deleted_blobs += 1;
+                        }
+                        // pinned between our check and the locked
+                        // delete: an in-flight save claimed it —
+                        // exactly what pins are for
+                        Err(e) if e.kind() == std::io::ErrorKind::InvalidInput => {
+                            report.pinned_blobs += 1;
+                        }
+                        Err(e) => return Err(e),
+                    }
+                } else {
+                    report.reclaimed_bytes += key.len;
+                    report.deleted_blobs += 1;
+                }
+            }
+        }
+        Ok(report)
+    }
+
+    /// A census of the store: blob counts, live/dead physical bytes, and
+    /// the logical bytes the same checkpoints would occupy without dedup
+    /// (what `store-stats` prints). Liveness uses the **same**
+    /// reachability scan as [`Storage::gc`] (stub containers plus
+    /// manifest blob keys), so `dead_bytes` never reports bytes a GC
+    /// pass would in fact keep.
+    pub fn stats(&self) -> std::io::Result<StoreStats> {
+        let iters = self.iterations()?;
+        let mut logical = 0u64;
+        for &i in &iters {
+            for entry in fs::read_dir(self.iter_dir(i))? {
+                let path = entry?.path();
+                if !path.extension().map(|e| e == "bsnp").unwrap_or(false) {
+                    continue;
+                }
+                let Ok(bytes) = fs::read(&path) else { continue };
+                match container::peek_version(&bytes) {
+                    Some(container::VERSION_CAS) => {
+                        if let Ok(stub) = container::deserialize_cas(&bytes) {
+                            for key in stub.keys() {
+                                logical += key.len;
+                            }
+                        }
+                    }
+                    Some(_) => {
+                        if let Ok(c) = container::deserialize(&bytes) {
+                            logical += c.payload_bytes() as u64;
+                        }
+                    }
+                    None => {}
+                }
+            }
+        }
+        let mut stats =
+            StoreStats { iterations: iters.len(), logical_bytes: logical, ..Default::default() };
+        if let Some(cas) = &self.cas {
+            let refs = self.refcounts_for(&iters)?;
+            for key in cas.keys()? {
+                stats.blob_count += 1;
+                stats.physical_bytes += key.len;
+                if refs.is_referenced(&key) {
+                    stats.referenced_blobs += 1;
+                    stats.live_bytes += key.len;
+                } else {
+                    stats.dead_bytes += key.len;
+                }
+            }
+        }
+        Ok(stats)
+    }
+}
+
+/// Map a container/CAS resolution failure into io's `InvalidData`.
+fn invalid_data(e: crate::compress::CompressError) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
 }
 
 /// Analytical checkpoint-size / save-time model — reproduces Table 1.
@@ -299,6 +678,182 @@ mod tests {
         let pruned = s.prune_keep(2).unwrap();
         assert_eq!(pruned, vec![20]);
         assert_eq!(s.iterations().unwrap(), vec![10, 30, 40]);
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn cas_put_get_reconstitutes_bit_exactly_and_dedups() {
+        let root = tmp_root("casdedup");
+        let s = Storage::new(&root).unwrap();
+        let bytes = container_bytes(7);
+        // same container at two iterations and two ranks: one blob set
+        s.put(10, 0, &bytes, true).unwrap();
+        s.put(10, 1, &bytes, true).unwrap();
+        s.put(20, 0, &bytes, true).unwrap();
+        for (i, r) in [(10u64, 0usize), (10, 1), (20, 0)] {
+            assert_eq!(s.get(i, r).unwrap(), bytes, "iter {i} rank {r}");
+            assert!(s.validate(i, r));
+        }
+        let stats = s.stats().unwrap();
+        assert_eq!(stats.iterations, 2);
+        assert!(stats.dedup_ratio() > 2.9, "3 references, 1 blob set: {stats:?}");
+        assert_eq!(stats.dead_bytes, 0);
+        assert!(stats.live_bytes < stats.logical_bytes);
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn prune_keep_one_after_a_delta_save_keeps_the_base() {
+        // the satellite regression: keep=1 retains only the newest (a
+        // delta) — its base must survive the prune and the chain must
+        // still restore
+        use crate::compress::delta::decompress_state_dict;
+        let root = tmp_root("gc-keep1");
+        let s = Storage::new(&root).unwrap();
+        let sd = StateDict::synthetic_gpt(1 << 10, 3);
+        let base = compress_state_dict(&sd, None, Policy::lossless(), 10, 10).unwrap();
+        s.put(10, 0, &container::serialize(&base), true).unwrap();
+        let mut cur = sd.clone();
+        cur.perturb_model_states(0.05, 4);
+        let delta = compress_state_dict(&cur, Some(&sd), Policy::lossless(), 20, 10).unwrap();
+        s.put(20, 0, &container::serialize(&delta), false).unwrap();
+
+        let pruned = s.prune_keep(1).unwrap();
+        assert!(pruned.is_empty(), "base 10 is needed by kept delta 20: {pruned:?}");
+        assert_eq!(s.iterations().unwrap(), vec![10, 20]);
+        // the chain restores bit-exactly after the prune
+        let base_sd =
+            decompress_state_dict(&container::deserialize(&s.get(10, 0).unwrap()).unwrap(), None)
+                .unwrap();
+        let restored = decompress_state_dict(
+            &container::deserialize(&s.get(20, 0).unwrap()).unwrap(),
+            Some(&base_sd),
+        )
+        .unwrap();
+        for (a, b) in cur.entries().iter().zip(restored.entries()) {
+            assert_eq!(a.tensor, b.tensor, "{}", a.name);
+        }
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn prune_keep_consults_every_rank_not_just_the_first_readable_file() {
+        // regression for the old single-container shortcut: rank 0's
+        // container of the kept delta is torn, rank 1's is intact — the
+        // base must still be discovered (the old code could read only the
+        // torn file, learn nothing, and delete the base)
+        let root = tmp_root("gc-torn");
+        let s = Storage::new(&root).unwrap();
+        let sd = StateDict::synthetic_gpt(1 << 10, 5);
+        let base = compress_state_dict(&sd, None, Policy::lossless(), 10, 10).unwrap();
+        s.put(10, 0, &container::serialize(&base), true).unwrap();
+        s.put(10, 1, &container::serialize(&base), true).unwrap();
+        let mut cur = sd.clone();
+        cur.perturb_model_states(0.05, 6);
+        let delta = compress_state_dict(&cur, Some(&sd), Policy::lossless(), 20, 10).unwrap();
+        let delta_bytes = container::serialize(&delta);
+        s.put(20, 0, &delta_bytes, false).unwrap();
+        s.put(20, 1, &delta_bytes, false).unwrap();
+        // tear rank 0's file of iteration 20 in place
+        fs::write(s.rank_path(20, 0), &delta_bytes[..delta_bytes.len() / 3]).unwrap();
+
+        let pruned = s.prune_keep(1).unwrap();
+        assert!(pruned.is_empty(), "{pruned:?}");
+        assert_eq!(s.iterations().unwrap(), vec![10, 20], "base must survive a torn sibling");
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn gc_conservative_when_no_lineage_is_decodable() {
+        // every container of the newest iteration is torn: its chain is
+        // unknown, so nothing older may be collected
+        let root = tmp_root("gc-unknown");
+        let s = Storage::new(&root).unwrap();
+        s.put(10, 0, &container_bytes(1), true).unwrap();
+        s.put(20, 0, &container_bytes(2), true).unwrap();
+        let junk = vec![0xAAu8; 128];
+        s.put(30, 0, &junk, false).unwrap(); // unparseable -> verbatim, lineage unknown
+        let report = s.gc(&crate::store::RetentionPolicy::keep_last(1)).unwrap();
+        assert!(report.pruned_iterations.is_empty(), "{report:?}");
+        assert_eq!(s.iterations().unwrap(), vec![10, 20, 30]);
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn gc_sweeps_unreferenced_blobs_but_not_pinned_ones() {
+        let root = tmp_root("gc-blobs");
+        let s = Storage::new(&root).unwrap();
+        s.put(10, 0, &container_bytes(1), true).unwrap();
+        s.put(20, 0, &container_bytes(2), true).unwrap();
+        // an in-flight save: phase 1 done (blobs pinned), stub not yet
+        // published — GC must leave those blobs alone
+        let cas = s.blob_store().unwrap().clone();
+        let (inflight, _) = cas.put_pinned(b"mid-save payload bytes").unwrap();
+        let report = s.gc(&crate::store::RetentionPolicy::keep_last(1)).unwrap();
+        assert_eq!(report.pruned_iterations, vec![10]);
+        assert!(report.deleted_blobs > 0, "iteration 10's unique blobs are dead: {report:?}");
+        assert!(report.reclaimed_bytes > 0);
+        assert_eq!(report.pinned_blobs, 1, "{report:?}");
+        assert!(cas.contains(&inflight), "pinned in-flight blob survived");
+        // iteration 20 still restores
+        assert!(s.validate(20, 0));
+        // commit the in-flight save (phase 2 + 3): now reachable, a
+        // second GC keeps it via its reference
+        cas.unpin(&inflight).unwrap();
+        let report = s.gc(&crate::store::RetentionPolicy::keep_last(1)).unwrap();
+        assert!(!cas.contains(&inflight), "unpinned unreferenced blob is dead");
+        assert_eq!(report.pinned_blobs, 0);
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn gc_keep_every_retains_archival_iterations() {
+        let root = tmp_root("gc-every");
+        let s = Storage::new(&root).unwrap();
+        for i in [100u64, 150, 200, 250, 300] {
+            s.put(i, 0, &container_bytes(i), true).unwrap();
+        }
+        let policy = crate::store::RetentionPolicy { keep_last: 1, keep_every: 100 };
+        let report = s.gc(&policy).unwrap();
+        assert_eq!(report.pruned_iterations, vec![150, 250]);
+        assert_eq!(s.iterations().unwrap(), vec![100, 200, 300]);
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn legacy_inline_containers_import_on_first_touch() {
+        let root = tmp_root("cas-import");
+        let s = Storage::new(&root).unwrap();
+        let bytes = container_bytes(9);
+        // simulate a pre-store tree: drop the inline container in place
+        fs::create_dir_all(s.iter_dir(42)).unwrap();
+        fs::write(s.rank_path(42, 0), &bytes).unwrap();
+        let on_disk = fs::read(s.rank_path(42, 0)).unwrap();
+        assert_eq!(container::peek_version(&on_disk), Some(container::VERSION));
+        // first read: bit-exact bytes back, and the file converts to a stub
+        assert_eq!(s.get(42, 0).unwrap(), bytes);
+        let on_disk = fs::read(s.rank_path(42, 0)).unwrap();
+        assert_eq!(container::peek_version(&on_disk), Some(container::VERSION_CAS));
+        assert!(s.stats().unwrap().blob_count > 0);
+        // second read resolves through the CAS, still bit-exact
+        assert_eq!(s.get(42, 0).unwrap(), bytes);
+        assert!(s.validate(42, 0));
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn plain_storage_keeps_the_opaque_layout() {
+        let root = tmp_root("plain");
+        let s = Storage::plain(&root).unwrap();
+        assert!(s.blob_store().is_none());
+        let bytes = container_bytes(11);
+        s.put(10, 0, &bytes, true).unwrap();
+        let on_disk = fs::read(s.rank_path(10, 0)).unwrap();
+        assert_eq!(on_disk, bytes, "plain mode must not rewrite containers");
+        assert_eq!(s.get(10, 0).unwrap(), bytes);
+        let stats = s.stats().unwrap();
+        assert_eq!(stats.blob_count, 0);
+        assert!(stats.logical_bytes > 0);
         fs::remove_dir_all(&root).unwrap();
     }
 

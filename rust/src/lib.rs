@@ -12,6 +12,10 @@
 //! * [`engine`] — the asynchronous checkpoint engine: shared-memory
 //!   staging, daemon persister, in-memory redundancy, tracker files and
 //!   the all-gather recovery protocol.
+//! * [`store`] — the content-addressed blob store underneath persistent
+//!   storage: cross-rank/cross-iteration payload dedup, chain-aware GC
+//!   with retention policies, and the lineage refcounts behind
+//!   `store-stats`.
 //! * [`runtime`] — PJRT runtime loading AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`); python never runs on the checkpoint path.
 //! * [`train`] — the training substrate: a GPT model driven from rust via
@@ -25,5 +29,6 @@ pub mod compress;
 pub mod engine;
 #[cfg(feature = "xla")]
 pub mod runtime;
+pub mod store;
 pub mod tensor;
 pub mod train;

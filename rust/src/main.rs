@@ -9,6 +9,8 @@
 //!                 controller's per-save codec decisions
 //!   table1        print the analytical save-time table (Table 1)
 //!   recover       run the multi-rank recovery demo (Fig. 4)
+//!   gc            chain-aware garbage collection of a checkpoint store
+//!   store-stats   blob counts, live/dead bytes and dedup ratio of a store
 //!
 //! `train` and `inspect --histogram` execute AOT-compiled XLA artifacts
 //! and need the crate built with `--features xla`; everything else is
@@ -30,6 +32,8 @@ fn main() {
         Some("adapt-report") => cmd_adapt_report(&args),
         Some("table1") => cmd_table1(),
         Some("recover") => cmd_recover(&args),
+        Some("gc") => cmd_gc(&args),
+        Some("store-stats") => cmd_store_stats(&args),
         Some("help") | None => {
             print_help();
             Ok(())
@@ -59,6 +63,8 @@ fn print_help() {
                          [--adaptive] [--target-ratio 3.0] [--mp 2] [--pp 2] [--out results/run]\n\
                          [--redundancy 2] [--max-cached 5] [--workers N] (encode worker pool;\n\
                          default = available cores; output is byte-identical for any N)\n\
+                         [--retention 3[,100]] (chain-aware GC after every save: keep the last\n\
+                         3 iterations plus every 100th)\n\
                          (needs a build with --features xla)\n\
            compress      --params 1048576 [--change-rate 0.15] [--policy bitsnap|lossless]\n\
            inspect       --dir <storage root> | --histogram --model gpt-nano --steps 20\n\
@@ -68,6 +74,9 @@ fn print_help() {
            table1        (no flags) print the paper's Table-1 analytical model\n\
            recover       --ranks 4 --fail-rank 1 (Fig. 4 walkthrough on real stores)\n\
                          [--sharded --mp 2 --pp 2] (mp x pp save / recover / reshard demo)\n\
+           gc            --dir <storage root> --keep-last 3 [--keep-every 100] [--dry-run]\n\
+                         (chain-aware: never collects a base a kept delta needs)\n\
+           store-stats   --dir <storage root> (blob counts, live/dead bytes, dedup ratio)\n\
            help          this text"
     );
 }
@@ -96,6 +105,13 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         Some(w) => PersistConfig::with_workers(w),
         None => PersistConfig::from_env(),
     };
+    // --retention N[,M]: chain-aware GC after every save — keep the last
+    // N iterations (plus every M-th), never collecting a base a kept
+    // delta still needs; blobs pinned by the async agents are skipped
+    let retention = match args.get("retention") {
+        Some(s) => Some(bitsnap::store::RetentionPolicy::parse(s)?),
+        None => None,
+    };
 
     let rt = PjrtRuntime::cpu(default_artifacts_dir()).map_err(|e| e.to_string())?;
     let mut trainer = Trainer::new(rt, model, 1).map_err(|e| e.to_string())?;
@@ -109,6 +125,8 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         persist.workers
     );
     let storage = Storage::new(format!("{out}/storage")).map_err(|e| e.to_string())?;
+    // a clone shares the CAS pin table, so GC during async persists is safe
+    let gc_storage = storage.clone();
     let cfg = ShardedEngineConfig {
         job: format!("train-{model}"),
         parallelism,
@@ -161,6 +179,17 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                 bitsnap::bench::fmt_bytes(r.raw_bytes),
                 bitsnap::bench::fmt_bytes(r.compressed_bytes),
             );
+            if let Some(policy) = &retention {
+                let gcr = gc_storage.gc(policy).map_err(|e| e.to_string())?;
+                if !gcr.pruned_iterations.is_empty() || gcr.deleted_blobs > 0 {
+                    println!(
+                        "  gc: pruned {:?}, {} blobs freed ({})",
+                        gcr.pruned_iterations,
+                        gcr.deleted_blobs,
+                        bitsnap::bench::fmt_bytes(gcr.reclaimed_bytes as usize)
+                    );
+                }
+            }
         }
     }
     engine.flush().map_err(|e| e.to_string())?;
@@ -170,6 +199,15 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         stats.persisted,
         bitsnap::bench::fmt_bytes(stats.bytes_written as usize)
     );
+    if let Ok(s) = gc_storage.stats() {
+        println!(
+            "store: {} blobs, {} live for {} logical ({:.2}x dedup)",
+            s.blob_count,
+            bitsnap::bench::fmt_bytes(s.live_bytes as usize),
+            bitsnap::bench::fmt_bytes(s.logical_bytes as usize),
+            s.dedup_ratio()
+        );
+    }
     Ok(())
 }
 
@@ -635,6 +673,49 @@ fn cmd_recover(args: &Args) -> Result<(), String> {
     println!("recovery complete");
     let _ = std::fs::remove_dir_all(&shm_root);
     let _ = std::fs::remove_dir_all(&store_root);
+    Ok(())
+}
+
+/// Chain-aware GC over a checkpoint store: apply a retention policy,
+/// close it over delta chains, sweep dead iterations and unreferenced
+/// blobs. `--dry-run` reports without deleting.
+fn cmd_gc(args: &Args) -> Result<(), String> {
+    use bitsnap::store::RetentionPolicy;
+    let dir = args.get("dir").ok_or("gc needs --dir <storage root>")?;
+    let keep_last: usize = args.get_parse("keep-last").unwrap_or(3);
+    let keep_every: u64 = args.get_parse("keep-every").unwrap_or(0);
+    let policy = match args.get("retention") {
+        Some(s) => RetentionPolicy::parse(s)?,
+        None => RetentionPolicy { keep_last, keep_every },
+    };
+    let storage = Storage::new(dir).map_err(|e| e.to_string())?;
+    let dry = args.has("dry-run");
+    let result = if dry { storage.gc_dry_run(&policy) } else { storage.gc(&policy) };
+    let report = result.map_err(|e| e.to_string())?;
+    println!(
+        "{}retention keep-last {} keep-every {}",
+        if dry { "[dry run] " } else { "" },
+        policy.keep_last,
+        policy.keep_every
+    );
+    println!("live iterations   {:?}", report.live_iterations);
+    println!("pruned iterations {:?}", report.pruned_iterations);
+    println!(
+        "blobs {}: {} ({} pinned by in-flight saves)",
+        if dry { "collectible" } else { "deleted" },
+        report.deleted_blobs,
+        report.pinned_blobs
+    );
+    println!("bytes reclaimed   {}", bitsnap::bench::fmt_bytes(report.reclaimed_bytes as usize));
+    Ok(())
+}
+
+/// Print the store census: blob counts, live/dead bytes, dedup ratio.
+fn cmd_store_stats(args: &Args) -> Result<(), String> {
+    let dir = args.get("dir").ok_or("store-stats needs --dir <storage root>")?;
+    let storage = Storage::new(dir).map_err(|e| e.to_string())?;
+    let stats = storage.stats().map_err(|e| e.to_string())?;
+    println!("{}", stats.render());
     Ok(())
 }
 

@@ -1,0 +1,271 @@
+//! Chain-aware garbage collection policy for the checkpoint store.
+//!
+//! This module owns the *pure* half of GC: which iterations a
+//! [`RetentionPolicy`] keeps, how the keep set closes over delta chains
+//! (a delta checkpoint is only restorable while its base lives, so GC
+//! must never collect a base a retained delta still references — the
+//! unsoundness the old `Storage::prune_keep` had when it trusted a
+//! single, possibly corrupt, rank container), and the reference counts
+//! the blob store reports in `store-stats`. The filesystem half — which
+//! files realize those decisions — lives in
+//! [`crate::engine::storage::Storage::gc`].
+
+use std::collections::{HashMap, HashSet};
+
+use super::hash::BlobKey;
+
+/// What to keep when collecting old checkpoints.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetentionPolicy {
+    /// Keep the newest `keep_last` iterations unconditionally.
+    pub keep_last: usize,
+    /// Additionally keep every iteration divisible by `keep_every`
+    /// (0 disables the archival rule) — the "hourly forever" tier of a
+    /// production retention schedule.
+    pub keep_every: u64,
+}
+
+impl RetentionPolicy {
+    pub fn keep_last(n: usize) -> Self {
+        Self { keep_last: n, keep_every: 0 }
+    }
+
+    /// Parse the CLI form: `"N"` or `"N,M"` (keep the last N, plus every
+    /// M-th iteration).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let (last, every) = match s.split_once(',') {
+            Some((l, e)) => (l, Some(e)),
+            None => (s, None),
+        };
+        let keep_last = last
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| format!("retention {s:?}: keep-last {last:?} is not a number"))?;
+        let keep_every = match every {
+            Some(e) => e
+                .trim()
+                .parse::<u64>()
+                .map_err(|_| format!("retention {s:?}: keep-every {e:?} is not a number"))?,
+            None => 0,
+        };
+        Ok(Self { keep_last, keep_every })
+    }
+}
+
+/// The iterations a policy retains outright (before chain closure).
+/// `iters` must be ascending, as [`crate::engine::Storage::iterations`]
+/// returns them.
+pub fn retained(iters: &[u64], policy: &RetentionPolicy) -> HashSet<u64> {
+    let mut keep: HashSet<u64> = iters.iter().rev().take(policy.keep_last).copied().collect();
+    if policy.keep_every > 0 {
+        keep.extend(iters.iter().copied().filter(|i| i % policy.keep_every == 0));
+    }
+    keep
+}
+
+/// What is known about one iteration's position in the delta-chain
+/// lineage graph.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ChainInfo {
+    /// The iterations this one needs to restore (empty for a full base).
+    /// Normally a single base, but a mixed directory is represented
+    /// faithfully rather than guessed at.
+    Known(Vec<u64>),
+    /// No container of this iteration could be decoded, so its
+    /// dependencies are unknown. Closure treats it conservatively: every
+    /// older iteration stays live, because deleting any of them could
+    /// strand this one.
+    Unknown,
+}
+
+/// Close the keep set over delta chains: everything a kept iteration
+/// (transitively) needs to restore is live. See [`ChainInfo::Unknown`]
+/// for the conservative arm.
+pub fn chain_closure(
+    iters: &[u64],
+    kept: &HashSet<u64>,
+    info: &HashMap<u64, ChainInfo>,
+) -> HashSet<u64> {
+    let mut live = kept.clone();
+    let mut stack: Vec<u64> = live.iter().copied().collect();
+    while let Some(i) = stack.pop() {
+        match info.get(&i) {
+            Some(ChainInfo::Known(bases)) => {
+                for &b in bases {
+                    if live.insert(b) {
+                        stack.push(b);
+                    }
+                }
+            }
+            // unknown lineage (or an iteration we have no record of at
+            // all): keep everything older — it might be the base
+            _ => {
+                for &older in iters.iter().filter(|&&o| o < i) {
+                    if live.insert(older) {
+                        stack.push(older);
+                    }
+                }
+            }
+        }
+    }
+    live
+}
+
+/// Reference counts over blobs: how many container entries point at each
+/// one. Rebuilt from disk by the storage layer (the stub containers are
+/// the durable source of truth); this type just does the counting with
+/// loud underflow detection.
+#[derive(Clone, Debug, Default)]
+pub struct RefCounts {
+    counts: HashMap<BlobKey, u64>,
+}
+
+impl RefCounts {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One more reference to `key`.
+    pub fn acquire(&mut self, key: BlobKey) {
+        *self.counts.entry(key).or_insert(0) += 1;
+    }
+
+    /// Drop one reference, returning the remaining count. Releasing a
+    /// blob that holds no reference means the lineage bookkeeping and
+    /// the containers disagree — an invariant violation, not a no-op.
+    pub fn release(&mut self, key: BlobKey) -> Result<u64, String> {
+        match self.counts.get_mut(&key) {
+            Some(n) if *n > 1 => {
+                *n -= 1;
+                Ok(*n)
+            }
+            Some(_) => {
+                self.counts.remove(&key);
+                Ok(0)
+            }
+            None => Err(format!("refcount underflow: blob {key} released but never acquired")),
+        }
+    }
+
+    pub fn count(&self, key: &BlobKey) -> u64 {
+        self.counts.get(key).copied().unwrap_or(0)
+    }
+
+    /// Number of distinct referenced blobs.
+    pub fn distinct(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Total references across all blobs.
+    pub fn total(&self) -> u64 {
+        self.counts.values().sum()
+    }
+
+    pub fn is_referenced(&self, key: &BlobKey) -> bool {
+        self.counts.contains_key(key)
+    }
+
+    /// Fold another count table into this one (GC uses it to add
+    /// references from iterations that appeared mid-pass).
+    pub fn merge(&mut self, other: &RefCounts) {
+        for (&key, &n) in other.counts.iter() {
+            *self.counts.entry(key).or_insert(0) += n;
+        }
+    }
+
+    /// Iterate over `(key, count)` pairs (unordered).
+    pub fn iter(&self) -> impl Iterator<Item = (&BlobKey, &u64)> {
+        self.counts.iter()
+    }
+}
+
+/// What a GC pass did.
+#[derive(Clone, Debug, Default)]
+pub struct GcReport {
+    /// Iterations removed, ascending.
+    pub pruned_iterations: Vec<u64>,
+    /// Iterations still present after the pass, ascending.
+    pub live_iterations: Vec<u64>,
+    /// Blob files deleted.
+    pub deleted_blobs: usize,
+    /// Physical bytes reclaimed (blobs only; container stubs are tiny).
+    pub reclaimed_bytes: u64,
+    /// Blobs left alone because a save in flight pinned them.
+    pub pinned_blobs: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn known(bases: &[u64]) -> ChainInfo {
+        ChainInfo::Known(bases.to_vec())
+    }
+
+    #[test]
+    fn retention_keeps_last_n_and_archival_multiples() {
+        let iters = [10u64, 20, 30, 40, 50];
+        let keep = retained(&iters, &RetentionPolicy::keep_last(2));
+        assert_eq!(keep, HashSet::from([40, 50]));
+        let keep = retained(&iters, &RetentionPolicy { keep_last: 1, keep_every: 20 });
+        assert_eq!(keep, HashSet::from([20, 40, 50]));
+        let keep = retained(&iters, &RetentionPolicy::keep_last(0));
+        assert!(keep.is_empty());
+        let keep = retained(&iters, &RetentionPolicy::keep_last(99));
+        assert_eq!(keep.len(), 5);
+    }
+
+    #[test]
+    fn retention_parse_forms() {
+        assert_eq!(RetentionPolicy::parse("3"), Ok(RetentionPolicy::keep_last(3)));
+        assert_eq!(
+            RetentionPolicy::parse("3,100"),
+            Ok(RetentionPolicy { keep_last: 3, keep_every: 100 })
+        );
+        assert!(RetentionPolicy::parse("abc").is_err());
+        assert!(RetentionPolicy::parse("3,x").is_err());
+    }
+
+    #[test]
+    fn closure_follows_delta_chains() {
+        let iters = [10u64, 20, 30, 40];
+        let info = HashMap::from([
+            (10, known(&[])),
+            (20, known(&[10])),
+            (30, known(&[10])),
+            (40, known(&[])),
+        ]);
+        // keep {30, 40}: 30 chains to 10, so 10 is live; 20 is not
+        let live = chain_closure(&iters, &HashSet::from([30, 40]), &info);
+        assert_eq!(live, HashSet::from([10, 30, 40]));
+    }
+
+    #[test]
+    fn closure_is_conservative_on_unknown_lineage() {
+        let iters = [10u64, 20, 30];
+        let info = HashMap::from([(10, known(&[])), (20, known(&[10])), (30, ChainInfo::Unknown)]);
+        // 30's deps are unknown: every older iteration must survive
+        let live = chain_closure(&iters, &HashSet::from([30]), &info);
+        assert_eq!(live, HashSet::from([10, 20, 30]));
+        // an iteration missing from the info map entirely is just as
+        // unknown
+        let live = chain_closure(&iters, &HashSet::from([20]), &HashMap::new());
+        assert_eq!(live, HashSet::from([10, 20]));
+    }
+
+    #[test]
+    fn refcounts_acquire_release_and_underflow() {
+        let k = BlobKey { hash: 1, len: 2 };
+        let mut rc = RefCounts::new();
+        rc.acquire(k);
+        rc.acquire(k);
+        assert_eq!(rc.count(&k), 2);
+        assert_eq!((rc.distinct(), rc.total()), (1, 2));
+        assert_eq!(rc.release(k), Ok(1));
+        assert!(rc.is_referenced(&k));
+        assert_eq!(rc.release(k), Ok(0));
+        assert!(!rc.is_referenced(&k));
+        let err = rc.release(k).unwrap_err();
+        assert!(err.contains("underflow"), "{err}");
+    }
+}

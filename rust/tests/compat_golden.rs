@@ -108,3 +108,56 @@ fn legacy_manifest_version_constant_is_pinned() {
     let m = fixture("pr2_manifest.bsnm");
     assert_eq!(u32::from_le_bytes(m[4..8].try_into().unwrap()), MANIFEST_VERSION_LEGACY);
 }
+
+#[test]
+fn legacy_fixtures_load_bit_exactly_through_the_cas_read_path() {
+    // a pre-store checkpoint tree (inline legacy containers dropped
+    // straight on disk) read through CAS-backed Storage: payloads are
+    // imported into the blob store on first touch, the rank files become
+    // version-3 stubs, and every decode stays bit-exact before and after
+    use bitsnap::engine::container::VERSION_CAS;
+    use bitsnap::engine::Storage;
+
+    let root = std::env::temp_dir().join(format!("bsnp-golden-cas-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let storage = Storage::new(&root).unwrap();
+    for (iter, name) in
+        [(100u64, "pr2_base.bsnp"), (120, "pr2_delta.bsnp"), (200, "pr2_rank0.bsnp")]
+    {
+        let dir = root.join(format!("iter{iter:010}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("rank0.bsnp"), fixture(name)).unwrap();
+    }
+    std::fs::write(root.join("iter0000000200").join("rank1.bsnp"), fixture("pr2_rank1.bsnp"))
+        .unwrap();
+
+    // base + delta chain, read through storage (imports on first touch)
+    let base_ckpt = deserialize(&storage.get(100, 0).unwrap()).unwrap();
+    let base = decompress_state_dict(&base_ckpt, None).unwrap();
+    assert_eq!(concat_bytes(&base), fixture("pr2_base_expected.bin"));
+    let delta_ckpt = deserialize(&storage.get(120, 0).unwrap()).unwrap();
+    let delta = decompress_state_dict(&delta_ckpt, Some(&base)).unwrap();
+    assert_eq!(concat_bytes(&delta), fixture("pr2_delta_expected.bin"));
+
+    // the legacy files are now stubs backed by blobs
+    let on_disk = std::fs::read(root.join("iter0000000100").join("rank0.bsnp")).unwrap();
+    assert_eq!(u32::from_le_bytes(on_disk[4..8].try_into().unwrap()), VERSION_CAS);
+    assert!(storage.stats().unwrap().blob_count > 0);
+
+    // second read resolves through the CAS — still bit-exact
+    let again = decompress_state_dict(&deserialize(&storage.get(100, 0).unwrap()).unwrap(), None)
+        .unwrap();
+    assert_eq!(concat_bytes(&again), fixture("pr2_base_expected.bin"));
+
+    // the legacy sharded fixtures reassemble bit-exactly via the CAS path
+    let manifest = deserialize_manifest(&fixture("pr2_manifest.bsnm")).unwrap();
+    let shards: Vec<StateDict> = (0..2)
+        .map(|r| {
+            decompress_state_dict(&deserialize(&storage.get(200, r).unwrap()).unwrap(), None)
+                .unwrap()
+        })
+        .collect();
+    let full = reassemble_state_dict(&manifest, &shards).unwrap();
+    assert_eq!(concat_bytes(&full), fixture("pr2_sharded_expected.bin"));
+    let _ = std::fs::remove_dir_all(&root);
+}

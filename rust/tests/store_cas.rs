@@ -1,0 +1,165 @@
+//! Integration: the content-addressed store underneath the sharded
+//! engine — cross-rank/cross-iteration dedup of a tied-embedding
+//! workload, bit-exact restore after chain-aware GC, and empty-payload
+//! blobs from zero-length shard slices. Runs under the CI
+//! `BITSNAP_TEST_WORKERS={1,4}` matrix (the engines here build their
+//! encode pools with [`PersistConfig::from_env`]), so the dedup'd
+//! physical layout is exercised at both worker counts.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use bitsnap::compress::delta::Policy;
+use bitsnap::engine::{PersistConfig, ShardedCheckpointEngine, ShardedEngineConfig, Storage};
+use bitsnap::store::RetentionPolicy;
+use bitsnap::tensor::{HostTensor, StateDict, StateKind, XorShiftRng};
+use bitsnap::train::Parallelism;
+
+fn roots(tag: &str) -> (PathBuf, PathBuf) {
+    let pid = std::process::id();
+    let shm = std::env::temp_dir().join(format!("bsnp-storecas-shm-{tag}-{pid}"));
+    let store = std::env::temp_dir().join(format!("bsnp-storecas-store-{tag}-{pid}"));
+    let _ = fs::remove_dir_all(&shm);
+    let _ = fs::remove_dir_all(&store);
+    (shm, store)
+}
+
+fn config(tag: &str, p: Parallelism, shm: &Path, storage: Storage) -> ShardedEngineConfig {
+    ShardedEngineConfig {
+        job: tag.into(),
+        parallelism: p,
+        shm_root: shm.to_path_buf(),
+        storage,
+        redundancy: 2,
+        policy: Policy::lossless(),
+        max_cached_iteration: 2,
+        persist: PersistConfig::from_env(),
+    }
+}
+
+/// A GPT-ish dict with a **tied embedding pair**: `wte.weight` and
+/// `lm_head.weight` hold identical tensors, the way input embeddings and
+/// the output head share weights in real models.
+fn tied_dict(params: usize, seed: u64) -> StateDict {
+    let core = StateDict::synthetic_gpt(params, seed);
+    let mut rng = XorShiftRng::new(seed ^ 0xE3BD);
+    let embed = rng.normal_vec(params / 2, 0.0, 0.02);
+    let wte = HostTensor::from_f32_as_f16(&[params / 2], &embed).unwrap();
+    let mut sd = StateDict::new();
+    sd.push("wte.weight", StateKind::ModelState, wte.clone());
+    for e in core.entries() {
+        sd.push(e.name.clone(), e.kind, e.tensor.clone());
+    }
+    sd.push("lm_head.weight", StateKind::ModelState, wte);
+    sd
+}
+
+/// Perturb the model states, then re-tie the embedding pair (tied
+/// weights receive the same updates in real training).
+fn perturb_tied(sd: &mut StateDict, fraction: f64, seed: u64) {
+    sd.perturb_model_states(fraction, seed);
+    let wte = sd.get("wte.weight").unwrap().tensor.clone();
+    for e in sd.entries_mut() {
+        if e.name == "lm_head.weight" {
+            e.tensor = wte;
+            break;
+        }
+    }
+}
+
+fn assert_dicts_equal(a: &StateDict, b: &StateDict) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.entries().iter().zip(b.entries()) {
+        assert_eq!(x.name, y.name);
+        assert_eq!(x.tensor, y.tensor, "{}", x.name);
+    }
+}
+
+#[test]
+fn tied_embeddings_dedup_across_ranks_and_iterations() {
+    let (shm, store_root) = roots("tied");
+    let storage = Storage::new(&store_root).unwrap();
+    let p = Parallelism::new(4, 1);
+    let mut eng =
+        ShardedCheckpointEngine::new(config("tied", p, &shm, storage.clone())).unwrap();
+    let mut sd = tied_dict(1 << 14, 1);
+    eng.save(10, &sd).unwrap();
+    let at_10 = sd.clone();
+    perturb_tied(&mut sd, 0.05, 2);
+    eng.save(20, &sd).unwrap();
+    eng.flush().unwrap();
+
+    // dedup comes from three directions: lm_head slices == wte slices
+    // within each save, optimizer tensors unchanged across saves, and
+    // the tied pair's *delta* payloads coinciding at iteration 20
+    let stats = storage.stats().unwrap();
+    assert!(stats.blob_count > 0);
+    assert!(
+        stats.dedup_ratio() > 1.3,
+        "tied mp=4 workload must dedup substantially: {stats:?}"
+    );
+    assert_eq!(stats.dead_bytes, 0, "everything written is referenced: {stats:?}");
+
+    // restores stay bit-exact through the dedup'd layout
+    assert_dicts_equal(&at_10, &eng.load_iteration(10).unwrap());
+    assert_dicts_equal(&sd, &eng.load_iteration(20).unwrap());
+    let _ = fs::remove_dir_all(&shm);
+    let _ = fs::remove_dir_all(&store_root);
+}
+
+#[test]
+fn restore_after_gc_is_bit_exact() {
+    let (shm, store_root) = roots("gc");
+    let storage = Storage::new(&store_root).unwrap();
+    let p = Parallelism::new(2, 2);
+    let mut eng = ShardedCheckpointEngine::new(config("gc", p, &shm, storage.clone())).unwrap();
+    let mut sd = tied_dict(1 << 14, 3);
+    // base 10, delta 20, base 30, delta 40 (max_cached_iteration = 2)
+    for iter in [10u64, 20, 30, 40] {
+        perturb_tied(&mut sd, 0.05, 100 + iter);
+        let r = eng.save(iter, &sd).unwrap();
+        assert_eq!(r.is_base, iter == 10 || iter == 30);
+    }
+    eng.flush().unwrap();
+    let final_state = sd.clone();
+    drop(eng);
+
+    // chain-aware GC: keeping the newest (delta 40) must keep base 30
+    let report = storage.gc(&RetentionPolicy::keep_last(1)).unwrap();
+    assert_eq!(report.pruned_iterations, vec![10, 20]);
+    assert_eq!(report.live_iterations, vec![30, 40]);
+    assert!(report.deleted_blobs > 0, "{report:?}");
+    assert!(report.reclaimed_bytes > 0);
+
+    // a cold engine (fresh shm — storage is all that survived) restores
+    // the kept delta bit-exactly
+    let (shm2, _unused) = roots("gc-cold");
+    let eng2 = ShardedCheckpointEngine::new(config("gc-cold", p, &shm2, storage)).unwrap();
+    assert_dicts_equal(&final_state, &eng2.load_iteration(40).unwrap());
+    let _ = fs::remove_dir_all(&shm);
+    let _ = fs::remove_dir_all(&shm2);
+    let _ = fs::remove_dir_all(&store_root);
+}
+
+#[test]
+fn zero_length_slices_store_empty_blobs() {
+    let (shm, store_root) = roots("empty");
+    let storage = Storage::new(&store_root).unwrap();
+    // a 2-element tensor under mp=4 leaves ranks 0 and 2 with
+    // zero-length slices — their payloads are empty blobs
+    let p = Parallelism::new(4, 1);
+    let mut eng =
+        ShardedCheckpointEngine::new(config("empty", p, &shm, storage.clone())).unwrap();
+    let mut sd = StateDict::synthetic_gpt(1 << 12, 4);
+    let tiny = HostTensor::from_f32(&[2], &[1.0, 2.0]).unwrap();
+    sd.push("tiny.weight", StateKind::ModelState, tiny);
+    eng.save(10, &sd).unwrap();
+    eng.flush().unwrap();
+    let cas = storage.blob_store().unwrap();
+    let empty = cas.keys().unwrap().into_iter().find(|k| k.len == 0);
+    assert!(empty.is_some(), "zero-length slices must land as the empty blob");
+    assert_eq!(cas.get(&empty.unwrap()).unwrap(), Vec::<u8>::new());
+    assert_dicts_equal(&sd, &eng.load_iteration(10).unwrap());
+    let _ = fs::remove_dir_all(&shm);
+    let _ = fs::remove_dir_all(&store_root);
+}
