@@ -15,6 +15,13 @@
 //!   host the assertion is physically unsatisfiable and is skipped with
 //!   a loud warning (determinism is still asserted).
 //!
+//! A third, single-rep arm re-runs workers=4 with the span tracer
+//! enabled and asserts its CRC equals the untraced arm's — tracing must
+//! not change a single persisted byte. Its event file is left at env
+//! `TRACE_OUT` (default `events.jsonl`) for the CI trace-schema check;
+//! the arm is deliberately NOT part of `BENCH_pipeline.json` (the
+//! regression gate's baseline arrays are arm-count-exact).
+//!
 //! Emits `BENCH_pipeline.json` (override with env `BENCH_OUT`) — the CI
 //! bench-regression gate re-checks the equal-bytes fields and ratio
 //! floor from `bench_baselines/`.
@@ -117,6 +124,55 @@ fn run_arm(params: usize, p: Parallelism, workers: usize) -> ArmResult {
     }
 }
 
+/// One traced rep of the workers=4 arm: drives the identical save
+/// trajectory with the span tracer on, returns the artifact CRC (the
+/// caller asserts it equals the untraced pooled arm's), and copies the
+/// event file to env `TRACE_OUT` (default `events.jsonl`) for the CI
+/// schema check.
+fn run_traced_arm(params: usize, p: Parallelism) -> u64 {
+    let pid = std::process::id();
+    let tag = format!("bench-pipe-traced-{pid}");
+    let shm_root = std::env::temp_dir().join(format!("{tag}-shm"));
+    let store_root = std::env::temp_dir().join(format!("{tag}-store"));
+    let _ = std::fs::remove_dir_all(&shm_root);
+    let _ = std::fs::remove_dir_all(&store_root);
+    let storage = Storage::new(&store_root).unwrap();
+    let events_path = storage.tracer().enable(store_root.join("trace")).unwrap();
+    let cfg = ShardedEngineConfig {
+        job: tag.clone(),
+        parallelism: p,
+        shm_root: shm_root.clone(),
+        storage: storage.clone(),
+        redundancy: 2,
+        policy: Policy::bitsnap(),
+        max_cached_iteration: MAX_CACHED,
+        persist: PersistConfig::with_workers(4),
+    };
+    let mut eng = ShardedCheckpointEngine::new(cfg).unwrap();
+    let mut sd = StateDict::synthetic_gpt(params, 1);
+    for (i, iter) in SAVES.into_iter().enumerate() {
+        sd.perturb_model_states(0.05, 900 + i as u64);
+        eng.save(iter, &sd).unwrap();
+    }
+    eng.flush().unwrap();
+    let mut artifact_bytes = Vec::new();
+    for iter in SAVES {
+        for rank in 0..p.world() {
+            artifact_bytes.extend_from_slice(&storage.get(iter, rank).unwrap());
+        }
+        artifact_bytes.extend_from_slice(&storage.get_manifest(iter).unwrap());
+    }
+    let crc = container::crc64(&artifact_bytes);
+    // join the agent threads before harvesting the event file, so the
+    // last persist spans are flushed to it
+    drop(eng);
+    let trace_out = std::env::var("TRACE_OUT").unwrap_or_else(|_| "events.jsonl".to_string());
+    std::fs::copy(&events_path, &trace_out).expect("copy trace events");
+    let _ = std::fs::remove_dir_all(&shm_root);
+    let _ = std::fs::remove_dir_all(&store_root);
+    crc
+}
+
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
@@ -174,6 +230,14 @@ fn main() {
     } else {
         println!("WARNING: single-core host — skipping the strict speedup assertion");
     }
+
+    // traced arm: tracing must not change a single persisted byte
+    let traced_crc = run_traced_arm(params, p);
+    assert_eq!(
+        pooled.output_crc, traced_crc,
+        "tracing must not change a single persisted byte"
+    );
+    println!("traced arm byte-identical to untraced (crc64 {traced_crc:#018x})");
 
     let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_pipeline.json".to_string());
     let arm_json = |a: &ArmResult| {

@@ -1,0 +1,201 @@
+#!/usr/bin/env python3
+"""Trace-schema gate: validate a BitSnap trace event file line by line.
+
+The span tracer (``rust/src/obs/trace.rs``) appends one JSON object per
+completed span to ``<storage root>/trace/events.jsonl``. ``trace-report``
+and any external consumer (Perfetto conversion, dashboards) parse that
+file, so its shape is a contract. This gate re-checks it on the event
+file the traced bench arm produces in CI:
+
+* every line is a standalone JSON object (JSONL, no arrays, no blanks);
+* required keys with required types:
+    ``id`` int >= 1, unique within the file;
+    ``parent`` null or an int that references an ``id`` present in the
+    file (parents are written *after* their children, so the reference
+    may be forward);
+    ``name`` non-empty string;
+    ``start_us`` int >= 0; ``dur_us`` int >= 0;
+    ``status`` either ``"ok"`` or ``"error"``;
+    ``bytes`` null or int >= 0;
+    ``attrs`` object mapping strings to strings;
+* no unexpected top-level keys (a producer-side field rename must be a
+  deliberate schema change, not a silent drift);
+* at least one event (an empty file means tracing silently never fired).
+
+Usage:
+  check_trace_schema.py <events.jsonl>
+  check_trace_schema.py --self-test
+
+``--self-test`` verifies the gate itself catches injected schema breaks.
+"""
+
+import argparse
+import json
+import sys
+
+REQUIRED = {
+    "id": int,
+    "parent": (int, type(None)),
+    "name": str,
+    "start_us": int,
+    "dur_us": int,
+    "status": str,
+    "bytes": (int, type(None)),
+    "attrs": dict,
+}
+
+
+def check_lines(lines):
+    """Validate decoded JSONL lines; returns human-readable failures."""
+    fails = []
+    events = []
+    for n, raw in enumerate(lines, start=1):
+        if not raw.strip():
+            fails.append(f"line {n}: blank line in JSONL stream")
+            continue
+        try:
+            ev = json.loads(raw)
+        except ValueError as e:
+            fails.append(f"line {n}: not valid JSON: {e}")
+            continue
+        if not isinstance(ev, dict):
+            fails.append(f"line {n}: not a JSON object")
+            continue
+        events.append((n, ev))
+
+    ids = {}
+    for n, ev in events:
+        for key, want in REQUIRED.items():
+            if key not in ev:
+                fails.append(f"line {n}: missing key {key!r}")
+            elif not isinstance(ev[key], want) or isinstance(ev[key], bool):
+                fails.append(
+                    f"line {n}: {key}={ev[key]!r} has the wrong type "
+                    f"(got {type(ev[key]).__name__})"
+                )
+        for key in ev:
+            if key not in REQUIRED:
+                fails.append(f"line {n}: unexpected key {key!r}")
+        sid = ev.get("id")
+        if isinstance(sid, int) and not isinstance(sid, bool):
+            if sid < 1:
+                fails.append(f"line {n}: id {sid} < 1")
+            elif sid in ids:
+                fails.append(f"line {n}: duplicate id {sid} (first on line {ids[sid]})")
+            else:
+                ids[sid] = n
+        name = ev.get("name")
+        if isinstance(name, str) and not name:
+            fails.append(f"line {n}: empty span name")
+        status = ev.get("status")
+        if isinstance(status, str) and status not in ("ok", "error"):
+            fails.append(f"line {n}: status {status!r} not in {{ok, error}}")
+        for key in ("start_us", "dur_us"):
+            v = ev.get(key)
+            if isinstance(v, int) and not isinstance(v, bool) and v < 0:
+                fails.append(f"line {n}: {key} {v} < 0")
+        b = ev.get("bytes")
+        if isinstance(b, int) and not isinstance(b, bool) and b < 0:
+            fails.append(f"line {n}: bytes {b} < 0")
+        attrs = ev.get("attrs")
+        if isinstance(attrs, dict):
+            for k, v in attrs.items():
+                if not isinstance(v, str):
+                    fails.append(f"line {n}: attr {k!r} value {v!r} is not a string")
+
+    # parents may be forward references (parents are logged after their
+    # children), so resolve against the full id set
+    for n, ev in events:
+        parent = ev.get("parent")
+        if isinstance(parent, int) and not isinstance(parent, bool) and parent not in ids:
+            fails.append(f"line {n}: parent {parent} does not reference any event id")
+
+    if not events and not fails:
+        fails.append("event file is empty: tracing never fired")
+    return fails
+
+
+def check_file(path):
+    try:
+        with open(path) as f:
+            lines = f.read().splitlines()
+    except OSError as e:
+        print(f"ERROR: cannot read {path}: {e}", file=sys.stderr)
+        return 1
+    fails = check_lines(lines)
+    if fails:
+        print(f"FAIL: {len(fails)} trace schema violation(s) in {path}:", file=sys.stderr)
+        for f in fails:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"OK   {path}: {len(lines)} events conform to the trace schema")
+    return 0
+
+
+def self_test():
+    """The gate must catch what it claims to catch."""
+    ok = [
+        '{"id": 1, "parent": 2, "name": "encode_tensor", "start_us": 10, '
+        '"dur_us": 5, "status": "ok", "bytes": 128, "attrs": {"rank": "0"}}',
+        '{"id": 2, "parent": 3, "name": "encode", "start_us": 9, '
+        '"dur_us": 7, "status": "ok", "bytes": null, "attrs": {"workers": "4"}}',
+        '{"id": 3, "parent": null, "name": "save", "start_us": 0, '
+        '"dur_us": 20, "status": "error", "bytes": null, "attrs": {}}',
+    ]
+
+    def mutate(idx, **kv):
+        lines = list(ok)
+        ev = json.loads(lines[idx])
+        for k, v in kv.items():
+            if v is ...:
+                ev.pop(k, None)
+            else:
+                ev[k] = v
+        lines[idx] = json.dumps(ev)
+        return lines
+
+    cases = [
+        ("clean pass", check_lines(ok), False),
+        ("truncated JSON line", check_lines(ok[:2] + [ok[2][:25]]), True),
+        ("blank line mid-stream", check_lines([ok[0], "", ok[1], ok[2]]), True),
+        ("missing dur_us", check_lines(mutate(0, dur_us=...)), True),
+        ("unexpected extra key", check_lines(mutate(0, wall_secs=1.5)), True),
+        ("string timestamp", check_lines(mutate(1, start_us="10")), True),
+        ("bad status", check_lines(mutate(1, status="warn")), True),
+        ("duplicate id", check_lines(mutate(0, id=2)), True),
+        ("dangling parent ref", check_lines(mutate(0, parent=99)), True),
+        ("id below 1", check_lines(mutate(2, id=0)), True),
+        ("non-string attr value", check_lines(mutate(0, attrs={"rank": 0})), True),
+        ("negative bytes", check_lines(mutate(0, bytes=-1)), True),
+        ("empty file", check_lines([]), True),
+    ]
+    failed = False
+    for name, fails, should_fail in cases:
+        caught = bool(fails)
+        verdict = "ok" if caught == should_fail else "BROKEN"
+        if caught != should_fail:
+            failed = True
+        print(f"self-test [{verdict}] {name}: {len(fails)} finding(s)")
+        for f in fails:
+            print(f"    {f}")
+    if failed:
+        print("self-test FAILED: the gate does not catch what it must", file=sys.stderr)
+        return 1
+    print("self-test passed: the gate fails on injected schema breaks and passes clean files")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("events", nargs="?", help="path to a trace events.jsonl")
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+    if args.self_test:
+        sys.exit(self_test())
+    if not args.events:
+        ap.error("give an events.jsonl path or --self-test")
+    sys.exit(check_file(args.events))
+
+
+if __name__ == "__main__":
+    main()

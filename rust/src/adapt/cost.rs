@@ -20,6 +20,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::compress::{bitmask, cluster_quant, coo, CodecId, CodecSpec};
 use crate::engine::Storage;
+use crate::obs::Metrics;
 use crate::tensor::{HostTensor, XorShiftRng};
 
 use super::probe::TensorProbe;
@@ -166,11 +167,23 @@ impl Calibration {
 #[derive(Clone, Debug)]
 pub struct SharedCalibration {
     inner: Arc<Mutex<Calibration>>,
+    /// When set, every feedback observation publishes the corrected
+    /// per-codec throughput as the `bitsnap_encode_bytes_per_second`
+    /// gauge (labeled by codec).
+    metrics: Option<Metrics>,
 }
 
 impl SharedCalibration {
     pub fn new(calibration: Calibration) -> Self {
-        Self { inner: Arc::new(Mutex::new(calibration)) }
+        Self { inner: Arc::new(Mutex::new(calibration)), metrics: None }
+    }
+
+    /// Publish calibrated throughputs into `metrics` on every feedback
+    /// observation (`train --trace` passes the storage tracer's
+    /// registry).
+    pub fn with_metrics(mut self, metrics: Metrics) -> Self {
+        self.metrics = Some(metrics);
+        self
     }
 
     pub fn encode_bps(&self, codec: CodecId) -> f64 {
@@ -183,7 +196,17 @@ impl SharedCalibration {
 
     /// See [`Calibration::observe_encode`].
     pub fn observe_encode(&self, codec: CodecId, raw_bytes: usize, secs: f64) {
-        self.inner.lock().unwrap().observe_encode(codec, raw_bytes, secs);
+        let mut cal = self.inner.lock().unwrap();
+        cal.observe_encode(codec, raw_bytes, secs);
+        if let Some(m) = &self.metrics {
+            let bps = cal.encode_bps(codec);
+            drop(cal);
+            m.gauge_set(
+                "bitsnap_encode_bytes_per_second",
+                &[("codec", &format!("{codec:?}"))],
+                bps,
+            );
+        }
     }
 
     /// A point-in-time copy of the table (reports, tests).

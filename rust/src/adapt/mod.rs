@@ -94,6 +94,13 @@ pub trait PolicySource: Send {
     /// ignored.
     fn observe(&mut self, _outcome: &SaveOutcome) {}
 
+    /// Per-tensor decision records produced since the last drain — the
+    /// traced save emits these as `decision` events under its `plan`
+    /// span. Default: none (static sources decide nothing per-tensor).
+    fn drain_decisions(&mut self) -> Vec<DecisionRecord> {
+        Vec::new()
+    }
+
     /// Human-readable description for logs and reports.
     fn describe(&self) -> String;
 }

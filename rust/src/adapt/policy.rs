@@ -205,6 +205,10 @@ pub struct AdaptivePolicy {
     /// kept lossless through Mid/Late flapping.
     sticky_lossless: HashSet<String>,
     decisions: Vec<DecisionRecord>,
+    /// Cursor into `decisions`: records before it were already handed out
+    /// by [`PolicySource::drain_decisions`] (the log itself is kept whole
+    /// for [`AdaptivePolicy::summaries`]).
+    drained: usize,
     outcomes: HashMap<u64, usize>,
     /// Per-iteration predicted encode work — (codec, raw bytes, predicted
     /// seconds) per tensor — awaiting the engine's [`SaveOutcome`] so the
@@ -229,6 +233,7 @@ impl AdaptivePolicy {
             incumbent: HashMap::new(),
             sticky_lossless: HashSet::new(),
             decisions: Vec::new(),
+            drained: 0,
             outcomes: HashMap::new(),
             pending_encode: HashMap::new(),
         }
@@ -415,6 +420,7 @@ impl AdaptivePolicy {
         if self.decisions.len() > self.cfg.max_history {
             let excess = self.decisions.len() - self.cfg.max_history;
             self.decisions.drain(..excess);
+            self.drained = self.drained.saturating_sub(excess);
         }
     }
 }
@@ -485,6 +491,12 @@ impl PolicySource for AdaptivePolicy {
             let min = self.pending_encode.keys().copied().min().unwrap();
             self.pending_encode.remove(&min);
         }
+    }
+
+    fn drain_decisions(&mut self) -> Vec<DecisionRecord> {
+        let out = self.decisions[self.drained..].to_vec();
+        self.drained = self.decisions.len();
+        out
     }
 
     fn describe(&self) -> String {
@@ -869,6 +881,24 @@ mod tests {
         let mut policy2 = AdaptivePolicy::default_host();
         policy2.plan(&ctx(0, &sd2, None));
         assert!(policy2.decisions().iter().all(|d| !d.deduped));
+    }
+
+    #[test]
+    fn drain_decisions_hands_out_each_record_once() {
+        let base = StateDict::synthetic_gpt(1 << 14, 60);
+        let mut policy = AdaptivePolicy::default_host();
+        policy.plan(&ctx(0, &base, None));
+        let first = policy.drain_decisions();
+        assert!(!first.is_empty());
+        assert!(policy.drain_decisions().is_empty(), "a second drain is empty");
+        let mut sd = base.clone();
+        sd.perturb_model_states(0.1, 61);
+        policy.plan(&ctx(10, &sd, Some(&base)));
+        let second = policy.drain_decisions();
+        assert!(second.iter().all(|d| d.iteration == 10), "only the new save's records");
+        // the full log (and summaries) are untouched by draining
+        assert_eq!(policy.decisions().len(), first.len() + second.len());
+        assert_eq!(policy.summaries().len(), 2);
     }
 
     #[test]

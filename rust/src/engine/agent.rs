@@ -25,7 +25,7 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::adapt::{PolicySource, SaveContext, SaveOutcome, StaticPolicySource};
+use crate::adapt::{DecisionRecord, PolicySource, SaveContext, SaveOutcome, StaticPolicySource};
 use crate::compress::delta::{
     compress_state_dict_planned, decompress_state_dict, CheckpointPlan, CompressTimings,
     CompressedCheckpoint, Policy,
@@ -260,6 +260,14 @@ impl CheckpointEngine {
         self.policy_source.telemetry(iteration, loss);
     }
 
+    /// Per-tensor decision records the policy source produced since the
+    /// last drain (see
+    /// [`crate::adapt::PolicySource::drain_decisions`]) — the traced
+    /// sharded save emits these as `decision` events under its plan span.
+    pub fn drain_decisions(&mut self) -> Vec<DecisionRecord> {
+        self.policy_source.drain_decisions()
+    }
+
     pub fn shm(&self) -> &ShmStore {
         &self.shm
     }
@@ -369,16 +377,34 @@ impl CheckpointEngine {
     /// [`CheckpointEngine::begin_save`] / [`CheckpointEngine::commit_encoded`]
     /// directly.)
     pub fn save(&mut self, iteration: u64, sd: &StateDict) -> Result<SaveReport, CompressError> {
+        let tracer = self.cfg.storage.tracer().clone();
+        let mut root = tracer.span("save");
+        root.attr("iteration", iteration);
+        root.attr("rank", self.cfg.rank);
+        root.attr("workers", 1);
         let t0 = Instant::now();
         let prep = self.begin_save(iteration, sd);
+        root.attr("kind", if prep.is_base { "base" } else { "delta" });
         let base = if prep.is_base { None } else { self.base_state() };
         let t_enc = Instant::now();
         let (ckpt, timings) =
-            compress_state_dict_planned(sd, base, &prep.plan, iteration, prep.base_iteration)?;
+            match compress_state_dict_planned(sd, base, &prep.plan, iteration, prep.base_iteration)
+            {
+                Ok(v) => v,
+                Err(e) => {
+                    root.fail(&e.to_string());
+                    return Err(e);
+                }
+            };
         let blobs = ckpt.entries.iter().map(|e| BlobKey::of(&e.compressed.payload)).collect();
         let encode = t_enc.elapsed();
         let enc = EncodedSave { ckpt, blobs, timings, encode, encode_workers: 1 };
-        self.commit_encoded(prep, sd, enc, t0)
+        let res = self.commit_encoded(prep, sd, enc, t0);
+        match &res {
+            Ok(r) => root.set_bytes(r.compressed_bytes as u64),
+            Err(e) => root.fail(&e.to_string()),
+        }
+        res
     }
 
     /// Seed the delta chain from a restored checkpoint instead of forcing

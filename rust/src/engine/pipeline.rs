@@ -34,11 +34,14 @@
 //! serial path holds every encoded tensor of a save too; the queue
 //! bounds the producer→worker handoff, not the save's working set.)
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Mutex;
 use std::thread;
+use std::time::Instant;
 
 use crate::compress::CompressError;
+use crate::obs::Metrics;
 
 /// Environment variable the CI thread matrix sets so the tier-1 test
 /// suite runs the whole engine under different real concurrency levels.
@@ -153,23 +156,48 @@ impl EncodePool {
         T: Send,
         F: FnOnce() -> Result<T, CompressError> + Send,
     {
+        self.run_metered(jobs, None)
+    }
+
+    /// [`EncodePool::run`] with pipeline metering: each job's queue wait
+    /// (submission → dequeue) lands in the
+    /// `bitsnap_pipeline_queue_wait_seconds` histogram and the run's
+    /// worker occupancy — busy time over `workers × wall` — in the
+    /// `bitsnap_pipeline_worker_occupancy` gauge. Metering changes
+    /// nothing about results or ordering; `None` is exactly
+    /// [`EncodePool::run`].
+    pub fn run_metered<T, F>(
+        &self,
+        jobs: Vec<F>,
+        metrics: Option<&Metrics>,
+    ) -> Result<Vec<T>, CompressError>
+    where
+        T: Send,
+        F: FnOnce() -> Result<T, CompressError> + Send,
+    {
         let n = jobs.len();
         if n == 0 {
             return Ok(Vec::new());
         }
         let workers = self.cfg.workers.min(n);
         if workers == 1 {
+            // inline: the caller is the one worker and is busy throughout
+            if let Some(m) = metrics {
+                m.gauge_set("bitsnap_pipeline_worker_occupancy", &[], 1.0);
+            }
             let mut out = Vec::with_capacity(n);
             for job in jobs {
                 out.push(run_job(job)?);
             }
             return Ok(out);
         }
+        let t0 = Instant::now();
+        let busy_ns = AtomicU64::new(0);
         // one slot per job: workers write results by index, assembly
         // reads them in order — this is where determinism comes from
         let slots: Vec<Mutex<Option<Result<T, CompressError>>>> =
             (0..n).map(|_| Mutex::new(None)).collect();
-        let (tx, rx) = mpsc::sync_channel::<(usize, F)>(self.cfg.queue_depth);
+        let (tx, rx) = mpsc::sync_channel::<(usize, Instant, F)>(self.cfg.queue_depth);
         let rx = Mutex::new(rx);
         // the lock guard lives only inside this call, so workers hold the
         // receiver lock for the dequeue, never while encoding (a bare
@@ -179,8 +207,17 @@ impl EncodePool {
         thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| {
-                    while let Some((idx, job)) = next_job() {
+                    while let Some((idx, submitted, job)) = next_job() {
+                        if let Some(m) = metrics {
+                            m.observe(
+                                "bitsnap_pipeline_queue_wait_seconds",
+                                &[],
+                                submitted.elapsed().as_secs_f64(),
+                            );
+                        }
+                        let t_job = Instant::now();
                         let result = run_job(job);
+                        busy_ns.fetch_add(t_job.elapsed().as_nanos() as u64, Ordering::Relaxed);
                         *slots[idx].lock().unwrap() = Some(result);
                     }
                 });
@@ -189,13 +226,19 @@ impl EncodePool {
             // jobs are waiting (backpressure); send only fails if every
             // worker is gone, which cannot happen (workers never exit
             // before the channel closes), but don't panic on it either
-            for item in jobs.into_iter().enumerate() {
-                if tx.send(item).is_err() {
+            for (idx, job) in jobs.into_iter().enumerate() {
+                if tx.send((idx, Instant::now(), job)).is_err() {
                     break;
                 }
             }
             drop(tx);
         });
+        if let Some(m) = metrics {
+            let wall = t0.elapsed().as_secs_f64().max(1e-9);
+            let occupancy =
+                busy_ns.load(Ordering::Relaxed) as f64 / 1e9 / (workers as f64 * wall);
+            m.gauge_set("bitsnap_pipeline_worker_occupancy", &[], occupancy.min(1.0));
+        }
         let mut out = Vec::with_capacity(n);
         for slot in slots {
             match slot.into_inner().unwrap() {
@@ -344,6 +387,36 @@ mod tests {
         let p = pool(4, 2);
         let out: Vec<usize> = p.run(Vec::<fn() -> Result<usize, CompressError>>::new()).unwrap();
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn run_metered_records_queue_wait_and_occupancy() {
+        let m = Metrics::new();
+        let p = pool(3, 2);
+        let jobs: Vec<_> = (0..24usize)
+            .map(|i| {
+                move || {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                    Ok(i)
+                }
+            })
+            .collect();
+        let out = p.run_metered(jobs, Some(&m)).unwrap();
+        assert_eq!(out, (0..24).collect::<Vec<_>>());
+        let (_, count) = m.histogram_totals("bitsnap_pipeline_queue_wait_seconds", &[]);
+        assert_eq!(count, 24, "one queue-wait sample per job");
+        let occ = m.gauge_value("bitsnap_pipeline_worker_occupancy", &[]).unwrap();
+        assert!(occ > 0.0 && occ <= 1.0, "{occ}");
+        // inline path: the caller is the worker — occupancy 1.0, no queue
+        let m2 = Metrics::new();
+        let p1 = pool(1, 1);
+        let jobs: Vec<_> = (0..4usize).map(|i| move || Ok(i)).collect();
+        assert_eq!(p1.run_metered(jobs, Some(&m2)).unwrap().len(), 4);
+        assert_eq!(m2.histogram_totals("bitsnap_pipeline_queue_wait_seconds", &[]).1, 0);
+        assert_eq!(m2.gauge_value("bitsnap_pipeline_worker_occupancy", &[]), Some(1.0));
+        // and metering off is exactly run()
+        let jobs: Vec<_> = (0..4usize).map(|i| move || Ok(i * 2)).collect();
+        assert_eq!(p.run_metered(jobs, None).unwrap(), vec![0, 2, 4, 6]);
     }
 
     #[test]

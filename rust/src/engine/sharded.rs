@@ -37,12 +37,14 @@ use crate::compress::delta::{
     CompressedEntry, Policy,
 };
 use crate::compress::{CodecSpec, CompressError};
+use crate::obs::{Span, Tracer};
 use crate::store::BlobKey;
 use crate::tensor::StateDict;
 use crate::train::parallel::{entry_stage, shard_bounds, shard_state_dict, Parallelism};
 
 use super::agent::{AgentStats, CheckpointEngine, EncodedSave, EngineConfig, SaveReport};
 use super::container::{self, ManifestEntry, ShardManifest};
+use super::failure::FailureKind;
 use super::pipeline::{EncodePool, PersistConfig};
 use super::recovery::{
     all_gather_check, apply_pruning, decode_rank_shards, reassemble_state_dict, RankView,
@@ -109,10 +111,16 @@ pub struct ShardedSaveReport {
     /// commit (encode runs pooled across ranks, so this is effectively
     /// the save's wall time on this host).
     pub simulated_parallel: Duration,
+    /// Wall time of the planning phase (per-rank policy sources probing
+    /// their shards).
+    pub plan_wall: Duration,
     /// Wall time of the pooled encode phase alone (all ranks' tensors
     /// through the worker pool) — the number `bench_pipeline` races
     /// across worker counts.
     pub encode_wall: Duration,
+    /// Wall time of the commit phase (serialize + shm staging + async
+    /// enqueue per rank, then the manifest write).
+    pub commit_wall: Duration,
     /// Worker-pool size that encoded this save.
     pub encode_workers: usize,
 }
@@ -130,6 +138,9 @@ pub struct ShardedCheckpointEngine {
     storage: Storage,
     /// Encode worker pool shared by every rank's save work.
     pool: EncodePool,
+    /// One-shot test hook: fail the next save's encode phase with this
+    /// kind ([`Self::inject_encode_failure`]).
+    planted_failure: Option<FailureKind>,
 }
 
 impl ShardedCheckpointEngine {
@@ -165,7 +176,24 @@ impl ShardedCheckpointEngine {
             engines,
             storage: cfg.storage,
             pool: EncodePool::new(cfg.persist),
+            planted_failure: None,
         })
+    }
+
+    /// The tracer shared with this engine's storage backend — enabling it
+    /// here (or on any [`Storage`] clone) traces every rank's saves,
+    /// restores and async persists.
+    pub fn tracer(&self) -> &Tracer {
+        self.storage.tracer()
+    }
+
+    /// Arm a one-shot failure for the next save's encode phase (the
+    /// [`FailureKind`] names what a production crash would have
+    /// corrupted). The save aborts exactly like a real encode error —
+    /// before any counter, shm or storage mutation — so the engine stays
+    /// reusable afterwards.
+    pub fn inject_encode_failure(&mut self, kind: FailureKind) {
+        self.planted_failure = Some(kind);
     }
 
     pub fn parallelism(&self) -> Parallelism {
@@ -203,6 +231,37 @@ impl ShardedCheckpointEngine {
         iteration: u64,
         sd: &StateDict,
     ) -> Result<ShardedSaveReport, CompressError> {
+        let tracer = self.storage.tracer().clone();
+        let mut root = tracer.span("save");
+        root.attr("iteration", iteration);
+        root.attr("mp", self.parallelism.mp);
+        root.attr("pp", self.parallelism.pp);
+        root.attr("workers", self.pool.workers());
+        match self.save_traced(iteration, sd, &tracer, &mut root) {
+            Ok(report) => {
+                root.attr("kind", if report.is_base { "base" } else { "delta" });
+                root.set_bytes(report.compressed_bytes as u64);
+                Ok(report)
+            }
+            Err(e) => {
+                root.fail(&e.to_string());
+                Err(e)
+            }
+        }
+    }
+
+    /// [`Self::save`] under an open root span: each phase opens a child
+    /// span, encode workers attach per-tensor spans across threads, and
+    /// any error becomes the root's terminal status. All spans are inert
+    /// when the tracer is disabled, and nothing here touches checkpoint
+    /// bytes — the artifacts stay byte-identical with tracing on or off.
+    fn save_traced(
+        &mut self,
+        iteration: u64,
+        sd: &StateDict,
+        tracer: &Tracer,
+        root: &mut Span,
+    ) -> Result<ShardedSaveReport, CompressError> {
         let t0 = Instant::now();
         // verify fleet-wide cadence agreement BEFORE any rank stages
         // bytes — a prior save that failed mid-commit advanced some
@@ -218,69 +277,139 @@ impl ShardedCheckpointEngine {
         }
         let shards = shard_state_dict(sd, self.parallelism);
         // phase 1 — plan
+        let t_plan = Instant::now();
+        let mut plan_span = tracer.span_with_parent("plan", Some(root.id()));
         let mut preps = Vec::with_capacity(shards.len());
         for (rank, shard) in shards.iter().enumerate() {
             preps.push(self.engines[rank].begin_save(iteration, shard));
+            if tracer.is_enabled() {
+                for d in self.engines[rank].drain_decisions() {
+                    let mut attrs = vec![
+                        ("rank", rank.to_string()),
+                        ("tensor", d.name.clone()),
+                        ("codec", d.spec.label()),
+                    ];
+                    if d.deduped {
+                        attrs.push(("deduped", "true".into()));
+                    } else {
+                        attrs.push(("predicted_bytes", d.predicted_bytes.to_string()));
+                        attrs.push(("raw_bytes", d.raw_bytes.to_string()));
+                        attrs.push(("predicted_secs", d.predicted_secs.to_string()));
+                    }
+                    if d.switched {
+                        attrs.push(("switched", "true".into()));
+                    }
+                    tracer.instant("decision", Some(plan_span.id()), &attrs);
+                }
+            }
         }
         let base_iteration = preps[0].base_iteration;
         // second line of defense: refuse to encode a fleet whose delta
         // chains anchor at different bases. Nothing is staged yet, so
         // this failure is a clean no-op.
         if preps.iter().any(|p| p.is_base != will_base || p.base_iteration != base_iteration) {
-            return Err(CompressError::Format(
-                "rank delta chains anchor at different base iterations; \
-                 rebuild the engine before saving again"
-                    .into(),
-            ));
+            let msg = "rank delta chains anchor at different base iterations; \
+                       rebuild the engine before saving again";
+            plan_span.fail(msg);
+            return Err(CompressError::Format(msg.into()));
         }
+        plan_span.end();
+        let plan_wall = t_plan.elapsed();
         // phase 2 — encode through the worker pool, one job per tensor,
         // in (rank, entry) submission order
         let t_enc = Instant::now();
+        let mut encode_span = tracer.span_with_parent("encode", Some(root.id()));
+        encode_span.attr("workers", self.pool.workers());
+        let encode_id = encode_span.id();
+        if let Some(kind) = self.planted_failure.take() {
+            let e = CompressError::Engine(format!("injected failure during encode: {kind:?}"));
+            encode_span.fail(&e.to_string());
+            root.attr("failure_kind", format!("{kind:?}"));
+            return Err(e);
+        }
         let mut jobs = Vec::new();
         for (rank, shard) in shards.iter().enumerate() {
             let prep = &preps[rank];
             let base = if prep.is_base { None } else { self.engines[rank].base_state() };
             let plan = &prep.plan;
             for e in shard.entries() {
+                let tracer = tracer.clone();
                 jobs.push(move || {
                     let t = Instant::now();
+                    let mut span = tracer.span_with_parent("encode_tensor", Some(encode_id));
+                    span.attr("rank", rank);
+                    span.attr("tensor", &e.name);
                     // the worker hashes the payload it just produced, so
                     // the manifest's blob keys (and the storage layer's
                     // dedup) cost nothing on the blocking commit path
-                    compress_entry_planned(&e.name, e.kind, &e.tensor, base, plan)
-                        .map(|(c, tm)| (BlobKey::of(&c.payload), c, tm, t.elapsed()))
+                    let res = compress_entry_planned(&e.name, e.kind, &e.tensor, base, plan)
+                        .map(|(c, tm)| (BlobKey::of(&c.payload), c, tm, t.elapsed()));
+                    match &res {
+                        Ok((_, c, _, _)) => {
+                            span.attr("codec", c.spec.label());
+                            span.set_bytes(c.payload.len() as u64);
+                        }
+                        Err(err) => span.fail(&err.to_string()),
+                    }
+                    res
                 });
             }
         }
-        let encoded = self.pool.run(jobs)?;
+        let encoded = match self.pool.run_metered(jobs, Some(tracer.metrics())) {
+            Ok(encoded) => encoded,
+            Err(e) => {
+                encode_span.fail(&e.to_string());
+                return Err(e);
+            }
+        };
+        encode_span.end();
         let encode_wall = t_enc.elapsed();
         // phase 3 — reassemble per-rank containers in entry order and
         // commit each rank
         let encode_workers = self.pool.workers();
-        let mut encoded = encoded.into_iter();
-        let mut per_rank = Vec::with_capacity(shards.len());
-        for (rank, prep) in preps.into_iter().enumerate() {
-            let shard = &shards[rank];
-            let mut entries = Vec::with_capacity(shard.len());
-            let mut blobs = Vec::with_capacity(shard.len());
-            let mut timings = CompressTimings::default();
-            let mut encode = Duration::ZERO;
-            for e in shard.entries() {
-                let (key, compressed, tm, item_wall) =
-                    encoded.next().expect("one result per job");
-                timings.add(&tm);
-                // summed per-item wall = serial-equivalent encode time:
-                // keeps the calibration's implied bytes/sec per-worker
-                encode += item_wall;
-                blobs.push(key);
-                entries.push(CompressedEntry { name: e.name.clone(), kind: e.kind, compressed });
+        let t_commit = Instant::now();
+        let mut commit_span = tracer.span_with_parent("commit", Some(root.id()));
+        let commit = || -> Result<Vec<SaveReport>, CompressError> {
+            let mut encoded = encoded.into_iter();
+            let mut per_rank = Vec::with_capacity(shards.len());
+            for (rank, prep) in preps.into_iter().enumerate() {
+                let shard = &shards[rank];
+                let mut entries = Vec::with_capacity(shard.len());
+                let mut blobs = Vec::with_capacity(shard.len());
+                let mut timings = CompressTimings::default();
+                let mut encode = Duration::ZERO;
+                for e in shard.entries() {
+                    let (key, compressed, tm, item_wall) =
+                        encoded.next().expect("one result per job");
+                    timings.add(&tm);
+                    // summed per-item wall = serial-equivalent encode time:
+                    // keeps the calibration's implied bytes/sec per-worker
+                    encode += item_wall;
+                    blobs.push(key);
+                    entries.push(CompressedEntry {
+                        name: e.name.clone(),
+                        kind: e.kind,
+                        compressed,
+                    });
+                }
+                let ckpt = CompressedCheckpoint { entries, iteration, base_iteration };
+                let enc = EncodedSave { ckpt, blobs, timings, encode, encode_workers };
+                per_rank.push(self.engines[rank].commit_encoded(prep, shard, enc, t0)?);
             }
-            let ckpt = CompressedCheckpoint { entries, iteration, base_iteration };
-            let enc = EncodedSave { ckpt, blobs, timings, encode, encode_workers };
-            per_rank.push(self.engines[rank].commit_encoded(prep, shard, enc, t0)?);
-        }
-        let manifest = build_manifest(sd, self.parallelism, iteration, base_iteration, &per_rank)?;
-        self.storage.put_manifest(iteration, &container::serialize_manifest(&manifest))?;
+            let manifest =
+                build_manifest(sd, self.parallelism, iteration, base_iteration, &per_rank)?;
+            self.storage.put_manifest(iteration, &container::serialize_manifest(&manifest))?;
+            Ok(per_rank)
+        };
+        let per_rank = match commit() {
+            Ok(per_rank) => per_rank,
+            Err(e) => {
+                commit_span.fail(&e.to_string());
+                return Err(e);
+            }
+        };
+        commit_span.end();
+        let commit_wall = t_commit.elapsed();
         let compressed_bytes = per_rank.iter().map(|r| r.compressed_bytes).sum();
         let simulated_parallel = per_rank.iter().map(|r| r.blocking).max().unwrap_or_default();
         Ok(ShardedSaveReport {
@@ -290,7 +419,9 @@ impl ShardedCheckpointEngine {
             raw_bytes: sd.total_bytes(),
             compressed_bytes,
             simulated_parallel,
+            plan_wall,
             encode_wall,
+            commit_wall,
             encode_workers,
         })
     }
@@ -328,8 +459,18 @@ impl ShardedCheckpointEngine {
     /// resolve through the manifests, including across a reshard, where
     /// each rank's delta decodes against the *resliced* base shard.
     pub fn load_iteration(&self, iteration: u64) -> Result<StateDict, CompressError> {
-        let manifest = self.manifest(iteration)?;
-        self.load_manifest_state(&manifest)
+        let tracer = self.storage.tracer().clone();
+        let mut root = tracer.span("restore");
+        root.attr("iteration", iteration);
+        let res = (|| {
+            let manifest = self.manifest(iteration)?;
+            self.load_manifest_state(&manifest, Some(root.id()))
+        })();
+        match &res {
+            Ok(sd) => root.set_bytes(sd.total_bytes() as u64),
+            Err(e) => root.fail(&e.to_string()),
+        }
+        res
     }
 
     /// One rank container of one iteration: shm when the layout matches
@@ -353,8 +494,12 @@ impl ShardedCheckpointEngine {
 
     /// See [`ShardedCheckpointEngine::load_iteration`]. Recursion depth
     /// equals the delta-chain depth (1 for the base-then-deltas cadence).
-    fn load_manifest_state(&self, manifest: &ShardManifest) -> Result<StateDict, CompressError> {
-        self.load_manifest_state_with_base(manifest).map(|(full, _)| full)
+    fn load_manifest_state(
+        &self,
+        manifest: &ShardManifest,
+        parent: Option<u64>,
+    ) -> Result<StateDict, CompressError> {
+        self.load_manifest_state_with_base(manifest, parent).map(|(full, _)| full)
     }
 
     /// [`Self::load_manifest_state`], also returning the reassembled
@@ -365,6 +510,25 @@ impl ShardedCheckpointEngine {
     fn load_manifest_state_with_base(
         &self,
         manifest: &ShardManifest,
+        parent: Option<u64>,
+    ) -> Result<(StateDict, Option<StateDict>), CompressError> {
+        let tracer = self.storage.tracer().clone();
+        let mut span = tracer.span_with_parent("chain_load", parent);
+        span.attr("iteration", manifest.iteration);
+        let res = self.chain_load_body(manifest, span.id());
+        match &res {
+            Ok((full, _)) => span.set_bytes(full.total_bytes() as u64),
+            Err(e) => span.fail(&e.to_string()),
+        }
+        res
+    }
+
+    /// The chain walk proper, one `chain_load` span per manifest hop
+    /// (`parent` chains the spans the same way the deltas chain).
+    fn chain_load_body(
+        &self,
+        manifest: &ShardManifest,
+        parent: u64,
     ) -> Result<(StateDict, Option<StateDict>), CompressError> {
         let base_full = if manifest.is_base() {
             None
@@ -376,7 +540,9 @@ impl ShardedCheckpointEngine {
                 )));
             }
             match self.manifest(manifest.base_iteration) {
-                Ok(base_manifest) => Some(self.load_manifest_state(&base_manifest)?),
+                Ok(base_manifest) => {
+                    Some(self.load_manifest_state(&base_manifest, Some(parent))?)
+                }
                 // the base's own manifest is lost or torn, but its rank
                 // containers (and blobs) may be fine — fall back to
                 // resolving the base under *this* manifest's layout,
@@ -429,10 +595,28 @@ impl ShardedCheckpointEngine {
     /// from (reslice it with
     /// [`crate::train::parallel::shard_state_dict`] as needed).
     pub fn adopt_resharded(&mut self, iteration: u64) -> Result<StateDict, CompressError> {
+        let tracer = self.storage.tracer().clone();
+        let mut span = tracer.span("adopt_resharded");
+        span.attr("iteration", iteration);
+        span.attr("mp", self.parallelism.mp);
+        span.attr("pp", self.parallelism.pp);
+        let res = self.adopt_resharded_inner(iteration, span.id());
+        match &res {
+            Ok(full) => span.set_bytes(full.total_bytes() as u64),
+            Err(e) => span.fail(&e.to_string()),
+        }
+        res
+    }
+
+    fn adopt_resharded_inner(
+        &mut self,
+        iteration: u64,
+        parent: u64,
+    ) -> Result<StateDict, CompressError> {
         let manifest = self.manifest(iteration)?;
         // one chain load serves both the restored state and the base the
         // new layout's engines will delta against
-        let (full, base_full) = self.load_manifest_state_with_base(&manifest)?;
+        let (full, base_full) = self.load_manifest_state_with_base(&manifest, Some(parent))?;
         let base_full = base_full.unwrap_or_else(|| full.clone());
         let base_shards = shard_state_dict(&base_full, self.parallelism);
         for (rank, shard) in base_shards.into_iter().enumerate() {
@@ -468,6 +652,24 @@ impl ShardedCheckpointEngine {
     /// the agreed one. Returns `None` when no iteration survives on all
     /// ranks.
     pub fn recover_latest(&self) -> Result<Option<(u64, StateDict)>, CompressError> {
+        let tracer = self.storage.tracer().clone();
+        let mut span = tracer.span("recover");
+        let res = self.recover_latest_inner(span.id());
+        match &res {
+            Ok(Some((iteration, sd))) => {
+                span.attr("iteration", iteration);
+                span.set_bytes(sd.total_bytes() as u64);
+            }
+            Ok(None) => span.attr("outcome", "no recoverable iteration"),
+            Err(e) => span.fail(&e.to_string()),
+        }
+        res
+    }
+
+    fn recover_latest_inner(
+        &self,
+        parent: u64,
+    ) -> Result<Option<(u64, StateDict)>, CompressError> {
         let mut views = Vec::with_capacity(self.engines.len());
         for (rank, e) in self.engines.iter().enumerate() {
             views.push(RankView::gather(e.shm(), &self.storage, rank)?);
@@ -491,7 +693,8 @@ impl ShardedCheckpointEngine {
         for e in &self.engines {
             apply_pruning(e.shm(), &decision)?;
         }
-        let sd = self.load_iteration(decision.iteration)?;
+        let manifest = self.manifest(decision.iteration)?;
+        let sd = self.load_manifest_state(&manifest, Some(parent))?;
         Ok(Some((decision.iteration, sd)))
     }
 }

@@ -38,6 +38,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
+use crate::obs::Tracer;
 use crate::store::gc::{chain_closure, retained, ChainInfo};
 use crate::store::{BlobKey, BlobStore, GcReport, RefCounts, RetentionPolicy, StoreStats};
 
@@ -52,6 +53,12 @@ pub struct Storage {
     /// The content-addressed payload store (`None` = the pre-store plain
     /// layout, kept for the dedup bench's comparison arm).
     cas: Option<BlobStore>,
+    /// The observability handle every engine, agent thread and blob-store
+    /// clone descending from this storage shares. Disabled (free) until
+    /// someone calls `storage.tracer().enable(..)` — and because the cell
+    /// is shared across clones, that lights up agent threads spawned
+    /// long before.
+    tracer: Tracer,
 }
 
 impl Storage {
@@ -59,8 +66,9 @@ impl Storage {
     pub fn new(root: impl Into<PathBuf>) -> std::io::Result<Self> {
         let root = root.into();
         fs::create_dir_all(&root)?;
-        let cas = BlobStore::open(root.join("cas"))?;
-        Ok(Self { root, throttle_bps: None, cas: Some(cas) })
+        let tracer = Tracer::disabled();
+        let cas = BlobStore::open(root.join("cas"))?.with_metrics(tracer.metrics().clone());
+        Ok(Self { root, throttle_bps: None, cas: Some(cas), tracer })
     }
 
     /// Open storage **without** content addressing: one opaque container
@@ -70,7 +78,13 @@ impl Storage {
     pub fn plain(root: impl Into<PathBuf>) -> std::io::Result<Self> {
         let root = root.into();
         fs::create_dir_all(&root)?;
-        Ok(Self { root, throttle_bps: None, cas: None })
+        Ok(Self { root, throttle_bps: None, cas: None, tracer: Tracer::disabled() })
+    }
+
+    /// The observability handle shared by everything built on this
+    /// storage (see [`crate::obs`]).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
     }
 
     /// Apply a simulated write-bandwidth cap (see module docs).
@@ -134,12 +148,14 @@ impl Storage {
         iteration: u64,
         rank: usize,
         ckpt: &crate::compress::delta::CompressedCheckpoint,
+        parent: Option<u64>,
     ) -> std::io::Result<usize> {
         let cas = self.cas.as_ref().expect("write_ckpt requires a blob store");
         let mut pinned: Vec<BlobKey> = Vec::with_capacity(ckpt.entries.len());
         let result = (|| {
             let mut physical = 0usize;
             // phase 1: payloads into the CAS, pinned against concurrent GC
+            let mut pin_span = self.tracer.span_with_parent("blob_pin", parent);
             let mut entries = Vec::with_capacity(ckpt.entries.len());
             for e in &ckpt.entries {
                 let (key, written) = cas.put_pinned(&e.compressed.payload)?;
@@ -154,19 +170,29 @@ impl Storage {
                     key,
                 });
             }
+            pin_span.attr("blobs", pinned.len());
+            pin_span.set_bytes(physical as u64);
+            pin_span.end();
             // phase 2: publish the stub that makes the blobs reachable
+            let mut pub_span = self.tracer.span_with_parent("publish", parent);
             let stub = CasContainer {
                 iteration: ckpt.iteration,
                 base_iteration: ckpt.base_iteration,
                 entries,
             };
-            physical += self.write_verbatim(iteration, rank, &container::serialize_cas(&stub))?;
+            let stub_bytes = container::serialize_cas(&stub);
+            physical += self.write_verbatim(iteration, rank, &stub_bytes)?;
+            pub_span.set_bytes(stub_bytes.len() as u64);
+            pub_span.end();
             Ok(physical)
         })();
         // phase 3: unpin (GC may now rely on reachability alone)
+        let mut unpin_span = self.tracer.span_with_parent("unpin", parent);
+        unpin_span.attr("blobs", pinned.len());
         for key in &pinned {
             let _ = cas.unpin(key);
         }
+        unpin_span.end();
         result
     }
 
@@ -190,19 +216,38 @@ impl Storage {
         is_base: bool,
     ) -> std::io::Result<Duration> {
         let t0 = Instant::now();
-        fs::create_dir_all(self.iter_dir(iteration))?;
-        let physical = match &self.cas {
-            Some(_) => match container::deserialize(container) {
-                Ok(ckpt) => self.write_ckpt(iteration, rank, &ckpt)?,
-                Err(_) => self.write_verbatim(iteration, rank, container)?,
-            },
-            None => self.write_verbatim(iteration, rank, container)?,
+        let mut span = self.tracer.span("persist");
+        span.attr("iteration", iteration);
+        span.attr("rank", rank);
+        span.attr("kind", if is_base { "base" } else { "delta" });
+        let parent = Some(span.id());
+        let result: std::io::Result<usize> = (|| {
+            fs::create_dir_all(self.iter_dir(iteration))?;
+            let physical = match &self.cas {
+                Some(_) => match container::deserialize(container) {
+                    Ok(ckpt) => self.write_ckpt(iteration, rank, &ckpt, parent)?,
+                    Err(_) => self.write_verbatim(iteration, rank, container)?,
+                },
+                None => self.write_verbatim(iteration, rank, container)?,
+            };
+            // paper §4.4: type.txt inside each checkpoint folder
+            fs::write(
+                self.iter_dir(iteration).join("type.txt"),
+                if is_base { "base\n" } else { "delta\n" },
+            )?;
+            Ok(physical)
+        })();
+        let physical = match result {
+            Ok(physical) => physical,
+            Err(e) => {
+                span.fail(&e.to_string());
+                return Err(e);
+            }
         };
-        // paper §4.4: type.txt inside each checkpoint folder
-        fs::write(
-            self.iter_dir(iteration).join("type.txt"),
-            if is_base { "base\n" } else { "delta\n" },
-        )?;
+        span.set_bytes(physical as u64);
+        let metrics = self.tracer.metrics();
+        metrics.counter_add("bitsnap_save_logical_bytes_total", &[], container.len() as f64);
+        metrics.counter_add("bitsnap_save_physical_bytes_total", &[], physical as f64);
         if let Some(bps) = self.throttle_bps {
             let want = Duration::from_secs_f64(physical as f64 / bps);
             let elapsed = t0.elapsed();
@@ -236,7 +281,11 @@ impl Storage {
                 Ok(ckpt) => {
                     // import on first touch; a failed import (read-only
                     // tree) still serves the checkpoint
-                    let _ = self.write_ckpt(iteration, rank, &ckpt);
+                    let mut span = self.tracer.span("import");
+                    span.attr("iteration", iteration);
+                    span.attr("rank", rank);
+                    let _ = self.write_ckpt(iteration, rank, &ckpt, Some(span.id()));
+                    span.end();
                     Ok(container::serialize(&ckpt))
                 }
                 // undecodable (torn/corrupt): hand back verbatim — the
@@ -451,6 +500,34 @@ impl Storage {
     }
 
     fn gc_inner(&self, policy: &RetentionPolicy, execute: bool) -> std::io::Result<GcReport> {
+        let mut span = self.tracer.span("gc");
+        span.attr("keep_last", policy.keep_last);
+        span.attr("keep_every", policy.keep_every);
+        span.attr("mode", if execute { "execute" } else { "dry_run" });
+        match self.gc_body(policy, execute) {
+            Ok(report) => {
+                span.attr("pruned", report.pruned_iterations.len());
+                span.attr("deleted_blobs", report.deleted_blobs);
+                span.attr("pinned_blobs", report.pinned_blobs);
+                span.set_bytes(report.reclaimed_bytes);
+                if execute {
+                    self.tracer.metrics().counter_add(
+                        "bitsnap_gc_reclaimed_bytes_total",
+                        &[],
+                        report.reclaimed_bytes as f64,
+                    );
+                }
+                span.end();
+                Ok(report)
+            }
+            Err(e) => {
+                span.fail(&e.to_string());
+                Err(e)
+            }
+        }
+    }
+
+    fn gc_body(&self, policy: &RetentionPolicy, execute: bool) -> std::io::Result<GcReport> {
         let iters = self.iterations()?;
         let kept = retained(&iters, policy);
         let mut info = HashMap::with_capacity(iters.len());

@@ -22,11 +22,14 @@
 //!   the runtime, producing the real state dicts the experiments compress.
 //! * [`tensor`] — host tensors, dtypes, f16/bf16 conversion, state dicts.
 //! * [`bench`] — micro-benchmark harness used by `cargo bench` targets.
+//! * [`obs`] — the observability plane: span tracing to JSONL, a metrics
+//!   registry with Prometheus rendering, and the `trace-report` renderer.
 
 pub mod adapt;
 pub mod bench;
 pub mod compress;
 pub mod engine;
+pub mod obs;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod store;

@@ -11,6 +11,8 @@
 //!   recover       run the multi-rank recovery demo (Fig. 4)
 //!   gc            chain-aware garbage collection of a checkpoint store
 //!   store-stats   blob counts, live/dead bytes and dedup ratio of a store
+//!   trace-report  render the save timeline of a traced run (phase
+//!                 waterfall, slowest tensors, planner rationale)
 //!
 //! `train` and `inspect --histogram` execute AOT-compiled XLA artifacts
 //! and need the crate built with `--features xla`; everything else is
@@ -34,6 +36,7 @@ fn main() {
         Some("recover") => cmd_recover(&args),
         Some("gc") => cmd_gc(&args),
         Some("store-stats") => cmd_store_stats(&args),
+        Some("trace-report") => cmd_trace_report(&args),
         Some("help") | None => {
             print_help();
             Ok(())
@@ -65,6 +68,8 @@ fn print_help() {
                          default = available cores; output is byte-identical for any N)\n\
                          [--retention 3[,100]] (chain-aware GC after every save: keep the last\n\
                          3 iterations plus every 100th)\n\
+                         [--trace] (record the save timeline to <out>/storage/trace/ and dump\n\
+                         the metrics registry; render with trace-report)\n\
                          (needs a build with --features xla)\n\
            compress      --params 1048576 [--change-rate 0.15] [--policy bitsnap|lossless]\n\
            inspect       --dir <storage root> | --histogram --model gpt-nano --steps 20\n\
@@ -74,9 +79,13 @@ fn print_help() {
            table1        (no flags) print the paper's Table-1 analytical model\n\
            recover       --ranks 4 --fail-rank 1 (Fig. 4 walkthrough on real stores)\n\
                          [--sharded --mp 2 --pp 2] (mp x pp save / recover / reshard demo)\n\
+                         [--sharded --trace] (print the traced timeline of the demo)\n\
            gc            --dir <storage root> --keep-last 3 [--keep-every 100] [--dry-run]\n\
                          (chain-aware: never collects a base a kept delta needs)\n\
            store-stats   --dir <storage root> (blob counts, live/dead bytes, dedup ratio)\n\
+           trace-report  --dir <storage root> [--save N] [--top 10]\n\
+                         (phase waterfall, slowest tensors, per-codec throughput and\n\
+                         planner rationale from a train --trace / recover --trace run)\n\
            help          this text"
     );
 }
@@ -125,6 +134,14 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         persist.workers
     );
     let storage = Storage::new(format!("{out}/storage")).map_err(|e| e.to_string())?;
+    // --trace lights up the span tracer every engine/agent/store clone of
+    // this storage shares; the timeline lands in <out>/storage/trace/
+    let trace = args.has("trace");
+    if trace {
+        let p =
+            storage.tracer().enable(storage.root().join("trace")).map_err(|e| e.to_string())?;
+        println!("tracing save timeline to {}", p.display());
+    }
     // a clone shares the CAS pin table, so GC during async persists is safe
     let gc_storage = storage.clone();
     let cfg = ShardedEngineConfig {
@@ -147,7 +164,8 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         let target_ratio: Option<f64> = parse_opt_flag(args, "target-ratio")?;
         let write_bps = cfg.storage.throttle_bps();
         let workers = persist.workers;
-        let shared = SharedCalibration::new(Calibration::measure(1 << 18));
+        let shared = SharedCalibration::new(Calibration::measure(1 << 18))
+            .with_metrics(cfg.storage.tracer().metrics().clone());
         ShardedCheckpointEngine::with_policy_sources(cfg, move |_| {
             let cost = CostModel::shared(shared.clone(), write_bps).with_encode_workers(workers);
             let acfg = bitsnap::adapt::AdaptiveConfig { target_ratio, ..Default::default() };
@@ -170,7 +188,15 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         }
         if i % save_every == 0 {
             let sd = trainer.state_dict().map_err(|e| e.to_string())?;
+            let t_save = std::time::Instant::now();
             let r = engine.save(i, &sd).map_err(|e| e.to_string())?;
+            let stall = t_save.elapsed();
+            trainer.record_checkpoint_stall(stall);
+            engine.tracer().metrics().counter_add(
+                "bitsnap_trainer_stall_seconds_total",
+                &[],
+                stall.as_secs_f64(),
+            );
             println!(
                 "  ckpt @{i} {}  fleet blocked {:.1} ms  ratio {:.2}x ({} -> {})",
                 if r.is_base { "base " } else { "delta" },
@@ -178,6 +204,12 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                 r.ratio(),
                 bitsnap::bench::fmt_bytes(r.raw_bytes),
                 bitsnap::bench::fmt_bytes(r.compressed_bytes),
+            );
+            println!(
+                "        plan {:.1} ms | encode {:.1} ms | commit {:.1} ms",
+                r.plan_wall.as_secs_f64() * 1e3,
+                r.encode_wall.as_secs_f64() * 1e3,
+                r.commit_wall.as_secs_f64() * 1e3,
             );
             if let Some(policy) = &retention {
                 let gcr = gc_storage.gc(policy).map_err(|e| e.to_string())?;
@@ -207,6 +239,17 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             bitsnap::bench::fmt_bytes(s.logical_bytes as usize),
             s.dedup_ratio()
         );
+    }
+    println!(
+        "trainer blocked {:.1} ms total across checkpoint saves",
+        trainer.total_checkpoint_stall().as_secs_f64() * 1e3
+    );
+    if trace {
+        let path = gc_storage.root().join("trace").join("metrics.prom");
+        std::fs::write(&path, gc_storage.tracer().metrics().render_prometheus())
+            .map_err(|e| e.to_string())?;
+        println!("metrics registry dumped to {}", path.display());
+        println!("render the timeline with: bitsnap trace-report --dir {out}/storage");
     }
     Ok(())
 }
@@ -545,6 +588,11 @@ fn cmd_recover_sharded(args: &Args) -> Result<(), String> {
     let shm_root = std::env::temp_dir().join(format!("bitsnap-sharded-demo-shm-{pid}"));
     let store_root = std::env::temp_dir().join(format!("bitsnap-sharded-demo-store-{pid}"));
     let storage = Storage::new(&store_root).map_err(|e| e.to_string())?;
+    // --trace: record the demo's save/recover/reshard timeline and print
+    // the rendered report before the scratch stores are cleaned up
+    if args.has("trace") {
+        storage.tracer().enable(store_root.join("trace")).map_err(|e| e.to_string())?;
+    }
     let cfg = ShardedEngineConfig {
         job: "sharded-demo".into(),
         parallelism: p,
@@ -615,6 +663,12 @@ fn cmd_recover_sharded(args: &Args) -> Result<(), String> {
     );
     if !ok {
         return Err("resharded restore does not match a direct shard of the recovered dict".into());
+    }
+    if args.has("trace") {
+        let events = bitsnap::obs::load_events(&store_root.join("trace/events.jsonl"))
+            .map_err(|e| e.to_string())?;
+        println!("\ntraced timeline of the demo:");
+        print!("{}", bitsnap::obs::render_report(&events, &bitsnap::obs::ReportOptions::default()));
     }
     let _ = std::fs::remove_dir_all(&shm_root);
     let _ = std::fs::remove_dir_all(&store_root);
@@ -706,7 +760,7 @@ fn cmd_gc(args: &Args) -> Result<(), String> {
         report.deleted_blobs,
         report.pinned_blobs
     );
-    println!("bytes reclaimed   {}", bitsnap::bench::fmt_bytes(report.reclaimed_bytes as usize));
+    println!("bytes reclaimed   {}", bitsnap::obs::fmt_bytes_detailed(report.reclaimed_bytes));
     Ok(())
 }
 
@@ -716,6 +770,34 @@ fn cmd_store_stats(args: &Args) -> Result<(), String> {
     let storage = Storage::new(dir).map_err(|e| e.to_string())?;
     let stats = storage.stats().map_err(|e| e.to_string())?;
     println!("{}", stats.render());
+    Ok(())
+}
+
+/// Render the save timeline of a traced run: per-save phase waterfall,
+/// slowest tensors, per-codec throughput and the planner's per-tensor
+/// decision rationale, read back from `<storage root>/trace/events.jsonl`
+/// (see `train --trace`). Prints the Prometheus metrics dump too if the
+/// run left one behind.
+fn cmd_trace_report(args: &Args) -> Result<(), String> {
+    use bitsnap::obs::{load_events, render_report, ReportOptions};
+    let dir = args.get("dir").ok_or("trace-report needs --dir <storage root>")?;
+    let dir = std::path::Path::new(dir);
+    // accept the storage root, the trace dir, or the event file itself
+    let path = [dir.join("trace/events.jsonl"), dir.join("events.jsonl"), dir.to_path_buf()]
+        .into_iter()
+        .find(|p| p.is_file())
+        .ok_or_else(|| format!("no trace/events.jsonl under {} (traced run?)", dir.display()))?;
+    let events = load_events(&path).map_err(|e| e.to_string())?;
+    let opts = ReportOptions {
+        save: parse_opt_flag(args, "save")?,
+        top: parse_opt_flag(args, "top")?.unwrap_or(ReportOptions::default().top),
+    };
+    print!("{}", render_report(&events, &opts));
+    let prom = path.with_file_name("metrics.prom");
+    if prom.is_file() {
+        let text = std::fs::read_to_string(&prom).map_err(|e| e.to_string())?;
+        print!("\nmetrics registry ({}):\n{text}", prom.display());
+    }
     Ok(())
 }
 

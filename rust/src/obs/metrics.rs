@@ -1,0 +1,253 @@
+//! The in-process metrics registry: counters, gauges and histograms with
+//! Prometheus text-format rendering.
+//!
+//! Dependency-free and always-on: recording a sample is a mutex-guarded
+//! map update, cheap enough to leave in the save path unconditionally.
+//! The registry is a cloneable handle ([`Metrics`]) — every clone shares
+//! one table, so the storage layer, the blob store, the encode pool and
+//! the calibration feedback all report into the same census no matter
+//! which thread they run on. `train --trace` dumps the rendered text to
+//! `<storage root>/trace/metrics.prom` when the run ends.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::{Arc, Mutex};
+
+/// Default histogram bucket bounds for durations in seconds: decades
+/// from a microsecond to ten seconds, which brackets everything from a
+/// per-tensor encode to a throttled persist.
+pub const SECONDS_BOUNDS: [f64; 8] = [1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0];
+
+/// A metric identity: name plus sorted label pairs.
+type Key = (String, Vec<(String, String)>);
+
+#[derive(Clone, Debug)]
+struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Self {
+        Self { bounds: bounds.to_vec(), counts: vec![0; bounds.len()], sum: 0.0, count: 0 }
+    }
+
+    fn observe(&mut self, v: f64) {
+        for (i, &b) in self.bounds.iter().enumerate() {
+            if v <= b {
+                self.counts[i] += 1;
+            }
+        }
+        self.sum += v;
+        self.count += 1;
+    }
+}
+
+#[derive(Debug, Default)]
+struct Registry {
+    counters: BTreeMap<Key, f64>,
+    gauges: BTreeMap<Key, f64>,
+    histograms: BTreeMap<Key, Histogram>,
+}
+
+/// Cloneable handle to one shared metrics registry. See module docs.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    inner: Arc<Mutex<Registry>>,
+}
+
+fn key(name: &str, labels: &[(&str, &str)]) -> Key {
+    let mut l: Vec<(String, String)> =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    l.sort();
+    (name.to_string(), l)
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `v` to a (monotonic) counter.
+    pub fn counter_add(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        *self.inner.lock().unwrap().counters.entry(key(name, labels)).or_insert(0.0) += v;
+    }
+
+    /// Set a gauge to its latest value.
+    pub fn gauge_set(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.inner.lock().unwrap().gauges.insert(key(name, labels), v);
+    }
+
+    /// Record one histogram sample (buckets: [`SECONDS_BOUNDS`]).
+    pub fn observe(&self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.inner
+            .lock()
+            .unwrap()
+            .histograms
+            .entry(key(name, labels))
+            .or_insert_with(|| Histogram::new(&SECONDS_BOUNDS))
+            .observe(v);
+    }
+
+    /// Current counter value (0 when never touched) — for tests and the
+    /// train-loop summary line.
+    pub fn counter_value(&self, name: &str, labels: &[(&str, &str)]) -> f64 {
+        self.inner.lock().unwrap().counters.get(&key(name, labels)).copied().unwrap_or(0.0)
+    }
+
+    /// Current gauge value, if ever set.
+    pub fn gauge_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(&key(name, labels)).copied()
+    }
+
+    /// Sum and sample count of a histogram series.
+    pub fn histogram_totals(&self, name: &str, labels: &[(&str, &str)]) -> (f64, u64) {
+        match self.inner.lock().unwrap().histograms.get(&key(name, labels)) {
+            Some(h) => (h.sum, h.count),
+            None => (0.0, 0),
+        }
+    }
+
+    /// Render every series in the Prometheus text exposition format,
+    /// sorted by (name, labels) so the output is deterministic.
+    pub fn render_prometheus(&self) -> String {
+        let reg = self.inner.lock().unwrap();
+        let mut out = String::new();
+        let mut last_type_line = String::new();
+        let mut typed = |out: &mut String, name: &str, kind: &str| {
+            let line = format!("# TYPE {name} {kind}\n");
+            if line != last_type_line {
+                out.push_str(&line);
+                last_type_line = line;
+            }
+        };
+        for ((name, labels), v) in &reg.counters {
+            typed(&mut out, name, "counter");
+            let _ = writeln!(out, "{}{} {}", name, render_labels(labels, None), fmt_value(*v));
+        }
+        for ((name, labels), v) in &reg.gauges {
+            typed(&mut out, name, "gauge");
+            let _ = writeln!(out, "{}{} {}", name, render_labels(labels, None), fmt_value(*v));
+        }
+        for ((name, labels), h) in &reg.histograms {
+            typed(&mut out, name, "histogram");
+            // counts are already cumulative per bound (`le` semantics)
+            for (i, &b) in h.bounds.iter().enumerate() {
+                let _ = writeln!(
+                    out,
+                    "{}_bucket{} {}",
+                    name,
+                    render_labels(labels, Some(&fmt_value(b))),
+                    h.counts[i]
+                );
+            }
+            let _ =
+                writeln!(out, "{}_bucket{} {}", name, render_labels(labels, Some("+Inf")), h.count);
+            let _ =
+                writeln!(out, "{}_sum{} {}", name, render_labels(labels, None), fmt_value(h.sum));
+            let _ = writeln!(out, "{}_count{} {}", name, render_labels(labels, None), h.count);
+        }
+        out
+    }
+}
+
+/// `{k="v",...}` with an optional `le` bucket label, empty string when
+/// there are no labels at all.
+fn render_labels(labels: &[(String, String)], le: Option<&str>) -> String {
+    if labels.is_empty() && le.is_none() {
+        return String::new();
+    }
+    let mut s = String::from("{");
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(s, "{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\""));
+    }
+    if let Some(le) = le {
+        if !labels.is_empty() {
+            s.push(',');
+        }
+        let _ = write!(s, "le=\"{le}\"");
+    }
+    s.push('}');
+    s
+}
+
+/// Integral values print without a trailing `.0` so byte counters read
+/// exactly; everything else keeps full float formatting.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_accumulate_and_render() {
+        let m = Metrics::new();
+        m.counter_add("bitsnap_save_physical_bytes_total", &[], 1024.0);
+        m.counter_add("bitsnap_save_physical_bytes_total", &[], 512.0);
+        m.gauge_set("bitsnap_encode_bytes_per_second", &[("codec", "huffman")], 1.5e9);
+        assert_eq!(m.counter_value("bitsnap_save_physical_bytes_total", &[]), 1536.0);
+        assert_eq!(
+            m.gauge_value("bitsnap_encode_bytes_per_second", &[("codec", "huffman")]),
+            Some(1.5e9)
+        );
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE bitsnap_save_physical_bytes_total counter"), "{text}");
+        assert!(text.contains("bitsnap_save_physical_bytes_total 1536"), "{text}");
+        assert!(
+            text.contains("bitsnap_encode_bytes_per_second{codec=\"huffman\"} 1500000000"),
+            "{text}"
+        );
+    }
+
+    #[test]
+    fn clones_share_one_registry() {
+        let m = Metrics::new();
+        let c = m.clone();
+        c.counter_add("x_total", &[], 2.0);
+        m.counter_add("x_total", &[], 3.0);
+        assert_eq!(m.counter_value("x_total", &[]), 5.0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_per_bound() {
+        let m = Metrics::new();
+        m.observe("bitsnap_pipeline_queue_wait_seconds", &[], 5e-6);
+        m.observe("bitsnap_pipeline_queue_wait_seconds", &[], 0.5);
+        m.observe("bitsnap_pipeline_queue_wait_seconds", &[], 100.0); // beyond every bound
+        let (sum, count) = m.histogram_totals("bitsnap_pipeline_queue_wait_seconds", &[]);
+        assert_eq!(count, 3);
+        assert!((sum - 100.500005).abs() < 1e-9);
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE bitsnap_pipeline_queue_wait_seconds histogram"), "{text}");
+        // 5e-6 lands in every bucket from 1e-5 up; 0.5 only in 1 and 10
+        assert!(
+            text.contains("bitsnap_pipeline_queue_wait_seconds_bucket{le=\"0.00001\"} 1"),
+            "{text}"
+        );
+        assert!(text.contains("bitsnap_pipeline_queue_wait_seconds_bucket{le=\"1\"} 2"), "{text}");
+        assert!(
+            text.contains("bitsnap_pipeline_queue_wait_seconds_bucket{le=\"+Inf\"} 3"),
+            "{text}"
+        );
+        assert!(text.contains("bitsnap_pipeline_queue_wait_seconds_count 3"), "{text}");
+    }
+
+    #[test]
+    fn label_values_escape_quotes() {
+        let m = Metrics::new();
+        m.counter_add("weird_total", &[("k", "a\"b\\c")], 1.0);
+        let text = m.render_prometheus();
+        assert!(text.contains("weird_total{k=\"a\\\"b\\\\c\"} 1"), "{text}");
+    }
+}

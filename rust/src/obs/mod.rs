@@ -1,0 +1,53 @@
+//! The checkpoint observability plane (PR 6).
+//!
+//! Three dependency-free pieces, threaded through every layer of the
+//! checkpoint engine:
+//!
+//! * [`trace`] — nested span tracing to `<storage root>/trace/events.jsonl`.
+//!   A [`Tracer`] is a cloneable shared-cell handle: the one owned by
+//!   [`crate::engine::Storage`] is cloned into engines, agent threads and
+//!   the blob store, so enabling tracing on any clone (e.g. via
+//!   `train --trace`) lights up the whole plane without construction-site
+//!   churn.
+//! * [`metrics`] — an always-on counters/gauges/histograms registry
+//!   ([`Metrics`]) with Prometheus text rendering, shared by the same
+//!   lineage (`tracer.metrics()`).
+//! * [`report`] — `trace-report`: parse the event file back and render
+//!   the per-save phase waterfall, slowest tensors, per-codec throughput
+//!   and planner decision rationale.
+//!
+//! Invariant: tracing never touches checkpoint artifacts. Wall-clock
+//! timestamps exist only in trace files, and saves are byte-identical
+//! with tracing on or off (see `tests/trace_determinism.rs`).
+
+pub mod metrics;
+pub mod report;
+pub mod trace;
+
+pub use metrics::{Metrics, SECONDS_BOUNDS};
+pub use report::{load_events, parse_events, render_report, ReportOptions, TraceEvent};
+pub use trace::{Span, Tracer};
+
+/// Human-readable byte count with the exact figure in parens — the shared
+/// formatter behind `store-stats`, `gc` and `trace-report` output.
+/// Values under a KiB print once: `"512 B"`.
+pub fn fmt_bytes_detailed(b: u64) -> String {
+    if b < 1024 {
+        format!("{b} B")
+    } else {
+        format!("{} ({b} bytes)", crate::bench::fmt_bytes(b as usize))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_bytes_detailed_adds_exact_parens_above_a_kib() {
+        assert_eq!(fmt_bytes_detailed(0), "0 B");
+        assert_eq!(fmt_bytes_detailed(1023), "1023 B");
+        assert_eq!(fmt_bytes_detailed(4096), "4.00 KiB (4096 bytes)");
+        assert_eq!(fmt_bytes_detailed(3 << 20), "3.00 MiB (3145728 bytes)");
+    }
+}

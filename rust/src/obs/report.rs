@@ -1,0 +1,682 @@
+//! Save-timeline reporting: parse a trace event file back into spans and
+//! render the `trace-report` CLI view — per-save phase waterfall, the
+//! slowest tensors, per-codec encode throughput and the planner's
+//! per-tensor decision rationale.
+//!
+//! The repo is dependency-free, so this module carries a minimal JSON
+//! reader sized for the flat event schema [`crate::obs::Tracer`] writes
+//! (objects, strings, numbers, booleans, null — no nested arrays in
+//! practice, though the reader accepts them).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Duration;
+
+use super::fmt_bytes_detailed;
+
+/// One parsed trace event (see [`crate::obs::trace`] for the schema).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub id: u64,
+    pub parent: Option<u64>,
+    pub name: String,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub status: String,
+    pub bytes: Option<u64>,
+    pub attrs: Vec<(String, String)>,
+}
+
+impl TraceEvent {
+    pub fn attr(&self, key: &str) -> Option<&str> {
+        self.attrs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// What `trace-report` renders.
+#[derive(Clone, Copy, Debug)]
+pub struct ReportOptions {
+    /// Restrict to one save iteration (`--save N`); all saves otherwise.
+    pub save: Option<u64>,
+    /// How many slowest tensors to list (`--top N`).
+    pub top: usize,
+}
+
+impl Default for ReportOptions {
+    fn default() -> Self {
+        Self { save: None, top: 10 }
+    }
+}
+
+/// Parse a whole `events.jsonl` body. Any malformed line is an error —
+/// the writer controls the format, so damage means a torn file worth
+/// reporting, not skipping.
+pub fn parse_events(text: &str) -> Result<Vec<TraceEvent>, String> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = parse_json(line).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        out.push(event_from_json(&v).map_err(|e| format!("line {}: {e}", lineno + 1))?);
+    }
+    Ok(out)
+}
+
+/// Read and parse a trace event file.
+pub fn load_events(path: &Path) -> std::io::Result<Vec<TraceEvent>> {
+    let text = std::fs::read_to_string(path)?;
+    parse_events(&text)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+}
+
+fn event_from_json(v: &Json) -> Result<TraceEvent, String> {
+    let obj = match v {
+        Json::Obj(fields) => fields,
+        _ => return Err("event is not a JSON object".into()),
+    };
+    let get = |k: &str| obj.iter().find(|(n, _)| n == k).map(|(_, v)| v);
+    let num = |k: &str| -> Result<u64, String> {
+        match get(k) {
+            Some(Json::Num(n)) if *n >= 0.0 => Ok(*n as u64),
+            _ => Err(format!("missing or invalid \"{k}\"")),
+        }
+    };
+    let parent = match get("parent") {
+        Some(Json::Null) => None,
+        Some(Json::Num(n)) if *n >= 0.0 => Some(*n as u64),
+        _ => return Err("missing or invalid \"parent\"".into()),
+    };
+    let name = match get("name") {
+        Some(Json::Str(s)) if !s.is_empty() => s.clone(),
+        _ => return Err("missing or invalid \"name\"".into()),
+    };
+    let status = match get("status") {
+        Some(Json::Str(s)) if s == "ok" || s == "error" => s.clone(),
+        _ => return Err("missing or invalid \"status\"".into()),
+    };
+    let bytes = match get("bytes") {
+        Some(Json::Null) => None,
+        Some(Json::Num(n)) if *n >= 0.0 => Some(*n as u64),
+        _ => return Err("missing or invalid \"bytes\"".into()),
+    };
+    let attrs = match get("attrs") {
+        Some(Json::Obj(fields)) => fields
+            .iter()
+            .map(|(k, v)| match v {
+                Json::Str(s) => Ok((k.clone(), s.clone())),
+                _ => Err(format!("attr \"{k}\" is not a string")),
+            })
+            .collect::<Result<Vec<_>, _>>()?,
+        _ => return Err("missing or invalid \"attrs\"".into()),
+    };
+    Ok(TraceEvent {
+        id: num("id")?,
+        parent,
+        name,
+        start_us: num("start_us")?,
+        dur_us: num("dur_us")?,
+        status,
+        bytes,
+        attrs,
+    })
+}
+
+/// Render the full report. Sections: one waterfall per save, the top-N
+/// slowest tensors, per-codec encode throughput, planner decisions, and
+/// a digest of non-save root spans (persist, gc, restore, recover).
+pub fn render_report(events: &[TraceEvent], opts: &ReportOptions) -> String {
+    let mut children: HashMap<Option<u64>, Vec<&TraceEvent>> = HashMap::new();
+    for e in events {
+        children.entry(e.parent).or_default().push(e);
+    }
+    for v in children.values_mut() {
+        v.sort_by_key(|e| (e.start_us, e.id));
+    }
+    let mut saves: Vec<&TraceEvent> = children
+        .get(&None)
+        .map(|roots| roots.iter().copied().filter(|e| e.name == "save").collect())
+        .unwrap_or_default();
+    if let Some(iter) = opts.save {
+        saves.retain(|e| e.attr("iteration") == Some(iter.to_string().as_str()));
+    }
+    let mut out = String::new();
+    if saves.is_empty() {
+        out.push_str("no matching save spans in trace\n");
+    }
+    // per-save waterfall, plus collect that save's encode/decision spans
+    let mut tensors: Vec<&TraceEvent> = Vec::new();
+    let mut decisions: Vec<(&TraceEvent, u64)> = Vec::new(); // (event, save iteration)
+    for save in &saves {
+        let iteration: u64 =
+            save.attr("iteration").and_then(|s| s.parse().ok()).unwrap_or_default();
+        out.push_str(&render_save_header(save));
+        render_tree(&mut out, save, save.start_us, 1, &children);
+        out.push('\n');
+        collect_descendants(save, &children, &mut |e| {
+            if e.name == "encode_tensor" {
+                tensors.push(e);
+            } else if e.name == "decision" {
+                decisions.push((e, iteration));
+            }
+        });
+    }
+    // slowest tensors
+    if !tensors.is_empty() {
+        tensors.sort_by_key(|e| std::cmp::Reverse(e.dur_us));
+        out.push_str(&format!("slowest tensors (top {})\n", opts.top));
+        for e in tensors.iter().take(opts.top) {
+            out.push_str(&format!(
+                "  {:<9} {:<36} {:<22} {:>10}  {}\n",
+                format!("rank{}", e.attr("rank").unwrap_or("?")),
+                e.attr("tensor").unwrap_or("?"),
+                e.attr("codec").unwrap_or("?"),
+                fmt_dur_us(e.dur_us),
+                e.bytes.map(fmt_bytes_detailed).unwrap_or_default(),
+            ));
+        }
+        out.push('\n');
+        out.push_str(&render_codec_throughput(&tensors));
+    }
+    if !decisions.is_empty() {
+        out.push_str("planner decisions\n");
+        for (e, iteration) in &decisions {
+            out.push_str(&render_decision(e, *iteration));
+        }
+        out.push('\n');
+    }
+    out.push_str(&render_other_roots(&children, opts));
+    out
+}
+
+fn render_save_header(save: &TraceEvent) -> String {
+    let mut line = format!(
+        "save @{} {}",
+        save.attr("iteration").unwrap_or("?"),
+        save.attr("kind").unwrap_or("?"),
+    );
+    if let (Some(mp), Some(pp)) = (save.attr("mp"), save.attr("pp")) {
+        line.push_str(&format!("  mp={mp} pp={pp}"));
+    }
+    if let Some(w) = save.attr("workers") {
+        line.push_str(&format!("  workers={w}"));
+    }
+    line.push_str(&format!("  wall {}", fmt_dur_us(save.dur_us)));
+    if save.status == "error" {
+        line.push_str(&format!("  ERROR: {}", save.attr("error").unwrap_or("?")));
+    }
+    if let Some(b) = save.bytes {
+        line.push_str(&format!("  {}", fmt_bytes_detailed(b)));
+    }
+    line.push('\n');
+    line
+}
+
+/// The nested waterfall: each span on one line, children indented,
+/// offsets relative to the save's own start.
+fn render_tree(
+    out: &mut String,
+    node: &TraceEvent,
+    t0: u64,
+    depth: usize,
+    children: &HashMap<Option<u64>, Vec<&TraceEvent>>,
+) {
+    if let Some(kids) = children.get(&Some(node.id)) {
+        for kid in kids {
+            let rel = kid.start_us.saturating_sub(t0);
+            let mut line = format!(
+                "  [{:>9.3}ms +{:>9.3}ms] {}{}",
+                rel as f64 / 1000.0,
+                kid.dur_us as f64 / 1000.0,
+                "  ".repeat(depth - 1),
+                kid.name,
+            );
+            for (k, v) in &kid.attrs {
+                line.push_str(&format!(" {k}={v}"));
+            }
+            if let Some(b) = kid.bytes {
+                line.push_str(&format!(" [{}]", fmt_bytes_detailed(b)));
+            }
+            if kid.status == "error" {
+                line.push_str(" [ERROR]");
+            }
+            out.push_str(&line);
+            out.push('\n');
+            render_tree(out, kid, t0, depth + 1, children);
+        }
+    }
+}
+
+fn collect_descendants<'a>(
+    node: &TraceEvent,
+    children: &HashMap<Option<u64>, Vec<&'a TraceEvent>>,
+    f: &mut impl FnMut(&'a TraceEvent),
+) {
+    if let Some(kids) = children.get(&Some(node.id)) {
+        for kid in kids {
+            f(kid);
+            collect_descendants(kid, children, f);
+        }
+    }
+}
+
+/// Aggregate per-codec encode throughput (payload bytes / encode wall)
+/// over the given `encode_tensor` spans.
+fn render_codec_throughput(tensors: &[&TraceEvent]) -> String {
+    let mut per_codec: HashMap<&str, (u64, u64, usize)> = HashMap::new(); // bytes, us, count
+    for e in tensors {
+        let codec = e.attr("codec").unwrap_or("?");
+        let entry = per_codec.entry(codec).or_default();
+        entry.0 += e.bytes.unwrap_or(0);
+        entry.1 += e.dur_us;
+        entry.2 += 1;
+    }
+    let mut rows: Vec<(&str, (u64, u64, usize))> = per_codec.into_iter().collect();
+    rows.sort_by_key(|(_, (b, _, _))| std::cmp::Reverse(*b));
+    let mut out = String::from("per-codec encode throughput\n");
+    for (codec, (bytes, us, count)) in rows {
+        out.push_str(&format!(
+            "  {:<22} {:>4} tensors  {:>24}  {}\n",
+            codec,
+            count,
+            fmt_bytes_detailed(bytes),
+            crate::bench::fmt_throughput(bytes as usize, Duration::from_micros(us.max(1))),
+        ));
+    }
+    out.push('\n');
+    out
+}
+
+fn render_decision(e: &TraceEvent, iteration: u64) -> String {
+    let mut line = format!(
+        "  @{iteration} rank{} {:<36} -> {}",
+        e.attr("rank").unwrap_or("?"),
+        e.attr("tensor").unwrap_or("?"),
+        e.attr("codec").unwrap_or("?"),
+    );
+    if e.attr("deduped") == Some("true") {
+        line.push_str("  [dedup: payload already in store, priced at zero]");
+    } else {
+        if let Some(p) = e.attr("predicted_bytes").and_then(|s| s.parse::<u64>().ok()) {
+            line.push_str(&format!("  predicted {}", fmt_bytes_detailed(p)));
+        }
+        if let Some(raw) = e.attr("raw_bytes").and_then(|s| s.parse::<u64>().ok()) {
+            line.push_str(&format!(" of {}", fmt_bytes_detailed(raw)));
+        }
+        if let Some(s) = e.attr("predicted_secs").and_then(|s| s.parse::<f64>().ok()) {
+            line.push_str(&format!(" in {:.2}ms", s * 1e3));
+        }
+    }
+    if e.attr("switched") == Some("true") {
+        line.push_str("  [switched codec]");
+    }
+    line.push('\n');
+    line
+}
+
+/// Non-save root spans, one line each: async persists, GC passes,
+/// restores and recoveries.
+fn render_other_roots(
+    children: &HashMap<Option<u64>, Vec<&TraceEvent>>,
+    opts: &ReportOptions,
+) -> String {
+    let Some(roots) = children.get(&None) else { return String::new() };
+    let mut others: Vec<&&TraceEvent> = roots.iter().filter(|e| e.name != "save").collect();
+    if let Some(iter) = opts.save {
+        let want = iter.to_string();
+        others.retain(|e| e.attr("iteration").map(|i| i == want).unwrap_or(true));
+    }
+    if others.is_empty() {
+        return String::new();
+    }
+    let mut out = String::from("other events\n");
+    for e in others {
+        let mut line = format!("  {:<10} {:>10}", e.name, fmt_dur_us(e.dur_us));
+        for (k, v) in &e.attrs {
+            line.push_str(&format!(" {k}={v}"));
+        }
+        if let Some(b) = e.bytes {
+            line.push_str(&format!(" [{}]", fmt_bytes_detailed(b)));
+        }
+        if e.status == "error" {
+            line.push_str(" [ERROR]");
+        }
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out
+}
+
+fn fmt_dur_us(us: u64) -> String {
+    crate::bench::fmt_duration(Duration::from_micros(us))
+}
+
+// ---------------------------------------------------------------------
+// The minimal JSON reader.
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+fn parse_json(text: &str) -> Result<Json, String> {
+    let mut p = Parser { s: text.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != p.s.len() {
+        return Err(format!("trailing bytes at offset {}", p.i));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && matches!(self.s[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8, String> {
+        self.skip_ws();
+        self.s.get(self.i).copied().ok_or_else(|| "unexpected end of input".to_string())
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek()? != c {
+            return Err(format!("expected '{}' at offset {}", c as char, self.i));
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.s[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("invalid literal at offset {}", self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek()? {
+            b'n' => self.literal("null", Json::Null),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => Err(format!("unexpected '{}' at offset {}", c as char, self.i)),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.expect(b':')?;
+            let v = self.value()?;
+            fields.push((k, v));
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                c => return Err(format!("expected ',' or '}}', got '{}'", c as char)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                c => return Err(format!("expected ',' or ']', got '{}'", c as char)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = *self
+                .s
+                .get(self.i)
+                .ok_or_else(|| "unterminated string".to_string())?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = *self
+                        .s
+                        .get(self.i)
+                        .ok_or_else(|| "unterminated escape".to_string())?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hex = self
+                                .s
+                                .get(self.i..self.i + 4)
+                                .ok_or_else(|| "truncated \\u escape".to_string())?;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex).map_err(|_| "bad \\u escape")?,
+                                16,
+                            )
+                            .map_err(|_| "bad \\u escape")?;
+                            self.i += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        c => return Err(format!("bad escape '\\{}'", c as char)),
+                    }
+                }
+                c => {
+                    // re-assemble multi-byte UTF-8 by walking back onto
+                    // the str slice
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let start = self.i - 1;
+                        let s = std::str::from_utf8(&self.s[start..])
+                            .map_err(|_| "invalid UTF-8 in string")?;
+                        let ch = s.chars().next().unwrap();
+                        out.push(ch);
+                        self.i = start + ch.len_utf8();
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        if self.s[self.i] == b'-' {
+            self.i += 1;
+        }
+        while self.i < self.s.len()
+            && matches!(self.s[self.i], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+        {
+            self.i += 1;
+        }
+        std::str::from_utf8(&self.s[start..self.i])
+            .ok()
+            .and_then(|t| t.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| format!("invalid number at offset {start}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_reader_roundtrips_the_event_schema() {
+        let line = r#"{"id": 7, "parent": 3, "name": "encode_tensor", "start_us": 1042, "dur_us": 310, "status": "ok", "bytes": 524288, "attrs": {"rank": "0", "tensor": "wte.weight#mp0", "codec": "cluster_quant"}}"#;
+        let events = parse_events(line).unwrap();
+        assert_eq!(events.len(), 1);
+        let e = &events[0];
+        assert_eq!((e.id, e.parent), (7, Some(3)));
+        assert_eq!(e.name, "encode_tensor");
+        assert_eq!(e.bytes, Some(524288));
+        assert_eq!(e.attr("tensor"), Some("wte.weight#mp0"));
+        assert_eq!(e.attr("missing"), None);
+    }
+
+    #[test]
+    fn json_reader_handles_null_escape_and_unicode() {
+        let line = r#"{"id": 1, "parent": null, "name": "säve \"x\"", "start_us": 0, "dur_us": 0, "status": "error", "bytes": null, "attrs": {"error": "a\nb"}}"#;
+        let e = &parse_events(line).unwrap()[0];
+        assert_eq!(e.parent, None);
+        assert_eq!(e.name, "säve \"x\"");
+        assert_eq!(e.bytes, None);
+        assert_eq!(e.attr("error"), Some("a\nb"));
+    }
+
+    #[test]
+    fn malformed_lines_are_loud_errors() {
+        assert!(parse_events("{\"id\": }").is_err());
+        assert!(parse_events("[1, 2]").unwrap_err().contains("not a JSON object"));
+        let missing_status = r#"{"id": 1, "parent": null, "name": "x", "start_us": 0, "dur_us": 0, "bytes": null, "attrs": {}}"#;
+        assert!(parse_events(missing_status).unwrap_err().contains("status"));
+    }
+
+    fn ev(
+        id: u64,
+        parent: Option<u64>,
+        name: &str,
+        start_us: u64,
+        dur_us: u64,
+        attrs: &[(&str, &str)],
+        bytes: Option<u64>,
+    ) -> TraceEvent {
+        TraceEvent {
+            id,
+            parent,
+            name: name.into(),
+            start_us,
+            dur_us,
+            status: "ok".into(),
+            bytes,
+            attrs: attrs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+        }
+    }
+
+    #[test]
+    fn report_renders_waterfall_tensors_and_decisions() {
+        let events = vec![
+            ev(
+                1,
+                None,
+                "save",
+                0,
+                9000,
+                &[
+                    ("iteration", "30"),
+                    ("kind", "delta"),
+                    ("mp", "2"),
+                    ("pp", "2"),
+                    ("workers", "4"),
+                ],
+                Some(4096),
+            ),
+            ev(2, Some(1), "plan", 10, 200, &[], None),
+            ev(
+                3,
+                Some(2),
+                "decision",
+                50,
+                0,
+                &[
+                    ("rank", "0"),
+                    ("tensor", "wte.weight#mp0"),
+                    ("codec", "cluster_quant{m=16}"),
+                    ("predicted_bytes", "2048"),
+                    ("raw_bytes", "8192"),
+                    ("predicted_secs", "0.001"),
+                    ("switched", "true"),
+                ],
+                None,
+            ),
+            ev(
+                4,
+                Some(2),
+                "decision",
+                60,
+                0,
+                &[
+                    ("rank", "1"),
+                    ("tensor", "wte.weight#mp1"),
+                    ("codec", "cluster_quant{m=16}"),
+                    ("deduped", "true"),
+                ],
+                None,
+            ),
+            ev(5, Some(1), "encode", 300, 5000, &[("workers", "4")], None),
+            ev(
+                6,
+                Some(5),
+                "encode_tensor",
+                350,
+                2500,
+                &[("rank", "0"), ("tensor", "wte.weight#mp0"), ("codec", "cluster_quant{m=16}")],
+                Some(2048),
+            ),
+            ev(7, Some(1), "commit", 5400, 3500, &[], None),
+            ev(8, None, "gc", 20000, 900, &[("pruned", "2")], Some(1 << 20)),
+        ];
+        let text = render_report(&events, &ReportOptions::default());
+        assert!(text.contains("save @30 delta  mp=2 pp=2  workers=4"), "{text}");
+        assert!(text.contains("plan"), "{text}");
+        assert!(text.contains("encode_tensor"), "{text}");
+        assert!(text.contains("slowest tensors"), "{text}");
+        assert!(text.contains("per-codec encode throughput"), "{text}");
+        assert!(text.contains("cluster_quant{m=16}"), "{text}");
+        assert!(text.contains("planner decisions"), "{text}");
+        assert!(text.contains("[dedup: payload already in store, priced at zero]"), "{text}");
+        assert!(text.contains("[switched codec]"), "{text}");
+        assert!(text.contains("other events"), "{text}");
+        assert!(text.contains("gc"), "{text}");
+        // --save filtering drops non-matching saves
+        let filtered = render_report(&events, &ReportOptions { save: Some(99), top: 5 });
+        assert!(filtered.contains("no matching save spans"), "{filtered}");
+    }
+}

@@ -1,0 +1,344 @@
+//! Structured span tracing for the checkpoint plane.
+//!
+//! A [`Tracer`] is a cloneable, thread-safe handle (the same idiom as
+//! [`crate::adapt::SharedCalibration`]) that records **nested spans** —
+//! monotonic start/duration, an optional byte count, key=value attrs, an
+//! ok/error status — and appends each finished span as one JSONL line to
+//! `<dir>/events.jsonl`. The handle starts *disabled* and costs nothing
+//! until [`Tracer::enable`] installs a sink; because every clone shares
+//! one interior cell, enabling tracing on a [`crate::engine::Storage`]
+//! handle lights up every engine, agent thread and blob-store clone that
+//! descends from it — no construction-site churn.
+//!
+//! Event schema (one JSON object per line, validated in CI by
+//! `rust/scripts/check_trace_schema.py`):
+//!
+//! ```json
+//! {"id": 7, "parent": 3, "name": "encode_tensor", "start_us": 1042,
+//!  "dur_us": 310, "status": "ok", "bytes": 524288,
+//!  "attrs": {"rank": "0", "tensor": "wte.weight#mp0"}}
+//! ```
+//!
+//! `parent` is `null` for root spans; ids are unique within a file and a
+//! span's line is written when it *ends*, so children appear before
+//! their parent and readers must key on ids, never on line order.
+//! Wall-clock never enters checkpoint artifacts — spans go only to the
+//! trace file, and the deterministic byte-identity contract holds with
+//! tracing on or off.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use super::metrics::Metrics;
+
+#[derive(Debug)]
+struct TraceSink {
+    epoch: Instant,
+    path: PathBuf,
+    file: Mutex<fs::File>,
+    next_id: AtomicU64,
+}
+
+/// Cloneable tracing handle. See module docs.
+#[derive(Clone, Debug, Default)]
+pub struct Tracer {
+    /// Shared cell: enabling through any clone enables every clone.
+    sink: Arc<RwLock<Option<Arc<TraceSink>>>>,
+    /// The metrics registry riding along with this tracer lineage —
+    /// always live (recording is cheap), rendered on demand.
+    metrics: Metrics,
+}
+
+impl Tracer {
+    /// A handle that records nothing (until someone calls
+    /// [`Tracer::enable`] on it or a clone).
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    /// A fresh handle already writing to `<dir>/events.jsonl`.
+    pub fn to_dir(dir: impl AsRef<Path>) -> std::io::Result<Self> {
+        let t = Self::default();
+        t.enable(dir)?;
+        Ok(t)
+    }
+
+    /// Install a JSONL sink at `<dir>/events.jsonl` (append mode, so
+    /// repeated runs over one storage root accumulate one timeline).
+    /// Takes effect for every clone sharing this handle's cell. Returns
+    /// the event-file path.
+    pub fn enable(&self, dir: impl AsRef<Path>) -> std::io::Result<PathBuf> {
+        let dir = dir.as_ref();
+        fs::create_dir_all(dir)?;
+        let path = dir.join("events.jsonl");
+        let file = fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        *self.sink.write().unwrap() = Some(Arc::new(TraceSink {
+            epoch: Instant::now(),
+            path: path.clone(),
+            file: Mutex::new(file),
+            next_id: AtomicU64::new(1),
+        }));
+        Ok(path)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.sink.read().unwrap().is_some()
+    }
+
+    /// Path of the active event file, if tracing is enabled.
+    pub fn event_path(&self) -> Option<PathBuf> {
+        self.sink.read().unwrap().as_ref().map(|s| s.path.clone())
+    }
+
+    /// The metrics registry shared by this tracer lineage.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Open a root span. Disabled tracers hand back an inert span.
+    pub fn span(&self, name: &str) -> Span {
+        self.span_with_parent(name, None)
+    }
+
+    /// Open a span under an explicit parent id — how encode-pool workers
+    /// attach per-tensor spans to the save's encode phase from another
+    /// thread. `Some(0)` (the id of an inert span) counts as no parent.
+    pub fn span_with_parent(&self, name: &str, parent: Option<u64>) -> Span {
+        let sink = self.sink.read().unwrap().clone();
+        let (id, start_us, name) = match &sink {
+            Some(s) => (
+                s.next_id.fetch_add(1, Ordering::Relaxed),
+                s.epoch.elapsed().as_micros() as u64,
+                name.to_string(),
+            ),
+            None => (0, 0, String::new()),
+        };
+        Span {
+            sink,
+            id,
+            parent: parent.filter(|&p| p != 0),
+            name,
+            start_us,
+            t0: Instant::now(),
+            attrs: Vec::new(),
+            bytes: None,
+            error: None,
+        }
+    }
+
+    /// Record an instantaneous event (a zero-duration span) — planner
+    /// decisions, prune notices.
+    pub fn instant(&self, name: &str, parent: Option<u64>, attrs: &[(&str, String)]) {
+        if !self.is_enabled() {
+            return;
+        }
+        let mut s = self.span_with_parent(name, parent);
+        for (k, v) in attrs {
+            s.attr(k, v);
+        }
+        s.end();
+    }
+}
+
+/// One in-flight span. Ends (and writes its JSONL line) on drop or via
+/// [`Span::end`]; inert when the tracer was disabled at creation.
+#[derive(Debug)]
+pub struct Span {
+    sink: Option<Arc<TraceSink>>,
+    id: u64,
+    parent: Option<u64>,
+    name: String,
+    start_us: u64,
+    t0: Instant,
+    attrs: Vec<(String, String)>,
+    bytes: Option<u64>,
+    error: Option<String>,
+}
+
+impl Span {
+    /// This span's id, for parenting across threads (0 when inert).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Attach a key=value attribute (rendered as strings in the event).
+    pub fn attr(&mut self, key: &str, value: impl std::fmt::Display) {
+        if self.sink.is_some() {
+            self.attrs.push((key.to_string(), value.to_string()));
+        }
+    }
+
+    /// Record the byte count this span processed.
+    pub fn set_bytes(&mut self, bytes: u64) {
+        if self.sink.is_some() {
+            self.bytes = Some(bytes);
+        }
+    }
+
+    /// Mark the span failed; the event carries `"status": "error"` and an
+    /// `error` attr with `msg`.
+    pub fn fail(&mut self, msg: &str) {
+        if self.sink.is_some() {
+            self.error = Some(msg.to_string());
+        }
+    }
+
+    /// Finish now (drop does the same; this just names the intent).
+    pub fn end(self) {}
+
+    fn write_event(&mut self) {
+        let Some(sink) = self.sink.take() else { return };
+        let dur_us = self.t0.elapsed().as_micros() as u64;
+        let mut line = String::with_capacity(160);
+        line.push_str("{\"id\": ");
+        line.push_str(&self.id.to_string());
+        line.push_str(", \"parent\": ");
+        match self.parent {
+            Some(p) => line.push_str(&p.to_string()),
+            None => line.push_str("null"),
+        }
+        line.push_str(", \"name\": \"");
+        escape_json(&self.name, &mut line);
+        line.push_str("\", \"start_us\": ");
+        line.push_str(&self.start_us.to_string());
+        line.push_str(", \"dur_us\": ");
+        line.push_str(&dur_us.to_string());
+        line.push_str(", \"status\": ");
+        line.push_str(if self.error.is_some() { "\"error\"" } else { "\"ok\"" });
+        line.push_str(", \"bytes\": ");
+        match self.bytes {
+            Some(b) => line.push_str(&b.to_string()),
+            None => line.push_str("null"),
+        }
+        line.push_str(", \"attrs\": {");
+        if let Some(err) = self.error.take() {
+            self.attrs.push(("error".to_string(), err));
+        }
+        for (i, (k, v)) in self.attrs.iter().enumerate() {
+            if i > 0 {
+                line.push_str(", ");
+            }
+            line.push('"');
+            escape_json(k, &mut line);
+            line.push_str("\": \"");
+            escape_json(v, &mut line);
+            line.push('"');
+        }
+        line.push_str("}}");
+        let mut f = sink.file.lock().unwrap();
+        let _ = writeln!(f, "{line}");
+        let _ = f.flush();
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        self.write_event();
+    }
+}
+
+/// Minimal JSON string escaping: quotes, backslashes, and control
+/// characters as `\u00XX`.
+pub(crate) fn escape_json(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("bsnp-trace-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&p);
+        p
+    }
+
+    #[test]
+    fn disabled_tracer_is_inert_and_writes_nothing() {
+        let t = Tracer::disabled();
+        assert!(!t.is_enabled());
+        let mut s = t.span("save");
+        assert_eq!(s.id(), 0);
+        s.attr("iteration", 7);
+        s.set_bytes(1024);
+        s.end();
+        assert!(t.event_path().is_none());
+    }
+
+    #[test]
+    fn spans_nest_and_serialize_as_jsonl() {
+        let dir = tmp("nest");
+        let t = Tracer::to_dir(&dir).unwrap();
+        let mut root = t.span("save");
+        root.attr("iteration", 30u64);
+        root.set_bytes(4096);
+        {
+            let mut child = t.span_with_parent("plan", Some(root.id()));
+            child.attr("ranks", 4);
+            child.end();
+        }
+        let mut failed = t.span_with_parent("encode", Some(root.id()));
+        failed.fail("synthetic \"quoted\" failure");
+        failed.end();
+        root.end();
+        let text = fs::read_to_string(dir.join("events.jsonl")).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "{text}");
+        // children end (and are written) before their parent
+        assert!(lines[0].contains("\"name\": \"plan\""), "{text}");
+        assert!(lines[1].contains("\"status\": \"error\""), "{text}");
+        assert!(lines[1].contains("synthetic \\\"quoted\\\" failure"), "{text}");
+        assert!(lines[2].contains("\"name\": \"save\""), "{text}");
+        assert!(lines[2].contains("\"parent\": null"), "{text}");
+        assert!(lines[2].contains("\"bytes\": 4096"), "{text}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn enabling_through_one_clone_enables_all() {
+        let dir = tmp("shared");
+        let a = Tracer::disabled();
+        let b = a.clone();
+        assert!(!b.is_enabled());
+        a.enable(&dir).unwrap();
+        assert!(b.is_enabled(), "clones share the sink cell");
+        b.span("gc").end();
+        let text = fs::read_to_string(dir.join("events.jsonl")).unwrap();
+        assert!(text.contains("\"name\": \"gc\""), "{text}");
+        // but two *independent* handles stay independent
+        assert!(!Tracer::disabled().is_enabled());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn metrics_ride_the_tracer_lineage() {
+        let t = Tracer::disabled();
+        let c = t.clone();
+        c.metrics().counter_add("bitsnap_gc_reclaimed_bytes_total", &[], 512.0);
+        assert_eq!(t.metrics().counter_value("bitsnap_gc_reclaimed_bytes_total", &[]), 512.0);
+    }
+
+    #[test]
+    fn escape_json_handles_control_chars() {
+        let mut out = String::new();
+        escape_json("a\"b\\c\nd\te\u{1}", &mut out);
+        assert_eq!(out, "a\\\"b\\\\c\\nd\\te\\u0001");
+    }
+}

@@ -27,6 +27,8 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::obs::Metrics;
+
 use super::hash::{content_hash, BlobKey};
 
 /// Monotonic counter making concurrent writers' temp files distinct.
@@ -56,6 +58,10 @@ pub struct BlobStore {
     root: PathBuf,
     /// Pin state shared across clones (Arc), per-process.
     table: Arc<Mutex<PinTable>>,
+    /// Dedup hit/miss census (shared with the owning storage's tracer
+    /// lineage via [`BlobStore::with_metrics`]; a private registry
+    /// otherwise).
+    metrics: Metrics,
 }
 
 impl BlobStore {
@@ -63,7 +69,18 @@ impl BlobStore {
     pub fn open(root: impl Into<PathBuf>) -> std::io::Result<Self> {
         let root = root.into();
         fs::create_dir_all(&root)?;
-        Ok(Self { root, table: Arc::new(Mutex::new(PinTable::default())) })
+        Ok(Self {
+            root,
+            table: Arc::new(Mutex::new(PinTable::default())),
+            metrics: Metrics::new(),
+        })
+    }
+
+    /// Report dedup hits/misses into `metrics` instead of a private
+    /// registry ([`crate::engine::Storage::new`] passes its tracer's).
+    pub fn with_metrics(mut self, metrics: Metrics) -> Self {
+        self.metrics = metrics;
+        self
     }
 
     pub fn root(&self) -> &Path {
@@ -85,11 +102,13 @@ impl BlobStore {
         let path = self.path(&key);
         if let Ok(meta) = fs::metadata(&path) {
             if meta.len() == key.len {
+                self.metrics.counter_add("bitsnap_cas_dedup_hits_total", &[], 1.0);
                 return Ok((key, 0)); // dedup hit
             }
             // a file of the wrong size under this name cannot be our
             // blob (the length is part of the name) — rewrite it
         }
+        self.metrics.counter_add("bitsnap_cas_dedup_misses_total", &[], 1.0);
         let tmp = self.root.join(format!(
             ".{}.{}-{}.tmp",
             key.file_name(),

@@ -79,10 +79,10 @@ impl StoreStats {
             self.iterations,
             self.blob_count,
             self.referenced_blobs,
-            crate::bench::fmt_bytes(self.physical_bytes as usize),
-            crate::bench::fmt_bytes(self.live_bytes as usize),
-            crate::bench::fmt_bytes(self.dead_bytes as usize),
-            crate::bench::fmt_bytes(self.logical_bytes as usize),
+            crate::obs::fmt_bytes_detailed(self.physical_bytes),
+            crate::obs::fmt_bytes_detailed(self.live_bytes),
+            crate::obs::fmt_bytes_detailed(self.dead_bytes),
+            crate::obs::fmt_bytes_detailed(self.logical_bytes),
             self.dedup_ratio(),
         )
     }
@@ -107,7 +107,10 @@ mod tests {
         assert!(text.contains("iterations       3"), "{text}");
         assert!(text.contains("blobs            12 (10 referenced)"), "{text}");
         assert!(text.contains("dedup ratio      3.00x"), "{text}");
-        assert!(text.contains("dead bytes"), "{text}");
+        // byte counters render human-readable with the exact figure in
+        // parens, via the shared obs formatter
+        assert!(text.contains("live bytes       3.00 KiB (3072 bytes)"), "{text}");
+        assert!(text.contains("dead bytes       1.00 KiB (1024 bytes)"), "{text}");
         assert!((s.dedup_ratio() - 3.0).abs() < 1e-12);
         // no content-addressed payloads (plain / unimported-legacy
         // trees): no dedup observed, not a huge bogus ratio

@@ -38,6 +38,9 @@ pub struct Trainer {
     step: u64,
     corpus: SyntheticCorpus,
     telemetry: Option<TrainTelemetry>,
+    /// Cumulative wall time the training loop spent blocked on
+    /// checkpoint saves ([`Trainer::record_checkpoint_stall`]).
+    checkpoint_stall: std::time::Duration,
 }
 
 impl Trainer {
@@ -71,6 +74,7 @@ impl Trainer {
             step: 0,
             corpus,
             telemetry: None,
+            checkpoint_stall: std::time::Duration::ZERO,
         })
     }
 
@@ -122,6 +126,19 @@ impl Trainer {
     /// Telemetry of the most recent step (`None` before the first step).
     pub fn telemetry(&self) -> Option<TrainTelemetry> {
         self.telemetry
+    }
+
+    /// Account one checkpoint save's blocking time against this trainer —
+    /// the `bitsnap_trainer_stall_seconds_total` counter in a traced run
+    /// reports the same number. A future async-persist engine shrinks
+    /// exactly this total.
+    pub fn record_checkpoint_stall(&mut self, stall: std::time::Duration) {
+        self.checkpoint_stall += stall;
+    }
+
+    /// Total wall time the training loop has blocked on checkpoint saves.
+    pub fn total_checkpoint_stall(&self) -> std::time::Duration {
+        self.checkpoint_stall
     }
 
     /// Snapshot the full mixed-precision state dict for checkpointing:

@@ -1,0 +1,99 @@
+//! Tracing never enters artifacts: two identical sharded save
+//! trajectories — one with the span tracer enabled, one without — must
+//! leave byte-identical storage trees (`rank*.bsnp` shards,
+//! `manifest.bsnm` files, CAS blobs, type markers); only the `trace/`
+//! directory may differ. The engines run under the ambient
+//! `BITSNAP_TEST_WORKERS` (the CI matrix covers 1 and 4), so the
+//! byte-identity contract holds for tracing × worker-pool width.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use bitsnap::compress::delta::Policy;
+use bitsnap::engine::{PersistConfig, ShardedCheckpointEngine, ShardedEngineConfig, Storage};
+use bitsnap::tensor::StateDict;
+use bitsnap::train::Parallelism;
+
+fn roots(tag: &str) -> (PathBuf, PathBuf) {
+    let pid = std::process::id();
+    let shm = std::env::temp_dir().join(format!("bsnp-trdet-shm-{tag}-{pid}"));
+    let store = std::env::temp_dir().join(format!("bsnp-trdet-store-{tag}-{pid}"));
+    let _ = std::fs::remove_dir_all(&shm);
+    let _ = std::fs::remove_dir_all(&store);
+    (shm, store)
+}
+
+/// Every file under a storage root as relative path → content, skipping
+/// the `trace/` directory (the one place wall-clock is allowed to land).
+fn snapshot_tree(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(dir: &Path, root: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            let rel = path.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+            if path.is_dir() {
+                if rel == "trace" {
+                    continue;
+                }
+                walk(&path, root, out);
+            } else {
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(root, root, &mut out);
+    out
+}
+
+/// Drive the fixed base+delta trajectory and snapshot the resulting
+/// store tree. Tags differ between arms; job names never enter artifacts
+/// (the pipeline bench asserts the same across its reps).
+fn run(tag: &str, traced: bool) -> BTreeMap<String, Vec<u8>> {
+    let (shm_root, store_root) = roots(tag);
+    let storage = Storage::new(&store_root).unwrap();
+    if traced {
+        storage.tracer().enable(store_root.join("trace")).unwrap();
+    }
+    let cfg = ShardedEngineConfig {
+        job: tag.into(),
+        parallelism: Parallelism::new(2, 2),
+        shm_root: shm_root.clone(),
+        storage: storage.clone(),
+        redundancy: 2,
+        policy: Policy::bitsnap(),
+        max_cached_iteration: 2,
+        persist: PersistConfig::from_env(),
+    };
+    let mut eng = ShardedCheckpointEngine::new(cfg).unwrap();
+    let mut sd = StateDict::synthetic_gpt(1 << 13, 5);
+    for (i, iter) in [10u64, 20, 30].into_iter().enumerate() {
+        sd.perturb_model_states(0.05, 700 + i as u64);
+        eng.save(iter, &sd).unwrap();
+    }
+    eng.flush().unwrap();
+    drop(eng);
+    if traced {
+        let events = std::fs::read_to_string(store_root.join("trace/events.jsonl")).unwrap();
+        assert!(!events.is_empty(), "the traced arm must actually trace");
+    }
+    let snap = snapshot_tree(&store_root);
+    let _ = std::fs::remove_dir_all(&shm_root);
+    let _ = std::fs::remove_dir_all(&store_root);
+    snap
+}
+
+#[test]
+fn traced_and_untraced_saves_leave_byte_identical_stores() {
+    let plain = run("off", false);
+    let traced = run("on", true);
+    let plain_files: Vec<&String> = plain.keys().collect();
+    let traced_files: Vec<&String> = traced.keys().collect();
+    assert_eq!(plain_files, traced_files, "tracing changed the set of persisted files");
+    for (name, bytes) in &plain {
+        assert_eq!(bytes, &traced[name], "{name} differs with tracing on");
+    }
+    // the comparison covered all three artifact families
+    assert!(plain.keys().any(|k| k.ends_with(".bsnp")), "no shard containers compared");
+    assert!(plain.keys().any(|k| k.ends_with(".bsnm")), "no manifests compared");
+    assert!(plain.keys().any(|k| k.starts_with("cas")), "no CAS blobs compared");
+}

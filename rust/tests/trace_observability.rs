@@ -1,0 +1,246 @@
+//! The observability plane, end to end through the sharded engine: a
+//! traced mp×pp save must emit the full span hierarchy (save → plan with
+//! planner decisions → per-worker encode_tensor spans → commit, plus the
+//! async persist protocol), injected failures must surface as error
+//! spans *without* mutating either checkpoint tier, and traced restores
+//! must chain one `chain_load` span per manifest hop.
+
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+
+use bitsnap::adapt::{AdaptiveConfig, AdaptivePolicy, Calibration, CostModel, SharedCalibration};
+use bitsnap::compress::delta::Policy;
+use bitsnap::engine::failure::FailureKind;
+use bitsnap::engine::{PersistConfig, ShardedCheckpointEngine, ShardedEngineConfig, Storage};
+use bitsnap::obs::{load_events, render_report, ReportOptions, TraceEvent};
+use bitsnap::tensor::StateDict;
+use bitsnap::train::Parallelism;
+
+fn roots(tag: &str) -> (PathBuf, PathBuf) {
+    let pid = std::process::id();
+    let shm = std::env::temp_dir().join(format!("bsnp-obs-shm-{tag}-{pid}"));
+    let store = std::env::temp_dir().join(format!("bsnp-obs-store-{tag}-{pid}"));
+    let _ = std::fs::remove_dir_all(&shm);
+    let _ = std::fs::remove_dir_all(&store);
+    (shm, store)
+}
+
+fn cleanup(shm: &PathBuf, store: &PathBuf) {
+    let _ = std::fs::remove_dir_all(shm);
+    let _ = std::fs::remove_dir_all(store);
+}
+
+fn config(tag: &str, p: Parallelism, storage: Storage, shm: &PathBuf) -> ShardedEngineConfig {
+    ShardedEngineConfig {
+        job: tag.into(),
+        parallelism: p,
+        shm_root: shm.clone(),
+        storage,
+        redundancy: 2,
+        policy: Policy::bitsnap(),
+        max_cached_iteration: 2,
+        persist: PersistConfig { workers: 4, queue_depth: 4 },
+    }
+}
+
+#[test]
+fn traced_sharded_save_emits_the_full_span_hierarchy() {
+    let (shm_root, store_root) = roots("hier");
+    let storage = Storage::new(&store_root).unwrap();
+    let events_path = storage.tracer().enable(store_root.join("trace")).unwrap();
+    let p = Parallelism::new(2, 2);
+    let cfg = config("trace-hier", p, storage.clone(), &shm_root);
+    let write_bps = cfg.storage.throttle_bps();
+    let shared = SharedCalibration::new(Calibration::default_host());
+    let mut eng = ShardedCheckpointEngine::with_policy_sources(cfg, move |_| {
+        let cost = CostModel::shared(shared.clone(), write_bps);
+        Box::new(AdaptivePolicy::new(AdaptiveConfig::default(), cost))
+    })
+    .unwrap();
+    let mut sd = StateDict::synthetic_gpt(1 << 13, 3);
+    eng.save(10, &sd).unwrap();
+    sd.perturb_model_states(0.05, 4);
+    eng.save(20, &sd).unwrap();
+    eng.flush().unwrap();
+    drop(eng);
+
+    let events = load_events(&events_path).unwrap();
+    let by_id: HashMap<u64, &TraceEvent> = events.iter().map(|e| (e.id, e)).collect();
+    let find = |name: &str| events.iter().filter(|e| e.name == name).collect::<Vec<_>>();
+
+    let saves = find("save");
+    assert_eq!(saves.len(), 2, "one root span per save");
+    let base = saves.iter().find(|e| e.attr("iteration") == Some("10")).unwrap();
+    assert_eq!(base.attr("kind"), Some("base"));
+    assert_eq!((base.attr("mp"), base.attr("pp")), (Some("2"), Some("2")));
+    assert_eq!(base.attr("workers"), Some("4"));
+    assert!(base.bytes.unwrap() > 0, "save root carries compressed bytes");
+    let delta = saves.iter().find(|e| e.attr("iteration") == Some("20")).unwrap();
+    assert_eq!(delta.attr("kind"), Some("delta"));
+
+    // the three phases nest under each save root
+    for phase in ["plan", "encode", "commit"] {
+        let spans = find(phase);
+        assert_eq!(spans.len(), 2, "one {phase} per save");
+        for s in &spans {
+            assert_eq!(by_id[&s.parent.unwrap()].name, "save", "{phase} parents to save");
+        }
+    }
+
+    // per-(rank, tensor) spans from the encode-pool workers, parented to
+    // the encode phase across threads; every rank of the 2x2 layout shows
+    let tensors = find("encode_tensor");
+    assert!(!tensors.is_empty());
+    let mut ranks = HashSet::new();
+    for t in &tensors {
+        assert_eq!(by_id[&t.parent.unwrap()].name, "encode");
+        assert!(t.attr("tensor").is_some());
+        assert!(t.attr("codec").is_some());
+        assert!(t.bytes.is_some(), "encode_tensor carries the payload size");
+        ranks.insert(t.attr("rank").unwrap().to_string());
+    }
+    assert_eq!(ranks.len(), p.world(), "every rank's tensors traced");
+
+    // planner rationale: decision instants under the plan phase
+    let decisions = find("decision");
+    assert!(!decisions.is_empty(), "adaptive sources log decision events");
+    for d in &decisions {
+        assert_eq!(by_id[&d.parent.unwrap()].name, "plan");
+        assert!(d.attr("rank").is_some());
+        assert!(d.attr("tensor").is_some());
+        assert!(d.attr("codec").is_some());
+        assert!(
+            d.attr("deduped") == Some("true") || d.attr("predicted_bytes").is_some(),
+            "a decision is either deduped or carries a cost prediction"
+        );
+    }
+
+    // the async persist protocol: three-phase CAS writes under persist roots
+    assert!(!find("persist").is_empty());
+    for sub in ["blob_pin", "publish", "unpin"] {
+        let spans = find(sub);
+        assert!(!spans.is_empty(), "no {sub} spans");
+        for s in &spans {
+            assert_eq!(by_id[&s.parent.unwrap()].name, "persist");
+        }
+    }
+
+    // trace-report renders the waterfall and the rationale sections
+    let text = render_report(&events, &ReportOptions::default());
+    assert!(text.contains("save @10 base"), "{text}");
+    assert!(text.contains("save @20 delta"), "{text}");
+    assert!(text.contains("slowest tensors"), "{text}");
+    assert!(text.contains("per-codec encode throughput"), "{text}");
+    assert!(text.contains("planner decisions"), "{text}");
+
+    // and the metrics registry rode the same lineage
+    let prom = storage.tracer().metrics().render_prometheus();
+    for name in [
+        "bitsnap_save_logical_bytes_total",
+        "bitsnap_save_physical_bytes_total",
+        "bitsnap_pipeline_queue_wait_seconds",
+        "bitsnap_pipeline_worker_occupancy",
+    ] {
+        assert!(prom.contains(name), "{name} missing from:\n{prom}");
+    }
+    cleanup(&shm_root, &store_root);
+}
+
+#[test]
+fn injected_failures_trace_an_error_span_and_leave_both_tiers_untouched() {
+    let (shm_root, store_root) = roots("fail");
+    let storage = Storage::new(&store_root).unwrap();
+    let events_path = storage.tracer().enable(store_root.join("trace")).unwrap();
+    let cfg = config("trace-fail", Parallelism::new(2, 1), storage.clone(), &shm_root);
+    let mut eng = ShardedCheckpointEngine::new(cfg).unwrap();
+    let mut sd = StateDict::synthetic_gpt(1 << 12, 11);
+    eng.save(10, &sd).unwrap();
+
+    let kinds = [FailureKind::TornWrite, FailureKind::MissingIteration, FailureKind::BitFlip];
+    for (i, kind) in kinds.into_iter().enumerate() {
+        let iteration = 20 + i as u64;
+        sd.perturb_model_states(0.05, 40 + i as u64);
+        eng.inject_encode_failure(kind);
+        let err = eng.save(iteration, &sd).unwrap_err();
+        assert!(err.to_string().contains("injected failure"), "{err}");
+        // the save aborted before any commit: neither tier has the
+        // iteration and the save counters did not advance
+        assert!(!eng.engines()[0].shm().has(iteration));
+        assert!(eng.manifest(iteration).is_err());
+    }
+
+    // the engine stays reusable and the cadence is intact: the next save
+    // is still the delta after the iteration-10 base, and it round-trips
+    let r = eng.save(30, &sd).unwrap();
+    assert!(!r.is_base, "failed saves must not advance the base cadence");
+    assert_eq!(r.per_rank[0].base_iteration, 10);
+    eng.flush().unwrap();
+    let loaded = eng.load_iteration(30).unwrap();
+    assert_eq!(loaded.len(), sd.len());
+    assert!(!storage.iterations().unwrap().iter().any(|i| (20..30).contains(i)));
+    drop(eng);
+
+    let events = load_events(&events_path).unwrap();
+    let failed_saves: Vec<&TraceEvent> =
+        events.iter().filter(|e| e.name == "save" && e.status == "error").collect();
+    assert_eq!(failed_saves.len(), kinds.len(), "one error root per injected failure");
+    let traced_kinds: HashSet<&str> =
+        failed_saves.iter().map(|e| e.attr("failure_kind").unwrap()).collect();
+    assert_eq!(traced_kinds.len(), kinds.len(), "all kinds distinct: {traced_kinds:?}");
+    for s in &failed_saves {
+        assert!(s.attr("error").unwrap().contains("injected failure"), "{s:?}");
+    }
+    let failed_encodes =
+        events.iter().filter(|e| e.name == "encode" && e.status == "error").count();
+    assert_eq!(failed_encodes, kinds.len(), "the encode phase span carries the error");
+    cleanup(&shm_root, &store_root);
+}
+
+#[test]
+fn traced_restore_and_recover_chain_one_span_per_manifest_hop() {
+    let (shm_root, store_root) = roots("chain");
+    let storage = Storage::new(&store_root).unwrap();
+    let events_path = storage.tracer().enable(store_root.join("trace")).unwrap();
+    let cfg = config("trace-chain", Parallelism::new(2, 1), storage.clone(), &shm_root);
+    let mut eng = ShardedCheckpointEngine::new(cfg).unwrap();
+    let mut sd = StateDict::synthetic_gpt(1 << 12, 21);
+    eng.save(10, &sd).unwrap();
+    sd.perturb_model_states(0.05, 22);
+    eng.save(20, &sd).unwrap();
+    eng.flush().unwrap();
+
+    let loaded = eng.load_iteration(20).unwrap();
+    assert_eq!(loaded.len(), sd.len());
+    let (iter, _) = eng.recover_latest().unwrap().unwrap();
+    assert_eq!(iter, 20);
+    drop(eng);
+
+    let events = load_events(&events_path).unwrap();
+    let by_id: HashMap<u64, &TraceEvent> = events.iter().map(|e| (e.id, e)).collect();
+    let root_of = |e: &TraceEvent| {
+        let mut cur = e;
+        while let Some(pid) = cur.parent {
+            cur = by_id[&pid];
+        }
+        cur.id
+    };
+    let restore = events.iter().find(|e| e.name == "restore").unwrap();
+    assert_eq!(restore.attr("iteration"), Some("20"));
+    assert!(restore.bytes.unwrap() > 0, "restore carries the loaded byte count");
+    let recover = events.iter().find(|e| e.name == "recover").unwrap();
+    assert_eq!(recover.attr("iteration"), Some("20"));
+
+    // delta 20 -> base 10 is two manifest hops, walked once by the
+    // restore and once by the recovery; the base hop parents to the
+    // delta hop the same way the deltas chain
+    let chain: Vec<&TraceEvent> = events.iter().filter(|e| e.name == "chain_load").collect();
+    assert_eq!(chain.len(), 4, "{chain:?}");
+    for root in [restore.id, recover.id] {
+        let hops: Vec<&&TraceEvent> = chain.iter().filter(|e| root_of(e) == root).collect();
+        assert_eq!(hops.len(), 2);
+        let delta_hop = hops.iter().find(|e| e.attr("iteration") == Some("20")).unwrap();
+        let base_hop = hops.iter().find(|e| e.attr("iteration") == Some("10")).unwrap();
+        assert_eq!(base_hop.parent, Some(delta_hop.id), "base hop chains off the delta hop");
+    }
+    cleanup(&shm_root, &store_root);
+}
