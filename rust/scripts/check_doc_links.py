@@ -1,0 +1,183 @@
+#!/usr/bin/env python3
+"""Doc-link gate: every intra-repo link in the markdown docs must resolve.
+
+Checks inline markdown links (``[text](target)``) in ``README.md`` and
+``docs/*.md``:
+
+* ``http(s)://`` / ``mailto:`` targets are skipped — CI must not depend
+  on the network;
+* path targets must resolve relative to the file containing the link
+  (directories count, so ``[store](../rust/src/store/)`` works);
+* ``#anchor`` targets (bare or after a path) must match a heading in the
+  target file, using GitHub's slug rules (lowercase, punctuation
+  stripped, spaces to hyphens);
+* links inside fenced code blocks are ignored.
+
+Usage:
+  check_doc_links.py [FILES...] [--self-test]
+
+With no FILES, checks ``README.md`` and ``docs/*.md`` relative to the
+repo root (two levels up from this script). ``--self-test`` verifies the
+gate catches injected broken links and anchors before trusting a pass.
+"""
+
+import argparse
+import glob
+import os
+import re
+import sys
+import tempfile
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE = re.compile(r"^\s*(```|~~~)")
+HEADING = re.compile(r"^\s{0,3}(#{1,6})\s+(.*)$")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def slugify(heading):
+    """GitHub-style heading slug: lowercase, drop punctuation, spaces to hyphens."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading).strip()
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # linked headings keep their text
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def outside_fences(lines):
+    """Yield (lineno, line) for lines not inside a fenced code block."""
+    in_fence = False
+    for i, line in enumerate(lines, 1):
+        if FENCE.match(line):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            yield i, line
+
+
+def anchors_of(path):
+    anchors = set()
+    with open(path, encoding="utf-8") as f:
+        lines = f.read().splitlines()
+    for _, line in outside_fences(lines):
+        m = HEADING.match(line)
+        if m:
+            anchors.add(slugify(m.group(2)))
+    return anchors
+
+
+def check_file(md_path, anchor_cache):
+    fails = []
+    base = os.path.dirname(os.path.abspath(md_path))
+    with open(md_path, encoding="utf-8") as f:
+        lines = f.read().splitlines()
+    for lineno, line in outside_fences(lines):
+        for target in LINK.findall(line):
+            if target.startswith(SKIP_SCHEMES):
+                continue
+            path_part, _, anchor = target.partition("#")
+            if path_part:
+                resolved = os.path.normpath(os.path.join(base, path_part))
+                if not os.path.exists(resolved):
+                    fails.append(f"{md_path}:{lineno}: broken link {target!r} "
+                                 f"(no such path: {resolved})")
+                    continue
+                anchor_target = resolved
+            else:
+                anchor_target = os.path.abspath(md_path)
+            if anchor:
+                if not anchor_target.endswith((".md", ".markdown")):
+                    continue  # anchors into source files are line refs, not headings
+                if anchor_target not in anchor_cache:
+                    anchor_cache[anchor_target] = anchors_of(anchor_target)
+                if anchor.lower() not in anchor_cache[anchor_target]:
+                    fails.append(f"{md_path}:{lineno}: broken anchor {target!r} "
+                                 f"(no heading slug {anchor!r} in {anchor_target})")
+    return fails
+
+
+def run(files):
+    anchor_cache = {}
+    total_fails = []
+    for path in files:
+        if not os.path.exists(path):
+            total_fails.append(f"{path}: file to check does not exist")
+            continue
+        fails = check_file(path, anchor_cache)
+        if fails:
+            total_fails.extend(fails)
+        else:
+            print(f"OK   {path}")
+    if total_fails:
+        print(f"\nFAIL: {len(total_fails)} broken doc link(s):", file=sys.stderr)
+        for f in total_fails:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\nall intra-repo doc links resolve")
+    return 0
+
+
+def self_test():
+    """The gate must catch what it claims to catch."""
+    failed = False
+    with tempfile.TemporaryDirectory() as d:
+        os.makedirs(os.path.join(d, "docs"))
+        os.makedirs(os.path.join(d, "src"))
+        with open(os.path.join(d, "src", "lib.rs"), "w") as f:
+            f.write("// target\n")
+        with open(os.path.join(d, "docs", "other.md"), "w") as f:
+            f.write("# Other Doc\n\n## The Async-Persist Plane\n")
+        good = os.path.join(d, "docs", "good.md")
+        with open(good, "w") as f:
+            f.write(
+                "# Good\n\n"
+                "A [file link](../src/lib.rs) and a [doc link](other.md), an\n"
+                "[anchor](other.md#the-async-persist-plane), a\n"
+                "[self anchor](#good), a [dir](../src/) and an\n"
+                "[external](https://example.com/nope) link.\n\n"
+                "```\n[broken inside fence](nope.md) is ignored\n```\n"
+            )
+        bad_path = os.path.join(d, "docs", "bad_path.md")
+        with open(bad_path, "w") as f:
+            f.write("[gone](../src/missing.rs)\n")
+        bad_anchor = os.path.join(d, "docs", "bad_anchor.md")
+        with open(bad_anchor, "w") as f:
+            f.write("[gone](other.md#no-such-heading)\n")
+        cases = [
+            ("clean file passes", check_file(good, {}), False),
+            ("broken path caught", check_file(bad_path, {}), True),
+            ("broken anchor caught", check_file(bad_anchor, {}), True),
+        ]
+        for name, fails, should_fail in cases:
+            caught = bool(fails)
+            verdict = "ok" if caught == should_fail else "BROKEN"
+            if caught != should_fail:
+                failed = True
+            print(f"self-test [{verdict}] {name}: {len(fails)} finding(s)")
+            for f in fails:
+                print(f"    {f}")
+    if failed:
+        print("self-test FAILED: the gate does not catch what it must", file=sys.stderr)
+        return 1
+    print("self-test passed: the gate fails on broken links and passes clean docs")
+    return 0
+
+
+def default_files():
+    root = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    files = [os.path.join(root, "README.md")]
+    files += sorted(glob.glob(os.path.join(root, "docs", "*.md")))
+    return files
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("files", nargs="*", help="markdown files (default: README.md + docs/*.md)")
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+    if args.self_test:
+        sys.exit(self_test())
+    sys.exit(run(args.files or default_files()))
+
+
+if __name__ == "__main__":
+    main()

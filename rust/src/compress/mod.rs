@@ -171,6 +171,17 @@ pub enum CodecParams {
 /// so "adaptive" can tune codec *parameters* (cluster count, index width,
 /// block size, prune threshold) rather than merely selecting among
 /// fixed-parameter codecs.
+///
+/// ```
+/// use bitsnap::compress::{CodecId, CodecParams, CodecSpec};
+///
+/// let spec = CodecSpec::cluster_quant(16);
+/// assert_eq!(spec.id, CodecId::ClusterQuant);
+/// assert_eq!(spec.params, CodecParams::Clusters(16));
+/// assert!(spec.validate().is_ok());
+/// // out-of-range parameters saturate and are rejected loudly
+/// assert!(CodecSpec::cluster_quant(1000).validate().is_err());
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct CodecSpec {
     pub id: CodecId,

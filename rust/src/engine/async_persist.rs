@@ -1,0 +1,389 @@
+//! The zero-stall async persist plane: snapshot-and-return checkpointing
+//! (ROADMAP item 1, following "On Efficient Constructions of
+//! Checkpoints", Chen et al.).
+//!
+//! A synchronous [`ShardedCheckpointEngine::save`] blocks the training
+//! loop for the whole plan → pooled-encode → commit pipeline, so
+//! BitSnap's compression wins never translate into train-loop time.
+//! [`PersistHandle`] moves all of it off the critical path:
+//!
+//! 1. **Snapshot** — `save()` clones the state dict at the step boundary
+//!    (one memcpy of the raw tensor bytes; the trainer's only stall) and
+//!    returns a [`SaveReceipt`] immediately.
+//! 2. **Persist** — a dedicated background thread owns the wrapped
+//!    engine and runs the ordinary three-phase save on the snapshot:
+//!    probe/plan, pooled encode, and the CAS three-phase commit
+//!    (pin → publish → unpin) that was designed for exactly this
+//!    concurrency. The artifacts are **byte-identical** to a synchronous
+//!    save of the same trajectory, because the background thread runs
+//!    the very same deterministic pipeline on an identical state dict.
+//! 3. **Bounded staleness** — at most one save is ever in flight. When
+//!    the next cadence arrives before the previous persist completes,
+//!    the configured [`Backpressure`] either **blocks** (the trainer
+//!    waits, never losing a checkpoint) or **skips** (the save is
+//!    dropped and counted, keeping the trainer stall-free).
+//!
+//! Every background save runs under an `async_persist` root span (the
+//! engine's own `save` span nests beneath it), the
+//! `bitsnap_persist_inflight` gauge is 1 exactly while a persist runs,
+//! and skips increment `bitsnap_persist_skipped_total`. `trace-report`
+//! renders the per-save trainer stall vs. persist wall from those spans.
+//!
+//! Crash safety: a persist thread dying between blob pin and stub
+//! publish (injectable via
+//! [`FailureKind::CrashBetweenPinAndPublish`][crate::engine::failure::FailureKind])
+//! leaves only unreferenced, collectible blobs — never a stub with
+//! missing payloads — so recovery falls back to the previous durable
+//! iteration bit-exactly. `tests/async_persist.rs` pins all of this.
+
+// Re-enable the crate-root lint inside `engine`'s legacy allow: this
+// module's public surface is fully documented and must stay that way.
+#![warn(missing_docs)]
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::compress::CompressError;
+use crate::obs::Tracer;
+use crate::tensor::StateDict;
+
+use super::sharded::{ShardedCheckpointEngine, ShardedSaveReport};
+
+/// What to do when a save cadence arrives while the previous persist is
+/// still in flight (the bounded-staleness policy: never more than one
+/// save is in flight either way).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backpressure {
+    /// Wait for the in-flight persist to finish, then enqueue. No save
+    /// is ever lost; the wait is charged to the trainer as stall.
+    #[default]
+    Block,
+    /// Drop this save and return immediately. The trainer never stalls
+    /// beyond the snapshot memcpy, at the cost of checkpoint cadence
+    /// (skips are counted in [`PersistHandle::skipped`] and the
+    /// `bitsnap_persist_skipped_total` metric).
+    Skip,
+}
+
+impl Backpressure {
+    /// Parse the CLI form: `"block"` or `"skip"`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "block" => Ok(Self::Block),
+            "skip" => Ok(Self::Skip),
+            other => Err(format!("backpressure {other:?}: expected \"block\" or \"skip\"")),
+        }
+    }
+}
+
+/// What the trainer learns from an async `save()` call, immediately.
+///
+/// The full [`ShardedSaveReport`] arrives later, once the background
+/// persist completes — drain it with [`PersistHandle::drain_completed`]
+/// or [`PersistHandle::flush`].
+#[derive(Clone, Copy, Debug)]
+pub struct SaveReceipt {
+    /// The iteration handed to `save()`.
+    pub iteration: u64,
+    /// False when [`Backpressure::Skip`] dropped the save.
+    pub enqueued: bool,
+    /// Wall time of the state-dict snapshot (the memcpy) — the only
+    /// unavoidable trainer stall of an async save.
+    pub snapshot_wall: Duration,
+    /// Wall time spent blocked on the previous in-flight persist
+    /// ([`Backpressure::Block`] only; zero otherwise).
+    pub wait_wall: Duration,
+}
+
+impl SaveReceipt {
+    /// Total train-loop stall this save charged: snapshot + wait.
+    pub fn stall(&self) -> Duration {
+        self.snapshot_wall + self.wait_wall
+    }
+}
+
+enum Msg {
+    Save {
+        iteration: u64,
+        snapshot: Box<StateDict>,
+        /// Loss samples recorded since the previous message, applied to
+        /// the engine's policy sources before this save is planned.
+        telemetry: Vec<(u64, f32)>,
+        /// Trainer-side stall split, re-emitted as span attrs so
+        /// `trace-report` can render stall vs. persist wall per save.
+        snapshot_us: u64,
+        wait_us: u64,
+    },
+    Flush {
+        telemetry: Vec<(u64, f32)>,
+        done: SyncSender<Result<(), CompressError>>,
+    },
+    Stop,
+}
+
+#[derive(Default)]
+struct Shared {
+    /// Number of saves accepted but not yet fully persisted (0 or 1).
+    inflight: Mutex<usize>,
+    idle: Condvar,
+    /// Completed background saves, in submission order.
+    completed: Mutex<Vec<Result<ShardedSaveReport, CompressError>>>,
+    skipped: AtomicU64,
+}
+
+/// Trainer-facing handle to a [`ShardedCheckpointEngine`] running on a
+/// dedicated background persist thread. See module docs for the
+/// lifecycle; [`PersistHandle::finish`] returns the engine for restore
+/// paths that need direct access.
+pub struct PersistHandle {
+    tx: SyncSender<Msg>,
+    worker: Option<JoinHandle<ShardedCheckpointEngine>>,
+    shared: Arc<Shared>,
+    tracer: Tracer,
+    backpressure: Backpressure,
+    /// Loss samples buffered trainer-side until the next save or flush.
+    /// Buffering (instead of a channel send per step) means recording
+    /// telemetry can never block on a busy persist thread.
+    pending_telemetry: Vec<(u64, f32)>,
+}
+
+impl PersistHandle {
+    /// Move `engine` onto a background persist thread. The thread is
+    /// named `bitsnap-persist` and lives until [`PersistHandle::finish`]
+    /// (or drop).
+    pub fn new(engine: ShardedCheckpointEngine, backpressure: Backpressure) -> Self {
+        let tracer = engine.tracer().clone();
+        let shared = Arc::new(Shared::default());
+        // capacity 1 is enough: the inflight counter admits at most one
+        // queued save, and the buffered slot lets `save()` hand off
+        // without waiting for the worker to pick up
+        let (tx, rx) = mpsc::sync_channel::<Msg>(1);
+        let worker = {
+            let shared = shared.clone();
+            let tracer = tracer.clone();
+            std::thread::Builder::new()
+                .name("bitsnap-persist".into())
+                .spawn(move || worker_loop(rx, engine, shared, tracer))
+                .expect("spawn persist thread")
+        };
+        Self {
+            tx,
+            worker: Some(worker),
+            shared,
+            tracer,
+            backpressure,
+            pending_telemetry: Vec::new(),
+        }
+    }
+
+    /// The tracer shared with the wrapped engine's storage backend.
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Snapshot `sd` and return immediately; the background thread
+    /// persists the snapshot. The returned receipt carries the stall
+    /// this call charged the trainer (snapshot memcpy, plus the
+    /// backpressure wait under [`Backpressure::Block`]).
+    ///
+    /// Errors only when the persist thread is gone (it panicked — see
+    /// [`PersistHandle::finish`] for the harvest). A *save* failure on
+    /// the background thread is not an error here; it surfaces from
+    /// [`PersistHandle::flush`] / [`PersistHandle::drain_completed`].
+    pub fn save(&mut self, iteration: u64, sd: &StateDict) -> Result<SaveReceipt, CompressError> {
+        let mut inflight = self.shared.inflight.lock().unwrap();
+        let mut wait_wall = Duration::ZERO;
+        if *inflight > 0 {
+            match self.backpressure {
+                Backpressure::Skip => {
+                    drop(inflight);
+                    self.shared.skipped.fetch_add(1, Ordering::Relaxed);
+                    self.tracer.metrics().counter_add(
+                        "bitsnap_persist_skipped_total",
+                        &[],
+                        1.0,
+                    );
+                    return Ok(SaveReceipt {
+                        iteration,
+                        enqueued: false,
+                        snapshot_wall: Duration::ZERO,
+                        wait_wall: Duration::ZERO,
+                    });
+                }
+                Backpressure::Block => {
+                    let t_wait = Instant::now();
+                    while *inflight > 0 {
+                        inflight = self.shared.idle.wait(inflight).unwrap();
+                    }
+                    wait_wall = t_wait.elapsed();
+                }
+            }
+        }
+        *inflight += 1;
+        drop(inflight);
+        let t_snap = Instant::now();
+        let snapshot = Box::new(sd.clone());
+        let snapshot_wall = t_snap.elapsed();
+        self.tx
+            .send(Msg::Save {
+                iteration,
+                snapshot,
+                telemetry: std::mem::take(&mut self.pending_telemetry),
+                snapshot_us: snapshot_wall.as_micros() as u64,
+                wait_us: wait_wall.as_micros() as u64,
+            })
+            .map_err(|_| self.thread_death())?;
+        Ok(SaveReceipt { iteration, enqueued: true, snapshot_wall, wait_wall })
+    }
+
+    /// Record one loss sample for the engine's policy sources. Buffered
+    /// trainer-side and shipped with the next enqueued save (or flush),
+    /// so ordering relative to saves is preserved — a sample recorded
+    /// before `save(i)` is applied before the background engine plans
+    /// iteration `i` — and recording never blocks on a busy persist
+    /// thread.
+    pub fn record_telemetry(&mut self, iteration: u64, loss: f32) {
+        self.pending_telemetry.push((iteration, loss));
+    }
+
+    /// Completed background saves so far, in submission order. Does not
+    /// block; saves still in flight stay queued for the next drain.
+    pub fn drain_completed(&mut self) -> Vec<Result<ShardedSaveReport, CompressError>> {
+        std::mem::take(&mut *self.shared.completed.lock().unwrap())
+    }
+
+    /// Number of saves dropped by [`Backpressure::Skip`].
+    pub fn skipped(&self) -> u64 {
+        self.shared.skipped.load(Ordering::Relaxed)
+    }
+
+    /// Block until no persist is in flight (the queue is drained and the
+    /// background engine is between saves). The per-rank agents may
+    /// still be writing — use [`PersistHandle::flush`] for full
+    /// durability.
+    pub fn wait_idle(&self) {
+        let mut inflight = self.shared.inflight.lock().unwrap();
+        while *inflight > 0 {
+            inflight = self.shared.idle.wait(inflight).unwrap();
+        }
+    }
+
+    /// Drain everything: every queued save persisted, every rank agent's
+    /// queue flushed. Returns the completed reports accumulated since
+    /// the last drain; the first background save *error* (or agent
+    /// failure) is returned as `Err` after all work has settled.
+    pub fn flush(&mut self) -> Result<Vec<ShardedSaveReport>, CompressError> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        let msg = Msg::Flush {
+            telemetry: std::mem::take(&mut self.pending_telemetry),
+            done: tx,
+        };
+        self.tx.send(msg).map_err(|_| self.thread_death())?;
+        let flush_result = rx.recv().map_err(|_| self.thread_death())?;
+        let mut reports = Vec::new();
+        let mut first_err = flush_result.err();
+        for r in self.drain_completed() {
+            match r {
+                Ok(rep) => reports.push(rep),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(reports),
+        }
+    }
+
+    /// Stop the persist thread and take the engine back (for restore /
+    /// recovery paths that need direct access). Implicitly flushes; an
+    /// undrained background save error surfaces as `Err` here. Callers
+    /// that need the engine back even after a failed save should
+    /// [`PersistHandle::flush`] first (draining the error), then
+    /// `finish()`.
+    #[allow(clippy::type_complexity)]
+    pub fn finish(
+        mut self,
+    ) -> Result<(ShardedCheckpointEngine, Vec<ShardedSaveReport>), CompressError> {
+        let flushed = self.flush();
+        let _ = self.tx.send(Msg::Stop);
+        let engine = match self.worker.take().expect("finish called once").join() {
+            Ok(engine) => engine,
+            Err(p) => {
+                return Err(CompressError::Engine(format!(
+                    "persist thread panicked: {}",
+                    super::pipeline::panic_message(&p)
+                )))
+            }
+        };
+        Ok((engine, flushed?))
+    }
+
+    fn thread_death(&self) -> CompressError {
+        CompressError::Engine(
+            "the persist thread died; its panic is harvested by finish()".into(),
+        )
+    }
+}
+
+impl Drop for PersistHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(worker) = self.worker.take() {
+            let _ = worker.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: Receiver<Msg>,
+    mut engine: ShardedCheckpointEngine,
+    shared: Arc<Shared>,
+    tracer: Tracer,
+) -> ShardedCheckpointEngine {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Save { iteration, snapshot, telemetry, snapshot_us, wait_us } => {
+                for (it, loss) in telemetry {
+                    engine.record_telemetry(it, loss);
+                }
+                let metrics = tracer.metrics().clone();
+                metrics.gauge_set("bitsnap_persist_inflight", &[], 1.0);
+                let mut span = tracer.span("async_persist");
+                span.attr("iteration", iteration);
+                span.attr("snapshot_us", snapshot_us);
+                span.attr("wait_us", wait_us);
+                span.attr("stall_us", snapshot_us + wait_us);
+                let res = engine.save_with_parent(iteration, &snapshot, Some(span.id()));
+                match &res {
+                    Ok(r) => span.set_bytes(r.compressed_bytes as u64),
+                    Err(e) => span.fail(&e.to_string()),
+                }
+                span.end();
+                // the snapshot's tensor bytes are freed before the
+                // trainer is unblocked, so a blocked save's own clone
+                // does not double peak memory
+                drop(snapshot);
+                shared.completed.lock().unwrap().push(res);
+                metrics.gauge_set("bitsnap_persist_inflight", &[], 0.0);
+                let mut inflight = shared.inflight.lock().unwrap();
+                *inflight -= 1;
+                shared.idle.notify_all();
+            }
+            Msg::Flush { telemetry, done } => {
+                for (it, loss) in telemetry {
+                    engine.record_telemetry(it, loss);
+                }
+                let _ = done.send(engine.flush());
+            }
+            Msg::Stop => break,
+        }
+    }
+    engine
+}

@@ -8,6 +8,7 @@
 use crate::tensor::XorShiftRng;
 
 use super::shm::ShmStore;
+use super::storage::Storage;
 
 /// Kinds of injectable failures.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -18,6 +19,11 @@ pub enum FailureKind {
     MissingIteration,
     /// Flip a random bit (memory corruption; caught by CRC-64).
     BitFlip,
+    /// Kill the persist thread in the CAS three-phase commit's most
+    /// dangerous window: payload blobs pinned and written, stub not yet
+    /// published. A storage-side failure — arm it with
+    /// [`FailureInjector::arm_storage`], not [`FailureInjector::inject`].
+    CrashBetweenPinAndPublish,
 }
 
 /// Deterministic failure injector.
@@ -63,8 +69,25 @@ impl FailureInjector {
                 bytes[pos] ^= 1 << self.rng.next_below(8);
                 shm.put(iteration, &bytes, false)?;
             }
+            // storage-side, not shm-side: nothing staged to corrupt here
+            FailureKind::CrashBetweenPinAndPublish => return Ok(false),
         }
         Ok(true)
+    }
+
+    /// Arm `kind` against the persistent storage backend. Returns false
+    /// for the shm-side kinds (use [`FailureInjector::inject`] for
+    /// those). [`FailureKind::CrashBetweenPinAndPublish`] makes the next
+    /// CAS write die after pinning its blobs but before publishing the
+    /// stub — the async persist plane's crash-mid-persist scenario.
+    pub fn arm_storage(&mut self, storage: &Storage, kind: FailureKind) -> bool {
+        match kind {
+            FailureKind::CrashBetweenPinAndPublish => {
+                storage.arm_crash_between_pin_and_publish();
+                true
+            }
+            _ => false,
+        }
     }
 
     /// Bernoulli trial with probability `p` — used by soak tests to decide

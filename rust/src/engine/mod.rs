@@ -17,8 +17,12 @@
 //!   the shard reassembly/reshard helpers.
 //! * [`failure`] — failure injection used by tests and the
 //!   `failure_recovery` example.
+//! * [`async_persist`] — the zero-stall persist plane: snapshot the
+//!   state dict at the step boundary, persist on a background thread
+//!   with bounded staleness (at most one in-flight save).
 
 pub mod agent;
+pub mod async_persist;
 pub mod container;
 pub mod failure;
 pub mod pipeline;
@@ -29,8 +33,9 @@ pub mod storage;
 pub mod tracker;
 
 pub use agent::{CheckpointEngine, EncodedSave, EngineConfig, PlannedSave, SaveReport};
-pub use pipeline::{EncodePool, PersistConfig};
+pub use async_persist::{Backpressure, PersistHandle, SaveReceipt};
 pub use container::{ManifestEntry, ShardManifest};
+pub use pipeline::{EncodePool, PersistConfig};
 pub use recovery::{
     all_gather_check, decode_rank_shards, reassemble_state_dict, reshard_state_dict, RankView,
     RecoveryDecision,

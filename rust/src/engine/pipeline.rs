@@ -34,6 +34,10 @@
 //! serial path holds every encoded tensor of a save too; the queue
 //! bounds the producer→worker handoff, not the save's working set.)
 
+// Re-enable the crate-root lint inside `engine`'s legacy allow: this
+// module's public surface is fully documented and must stay that way.
+#![warn(missing_docs)]
+
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Mutex;
@@ -130,16 +134,20 @@ pub struct EncodePool {
 }
 
 impl EncodePool {
+    /// A pool description for `cfg` (workers and queue depth clamped
+    /// to at least 1); threads are spawned per [`EncodePool::run`].
     pub fn new(cfg: PersistConfig) -> Self {
         let cfg =
             PersistConfig { workers: cfg.workers.max(1), queue_depth: cfg.queue_depth.max(1) };
         Self { cfg }
     }
 
+    /// The clamped configuration this pool runs with.
     pub fn config(&self) -> PersistConfig {
         self.cfg
     }
 
+    /// Worker-thread count (≥ 1).
     pub fn workers(&self) -> usize {
         self.cfg.workers
     }

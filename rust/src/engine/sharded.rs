@@ -231,8 +231,22 @@ impl ShardedCheckpointEngine {
         iteration: u64,
         sd: &StateDict,
     ) -> Result<ShardedSaveReport, CompressError> {
+        self.save_with_parent(iteration, sd, None)
+    }
+
+    /// [`Self::save`] with the root `save` span parented under `parent`
+    /// — the async persist plane nests each background save beneath its
+    /// `async_persist` span so `trace-report` renders one tree per save.
+    /// Parenting only moves span lineage; the persisted bytes are
+    /// identical to [`Self::save`].
+    pub fn save_with_parent(
+        &mut self,
+        iteration: u64,
+        sd: &StateDict,
+        parent: Option<u64>,
+    ) -> Result<ShardedSaveReport, CompressError> {
         let tracer = self.storage.tracer().clone();
-        let mut root = tracer.span("save");
+        let mut root = tracer.span_with_parent("save", parent);
         root.attr("iteration", iteration);
         root.attr("mp", self.parallelism.mp);
         root.attr("pp", self.parallelism.pp);

@@ -35,7 +35,8 @@ use std::collections::HashMap;
 use std::fs;
 use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::obs::Tracer;
@@ -59,6 +60,11 @@ pub struct Storage {
     /// is shared across clones, that lights up agent threads spawned
     /// long before.
     tracer: Tracer,
+    /// One-shot failure injection: when armed, the next `write_ckpt`
+    /// "crashes" between blob pin and stub publish (see
+    /// [`Storage::arm_crash_between_pin_and_publish`]). Shared across
+    /// clones so tests can arm through any handle.
+    crash_after_pin: Arc<AtomicBool>,
 }
 
 impl Storage {
@@ -68,7 +74,13 @@ impl Storage {
         fs::create_dir_all(&root)?;
         let tracer = Tracer::disabled();
         let cas = BlobStore::open(root.join("cas"))?.with_metrics(tracer.metrics().clone());
-        Ok(Self { root, throttle_bps: None, cas: Some(cas), tracer })
+        Ok(Self {
+            root,
+            throttle_bps: None,
+            cas: Some(cas),
+            tracer,
+            crash_after_pin: Arc::new(AtomicBool::new(false)),
+        })
     }
 
     /// Open storage **without** content addressing: one opaque container
@@ -78,7 +90,26 @@ impl Storage {
     pub fn plain(root: impl Into<PathBuf>) -> std::io::Result<Self> {
         let root = root.into();
         fs::create_dir_all(&root)?;
-        Ok(Self { root, throttle_bps: None, cas: None, tracer: Tracer::disabled() })
+        Ok(Self {
+            root,
+            throttle_bps: None,
+            cas: None,
+            tracer: Tracer::disabled(),
+            crash_after_pin: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// Arm a one-shot injected crash of the next CAS write in the window
+    /// between phase 1 (payload blobs pinned and written) and phase 2
+    /// (the stub that references them published) — the most dangerous
+    /// instant for a persist thread to die. The write fails with an
+    /// `io::Error`, and — exactly as after a real process death, whose
+    /// in-memory pin table is gone — the blobs end up written but
+    /// unpinned and unreferenced: collectible by GC, invisible to
+    /// recovery. Shared across clones; fires once, on whichever writer
+    /// hits the window first.
+    pub fn arm_crash_between_pin_and_publish(&self) {
+        self.crash_after_pin.store(true, Ordering::SeqCst);
     }
 
     /// The observability handle shared by everything built on this
@@ -173,6 +204,14 @@ impl Storage {
             pin_span.attr("blobs", pinned.len());
             pin_span.set_bytes(physical as u64);
             pin_span.end();
+            // injected crash window (tests): die with blobs pinned but no
+            // stub published; the unpin below models the process restart
+            // clearing the in-memory pin table
+            if self.crash_after_pin.swap(false, Ordering::SeqCst) {
+                return Err(std::io::Error::other(
+                    "injected crash between pin and publish",
+                ));
+            }
             // phase 2: publish the stub that makes the blobs reachable
             let mut pub_span = self.tracer.span_with_parent("publish", parent);
             let stub = CasContainer {

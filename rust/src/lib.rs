@@ -25,13 +25,26 @@
 //! * [`obs`] — the observability plane: span tracing to JSONL, a metrics
 //!   registry with Prometheus rendering, and the `trace-report` renderer.
 
+// Every public item needs docs. Modules that predate the lint carry a
+// scoped allow until their backfill lands; new modules must not add to
+// the list. `obs`, `store`, and the modules below that re-enable the
+// lint with an inner `#![warn(missing_docs)]` are fully documented.
+#![warn(missing_docs)]
+
+#[allow(missing_docs)]
 pub mod adapt;
+#[allow(missing_docs)]
 pub mod bench;
+#[allow(missing_docs)]
 pub mod compress;
+#[allow(missing_docs)]
 pub mod engine;
 pub mod obs;
 #[cfg(feature = "xla")]
+#[allow(missing_docs)]
 pub mod runtime;
 pub mod store;
+#[allow(missing_docs)]
 pub mod tensor;
+#[allow(missing_docs)]
 pub mod train;

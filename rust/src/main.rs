@@ -70,6 +70,10 @@ fn print_help() {
                          3 iterations plus every 100th)\n\
                          [--trace] (record the save timeline to <out>/storage/trace/ and dump\n\
                          the metrics registry; render with trace-report)\n\
+                         [--async-persist[=block|skip]] (snapshot-and-return saves: the loop\n\
+                         stalls only for the state-dict snapshot while probe/encode/commit run\n\
+                         on a background thread; at most one save in flight — \"block\" waits\n\
+                         for it, \"skip\" drops the new save; artifacts byte-identical to sync)\n\
                          (needs a build with --features xla)\n\
            compress      --params 1048576 [--change-rate 0.15] [--policy bitsnap|lossless]\n\
            inspect       --dir <storage root> | --histogram --model gpt-nano --steps 20\n\
@@ -93,7 +97,10 @@ fn print_help() {
 #[cfg(feature = "xla")]
 fn cmd_train(args: &Args) -> Result<(), String> {
     use bitsnap::adapt::{AdaptivePolicy, Calibration, CostModel, SharedCalibration};
-    use bitsnap::engine::{PersistConfig, ShardedCheckpointEngine, ShardedEngineConfig};
+    use bitsnap::engine::{
+        Backpressure, PersistConfig, PersistHandle, ShardedCheckpointEngine, ShardedEngineConfig,
+        ShardedSaveReport,
+    };
     use bitsnap::runtime::{default_artifacts_dir, PjrtRuntime};
     use bitsnap::train::{Parallelism, Trainer};
 
@@ -177,40 +184,94 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     };
     println!("policy source (rank 0): {}", engine.engines()[0].policy_description());
 
+    // --async-persist[=block|skip]: move probe/encode/commit onto the
+    // snapshot-and-return persist plane — the loop then stalls only for
+    // the state-dict snapshot, plus the backpressure wait ("block") or
+    // nothing at all ("skip" drops the save) when a previous persist is
+    // still in flight. Artifacts stay byte-identical to sync saves.
+    let async_mode = match args.get("async-persist") {
+        Some(v) => Some(Backpressure::parse(v)?),
+        None if args.has("async-persist") => Some(Backpressure::default()),
+        None => None,
+    };
+    let (mut sync_engine, mut persist) = match async_mode {
+        Some(bp) => {
+            println!("async persist on ({bp:?} backpressure): saves run off the train loop");
+            (None, Some(PersistHandle::new(engine, bp)))
+        }
+        None => (Some(engine), None),
+    };
+    let metrics = gc_storage.tracer().metrics().clone();
+    let print_report = |r: &ShardedSaveReport| {
+        println!(
+            "  ckpt @{} {}  fleet blocked {:.1} ms  ratio {:.2}x ({} -> {})",
+            r.iteration,
+            if r.is_base { "base " } else { "delta" },
+            r.simulated_parallel.as_secs_f64() * 1e3,
+            r.ratio(),
+            bitsnap::bench::fmt_bytes(r.raw_bytes),
+            bitsnap::bench::fmt_bytes(r.compressed_bytes),
+        );
+        println!(
+            "        plan {:.1} ms | encode {:.1} ms | commit {:.1} ms",
+            r.plan_wall.as_secs_f64() * 1e3,
+            r.encode_wall.as_secs_f64() * 1e3,
+            r.commit_wall.as_secs_f64() * 1e3,
+        );
+    };
+
     for i in 1..=steps {
         let loss = trainer.step().map_err(|e| e.to_string())?;
         // the EMA is steadier than the raw loss for plateau detection
         if let Some(t) = trainer.telemetry() {
-            engine.record_telemetry(t.iteration, t.loss_ema);
+            if let Some(eng) = sync_engine.as_mut() {
+                eng.record_telemetry(t.iteration, t.loss_ema);
+            } else if let Some(h) = persist.as_mut() {
+                h.record_telemetry(t.iteration, t.loss_ema);
+            }
         }
         if i % 5 == 0 || i == 1 {
             println!("iter {i:>6}  loss {loss:.4}");
         }
         if i % save_every == 0 {
             let sd = trainer.state_dict().map_err(|e| e.to_string())?;
-            let t_save = std::time::Instant::now();
-            let r = engine.save(i, &sd).map_err(|e| e.to_string())?;
-            let stall = t_save.elapsed();
-            trainer.record_checkpoint_stall(stall);
-            engine.tracer().metrics().counter_add(
-                "bitsnap_trainer_stall_seconds_total",
-                &[],
-                stall.as_secs_f64(),
-            );
-            println!(
-                "  ckpt @{i} {}  fleet blocked {:.1} ms  ratio {:.2}x ({} -> {})",
-                if r.is_base { "base " } else { "delta" },
-                r.simulated_parallel.as_secs_f64() * 1e3,
-                r.ratio(),
-                bitsnap::bench::fmt_bytes(r.raw_bytes),
-                bitsnap::bench::fmt_bytes(r.compressed_bytes),
-            );
-            println!(
-                "        plan {:.1} ms | encode {:.1} ms | commit {:.1} ms",
-                r.plan_wall.as_secs_f64() * 1e3,
-                r.encode_wall.as_secs_f64() * 1e3,
-                r.commit_wall.as_secs_f64() * 1e3,
-            );
+            trainer.begin_checkpoint_stall();
+            if let Some(h) = persist.as_mut() {
+                let receipt = h.save(i, &sd);
+                // stop the stall clock before `?`: an errored save must
+                // not leak its open span into the next save's accounting
+                let stall = trainer.end_checkpoint_stall();
+                let receipt = receipt.map_err(|e| e.to_string())?;
+                metrics.counter_add(
+                    "bitsnap_trainer_stall_seconds_total",
+                    &[],
+                    stall.as_secs_f64(),
+                );
+                if receipt.enqueued {
+                    println!(
+                        "  ckpt @{i} enqueued: stalled {:.2} ms (snapshot {:.2} + wait {:.2})",
+                        receipt.stall().as_secs_f64() * 1e3,
+                        receipt.snapshot_wall.as_secs_f64() * 1e3,
+                        receipt.wait_wall.as_secs_f64() * 1e3,
+                    );
+                } else {
+                    println!("  ckpt @{i} skipped: previous persist still in flight");
+                }
+                for done in h.drain_completed() {
+                    print_report(&done.map_err(|e| e.to_string())?);
+                }
+            } else if let Some(eng) = sync_engine.as_mut() {
+                let r = eng.save(i, &sd);
+                // ditto: the errored-save path must still stop the clock
+                let stall = trainer.end_checkpoint_stall();
+                let r = r.map_err(|e| e.to_string())?;
+                metrics.counter_add(
+                    "bitsnap_trainer_stall_seconds_total",
+                    &[],
+                    stall.as_secs_f64(),
+                );
+                print_report(&r);
+            }
             if let Some(policy) = &retention {
                 let gcr = gc_storage.gc(policy).map_err(|e| e.to_string())?;
                 if !gcr.pruned_iterations.is_empty() || gcr.deleted_blobs > 0 {
@@ -224,6 +285,22 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             }
         }
     }
+    let mut engine = match persist {
+        Some(handle) => {
+            // drain the queue and take the engine back; saves still in
+            // flight at loop exit report here
+            let skipped = handle.skipped();
+            let (engine, tail) = handle.finish().map_err(|e| e.to_string())?;
+            for r in &tail {
+                print_report(r);
+            }
+            if skipped > 0 {
+                println!("async persist skipped {skipped} save(s) under backpressure");
+            }
+            engine
+        }
+        None => sync_engine.expect("sync engine when async persist is off"),
+    };
     engine.flush().map_err(|e| e.to_string())?;
     let stats = engine.agent_stats();
     println!(

@@ -66,6 +66,7 @@ fn key(name: &str, labels: &[(&str, &str)]) -> Key {
 }
 
 impl Metrics {
+    /// A fresh, empty registry (equivalent to `Metrics::default()`).
     pub fn new() -> Self {
         Self::default()
     }
@@ -112,6 +113,16 @@ impl Metrics {
 
     /// Render every series in the Prometheus text exposition format,
     /// sorted by (name, labels) so the output is deterministic.
+    ///
+    /// ```
+    /// use bitsnap::obs::Metrics;
+    ///
+    /// let m = Metrics::new();
+    /// m.counter_add("bitsnap_saves_total", &[("policy", "bitsnap")], 1.0);
+    /// let text = m.render_prometheus();
+    /// assert!(text.contains("# TYPE bitsnap_saves_total counter"));
+    /// assert!(text.contains("bitsnap_saves_total{policy=\"bitsnap\"} 1"));
+    /// ```
     pub fn render_prometheus(&self) -> String {
         let reg = self.inner.lock().unwrap();
         let mut out = String::new();

@@ -17,17 +17,26 @@ use super::fmt_bytes_detailed;
 /// One parsed trace event (see [`crate::obs::trace`] for the schema).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TraceEvent {
+    /// Span id, unique within one trace file.
     pub id: u64,
+    /// Parent span id; `None` for a root span.
     pub parent: Option<u64>,
+    /// Span name (`"save"`, `"encode_tensor"`, ...).
     pub name: String,
+    /// Start offset from the tracer epoch, microseconds.
     pub start_us: u64,
+    /// Span duration, microseconds.
     pub dur_us: u64,
+    /// `"ok"` or `"error"`.
     pub status: String,
+    /// Bytes attributed to the span (compressed output), if any.
     pub bytes: Option<u64>,
+    /// Free-form key/value attributes, in recording order.
     pub attrs: Vec<(String, String)>,
 }
 
 impl TraceEvent {
+    /// Value of attribute `key`, if recorded on this span.
     pub fn attr(&self, key: &str) -> Option<&str> {
         self.attrs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
     }
@@ -123,8 +132,9 @@ fn event_from_json(v: &Json) -> Result<TraceEvent, String> {
 }
 
 /// Render the full report. Sections: one waterfall per save, the top-N
-/// slowest tensors, per-codec encode throughput, planner decisions, and
-/// a digest of non-save root spans (persist, gc, restore, recover).
+/// slowest tensors, per-codec encode throughput, planner decisions, the
+/// async-persist stall digest, and a digest of the remaining non-save
+/// root spans (gc, restore, recover).
 pub fn render_report(events: &[TraceEvent], opts: &ReportOptions) -> String {
     let mut children: HashMap<Option<u64>, Vec<&TraceEvent>> = HashMap::new();
     for e in events {
@@ -133,10 +143,10 @@ pub fn render_report(events: &[TraceEvent], opts: &ReportOptions) -> String {
     for v in children.values_mut() {
         v.sort_by_key(|e| (e.start_us, e.id));
     }
-    let mut saves: Vec<&TraceEvent> = children
-        .get(&None)
-        .map(|roots| roots.iter().copied().filter(|e| e.name == "save").collect())
-        .unwrap_or_default();
+    // collect save spans wherever they sit: roots for synchronous saves,
+    // children of `async_persist` roots for background saves
+    let mut saves: Vec<&TraceEvent> = events.iter().filter(|e| e.name == "save").collect();
+    saves.sort_by_key(|e| (e.start_us, e.id));
     if let Some(iter) = opts.save {
         saves.retain(|e| e.attr("iteration") == Some(iter.to_string().as_str()));
     }
@@ -185,7 +195,57 @@ pub fn render_report(events: &[TraceEvent], opts: &ReportOptions) -> String {
         }
         out.push('\n');
     }
+    out.push_str(&render_async_persists(events, opts));
     out.push_str(&render_other_roots(&children, opts));
+    out
+}
+
+/// The async-persist digest: per background save, the trainer-side
+/// stall (snapshot memcpy + backpressure wait, re-emitted as span attrs
+/// by the persist thread) against the persist wall that ran off the
+/// training loop.
+fn render_async_persists(events: &[TraceEvent], opts: &ReportOptions) -> String {
+    let mut persists: Vec<&TraceEvent> =
+        events.iter().filter(|e| e.name == "async_persist").collect();
+    if let Some(iter) = opts.save {
+        let want = iter.to_string();
+        persists.retain(|e| e.attr("iteration") == Some(want.as_str()));
+    }
+    if persists.is_empty() {
+        return String::new();
+    }
+    persists.sort_by_key(|e| (e.start_us, e.id));
+    let mut out = String::from("async persists (trainer stall vs background persist wall)\n");
+    let mut stall_total = 0u64;
+    let mut wall_total = 0u64;
+    for e in &persists {
+        let us = |k: &str| e.attr(k).and_then(|s| s.parse::<u64>().ok()).unwrap_or(0);
+        let (stall, snap, wait) = (us("stall_us"), us("snapshot_us"), us("wait_us"));
+        stall_total += stall;
+        wall_total += e.dur_us;
+        let mut line = format!(
+            "  @{:<8} stalled {:>10} (snapshot {} + wait {})  persist {:>10}",
+            e.attr("iteration").unwrap_or("?"),
+            fmt_dur_us(stall),
+            fmt_dur_us(snap),
+            fmt_dur_us(wait),
+            fmt_dur_us(e.dur_us),
+        );
+        if let Some(b) = e.bytes {
+            line.push_str(&format!("  [{}]", fmt_bytes_detailed(b)));
+        }
+        if e.status == "error" {
+            line.push_str(&format!("  ERROR: {}", e.attr("error").unwrap_or("?")));
+        }
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "  total: trainer stalled {} across {} of background persist ({:.1}% on the loop)\n\n",
+        fmt_dur_us(stall_total),
+        fmt_dur_us(wall_total),
+        stall_total as f64 / wall_total.max(1) as f64 * 100.0,
+    ));
     out
 }
 
@@ -314,14 +374,15 @@ fn render_decision(e: &TraceEvent, iteration: u64) -> String {
     line
 }
 
-/// Non-save root spans, one line each: async persists, GC passes,
-/// restores and recoveries.
+/// Remaining root spans, one line each: GC passes, restores and
+/// recoveries. Saves and async persists have their own sections.
 fn render_other_roots(
     children: &HashMap<Option<u64>, Vec<&TraceEvent>>,
     opts: &ReportOptions,
 ) -> String {
     let Some(roots) = children.get(&None) else { return String::new() };
-    let mut others: Vec<&&TraceEvent> = roots.iter().filter(|e| e.name != "save").collect();
+    let mut others: Vec<&&TraceEvent> =
+        roots.iter().filter(|e| e.name != "save" && e.name != "async_persist").collect();
     if let Some(iter) = opts.save {
         let want = iter.to_string();
         others.retain(|e| e.attr("iteration").map(|i| i == want).unwrap_or(true));
@@ -677,6 +738,49 @@ mod tests {
         assert!(text.contains("gc"), "{text}");
         // --save filtering drops non-matching saves
         let filtered = render_report(&events, &ReportOptions { save: Some(99), top: 5 });
+        assert!(filtered.contains("no matching save spans"), "{filtered}");
+    }
+
+    #[test]
+    fn report_renders_async_persist_stall_digest() {
+        let events = vec![
+            ev(
+                1,
+                None,
+                "async_persist",
+                0,
+                9000,
+                &[
+                    ("iteration", "10"),
+                    ("snapshot_us", "400"),
+                    ("wait_us", "100"),
+                    ("stall_us", "500"),
+                ],
+                Some(4096),
+            ),
+            ev(
+                2,
+                Some(1),
+                "save",
+                10,
+                8900,
+                &[("iteration", "10"), ("kind", "base")],
+                Some(4096),
+            ),
+            ev(3, Some(2), "plan", 20, 200, &[], None),
+        ];
+        let text = render_report(&events, &ReportOptions::default());
+        // the nested save still gets its waterfall ...
+        assert!(text.contains("save @10 base"), "{text}");
+        assert!(text.contains("plan"), "{text}");
+        // ... the persist gets the stall-vs-wall digest ...
+        assert!(text.contains("async persists"), "{text}");
+        assert!(text.contains("stalled"), "{text}");
+        // ... and it is not double-reported as an "other event"
+        assert!(!text.contains("other events"), "{text}");
+        // --save filters the digest alongside the saves
+        let filtered = render_report(&events, &ReportOptions { save: Some(99), top: 5 });
+        assert!(!filtered.contains("async persists"), "{filtered}");
         assert!(filtered.contains("no matching save spans"), "{filtered}");
     }
 }

@@ -85,6 +85,7 @@ impl Tracer {
         Ok(path)
     }
 
+    /// Whether a sink is active: spans are recorded only when enabled.
     pub fn is_enabled(&self) -> bool {
         self.sink.read().unwrap().is_some()
     }

@@ -83,6 +83,7 @@ impl BlobStore {
         self
     }
 
+    /// The directory blobs are stored under.
     pub fn root(&self) -> &Path {
         &self.root
     }
@@ -91,6 +92,7 @@ impl BlobStore {
         self.root.join(key.file_name())
     }
 
+    /// Whether `key`'s payload exists on disk.
     pub fn contains(&self, key: &BlobKey) -> bool {
         self.path(key).exists()
     }
@@ -194,6 +196,7 @@ impl BlobStore {
         }
     }
 
+    /// Whether `key` is currently pinned by an in-flight save.
     pub fn is_pinned(&self, key: &BlobKey) -> bool {
         self.table.lock().unwrap().pins.contains_key(key)
     }

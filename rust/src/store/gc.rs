@@ -26,12 +26,22 @@ pub struct RetentionPolicy {
 }
 
 impl RetentionPolicy {
+    /// Keep only the newest `n` iterations (no archival tier).
     pub fn keep_last(n: usize) -> Self {
         Self { keep_last: n, keep_every: 0 }
     }
 
     /// Parse the CLI form: `"N"` or `"N,M"` (keep the last N, plus every
     /// M-th iteration).
+    ///
+    /// ```
+    /// use bitsnap::store::RetentionPolicy;
+    ///
+    /// let p = RetentionPolicy::parse("3,100").unwrap();
+    /// assert_eq!((p.keep_last, p.keep_every), (3, 100));
+    /// assert_eq!(RetentionPolicy::parse("5").unwrap(), RetentionPolicy::keep_last(5));
+    /// assert!(RetentionPolicy::parse("three").is_err());
+    /// ```
     pub fn parse(s: &str) -> Result<Self, String> {
         let (last, every) = match s.split_once(',') {
             Some((l, e)) => (l, Some(e)),
@@ -121,6 +131,7 @@ pub struct RefCounts {
 }
 
 impl RefCounts {
+    /// An empty count table.
     pub fn new() -> Self {
         Self::default()
     }
@@ -147,6 +158,7 @@ impl RefCounts {
         }
     }
 
+    /// Current reference count for `key` (0 when unreferenced).
     pub fn count(&self, key: &BlobKey) -> u64 {
         self.counts.get(key).copied().unwrap_or(0)
     }
@@ -161,6 +173,7 @@ impl RefCounts {
         self.counts.values().sum()
     }
 
+    /// Whether any live iteration still references `key`.
     pub fn is_referenced(&self, key: &BlobKey) -> bool {
         self.counts.contains_key(key)
     }

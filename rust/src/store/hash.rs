@@ -29,10 +29,12 @@ fn finalize(mut x: u64) -> u64 {
 }
 
 impl Hasher64 {
+    /// A fresh hasher at the FNV offset basis.
     pub fn new() -> Self {
         Self { state: FNV_OFFSET }
     }
 
+    /// Absorb `bytes` into the running state.
     pub fn update(&mut self, bytes: &[u8]) {
         let mut s = self.state;
         for &b in bytes {
@@ -41,6 +43,7 @@ impl Hasher64 {
         self.state = s;
     }
 
+    /// The finalized 64-bit digest (the hasher stays usable).
     pub fn finish(&self) -> u64 {
         finalize(self.state)
     }
@@ -65,7 +68,9 @@ pub fn content_hash(bytes: &[u8]) -> u64 {
 /// the key is stable across processes and restarts.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct BlobKey {
+    /// Finalized 64-bit content hash of the payload.
     pub hash: u64,
+    /// Payload length in bytes (collision guard alongside the hash).
     pub len: u64,
 }
 

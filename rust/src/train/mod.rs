@@ -5,6 +5,7 @@
 pub mod data;
 pub mod manifest;
 pub mod parallel;
+pub mod stall;
 #[cfg(feature = "xla")]
 pub mod trainer;
 
@@ -14,5 +15,6 @@ pub use parallel::{
     compress_sharded, compress_sharded_planned, entry_stage, shard_bounds, shard_range,
     shard_state_dict, Parallelism, ShardedCompressReport,
 };
+pub use stall::StallClock;
 #[cfg(feature = "xla")]
 pub use trainer::{TrainTelemetry, Trainer};

@@ -14,6 +14,7 @@ use crate::tensor::{DType, HostTensor, StateDict, StateKind};
 
 use super::data::SyntheticCorpus;
 use super::manifest::Manifest;
+use super::stall::StallClock;
 
 /// One step's telemetry, as consumed by the adaptive policy engine's
 /// stage detector (via [`crate::engine::CheckpointEngine::record_telemetry`]).
@@ -39,8 +40,9 @@ pub struct Trainer {
     corpus: SyntheticCorpus,
     telemetry: Option<TrainTelemetry>,
     /// Cumulative wall time the training loop spent blocked on
-    /// checkpoint saves ([`Trainer::record_checkpoint_stall`]).
-    checkpoint_stall: std::time::Duration,
+    /// checkpoint saves, tracked misuse-proof (idempotent stop, stale
+    /// spans discarded) by a [`StallClock`].
+    checkpoint_stall: StallClock,
 }
 
 impl Trainer {
@@ -74,7 +76,7 @@ impl Trainer {
             step: 0,
             corpus,
             telemetry: None,
-            checkpoint_stall: std::time::Duration::ZERO,
+            checkpoint_stall: StallClock::new(),
         })
     }
 
@@ -128,17 +130,31 @@ impl Trainer {
         self.telemetry
     }
 
-    /// Account one checkpoint save's blocking time against this trainer —
+    /// Open a stall span just before handing the state dict to the
+    /// checkpoint engine. Any span left open by a previous errored save
+    /// is discarded, not merged (the double-count bug this replaced).
+    pub fn begin_checkpoint_stall(&mut self) {
+        self.checkpoint_stall.start();
+    }
+
+    /// Close the current stall span and return its duration. Must run on
+    /// the error path too — it is idempotent, so call it unconditionally
+    /// after `engine.save` returns, before `?`.
+    pub fn end_checkpoint_stall(&mut self) -> std::time::Duration {
+        self.checkpoint_stall.stop()
+    }
+
+    /// Account an externally measured stall (e.g. an async-persist
+    /// receipt's snapshot + backpressure wait) against this trainer —
     /// the `bitsnap_trainer_stall_seconds_total` counter in a traced run
-    /// reports the same number. A future async-persist engine shrinks
-    /// exactly this total.
+    /// reports the same number.
     pub fn record_checkpoint_stall(&mut self, stall: std::time::Duration) {
-        self.checkpoint_stall += stall;
+        self.checkpoint_stall.record(stall);
     }
 
     /// Total wall time the training loop has blocked on checkpoint saves.
     pub fn total_checkpoint_stall(&self) -> std::time::Duration {
-        self.checkpoint_stall
+        self.checkpoint_stall.total()
     }
 
     /// Snapshot the full mixed-precision state dict for checkpointing:

@@ -1,0 +1,282 @@
+//! The async persist plane, end to end: sync-vs-async byte identity
+//! under the CI worker matrix, both backpressure modes under a slow
+//! store, crash-mid-persist recovery through the CAS commit's pin →
+//! publish window, and GC racing an in-flight background save.
+
+use bitsnap::compress::delta::Policy;
+use bitsnap::engine::failure::{FailureInjector, FailureKind};
+use bitsnap::engine::{
+    Backpressure, PersistConfig, PersistHandle, ShardedCheckpointEngine, ShardedEngineConfig,
+    Storage,
+};
+use bitsnap::store::RetentionPolicy;
+use bitsnap::tensor::StateDict;
+use bitsnap::train::Parallelism;
+use std::path::PathBuf;
+use std::time::Duration;
+
+struct Roots {
+    shm: PathBuf,
+    store: PathBuf,
+}
+
+fn roots(tag: &str) -> Roots {
+    let pid = std::process::id();
+    let shm = std::env::temp_dir().join(format!("bsnp-async-shm-{tag}-{pid}"));
+    let store = std::env::temp_dir().join(format!("bsnp-async-store-{tag}-{pid}"));
+    let _ = std::fs::remove_dir_all(&shm);
+    let _ = std::fs::remove_dir_all(&store);
+    Roots { shm, store }
+}
+
+fn cleanup(r: &Roots) {
+    let _ = std::fs::remove_dir_all(&r.shm);
+    let _ = std::fs::remove_dir_all(&r.store);
+}
+
+fn config(tag: &str, p: Parallelism, storage: Storage, r: &Roots) -> ShardedEngineConfig {
+    ShardedEngineConfig {
+        job: tag.into(),
+        parallelism: p,
+        shm_root: r.shm.clone(),
+        storage,
+        redundancy: 3,
+        policy: Policy::bitsnap(),
+        max_cached_iteration: 2,
+        persist: PersistConfig::from_env(),
+    }
+}
+
+/// The fixed save trajectory both arms drive: same seeds, same cadence.
+fn trajectory() -> Vec<(u64, StateDict)> {
+    let mut sd = StateDict::synthetic_gpt(1 << 13, 99);
+    [10u64, 20, 30, 40]
+        .into_iter()
+        .enumerate()
+        .map(|(i, iter)| {
+            sd.perturb_model_states(0.05, 500 + i as u64);
+            (iter, sd.clone())
+        })
+        .collect()
+}
+
+/// Every persisted artifact, in fixed order: rank containers + manifests.
+fn artifacts(storage: &Storage, p: Parallelism, iters: &[u64]) -> Vec<(String, Vec<u8>)> {
+    let mut out = Vec::new();
+    for &iter in iters {
+        for rank in 0..p.world() {
+            out.push((format!("iter{iter}/rank{rank}.bsnp"), storage.get(iter, rank).unwrap()));
+        }
+        out.push((format!("iter{iter}/manifest.bsnm"), storage.get_manifest(iter).unwrap()));
+    }
+    out
+}
+
+/// The headline guarantee: a trajectory saved through the async persist
+/// plane produces byte-identical artifacts to the same trajectory saved
+/// synchronously. `PersistConfig::from_env` keeps this under the CI
+/// `BITSNAP_TEST_WORKERS` ∈ {1, 4} matrix.
+#[test]
+fn async_saves_are_bit_identical_to_sync_saves() {
+    let p = Parallelism::new(2, 2);
+    let steps = trajectory();
+    let iters: Vec<u64> = steps.iter().map(|(i, _)| *i).collect();
+
+    let sync_r = roots("ident-sync");
+    let sync_storage = Storage::new(&sync_r.store).unwrap();
+    let sync_cfg = config("ident-sync", p, sync_storage.clone(), &sync_r);
+    let mut sync_eng = ShardedCheckpointEngine::new(sync_cfg).unwrap();
+    for (iter, sd) in &steps {
+        sync_eng.save(*iter, sd).unwrap();
+    }
+    sync_eng.flush().unwrap();
+    let want = artifacts(&sync_storage, p, &iters);
+
+    let async_r = roots("ident-async");
+    let async_storage = Storage::new(&async_r.store).unwrap();
+    let async_cfg = config("ident-async", p, async_storage.clone(), &async_r);
+    let eng = ShardedCheckpointEngine::new(async_cfg).unwrap();
+    let mut handle = PersistHandle::new(eng, Backpressure::Block);
+    for (iter, sd) in &steps {
+        let receipt = handle.save(*iter, sd).unwrap();
+        assert!(receipt.enqueued, "block mode never drops a save");
+        assert_eq!(receipt.iteration, *iter);
+    }
+    let (async_eng, reports) = handle.finish().unwrap();
+    assert_eq!(
+        reports.iter().map(|r| r.iteration).collect::<Vec<_>>(),
+        iters,
+        "every save reports back, in submission order"
+    );
+    let got = artifacts(&async_storage, p, &iters);
+
+    assert_eq!(want.len(), got.len());
+    for ((name_a, bytes_a), (name_b, bytes_b)) in want.iter().zip(&got) {
+        assert_eq!(name_a, name_b);
+        assert_eq!(bytes_a, bytes_b, "{name_a} differs between sync and async saves");
+    }
+    drop(async_eng);
+    cleanup(&sync_r);
+    cleanup(&async_r);
+}
+
+/// Block backpressure: a save cadence arriving mid-persist waits for the
+/// in-flight save (measured in the receipt) and loses nothing.
+#[test]
+fn block_backpressure_waits_and_loses_no_saves() {
+    let p = Parallelism::new(2, 1);
+    let r = roots("block");
+    // ~230 KB of containers through a 1 MB/s store: each persist holds
+    // the in-flight slot for a long, test-visible window
+    let storage = Storage::new(&r.store).unwrap().with_throttle(1e6);
+    let eng = ShardedCheckpointEngine::new(config("block", p, storage.clone(), &r)).unwrap();
+    let mut handle = PersistHandle::new(eng, Backpressure::Block);
+
+    let mut sd = StateDict::synthetic_gpt(1 << 14, 7);
+    let first = handle.save(10, &sd).unwrap();
+    assert!(first.enqueued);
+    assert_eq!(first.wait_wall, Duration::ZERO, "nothing in flight before the first save");
+    sd.perturb_model_states(0.05, 8);
+    let second = handle.save(20, &sd).unwrap();
+    assert!(second.enqueued, "block mode never drops a save");
+    assert!(
+        second.wait_wall > Duration::ZERO,
+        "second save must have waited out the throttled first persist"
+    );
+    assert_eq!(handle.skipped(), 0);
+
+    let (eng, reports) = handle.finish().unwrap();
+    assert_eq!(reports.len(), 2);
+    assert!(storage.has(10, 0) && storage.has(20, 0), "both saves durable");
+    drop(eng);
+    cleanup(&r);
+}
+
+/// Skip backpressure: the colliding save is dropped and counted, the
+/// trainer never waits, and the engine's delta cadence is undisturbed.
+#[test]
+fn skip_backpressure_drops_and_counts() {
+    let p = Parallelism::new(2, 1);
+    let r = roots("skip");
+    let storage = Storage::new(&r.store).unwrap().with_throttle(1e6);
+    let tracer = storage.tracer().clone();
+    let eng = ShardedCheckpointEngine::new(config("skip", p, storage.clone(), &r)).unwrap();
+    let mut handle = PersistHandle::new(eng, Backpressure::Skip);
+
+    let mut sd = StateDict::synthetic_gpt(1 << 14, 17);
+    assert!(handle.save(10, &sd).unwrap().enqueued);
+    sd.perturb_model_states(0.05, 18);
+    let dropped = handle.save(20, &sd).unwrap();
+    assert!(!dropped.enqueued, "skip mode drops the colliding save");
+    assert_eq!(dropped.stall(), Duration::ZERO, "a skipped save charges no stall");
+    assert_eq!(handle.skipped(), 1);
+    assert_eq!(tracer.metrics().counter_value("bitsnap_persist_skipped_total", &[]), 1.0);
+
+    // once the in-flight persist drains, the next cadence is accepted
+    handle.wait_idle();
+    sd.perturb_model_states(0.05, 19);
+    assert!(handle.save(30, &sd).unwrap().enqueued);
+
+    let (eng, reports) = handle.finish().unwrap();
+    assert_eq!(reports.iter().map(|r| r.iteration).collect::<Vec<_>>(), vec![10, 30]);
+    assert!(storage.has(10, 0) && storage.has(30, 0));
+    assert!(!storage.has(20, 0), "the skipped iteration never reached storage");
+    drop(eng);
+    cleanup(&r);
+}
+
+/// Crash-mid-persist: the persist thread dies in the CAS commit's most
+/// dangerous window (payload blobs pinned and written, stub not yet
+/// published). The store must come back recoverable — the previous
+/// iteration restores bit-exactly — and GC sweeps the orphaned blobs.
+#[test]
+fn crash_between_pin_and_publish_leaves_store_recoverable() {
+    let p = Parallelism::new(2, 2);
+    let r = roots("crash");
+    let storage = Storage::new(&r.store).unwrap();
+    let eng = ShardedCheckpointEngine::new(config("crash", p, storage.clone(), &r)).unwrap();
+    let mut handle = PersistHandle::new(eng, Backpressure::Block);
+
+    let base = StateDict::synthetic_gpt(1 << 13, 1);
+    handle.save(10, &base).unwrap();
+    handle.flush().unwrap(); // iteration 10 fully durable
+
+    // arm the one-shot crash: the next rank container persisted dies
+    // between pin and publish
+    let mut inj = FailureInjector::new(5);
+    assert!(inj.arm_storage(&storage, FailureKind::CrashBetweenPinAndPublish));
+    assert!(!inj.arm_storage(&storage, FailureKind::TornWrite), "shm kinds are not storage-side");
+
+    let mut sd = base.clone();
+    sd.perturb_model_states(0.05, 2);
+    handle.save(20, &sd).unwrap();
+    let (eng, _) = handle.finish().unwrap();
+    assert_eq!(eng.agent_stats().persist_errors, 1, "exactly one rank's persist crashed");
+    // the crashed rank pinned and wrote payload blobs but never
+    // published its stub: that rank has no durable container at 20
+    let durable_at_20 = (0..p.world()).filter(|&rk| storage.has(20, rk)).count();
+    assert_eq!(durable_at_20, p.world() - 1);
+
+    // simulate full process death: engine gone, shm wiped
+    drop(eng);
+    std::fs::remove_dir_all(&r.shm).unwrap();
+
+    // restart on the same store: recovery must fall back to the last
+    // iteration every rank can serve — 10, bit-exactly
+    let r2 = Roots { shm: r.shm.clone(), store: r.store.clone() };
+    let cfg2 = config("crash-restart", p, storage.clone(), &r2);
+    let eng2 = ShardedCheckpointEngine::new(cfg2).unwrap();
+    let (iter, recovered) = eng2.recover_latest().unwrap().expect("iteration 10 is recoverable");
+    assert_eq!(iter, 10);
+    assert_eq!(recovered.len(), base.len());
+    for (a, b) in base.entries().iter().zip(recovered.entries()) {
+        assert_eq!(a.tensor, b.tensor, "{} must restore bit-exactly", a.name);
+    }
+
+    // the crashed rank's pinned-then-unpinned blobs are unreferenced
+    // orphans; a restart's GC sweeps them without touching iteration 10
+    let gcr = storage.gc(&RetentionPolicy { keep_last: 2, keep_every: 0 }).unwrap();
+    assert!(gcr.deleted_blobs > 0, "orphaned blobs from the crashed persist are collectible");
+    let (iter, _) = eng2.recover_latest().unwrap().expect("still recoverable after gc");
+    assert_eq!(iter, 10);
+    drop(eng2);
+    cleanup(&r);
+}
+
+/// GC racing an in-flight background save: the shared pin table protects
+/// the blobs the persist is still publishing, so a retention pass during
+/// the race can never corrupt the save that is landing.
+#[test]
+fn gc_racing_an_inflight_async_save_is_safe() {
+    let p = Parallelism::new(2, 1);
+    let r = roots("gc-race");
+    let storage = Storage::new(&r.store).unwrap().with_throttle(1e6);
+    let eng = ShardedCheckpointEngine::new(config("gc-race", p, storage.clone(), &r)).unwrap();
+    let mut handle = PersistHandle::new(eng, Backpressure::Block);
+
+    let mut sd = StateDict::synthetic_gpt(1 << 14, 31);
+    handle.save(10, &sd).unwrap();
+    handle.flush().unwrap();
+    sd.perturb_model_states(0.05, 32);
+    handle.save(20, &sd).unwrap();
+
+    // iteration 20 is landing right now (encode on the persist thread,
+    // then throttled agent writes): run aggressive retention passes
+    // through a storage clone for the whole window — the process-wide
+    // pin table shared across clones is what keeps this safe
+    let policy = RetentionPolicy { keep_last: 1, keep_every: 0 };
+    for _ in 0..20 {
+        storage.gc(&policy).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    let (eng, _) = handle.finish().unwrap();
+    assert_eq!(eng.agent_stats().persist_errors, 0, "the race must not break the persist");
+    let loaded = eng.load_iteration(20).unwrap();
+    assert_eq!(loaded.len(), sd.len());
+    for (a, b) in sd.entries().iter().zip(loaded.entries()) {
+        assert_eq!(a.tensor, b.tensor, "{} must survive the gc race", a.name);
+    }
+    drop(eng);
+    cleanup(&r);
+}
