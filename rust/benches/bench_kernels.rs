@@ -1,0 +1,205 @@
+//! Codec kernel micro-benchmarks: scalar vs wide on every accelerated
+//! hot loop (bitmask delta scan+encode, COO encode, cluster
+//! quantization, byte-group transpose).
+//!
+//! Hard assertions (the kernel layer's contract, not goals):
+//!
+//! * **Bit-identity**: each codec's payload under the wide kernel is
+//!   byte-identical to the scalar kernel's — equal lengths *and* equal
+//!   CRC-64 — and every payload length matches the codec's analytic
+//!   size formula, so the committed baseline byte counts are derivable
+//!   by hand.
+//! * **Calibration pickup**: [`Calibration::measure`] runs under each
+//!   kernel and must return finite positive throughputs — the planner's
+//!   encode-time predictions track the active kernel with no extra
+//!   plumbing.
+//!
+//! Throughput (GB/s per codec per kernel) and the wide-vs-scalar
+//! speedup are *reported* into `BENCH_kernels.json` but never gated:
+//! per the wall-clock-free convention, the CI regression gate compares
+//! only the byte counts and the `identical_output` flag against
+//! `bench_baselines/BENCH_kernels.json`.
+//!
+//! Run: `cargo bench --bench bench_kernels` (env `N` for element count,
+//! `BENCH_OUT` for the JSON path).
+
+use bitsnap::adapt::Calibration;
+use bitsnap::bench::{bench, fmt_bytes, fmt_throughput, Table};
+use bitsnap::compress::kernels::{set_active, KernelKind, Kernels};
+use bitsnap::compress::{bitmask, cluster_quant, coo, CodecId};
+use bitsnap::engine::container::crc64;
+use bitsnap::tensor::{HostTensor, XorShiftRng};
+
+const KINDS: [KernelKind; 2] = [KernelKind::Scalar, KernelKind::Wide];
+const REPS: usize = 3;
+const CLUSTERS: usize = 16;
+
+struct CodecRun {
+    name: &'static str,
+    payload_bytes: usize,
+    crc: u64,
+    /// Indexed like [`KINDS`]: `[scalar, wide]`.
+    gbps: [f64; 2],
+}
+
+impl CodecRun {
+    fn speedup(&self) -> f64 {
+        self.gbps[1] / self.gbps[0].max(1e-12)
+    }
+}
+
+/// Time `f` under each kernel kind (min over [`REPS`] timed runs after
+/// one warmup, so a single preemption cannot flip a reported speedup)
+/// and hard-assert the outputs are byte-identical across kinds.
+fn run_codec(
+    name: &'static str,
+    raw_bytes: usize,
+    analytic_bytes: usize,
+    mut f: impl FnMut() -> Vec<u8>,
+) -> CodecRun {
+    let mut payloads: Vec<Vec<u8>> = Vec::new();
+    let mut gbps = [0f64; 2];
+    for (k, kind) in KINDS.iter().enumerate() {
+        set_active(*kind);
+        payloads.push(f());
+        let stats = bench(1, REPS, || {
+            std::hint::black_box(f());
+        });
+        gbps[k] = raw_bytes as f64 / stats.min.as_secs_f64().max(1e-12) / 1e9;
+    }
+    let (scalar, wide) = (&payloads[0], &payloads[1]);
+    assert_eq!(
+        scalar.len(),
+        wide.len(),
+        "{name}: wide payload length diverges from scalar"
+    );
+    assert_eq!(
+        crc64(scalar),
+        crc64(wide),
+        "{name}: wide payload bytes diverge from scalar (CRC-64 mismatch)"
+    );
+    assert_eq!(
+        scalar.len(),
+        analytic_bytes,
+        "{name}: payload length diverges from the analytic size formula"
+    );
+    CodecRun { name, payload_bytes: scalar.len(), crc: crc64(scalar), gbps }
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let n = env_usize("N", 1 << 20);
+    let changed = n / 10;
+    println!("== codec kernels: scalar vs wide, {n} elems, {changed} changed ==\n");
+
+    // delta pair: fp16-sized elements, exactly `changed` distinct
+    // elements flipped (xor of a nonzero constant into the first byte
+    // guarantees a bit flip), so n_changed — and with it every analytic
+    // payload size — is exact, not probabilistic
+    let mut rng = XorShiftRng::new(0x6b65726e);
+    let base: Vec<u8> = (0..n * 2).map(|_| rng.next_u32() as u8).collect();
+    let mut curr = base.clone();
+    for i in rng.choose_indices(n, changed) {
+        curr[i * 2] ^= 0x5a;
+    }
+    // cluster input: trained-optimizer-like normal f32 data
+    let vals = rng.normal_vec(n, 0.0, 1e-3);
+    let tensor = HostTensor::from_f32(&[n], &vals).unwrap();
+
+    let runs = [
+        run_codec("BitmaskPacked", n * 2, bitmask::packed_size(n, changed, 2), || {
+            bitmask::encode_packed(&base, &curr, 2).unwrap()
+        }),
+        run_codec("BitmaskNaive", n * 2, bitmask::naive_size(n, changed, 2), || {
+            bitmask::encode_naive(&base, &curr, 2).unwrap()
+        }),
+        run_codec("CooU16", n * 2, coo::u16_size(n, changed, 2), || {
+            coo::encode(&base, &curr, 2, coo::IndexWidth::U16).unwrap()
+        }),
+        run_codec(
+            "ClusterQuant(m=16)",
+            n * 4,
+            cluster_quant::analytic_size(n, CLUSTERS),
+            || cluster_quant::encode(&tensor, CLUSTERS).unwrap(),
+        ),
+        run_codec("ByteGroupTranspose", n * 4, n * 4, || {
+            // the transpose kernel itself (the entropy stage downstream
+            // of it is kernel-independent); ungroup must invert exactly
+            let grouped = Kernels::active().group_bytes(tensor.bytes(), 4);
+            assert_eq!(
+                Kernels::active().ungroup_bytes(&grouped, 4),
+                tensor.bytes(),
+                "ungroup_bytes must invert group_bytes"
+            );
+            grouped
+        }),
+    ];
+
+    let mut table = Table::new(&["codec", "payload", "scalar", "wide", "speedup"]);
+    for r in &runs {
+        table.row(&[
+            r.name.to_string(),
+            fmt_bytes(r.payload_bytes),
+            format!("{:.2} GB/s", r.gbps[0]),
+            format!("{:.2} GB/s", r.gbps[1]),
+            format!("{:.2}x", r.speedup()),
+        ]);
+    }
+    table.print();
+
+    let total: usize = runs.iter().map(|r| r.payload_bytes).sum();
+    println!("\nwide byte-identical to scalar on every codec ({} payload bytes total)", total);
+
+    // planner pickup: the calibration microbench flows through the
+    // public encode entry points, so each kernel yields its own table
+    let mut calibrated = [0f64; 2];
+    for (k, kind) in KINDS.iter().enumerate() {
+        set_active(*kind);
+        let cal = Calibration::measure(n.min(1 << 16));
+        let bps = cal.encode_bps(CodecId::BitmaskPacked);
+        assert!(
+            bps.is_finite() && bps > 0.0,
+            "calibration under {} kernel returned {bps}",
+            kind.name()
+        );
+        calibrated[k] = bps;
+        println!(
+            "calibrated BitmaskPacked under {:<6} kernel: {}",
+            kind.name(),
+            fmt_throughput(bps as usize, std::time::Duration::from_secs(1)),
+        );
+    }
+
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_kernels.json".to_string());
+    let arm_json = |kind: KernelKind| {
+        format!("    {{\"kernel\": \"{}\", \"compressed_bytes\": {total}}}", kind.name())
+    };
+    let codec_json = |r: &CodecRun| {
+        format!(
+            "    {{\"codec\": \"{}\", \"compressed_bytes\": {}, \"_crc64\": \"{:#018x}\", \
+             \"scalar_gbps\": {:.3}, \"wide_gbps\": {:.3}, \"speedup_wide\": {:.3}}}",
+            r.name,
+            r.payload_bytes,
+            r.crc,
+            r.gbps[0],
+            r.gbps[1],
+            r.speedup()
+        )
+    };
+    let codecs: Vec<String> = runs.iter().map(codec_json).collect();
+    let json = format!(
+        "{{\n  \"params\": {n},\n  \"changed\": {changed},\n  \"arms\": [\n{},\n{}\n  ],\n  \
+         \"identical_output\": true,\n  \"codecs\": [\n{}\n  ],\n  \
+         \"calibrated_scalar_bps\": {:.0},\n  \"calibrated_wide_bps\": {:.0}\n}}\n",
+        arm_json(KernelKind::Scalar),
+        arm_json(KernelKind::Wide),
+        codecs.join(",\n"),
+        calibrated[0],
+        calibrated[1],
+    );
+    std::fs::write(&out_path, json).expect("write bench json");
+    println!("wrote {out_path}");
+}

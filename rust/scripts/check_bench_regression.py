@@ -189,12 +189,37 @@ def self_test():
         ],
         "identical_output": True,
     }
+    # the BENCH_kernels shape: arms keyed by kernel instead of workers —
+    # the equal-bytes determinism check must stay applicable to it
+    kernel_ok = {
+        "arms": [
+            {"kernel": "scalar", "compressed_bytes": 500},
+            {"kernel": "wide", "compressed_bytes": 500},
+        ],
+        "identical_output": True,
+        "codecs": [{"codec": "BitmaskPacked", "compressed_bytes": 100, "scalar_gbps": 1.0}],
+    }
+    kernel_nondet = json.loads(json.dumps(kernel_ok))
+    kernel_nondet["arms"][1]["compressed_bytes"] = 501
+    kernel_baseline = {
+        "arms": [
+            {"kernel": "scalar", "compressed_bytes": 500},
+            {"kernel": "wide", "compressed_bytes": 500},
+        ],
+        "codecs": [{"codec": "BitmaskPacked", "compressed_bytes": 100}],
+    }
+    kernel_renamed = json.loads(json.dumps(kernel_ok))
+    kernel_renamed["arms"][1]["kernel"] = "avx512"
     cases = [
         ("clean pass", compare(baseline, ok, tol), False),
         ("injected ratio regression", compare(baseline, ratio_regressed, tol), True),
         ("injected bytes regression", compare(baseline, bytes_regressed, tol), True),
         ("config mismatch", compare(baseline, config_changed, tol), True),
         ("worker-count nondeterminism", determinism_check(nondeterministic), True),
+        ("kernel arms clean pass", compare(kernel_baseline, kernel_ok, tol)
+         + determinism_check(kernel_ok), False),
+        ("kernel-arm nondeterminism", determinism_check(kernel_nondet), True),
+        ("kernel arm renamed", compare(kernel_baseline, kernel_renamed, tol), True),
     ]
     failed = False
     for name, fails, should_fail in cases:

@@ -68,6 +68,10 @@ impl Calibration {
     /// One warmup + best-of-three timed runs each (a single scheduler
     /// preemption must not mis-order the throughput table — downstream,
     /// `bench_adaptive` hard-asserts on comparisons built from it).
+    /// Timing flows through the public codec entry points, so the table
+    /// reflects the active [`crate::compress::kernels`] implementation —
+    /// the planner's encode-time predictions automatically track kernel
+    /// speedups without any explicit plumbing.
     pub fn measure(sample_elems: usize) -> Self {
         let mut cal = Self::default_host();
         let n = sample_elems.max(1 << 12);
@@ -203,7 +207,10 @@ impl SharedCalibration {
             drop(cal);
             m.gauge_set(
                 "bitsnap_encode_bytes_per_second",
-                &[("codec", &format!("{codec:?}"))],
+                &[
+                    ("codec", &format!("{codec:?}")),
+                    ("kernel", crate::compress::kernels::active().name()),
+                ],
                 bps,
             );
         }

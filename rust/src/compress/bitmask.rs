@@ -13,6 +13,13 @@
 //! compare by payload). We store the changed elements' *new values*; adding
 //! arithmetic deltas to fp16 would not round-trip bit-exactly.
 //!
+//! Both encoders run **one fused scan** over the pair — a single
+//! [`super::kernels`] pass produces the packed [`ChangeMask`] *and* its
+//! popcount — then emit the payload from the mask, touching only `curr`.
+//! [`scan_changes`] exposes the fused scan so the Auto codec picker can
+//! size every candidate and encode the winner from one scan
+//! (`base` is read exactly once per delta encode).
+//!
 //! Payload layout (both variants), little-endian:
 //! ```text
 //! n_elems   u64
@@ -22,6 +29,7 @@
 //! values    n_changed * elem_size bytes
 //! ```
 
+use super::kernels::{ChangeMask, Kernels};
 use super::CompressError;
 
 const HEADER: usize = 8 + 1 + 8;
@@ -41,12 +49,6 @@ fn check_pair(base: &[u8], curr: &[u8], elem_size: usize) -> Result<usize, Compr
         )));
     }
     Ok(curr.len() / elem_size)
-}
-
-#[inline]
-fn elem_changed(base: &[u8], curr: &[u8], i: usize, elem_size: usize) -> bool {
-    let off = i * elem_size;
-    base[off..off + elem_size] != curr[off..off + elem_size]
 }
 
 fn write_header(out: &mut Vec<u8>, n: usize, elem_size: usize, n_changed: usize) {
@@ -71,27 +73,54 @@ fn read_header(payload: &[u8]) -> Result<(usize, usize, usize), CompressError> {
     Ok((n, elem_size, n_changed))
 }
 
+/// The fused change scan: validates the pair, then one pass of the
+/// active kernel yields the packed change bitmap plus its popcount.
+/// Candidate sizing ([`packed_size`], [`naive_size`], the COO sizes) and
+/// the final encode ([`encode_packed_from_mask`] and friends) all read
+/// this one result, so a delta encode touches `base` exactly once.
+pub fn scan_changes(
+    base: &[u8],
+    curr: &[u8],
+    elem_size: usize,
+) -> Result<ChangeMask, CompressError> {
+    check_pair(base, curr, elem_size)?;
+    Ok(Kernels::active().scan_changes(base, curr, elem_size))
+}
+
+/// Emit the packed-variant payload from an already-computed
+/// [`ChangeMask`]. Only `curr` is read — the scan already happened.
+/// `curr` must be the same buffer the mask was scanned from
+/// (`curr.len() == mask.n * elem_size`).
+pub fn encode_packed_from_mask(mask: &ChangeMask, curr: &[u8], elem_size: usize) -> Vec<u8> {
+    debug_assert_eq!(curr.len(), mask.n * elem_size);
+    let mut out = Vec::with_capacity(packed_size(mask.n, mask.n_changed, elem_size));
+    write_header(&mut out, mask.n, elem_size, mask.n_changed);
+    out.extend_from_slice(&mask.bits);
+    mask.for_each_changed(|i| {
+        out.extend_from_slice(&curr[i * elem_size..(i + 1) * elem_size]);
+    });
+    out
+}
+
+/// Emit the naive-variant payload from an already-computed
+/// [`ChangeMask`] (same contract as [`encode_packed_from_mask`]).
+pub fn encode_naive_from_mask(mask: &ChangeMask, curr: &[u8], elem_size: usize) -> Vec<u8> {
+    debug_assert_eq!(curr.len(), mask.n * elem_size);
+    let mut out = Vec::with_capacity(naive_size(mask.n, mask.n_changed, elem_size));
+    write_header(&mut out, mask.n, elem_size, mask.n_changed);
+    let mask_start = out.len();
+    out.resize(mask_start + mask.n, 0);
+    mask.for_each_changed(|i| out[mask_start + i] = 1);
+    mask.for_each_changed(|i| {
+        out.extend_from_slice(&curr[i * elem_size..(i + 1) * elem_size]);
+    });
+    out
+}
+
 /// Naive variant: u8 mask per element (paper's first formulation).
 pub fn encode_naive(base: &[u8], curr: &[u8], elem_size: usize) -> Result<Vec<u8>, CompressError> {
-    let n = check_pair(base, curr, elem_size)?;
-    let mut mask = vec![0u8; n];
-    let mut n_changed = 0usize;
-    for i in 0..n {
-        if elem_changed(base, curr, i, elem_size) {
-            mask[i] = 1;
-            n_changed += 1;
-        }
-    }
-    let mut out = Vec::with_capacity(HEADER + n + n_changed * elem_size);
-    write_header(&mut out, n, elem_size, n_changed);
-    out.extend_from_slice(&mask);
-    for i in 0..n {
-        if mask[i] == 1 {
-            let off = i * elem_size;
-            out.extend_from_slice(&curr[off..off + elem_size]);
-        }
-    }
-    Ok(out)
+    let mask = scan_changes(base, curr, elem_size)?;
+    Ok(encode_naive_from_mask(&mask, curr, elem_size))
 }
 
 /// Decode the naive variant. Returns the reconstructed dense bytes.
@@ -128,58 +157,11 @@ pub fn decode_naive(
 
 /// Improved variant: mask packed 8 bits per byte (paper Fig. 5).
 /// Bit `i` lives in `mask[i / 8]` at position `i % 8` (LSB-first).
+/// (The old per-variant u128 fast path is gone: the wordwise work now
+/// lives in the shared wide kernel, which covers every element size.)
 pub fn encode_packed(base: &[u8], curr: &[u8], elem_size: usize) -> Result<Vec<u8>, CompressError> {
-    let n = check_pair(base, curr, elem_size)?;
-    let mask_bytes = n.div_ceil(8);
-    let mut out = Vec::with_capacity(HEADER + mask_bytes + curr.len() / 4);
-    write_header(&mut out, n, elem_size, 0); // n_changed patched below
-    out.resize(HEADER + mask_bytes, 0);
-
-    // Hot path: specialized for the dominant 2-byte (fp16/bf16) case, which
-    // is what model states use. One u128 load pair covers 8 elements; the
-    // per-16-bit-lane "any byte differs" reduction needs ~8 scalar ops for
-    // all 8 lanes, and value extraction iterates only the set bits.
-    let mut n_changed = 0usize;
-    if elem_size == 2 {
-        let full = n / 8;
-        for mb in 0..full {
-            let o = mb * 16;
-            let a = u128::from_le_bytes(base[o..o + 16].try_into().unwrap());
-            let b = u128::from_le_bytes(curr[o..o + 16].try_into().unwrap());
-            let x = a ^ b;
-            // lane-nonzero bit per 16-bit lane, branch-free
-            let mut m2 = 0u8;
-            for j in 0..8 {
-                m2 |= (((x >> (16 * j)) as u16 != 0) as u8) << j;
-            }
-            out[HEADER + mb] = m2;
-            let mut bits = m2;
-            while bits != 0 {
-                let j = bits.trailing_zeros() as usize;
-                bits &= bits - 1;
-                out.extend_from_slice(&curr[o + 2 * j..o + 2 * j + 2]);
-                n_changed += 1;
-            }
-        }
-        for i in full * 8..n {
-            if elem_changed(base, curr, i, 2) {
-                out[HEADER + i / 8] |= 1 << (i % 8);
-                out.extend_from_slice(&curr[i * 2..i * 2 + 2]);
-                n_changed += 1;
-            }
-        }
-    } else {
-        for i in 0..n {
-            if elem_changed(base, curr, i, elem_size) {
-                out[HEADER + i / 8] |= 1 << (i % 8);
-                let off = i * elem_size;
-                out.extend_from_slice(&curr[off..off + elem_size]);
-                n_changed += 1;
-            }
-        }
-    }
-    out[9..17].copy_from_slice(&(n_changed as u64).to_le_bytes());
-    Ok(out)
+    let mask = scan_changes(base, curr, elem_size)?;
+    Ok(encode_packed_from_mask(&mask, curr, elem_size))
 }
 
 /// Decode the packed variant.
@@ -228,8 +210,8 @@ pub fn decode_packed(
 /// Count changed elements without producing a payload (used for codec
 /// selection and by the Fig. 8/9 harnesses).
 pub fn count_changed(base: &[u8], curr: &[u8], elem_size: usize) -> Result<usize, CompressError> {
-    let n = check_pair(base, curr, elem_size)?;
-    Ok((0..n).filter(|&i| elem_changed(base, curr, i, elem_size)).count())
+    check_pair(base, curr, elem_size)?;
+    Ok(Kernels::active().count_changes(base, curr, elem_size))
 }
 
 /// Compressed size in bytes the packed variant will produce (analytic,

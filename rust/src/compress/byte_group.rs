@@ -20,31 +20,18 @@ const HEADER: usize = 8 + 1;
 const ZSTD_LEVEL: i32 = 3;
 
 /// Transpose `data` (n elements × elem_size bytes) into byte planes.
+/// Dispatches to the active [`super::kernels`] transpose — the wide
+/// variant tiles over element blocks so each input byte is read once
+/// instead of once per plane; output bytes are identical either way.
 pub fn group_bytes(data: &[u8], elem_size: usize) -> Vec<u8> {
     debug_assert!(elem_size > 0 && data.len() % elem_size == 0);
-    let n = data.len() / elem_size;
-    let mut out = vec![0u8; data.len()];
-    for plane in 0..elem_size {
-        let dst = &mut out[plane * n..(plane + 1) * n];
-        for (i, d) in dst.iter_mut().enumerate() {
-            *d = data[i * elem_size + plane];
-        }
-    }
-    out
+    super::kernels::Kernels::active().group_bytes(data, elem_size)
 }
 
 /// Inverse of [`group_bytes`].
 pub fn ungroup_bytes(grouped: &[u8], elem_size: usize) -> Vec<u8> {
     debug_assert!(elem_size > 0 && grouped.len() % elem_size == 0);
-    let n = grouped.len() / elem_size;
-    let mut out = vec![0u8; grouped.len()];
-    for plane in 0..elem_size {
-        let src = &grouped[plane * n..(plane + 1) * n];
-        for (i, &s) in src.iter().enumerate() {
-            out[i * elem_size + plane] = s;
-        }
-    }
-    out
+    super::kernels::Kernels::active().ungroup_bytes(grouped, elem_size)
 }
 
 pub fn encode(t: &HostTensor) -> Result<Vec<u8>, CompressError> {

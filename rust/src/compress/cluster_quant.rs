@@ -34,6 +34,11 @@
 //! ```
 //! [`decode`] accepts both, so PR-2-era checkpoints keep loading.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::kernels::Kernels;
 use super::CompressError;
 use crate::tensor::{DType, HostTensor};
 
@@ -114,6 +119,58 @@ pub fn normal_boundaries(m: usize, mu: f32, sigma: f32) -> Vec<f32> {
         .collect()
 }
 
+/// Capacity of the boundary-table LRU: a save touches a handful of
+/// distinct (m, µ, σ) triples per optimizer state family, and repeated
+/// saves of a slowly-moving optimizer re-hit identical stats often.
+const BOUNDARY_CACHE_CAP: usize = 64;
+
+struct BoundaryCache {
+    /// (m, µ bits, σ bits) → (last-use tick, boundaries). Keys are the
+    /// *exact* f32 bit patterns — quantizing them would return a nearby
+    /// triple's ladder and silently change encoded bytes.
+    map: HashMap<(usize, u32, u32), (u64, Arc<Vec<f32>>)>,
+    tick: u64,
+}
+
+static BOUNDARY_CACHE: OnceLock<Mutex<BoundaryCache>> = OnceLock::new();
+static BOUNDARY_CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static BOUNDARY_CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// [`normal_boundaries`] through a small process-wide LRU, so cluster
+/// encode stops recomputing the [`inv_normal_cdf`] ladder once per
+/// tensor per save. Bit-exact: the cache key is the exact (m, µ, σ) bit
+/// pattern, and a hit returns the very vector a miss would compute.
+pub fn cached_normal_boundaries(m: usize, mu: f32, sigma: f32) -> Arc<Vec<f32>> {
+    let cache = BOUNDARY_CACHE
+        .get_or_init(|| Mutex::new(BoundaryCache { map: HashMap::new(), tick: 0 }));
+    let key = (m, mu.to_bits(), sigma.to_bits());
+    let mut c = cache.lock().unwrap();
+    c.tick += 1;
+    let tick = c.tick;
+    if let Some((stamp, b)) = c.map.get_mut(&key) {
+        *stamp = tick;
+        let b = Arc::clone(b);
+        BOUNDARY_CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+        return b;
+    }
+    BOUNDARY_CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+    let b = Arc::new(normal_boundaries(m, mu, sigma));
+    if c.map.len() >= BOUNDARY_CACHE_CAP {
+        let evict = c.map.iter().min_by_key(|(_, (stamp, _))| *stamp).map(|(k, _)| *k);
+        if let Some(k) = evict {
+            c.map.remove(&k);
+        }
+    }
+    c.map.insert(key, (tick, Arc::clone(&b)));
+    b
+}
+
+/// Cumulative (hits, misses) of the boundary-table cache — observability
+/// for tests and perf triage; process-wide, monotonically increasing.
+pub fn boundary_cache_stats() -> (u64, u64) {
+    (BOUNDARY_CACHE_HITS.load(Ordering::Relaxed), BOUNDARY_CACHE_MISSES.load(Ordering::Relaxed))
+}
+
 fn mean_std(values: &[f32]) -> (f32, f32) {
     // Chunked two-level accumulation: f32 SIMD-friendly inner sums, f64
     // outer accumulation for stability on multi-GB tensors. Non-finite
@@ -190,33 +247,16 @@ pub fn encode_with_timing(
     let n = values.len();
     let t_cluster0 = std::time::Instant::now();
     let (mu, sigma) = mean_std(values);
-    let boundaries = normal_boundaries(m, mu, sigma.max(f32::MIN_POSITIVE));
+    let boundaries = cached_normal_boundaries(m, mu, sigma.max(f32::MIN_POSITIVE));
 
-    // pass 1 (clustering, T_c): labels, then per-cluster min/max.
+    // pass 1 (clustering, T_c): labels via the active kernel — small m
+    // is a branch-free broadcast-compare over a padded boundary array
+    // (the same shape the Pallas kernel uses on the TPU VPU), large m a
+    // binary search; both count boundaries < v, so NaN (comparing false
+    // everywhere) lands in cluster 0 under either kernel.
+    let kernels = Kernels::active();
     let mut labels = vec![0u8; n];
-    if m <= 16 {
-        // The label loop compares each value against all m-1 boundaries
-        // from a fixed-size array — branch-free and auto-vectorizable (the
-        // same broadcast-compare shape the Pallas kernel uses on the TPU
-        // VPU); padding boundaries with +inf contributes 0 to every sum.
-        let mut bpad = [f32::INFINITY; 15];
-        bpad[..boundaries.len()].copy_from_slice(&boundaries);
-        for (l, &v) in labels.iter_mut().zip(values) {
-            let mut acc = 0i32;
-            for b in bpad {
-                acc += (v > b) as i32;
-            }
-            *l = acc as u8;
-        }
-    } else {
-        // large m: a 255-wide compare sweep costs more than a binary
-        // search (≤ 8 probes). partition_point counts boundaries < v,
-        // which is exactly the linear scan's (v > b) count — including
-        // for NaN, which compares false everywhere and lands in cluster 0.
-        for (l, &v) in labels.iter_mut().zip(values) {
-            *l = boundaries.partition_point(|&b| b < v) as u8;
-        }
-    }
+    kernels.assign_labels(values, boundaries.as_slice(), &mut labels);
     // per-cluster ranges over finite values only: an inf in cmax would
     // make the cluster's scale inf and dequantize every member to NaN;
     // with finite ranges, ±inf clamps to the cluster edge and NaN lands
@@ -257,11 +297,8 @@ pub fn encode_with_timing(
         out.extend_from_slice(&b.to_le_bytes());
     }
     // labels packed w bits each, LSB-first within the byte
-    let mut packed = vec![0u8; label_bytes];
-    for (i, &l) in labels.iter().enumerate() {
-        let bit = i * w;
-        packed[bit / 8] |= l << (bit % 8);
-    }
+    let packed = kernels.pack_labels(&labels, w);
+    debug_assert_eq!(packed.len(), label_bytes);
     out.extend_from_slice(&packed);
     // quantized payload: round((v - b) / S * 255), computed as a fused
     // multiply by a per-cluster reciprocal (division and f32::round are
@@ -702,5 +739,23 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn boundary_cache_hits_on_repeat_and_stays_exact() {
+        // an (m, µ, σ) triple unlikely to collide with other tests; the
+        // counters are process-wide, so assert deltas as lower bounds
+        let (m, mu, sigma) = (13usize, 0.123_456_79_f32, 0.000_987_65_f32);
+        let (h0, mi0) = boundary_cache_stats();
+        let a = cached_normal_boundaries(m, mu, sigma);
+        let b = cached_normal_boundaries(m, mu, sigma);
+        let (h1, mi1) = boundary_cache_stats();
+        assert!(mi1 > mi0, "first lookup must miss");
+        assert!(h1 > h0, "second lookup must hit");
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the cached vector");
+        assert_eq!(*a, normal_boundaries(m, mu, sigma), "cache must be bit-exact");
+        // a different sigma is a different key — exactness over reuse
+        let c = cached_normal_boundaries(m, mu, sigma + f32::EPSILON);
+        assert_ne!(*c, *a);
     }
 }

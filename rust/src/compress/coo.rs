@@ -21,6 +21,7 @@
 //! values     n_changed * elem_size
 //! ```
 
+use super::kernels::{ChangeMask, Kernels};
 use super::CompressError;
 
 /// Index width for the COO baseline.
@@ -33,6 +34,8 @@ pub enum IndexWidth {
 const HEADER: usize = 8 + 1 + 1 + 8;
 const BLOCK: usize = 1 << 16;
 
+/// Encode a delta. The change scan runs through the active
+/// [`Kernels`]; the payload is then emitted by [`encode_from_mask`].
 pub fn encode(
     base: &[u8],
     curr: &[u8],
@@ -42,15 +45,26 @@ pub fn encode(
     if base.len() != curr.len() || elem_size == 0 || curr.len() % elem_size != 0 {
         return Err(CompressError::Shape("coo: base/curr mismatch".into()));
     }
-    let n = curr.len() / elem_size;
+    let mask = Kernels::active().scan_changes(base, curr, elem_size);
+    encode_from_mask(&mask, curr, elem_size, width)
+}
+
+/// Emit a COO payload from an already-computed [`ChangeMask`] — the Auto
+/// codec picker shares one fused scan across every candidate codec.
+/// `curr` must be the buffer the mask was scanned from.
+pub fn encode_from_mask(
+    mask: &ChangeMask,
+    curr: &[u8],
+    elem_size: usize,
+    width: IndexWidth,
+) -> Result<Vec<u8>, CompressError> {
+    debug_assert_eq!(curr.len(), mask.n * elem_size);
+    let n = mask.n;
     if width == IndexWidth::U32 && n > u32::MAX as usize {
         return Err(CompressError::Shape("coo u32: tensor too long".into()));
     }
-    let changed: Vec<usize> = (0..n)
-        .filter(|&i| {
-            base[i * elem_size..(i + 1) * elem_size] != curr[i * elem_size..(i + 1) * elem_size]
-        })
-        .collect();
+    let mut changed: Vec<usize> = Vec::with_capacity(mask.n_changed);
+    mask.for_each_changed(|i| changed.push(i));
     let mut out = Vec::new();
     out.extend_from_slice(&(n as u64).to_le_bytes());
     out.push(elem_size as u8);

@@ -175,10 +175,20 @@ impl CheckpointPlan {
     }
 }
 
-fn pick_auto(base: &HostTensor, curr: &HostTensor) -> Result<CodecId, CompressError> {
+/// The Auto policy: one fused kernel scan sizes every delta candidate
+/// *and* encodes the winner from the resulting mask, so `base` is read
+/// exactly once per tensor (previously `count_changed` sized the
+/// payload and the winning encoder re-scanned the same pair).
+fn compress_model_auto(
+    base: &HostTensor,
+    curr: &HostTensor,
+) -> Result<CompressedTensor, CompressError> {
+    if base.dtype() != curr.dtype() || base.shape() != curr.shape() {
+        return Err(CompressError::Shape("delta base/curr mismatch".into()));
+    }
     let es = curr.dtype().size();
-    let n = curr.len();
-    let n_changed = bitmask::count_changed(base.bytes(), curr.bytes(), es)?;
+    let mask = bitmask::scan_changes(base.bytes(), curr.bytes(), es)?;
+    let (n, n_changed) = (mask.n, mask.n_changed);
     // the COO candidate enters at its cheaper index width (u32 wins only
     // on very sparse deltas, where the u16 block table dominates)
     let coo_width = super::coo::cheapest_width(n, n_changed, es);
@@ -192,7 +202,24 @@ fn pick_auto(base: &HostTensor, curr: &HostTensor) -> Result<CodecId, CompressEr
         (CodecSpec::coo(coo_width).id, coo_size),
         (CodecId::Raw, n * es),
     ];
-    Ok(candidates.iter().min_by_key(|(_, s)| *s).unwrap().0)
+    let codec = candidates.iter().min_by_key(|(_, s)| *s).unwrap().0;
+    let payload = match codec {
+        CodecId::BitmaskPacked => bitmask::encode_packed_from_mask(&mask, curr.bytes(), es),
+        CodecId::BitmaskNaive => bitmask::encode_naive_from_mask(&mask, curr.bytes(), es),
+        CodecId::CooU16 => {
+            super::coo::encode_from_mask(&mask, curr.bytes(), es, super::coo::IndexWidth::U16)?
+        }
+        CodecId::CooU32 => {
+            super::coo::encode_from_mask(&mask, curr.bytes(), es, super::coo::IndexWidth::U32)?
+        }
+        _ => return compress(CodecId::Raw, curr),
+    };
+    Ok(CompressedTensor {
+        spec: CodecSpec::of(codec),
+        dtype: curr.dtype(),
+        shape: curr.shape().to_vec(),
+        payload,
+    })
 }
 
 /// Per-phase compression timing (the paper's Figs. 10–11 decomposition):
@@ -250,14 +277,7 @@ fn compress_model_entry(
         (ModelPolicy::BitmaskPacked, Some(b)) => compress_delta(CodecId::BitmaskPacked, b, t)?,
         (ModelPolicy::BitmaskNaive, Some(b)) => compress_delta(CodecId::BitmaskNaive, b, t)?,
         (ModelPolicy::CooU16, Some(b)) => compress_delta(CodecId::CooU16, b, t)?,
-        (ModelPolicy::Auto, Some(b)) => {
-            let codec = pick_auto(b, t)?;
-            if codec == CodecId::Raw {
-                compress(CodecId::Raw, t)?
-            } else {
-                compress_delta(codec, b, t)?
-            }
-        }
+        (ModelPolicy::Auto, Some(b)) => compress_model_auto(b, t)?,
     };
     timings.delta_encoding += t0.elapsed();
     Ok(c)

@@ -1,0 +1,147 @@
+//! Cluster label-assignment and label-packing kernels.
+//!
+//! A label is "the number of boundaries strictly below the value" —
+//! identical to `boundaries.partition_point(|&b| b < v)` over ascending
+//! boundaries, with NaN comparing false everywhere and therefore landing
+//! in cluster 0. Both kernels compute exactly that count, so labels (and
+//! every byte downstream of them) cannot diverge.
+//!
+//! Small cluster counts (≤ 16 clusters, ≤ 15 boundaries) use a padded
+//! boundary array and branch-free `(v > b)` accumulation; the wide
+//! variant runs it over eight values at a time so the compiler can keep
+//! the comparisons in vector registers. Larger counts binary-search.
+
+const CHUNK: usize = 8;
+
+/// Boundaries padded to the fixed small-m array size; `+inf` pads never
+/// count (`v > inf` is false for every float, including NaN).
+#[inline]
+fn pad15(boundaries: &[f32]) -> [f32; 15] {
+    let mut bpad = [f32::INFINITY; 15];
+    bpad[..boundaries.len()].copy_from_slice(boundaries);
+    bpad
+}
+
+pub(super) fn assign_scalar(values: &[f32], boundaries: &[f32], labels: &mut [u8]) {
+    if boundaries.len() <= 15 {
+        let bpad = pad15(boundaries);
+        for (l, &v) in labels.iter_mut().zip(values) {
+            let mut acc = 0i32;
+            for b in bpad {
+                acc += (v > b) as i32;
+            }
+            *l = acc as u8;
+        }
+    } else {
+        for (l, &v) in labels.iter_mut().zip(values) {
+            *l = boundaries.partition_point(|&b| b < v) as u8;
+        }
+    }
+}
+
+pub(super) fn assign_wide(values: &[f32], boundaries: &[f32], labels: &mut [u8]) {
+    if boundaries.len() <= 15 {
+        let bpad = pad15(boundaries);
+        let full = values.len() / CHUNK;
+        for c in 0..full {
+            let v = &values[c * CHUNK..(c + 1) * CHUNK];
+            let mut acc = [0i32; CHUNK];
+            // boundary-outer: the inner loop is eight independent
+            // compare-accumulates over contiguous lanes
+            for b in bpad {
+                for (a, &x) in acc.iter_mut().zip(v) {
+                    *a += (x > b) as i32;
+                }
+            }
+            for (l, a) in labels[c * CHUNK..(c + 1) * CHUNK].iter_mut().zip(acc) {
+                *l = a as u8;
+            }
+        }
+        for i in full * CHUNK..values.len() {
+            let mut acc = 0i32;
+            for b in bpad {
+                acc += (values[i] > b) as i32;
+            }
+            labels[i] = acc as u8;
+        }
+    } else {
+        // chunked binary search: grouping the searches keeps the
+        // boundary cache line hot across the eight lanes
+        for (ls, vs) in labels.chunks_mut(CHUNK).zip(values.chunks(CHUNK)) {
+            for (l, &v) in ls.iter_mut().zip(vs) {
+                *l = boundaries.partition_point(|&b| b < v) as u8;
+            }
+        }
+    }
+}
+
+pub(super) fn pack_scalar(labels: &[u8], width: usize) -> Vec<u8> {
+    let mut packed = vec![0u8; (labels.len() * width).div_ceil(8)];
+    for (i, &l) in labels.iter().enumerate() {
+        let bit = i * width;
+        packed[bit / 8] |= l << (bit % 8);
+    }
+    packed
+}
+
+pub(super) fn pack_wide(labels: &[u8], width: usize) -> Vec<u8> {
+    let mut packed = vec![0u8; (labels.len() * width).div_ceil(8)];
+    match width {
+        2 => {
+            for (byte, c) in packed.iter_mut().zip(labels.chunks_exact(4)) {
+                *byte = c[0] | (c[1] << 2) | (c[2] << 4) | (c[3] << 6);
+            }
+            let done = labels.len() / 4 * 4;
+            for (i, &l) in labels[done..].iter().enumerate() {
+                let bit = (done + i) * 2;
+                packed[bit / 8] |= l << (bit % 8);
+            }
+        }
+        4 => {
+            for (byte, c) in packed.iter_mut().zip(labels.chunks_exact(2)) {
+                *byte = c[0] | (c[1] << 4);
+            }
+            if labels.len() % 2 == 1 {
+                packed[labels.len() / 2] = labels[labels.len() - 1];
+            }
+        }
+        8 => {
+            packed.copy_from_slice(labels);
+        }
+        _ => return pack_scalar(labels, width),
+    }
+    packed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_count_boundaries_below() {
+        let boundaries = [-1.0f32, 0.0, 1.0];
+        let values = [-2.0f32, -1.0, -0.5, 0.0, 0.5, 1.0, 2.0, f32::NAN];
+        let expect = [0u8, 0, 1, 1, 2, 2, 3, 0];
+        let mut s = vec![0u8; values.len()];
+        let mut w = vec![0u8; values.len()];
+        assign_scalar(&values, &boundaries, &mut s);
+        assign_wide(&values, &boundaries, &mut w);
+        assert_eq!(s, expect);
+        assert_eq!(w, expect);
+    }
+
+    #[test]
+    fn packing_matches_across_widths_and_tails() {
+        for width in [2usize, 4, 8] {
+            let max = 1usize << width;
+            for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 33] {
+                let labels: Vec<u8> = (0..n).map(|i| (i * 7 % max) as u8).collect();
+                assert_eq!(
+                    pack_scalar(&labels, width),
+                    pack_wide(&labels, width),
+                    "width={width} n={n}"
+                );
+            }
+        }
+    }
+}

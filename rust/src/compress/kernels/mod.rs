@@ -1,0 +1,290 @@
+//! Runtime-dispatched kernels for the codec hot loops.
+//!
+//! Every codec inner loop that scales with tensor bytes — the bitmask
+//! delta scan, cluster label assignment + label packing, and the
+//! byte-group transpose — funnels through the [`Kernels`] facade. Two
+//! implementations exist per loop:
+//!
+//! * **scalar** — the straightforward per-element reference code the
+//!   codecs shipped with. Always correct, never surprising.
+//! * **wide** — `u64`-wordwise / chunked rewrites built on safe
+//!   `chunks_exact` slicing (no `unsafe`, no unstable `std::simd`):
+//!   SWAR change detection over eight elements per step, chunked
+//!   boundary-count label assignment, word-at-a-time label packing,
+//!   and a cache-blocked transpose.
+//!
+//! The active implementation is resolved **once** per process from the
+//! [`KERNEL_ENV`] environment variable (`BITSNAP_KERNEL=scalar|wide`,
+//! default wide) and can be overridden programmatically with
+//! [`set_active`] — safe to flip at any time because of the layer's one
+//! hard invariant:
+//!
+//! **Every wide path is bit-identical to its scalar path.** The kernel
+//! choice is purely a throughput knob; persisted artifacts never depend
+//! on it. This extends the repo's deterministic-artifact claim (the
+//! `BITSNAP_TEST_WORKERS` matrix) to a kernel matrix: CI runs tier-1
+//! under both kernels, `tests/kernel_parity.rs` diffs the two
+//! implementations on adversarial inputs, and `bench_kernels` CRC-asserts
+//! byte equality while measuring the speedup.
+//!
+//! Calibration feedback is free: [`crate::adapt::Calibration::measure`]
+//! microbenches through the public codec entry points, so measured
+//! per-codec throughput — and therefore the planner's encode-time
+//! predictions and the `bitsnap_encode_bytes_per_second` gauge — reflect
+//! whichever kernel is active.
+
+#![warn(missing_docs)]
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+mod bitmask_scan;
+mod cluster_assign;
+mod transpose;
+
+/// Environment variable selecting the kernel implementation
+/// (`scalar` | `wide`). Read once, at first dispatch; unrecognized
+/// values fall back to the default (wide).
+pub const KERNEL_ENV: &str = "BITSNAP_KERNEL";
+
+/// Which kernel implementation to run. See the module docs for the
+/// bit-identity contract between the two.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Per-element reference loops.
+    Scalar,
+    /// `u64`-wordwise / chunked loops (safe `chunks_exact`, no `unsafe`).
+    Wide,
+}
+
+impl KernelKind {
+    /// Stable lowercase name, as accepted by [`KERNEL_ENV`] and used in
+    /// span attributes, metric labels, and bench JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Wide => "wide",
+        }
+    }
+
+    /// Parse a [`KERNEL_ENV`] value. `None` for unrecognized strings.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelKind::Scalar),
+            "wide" => Some(KernelKind::Wide),
+            _ => None,
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            KernelKind::Scalar => KIND_SCALAR,
+            KernelKind::Wide => KIND_WIDE,
+        }
+    }
+}
+
+const KIND_UNSET: u8 = 0;
+const KIND_SCALAR: u8 = 1;
+const KIND_WIDE: u8 = 2;
+
+static ACTIVE: AtomicU8 = AtomicU8::new(KIND_UNSET);
+
+/// The process-wide active kernel. First call resolves [`KERNEL_ENV`]
+/// (default [`KernelKind::Wide`]); later calls return the cached choice
+/// (or whatever [`set_active`] last installed).
+pub fn active() -> KernelKind {
+    match ACTIVE.load(Ordering::Relaxed) {
+        KIND_SCALAR => KernelKind::Scalar,
+        KIND_WIDE => KernelKind::Wide,
+        _ => {
+            let kind = std::env::var(KERNEL_ENV)
+                .ok()
+                .and_then(|v| KernelKind::parse(&v))
+                .unwrap_or(KernelKind::Wide);
+            ACTIVE.store(kind.code(), Ordering::Relaxed);
+            kind
+        }
+    }
+}
+
+/// Override the process-wide kernel choice (tests, benches, the kernel
+/// CI matrix). Safe at any time: scalar and wide are byte-identical, so
+/// in-flight encodes on other threads cannot produce divergent
+/// artifacts — only differently-timed ones.
+pub fn set_active(kind: KernelKind) {
+    ACTIVE.store(kind.code(), Ordering::Relaxed);
+}
+
+/// A packed change bitmap from one fused scan over a `(base, curr)`
+/// pair — the currency between the delta scan and the payload emitters.
+/// Bit `i % 8` of `bits[i / 8]` (LSB-first, the on-disk bitmask payload
+/// order) is set iff element `i` differs; the popcount rides along so
+/// codec selection never rescans.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChangeMask {
+    /// LSB-first packed change bits, `ceil(n / 8)` bytes; padding bits
+    /// in the final byte are zero.
+    pub bits: Vec<u8>,
+    /// Element count of the scanned pair.
+    pub n: usize,
+    /// Number of set bits in `bits`.
+    pub n_changed: usize,
+}
+
+impl ChangeMask {
+    /// Visit the index of every changed element in ascending order.
+    pub fn for_each_changed(&self, mut f: impl FnMut(usize)) {
+        for (byte_idx, &b) in self.bits.iter().enumerate() {
+            let mut rest = b;
+            while rest != 0 {
+                let j = rest.trailing_zeros() as usize;
+                rest &= rest - 1;
+                f(byte_idx * 8 + j);
+            }
+        }
+    }
+}
+
+/// Facade over one kernel implementation. `Copy`, so encode workers grab
+/// it once ([`Kernels::active`]) and differential tests pin one
+/// explicitly ([`Kernels::with`]) without touching process state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Kernels {
+    kind: KernelKind,
+}
+
+impl Kernels {
+    /// The facade for the process-wide [`active`] kernel.
+    pub fn active() -> Self {
+        Kernels { kind: active() }
+    }
+
+    /// A facade pinned to `kind`, independent of process state — the
+    /// race-free way for in-process differential tests to compare
+    /// implementations.
+    pub const fn with(kind: KernelKind) -> Self {
+        Kernels { kind }
+    }
+
+    /// Which implementation this facade dispatches to.
+    pub fn kind(self) -> KernelKind {
+        self.kind
+    }
+
+    /// Fused change scan: one pass over `base`/`curr` yields the packed
+    /// bitmap *and* its popcount. Preconditions (caller-validated by the
+    /// codecs' pair checks): equal lengths, `elem_size > 0`, length
+    /// divisible by `elem_size`. Element sizes outside {1, 2, 4, 8}
+    /// always take the scalar loop.
+    pub fn scan_changes(self, base: &[u8], curr: &[u8], elem_size: usize) -> ChangeMask {
+        debug_assert_eq!(base.len(), curr.len());
+        debug_assert!(elem_size > 0 && base.len() % elem_size == 0);
+        match self.kind {
+            KernelKind::Scalar => bitmask_scan::scan_scalar(base, curr, elem_size),
+            KernelKind::Wide => bitmask_scan::scan_wide(base, curr, elem_size),
+        }
+    }
+
+    /// Count changed elements without materializing the bitmap (same
+    /// preconditions as [`Kernels::scan_changes`]).
+    pub fn count_changes(self, base: &[u8], curr: &[u8], elem_size: usize) -> usize {
+        debug_assert_eq!(base.len(), curr.len());
+        debug_assert!(elem_size > 0 && base.len() % elem_size == 0);
+        match self.kind {
+            KernelKind::Scalar => bitmask_scan::count_scalar(base, curr, elem_size),
+            KernelKind::Wide => bitmask_scan::count_wide(base, curr, elem_size),
+        }
+    }
+
+    /// Cluster label assignment: `labels[i]` = number of `boundaries`
+    /// strictly below `values[i]` (ascending boundaries; NaN lands in
+    /// cluster 0). Equivalent to
+    /// `boundaries.partition_point(|&b| b < v)`. Requires
+    /// `boundaries.len() < 256` and `labels.len() == values.len()`.
+    pub fn assign_labels(self, values: &[f32], boundaries: &[f32], labels: &mut [u8]) {
+        debug_assert_eq!(values.len(), labels.len());
+        debug_assert!(boundaries.len() < 256);
+        match self.kind {
+            KernelKind::Scalar => cluster_assign::assign_scalar(values, boundaries, labels),
+            KernelKind::Wide => cluster_assign::assign_wide(values, boundaries, labels),
+        }
+    }
+
+    /// Pack cluster labels at `width` bits each (2, 4, or 8), LSB-first
+    /// within each byte — the on-disk label-plane order. Labels must fit
+    /// in `width` bits.
+    pub fn pack_labels(self, labels: &[u8], width: usize) -> Vec<u8> {
+        match self.kind {
+            KernelKind::Scalar => cluster_assign::pack_scalar(labels, width),
+            KernelKind::Wide => cluster_assign::pack_wide(labels, width),
+        }
+    }
+
+    /// Byte-plane transpose: element-major bytes to plane-major (all
+    /// byte 0s, then all byte 1s, …). Requires
+    /// `data.len() % elem_size == 0`.
+    pub fn group_bytes(self, data: &[u8], elem_size: usize) -> Vec<u8> {
+        debug_assert!(elem_size > 0 && data.len() % elem_size == 0);
+        match self.kind {
+            KernelKind::Scalar => transpose::group_scalar(data, elem_size),
+            KernelKind::Wide => transpose::group_wide(data, elem_size),
+        }
+    }
+
+    /// Inverse of [`Kernels::group_bytes`]: plane-major back to
+    /// element-major.
+    pub fn ungroup_bytes(self, grouped: &[u8], elem_size: usize) -> Vec<u8> {
+        debug_assert!(elem_size > 0 && grouped.len() % elem_size == 0);
+        match self.kind {
+            KernelKind::Scalar => transpose::ungroup_scalar(grouped, elem_size),
+            KernelKind::Wide => transpose::ungroup_wide(grouped, elem_size),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::XorShiftRng;
+
+    #[test]
+    fn kind_parse_and_name_roundtrip() {
+        for k in [KernelKind::Scalar, KernelKind::Wide] {
+            assert_eq!(KernelKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(KernelKind::parse("WIDE "), Some(KernelKind::Wide));
+        assert_eq!(KernelKind::parse("avx512"), None);
+        assert_eq!(KernelKind::parse(""), None);
+    }
+
+    #[test]
+    fn for_each_changed_visits_set_bits_in_order() {
+        let mask = ChangeMask { bits: vec![0b0000_0101, 0b1000_0000], n: 16, n_changed: 3 };
+        let mut seen = Vec::new();
+        mask.for_each_changed(|i| seen.push(i));
+        assert_eq!(seen, vec![0, 2, 15]);
+    }
+
+    // The in-module smoke test for the bit-identity invariant; the full
+    // adversarial sweep lives in tests/kernel_parity.rs. Uses explicit
+    // Kernels::with handles so it cannot race with set_active elsewhere.
+    #[test]
+    fn wide_matches_scalar_smoke() {
+        let mut rng = XorShiftRng::new(0x6b65726e);
+        for es in [1usize, 2, 4, 8] {
+            let n = 1000;
+            let base: Vec<u8> = (0..n * es).map(|_| rng.next_u64() as u8).collect();
+            let mut curr = base.clone();
+            for i in rng.choose_indices(n, n / 7) {
+                curr[i * es] ^= 0x5a;
+            }
+            let s = Kernels::with(KernelKind::Scalar).scan_changes(&base, &curr, es);
+            let w = Kernels::with(KernelKind::Wide).scan_changes(&base, &curr, es);
+            assert_eq!(s, w, "scan divergence at elem_size {es}");
+            assert_eq!(
+                Kernels::with(KernelKind::Scalar).count_changes(&base, &curr, es),
+                Kernels::with(KernelKind::Wide).count_changes(&base, &curr, es),
+            );
+        }
+    }
+}

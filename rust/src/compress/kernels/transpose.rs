@@ -1,0 +1,98 @@
+//! Byte-group transpose kernels: element-major bytes to plane-major
+//! ("all byte 0s, then all byte 1s, …") and back.
+//!
+//! The naive loop walks one output plane at a time, striding through the
+//! whole input per plane — for multi-megabyte tensors every plane is a
+//! full cache-missing pass. The wide variant tiles over blocks of
+//! elements instead: each tile's bytes are read once and scattered to
+//! all planes while still resident, turning `elem_size` passes into one.
+//! Output bytes land at exactly the same offsets, so the layouts are
+//! identical by construction.
+
+/// Elements per tile. At `elem_size <= 8` a tile spans at most 32 KiB of
+/// input — comfortably inside L1/L2 alongside the output cursors.
+const BLOCK: usize = 4096;
+
+pub(super) fn group_scalar(data: &[u8], elem_size: usize) -> Vec<u8> {
+    let n = data.len() / elem_size;
+    let mut out = vec![0u8; data.len()];
+    for plane in 0..elem_size {
+        let dst = &mut out[plane * n..(plane + 1) * n];
+        for (i, d) in dst.iter_mut().enumerate() {
+            *d = data[i * elem_size + plane];
+        }
+    }
+    out
+}
+
+pub(super) fn group_wide(data: &[u8], elem_size: usize) -> Vec<u8> {
+    if elem_size <= 1 {
+        return data.to_vec();
+    }
+    let n = data.len() / elem_size;
+    let mut out = vec![0u8; data.len()];
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + BLOCK).min(n);
+        for plane in 0..elem_size {
+            let dst = &mut out[plane * n + start..plane * n + end];
+            for (k, d) in dst.iter_mut().enumerate() {
+                *d = data[(start + k) * elem_size + plane];
+            }
+        }
+        start = end;
+    }
+    out
+}
+
+pub(super) fn ungroup_scalar(grouped: &[u8], elem_size: usize) -> Vec<u8> {
+    let n = grouped.len() / elem_size;
+    let mut out = vec![0u8; grouped.len()];
+    for plane in 0..elem_size {
+        let src = &grouped[plane * n..(plane + 1) * n];
+        for (i, &s) in src.iter().enumerate() {
+            out[i * elem_size + plane] = s;
+        }
+    }
+    out
+}
+
+pub(super) fn ungroup_wide(grouped: &[u8], elem_size: usize) -> Vec<u8> {
+    if elem_size <= 1 {
+        return grouped.to_vec();
+    }
+    let n = grouped.len() / elem_size;
+    let mut out = vec![0u8; grouped.len()];
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + BLOCK).min(n);
+        for plane in 0..elem_size {
+            let src = &grouped[plane * n + start..plane * n + end];
+            for (k, &s) in src.iter().enumerate() {
+                out[(start + k) * elem_size + plane] = s;
+            }
+        }
+        start = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wide_matches_scalar_and_inverts() {
+        for es in [1usize, 2, 4, 8] {
+            // cross the tile boundary: BLOCK + a ragged remainder
+            for n in [0usize, 1, 7, BLOCK - 1, BLOCK, BLOCK + 3] {
+                let data: Vec<u8> = (0..n * es).map(|i| (i * 31 % 251) as u8).collect();
+                let gs = group_scalar(&data, es);
+                let gw = group_wide(&data, es);
+                assert_eq!(gs, gw, "group es={es} n={n}");
+                assert_eq!(ungroup_scalar(&gs, es), data, "ungroup-s es={es} n={n}");
+                assert_eq!(ungroup_wide(&gw, es), data, "ungroup-w es={es} n={n}");
+            }
+        }
+    }
+}

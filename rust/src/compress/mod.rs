@@ -12,6 +12,10 @@
 //! [`huffman`] (entropy coding — §3.3 argues it cannot beat the packed
 //! bitmask; we implement it to check), and [`byte_group`]
 //! (Hershcovitch-style byte grouping + entropy stage, the lossless SOTA).
+//!
+//! The hot loops inside these codecs dispatch through [`kernels`] — a
+//! scalar/wide kernel layer selected once per process (`BITSNAP_KERNEL`)
+//! whose two implementations are bit-identical by contract.
 
 pub mod bitmask;
 pub mod blockwise_quant;
@@ -20,6 +24,7 @@ pub mod cluster_quant;
 pub mod coo;
 pub mod delta;
 pub mod huffman;
+pub mod kernels;
 pub mod metrics;
 pub mod naive_quant;
 pub mod prune;

@@ -353,6 +353,9 @@ impl ShardedCheckpointEngine {
                     let mut span = tracer.span_with_parent("encode_tensor", Some(encode_id));
                     span.attr("rank", rank);
                     span.attr("tensor", &e.name);
+                    // which codec kernel ran — trace-report groups its
+                    // throughput rows by (codec, kernel)
+                    span.attr("kernel", crate::compress::kernels::active().name());
                     // the worker hashes the payload it just produced, so
                     // the manifest's blob keys (and the storage layer's
                     // dedup) cost nothing on the blocking commit path

@@ -321,17 +321,25 @@ fn collect_descendants<'a>(
 }
 
 /// Aggregate per-codec encode throughput (payload bytes / encode wall)
-/// over the given `encode_tensor` spans.
+/// over the given `encode_tensor` spans. Spans carrying a `kernel`
+/// attribute (the compress kernel that ran — see
+/// [`crate::compress::kernels`]) get their own row per (codec, kernel),
+/// so a mid-run kernel switch shows up as two comparable rows instead
+/// of one blended number.
 fn render_codec_throughput(tensors: &[&TraceEvent]) -> String {
-    let mut per_codec: HashMap<&str, (u64, u64, usize)> = HashMap::new(); // bytes, us, count
+    let mut per_codec: HashMap<String, (u64, u64, usize)> = HashMap::new(); // bytes, us, count
     for e in tensors {
         let codec = e.attr("codec").unwrap_or("?");
-        let entry = per_codec.entry(codec).or_default();
+        let key = match e.attr("kernel") {
+            Some(k) => format!("{codec} [{k}]"),
+            None => codec.to_string(),
+        };
+        let entry = per_codec.entry(key).or_default();
         entry.0 += e.bytes.unwrap_or(0);
         entry.1 += e.dur_us;
         entry.2 += 1;
     }
-    let mut rows: Vec<(&str, (u64, u64, usize))> = per_codec.into_iter().collect();
+    let mut rows: Vec<(String, (u64, u64, usize))> = per_codec.into_iter().collect();
     rows.sort_by_key(|(_, (b, _, _))| std::cmp::Reverse(*b));
     let mut out = String::from("per-codec encode throughput\n");
     for (codec, (bytes, us, count)) in rows {
@@ -718,7 +726,12 @@ mod tests {
                 "encode_tensor",
                 350,
                 2500,
-                &[("rank", "0"), ("tensor", "wte.weight#mp0"), ("codec", "cluster_quant{m=16}")],
+                &[
+                    ("rank", "0"),
+                    ("tensor", "wte.weight#mp0"),
+                    ("codec", "cluster_quant{m=16}"),
+                    ("kernel", "wide"),
+                ],
                 Some(2048),
             ),
             ev(7, Some(1), "commit", 5400, 3500, &[], None),
@@ -730,7 +743,7 @@ mod tests {
         assert!(text.contains("encode_tensor"), "{text}");
         assert!(text.contains("slowest tensors"), "{text}");
         assert!(text.contains("per-codec encode throughput"), "{text}");
-        assert!(text.contains("cluster_quant{m=16}"), "{text}");
+        assert!(text.contains("cluster_quant{m=16} [wide]"), "{text}");
         assert!(text.contains("planner decisions"), "{text}");
         assert!(text.contains("[dedup: payload already in store, priced at zero]"), "{text}");
         assert!(text.contains("[switched codec]"), "{text}");

@@ -1,0 +1,259 @@
+//! The kernel layer's bit-identity contract, attacked from two sides:
+//!
+//! * differential tests — scalar vs wide on adversarial inputs
+//!   (unaligned lengths covering every `n % 8`, every supported
+//!   `elem_size`, all-/none-/randomly-changed masks, NaN/inf payloads,
+//!   empty and len-1 tensors). These pin explicit [`Kernels::with`]
+//!   handles, so they never touch the process-wide kernel and cannot
+//!   race with the tree test below.
+//! * a `BITSNAP_KERNEL` × `BITSNAP_TEST_WORKERS` determinism test:
+//!   the same save trajectory run under each kernel must leave
+//!   byte-identical storage trees (the `tests/trace_determinism.rs`
+//!   shape; the worker axis comes from the ambient CI matrix). This is
+//!   the **only** test here that calls [`set_active`] — fine even with
+//!   concurrent tests, because flipping the kernel never changes bytes,
+//!   only timing.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use bitsnap::compress::cluster_quant::normal_boundaries;
+use bitsnap::compress::delta::Policy;
+use bitsnap::compress::kernels::{self, set_active, KernelKind, Kernels};
+use bitsnap::compress::{bitmask, coo};
+use bitsnap::engine::{PersistConfig, ShardedCheckpointEngine, ShardedEngineConfig, Storage};
+use bitsnap::tensor::{StateDict, XorShiftRng};
+use bitsnap::train::Parallelism;
+
+const SCALAR: Kernels = Kernels::with(KernelKind::Scalar);
+const WIDE: Kernels = Kernels::with(KernelKind::Wide);
+
+/// Lengths covering every `n % 8` residue, the empty and len-1 edges,
+/// and a few multi-group sizes.
+const LENGTHS: [usize; 18] = [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17, 63, 64, 65, 1000, 4097];
+
+fn mk_pair(n: usize, changed: usize, es: usize, seed: u64) -> (Vec<u8>, Vec<u8>) {
+    let mut rng = XorShiftRng::new(seed);
+    let base: Vec<u8> = (0..n * es).map(|_| rng.next_u32() as u8).collect();
+    let mut curr = base.clone();
+    for i in rng.choose_indices(n, changed) {
+        curr[i * es] ^= 0x5a;
+    }
+    (base, curr)
+}
+
+#[test]
+fn scan_and_count_match_on_adversarial_inputs() {
+    for es in [1usize, 2, 4, 8] {
+        for n in LENGTHS {
+            // none / all / random change fractions
+            for (tag, changed) in [("none", 0), ("all", n), ("rand", n / 3)] {
+                let (base, curr) = mk_pair(n, changed, es, (n * 8 + es) as u64);
+                let s = SCALAR.scan_changes(&base, &curr, es);
+                let w = WIDE.scan_changes(&base, &curr, es);
+                assert_eq!(s, w, "scan diverges: es={es} n={n} {tag}");
+                assert_eq!(s.n, n);
+                assert_eq!(s.n_changed, changed, "es={es} n={n} {tag}");
+                assert_eq!(
+                    SCALAR.count_changes(&base, &curr, es),
+                    WIDE.count_changes(&base, &curr, es),
+                    "count diverges: es={es} n={n} {tag}"
+                );
+                assert_eq!(WIDE.count_changes(&base, &curr, es), changed);
+            }
+        }
+    }
+}
+
+#[test]
+fn scan_is_bitwise_on_nan_and_inf_payloads() {
+    // change detection is bit equality, so two NaNs with different
+    // payloads differ, while bit-identical NaN/inf elements do not
+    let specials = [
+        f32::NAN.to_bits(),
+        0x7fc0_0001, // NaN, different payload
+        0xffc0_0000, // negative NaN
+        f32::INFINITY.to_bits(),
+        f32::NEG_INFINITY.to_bits(),
+        0x8000_0000, // -0.0
+        0,           // +0.0
+    ];
+    let base: Vec<u8> = specials.iter().flat_map(|b| b.to_le_bytes()).collect();
+    let mut curr = base.clone();
+    // swap the two NaN payloads (elements 0 and 1) and flip -0.0 to +0.0
+    curr[0..4].copy_from_slice(&0x7fc0_0001u32.to_le_bytes());
+    curr[4..8].copy_from_slice(&f32::NAN.to_bits().to_le_bytes());
+    curr[20..24].copy_from_slice(&0u32.to_le_bytes());
+    let s = SCALAR.scan_changes(&base, &curr, 4);
+    let w = WIDE.scan_changes(&base, &curr, 4);
+    assert_eq!(s, w);
+    assert_eq!(s.n_changed, 3);
+    assert_eq!(s.bits, vec![0b0010_0011]);
+}
+
+#[test]
+fn odd_elem_sizes_fall_back_identically() {
+    for es in [3usize, 5, 7] {
+        let (base, curr) = mk_pair(100, 33, es, es as u64);
+        assert_eq!(
+            SCALAR.scan_changes(&base, &curr, es),
+            WIDE.scan_changes(&base, &curr, es),
+            "es={es}"
+        );
+    }
+}
+
+#[test]
+fn from_mask_emitters_are_kernel_independent_and_roundtrip() {
+    for (n, changed, es) in [(1usize, 1usize, 2usize), (9, 4, 2), (1000, 137, 4), (257, 257, 8)] {
+        let (base, curr) = mk_pair(n, changed, es, 42 + n as u64);
+        let sm = SCALAR.scan_changes(&base, &curr, es);
+        let wm = WIDE.scan_changes(&base, &curr, es);
+        let packed_s = bitmask::encode_packed_from_mask(&sm, &curr, es);
+        let packed_w = bitmask::encode_packed_from_mask(&wm, &curr, es);
+        assert_eq!(packed_s, packed_w);
+        assert_eq!(packed_s.len(), bitmask::packed_size(n, changed, es));
+        assert_eq!(bitmask::decode_packed(&base, &packed_s, es).unwrap(), curr);
+        let naive_s = bitmask::encode_naive_from_mask(&sm, &curr, es);
+        let naive_w = bitmask::encode_naive_from_mask(&wm, &curr, es);
+        assert_eq!(naive_s, naive_w);
+        assert_eq!(bitmask::decode_naive(&base, &naive_s, es).unwrap(), curr);
+        for width in [coo::IndexWidth::U16, coo::IndexWidth::U32] {
+            let c_s = coo::encode_from_mask(&sm, &curr, es, width).unwrap();
+            let c_w = coo::encode_from_mask(&wm, &curr, es, width).unwrap();
+            assert_eq!(c_s, c_w);
+            assert_eq!(coo::decode(&base, &c_s, es).unwrap(), curr);
+        }
+    }
+}
+
+#[test]
+fn cluster_labels_and_packing_match() {
+    let mut rng = XorShiftRng::new(0xc1a5);
+    for m in [2usize, 3, 4, 15, 16, 17, 100, 255, 256] {
+        let boundaries = normal_boundaries(m, 0.01, 0.002);
+        let mut values = rng.normal_vec(997, 0.01, 0.002); // odd length: chunk tail
+        // adversarial inserts: specials plus exact boundary hits (ties
+        // must fall the same way under both kernels)
+        values.extend([f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 0.0]);
+        if !boundaries.is_empty() {
+            values.push(boundaries[0]);
+            values.push(boundaries[boundaries.len() / 2]);
+        }
+        let mut ls = vec![0u8; values.len()];
+        let mut lw = vec![0u8; values.len()];
+        SCALAR.assign_labels(&values, &boundaries, &mut ls);
+        WIDE.assign_labels(&values, &boundaries, &mut lw);
+        assert_eq!(ls, lw, "labels diverge at m={m}");
+        for width in [2usize, 4, 8] {
+            let capped: Vec<u8> =
+                ls.iter().map(|&l| (l as usize % (1usize << width)) as u8).collect();
+            assert_eq!(
+                SCALAR.pack_labels(&capped, width),
+                WIDE.pack_labels(&capped, width),
+                "packing diverges at m={m} width={width}"
+            );
+        }
+    }
+}
+
+#[test]
+fn transpose_matches_and_inverts() {
+    let mut rng = XorShiftRng::new(0x7a);
+    for es in [1usize, 2, 4, 8] {
+        for n in [0usize, 1, 5, 4095, 4096, 4097] {
+            let data: Vec<u8> = (0..n * es).map(|_| rng.next_u32() as u8).collect();
+            let gs = SCALAR.group_bytes(&data, es);
+            let gw = WIDE.group_bytes(&data, es);
+            assert_eq!(gs, gw, "group diverges es={es} n={n}");
+            assert_eq!(SCALAR.ungroup_bytes(&gs, es), data);
+            assert_eq!(WIDE.ungroup_bytes(&gw, es), data);
+        }
+    }
+}
+
+// ---- the BITSNAP_KERNEL × BITSNAP_TEST_WORKERS tree test ------------------
+
+fn roots(tag: &str) -> (PathBuf, PathBuf) {
+    let pid = std::process::id();
+    let shm = std::env::temp_dir().join(format!("bsnp-kpar-shm-{tag}-{pid}"));
+    let store = std::env::temp_dir().join(format!("bsnp-kpar-store-{tag}-{pid}"));
+    let _ = std::fs::remove_dir_all(&shm);
+    let _ = std::fs::remove_dir_all(&store);
+    (shm, store)
+}
+
+fn snapshot_tree(root: &Path) -> BTreeMap<String, Vec<u8>> {
+    fn walk(dir: &Path, root: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
+        for entry in std::fs::read_dir(dir).unwrap() {
+            let path = entry.unwrap().path();
+            let rel = path.strip_prefix(root).unwrap().to_string_lossy().into_owned();
+            if path.is_dir() {
+                if rel == "trace" {
+                    continue;
+                }
+                walk(&path, root, out);
+            } else {
+                out.insert(rel, std::fs::read(&path).unwrap());
+            }
+        }
+    }
+    let mut out = BTreeMap::new();
+    walk(root, root, &mut out);
+    out
+}
+
+/// Drive the fixed base+delta trajectory under `kind` and snapshot the
+/// resulting store tree. Worker-pool width comes from the ambient
+/// `BITSNAP_TEST_WORKERS` (the CI matrix covers 1 and 4 against each
+/// kernel, completing the kernel × workers grid).
+fn run_under(tag: &str, kind: KernelKind) -> BTreeMap<String, Vec<u8>> {
+    set_active(kind);
+    let (shm_root, store_root) = roots(tag);
+    let storage = Storage::new(&store_root).unwrap();
+    let cfg = ShardedEngineConfig {
+        job: tag.into(),
+        parallelism: Parallelism::new(2, 2),
+        shm_root: shm_root.clone(),
+        storage: storage.clone(),
+        redundancy: 2,
+        policy: Policy::bitsnap(),
+        max_cached_iteration: 2,
+        persist: PersistConfig::from_env(),
+    };
+    let mut eng = ShardedCheckpointEngine::new(cfg).unwrap();
+    let mut sd = StateDict::synthetic_gpt(1 << 13, 5);
+    for (i, iter) in [10u64, 20, 30].into_iter().enumerate() {
+        sd.perturb_model_states(0.05, 700 + i as u64);
+        eng.save(iter, &sd).unwrap();
+    }
+    eng.flush().unwrap();
+    drop(eng);
+    let snap = snapshot_tree(&store_root);
+    let _ = std::fs::remove_dir_all(&shm_root);
+    let _ = std::fs::remove_dir_all(&store_root);
+    snap
+}
+
+#[test]
+fn kernel_choice_never_changes_persisted_bytes() {
+    let scalar = run_under("scalar", KernelKind::Scalar);
+    let wide = run_under("wide", KernelKind::Wide);
+    // restore the env-resolved default for any test scheduled after this
+    set_active(
+        std::env::var(kernels::KERNEL_ENV)
+            .ok()
+            .and_then(|v| KernelKind::parse(&v))
+            .unwrap_or(KernelKind::Wide),
+    );
+    let scalar_files: Vec<&String> = scalar.keys().collect();
+    let wide_files: Vec<&String> = wide.keys().collect();
+    assert_eq!(scalar_files, wide_files, "kernel changed the set of persisted files");
+    for (name, bytes) in &scalar {
+        assert_eq!(bytes, &wide[name], "{name} differs across kernels");
+    }
+    // the comparison covered all three artifact families
+    assert!(scalar.keys().any(|k| k.ends_with(".bsnp")), "no shard containers compared");
+    assert!(scalar.keys().any(|k| k.ends_with(".bsnm")), "no manifests compared");
+    assert!(scalar.keys().any(|k| k.starts_with("cas")), "no CAS blobs compared");
+}
