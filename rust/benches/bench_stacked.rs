@@ -1,0 +1,276 @@
+//! Stacked codec pipelines vs the best single-stage codec on a
+//! late-training sparse save (~3% of model-state elements churned) over
+//! an NFS-class link (env `WRITE_BPS`, default 100 MB/s — the regime
+//! where an entropy tail's extra encode pass buys back more write time
+//! than it costs).
+//!
+//! The planner arm is the real [`AdaptivePolicy`] warmed into its Late
+//! stage by plateaued loss telemetry; the bench asserts it picks a
+//! **>= 2-stage** pipeline for the model states, then re-encodes the
+//! identical save under that pick and under every single-stage
+//! candidate it had to beat (packed bitmask, COO at both index widths,
+//! and a bare Huffman leaf). Hard assertion: the stacked pick's
+//! model-state payload is **strictly smaller** than the best
+//! single-stage arm's.
+//!
+//! A second pair of arms drives the stacked pipeline through the full
+//! [`ShardedCheckpointEngine`] at `workers ∈ {1, 4}` and asserts the
+//! persisted artifacts are byte-identical (CRC-64 over shards +
+//! manifest) — the `arms` shape `check_bench_regression.py` re-checks.
+//!
+//! Emits `BENCH_stacked.json` (override with env `BENCH_OUT`).
+//!
+//! Run: `cargo bench --bench bench_stacked` (env N for dict size,
+//! WRITE_BPS to model a different storage tier)
+
+use std::time::Instant;
+
+use bitsnap::adapt::{
+    AdaptiveConfig, AdaptivePolicy, Calibration, CostModel, PolicySource, SaveContext,
+    StaticPolicySource,
+};
+use bitsnap::bench::{fmt_bytes, Table};
+use bitsnap::compress::delta::{
+    compress_state_dict_planned, CheckpointPlan, Policy, TensorDirective,
+};
+use bitsnap::compress::{CodecId, PipelineSpec};
+use bitsnap::engine::{
+    container, PersistConfig, ShardedCheckpointEngine, ShardedEngineConfig, Storage,
+};
+use bitsnap::tensor::{StateDict, StateKind};
+use bitsnap::train::Parallelism;
+
+/// Late-stage churn: 1 in 32 model-state elements per save.
+const CHANGE_PER_MILLE: usize = 31;
+const REPS: usize = 2;
+
+struct CodecArm {
+    pipeline: PipelineSpec,
+    /// Summed model-state payload bytes (optimizer state is raw and
+    /// identical in every arm, so it is excluded from the comparison).
+    model_bytes: usize,
+    encode_secs: f64,
+}
+
+/// Encode the (base, curr) pair with one fixed model pipeline through
+/// the planned path every arm shares; min-of-REPS wall so a preempted
+/// run cannot flip a comparison.
+fn run_codec_arm(base: &StateDict, curr: &StateDict, pipeline: PipelineSpec) -> CodecArm {
+    let mut plan = CheckpointPlan::uniform(Policy::lossless());
+    plan.set_model_pipeline(pipeline);
+    let mut model_bytes = 0usize;
+    let mut encode_secs = f64::INFINITY;
+    for _ in 0..REPS {
+        let t0 = Instant::now();
+        let (ckpt, _) = compress_state_dict_planned(curr, Some(base), &plan, 110, 100).unwrap();
+        encode_secs = encode_secs.min(t0.elapsed().as_secs_f64());
+        model_bytes = ckpt
+            .entries
+            .iter()
+            .filter(|e| e.kind == StateKind::ModelState)
+            .map(|e| e.compressed.payload.len())
+            .sum();
+    }
+    CodecArm { pipeline, model_bytes, encode_secs }
+}
+
+struct WorkerArm {
+    workers: usize,
+    compressed_bytes: usize,
+    raw_bytes: usize,
+    output_crc: u64,
+}
+
+/// Drive the stacked pipeline through the real sharded engine (base
+/// save + one sparse delta save) under the given worker-pool size and
+/// digest every persisted artifact.
+fn run_worker_arm(params: usize, pipeline: PipelineSpec, workers: usize) -> WorkerArm {
+    let pid = std::process::id();
+    let tag = format!("bench-stacked-w{workers}-{pid}");
+    let shm_root = std::env::temp_dir().join(format!("{tag}-shm"));
+    let store_root = std::env::temp_dir().join(format!("{tag}-store"));
+    let _ = std::fs::remove_dir_all(&shm_root);
+    let _ = std::fs::remove_dir_all(&store_root);
+    let storage = Storage::new(&store_root).unwrap();
+    let p = Parallelism::new(1, 1);
+    let cfg = ShardedEngineConfig {
+        job: tag.clone(),
+        parallelism: p,
+        shm_root: shm_root.clone(),
+        storage: storage.clone(),
+        redundancy: 2,
+        policy: Policy::lossless(),
+        max_cached_iteration: 2,
+        persist: PersistConfig::with_workers(workers),
+    };
+    let mut eng = ShardedCheckpointEngine::with_policy_sources(cfg, move |_| {
+        Box::new(StaticPolicySource::with_model_pipeline(Policy::lossless(), pipeline))
+    })
+    .unwrap();
+    let mut sd = StateDict::synthetic_gpt(params, 90);
+    let mut compressed_bytes = 0usize;
+    let mut raw_bytes = 0usize;
+    for (i, iter) in [100u64, 110].into_iter().enumerate() {
+        if i > 0 {
+            sd.perturb_model_states(CHANGE_PER_MILLE as f64 / 1000.0, 91);
+        }
+        let r = eng.save(iter, &sd).unwrap();
+        assert_eq!(r.encode_workers, workers);
+        compressed_bytes += r.compressed_bytes;
+        raw_bytes += r.raw_bytes;
+    }
+    eng.flush().unwrap();
+    let mut artifact_bytes = Vec::new();
+    for iter in [100u64, 110] {
+        for rank in 0..p.world() {
+            artifact_bytes.extend_from_slice(&storage.get(iter, rank).unwrap());
+        }
+        artifact_bytes.extend_from_slice(&storage.get_manifest(iter).unwrap());
+    }
+    let output_crc = container::crc64(&artifact_bytes);
+    drop(eng);
+    let _ = std::fs::remove_dir_all(&shm_root);
+    let _ = std::fs::remove_dir_all(&store_root);
+    WorkerArm { workers, compressed_bytes, raw_bytes, output_crc }
+}
+
+fn main() {
+    let params: usize = std::env::var("N").ok().and_then(|v| v.parse().ok()).unwrap_or(1 << 20);
+    let write_bps: f64 =
+        std::env::var("WRITE_BPS").ok().and_then(|v| v.parse().ok()).unwrap_or(100e6);
+    println!(
+        "== stacked vs single-stage codecs: {params} params, {CHANGE_PER_MILLE}‰ churn, \
+         write {:.0} MB/s ==\n",
+        write_bps / 1e6
+    );
+
+    let base = StateDict::synthetic_gpt(params, 90);
+    let mut curr = base.clone();
+    curr.perturb_model_states(CHANGE_PER_MILLE as f64 / 1000.0, 91);
+
+    // planner arm: the adaptive controller, warmed into its Late stage
+    // by plateaued loss, planning this exact save at this bandwidth
+    let mut policy = AdaptivePolicy::new(
+        AdaptiveConfig::default(),
+        CostModel::new(Calibration::default_host(), Some(write_bps)),
+    );
+    for i in 0..8u64 {
+        policy.telemetry(i, 2.0);
+    }
+    let plan = policy.plan(&SaveContext {
+        iteration: 110,
+        is_base: false,
+        sd: &curr,
+        base: Some(&base),
+    });
+    let picks: Vec<PipelineSpec> = curr
+        .entries()
+        .iter()
+        .filter(|e| e.kind == StateKind::ModelState)
+        .filter_map(|e| match plan.directive(&e.name) {
+            TensorDirective::Delta(s) => Some(s),
+            _ => None,
+        })
+        .collect();
+    let stacked = *picks
+        .iter()
+        .find(|s| !s.tail().is_empty())
+        .expect("planner must stack an entropy stage on a late sparse save over a slow link");
+    println!("planner pick for model states: {stacked} ({} stages)\n", 1 + stacked.tail().len());
+
+    // re-encode the identical save under the pick and under every
+    // single-stage candidate it had to beat
+    let single_stage = [
+        PipelineSpec::of(CodecId::BitmaskPacked),
+        PipelineSpec::of(CodecId::CooU16),
+        PipelineSpec::of(CodecId::CooU32),
+        PipelineSpec::of(CodecId::Huffman),
+    ];
+    let stacked_arm = run_codec_arm(&base, &curr, stacked);
+    let singles: Vec<CodecArm> =
+        single_stage.iter().map(|&s| run_codec_arm(&base, &curr, s)).collect();
+
+    let mut table = Table::new(&["pipeline", "model payload", "encode wall", "save (modeled)"]);
+    for arm in std::iter::once(&stacked_arm).chain(&singles) {
+        table.row(&[
+            arm.pipeline.label(),
+            fmt_bytes(arm.model_bytes),
+            format!("{:.1} ms", arm.encode_secs * 1e3),
+            format!("{:.3} s", arm.encode_secs + arm.model_bytes as f64 / write_bps),
+        ]);
+    }
+    table.print();
+
+    let best_single = singles.iter().min_by_key(|a| a.model_bytes).unwrap();
+    println!(
+        "\nstacked {} = {} vs best single-stage {} = {}",
+        stacked_arm.pipeline.label(),
+        fmt_bytes(stacked_arm.model_bytes),
+        best_single.pipeline.label(),
+        fmt_bytes(best_single.model_bytes),
+    );
+    assert!(
+        stacked_arm.model_bytes < best_single.model_bytes,
+        "the stacked pipeline must strictly beat every single-stage candidate on bytes \
+         ({} vs {})",
+        stacked_arm.model_bytes,
+        best_single.model_bytes
+    );
+
+    // determinism arms: the same stacked save through the full engine —
+    // the worker pool must never change a persisted byte
+    let serial = run_worker_arm(params, stacked, 1);
+    let pooled = run_worker_arm(params, stacked, 4);
+    assert_eq!(
+        serial.compressed_bytes, pooled.compressed_bytes,
+        "workers must not change compressed byte counts"
+    );
+    assert_eq!(
+        serial.output_crc, pooled.output_crc,
+        "workers must not change a single persisted byte"
+    );
+    println!(
+        "engine arms byte-identical across workers 1/4 (crc64 {:#018x}, {} compressed)",
+        serial.output_crc,
+        fmt_bytes(serial.compressed_bytes),
+    );
+
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_stacked.json".to_string());
+    let single_json = singles
+        .iter()
+        .map(|a| {
+            format!(
+                "    {{\"pipeline\": \"{}\", \"model_bytes\": {}, \"encode_secs\": {:.6}}}",
+                a.pipeline,
+                a.model_bytes,
+                a.encode_secs
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n");
+    let arm_json = |a: &WorkerArm| {
+        format!(
+            "    {{\"workers\": {}, \"compressed_bytes\": {}, \"ratio\": {:.4}}}",
+            a.workers,
+            a.compressed_bytes,
+            a.raw_bytes as f64 / a.compressed_bytes.max(1) as f64
+        )
+    };
+    let json = format!(
+        "{{\n  \"params\": {params},\n  \"write_bps\": {write_bps},\n  \"change_per_mille\": \
+         {CHANGE_PER_MILLE},\n  \"planner\": {{\"pipeline\": \"{}\", \"n_stages\": {}, \
+         \"model_bytes\": {}}},\n  \"single_stage\": [\n{}\n  ],\n  \
+         \"best_single_model_bytes\": {},\n  \"stacked_win_ratio\": {:.4},\n  \"arms\": \
+         [\n{},\n{}\n  ],\n  \"identical_output\": true\n}}\n",
+        stacked,
+        1 + stacked.tail().len(),
+        stacked_arm.model_bytes,
+        single_json,
+        best_single.model_bytes,
+        best_single.model_bytes as f64 / stacked_arm.model_bytes.max(1) as f64,
+        arm_json(&serial),
+        arm_json(&pooled),
+    );
+    std::fs::write(&out_path, json).expect("write bench json");
+    println!("wrote {out_path}");
+}

@@ -1,0 +1,198 @@
+#!/usr/bin/env python3
+"""Generate the PR-9-era pipeline golden fixtures under rust/tests/fixtures/.
+
+Three format generations are pinned:
+
+* ``pr9_params.bsnp`` — container VERSION 2 (codec params, no pipeline
+  tail): what the engine wrote between the CodecSpec refactor and the
+  staged-pipeline redesign.
+* ``pr9_params_upgraded.bsnp`` — the exact VERSION 4 bytes reserializing
+  that v2 container must produce (same entries, empty stage tails), so
+  the v2→v4 upgrade path is pinned byte-for-byte.
+* ``pr9_stacked.bsnp`` — container VERSION 4 with staged pipelines
+  (``raw|huffman`` and ``raw|byte_group|huffman`` tails), plus
+  ``pr9_stacked_expected.bin`` with the exact decoded bytes.
+* ``pr9_manifest_cas.bsnm`` — manifest VERSION 3 (CAS era: blob keys
+  present, presence encoded in the version number), which must upgrade
+  to the VERSION 4 flag-byte layout on reserialization.
+
+The staged payloads use a degenerate Huffman table with all 256 code
+lengths set to 8: canonical code assignment then maps every symbol to
+itself, so the bitstream equals the raw bytes and the fixture is
+authorable (and auditable) by hand while still exercising the real
+decoder.
+
+Run from rust/: python3 scripts/gen_pr9_fixtures.py
+"""
+
+import struct
+from pathlib import Path
+
+FIXTURES = Path(__file__).resolve().parent.parent / "tests" / "fixtures"
+
+# ---------------------------------------------------------------- crc64
+POLY = 0x42F0E1EBA9EA3693
+MASK = (1 << 64) - 1
+TABLE = []
+for i in range(256):
+    crc = (i << 56) & MASK
+    for _ in range(8):
+        crc = ((crc << 1) ^ POLY) & MASK if crc & (1 << 63) else (crc << 1) & MASK
+    TABLE.append(crc)
+
+
+def crc64(data: bytes) -> int:
+    crc = 0
+    for b in data:
+        crc = TABLE[((crc >> 56) ^ b) & 0xFF] ^ ((crc << 8) & MASK)
+    return crc
+
+
+assert crc64(b"123456789") == 0x6C40DF5F0B497347, "CRC-64/ECMA-182 self-check"
+
+# -------------------------------------------------------------- tag maps
+MODEL, MASTER = 0, 1  # StateKind
+F32, F16 = 0, 1  # DType
+RAW, BITMASK_PACKED, HUFFMAN_LEAF = 0, 1, 8  # CodecId
+PARAMS_NONE = 0  # CodecParams family tag
+STAGE_BYTE_GROUP, STAGE_HUFFMAN = 0, 1  # StageId
+
+
+def u16(v):
+    return struct.pack("<H", v)
+
+
+def u32(v):
+    return struct.pack("<I", v)
+
+
+def u64(v):
+    return struct.pack("<Q", v)
+
+
+# ------------------------------------------------- stage transforms
+def huff_identity(data: bytes) -> bytes:
+    """huffman::encode framing with the all-lengths-8 table.
+
+    Canonical code construction sorts symbols by (length, value); with a
+    uniform length the code for symbol ``s`` is ``s`` itself, MSB-first
+    over 8 bits — the bitstream is the input verbatim.
+    """
+    return u64(len(data)) + bytes([8] * 256) + data
+
+
+def byte_group_frame(data: bytes, elem_size: int) -> bytes:
+    """ByteGroupStage frame: ``es u8 | group_bytes(prefix) | remainder``."""
+    es = max(1, min(elem_size, 255))
+    split = len(data) - len(data) % es
+    prefix = data[:split]
+    grouped = b"".join(prefix[p::es] for p in range(es))
+    return bytes([es]) + grouped + data[split:]
+
+
+# ------------------------------------------------- container writers
+def entry_v2(name: str, kind: int, dtype: int, codec: int, shape, payload: bytes) -> bytes:
+    out = u16(len(name)) + name.encode()
+    out += bytes([kind, dtype, codec, PARAMS_NONE])
+    out += bytes([len(shape)]) + b"".join(u64(d) for d in shape)
+    out += u64(len(payload)) + payload
+    return out
+
+
+def entry_v4(name: str, kind: int, dtype: int, codec: int, tail, shape, payload: bytes) -> bytes:
+    out = u16(len(name)) + name.encode()
+    out += bytes([kind, dtype, codec, PARAMS_NONE, len(tail)]) + bytes(tail)
+    out += bytes([len(shape)]) + b"".join(u64(d) for d in shape)
+    out += u64(len(payload)) + payload
+    return out
+
+
+def container(version: int, iteration: int, base_iteration: int, entries) -> bytes:
+    body = b"BSNP" + u32(version) + u64(iteration) + u64(base_iteration)
+    body += bytes([0 if iteration == base_iteration else 1])
+    body += u32(len(entries)) + b"".join(entries)
+    return body + u64(crc64(body))
+
+
+# ---------------------------------------------- v2 container + v4 twin
+W_F32 = struct.pack("<8f", 1.0, -2.0, 0.5, 0.25, 3.0, -0.75, 8.0, 0.125)
+# f16 bit patterns chosen directly (values are irrelevant — raw/huffman
+# paths never interpret them); a skewed byte histogram keeps it realistic
+B_F16 = bytes([0x00, 0x3C, 0x00, 0x3C, 0x00, 0xBC, 0x01, 0x3C] * 4)  # 32 bytes
+
+params_entries = [
+    ("layers.0.weight", MODEL, F32, RAW, [], [8], W_F32),
+    ("layers.0.bias", MODEL, F16, HUFFMAN_LEAF, [], [16], huff_identity(B_F16)),
+]
+v2 = container(2, 300, 300, [entry_v2(n, k, d, c, s, p) for n, k, d, c, _, s, p in params_entries])
+v4_twin = container(
+    4, 300, 300, [entry_v4(n, k, d, c, t, s, p) for n, k, d, c, t, s, p in params_entries]
+)
+(FIXTURES / "pr9_params.bsnp").write_bytes(v2)
+(FIXTURES / "pr9_params_upgraded.bsnp").write_bytes(v4_twin)
+(FIXTURES / "pr9_params_expected.bin").write_bytes(W_F32 + B_F16)
+
+# ------------------------------------------------- v4 staged container
+S_F32 = struct.pack("<12f", *[(-1) ** i * (i + 1) / 4.0 for i in range(12)])
+S_F16 = bytes([0x11, 0x22, 0x33, 0x44, 0x55, 0x66, 0x77, 0x88] * 2)  # 16 bytes
+M_F32 = struct.pack("<6f", 0.5, 0.5, 1.5, -1.5, 2.5, -2.5)
+
+stacked_entries = [
+    # raw leaf | huffman tail
+    ("layers.0.weight", MODEL, F32, RAW, [STAGE_HUFFMAN], [12], huff_identity(S_F32)),
+    # raw leaf | byte_group | huffman tails (f16 => element size 2)
+    (
+        "layers.0.bias",
+        MODEL,
+        F16,
+        RAW,
+        [STAGE_BYTE_GROUP, STAGE_HUFFMAN],
+        [8],
+        huff_identity(byte_group_frame(S_F16, 2)),
+    ),
+    # degenerate no-tail pipeline rides in the same container
+    ("optimizer.0.master", MASTER, F32, RAW, [], [6], M_F32),
+]
+v4_stacked = container(
+    4, 400, 400, [entry_v4(n, k, d, c, t, s, p) for n, k, d, c, t, s, p in stacked_entries]
+)
+(FIXTURES / "pr9_stacked.bsnp").write_bytes(v4_stacked)
+(FIXTURES / "pr9_stacked_expected.bin").write_bytes(S_F32 + S_F16 + M_F32)
+
+# --------------------------------------------------- v3 (CAS) manifest
+def manifest_entry_v3(name, kind, dtype, shape, stage, bounds, codecs, blobs) -> bytes:
+    out = u16(len(name)) + name.encode()
+    out += bytes([kind, dtype, len(shape)]) + b"".join(u64(d) for d in shape)
+    out += u32(stage) + b"".join(u64(b) for b in bounds)
+    out += b"".join(bytes([c, PARAMS_NONE]) for c in codecs)
+    out += b"".join(u64(h) + u64(n) for h, n in blobs)
+    return out
+
+
+m_entries = [
+    manifest_entry_v3(
+        "layers.0.weight",
+        MODEL,
+        F32,
+        [64],
+        0,
+        [0, 32, 64],
+        [BITMASK_PACKED, RAW],
+        [(0x1122334455667788, 100), (0x99AABBCCDDEEFF00, 132)],
+    ),
+    manifest_entry_v3(
+        "optimizer.0.master",
+        MASTER,
+        F32,
+        [64],
+        0,
+        [0, 32, 64],
+        [RAW, RAW],
+        [(0x0123456789ABCDEF, 132), (0x99AABBCCDDEEFF00, 132)],
+    ),
+]
+m_body = b"BSNM" + u32(3) + u64(400) + u64(300) + u32(2) + u32(1) + u32(len(m_entries))
+m_body += b"".join(m_entries)
+(FIXTURES / "pr9_manifest_cas.bsnm").write_bytes(m_body + u64(crc64(m_body)))
+
+print("wrote pr9 fixtures to", FIXTURES)

@@ -18,7 +18,7 @@
 use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 
-use crate::compress::{bitmask, cluster_quant, coo, CodecId, CodecSpec};
+use crate::compress::{bitmask, cluster_quant, coo, huffman, CodecId, PipelineSpec, StageId};
 use crate::engine::Storage;
 use crate::obs::Metrics;
 use crate::tensor::{HostTensor, XorShiftRng};
@@ -58,7 +58,7 @@ impl Calibration {
         t.insert(CodecId::NaiveQuant8, 1.5e9);
         t.insert(CodecId::BlockQuant8, 1.2e9);
         t.insert(CodecId::Huffman, 0.25e9);
-        t.insert(CodecId::ByteGroupZstd, 0.3e9);
+        t.insert(CodecId::ByteGroupHuff, 0.3e9);
         t.insert(CodecId::Prune, 0.8e9);
         Self { encode_bps: t }
     }
@@ -222,10 +222,10 @@ impl SharedCalibration {
     }
 }
 
-/// Predicted cost of compressing one tensor with one codec spec.
+/// Predicted cost of compressing one tensor with one codec pipeline.
 #[derive(Clone, Copy, Debug)]
 pub struct CostEstimate {
-    pub spec: CodecSpec,
+    pub spec: PipelineSpec,
     /// Predicted payload bytes.
     pub bytes: usize,
     pub encode_secs: f64,
@@ -299,34 +299,92 @@ impl CostModel {
     }
 
     /// Predicted payload bytes for `spec` on the probed tensor — the
-    /// analytic size formulas as a function of the spec's parameters
-    /// (cluster count, block size, prune threshold, COO index width).
-    pub fn predicted_bytes(&self, spec: CodecSpec, p: &TensorProbe) -> usize {
+    /// leaf codecs' analytic size formulas as a function of the head's
+    /// parameters (cluster count, block size, prune threshold, COO index
+    /// width), then the stage model folded over the tail
+    /// ([`CostModel::staged_bytes`]).
+    pub fn predicted_bytes(&self, spec: impl Into<PipelineSpec>, p: &TensorProbe) -> usize {
+        let spec = spec.into();
+        let head = spec.head;
         let n = p.elems;
         let es = p.elem_size;
         let changed = p.estimated_changed();
-        match spec.id {
+        let leaf = match head.id {
             CodecId::Raw => n * es,
             CodecId::BitmaskPacked => bitmask::packed_size(n, changed, es),
             CodecId::BitmaskNaive => bitmask::naive_size(n, changed, es),
             CodecId::CooU16 => coo::u16_size(n, changed, es),
             CodecId::CooU32 => coo::u32_size(n, changed, es),
             CodecId::ClusterQuant => {
-                let m = spec.clusters().unwrap_or(cluster_quant::DEFAULT_CLUSTERS);
+                let m = head.clusters().unwrap_or(cluster_quant::DEFAULT_CLUSTERS);
                 cluster_quant::analytic_size(n, m)
             }
             CodecId::NaiveQuant8 => 16 + n,
-            CodecId::BlockQuant8 => 24 + n + 8 * n.div_ceil(spec.block_size()),
+            CodecId::BlockQuant8 => 24 + n + 8 * n.div_ceil(head.block_size()),
             // entropy coders approach the sampled byte entropy plus table
-            // overhead; byte grouping typically shaves a little more
+            // overhead; byte grouping's per-plane tables typically shave
+            // a little more at the price of es tables
             CodecId::Huffman => 1024 + ((n * es) as f64 * p.byte_entropy / 8.0).ceil() as usize,
-            CodecId::ByteGroupZstd => {
-                256 + ((n * es) as f64 * p.byte_entropy / 8.0 * 0.95).ceil() as usize
+            CodecId::ByteGroupHuff => {
+                9 + es * (8 + huffman::HEADER_BYTES)
+                    + ((n * es) as f64 * p.byte_entropy / 8.0 * 0.95).ceil() as usize
             }
             CodecId::Prune => {
-                16 + n.div_ceil(8) + 8 + ((n as f64) * spec.keep_fraction()).ceil() as usize
+                16 + n.div_ceil(8) + 8 + ((n as f64) * head.keep_fraction()).ceil() as usize
             }
+        };
+        self.staged_bytes(spec, p, leaf)
+    }
+
+    /// Fold the tail-stage size model over a leaf payload prediction.
+    ///
+    /// The byte-group stage is size-preserving (+1 frame byte). The
+    /// Huffman stage is priced from the payload's *composition*: a delta
+    /// head's payload splits into changed-value bytes (compressible to
+    /// the probe's sampled `byte_entropy`) and structural bytes — for
+    /// bitmask heads a mask whose per-byte entropy is the binary entropy
+    /// of the delta density (nearly-all-zero masks on late-stage sparse
+    /// saves are exactly where stacking wins), for COO heads
+    /// incompressible indices. Both factors floor at 1/8 (Huffman spends
+    /// ≥ 1 bit per byte — the paper's §3.3 argument) and cap at 1.
+    fn staged_bytes(&self, spec: PipelineSpec, p: &TensorProbe, leaf: usize) -> usize {
+        if spec.tail().is_empty() {
+            return leaf;
         }
+        let es = p.elem_size;
+        let value_bytes = (p.estimated_changed() * es).min(leaf);
+        let density = if p.elems > 0 { p.estimated_changed() as f64 / p.elems as f64 } else { 0.0 };
+        let binary_entropy = if density <= 0.0 || density >= 1.0 {
+            0.0
+        } else {
+            -density * density.log2() - (1.0 - density) * (1.0 - density).log2()
+        };
+        let (values, structural, s_factor) = match spec.head.id {
+            CodecId::BitmaskPacked | CodecId::BitmaskNaive => {
+                (value_bytes, leaf - value_bytes, binary_entropy)
+            }
+            CodecId::CooU16 | CodecId::CooU32 => (value_bytes, leaf - value_bytes, 1.0),
+            CodecId::Raw => (leaf, 0, 1.0),
+            // already-coded or quantized payloads: assume incompressible
+            // (the planner never stacks these; parsing allows it, and a
+            // pessimistic prediction keeps the choice honest)
+            _ => (0, leaf, 1.0),
+        };
+        let v_factor = (p.byte_entropy / 8.0).clamp(0.125, 1.0);
+        let s_factor = s_factor.clamp(0.125, 1.0);
+        let mut bytes = leaf;
+        for st in spec.tail() {
+            bytes = match st {
+                StageId::ByteGroup => bytes + 1,
+                StageId::Huffman => {
+                    let coded = structural as f64 * s_factor + values as f64 * v_factor;
+                    // later stages see already-coded bytes: never predict
+                    // a second entropy pass below the first one's output
+                    huffman::HEADER_BYTES + (coded.ceil() as usize).min(bytes)
+                }
+            };
+        }
+        bytes
     }
 
     /// Total predicted payload bytes for a set of per-tensor codec
@@ -340,8 +398,8 @@ impl CostModel {
     /// ([`crate::adapt::policy::DecisionRecord::deduped`]); this is the
     /// aggregate form for report tooling that starts from picks rather
     /// than a decision log.
-    pub fn predicted_unique_bytes(&self, picks: &[(CodecSpec, &TensorProbe)]) -> usize {
-        let mut seen: HashSet<(u64, usize, usize, CodecSpec)> = HashSet::new();
+    pub fn predicted_unique_bytes(&self, picks: &[(PipelineSpec, &TensorProbe)]) -> usize {
+        let mut seen: HashSet<(u64, usize, usize, PipelineSpec)> = HashSet::new();
         let mut total = 0usize;
         for &(spec, p) in picks {
             if seen.insert(p.payload_identity(spec)) {
@@ -355,22 +413,39 @@ impl CostModel {
     /// throughput is calibrated per codec *family* — parameters move the
     /// payload size, not the order-of-magnitude encode speed — and
     /// scaled by the engine's encode-worker count (the calibration is
-    /// per-worker throughput).
-    pub fn estimate(&self, spec: impl Into<CodecSpec>, p: &TensorProbe) -> CostEstimate {
+    /// per-worker throughput). Tail stages charge their own calibrated
+    /// throughput ([`CodecId::Huffman`] / [`CodecId::ByteGroupHuff`]
+    /// rows) over the predicted bytes *entering* each stage — payloads,
+    /// not raw tensor bytes, which is why stacking is affordable at all.
+    pub fn estimate(&self, spec: impl Into<PipelineSpec>, p: &TensorProbe) -> CostEstimate {
         let spec = spec.into();
-        let bytes = self.predicted_bytes(spec, p);
-        let effective_bps = self.calibration.encode_bps(spec.id) * self.encode_workers as f64;
-        CostEstimate {
-            spec,
-            bytes,
-            encode_secs: p.raw_bytes() as f64 / effective_bps,
-            write_secs: bytes as f64 / self.write_bps,
+        let workers = self.encode_workers as f64;
+        let head_bps = self.calibration.encode_bps(spec.head.id) * workers;
+        let mut encode_secs = p.raw_bytes() as f64 / head_bps;
+        // rebuild the per-stage byte trajectory to charge each stage for
+        // its actual input size
+        let leaf = self.predicted_bytes(PipelineSpec::of(spec.head), p);
+        let mut stage_input = leaf;
+        let mut staged = PipelineSpec::of(spec.head);
+        for st in spec.tail() {
+            let stage_codec = match st {
+                StageId::ByteGroup => CodecId::ByteGroupHuff,
+                StageId::Huffman => CodecId::Huffman,
+            };
+            encode_secs +=
+                stage_input as f64 / (self.calibration.encode_bps(stage_codec) * workers);
+            let mut tail: Vec<StageId> = staged.tail().to_vec();
+            tail.push(*st);
+            staged = PipelineSpec::stacked(spec.head, &tail);
+            stage_input = self.staged_bytes(staged, p, leaf);
         }
+        let bytes = stage_input;
+        CostEstimate { spec, bytes, encode_secs, write_secs: bytes as f64 / self.write_bps }
     }
 
     /// Cheapest candidate by predicted total save time (payload bytes as
     /// the tiebreak). Panics on an empty candidate list.
-    pub fn best(&self, candidates: &[CodecSpec], p: &TensorProbe) -> CostEstimate {
+    pub fn best(&self, candidates: &[PipelineSpec], p: &TensorProbe) -> CostEstimate {
         assert!(!candidates.is_empty(), "cost model needs at least one candidate");
         let mut best: Option<CostEstimate> = None;
         for &c in candidates {
@@ -397,8 +472,8 @@ mod tests {
     use crate::compress::{compress_delta, CompressedTensor};
     use crate::tensor::StateKind;
 
-    fn specs(ids: &[CodecId]) -> Vec<CodecSpec> {
-        ids.iter().map(|&id| CodecSpec::of(id)).collect()
+    fn specs(ids: &[CodecId]) -> Vec<PipelineSpec> {
+        ids.iter().map(|&id| PipelineSpec::of(id)).collect()
     }
 
     fn exact_probe(base: &HostTensor, curr: &HostTensor) -> TensorProbe {
@@ -426,7 +501,7 @@ mod tests {
         let m = CostModel::new(Calibration::default_host(), None);
         for codec in [CodecId::BitmaskPacked, CodecId::BitmaskNaive, CodecId::CooU16] {
             let c: CompressedTensor = compress_delta(codec, &base, &curr).unwrap();
-            assert_eq!(m.predicted_bytes(CodecSpec::of(codec), &p), c.payload.len(), "{codec:?}");
+            assert_eq!(m.predicted_bytes(codec, &p), c.payload.len(), "{codec:?}");
         }
     }
 
@@ -441,10 +516,10 @@ mod tests {
         ]);
         let (base, curr) = perturbed_pair(50_000, 1000); // 2% changed
         let sparse = m.best(&candidates, &exact_probe(&base, &curr));
-        assert_eq!(sparse.spec.id, CodecId::BitmaskPacked, "2% changed");
+        assert_eq!(sparse.spec.head.id, CodecId::BitmaskPacked, "2% changed");
         let (base, curr) = perturbed_pair(50_000, 47_500); // 95% changed
         let dense = m.best(&candidates, &exact_probe(&base, &curr));
-        assert_eq!(dense.spec, CodecSpec::raw(), "95% changed");
+        assert_eq!(dense.spec, PipelineSpec::raw(), "95% changed");
     }
 
     #[test]
@@ -455,9 +530,9 @@ mod tests {
         let p = exact_probe(&base, &curr);
         let candidates = specs(&[CodecId::Raw, CodecId::BitmaskPacked]);
         let nvme = CostModel::new(Calibration::default_host(), Some(3500e6));
-        assert_eq!(nvme.best(&candidates, &p).spec.id, CodecId::Raw);
+        assert_eq!(nvme.best(&candidates, &p).spec.head.id, CodecId::Raw);
         let nfs = CostModel::new(Calibration::default_host(), Some(100e6));
-        assert_eq!(nfs.best(&candidates, &p).spec.id, CodecId::BitmaskPacked);
+        assert_eq!(nfs.best(&candidates, &p).spec.head.id, CodecId::BitmaskPacked);
     }
 
     #[test]
@@ -494,9 +569,9 @@ mod tests {
         let p = exact_probe(&base, &curr);
         let candidates = specs(&[CodecId::Raw, CodecId::BitmaskPacked]);
         let nvme = CostModel::new(Calibration::default_host(), Some(3500e6));
-        assert_eq!(nvme.best(&candidates, &p).spec.id, CodecId::Raw);
+        assert_eq!(nvme.best(&candidates, &p).spec.head.id, CodecId::Raw);
         let nvme8 = nvme.clone().with_encode_workers(8);
-        assert_eq!(nvme8.best(&candidates, &p).spec.id, CodecId::BitmaskPacked);
+        assert_eq!(nvme8.best(&candidates, &p).spec.head.id, CodecId::BitmaskPacked);
     }
 
     #[test]
@@ -504,13 +579,13 @@ mod tests {
         let (base, curr) = perturbed_pair(10_000, 800);
         let p = exact_probe(&base, &curr);
         let m = CostModel::new(Calibration::default_host(), None);
-        let spec = CodecSpec::of(CodecId::BitmaskPacked);
+        let spec = PipelineSpec::of(CodecId::BitmaskPacked);
         let one = m.predicted_bytes(spec, &p);
         // a tied pair (same probe twice) prices as one payload
         let deduped = m.predicted_unique_bytes(&[(spec, &p), (spec, &p)]);
         assert_eq!(deduped, one);
         // same content under a *different* spec is a different payload
-        let raw = CodecSpec::raw();
+        let raw = PipelineSpec::raw();
         let both = m.predicted_unique_bytes(&[(spec, &p), (raw, &p)]);
         assert_eq!(both, one + m.predicted_bytes(raw, &p));
         // genuinely different content is summed
@@ -567,5 +642,71 @@ mod tests {
         let after = b.calibration().encode_bps(CodecId::Raw);
         assert!(after < before, "shared update not visible: {before} -> {after}");
         assert_eq!(shared.snapshot().encode_bps(CodecId::Raw), after);
+    }
+
+    #[test]
+    fn stacked_prediction_tracks_the_encoder_and_beats_the_leaf_when_sparse() {
+        // 2% density: the packed bitmask's payload is mostly zero mask
+        // bytes, so the huffman stage should be predicted (and measured)
+        // to shrink it well below the leaf size
+        let (base, curr) = perturbed_pair(50_000, 1000);
+        let p = exact_probe(&base, &curr);
+        let m = CostModel::new(Calibration::default_host(), None);
+        let leaf = PipelineSpec::of(CodecId::BitmaskPacked);
+        let stacked = PipelineSpec::stacked(CodecId::BitmaskPacked, &[StageId::Huffman]);
+        let predicted_leaf = m.predicted_bytes(leaf, &p);
+        let predicted_stacked = m.predicted_bytes(stacked, &p);
+        assert!(
+            predicted_stacked < predicted_leaf,
+            "stacked {predicted_stacked} vs leaf {predicted_leaf}"
+        );
+        // the prediction ranks; it does not bound. The entropy-based model
+        // ignores Huffman's redundancy on the skewed mask bytes and the
+        // penalty of one shared table across mask and value regions, so
+        // hold it to a 2x band around the real encoder, not to one side
+        let actual = compress_delta(stacked, &base, &curr).unwrap().payload.len();
+        assert!(
+            predicted_stacked * 2 >= actual && predicted_stacked < actual * 2,
+            "predicted {predicted_stacked} vs actual {actual}"
+        );
+        // and the measured stacked payload really does beat the leaf's
+        let actual_leaf = compress_delta(leaf, &base, &curr).unwrap().payload.len();
+        assert!(actual < actual_leaf, "stacked {actual} vs leaf {actual_leaf}");
+    }
+
+    #[test]
+    fn stage_costs_charge_payload_not_raw_bytes() {
+        let (base, curr) = perturbed_pair(50_000, 1000);
+        let p = exact_probe(&base, &curr);
+        let m = CostModel::new(Calibration::default_host(), Some(1e9));
+        let leaf = m.estimate(CodecId::BitmaskPacked, &p);
+        let stacked =
+            m.estimate(PipelineSpec::stacked(CodecId::BitmaskPacked, &[StageId::Huffman]), &p);
+        // the stage adds encode time, but charged over the small payload:
+        // far less than a whole-tensor huffman pass would cost
+        assert!(stacked.encode_secs > leaf.encode_secs);
+        let whole_tensor_huffman = p.raw_bytes() as f64 / 0.25e9;
+        assert!(stacked.encode_secs - leaf.encode_secs < whole_tensor_huffman / 2.0);
+        assert!(stacked.bytes < leaf.bytes);
+    }
+
+    #[test]
+    fn stacking_wins_only_when_write_bandwidth_is_scarce() {
+        // the hysteresis-protecting property the planner relies on: at
+        // the default NVMe bandwidth the extra encode pass is never worth
+        // the saved bytes, on an NFS-class link it is
+        let (base, curr) = perturbed_pair(50_000, 1000); // 2% changed
+        let p = exact_probe(&base, &curr);
+        let candidates = [
+            PipelineSpec::raw(),
+            PipelineSpec::of(CodecId::BitmaskPacked),
+            PipelineSpec::of(CodecId::CooU16),
+            PipelineSpec::stacked(CodecId::BitmaskPacked, &[StageId::Huffman]),
+        ];
+        let nvme = CostModel::new(Calibration::default_host(), Some(3500e6));
+        assert!(nvme.best(&candidates, &p).spec.tail().is_empty(), "NVMe must not stack");
+        let nfs = CostModel::new(Calibration::default_host(), Some(100e6));
+        let pick = nfs.best(&candidates, &p);
+        assert_eq!(pick.spec, PipelineSpec::stacked(CodecId::BitmaskPacked, &[StageId::Huffman]));
     }
 }

@@ -38,6 +38,7 @@ pub use sim::{
 pub use stage::{StageConfig, StageDetector, TelemetrySample, TrainingStage};
 
 use crate::compress::delta::{CheckpointPlan, Policy};
+use crate::compress::PipelineSpec;
 use crate::tensor::StateDict;
 
 /// Everything a policy source may inspect when planning one save.
@@ -106,14 +107,26 @@ pub trait PolicySource: Send {
 }
 
 /// The trivial policy source: the same checkpoint-wide [`Policy`] every
-/// save — exactly the pre-adaptive engine behaviour.
+/// save — exactly the pre-adaptive engine behaviour. Optionally carries
+/// one user-chosen codec pipeline for model states (`train --codec`),
+/// which overrides the legacy model policy on every save.
 pub struct StaticPolicySource {
     policy: Policy,
+    model_pipeline: Option<PipelineSpec>,
 }
 
 impl StaticPolicySource {
     pub fn new(policy: Policy) -> Self {
-        Self { policy }
+        Self { policy, model_pipeline: None }
+    }
+
+    /// Same static policy, but model states are compressed with the given
+    /// pipeline (e.g. parsed from `train --codec delta|huffman`).
+    /// Delta-headed pipelines degrade to raw on base saves, exactly like
+    /// the legacy model policies
+    /// ([`CheckpointPlan::set_model_pipeline`]).
+    pub fn with_model_pipeline(policy: Policy, pipeline: PipelineSpec) -> Self {
+        Self { policy, model_pipeline: Some(pipeline) }
     }
 
     pub fn policy(&self) -> Policy {
@@ -123,11 +136,18 @@ impl StaticPolicySource {
 
 impl PolicySource for StaticPolicySource {
     fn plan(&mut self, _ctx: &SaveContext<'_>) -> CheckpointPlan {
-        CheckpointPlan::uniform(self.policy)
+        let mut plan = CheckpointPlan::uniform(self.policy);
+        if let Some(p) = self.model_pipeline {
+            plan.set_model_pipeline(p);
+        }
+        plan
     }
 
     fn describe(&self) -> String {
-        format!("static({:?}/{:?})", self.policy.model, self.policy.optimizer)
+        match self.model_pipeline {
+            Some(p) => format!("static(model={p}, {:?})", self.policy.optimizer),
+            None => format!("static({:?}/{:?})", self.policy.model, self.policy.optimizer),
+        }
     }
 }
 
@@ -146,5 +166,16 @@ mod tests {
         assert_eq!(plan.directive("layers.0.weight"), TensorDirective::Inherit);
         assert_eq!(plan.default_policy().model, Policy::lossless().model);
         assert!(src.describe().starts_with("static("));
+    }
+
+    #[test]
+    fn static_source_carries_a_model_pipeline() {
+        let pipe: PipelineSpec = "delta|huffman".parse().unwrap();
+        let mut src = StaticPolicySource::with_model_pipeline(Policy::bitsnap(), pipe);
+        let sd = StateDict::synthetic_gpt(1 << 12, 2);
+        let ctx = SaveContext { iteration: 0, is_base: true, sd: &sd, base: None };
+        let plan = src.plan(&ctx);
+        assert_eq!(plan.model_pipeline(), Some(pipe));
+        assert!(src.describe().contains("delta|huffman"), "{}", src.describe());
     }
 }

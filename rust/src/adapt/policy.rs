@@ -33,7 +33,7 @@
 use std::collections::{HashMap, HashSet};
 
 use crate::compress::delta::{CheckpointPlan, Policy, TensorDirective};
-use crate::compress::{cluster_quant, CodecId, CodecSpec};
+use crate::compress::{cluster_quant, CodecId, CodecSpec, PipelineSpec, StageId};
 use crate::tensor::StateKind;
 
 use super::cost::{Calibration, CostModel, SharedCalibration};
@@ -154,7 +154,7 @@ pub struct DecisionRecord {
     pub stage: TrainingStage,
     pub name: String,
     pub kind: StateKind,
-    pub spec: CodecSpec,
+    pub spec: PipelineSpec,
     pub predicted_bytes: usize,
     pub predicted_secs: f64,
     pub raw_bytes: usize,
@@ -177,10 +177,10 @@ pub struct DecisionRecord {
 pub struct SaveDecisionSummary {
     pub iteration: u64,
     pub stage: TrainingStage,
-    /// Spec → tensor count over model states.
-    pub model_codecs: Vec<(CodecSpec, usize)>,
-    /// Spec → tensor count over optimizer states.
-    pub optimizer_codecs: Vec<(CodecSpec, usize)>,
+    /// Pipeline → tensor count over model states.
+    pub model_codecs: Vec<(PipelineSpec, usize)>,
+    /// Pipeline → tensor count over optimizer states.
+    pub optimizer_codecs: Vec<(PipelineSpec, usize)>,
     pub predicted_bytes: usize,
     pub raw_bytes: usize,
     pub predicted_secs: f64,
@@ -199,7 +199,7 @@ pub struct AdaptivePolicy {
     cfg: AdaptiveConfig,
     cost: CostModel,
     detector: StageDetector,
-    incumbent: HashMap<String, CodecSpec>,
+    incumbent: HashMap<String, PipelineSpec>,
     /// Master weights deliberately taken lossless by the Late-stage rule
     /// (and only those — not tensors the quantizable guard forced raw),
     /// kept lossless through Mid/Late flapping.
@@ -308,23 +308,37 @@ impl AdaptivePolicy {
         out
     }
 
-    fn decide_model(&mut self, p: &TensorProbe, has_base: bool) -> (CodecSpec, bool) {
+    fn decide_model(
+        &mut self,
+        p: &TensorProbe,
+        has_base: bool,
+        stage: TrainingStage,
+    ) -> (PipelineSpec, bool) {
         if !has_base || p.delta_density.is_none() {
             // base checkpoint (or no usable base tensor): dense is the only
             // option; leave the incumbent alone so the next delta save
             // still competes against the last delta-phase choice
-            return (CodecSpec::raw(), false);
+            return (PipelineSpec::raw(), false);
         }
         // both COO index widths compete: the cost model prices the u16
         // block table against the wider indices, so probed density picks
         // the width (u32 wins only on very sparse late-stage deltas)
-        let candidates = [
-            CodecSpec::of(CodecId::BitmaskPacked),
-            CodecSpec::of(CodecId::BitmaskNaive),
-            CodecSpec::of(CodecId::CooU16),
-            CodecSpec::of(CodecId::CooU32),
-            CodecSpec::raw(),
+        let mut candidates = vec![
+            PipelineSpec::of(CodecId::BitmaskPacked),
+            PipelineSpec::of(CodecId::BitmaskNaive),
+            PipelineSpec::of(CodecId::CooU16),
+            PipelineSpec::of(CodecId::CooU32),
+            PipelineSpec::raw(),
         ];
+        if stage == TrainingStage::Late {
+            // late-stage sparse deltas are where an entropy tail pays: the
+            // packed mask is nearly all zero bytes. The stage's extra
+            // encode pass (charged over the *payload*, not the tensor)
+            // only beats the saved write time on slow links — on NVMe the
+            // cost model never picks these, so offering them is free
+            candidates.push(PipelineSpec::stacked(CodecId::BitmaskPacked, &[StageId::Huffman]));
+            candidates.push(PipelineSpec::stacked(CodecId::CooU16, &[StageId::Huffman]));
+        }
         let best = self.cost.best(&candidates, p);
         let chosen = match self.incumbent.get(&p.name).copied() {
             Some(inc) if candidates.contains(&inc) => {
@@ -345,7 +359,7 @@ impl AdaptivePolicy {
         (chosen, switched)
     }
 
-    fn decide_optimizer(&mut self, p: &TensorProbe, stage: TrainingStage) -> (CodecSpec, bool) {
+    fn decide_optimizer(&mut self, p: &TensorProbe, stage: TrainingStage) -> (PipelineSpec, bool) {
         // the sampled value range guards the quantizers' scale arithmetic:
         // `max - min` overflowing f32 turns every scale into inf and the
         // dequantized tensor into NaN — keep such tensors raw
@@ -354,11 +368,11 @@ impl AdaptivePolicy {
         let chosen = match (stage, p.kind) {
             // guard-forced raw does NOT latch — a transient bad probe must
             // not disable quantization for the rest of the run
-            _ if !quantizable => CodecSpec::raw(),
+            _ if !quantizable => PipelineSpec::raw(),
             // near convergence, master weights carry the resume precision
             (TrainingStage::Late, StateKind::MasterWeight) => {
                 self.sticky_lossless.insert(p.name.clone());
-                CodecSpec::raw()
+                PipelineSpec::raw()
             }
             // sticky on the way back: a master weight deliberately taken
             // lossless stays lossless through Mid/Late flapping near the
@@ -368,7 +382,7 @@ impl AdaptivePolicy {
             (TrainingStage::Mid, StateKind::MasterWeight)
                 if self.sticky_lossless.contains(&p.name) =>
             {
-                CodecSpec::raw()
+                PipelineSpec::raw()
             }
             _ => {
                 self.sticky_lossless.remove(&p.name);
@@ -378,7 +392,7 @@ impl AdaptivePolicy {
                         choose_clusters(stage, self.cfg.target_ratio, p.elems)
                     }
                 };
-                CodecSpec::cluster_quant(m)
+                PipelineSpec::of(CodecSpec::cluster_quant(m))
             }
         };
         let switched = self
@@ -394,17 +408,20 @@ impl AdaptivePolicy {
         iteration: u64,
         stage: TrainingStage,
         p: &TensorProbe,
-        spec: CodecSpec,
+        spec: PipelineSpec,
         switched: bool,
         deduped: bool,
     ) {
         let est = self.cost.estimate(spec, p);
         // the tensor is still *encoded* even when its payload dedups, so
-        // the throughput-calibration feedback always includes it
+        // the throughput-calibration feedback always includes it. The
+        // calibration stays keyed by the head codec: tail-stage time is a
+        // payload-sized sliver of the total, so folding it into the head's
+        // row biases far less than a dedicated-but-starved stage row would
         self.pending_encode
             .entry(iteration)
             .or_default()
-            .push((spec.id, p.raw_bytes(), est.encode_secs));
+            .push((spec.head.id, p.raw_bytes(), est.encode_secs));
         self.decisions.push(DecisionRecord {
             iteration,
             stage,
@@ -437,15 +454,15 @@ impl PolicySource for AdaptivePolicy {
         let mut plan = CheckpointPlan::uniform(self.cfg.fallback);
         // payload-identity dedup within this save: the CAS stores
         // byte-identical payloads once, so predicted bytes count them once
-        let mut seen_payloads: HashSet<(u64, usize, usize, CodecSpec)> = HashSet::new();
+        let mut seen_payloads: HashSet<(u64, usize, usize, PipelineSpec)> = HashSet::new();
         for p in &probes {
             let (spec, switched) = match p.kind {
-                StateKind::ModelState => self.decide_model(p, ctx.base.is_some()),
+                StateKind::ModelState => self.decide_model(p, ctx.base.is_some(), stage),
                 k if k.is_optimizer() => self.decide_optimizer(p, stage),
-                _ => (CodecSpec::raw(), false),
+                _ => (PipelineSpec::raw(), false),
             };
             let directive = match spec {
-                s if s.id == CodecId::Raw => TensorDirective::Raw,
+                s if s == PipelineSpec::raw() => TensorDirective::Raw,
                 s if s.is_delta() => TensorDirective::Delta(s),
                 s => TensorDirective::Quantize(s),
             };
@@ -531,7 +548,7 @@ mod tests {
         SaveContext { iteration, is_base: base.is_none(), sd, base }
     }
 
-    fn plan_spec(policy: &mut AdaptivePolicy, c: &SaveContext<'_>, name: &str) -> CodecSpec {
+    fn plan_spec(policy: &mut AdaptivePolicy, c: &SaveContext<'_>, name: &str) -> PipelineSpec {
         let plan = policy.plan(c);
         // materialize via the compressor so the directive→spec mapping is
         // the one checkpoints will actually see
@@ -552,7 +569,7 @@ mod tests {
         let mut late = base.clone();
         late.perturb_model_states(0.02, 3);
         let c = ctx(10, &late, Some(&base));
-        assert_eq!(plan_spec(&mut policy, &c, "layers.0.weight").id, CodecId::BitmaskPacked);
+        assert_eq!(plan_spec(&mut policy, &c, "layers.0.weight").head.id, CodecId::BitmaskPacked);
     }
 
     #[test]
@@ -575,7 +592,7 @@ mod tests {
         let mut sd = base.clone();
         sd.perturb_model_states(0.03, 7);
         let c = ctx(30, &sd, Some(&base));
-        assert_eq!(plan_spec(&mut policy, &c, "layers.0.weight").id, CodecId::BitmaskPacked);
+        assert_eq!(plan_spec(&mut policy, &c, "layers.0.weight").head.id, CodecId::BitmaskPacked);
         let last = policy.decisions().last().unwrap();
         assert!(policy
             .decisions()
@@ -604,7 +621,7 @@ mod tests {
         );
         assert_eq!(
             plan.directive("optimizer.0.exp_avg"),
-            TensorDirective::Quantize(CodecSpec::cluster_quant(16)),
+            TensorDirective::Quantize(CodecSpec::cluster_quant(16).into()),
             "Late stage budget resolves to the paper's m=16"
         );
     }
@@ -645,9 +662,48 @@ mod tests {
         assert_eq!(policy.stage(), TrainingStage::Early);
         assert_eq!(
             plan.directive("optimizer.0.master"),
-            TensorDirective::Quantize(CodecSpec::cluster_quant(4)),
+            TensorDirective::Quantize(CodecSpec::cluster_quant(4).into()),
             "Early stage budget tolerates the coarsest clusters"
         );
+    }
+
+    #[test]
+    fn late_stage_slow_link_stacks_an_entropy_tail_and_holds_it() {
+        // NFS-class write bandwidth + late-stage sparse deltas: the
+        // planner should discover that bitmask|huffman beats every
+        // single-stage candidate end-to-end, and hysteresis should then
+        // hold the stacked incumbent on the next, similar save
+        let base = StateDict::synthetic_gpt(1 << 16, 70);
+        let mut policy = AdaptivePolicy::new(
+            AdaptiveConfig::default(),
+            CostModel::new(Calibration::default_host(), Some(100e6)),
+        );
+        for i in 0..8u64 {
+            policy.telemetry(i, 2.0); // plateaued loss
+        }
+        let mut sd = base.clone();
+        sd.perturb_model_states(0.03, 71);
+        let c = ctx(10, &sd, Some(&base));
+        let spec = plan_spec(&mut policy, &c, "layers.0.weight");
+        assert_eq!(policy.stage(), TrainingStage::Late);
+        assert_eq!(spec, PipelineSpec::stacked(CodecId::BitmaskPacked, &[StageId::Huffman]));
+        let mut sd = base.clone();
+        sd.perturb_model_states(0.04, 72);
+        let c = ctx(20, &sd, Some(&base));
+        let spec = plan_spec(&mut policy, &c, "layers.0.weight");
+        assert_eq!(spec, PipelineSpec::stacked(CodecId::BitmaskPacked, &[StageId::Huffman]));
+        // on NVMe the same save never stacks: the tail's encode pass
+        // costs more than the write bytes it saves
+        let mut nvme = AdaptivePolicy::default_host();
+        for i in 0..8u64 {
+            nvme.telemetry(i, 2.0);
+        }
+        let mut sd = base.clone();
+        sd.perturb_model_states(0.03, 73);
+        let c = ctx(10, &sd, Some(&base));
+        let spec = plan_spec(&mut nvme, &c, "layers.0.weight");
+        assert_eq!(nvme.stage(), TrainingStage::Late);
+        assert!(spec.tail().is_empty(), "NVMe stacked: {}", spec.label());
     }
 
     #[test]
@@ -679,7 +735,7 @@ mod tests {
         assert_eq!(policy.stage(), TrainingStage::Mid);
         assert_eq!(
             plan.directive("optimizer.0.master"),
-            TensorDirective::Quantize(CodecSpec::cluster_quant(8)),
+            TensorDirective::Quantize(CodecSpec::cluster_quant(8).into()),
             "guard-forced raw must not disable quantization permanently"
         );
     }
@@ -696,7 +752,7 @@ mod tests {
         for name in ["optimizer.0.master", "optimizer.0.exp_avg", "optimizer.0.exp_avg_sq"] {
             assert_eq!(
                 plan.directive(name),
-                TensorDirective::Quantize(CodecSpec::cluster_quant(4)),
+                TensorDirective::Quantize(CodecSpec::cluster_quant(4).into()),
                 "{name}"
             );
         }
@@ -724,7 +780,7 @@ mod tests {
         assert_eq!(plan.directive("optimizer.0.exp_avg"), TensorDirective::Raw);
         assert_eq!(
             plan.directive("optimizer.0.exp_avg_sq"),
-            TensorDirective::Quantize(CodecSpec::cluster_quant(4))
+            TensorDirective::Quantize(CodecSpec::cluster_quant(4).into())
         );
     }
 
@@ -747,7 +803,7 @@ mod tests {
         assert_eq!(plan.directive("optimizer.0.exp_avg"), TensorDirective::Raw);
         assert_eq!(
             plan.directive("optimizer.0.exp_avg_sq"),
-            TensorDirective::Quantize(CodecSpec::cluster_quant(4))
+            TensorDirective::Quantize(CodecSpec::cluster_quant(4).into())
         );
     }
 
@@ -821,7 +877,7 @@ mod tests {
         let plan = policy.plan(&ctx(0, &sd, None));
         assert_eq!(
             plan.directive("optimizer.0.exp_avg"),
-            TensorDirective::Quantize(CodecSpec::cluster_quant(16))
+            TensorDirective::Quantize(CodecSpec::cluster_quant(16).into())
         );
         assert!(policy.describe().contains("fixed m=16"), "{}", policy.describe());
     }
@@ -842,7 +898,7 @@ mod tests {
         assert_eq!(policy.stage(), TrainingStage::Late);
         assert_eq!(
             plan.directive("optimizer.0.exp_avg"),
-            TensorDirective::Quantize(CodecSpec::cluster_quant(4)),
+            TensorDirective::Quantize(CodecSpec::cluster_quant(4).into()),
             "the user ratio floor caps the cluster count"
         );
         assert!(policy.describe().contains("target 3.00x"), "{}", policy.describe());

@@ -16,7 +16,7 @@
 
 use std::collections::HashMap;
 
-use crate::compress::CodecSpec;
+use crate::compress::PipelineSpec;
 use crate::store::Hasher64;
 use crate::tensor::{bf16_to_f32, f16_to_f32, DType, HostTensor, StateDict, StateKind};
 
@@ -88,7 +88,7 @@ impl TensorProbe {
 
     /// The identity under which two probed tensors are **predicted** to
     /// produce byte-identical payloads for `spec`: same sampled content,
-    /// same size, same delta profile, same codec spec. It is a
+    /// same size, same delta profile, same codec pipeline. It is a
     /// *prediction* — built from the strided sample, blind to the delta
     /// base's content — so rare false positives are possible; the
     /// store's full-payload hashes remain the authority on what actually
@@ -96,7 +96,7 @@ impl TensorProbe {
     /// [`crate::adapt::CostModel::predicted_unique_bytes`] and the
     /// planner's per-save dedup flagging key on, so the two predictions
     /// at least never disagree with each other.
-    pub fn payload_identity(&self, spec: CodecSpec) -> (u64, usize, usize, CodecSpec) {
+    pub fn payload_identity(&self, spec: PipelineSpec) -> (u64, usize, usize, PipelineSpec) {
         (self.content_fingerprint, self.elems, self.changed_in_sample, spec)
     }
 }

@@ -8,21 +8,35 @@
 //! Floating-point words are split into their constituent byte planes
 //! (all exponent-carrying high bytes together, all mantissa low bytes
 //! together). Exponent bytes of trained weights are extremely peaked, so
-//! the entropy stage (zstd here) compresses the grouped layout much better
-//! than the interleaved one.
+//! an entropy coder over the grouped layout compresses much better than
+//! over the interleaved one. The entropy back-end is the in-crate
+//! canonical [`super::huffman`] coder with **one table per byte plane**
+//! (the whole point of grouping is that the planes have very different
+//! distributions), keeping the default build dependency-free.
 //!
-//! Payload: `n_bytes u64 | elem_size u8 | zstd(transposed bytes)`.
+//! Leaf payload: `n_bytes u64 | elem_size u8 | per plane: len u64 |
+//! huffman(plane)`.
+//!
+//! This module also provides [`ByteGroupStage`] — the byte-plane
+//! transpose alone as a composable [`Stage`](super::Stage)
+//! (`delta|byte_group|huffman` runs the transpose between the sparse
+//! leaf and the entropy coder). Prefer the pipeline entry points
+//! ([`super::compress`] with [`CodecId::ByteGroupHuff`](super::CodecId)
+//! or a staged [`PipelineSpec`](super::PipelineSpec)) over calling
+//! [`encode`]/[`decode`] directly; the free functions remain for the
+//! benches and as the leaf dispatch target.
 
-use super::CompressError;
+use super::{huffman, CompressError, Stage, StageId};
 use crate::tensor::HostTensor;
 
 const HEADER: usize = 8 + 1;
-const ZSTD_LEVEL: i32 = 3;
 
 /// Transpose `data` (n elements × elem_size bytes) into byte planes.
 /// Dispatches to the active [`super::kernels`] transpose — the wide
 /// variant tiles over element blocks so each input byte is read once
 /// instead of once per plane; output bytes are identical either way.
+/// `data.len()` must be a multiple of `elem_size` (the [`ByteGroupStage`]
+/// frame handles arbitrary lengths by splitting off the remainder).
 pub fn group_bytes(data: &[u8], elem_size: usize) -> Vec<u8> {
     debug_assert!(elem_size > 0 && data.len() % elem_size == 0);
     super::kernels::Kernels::active().group_bytes(data, elem_size)
@@ -34,18 +48,24 @@ pub fn ungroup_bytes(grouped: &[u8], elem_size: usize) -> Vec<u8> {
     super::kernels::Kernels::active().ungroup_bytes(grouped, elem_size)
 }
 
+/// Leaf encode: transpose into planes, entropy-code each plane with its
+/// own Huffman table.
 pub fn encode(t: &HostTensor) -> Result<Vec<u8>, CompressError> {
     let elem_size = t.dtype().size();
     let grouped = group_bytes(t.bytes(), elem_size);
-    let compressed = zstd::bulk::compress(&grouped, ZSTD_LEVEL)
-        .map_err(|e| CompressError::Format(format!("zstd: {e}")))?;
-    let mut out = Vec::with_capacity(HEADER + compressed.len());
+    let n = grouped.len() / elem_size.max(1);
+    let mut out = Vec::with_capacity(HEADER + grouped.len() / 2);
     out.extend_from_slice(&(t.byte_len() as u64).to_le_bytes());
     out.push(elem_size as u8);
-    out.extend_from_slice(&compressed);
+    for plane in 0..elem_size {
+        let coded = huffman::encode(&grouped[plane * n..(plane + 1) * n]);
+        out.extend_from_slice(&(coded.len() as u64).to_le_bytes());
+        out.extend_from_slice(&coded);
+    }
     Ok(out)
 }
 
+/// Leaf decode: entropy-decode each plane, then un-transpose.
 pub fn decode(
     payload: &[u8],
     dtype: crate::tensor::DType,
@@ -59,12 +79,70 @@ pub fn decode(
     if elem_size != dtype.size() || n_bytes != shape.iter().product::<usize>() * elem_size {
         return Err(CompressError::Format("byte group: header mismatch".into()));
     }
-    let grouped = zstd::bulk::decompress(&payload[HEADER..], n_bytes)
-        .map_err(|e| CompressError::Format(format!("zstd: {e}")))?;
-    if grouped.len() != n_bytes {
-        return Err(CompressError::Format("byte group: bad decompressed length".into()));
+    let n = n_bytes / elem_size.max(1);
+    let mut grouped = Vec::with_capacity(n_bytes);
+    let mut pos = HEADER;
+    for _ in 0..elem_size {
+        if payload.len() < pos + 8 {
+            return Err(CompressError::Format("byte group: truncated plane header".into()));
+        }
+        let len = u64::from_le_bytes(payload[pos..pos + 8].try_into().unwrap()) as usize;
+        pos += 8;
+        if payload.len() < pos + len {
+            return Err(CompressError::Format("byte group: truncated plane".into()));
+        }
+        let plane = huffman::decode(&payload[pos..pos + len])?;
+        pos += len;
+        if plane.len() != n {
+            return Err(CompressError::Format("byte group: bad plane length".into()));
+        }
+        grouped.extend_from_slice(&plane);
+    }
+    if pos != payload.len() {
+        return Err(CompressError::Format("byte group: trailing bytes".into()));
     }
     HostTensor::from_bytes(dtype, shape, ungroup_bytes(&grouped, elem_size))
+}
+
+/// The byte-plane transpose as a composable pipeline [`Stage`]. Unlike
+/// [`group_bytes`], it accepts any payload length: the frame stores the
+/// element size and transposes only the largest multiple-of-`elem_size`
+/// prefix, carrying the remainder verbatim.
+///
+/// Stage frame: `es u8 | group_bytes(prefix) | remainder` — the
+/// remainder's length is recoverable as `body_len % es` because the
+/// grouped prefix is a multiple of `es` by construction.
+pub struct ByteGroupStage;
+
+impl Stage for ByteGroupStage {
+    fn id(&self) -> StageId {
+        StageId::ByteGroup
+    }
+
+    fn apply(&self, data: &[u8], elem_size: usize) -> Result<Vec<u8>, CompressError> {
+        let es = elem_size.clamp(1, 255);
+        let split = data.len() - data.len() % es;
+        let mut out = Vec::with_capacity(1 + data.len());
+        out.push(es as u8);
+        out.extend_from_slice(&group_bytes(&data[..split], es));
+        out.extend_from_slice(&data[split..]);
+        Ok(out)
+    }
+
+    fn invert(&self, data: &[u8], _elem_size: usize) -> Result<Vec<u8>, CompressError> {
+        let (&es, body) = data
+            .split_first()
+            .ok_or_else(|| CompressError::Format("byte group stage: empty payload".into()))?;
+        if es == 0 {
+            return Err(CompressError::Format("byte group stage: zero element size".into()));
+        }
+        let es = es as usize;
+        let split = body.len() - body.len() % es;
+        let mut out = Vec::with_capacity(body.len());
+        out.extend_from_slice(&ungroup_bytes(&body[..split], es));
+        out.extend_from_slice(&body[split..]);
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -106,11 +184,45 @@ mod tests {
     }
 
     #[test]
+    fn per_plane_tables_beat_one_whole_payload_table() {
+        // the reason grouping exists: the interleaved layout mixes the
+        // peaked exponent plane into the near-uniform mantissa planes,
+        // so one table over the raw bytes compresses worse
+        let mut rng = XorShiftRng::new(3);
+        let vals = rng.normal_vec(1 << 14, 0.0, 0.02);
+        let t = HostTensor::from_f32(&[1 << 14], &vals).unwrap();
+        let grouped = encode(&t).unwrap();
+        let one_table = huffman::encode(t.bytes());
+        assert!(grouped.len() < one_table.len(), "{} vs {}", grouped.len(), one_table.len());
+    }
+
+    #[test]
     fn corrupt_rejected() {
         let t = HostTensor::from_f32(&[16], &[0.25f32; 16]).unwrap();
         let p = encode(&t).unwrap();
         assert!(decode(&p, DType::F32, &[15]).is_err());
         assert!(decode(&p, DType::F16, &[16]).is_err());
         assert!(decode(&p[..HEADER], DType::F32, &[16]).is_err());
+        assert!(decode(&p[..p.len() - 1], DType::F32, &[16]).is_err());
+        let mut trailing = p.clone();
+        trailing.push(0);
+        assert!(decode(&trailing, DType::F32, &[16]).is_err());
+    }
+
+    #[test]
+    fn stage_roundtrips_any_length() {
+        let mut rng = XorShiftRng::new(4);
+        let stage = ByteGroupStage;
+        for es in [1usize, 2, 4, 8] {
+            // lengths that are and are not multiples of es, plus empty
+            for n in [0usize, 1, es - 1, es, es + 1, 7 * es + 3, 123] {
+                let data: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+                let framed = stage.apply(&data, es).unwrap();
+                assert_eq!(stage.invert(&framed, es).unwrap(), data, "es={es} n={n}");
+            }
+        }
+        // inverting garbage fails loudly instead of panicking
+        assert!(stage.invert(&[], 4).is_err());
+        assert!(stage.invert(&[0u8, 1, 2], 4).is_err());
     }
 }

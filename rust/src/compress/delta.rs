@@ -13,7 +13,7 @@ use std::collections::HashMap;
 
 use super::{
     bitmask, compress, compress_delta, decompress, decompress_delta, CodecId, CodecSpec,
-    CompressError, CompressedTensor,
+    CompressError, CompressedTensor, PipelineSpec,
 };
 use crate::tensor::{HostTensor, StateDict, StateKind};
 
@@ -103,11 +103,11 @@ impl CompressedCheckpoint {
         self.entries.iter().map(|e| e.compressed.payload.len()).sum()
     }
 
-    /// (name, spec) of every entry in container order — what a sharded
-    /// save records into its manifest so recovery tooling can audit codec
-    /// choices (including their parameters) without re-reading the rank
-    /// containers.
-    pub fn entry_specs(&self) -> Vec<(String, CodecSpec)> {
+    /// (name, pipeline) of every entry in container order — what a
+    /// sharded save records into its manifest so recovery tooling can
+    /// audit codec choices (including their parameters and stacked
+    /// stages) without re-reading the rank containers.
+    pub fn entry_specs(&self) -> Vec<(String, PipelineSpec)> {
         self.entries.iter().map(|e| (e.name.clone(), e.compressed.spec)).collect()
     }
 }
@@ -121,19 +121,20 @@ pub enum TensorDirective {
     Inherit,
     /// Store the dense little-endian bytes.
     Raw,
-    /// Delta-sparsify against the base checkpoint with this delta codec
-    /// spec (the spec's id picks the COO index width). Falls back to raw
-    /// when the checkpoint has no base (a base checkpoint has nothing to
+    /// Delta-sparsify against the base checkpoint with this pipeline
+    /// (the head's id picks the delta codec and COO index width; tail
+    /// stages entropy-code the sparse payload). Falls back to raw when
+    /// the checkpoint has no base (a base checkpoint has nothing to
     /// delta against).
-    Delta(CodecSpec),
-    /// Quantize standalone with this (non-delta, lossy) codec spec —
+    Delta(PipelineSpec),
+    /// Quantize standalone with this pipeline (non-delta, lossy head) —
     /// cluster count, block size or prune threshold ride along. The spec
     /// is authoritative: a `Prune` directive prunes at exactly its
     /// `keep_fraction`, so a plan that prunes master weights must choose
     /// the keep rate itself (the kind-dependent ExCP safeguard lives on
     /// the [`OptimizerPolicy::ExcpPrune`] policy path, which knows the
     /// tensor kind).
-    Quantize(CodecSpec),
+    Quantize(PipelineSpec),
 }
 
 /// A per-tensor compression plan for one checkpoint: a checkpoint-wide
@@ -144,6 +145,7 @@ pub enum TensorDirective {
 #[derive(Clone, Debug)]
 pub struct CheckpointPlan {
     default: Policy,
+    model_pipeline: Option<PipelineSpec>,
     per_tensor: HashMap<String, TensorDirective>,
 }
 
@@ -151,11 +153,25 @@ impl CheckpointPlan {
     /// A plan with no overrides: every tensor follows `default` (exactly
     /// the behaviour of [`compress_state_dict_timed`] with that policy).
     pub fn uniform(default: Policy) -> Self {
-        Self { default, per_tensor: HashMap::new() }
+        Self { default, model_pipeline: None, per_tensor: HashMap::new() }
     }
 
     pub fn default_policy(&self) -> Policy {
         self.default
+    }
+
+    /// Route every model-state tensor (without a per-tensor override)
+    /// through `pipeline` instead of the default policy's model arm —
+    /// how `train --codec` applies one parsed [`PipelineSpec`] to a
+    /// whole run. Delta-headed pipelines degrade to raw on base saves,
+    /// like a [`TensorDirective::Delta`] override.
+    pub fn set_model_pipeline(&mut self, pipeline: PipelineSpec) {
+        self.model_pipeline = Some(pipeline);
+    }
+
+    /// The checkpoint-wide model-state pipeline override, if any.
+    pub fn model_pipeline(&self) -> Option<PipelineSpec> {
+        self.model_pipeline
     }
 
     /// Override the directive for one tensor.
@@ -215,7 +231,7 @@ fn compress_model_auto(
         _ => return compress(CodecId::Raw, curr),
     };
     Ok(CompressedTensor {
-        spec: CodecSpec::of(codec),
+        spec: PipelineSpec::of(codec),
         dtype: curr.dtype(),
         shape: curr.shape().to_vec(),
         payload,
@@ -284,17 +300,18 @@ fn compress_model_entry(
 }
 
 fn compress_quantized_entry(
-    spec: CodecSpec,
+    spec: PipelineSpec,
     t: &HostTensor,
     timings: &mut CompressTimings,
 ) -> Result<CompressedTensor, CompressError> {
     spec.validate()?;
-    match spec.id {
+    match spec.head.id {
         CodecId::ClusterQuant => {
-            let m = spec.clusters().unwrap_or(super::cluster_quant::DEFAULT_CLUSTERS);
+            let m = spec.head.clusters().unwrap_or(super::cluster_quant::DEFAULT_CLUSTERS);
             let (payload, t_c, t_q) = super::cluster_quant::encode_with_timing(t, m)?;
             timings.clustering += t_c;
             timings.quantization += t_q;
+            let payload = super::apply_tail(&spec, payload, t.dtype().size())?;
             Ok(CompressedTensor { spec, dtype: t.dtype(), shape: t.shape().to_vec(), payload })
         }
         CodecId::NaiveQuant8 | CodecId::BlockQuant8 | CodecId::Prune => {
@@ -324,7 +341,7 @@ fn compress_optimizer_entry(
             CodecSpec::prune(if kind == StateKind::MasterWeight { 0.5 } else { 0.1 })
         }
     };
-    compress_quantized_entry(spec, t, timings)
+    compress_quantized_entry(spec.into(), t, timings)
 }
 
 /// Compress **one** entry of a planned save: the per-tensor unit of work
@@ -348,9 +365,25 @@ pub fn compress_entry_planned(
     let lookup_base = || base.and_then(|b| b.get(name)).map(|be| &be.tensor);
     let compressed = match plan.directive(name) {
         TensorDirective::Inherit => match kind {
-            StateKind::ModelState => {
-                compress_model_entry(policy.model, lookup_base(), tensor, &mut timings)?
-            }
+            StateKind::ModelState => match plan.model_pipeline() {
+                Some(p) if p.is_delta() => {
+                    let t0 = std::time::Instant::now();
+                    let c = match lookup_base() {
+                        Some(b) => compress_delta(p, b, tensor)?,
+                        None => compress(CodecId::Raw, tensor)?,
+                    };
+                    timings.delta_encoding += t0.elapsed();
+                    c
+                }
+                Some(p) if p.is_lossless() => {
+                    let t0 = std::time::Instant::now();
+                    let c = compress(p, tensor)?;
+                    timings.delta_encoding += t0.elapsed();
+                    c
+                }
+                Some(p) => compress_quantized_entry(p, tensor, &mut timings)?,
+                None => compress_model_entry(policy.model, lookup_base(), tensor, &mut timings)?,
+            },
             k if k.is_optimizer() => {
                 compress_optimizer_entry(policy.optimizer, k, tensor, &mut timings)?
             }
@@ -535,14 +568,17 @@ mod tests {
         curr.perturb_model_states(0.05, 14);
         let mut plan = CheckpointPlan::uniform(Policy::lossless());
         plan.set("layers.0.weight", TensorDirective::Delta(CodecId::CooU16.into()));
-        plan.set("optimizer.0.exp_avg", TensorDirective::Quantize(CodecSpec::cluster_quant(64)));
+        plan.set(
+            "optimizer.0.exp_avg",
+            TensorDirective::Quantize(CodecSpec::cluster_quant(64).into()),
+        );
         plan.set("optimizer.0.master", TensorDirective::Raw);
         assert_eq!(plan.overrides(), 3);
         let (ckpt, _) = compress_state_dict_planned(&curr, Some(&base), &plan, 20, 0).unwrap();
         let spec_of = |name: &str| {
             ckpt.entries.iter().find(|e| e.name == name).unwrap().compressed.spec
         };
-        assert_eq!(spec_of("layers.0.weight").id, CodecId::CooU16);
+        assert_eq!(spec_of("layers.0.weight").head.id, CodecId::CooU16);
         assert_eq!(spec_of("optimizer.0.exp_avg"), CodecSpec::cluster_quant(64));
         assert_eq!(spec_of("optimizer.0.master"), CodecSpec::raw());
         // lossless entries round-trip bit-exactly
@@ -565,6 +601,40 @@ mod tests {
         let (ckpt, _) = compress_state_dict_planned(&sd, None, &plan, 0, 0).unwrap();
         let e = ckpt.entries.iter().find(|e| e.name == "layers.0.weight").unwrap();
         assert_eq!(e.compressed.spec, CodecSpec::raw());
+    }
+
+    #[test]
+    fn model_pipeline_override_applies_and_degrades_on_base() {
+        use crate::compress::{PipelineSpec, StageId};
+        let base = small_dict(17);
+        let mut curr = base.clone();
+        curr.perturb_model_states(0.02, 18);
+        let stacked = PipelineSpec::stacked(CodecId::BitmaskPacked, &[StageId::Huffman]);
+        let mut plan = CheckpointPlan::uniform(Policy::lossless());
+        plan.set_model_pipeline(stacked);
+        // base save: delta-headed pipeline degrades to raw
+        let (cb, _) = compress_state_dict_planned(&base, None, &plan, 0, 0).unwrap();
+        let model = |c: &CompressedCheckpoint| {
+            c.entries.iter().find(|e| e.kind == StateKind::ModelState).unwrap().compressed.clone()
+        };
+        assert_eq!(model(&cb).spec, CodecSpec::raw());
+        // delta save: the stacked pipeline is applied and round-trips
+        let (cd, _) = compress_state_dict_planned(&curr, Some(&base), &plan, 1, 0).unwrap();
+        assert_eq!(model(&cd).spec, stacked);
+        let rb = decompress_state_dict(&cb, None).unwrap();
+        let rd = decompress_state_dict(&cd, Some(&rb)).unwrap();
+        assert_eq!(
+            rd.get("layers.0.weight").unwrap().tensor,
+            curr.get("layers.0.weight").unwrap().tensor
+        );
+        // a per-tensor override still beats the checkpoint-wide pipeline
+        let mut plan = CheckpointPlan::uniform(Policy::lossless());
+        plan.set_model_pipeline(stacked);
+        plan.set("layers.0.weight", TensorDirective::Raw);
+        let (c2, _) = compress_state_dict_planned(&curr, Some(&base), &plan, 1, 0).unwrap();
+        let spec_of =
+            |name: &str| c2.entries.iter().find(|e| e.name == name).unwrap().compressed.spec;
+        assert_eq!(spec_of("layers.0.weight"), CodecSpec::raw());
     }
 
     #[test]

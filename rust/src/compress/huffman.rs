@@ -11,9 +11,14 @@
 //! we reject > 32 during canonicalization by rebalancing never occurring
 //! in practice — a guard returns an error instead of corrupting).
 
-use super::CompressError;
+use super::{CompressError, Stage, StageId};
 
 const HEADER: usize = 8 + 256;
+
+/// Fixed frame overhead of a Huffman payload: `raw_len u64` plus the 256
+/// code-length bytes. Exposed so the cost model can price the entropy
+/// stage analytically from the probe's `byte_entropy`.
+pub const HEADER_BYTES: usize = HEADER;
 
 /// Build Huffman code lengths for the 256 byte symbols from `data`.
 fn code_lengths(data: &[u8]) -> [u8; 256] {
@@ -73,6 +78,12 @@ fn canonical_codes(lengths: &[u8; 256]) -> [(u32, u8); 256] {
     codes
 }
 
+/// Entropy-code `data` with one canonical Huffman table. Prefer the
+/// pipeline entry points ([`super::compress`] with
+/// [`CodecId::Huffman`](super::CodecId) as the head, or
+/// [`StageId::Huffman`] in a [`PipelineSpec`](super::PipelineSpec)
+/// tail); this free function remains as their shared back-end and for
+/// the benches.
 pub fn encode(data: &[u8]) -> Vec<u8> {
     let lengths = code_lengths(data);
     let codes = canonical_codes(&lengths);
@@ -96,6 +107,8 @@ pub fn encode(data: &[u8]) -> Vec<u8> {
     out
 }
 
+/// Bit-exact inverse of [`encode`] (see its note on the preferred
+/// pipeline entry points).
 pub fn decode(payload: &[u8]) -> Result<Vec<u8>, CompressError> {
     if payload.len() < HEADER {
         return Err(CompressError::Format("huffman: short payload".into()));
@@ -189,6 +202,27 @@ pub fn byte_entropy(data: &[u8]) -> f64 {
             -p * p.log2()
         })
         .sum()
+}
+
+/// Canonical Huffman coding as a composable pipeline [`Stage`] — the
+/// entropy stage every stacked pipeline ends with. The stage frame *is*
+/// the leaf payload format (it is already self-describing), so
+/// `huffman` as a head and `huffman` as a tail stage produce identical
+/// bytes for identical input.
+pub struct HuffmanStage;
+
+impl Stage for HuffmanStage {
+    fn id(&self) -> StageId {
+        StageId::Huffman
+    }
+
+    fn apply(&self, data: &[u8], _elem_size: usize) -> Result<Vec<u8>, CompressError> {
+        Ok(encode(data))
+    }
+
+    fn invert(&self, data: &[u8], _elem_size: usize) -> Result<Vec<u8>, CompressError> {
+        decode(data)
+    }
 }
 
 #[cfg(test)]

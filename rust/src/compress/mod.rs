@@ -13,6 +13,15 @@
 //! bitmask; we implement it to check), and [`byte_group`]
 //! (Hershcovitch-style byte grouping + entropy stage, the lossless SOTA).
 //!
+//! A codec is not a leaf here: it is a short **pipeline**. The planning
+//! and encoding currency is [`PipelineSpec`] — a leaf [`CodecSpec`] head
+//! (tensor-aware: delta, quantize, raw) followed by up to
+//! [`MAX_TAIL_STAGES`] lossless bytes-in/bytes-out [`Stage`]s
+//! ([`StageId::ByteGroup`], [`StageId::Huffman`]). `delta|huffman` is the
+//! IBM-style "entropy-code the sparse residual" stack the paper's §3.3
+//! stops short of; a bare [`CodecSpec`] converts into the degenerate
+//! one-stage pipeline, so every pre-pipeline call site keeps working.
+//!
 //! The hot loops inside these codecs dispatch through [`kernels`] — a
 //! scalar/wide kernel layer selected once per process (`BITSNAP_KERNEL`)
 //! whose two implementations are bit-identical by contract.
@@ -95,8 +104,11 @@ pub enum CodecId {
     BlockQuant8,
     /// Canonical Huffman over bytes (entropy-coding baseline).
     Huffman,
-    /// Byte grouping + zstd entropy stage (lossless baseline).
-    ByteGroupZstd,
+    /// Byte grouping + per-plane Huffman entropy stage (lossless
+    /// baseline; tag 9, formerly `ByteGroupZstd` — the entropy back-end
+    /// is the in-crate canonical Huffman coder, one table per byte
+    /// plane, keeping the default build dependency-free).
+    ByteGroupHuff,
     /// ExCP-style magnitude prune + 8-bit quantization (aggressive lossy
     /// baseline; §2.2.1's loss-jump cautionary tale).
     Prune,
@@ -114,7 +126,7 @@ impl CodecId {
             CodecId::NaiveQuant8 => 6,
             CodecId::BlockQuant8 => 7,
             CodecId::Huffman => 8,
-            CodecId::ByteGroupZstd => 9,
+            CodecId::ByteGroupHuff => 9,
             CodecId::Prune => 10,
         }
     }
@@ -130,7 +142,7 @@ impl CodecId {
             6 => CodecId::NaiveQuant8,
             7 => CodecId::BlockQuant8,
             8 => CodecId::Huffman,
-            9 => CodecId::ByteGroupZstd,
+            9 => CodecId::ByteGroupHuff,
             10 => CodecId::Prune,
             _ => return None,
         })
@@ -324,19 +336,344 @@ impl From<CodecId> for CodecSpec {
     }
 }
 
+/// Most stages a [`PipelineSpec`] can append after its leaf head. Two is
+/// deliberate: the only stacks with a measured win are
+/// `delta|huffman`-shaped (one entropy stage) and
+/// `delta|byte_group|huffman` (transpose + entropy); anything longer is
+/// entropy-coding an entropy code.
+pub const MAX_TAIL_STAGES: usize = 2;
+
+/// A lossless bytes-in/bytes-out transform appended after a pipeline's
+/// leaf codec. Stable tags — they are written to disk (container v4 /
+/// manifest v4 entry headers), in a namespace separate from
+/// [`CodecId`]'s.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StageId {
+    /// Byte-plane transpose ([`byte_group::group_bytes`] with a
+    /// self-describing frame, so any payload length round-trips).
+    ByteGroup,
+    /// Canonical Huffman entropy coding ([`huffman::encode`]).
+    Huffman,
+}
+
+impl StageId {
+    /// Stable on-disk tag for this stage.
+    pub fn tag(self) -> u8 {
+        match self {
+            StageId::ByteGroup => 0,
+            StageId::Huffman => 1,
+        }
+    }
+
+    /// Inverse of [`StageId::tag`].
+    pub fn from_tag(tag: u8) -> Option<Self> {
+        Some(match tag {
+            0 => StageId::ByteGroup,
+            1 => StageId::Huffman,
+            _ => return None,
+        })
+    }
+
+    /// The grammar token this stage parses from / displays as.
+    pub fn label(self) -> &'static str {
+        match self {
+            StageId::ByteGroup => "byte_group",
+            StageId::Huffman => "huffman",
+        }
+    }
+
+    /// The (stateless) stage implementation behind this id.
+    pub fn stage(self) -> &'static dyn Stage {
+        match self {
+            StageId::ByteGroup => &byte_group::ByteGroupStage,
+            StageId::Huffman => &huffman::HuffmanStage,
+        }
+    }
+}
+
+/// A composable lossless transform: the seam ROADMAP items 3 (ExCP joint
+/// compression) and 4b (device-side kernels) plug into. `apply` must be
+/// inverted bit-exactly by `invert` for **every** byte string — stages
+/// run after arbitrary leaf codecs, so they cannot assume tensor-shaped
+/// input. `elem_size` is a layout hint (the element width of the tensor
+/// at the pipeline head); stages that use it must self-describe it in
+/// their frame rather than trust the decode side to agree.
+pub trait Stage: Sync {
+    /// Which [`StageId`] this implementation is.
+    fn id(&self) -> StageId;
+    /// Encode `data`. Infallible transforms still return `Result` so the
+    /// dispatch in [`compress`] stays uniform.
+    fn apply(&self, data: &[u8], elem_size: usize) -> Result<Vec<u8>, CompressError>;
+    /// Bit-exact inverse of [`Stage::apply`].
+    fn invert(&self, data: &[u8], elem_size: usize) -> Result<Vec<u8>, CompressError>;
+}
+
+/// A staged codec pipeline: one leaf [`CodecSpec`] head (tensor-aware —
+/// raw, delta-sparsify, or quantize) followed by up to
+/// [`MAX_TAIL_STAGES`] lossless byte [`Stage`]s applied in order. This is
+/// the planning/encoding currency: plans, the cost model, container
+/// entries and sharded manifests all carry pipelines. A bare
+/// [`CodecSpec`] (or [`CodecId`]) converts into the degenerate
+/// no-tail pipeline, and compares equal to it, so pre-pipeline call
+/// sites migrate mechanically.
+///
+/// ```
+/// use bitsnap::compress::{CodecId, CodecSpec, PipelineSpec, StageId};
+///
+/// let p = PipelineSpec::parse("delta|huffman").unwrap();
+/// assert_eq!(p.head, CodecSpec::of(CodecId::BitmaskPacked));
+/// assert_eq!(p.tail(), &[StageId::Huffman]);
+/// // round-trips through Display
+/// assert_eq!(PipelineSpec::parse(&p.to_string()).unwrap(), p);
+/// // a bare spec is the degenerate one-stage pipeline
+/// assert_eq!(PipelineSpec::of(CodecId::Raw), CodecSpec::raw());
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PipelineSpec {
+    /// The leaf codec the pipeline starts with.
+    pub head: CodecSpec,
+    // Tail length + fixed-size storage keep the spec `Copy + Eq + Hash`
+    // (it keys incumbent tables). Unused slots are always padded with
+    // `StageId::ByteGroup` by the constructors so the derived Eq/Hash
+    // never see constructor-dependent garbage; the fields stay private
+    // to protect that invariant.
+    n_tail: u8,
+    tail: [StageId; MAX_TAIL_STAGES],
+}
+
+impl PipelineSpec {
+    /// The degenerate pipeline: just a leaf, no stages — exactly what a
+    /// pre-pipeline `CodecSpec` meant.
+    pub fn of(head: impl Into<CodecSpec>) -> Self {
+        Self { head: head.into(), n_tail: 0, tail: [StageId::ByteGroup; MAX_TAIL_STAGES] }
+    }
+
+    /// A leaf head plus a stack of lossless stages, applied in order.
+    /// Panics if `tail` exceeds [`MAX_TAIL_STAGES`] — in-crate callers
+    /// pass literals; user input goes through [`PipelineSpec::parse`],
+    /// which reports the error instead.
+    pub fn stacked(head: impl Into<CodecSpec>, tail: &[StageId]) -> Self {
+        assert!(tail.len() <= MAX_TAIL_STAGES, "pipeline tail too long: {}", tail.len());
+        let mut t = [StageId::ByteGroup; MAX_TAIL_STAGES];
+        t[..tail.len()].copy_from_slice(tail);
+        Self { head: head.into(), n_tail: tail.len() as u8, tail: t }
+    }
+
+    /// Shorthand for the raw (identity) pipeline.
+    pub fn raw() -> Self {
+        Self::of(CodecId::Raw)
+    }
+
+    /// The lossless stages applied after the head, in apply order.
+    pub fn tail(&self) -> &[StageId] {
+        &self.tail[..self.n_tail as usize]
+    }
+
+    /// See [`CodecId::is_delta`] — stages never change delta-ness.
+    pub fn is_delta(self) -> bool {
+        self.head.is_delta()
+    }
+
+    /// See [`CodecId::is_lossless`] — every stage is lossless, so only
+    /// the head decides.
+    pub fn is_lossless(self) -> bool {
+        self.head.is_lossless()
+    }
+
+    /// Check the head spec and the tail length. Every encode dispatch
+    /// and container read goes through this.
+    pub fn validate(self) -> Result<(), CompressError> {
+        self.head.validate()?;
+        if self.n_tail as usize > MAX_TAIL_STAGES {
+            return Err(CompressError::Format(format!(
+                "pipeline tail too long: {}",
+                self.n_tail
+            )));
+        }
+        Ok(())
+    }
+
+    /// Human-readable label for reports and trace spans: the head's
+    /// label with stage labels appended, e.g. `BitmaskPacked|huffman`.
+    pub fn label(&self) -> String {
+        let mut s = self.head.label();
+        for st in self.tail() {
+            s.push('|');
+            s.push_str(st.label());
+        }
+        s
+    }
+
+    /// Parse the one pipeline grammar shared by `train --codec`,
+    /// `adapt-report --codec` and bench configs: `|`-separated tokens,
+    /// first a leaf head, the rest stages. Heads: `raw`, `delta`
+    /// (packed bitmask), `bitmask_naive`, `coo16`, `coo32`,
+    /// `cluster_quant[=m]`, `quant8`, `block_quant[=bytes]`, `huffman`,
+    /// `byte_group`, `prune[=per-mille]`. Stages: `byte_group`,
+    /// `huffman`. Round-trips through [`std::fmt::Display`]:
+    /// `parse(x.to_string()) == x`.
+    pub fn parse(s: &str) -> Result<Self, PipelineParseError> {
+        let err = |msg: String| PipelineParseError { input: s.to_string(), msg };
+        let mut tokens = s.split('|').map(str::trim);
+        let head_tok = match tokens.next() {
+            Some(t) if !t.is_empty() => t,
+            _ => return Err(err("empty pipeline".into())),
+        };
+        let (name, param) = match head_tok.split_once('=') {
+            Some((n, p)) => (n, Some(p)),
+            None => (head_tok, None),
+        };
+        let parse_param = |p: Option<&str>, what: &str| -> Result<Option<u64>, PipelineParseError> {
+            match p {
+                None => Ok(None),
+                Some(v) => v
+                    .parse::<u64>()
+                    .map(Some)
+                    .map_err(|_| err(format!("bad {what} parameter '{v}'"))),
+            }
+        };
+        let head = match name {
+            "raw" => CodecSpec::raw(),
+            "delta" => CodecSpec::of(CodecId::BitmaskPacked),
+            "bitmask_naive" => CodecSpec::of(CodecId::BitmaskNaive),
+            "coo16" => CodecSpec::of(CodecId::CooU16),
+            "coo32" => CodecSpec::of(CodecId::CooU32),
+            "cluster_quant" => match parse_param(param, "cluster count")? {
+                Some(m) => CodecSpec::cluster_quant(m as usize),
+                None => CodecSpec::of(CodecId::ClusterQuant),
+            },
+            "quant8" => CodecSpec::of(CodecId::NaiveQuant8),
+            "block_quant" => match parse_param(param, "block size")? {
+                Some(b) => CodecSpec::block_quant(b as usize),
+                None => CodecSpec::of(CodecId::BlockQuant8),
+            },
+            "huffman" => CodecSpec::of(CodecId::Huffman),
+            "byte_group" => CodecSpec::of(CodecId::ByteGroupHuff),
+            "prune" => match parse_param(param, "keep per-mille")? {
+                Some(k) => CodecSpec::prune(k.min(1000) as f64 / 1000.0),
+                None => CodecSpec::of(CodecId::Prune),
+            },
+            other => return Err(err(format!("unknown codec '{other}'"))),
+        };
+        if param.is_some() && !matches!(name, "cluster_quant" | "block_quant" | "prune") {
+            return Err(err(format!("codec '{name}' takes no parameter")));
+        }
+        let mut tail = Vec::new();
+        for tok in tokens {
+            let stage = match tok {
+                "byte_group" => StageId::ByteGroup,
+                "huffman" => StageId::Huffman,
+                "" => return Err(err("empty stage token".into())),
+                other => return Err(err(format!("unknown stage '{other}'"))),
+            };
+            if tail.len() == MAX_TAIL_STAGES {
+                return Err(err(format!("more than {MAX_TAIL_STAGES} stages")));
+            }
+            tail.push(stage);
+        }
+        let spec = Self::stacked(head, &tail);
+        spec.validate().map_err(|e| err(e.to_string()))?;
+        Ok(spec)
+    }
+
+    /// The grammar token for the head (the inverse of the head half of
+    /// [`PipelineSpec::parse`]). Parameterized heads always spell their
+    /// parameter out so `Display` round-trips exactly.
+    fn head_token(&self) -> String {
+        match self.head.id {
+            CodecId::Raw => "raw".into(),
+            CodecId::BitmaskPacked => "delta".into(),
+            CodecId::BitmaskNaive => "bitmask_naive".into(),
+            CodecId::CooU16 => "coo16".into(),
+            CodecId::CooU32 => "coo32".into(),
+            CodecId::ClusterQuant => {
+                format!("cluster_quant={}", self.head.clusters().unwrap_or(0))
+            }
+            CodecId::NaiveQuant8 => "quant8".into(),
+            CodecId::BlockQuant8 => format!("block_quant={}", self.head.block_size()),
+            CodecId::Huffman => "huffman".into(),
+            CodecId::ByteGroupHuff => "byte_group".into(),
+            CodecId::Prune => {
+                format!("prune={}", (self.head.keep_fraction() * 1000.0).round() as u64)
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for PipelineSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.head_token())?;
+        for st in self.tail() {
+            write!(f, "|{}", st.label())?;
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for PipelineSpec {
+    type Err = PipelineParseError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Self::parse(s)
+    }
+}
+
+impl From<CodecSpec> for PipelineSpec {
+    fn from(head: CodecSpec) -> Self {
+        Self::of(head)
+    }
+}
+
+impl From<CodecId> for PipelineSpec {
+    fn from(id: CodecId) -> Self {
+        Self::of(id)
+    }
+}
+
+/// A no-tail pipeline **is** its head — the degenerate-pipeline
+/// equivalence that lets assertions written against `CodecSpec` keep
+/// holding verbatim.
+impl PartialEq<CodecSpec> for PipelineSpec {
+    fn eq(&self, other: &CodecSpec) -> bool {
+        self.n_tail == 0 && self.head == *other
+    }
+}
+
+impl PartialEq<PipelineSpec> for CodecSpec {
+    fn eq(&self, other: &PipelineSpec) -> bool {
+        other == self
+    }
+}
+
+/// The one error type of the one pipeline grammar
+/// ([`PipelineSpec::parse`]): what failed, and on which input.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PipelineParseError {
+    input: String,
+    msg: String,
+}
+
+impl std::fmt::Display for PipelineParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid codec pipeline '{}': {}", self.input, self.msg)
+    }
+}
+
+impl std::error::Error for PipelineParseError {}
+
 /// A compressed tensor payload plus everything needed to restore it.
 #[derive(Clone, Debug)]
 pub struct CompressedTensor {
-    pub spec: CodecSpec,
+    pub spec: PipelineSpec,
     pub dtype: DType,
     pub shape: Vec<usize>,
     pub payload: Vec<u8>,
 }
 
 impl CompressedTensor {
-    /// The codec family this payload was written with.
+    /// The leaf codec family this payload was written with.
     pub fn codec(&self) -> CodecId {
-        self.spec.id
+        self.spec.head.id
     }
 
     /// Compression ratio relative to the dense tensor.
@@ -346,47 +683,75 @@ impl CompressedTensor {
     }
 }
 
-/// Compress a standalone tensor (non-delta codecs). Takes anything
-/// convertible to a [`CodecSpec`]; a bare [`CodecId`] means its
+/// Run a pipeline's tail stages over a leaf payload, in order.
+fn apply_tail(
+    spec: &PipelineSpec,
+    mut payload: Vec<u8>,
+    elem_size: usize,
+) -> Result<Vec<u8>, CompressError> {
+    for st in spec.tail() {
+        payload = st.stage().apply(&payload, elem_size)?;
+    }
+    Ok(payload)
+}
+
+/// Undo a pipeline's tail stages (reverse order), yielding the leaf
+/// payload the head codec's decoder understands.
+fn invert_tail(
+    spec: &PipelineSpec,
+    payload: &[u8],
+    elem_size: usize,
+) -> Result<Vec<u8>, CompressError> {
+    let mut bytes = payload.to_vec();
+    for st in spec.tail().iter().rev() {
+        bytes = st.stage().invert(&bytes, elem_size)?;
+    }
+    Ok(bytes)
+}
+
+/// Compress a standalone tensor (non-delta head). Takes anything
+/// convertible to a [`PipelineSpec`]; a bare [`CodecId`] or
+/// [`CodecSpec`] means the degenerate no-tail pipeline with its
 /// historical default parameters.
 pub fn compress(
-    spec: impl Into<CodecSpec>,
+    spec: impl Into<PipelineSpec>,
     t: &HostTensor,
 ) -> Result<CompressedTensor, CompressError> {
     let spec = spec.into();
     spec.validate()?;
-    let payload = match spec.id {
+    let head = spec.head;
+    let payload = match head.id {
         CodecId::Raw => t.bytes().to_vec(),
         CodecId::ClusterQuant => {
-            cluster_quant::encode(t, spec.clusters().unwrap_or(cluster_quant::DEFAULT_CLUSTERS))?
+            cluster_quant::encode(t, head.clusters().unwrap_or(cluster_quant::DEFAULT_CLUSTERS))?
         }
         CodecId::NaiveQuant8 => naive_quant::encode(t)?,
-        CodecId::BlockQuant8 => blockwise_quant::encode(t, spec.block_size())?,
+        CodecId::BlockQuant8 => blockwise_quant::encode(t, head.block_size())?,
         CodecId::Huffman => huffman::encode(t.bytes()),
-        CodecId::ByteGroupZstd => byte_group::encode(t)?,
-        CodecId::Prune => prune::encode(t, spec.keep_fraction())?,
+        CodecId::ByteGroupHuff => byte_group::encode(t)?,
+        CodecId::Prune => prune::encode(t, head.keep_fraction())?,
         other => {
             return Err(CompressError::Format(format!(
                 "{other:?} is a delta codec; use compress_delta"
             )))
         }
     };
+    let payload = apply_tail(&spec, payload, t.dtype().size())?;
     Ok(CompressedTensor { spec, dtype: t.dtype(), shape: t.shape().to_vec(), payload })
 }
 
 /// Decompress a standalone tensor. Payloads are self-describing, so this
-/// needs only the codec family; the spec's params are audit metadata.
+/// needs only the pipeline shape; the head's params are audit metadata.
 pub fn decompress(c: &CompressedTensor) -> Result<HostTensor, CompressError> {
-    match c.spec.id {
-        CodecId::Raw => HostTensor::from_bytes(c.dtype, &c.shape, c.payload.clone()),
-        CodecId::ClusterQuant => cluster_quant::decode(&c.payload, c.dtype, &c.shape),
-        CodecId::NaiveQuant8 => naive_quant::decode(&c.payload, c.dtype, &c.shape),
-        CodecId::BlockQuant8 => blockwise_quant::decode(&c.payload, c.dtype, &c.shape),
-        CodecId::Huffman => {
-            HostTensor::from_bytes(c.dtype, &c.shape, huffman::decode(&c.payload)?)
-        }
-        CodecId::ByteGroupZstd => byte_group::decode(&c.payload, c.dtype, &c.shape),
-        CodecId::Prune => prune::decode(&c.payload, c.dtype, &c.shape),
+    let payload = invert_tail(&c.spec, &c.payload, c.dtype.size())?;
+    match c.spec.head.id {
+        CodecId::Raw => HostTensor::from_bytes(c.dtype, &c.shape, payload),
+        CodecId::ClusterQuant => cluster_quant::decode(&payload, c.dtype, &c.shape),
+        CodecId::NaiveQuant8 => naive_quant::decode(&payload, c.dtype, &c.shape),
+        CodecId::BlockQuant8 => blockwise_quant::decode(&payload, c.dtype, &c.shape),
+        CodecId::Huffman => HostTensor::from_bytes(c.dtype, &c.shape, huffman::decode(&payload)?),
+        CodecId::ByteGroupHuff => byte_group::decode(&payload, c.dtype, &c.shape),
+        CodecId::Prune => prune::decode(&payload, c.dtype, &c.shape),
         other => Err(CompressError::Format(format!(
             "{other:?} is a delta codec; use decompress_delta"
         ))),
@@ -395,7 +760,7 @@ pub fn decompress(c: &CompressedTensor) -> Result<HostTensor, CompressError> {
 
 /// Compress `curr` as a delta against `base` (same dtype + shape).
 pub fn compress_delta(
-    spec: impl Into<CodecSpec>,
+    spec: impl Into<PipelineSpec>,
     base: &HostTensor,
     curr: &HostTensor,
 ) -> Result<CompressedTensor, CompressError> {
@@ -405,7 +770,7 @@ pub fn compress_delta(
         return Err(CompressError::Shape("delta base/curr mismatch".into()));
     }
     let es = curr.dtype().size();
-    let payload = match spec.id {
+    let payload = match spec.head.id {
         CodecId::BitmaskPacked => bitmask::encode_packed(base.bytes(), curr.bytes(), es)?,
         CodecId::BitmaskNaive => bitmask::encode_naive(base.bytes(), curr.bytes(), es)?,
         CodecId::CooU16 => coo::encode(base.bytes(), curr.bytes(), es, coo::IndexWidth::U16)?,
@@ -416,6 +781,7 @@ pub fn compress_delta(
             )))
         }
     };
+    let payload = apply_tail(&spec, payload, es)?;
     Ok(CompressedTensor { spec, dtype: curr.dtype(), shape: curr.shape().to_vec(), payload })
 }
 
@@ -429,10 +795,11 @@ pub fn decompress_delta(
         return Err(CompressError::Shape("delta base mismatch on decode".into()));
     }
     let es = c.dtype.size();
-    let bytes = match c.spec.id {
-        CodecId::BitmaskPacked => bitmask::decode_packed(base.bytes(), &c.payload, es)?,
-        CodecId::BitmaskNaive => bitmask::decode_naive(base.bytes(), &c.payload, es)?,
-        CodecId::CooU16 | CodecId::CooU32 => coo::decode(base.bytes(), &c.payload, es)?,
+    let payload = invert_tail(&c.spec, &c.payload, es)?;
+    let bytes = match c.spec.head.id {
+        CodecId::BitmaskPacked => bitmask::decode_packed(base.bytes(), &payload, es)?,
+        CodecId::BitmaskNaive => bitmask::decode_naive(base.bytes(), &payload, es)?,
+        CodecId::CooU16 | CodecId::CooU32 => coo::decode(base.bytes(), &payload, es)?,
         other => return Err(CompressError::Format(format!("{other:?} is not a delta codec"))),
     };
     HostTensor::from_bytes(c.dtype, &c.shape, bytes)
@@ -455,7 +822,7 @@ mod tests {
             CodecId::NaiveQuant8,
             CodecId::BlockQuant8,
             CodecId::Huffman,
-            CodecId::ByteGroupZstd,
+            CodecId::ByteGroupHuff,
             CodecId::Prune,
         ];
         for c in all {
@@ -529,7 +896,7 @@ mod tests {
         let small = compress(CodecSpec::cluster_quant(4), &t).unwrap();
         let big = compress(CodecSpec::cluster_quant(64), &t).unwrap();
         assert!(small.payload.len() < big.payload.len());
-        assert_eq!(small.spec.clusters(), Some(4));
+        assert_eq!(small.spec.head.clusters(), Some(4));
         // block size flows through: smaller blocks -> more scale overhead
         let coarse = compress(CodecSpec::block_quant(256), &t).unwrap();
         let fine = compress(CodecSpec::block_quant(32), &t).unwrap();
@@ -580,5 +947,150 @@ mod tests {
         let a = HostTensor::from_f32(&[4], &[1., 2., 3., 4.]).unwrap();
         let b = HostTensor::from_f32(&[5], &[1., 2., 3., 4., 5.]).unwrap();
         assert!(compress_delta(CodecId::BitmaskPacked, &a, &b).is_err());
+    }
+
+    #[test]
+    fn stage_tags_roundtrip() {
+        for st in [StageId::ByteGroup, StageId::Huffman] {
+            assert_eq!(StageId::from_tag(st.tag()), Some(st));
+            assert_eq!(st.stage().id(), st);
+        }
+        assert_eq!(StageId::from_tag(2), None);
+    }
+
+    #[test]
+    fn degenerate_pipeline_equals_its_head() {
+        let p = PipelineSpec::of(CodecSpec::cluster_quant(16));
+        assert_eq!(p, CodecSpec::cluster_quant(16));
+        assert_eq!(CodecSpec::cluster_quant(16), p);
+        assert!(p.tail().is_empty());
+        // a stacked pipeline does NOT equal its bare head
+        let s = PipelineSpec::stacked(CodecId::BitmaskPacked, &[StageId::Huffman]);
+        assert_ne!(s, CodecSpec::of(CodecId::BitmaskPacked));
+        assert_eq!(s.tail(), &[StageId::Huffman]);
+        assert!(s.is_delta());
+        assert!(s.is_lossless());
+    }
+
+    #[test]
+    fn parse_roundtrips_through_display() {
+        for s in [
+            "raw",
+            "delta",
+            "bitmask_naive",
+            "coo16",
+            "coo32",
+            "cluster_quant=16",
+            "quant8",
+            "block_quant=2048",
+            "huffman",
+            "byte_group",
+            "prune=100",
+            "delta|huffman",
+            "delta|byte_group|huffman",
+            "coo16|huffman",
+            "cluster_quant=64|byte_group",
+        ] {
+            let p = PipelineSpec::parse(s).unwrap();
+            assert_eq!(p.to_string(), s, "display of parse({s})");
+            assert_eq!(PipelineSpec::parse(&p.to_string()).unwrap(), p);
+        }
+        // default-parameter heads display their resolved parameter
+        assert_eq!(PipelineSpec::parse("cluster_quant").unwrap().to_string(), "cluster_quant=16");
+        assert_eq!(PipelineSpec::parse("delta"), Ok(PipelineSpec::of(CodecId::BitmaskPacked)));
+        // whitespace around tokens is tolerated
+        assert_eq!(
+            PipelineSpec::parse("delta | huffman").unwrap(),
+            PipelineSpec::stacked(CodecId::BitmaskPacked, &[StageId::Huffman])
+        );
+    }
+
+    #[test]
+    fn parse_rejects_bad_pipelines() {
+        for bad in [
+            "",
+            "|huffman",
+            "delta|",
+            "delta||huffman",
+            "nonsense",
+            "delta|nonsense",
+            "cluster_quant=zebra",
+            "cluster_quant=1",
+            "raw=4",
+            "delta|byte_group|huffman|huffman",
+            "huffman|delta",
+        ] {
+            let e = PipelineSpec::parse(bad).unwrap_err();
+            // the one error type carries the offending input
+            assert!(e.to_string().contains("invalid codec pipeline"), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn stacked_pipeline_roundtrips_standalone() {
+        let mut rng = XorShiftRng::new(21);
+        let vals = rng.normal_vec(4096, 0.0, 0.02);
+        let t = HostTensor::from_f32(&[4096], &vals).unwrap();
+        for spec in [
+            PipelineSpec::stacked(CodecId::Raw, &[StageId::Huffman]),
+            PipelineSpec::stacked(CodecId::Raw, &[StageId::ByteGroup, StageId::Huffman]),
+            PipelineSpec::stacked(CodecSpec::cluster_quant(16), &[StageId::Huffman]),
+        ] {
+            let c = compress(spec, &t).unwrap();
+            assert_eq!(c.spec, spec);
+            let back = decompress(&c).unwrap();
+            if spec.is_lossless() {
+                assert_eq!(back, t, "{}", spec.label());
+            } else {
+                assert_eq!(back.shape(), t.shape());
+            }
+        }
+    }
+
+    #[test]
+    fn stacked_delta_pipeline_roundtrips_and_shrinks() {
+        // late-training-shaped delta: 2% of fp16 elements changed — the
+        // regime where entropy-coding the bitmask payload wins (the
+        // bitmask is nearly all zero bytes)
+        let n = 1 << 14;
+        let mut rng = XorShiftRng::new(22);
+        let base_vals = rng.normal_vec(n, 0.0, 1.0);
+        let mut curr_vals = base_vals.clone();
+        for i in rng.choose_indices(n, n / 50) {
+            curr_vals[i] += 0.5;
+        }
+        let base = HostTensor::from_f32_as_f16(&[n], &base_vals).unwrap();
+        let curr = HostTensor::from_f32_as_f16(&[n], &curr_vals).unwrap();
+        let leaf = compress_delta(CodecId::BitmaskPacked, &base, &curr).unwrap();
+        let stacked = compress_delta(
+            PipelineSpec::stacked(CodecId::BitmaskPacked, &[StageId::Huffman]),
+            &base,
+            &curr,
+        )
+        .unwrap();
+        assert!(
+            stacked.payload.len() < leaf.payload.len(),
+            "stacked {} vs leaf {}",
+            stacked.payload.len(),
+            leaf.payload.len()
+        );
+        assert_eq!(decompress_delta(&stacked, &base).unwrap(), curr);
+    }
+
+    #[test]
+    fn pipeline_labels_append_stage_labels() {
+        assert_eq!(PipelineSpec::raw().label(), "Raw");
+        assert_eq!(
+            PipelineSpec::stacked(CodecId::BitmaskPacked, &[StageId::Huffman]).label(),
+            "BitmaskPacked|huffman"
+        );
+        assert_eq!(
+            PipelineSpec::stacked(CodecSpec::cluster_quant(16), &[
+                StageId::ByteGroup,
+                StageId::Huffman
+            ])
+            .label(),
+            "ClusterQuant(m=16)|byte_group|huffman"
+        );
     }
 }

@@ -109,7 +109,7 @@ pub struct SaveReport {
     pub compressed_bytes: usize,
     /// Codec spec actually written per entry (parameters included), in
     /// container order — what a sharded save records into its manifest.
-    pub entry_specs: Vec<(String, crate::compress::CodecSpec)>,
+    pub entry_specs: Vec<(String, crate::compress::PipelineSpec)>,
     /// Content key of every entry's encoded payload, in container order —
     /// hashed during the encode phase (on the worker pool for sharded
     /// saves), recorded into the version-3 manifest, and identical to

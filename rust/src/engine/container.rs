@@ -3,7 +3,7 @@
 //! writes and bit rot are detected at load time — the failure mode the
 //! in-memory-redundancy protocol (paper Fig. 4) exists to survive.
 //!
-//! Layout (little-endian, version 2):
+//! Layout (little-endian, version 4):
 //! ```text
 //! magic  "BSNP"          4
 //! version u32            4
@@ -16,36 +16,59 @@
 //!   kind u8 | dtype u8 | codec u8
 //!   params_tag u8 | params value   (0 none | 1 clusters u16
 //!                                   | 2 block u32 | 3 keep‰ u16)
+//!   n_tail u8 | stage tag u8 * n_tail   (lossless tail stages, in
+//!                                        apply order — see
+//!                                        [`crate::compress::PipelineSpec`])
 //!   ndim u8 | dims u64 * ndim
 //!   payload_len u64 | payload
 //! crc64 u64              8   (ECMA-182, over everything above)
 //! ```
-//! Version 1 (PR-2 era) entries had no params field — bare codec tags.
-//! The reader keeps a legacy path that assigns those entries their
-//! historical default parameters ([`CodecSpec::of`]), so old checkpoints
-//! load bit-exactly.
+//! Version history, all read paths kept live (golden fixtures in
+//! `tests/compat_golden.rs` pin them bit-exactly):
 //!
-//! **Version 3** is the content-addressed *stub* form persistent storage
-//! writes: identical header and entry metadata, but each entry carries a
-//! [`BlobKey`] (64-bit content hash + length) instead of its payload —
-//! the payload lives in the [`crate::store::BlobStore`], written once no
-//! matter how many entries, ranks or iterations share it. Stubs never
-//! appear in shm (staging stays inline so recovery needs no blob
-//! resolution); [`crate::engine::Storage`] converts on the way down and
-//! back up.
+//! * **v1** (PR-2 era) — entries had no params field, bare codec tags;
+//!   the reader assigns historical default parameters ([`CodecSpec::of`]).
+//! * **v2** — codec params, no pipeline tail; entries decode as
+//!   degenerate one-stage pipelines.
+//! * **v3** — content-addressed *stub* form of v2: identical header and
+//!   entry metadata, but each entry carries a [`BlobKey`] (64-bit content
+//!   hash + length) instead of its payload — the payload lives in the
+//!   [`crate::store::BlobStore`], written once no matter how many
+//!   entries, ranks or iterations share it. Stubs never appear in shm
+//!   (staging stays inline so recovery needs no blob resolution);
+//!   [`crate::engine::Storage`] converts on the way down and back up.
+//! * **v4** — current inline form: each entry's codec field is a full
+//!   pipeline (head spec + lossless stage tail).
+//! * **v5** — the stub form of v4 (what [`serialize_cas`] now writes).
 
 use crate::compress::delta::{CompressedCheckpoint, CompressedEntry};
-use crate::compress::{CodecId, CodecParams, CodecSpec, CompressError, CompressedTensor};
+use crate::compress::{
+    CodecId, CodecParams, CodecSpec, CompressError, CompressedTensor, PipelineSpec, StageId,
+    MAX_TAIL_STAGES,
+};
 use crate::store::BlobKey;
 use crate::tensor::{DType, StateKind};
 
 pub const MAGIC: &[u8; 4] = b"BSNP";
-pub const VERSION: u32 = 2;
+pub const VERSION: u32 = 4;
 /// PR-2-era container version: entry headers carry a bare codec tag.
 pub const VERSION_LEGACY: u32 = 1;
-/// Content-addressed stub container: entries reference payloads by
-/// [`BlobKey`] instead of carrying them inline.
+/// PR-3-era container version: codec params, no pipeline tail.
+pub const VERSION_PARAMS: u32 = 2;
+/// Content-addressed stub container (v2-era entry metadata): entries
+/// reference payloads by [`BlobKey`] instead of carrying them inline.
 pub const VERSION_CAS: u32 = 3;
+/// Content-addressed stub container with pipeline tails — the stub form
+/// of [`VERSION`], and what [`serialize_cas`] writes.
+pub const VERSION_CAS_PIPELINE: u32 = 5;
+
+/// Whether a peeked container version is one of the content-addressed
+/// stub forms ([`VERSION_CAS`] or [`VERSION_CAS_PIPELINE`]) — what the
+/// storage layer routes through blob resolution instead of the inline
+/// reader.
+pub fn is_stub_version(version: u32) -> bool {
+    version == VERSION_CAS || version == VERSION_CAS_PIPELINE
+}
 
 /// Peek a container's format version without CRC-verifying it (`None`
 /// when the bytes are too short or the magic is foreign) — how storage
@@ -129,7 +152,40 @@ fn read_legacy_spec(r: &mut Reader<'_>) -> Result<CodecSpec, CompressError> {
     Ok(CodecSpec::of(codec))
 }
 
-/// Serialize a compressed checkpoint to container bytes (version 2).
+/// Append a full codec pipeline: the head spec (tag + params) followed by
+/// `n_tail u8` lossless stage tags in apply order. Shared by the v4
+/// container entry, the v5 stub entry and the v4 manifest serializers.
+fn write_pipeline(out: &mut Vec<u8>, spec: PipelineSpec) {
+    out.push(spec.head.id.tag());
+    write_params(out, spec.head.params);
+    let tail = spec.tail();
+    out.push(tail.len() as u8);
+    for st in tail {
+        out.push(st.tag());
+    }
+}
+
+/// Read a codec pipeline (head spec + stage tail) and validate it.
+fn read_pipeline(r: &mut Reader<'_>) -> Result<PipelineSpec, CompressError> {
+    let head = read_spec(r)?;
+    let n_tail = r.u8()? as usize;
+    if n_tail > MAX_TAIL_STAGES {
+        return Err(CompressError::Format(format!("pipeline tail too long ({n_tail} stages)")));
+    }
+    let mut tail = Vec::with_capacity(n_tail);
+    for _ in 0..n_tail {
+        let tag = r.u8()?;
+        tail.push(
+            StageId::from_tag(tag)
+                .ok_or_else(|| CompressError::Format(format!("bad stage tag {tag}")))?,
+        );
+    }
+    let spec = PipelineSpec::stacked(head, &tail);
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// Serialize a compressed checkpoint to container bytes (version 4).
 pub fn serialize(ckpt: &CompressedCheckpoint) -> Vec<u8> {
     let payload: usize = ckpt.payload_bytes();
     let mut out = Vec::with_capacity(payload + 64 * ckpt.entries.len() + 64);
@@ -145,8 +201,7 @@ pub fn serialize(ckpt: &CompressedCheckpoint) -> Vec<u8> {
         out.extend_from_slice(name);
         out.push(e.kind.tag());
         out.push(e.compressed.dtype.tag());
-        out.push(e.compressed.spec.id.tag());
-        write_params(&mut out, e.compressed.spec.params);
+        write_pipeline(&mut out, e.compressed.spec);
         out.push(e.compressed.shape.len() as u8);
         for &d in &e.compressed.shape {
             out.extend_from_slice(&(d as u64).to_le_bytes());
@@ -193,9 +248,10 @@ impl<'a> Reader<'a> {
 
 /// Deserialize and CRC-verify a container. A CRC mismatch (torn write,
 /// corrupt memory) is an error — the recovery protocol treats it as a
-/// broken checkpoint and falls back to an older iteration. Accepts both
-/// the current version and [`VERSION_LEGACY`] containers (whose entries
-/// get their historical default codec params).
+/// broken checkpoint and falls back to an older iteration. Accepts the
+/// current version plus [`VERSION_PARAMS`] (no stage tails) and
+/// [`VERSION_LEGACY`] containers (bare codec tags with historical
+/// default params); both decode as degenerate one-stage pipelines.
 pub fn deserialize(data: &[u8]) -> Result<CompressedCheckpoint, CompressError> {
     if data.len() < 4 + 4 + 8 + 8 + 1 + 4 + 8 {
         return Err(CompressError::Format("container too short".into()));
@@ -210,14 +266,13 @@ pub fn deserialize(data: &[u8]) -> Result<CompressedCheckpoint, CompressError> {
         return Err(CompressError::Format("bad magic".into()));
     }
     let version = r.u32()?;
-    if version == VERSION_CAS {
-        return Err(CompressError::Format(
-            "version 3 container is a content-addressed stub; resolve it through Storage \
-             (deserialize_cas + blob fetch)"
-                .into(),
-        ));
+    if version == VERSION_CAS || version == VERSION_CAS_PIPELINE {
+        return Err(CompressError::Format(format!(
+            "version {version} container is a content-addressed stub; resolve it through \
+             Storage (deserialize_cas + blob fetch)"
+        )));
     }
-    if version != VERSION && version != VERSION_LEGACY {
+    if version != VERSION && version != VERSION_PARAMS && version != VERSION_LEGACY {
         return Err(CompressError::Format(format!("unsupported version {version}")));
     }
     let iteration = r.u64()?;
@@ -233,10 +288,10 @@ pub fn deserialize(data: &[u8]) -> Result<CompressedCheckpoint, CompressError> {
             .ok_or_else(|| CompressError::Format("bad state kind".into()))?;
         let dtype = DType::from_tag(r.u8()?)
             .ok_or_else(|| CompressError::Format("bad dtype".into()))?;
-        let spec = if version == VERSION_LEGACY {
-            read_legacy_spec(&mut r)?
-        } else {
-            read_spec(&mut r)?
+        let spec = match version {
+            VERSION_LEGACY => PipelineSpec::of(read_legacy_spec(&mut r)?),
+            VERSION_PARAMS => PipelineSpec::of(read_spec(&mut r)?),
+            _ => read_pipeline(&mut r)?,
         };
         let ndim = r.u8()? as usize;
         let mut shape = Vec::with_capacity(ndim);
@@ -262,15 +317,15 @@ pub fn deserialize(data: &[u8]) -> Result<CompressedCheckpoint, CompressError> {
     Ok(ckpt)
 }
 
-/// One entry of a content-addressed (version 3) container: everything a
-/// [`CompressedEntry`] records except the payload, which lives in the
-/// blob store under `key`.
+/// One entry of a content-addressed (version 3 or 5) container:
+/// everything a [`CompressedEntry`] records except the payload, which
+/// lives in the blob store under `key`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CasEntry {
     pub name: String,
     pub kind: StateKind,
     pub dtype: DType,
-    pub spec: CodecSpec,
+    pub spec: PipelineSpec,
     pub shape: Vec<usize>,
     pub key: BlobKey,
 }
@@ -347,13 +402,13 @@ impl CasContainer {
     }
 }
 
-/// Serialize a stub container (version 3; layout mirrors the inline
-/// form, with `blob hash u64 | blob len u64` in place of
+/// Serialize a stub container (version 5; layout mirrors the inline
+/// v4 form, with `blob hash u64 | blob len u64` in place of
 /// `payload_len | payload`).
 pub fn serialize_cas(c: &CasContainer) -> Vec<u8> {
     let mut out = Vec::with_capacity(96 * c.entries.len() + 64);
     out.extend_from_slice(MAGIC);
-    out.extend_from_slice(&VERSION_CAS.to_le_bytes());
+    out.extend_from_slice(&VERSION_CAS_PIPELINE.to_le_bytes());
     out.extend_from_slice(&c.iteration.to_le_bytes());
     out.extend_from_slice(&c.base_iteration.to_le_bytes());
     out.push(if c.is_base() { 0 } else { 1 });
@@ -364,8 +419,7 @@ pub fn serialize_cas(c: &CasContainer) -> Vec<u8> {
         out.extend_from_slice(name);
         out.push(e.kind.tag());
         out.push(e.dtype.tag());
-        out.push(e.spec.id.tag());
-        write_params(&mut out, e.spec.params);
+        write_pipeline(&mut out, e.spec);
         out.push(e.shape.len() as u8);
         for &d in &e.shape {
             out.extend_from_slice(&(d as u64).to_le_bytes());
@@ -378,7 +432,9 @@ pub fn serialize_cas(c: &CasContainer) -> Vec<u8> {
     out
 }
 
-/// Deserialize and CRC-verify a stub container.
+/// Deserialize and CRC-verify a stub container. Accepts the current
+/// [`VERSION_CAS_PIPELINE`] and the v2-era [`VERSION_CAS`] (whose
+/// entries decode as degenerate one-stage pipelines).
 pub fn deserialize_cas(data: &[u8]) -> Result<CasContainer, CompressError> {
     if data.len() < 4 + 4 + 8 + 8 + 1 + 4 + 8 {
         return Err(CompressError::Format("stub container too short".into()));
@@ -393,7 +449,7 @@ pub fn deserialize_cas(data: &[u8]) -> Result<CasContainer, CompressError> {
         return Err(CompressError::Format("bad magic".into()));
     }
     let version = r.u32()?;
-    if version != VERSION_CAS {
+    if version != VERSION_CAS && version != VERSION_CAS_PIPELINE {
         return Err(CompressError::Format(format!("not a stub container (version {version})")));
     }
     let iteration = r.u64()?;
@@ -409,7 +465,11 @@ pub fn deserialize_cas(data: &[u8]) -> Result<CasContainer, CompressError> {
             .ok_or_else(|| CompressError::Format("bad state kind".into()))?;
         let dtype = DType::from_tag(r.u8()?)
             .ok_or_else(|| CompressError::Format("bad dtype".into()))?;
-        let spec = read_spec(&mut r)?;
+        let spec = if version == VERSION_CAS {
+            PipelineSpec::of(read_spec(&mut r)?)
+        } else {
+            read_pipeline(&mut r)?
+        };
         let ndim = r.u8()? as usize;
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
@@ -430,13 +490,19 @@ pub fn deserialize_cas(data: &[u8]) -> Result<CasContainer, CompressError> {
 }
 
 pub const MANIFEST_MAGIC: &[u8; 4] = b"BSNM";
-pub const MANIFEST_VERSION: u32 = 2;
+/// Current manifest version: per-rank codec *pipelines* plus an explicit
+/// `has_blobs` flag (v2/v3 encoded blob presence in the version number).
+pub const MANIFEST_VERSION: u32 = 4;
 /// PR-2-era manifest version: per-rank codecs are bare tags.
 pub const MANIFEST_VERSION_LEGACY: u32 = 1;
-/// Content-addressed manifest version: entries additionally record the
-/// per-rank payload [`BlobKey`]s, so cross-rank dedup (tied embeddings
-/// saved by several ranks resolving to one blob) is visible — and
-/// auditable — at the manifest level without reading any rank container.
+/// PR-3-era manifest version: codec params, no blob keys, no tails.
+pub const MANIFEST_VERSION_PARAMS: u32 = 2;
+/// Content-addressed manifest version (read-only since v4): entries
+/// additionally record the per-rank payload [`BlobKey`]s, so cross-rank
+/// dedup (tied embeddings saved by several ranks resolving to one blob)
+/// is visible — and auditable — at the manifest level without reading
+/// any rank container. v4 keeps the capability behind its `has_blobs`
+/// flag.
 pub const MANIFEST_VERSION_CAS: u32 = 3;
 
 /// One global tensor's record in a sharded-checkpoint manifest: where its
@@ -453,10 +519,11 @@ pub struct ManifestEntry {
     pub stage: usize,
     /// `mp + 1` element offsets: mp rank `r` holds `[bounds[r], bounds[r + 1])`.
     pub bounds: Vec<usize>,
-    /// Codec spec each mp rank wrote for its slice (index = mp rank) —
-    /// parameters included, so recovery tooling can audit cluster
-    /// counts/thresholds without re-reading the rank containers.
-    pub codecs: Vec<CodecSpec>,
+    /// Codec pipeline each mp rank wrote for its slice (index = mp rank)
+    /// — parameters and stage tails included, so recovery tooling can
+    /// audit cluster counts/thresholds/entropy stages without re-reading
+    /// the rank containers.
+    pub codecs: Vec<PipelineSpec>,
     /// Content key of each mp rank's encoded payload (index = mp rank).
     /// Filled by CAS-era saves (len == mp, making the manifest version
     /// 3); empty when the manifest predates the store — the rank
@@ -501,21 +568,22 @@ impl ShardManifest {
     }
 }
 
-/// Serialize a shard manifest (layout mirrors the container format).
-/// Writes version 3 when every entry carries its per-rank blob keys
-/// (CAS-era saves), version 2 otherwise — so manifests without blob
-/// information stay byte-identical to what PR-4 wrote.
+/// Serialize a shard manifest (layout mirrors the container format;
+/// always version 4). Blob-key presence is an explicit `has_blobs` flag
+/// after the entry count: 1 when every entry carries its per-rank blob
+/// keys (CAS-era saves), 0 otherwise — v2/v3 encoded the same
+/// distinction in the version number.
 pub fn serialize_manifest(m: &ShardManifest) -> Vec<u8> {
     let with_blobs = !m.entries.is_empty() && m.entries.iter().all(|e| e.blobs.len() == m.mp);
-    let version = if with_blobs { MANIFEST_VERSION_CAS } else { MANIFEST_VERSION };
     let mut out = Vec::with_capacity(64 + 96 * m.entries.len());
     out.extend_from_slice(MANIFEST_MAGIC);
-    out.extend_from_slice(&version.to_le_bytes());
+    out.extend_from_slice(&MANIFEST_VERSION.to_le_bytes());
     out.extend_from_slice(&m.iteration.to_le_bytes());
     out.extend_from_slice(&m.base_iteration.to_le_bytes());
     out.extend_from_slice(&(m.mp as u32).to_le_bytes());
     out.extend_from_slice(&(m.pp as u32).to_le_bytes());
     out.extend_from_slice(&(m.entries.len() as u32).to_le_bytes());
+    out.push(if with_blobs { 1 } else { 0 });
     for e in &m.entries {
         let name = e.name.as_bytes();
         out.extend_from_slice(&(name.len() as u16).to_le_bytes());
@@ -531,8 +599,7 @@ pub fn serialize_manifest(m: &ShardManifest) -> Vec<u8> {
             out.extend_from_slice(&(b as u64).to_le_bytes());
         }
         for &c in &e.codecs {
-            out.push(c.id.tag());
-            write_params(&mut out, c.params);
+            write_pipeline(&mut out, c);
         }
         if with_blobs {
             for k in &e.blobs {
@@ -549,8 +616,9 @@ pub fn serialize_manifest(m: &ShardManifest) -> Vec<u8> {
 /// Deserialize and CRC-verify a shard manifest, validating the recorded
 /// layout (monotonic exhaustive bounds, stages inside the pp range) so a
 /// corrupt manifest cannot direct a restore to misassemble tensors.
-/// Accepts both the current version and [`MANIFEST_VERSION_LEGACY`]
-/// (bare codec tags → historical default params).
+/// Accepts every version back to [`MANIFEST_VERSION_LEGACY`] (bare codec
+/// tags → historical default params); pre-v4 codecs decode as degenerate
+/// one-stage pipelines.
 pub fn deserialize_manifest(data: &[u8]) -> Result<ShardManifest, CompressError> {
     if data.len() < 4 + 4 + 8 + 8 + 4 + 4 + 4 + 8 {
         return Err(CompressError::Format("manifest too short".into()));
@@ -565,10 +633,7 @@ pub fn deserialize_manifest(data: &[u8]) -> Result<ShardManifest, CompressError>
         return Err(CompressError::Format("bad manifest magic".into()));
     }
     let version = r.u32()?;
-    if version != MANIFEST_VERSION_CAS
-        && version != MANIFEST_VERSION
-        && version != MANIFEST_VERSION_LEGACY
-    {
+    if !(MANIFEST_VERSION_LEGACY..=MANIFEST_VERSION).contains(&version) {
         return Err(CompressError::Format(format!("unsupported manifest version {version}")));
     }
     let iteration = r.u64()?;
@@ -579,6 +644,15 @@ pub fn deserialize_manifest(data: &[u8]) -> Result<ShardManifest, CompressError>
         return Err(CompressError::Format("manifest mp/pp must be >= 1".into()));
     }
     let n_entries = r.u32()? as usize;
+    let with_blobs = if version >= MANIFEST_VERSION {
+        match r.u8()? {
+            0 => false,
+            1 => true,
+            f => return Err(CompressError::Format(format!("bad manifest blob flag {f}"))),
+        }
+    } else {
+        version == MANIFEST_VERSION_CAS
+    };
     let mut entries = Vec::with_capacity(n_entries);
     for _ in 0..n_entries {
         let name_len = r.u16()? as usize;
@@ -609,15 +683,17 @@ pub fn deserialize_manifest(data: &[u8]) -> Result<ShardManifest, CompressError>
         }
         let mut codecs = Vec::with_capacity(mp);
         for _ in 0..mp {
-            let spec = if version == MANIFEST_VERSION_LEGACY {
-                read_legacy_spec(&mut r)?
-            } else {
-                read_spec(&mut r)?
+            let spec = match version {
+                MANIFEST_VERSION_LEGACY => PipelineSpec::of(read_legacy_spec(&mut r)?),
+                MANIFEST_VERSION_PARAMS | MANIFEST_VERSION_CAS => {
+                    PipelineSpec::of(read_spec(&mut r)?)
+                }
+                _ => read_pipeline(&mut r)?,
             };
             codecs.push(spec);
         }
         let mut blobs = Vec::new();
-        if version == MANIFEST_VERSION_CAS {
+        if with_blobs {
             blobs.reserve(mp);
             for _ in 0..mp {
                 blobs.push(BlobKey { hash: r.u64()?, len: r.u64()? });
@@ -679,9 +755,10 @@ mod tests {
     fn entry_params_roundtrip_through_the_container() {
         let sd = StateDict::synthetic_gpt(1 << 12, 9);
         let mut plan = CheckpointPlan::uniform(Policy::raw());
-        plan.set("optimizer.0.exp_avg", TensorDirective::Quantize(CodecSpec::cluster_quant(64)));
-        plan.set("optimizer.0.exp_avg_sq", TensorDirective::Quantize(CodecSpec::prune(0.25)));
-        plan.set("optimizer.0.master", TensorDirective::Quantize(CodecSpec::block_quant(512)));
+        let quantize = |s: CodecSpec| TensorDirective::Quantize(s.into());
+        plan.set("optimizer.0.exp_avg", quantize(CodecSpec::cluster_quant(64)));
+        plan.set("optimizer.0.exp_avg_sq", quantize(CodecSpec::prune(0.25)));
+        plan.set("optimizer.0.master", quantize(CodecSpec::block_quant(512)));
         let (ckpt, _) = compress_state_dict_planned(&sd, None, &plan, 5, 5).unwrap();
         let back = deserialize(&serialize(&ckpt)).unwrap();
         let spec_of = |name: &str| {
@@ -730,7 +807,7 @@ mod tests {
                     shape: vec![64],
                     stage: 0,
                     bounds: vec![0, 32, 64],
-                    codecs: vec![CodecSpec::of(CodecId::BitmaskPacked), CodecSpec::raw()],
+                    codecs: vec![PipelineSpec::of(CodecId::BitmaskPacked), PipelineSpec::raw()],
                     blobs: vec![],
                 },
                 ManifestEntry {
@@ -740,7 +817,10 @@ mod tests {
                     shape: vec![64],
                     stage: 1,
                     bounds: vec![0, 32, 64],
-                    codecs: vec![CodecSpec::cluster_quant(64), CodecSpec::cluster_quant(16)],
+                    codecs: vec![
+                        CodecSpec::cluster_quant(64).into(),
+                        CodecSpec::cluster_quant(16).into(),
+                    ],
                     blobs: vec![],
                 },
             ],
@@ -793,7 +873,7 @@ mod tests {
         assert!(!stub.is_base());
         assert_eq!(stub.entries.len(), ckpt.entries.len());
         let bytes = serialize_cas(&stub);
-        assert_eq!(peek_version(&bytes), Some(VERSION_CAS));
+        assert_eq!(peek_version(&bytes), Some(VERSION_CAS_PIPELINE));
         let back = deserialize_cas(&bytes).unwrap();
         assert_eq!(back, stub);
         // a stub is not an inline container — the strict reader refuses
@@ -828,7 +908,7 @@ mod tests {
     }
 
     #[test]
-    fn manifest_with_blob_keys_roundtrips_as_version_3() {
+    fn manifest_with_blob_keys_sets_the_blob_flag() {
         let mut m = sample_manifest();
         for (i, e) in m.entries.iter_mut().enumerate() {
             e.blobs = vec![
@@ -837,7 +917,9 @@ mod tests {
             ];
         }
         let bytes = serialize_manifest(&m);
-        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), MANIFEST_VERSION_CAS);
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), MANIFEST_VERSION);
+        // has_blobs flag sits right after the entry count
+        assert_eq!(bytes[4 + 4 + 8 + 8 + 4 + 4 + 4], 1);
         let back = deserialize_manifest(&bytes).unwrap();
         assert_eq!(back, m);
         // identical payloads across ranks are visible as repeated keys
@@ -851,23 +933,59 @@ mod tests {
     }
 
     #[test]
-    fn manifest_without_blob_keys_stays_version_2() {
+    fn manifest_without_blob_keys_clears_the_blob_flag() {
         // partial blob info (not every entry, or not every rank) must not
-        // produce a half-v3 manifest
+        // produce a half-flagged manifest
+        let flag_at = 4 + 4 + 8 + 8 + 4 + 4 + 4;
         let bytes = serialize_manifest(&sample_manifest());
-        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), MANIFEST_VERSION);
+        assert_eq!(bytes[flag_at], 0);
         let mut partial = sample_manifest();
         partial.entries[0].blobs = vec![BlobKey { hash: 1, len: 2 }]; // len != mp
         let bytes = serialize_manifest(&partial);
-        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), MANIFEST_VERSION);
+        assert_eq!(bytes[flag_at], 0);
         let back = deserialize_manifest(&bytes).unwrap();
         assert!(back.entries.iter().all(|e| e.blobs.is_empty()));
     }
 
     #[test]
+    fn stacked_pipelines_roundtrip_through_every_format() {
+        let stacked = PipelineSpec::stacked(CodecId::BitmaskPacked, &[StageId::Huffman]);
+        // inline v4: a delta save planned with a stacked model pipeline
+        let sd = StateDict::synthetic_gpt(1 << 12, 41);
+        let mut cur = sd.clone();
+        cur.perturb_model_states(0.05, 42);
+        let mut plan = CheckpointPlan::uniform(Policy::lossless());
+        plan.set_model_pipeline(stacked);
+        let (ckpt, _) = compress_state_dict_planned(&cur, Some(&sd), &plan, 120, 100).unwrap();
+        assert!(
+            ckpt.entries.iter().any(|e| e.compressed.spec == stacked),
+            "plan should have produced at least one stacked entry"
+        );
+        let back = deserialize(&serialize(&ckpt)).unwrap();
+        for (a, b) in ckpt.entries.iter().zip(&back.entries) {
+            assert_eq!(a.compressed.spec, b.compressed.spec);
+            assert_eq!(a.compressed.payload, b.compressed.payload);
+        }
+        // stub v5 keeps the tail too
+        let stub = CasContainer::of(&ckpt);
+        let stub_back = deserialize_cas(&serialize_cas(&stub)).unwrap();
+        assert_eq!(stub_back, stub);
+        assert!(stub_back.entries.iter().any(|e| e.spec == stacked));
+        // manifest v4 records stacked per-rank codecs
+        let mut m = sample_manifest();
+        m.entries[0].codecs = vec![stacked, PipelineSpec::raw()];
+        let m_back = deserialize_manifest(&serialize_manifest(&m)).unwrap();
+        assert_eq!(m_back, m);
+        assert_eq!(m_back.entries[0].codecs[0].tail(), &[StageId::Huffman]);
+    }
+
+    #[test]
     fn peek_version_routes_formats() {
         assert_eq!(peek_version(&serialize(&ckpt(8, 3, 3))), Some(VERSION));
-        assert_eq!(peek_version(&serialize_cas(&CasContainer::of(&ckpt(8, 3, 3)))), Some(3));
+        assert_eq!(
+            peek_version(&serialize_cas(&CasContainer::of(&ckpt(8, 3, 3)))),
+            Some(VERSION_CAS_PIPELINE)
+        );
         assert_eq!(peek_version(b"BSN"), None);
         assert_eq!(peek_version(b"JUNKJUNK"), None);
         // manifest magic is a different family

@@ -243,7 +243,7 @@ mod tests {
                 shape: e.tensor.shape().to_vec(),
                 stage: entry_stage(ei, sd.len(), p.pp),
                 bounds: shard_bounds(e.tensor.len(), p.mp),
-                codecs: vec![crate::compress::CodecSpec::raw(); p.mp],
+                codecs: vec![crate::compress::PipelineSpec::raw(); p.mp],
                 blobs: vec![],
             })
             .collect();

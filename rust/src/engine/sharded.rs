@@ -36,7 +36,7 @@ use crate::compress::delta::{
     compress_entry_planned, decompress_state_dict, CompressTimings, CompressedCheckpoint,
     CompressedEntry, Policy,
 };
-use crate::compress::{CodecSpec, CompressError};
+use crate::compress::{CompressError, PipelineSpec};
 use crate::obs::{Span, Tracer};
 use crate::store::BlobKey;
 use crate::tensor::StateDict;
@@ -727,7 +727,7 @@ fn build_manifest(
 ) -> Result<ShardManifest, CompressError> {
     // index each rank's spec/blob lists once — this runs on the blocking
     // save path, and a linear scan per (entry, rank) would be quadratic
-    let rank_codecs: Vec<HashMap<&str, CodecSpec>> = per_rank
+    let rank_codecs: Vec<HashMap<&str, PipelineSpec>> = per_rank
         .iter()
         .map(|r| r.entry_specs.iter().map(|(n, c)| (n.as_str(), *c)).collect())
         .collect();
@@ -870,13 +870,14 @@ mod tests {
         let base = eng.manifest(0).unwrap();
         assert!(base.is_base());
         for e in &base.entries {
-            assert_eq!(e.codecs, vec![CodecSpec::raw(); 2], "{}", e.name);
+            assert_eq!(e.codecs, vec![PipelineSpec::raw(); 2], "{}", e.name);
         }
         let delta = eng.manifest(10).unwrap();
         for e in &delta.entries {
             assert_eq!(e.codecs.len(), 2);
             if e.kind == crate::tensor::StateKind::ModelState {
-                assert_eq!(e.codecs, vec![CodecSpec::of(CodecId::BitmaskPacked); 2], "{}", e.name);
+                let expect = vec![PipelineSpec::of(CodecId::BitmaskPacked); 2];
+                assert_eq!(e.codecs, expect, "{}", e.name);
             }
         }
         cleanup(&cfg_copy);

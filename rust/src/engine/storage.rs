@@ -309,7 +309,7 @@ impl Storage {
             return Ok(bytes);
         };
         match container::peek_version(&bytes) {
-            Some(container::VERSION_CAS) => {
+            Some(v) if container::is_stub_version(v) => {
                 let stub = container::deserialize_cas(&bytes).map_err(invalid_data)?;
                 let ckpt = stub
                     .resolve(|k| cas.get(k).map_err(crate::compress::CompressError::Io))
@@ -435,7 +435,7 @@ impl Storage {
             }
             let Ok(bytes) = fs::read(&path) else { continue };
             match container::peek_version(&bytes) {
-                Some(container::VERSION_CAS) => {
+                Some(v) if container::is_stub_version(v) => {
                     if let Ok(stub) = container::deserialize_cas(&bytes) {
                         decoded_any = true;
                         if !stub.is_base() {
@@ -493,7 +493,7 @@ impl Storage {
                     continue;
                 }
                 let Ok(bytes) = fs::read(&path) else { continue };
-                if container::peek_version(&bytes) == Some(container::VERSION_CAS) {
+                if container::peek_version(&bytes).is_some_and(container::is_stub_version) {
                     if let Ok(stub) = container::deserialize_cas(&bytes) {
                         for key in stub.keys() {
                             rc.acquire(key);
@@ -658,7 +658,7 @@ impl Storage {
                 }
                 let Ok(bytes) = fs::read(&path) else { continue };
                 match container::peek_version(&bytes) {
-                    Some(container::VERSION_CAS) => {
+                    Some(v) if container::is_stub_version(v) => {
                         if let Ok(stub) = container::deserialize_cas(&bytes) {
                             for key in stub.keys() {
                                 logical += key.len;
@@ -949,7 +949,7 @@ mod tests {
         // first read: bit-exact bytes back, and the file converts to a stub
         assert_eq!(s.get(42, 0).unwrap(), bytes);
         let on_disk = fs::read(s.rank_path(42, 0)).unwrap();
-        assert_eq!(container::peek_version(&on_disk), Some(container::VERSION_CAS));
+        assert_eq!(container::peek_version(&on_disk), Some(container::VERSION_CAS_PIPELINE));
         assert!(s.stats().unwrap().blob_count > 0);
         // second read resolves through the CAS, still bit-exact
         assert_eq!(s.get(42, 0).unwrap(), bytes);

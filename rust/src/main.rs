@@ -63,6 +63,9 @@ fn print_help() {
          \n\
          SUBCOMMANDS\n\
            train         --model gpt-nano --steps 50 --save-every 10 [--policy bitsnap|lossless|raw]\n\
+                         [--codec 'delta|huffman'] (pin one model-state codec pipeline:\n\
+                         head [raw|delta|coo|huffman|byte_group|cluster_quant=M|...] then up to\n\
+                         2 lossless stages from byte_group|huffman; static planning only)\n\
                          [--adaptive] [--target-ratio 3.0] [--mp 2] [--pp 2] [--out results/run]\n\
                          [--redundancy 2] [--max-cached 5] [--workers N] (encode worker pool;\n\
                          default = available cores; output is byte-identical for any N)\n\
@@ -76,10 +79,12 @@ fn print_help() {
                          for it, \"skip\" drops the new save; artifacts byte-identical to sync)\n\
                          (needs a build with --features xla)\n\
            compress      --params 1048576 [--change-rate 0.15] [--policy bitsnap|lossless]\n\
+                         [--codec 'delta|huffman'] (same pipeline grammar as train)\n\
            inspect       --dir <storage root> | --histogram --model gpt-nano --steps 20\n\
            adapt-report  [--params 1048576] [--saves 9] [--write-bps 3.5e9] [--measure]\n\
                          [--target-ratio 3.0] [--fixed-clusters 16]\n\
                          [--sharded --mp 2 --pp 2] [--json results/adapt_report.json]\n\
+                         [--sharded --codec 'delta|huffman'] (static baseline's model pipeline)\n\
            table1        (no flags) print the paper's Table-1 analytical model\n\
            recover       --ranks 4 --fail-rank 1 (Fig. 4 walkthrough on real stores)\n\
                          [--sharded --mp 2 --pp 2] (mp x pp save / recover / reshard demo)\n\
@@ -162,7 +167,13 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         persist,
     }
     .with_env_overrides();
+    // --codec 'delta|huffman' pins one model-state pipeline for the whole
+    // run (static planning only — the adaptive controller picks its own)
+    let codec = parse_codec_flag(args)?;
     let mut engine = if args.has("adaptive") {
+        if codec.is_some() {
+            return Err("--codec pins a static pipeline; drop it or drop --adaptive".into());
+        }
         // one controller per rank probing its own shard; throughput
         // knowledge is pooled through the shared calibration. The
         // user-level --target-ratio becomes the cluster search's ratio
@@ -177,6 +188,12 @@ fn cmd_train(args: &Args) -> Result<(), String> {
             let cost = CostModel::shared(shared.clone(), write_bps).with_encode_workers(workers);
             let acfg = bitsnap::adapt::AdaptiveConfig { target_ratio, ..Default::default() };
             Box::new(AdaptivePolicy::new(acfg, cost))
+        })
+        .map_err(|e| e.to_string())?
+    } else if let Some(pipe) = codec {
+        use bitsnap::adapt::StaticPolicySource;
+        ShardedCheckpointEngine::with_policy_sources(cfg, move |_| {
+            Box::new(StaticPolicySource::with_model_pipeline(policy, pipe))
         })
         .map_err(|e| e.to_string())?
     } else {
@@ -339,17 +356,22 @@ fn cmd_train(_args: &Args) -> Result<(), String> {
 }
 
 fn cmd_compress(args: &Args) -> Result<(), String> {
-    use bitsnap::compress::delta::compress_state_dict_timed;
+    use bitsnap::compress::delta::{compress_state_dict_planned, CheckpointPlan};
     use bitsnap::tensor::StateDict;
     let params: usize = args.get_parse("params").unwrap_or(1 << 20);
     let change_rate: f64 = args.get_parse("change-rate").unwrap_or(0.15);
     let policy = parse_policy(args.get("policy").unwrap_or("bitsnap"))?;
+    let mut plan = CheckpointPlan::uniform(policy);
+    if let Some(p) = parse_codec_flag(args)? {
+        println!("model codec pipeline: {p}");
+        plan.set_model_pipeline(p);
+    }
     let base = StateDict::synthetic_gpt(params, 1);
     let mut curr = base.clone();
     curr.perturb_model_states(change_rate, 2);
     let t0 = std::time::Instant::now();
-    let (ckpt, timings) =
-        compress_state_dict_timed(&curr, Some(&base), policy, 1, 0).map_err(|e| e.to_string())?;
+    let (ckpt, timings) = compress_state_dict_planned(&curr, Some(&base), &plan, 1, 0)
+        .map_err(|e| e.to_string())?;
     let wall = t0.elapsed();
     let raw = curr.total_bytes();
     let comp = ckpt.payload_bytes();
@@ -403,7 +425,7 @@ fn cmd_adapt_report(args: &Args) -> Result<(), String> {
     stages[0].saves = saves - 2 * per;
     simulate_trajectory(params, &stages, max_cached, &mut policy).map_err(|e| e.to_string())?;
 
-    let codec_mix = |codecs: &[(bitsnap::compress::CodecSpec, usize)]| {
+    let codec_mix = |codecs: &[(bitsnap::compress::PipelineSpec, usize)]| {
         codecs
             .iter()
             .map(|(c, n)| format!("{}x{n}", c.label()))
@@ -489,8 +511,15 @@ fn cmd_adapt_report_sharded(
         write_bps / 1e9
     );
 
-    let mut static_sources: Vec<StaticPolicySource> =
-        (0..p.world()).map(|_| StaticPolicySource::new(Policy::bitsnap())).collect();
+    // --codec swaps the static baseline's model pipeline (same grammar as
+    // train --codec), so "static vs adaptive" can compare any pipeline
+    let codec = parse_codec_flag(args)?;
+    let mut static_sources: Vec<StaticPolicySource> = (0..p.world())
+        .map(|_| match codec {
+            Some(pipe) => StaticPolicySource::with_model_pipeline(Policy::bitsnap(), pipe),
+            None => StaticPolicySource::new(Policy::bitsnap()),
+        })
+        .collect();
     let static_saves =
         simulate_sharded_trajectory(params, &stages, max_cached, p, &mut static_sources)
             .map_err(|e| e.to_string())?;
@@ -913,5 +942,16 @@ fn parse_policy(s: &str) -> Result<Policy, String> {
         "lossless" => Ok(Policy::lossless()),
         "raw" => Ok(Policy::raw()),
         other => Err(format!("unknown policy {other:?} (bitsnap|lossless|raw)")),
+    }
+}
+
+/// `--codec <pipeline>`: one model-state codec pipeline in the shared
+/// `head|stage|stage` grammar (e.g. `delta|huffman`), overriding the
+/// policy's model half. One parser everywhere — CLI, adapt-report and
+/// bench configs all go through [`bitsnap::compress::PipelineSpec::parse`].
+fn parse_codec_flag(args: &Args) -> Result<Option<bitsnap::compress::PipelineSpec>, String> {
+    match args.get("codec") {
+        None => Ok(None),
+        Some(s) => bitsnap::compress::PipelineSpec::parse(s).map(Some).map_err(|e| e.to_string()),
     }
 }

@@ -9,13 +9,22 @@
 //! to. Every float in the quantized payloads was chosen so the decode
 //! arithmetic is exact in f32, making "bit-exact" a meaningful check
 //! rather than a tolerance.
+//!
+//! The `pr9_*` generation (`scripts/gen_pr9_fixtures.py`) extends the
+//! ladder across the pipeline redesign: a params-era v2 container that
+//! must upgrade to the v4 inline-pipeline layout bit-exactly, a v4
+//! container with stacked lossless stage tails that must self-read and
+//! re-serialize byte-identically, and a v3 CAS manifest that must
+//! upgrade to the flagged v4 manifest layout.
 
 use bitsnap::compress::delta::decompress_state_dict;
-use bitsnap::compress::{CodecId, CodecSpec};
+use bitsnap::compress::{CodecId, CodecSpec, PipelineSpec, StageId};
 use bitsnap::engine::container::{
-    deserialize, deserialize_manifest, serialize, MANIFEST_VERSION_LEGACY, VERSION_LEGACY,
+    deserialize, deserialize_manifest, serialize, serialize_manifest, MANIFEST_VERSION,
+    MANIFEST_VERSION_CAS, MANIFEST_VERSION_LEGACY, VERSION, VERSION_LEGACY, VERSION_PARAMS,
 };
 use bitsnap::engine::reassemble_state_dict;
+use bitsnap::store::BlobKey;
 use bitsnap::tensor::StateDict;
 
 fn fixture(name: &str) -> Vec<u8> {
@@ -61,8 +70,8 @@ fn pr2_delta_chain_decodes_bit_exactly() {
     let spec_of = |name: &str| {
         delta.entries.iter().find(|e| e.name == name).unwrap().compressed.spec
     };
-    assert_eq!(spec_of("layers.0.weight").id, CodecId::BitmaskPacked);
-    assert_eq!(spec_of("layers.0.bias").id, CodecId::CooU16);
+    assert_eq!(spec_of("layers.0.weight").head.id, CodecId::BitmaskPacked);
+    assert_eq!(spec_of("layers.0.bias").head.id, CodecId::CooU16);
     let sd = decompress_state_dict(&delta, Some(&base)).unwrap();
     assert_eq!(concat_bytes(&sd), fixture("pr2_delta_expected.bin"));
 }
@@ -81,6 +90,58 @@ fn pr2_sharded_manifest_and_rank_containers_reassemble_bit_exactly() {
         .collect();
     let full = reassemble_state_dict(&manifest, &shards).unwrap();
     assert_eq!(concat_bytes(&full), fixture("pr2_sharded_expected.bin"));
+}
+
+#[test]
+fn pr9_params_v2_container_decodes_and_upgrades_to_v4_bit_exactly() {
+    // the intermediate generation: codec params, no pipeline tail
+    // (scripts/gen_pr9_fixtures.py)
+    let v2 = fixture("pr9_params.bsnp");
+    assert_eq!(u32::from_le_bytes(v2[4..8].try_into().unwrap()), VERSION_PARAMS);
+    let ckpt = deserialize(&v2).unwrap();
+    // pre-pipeline entries decode as degenerate no-tail pipelines
+    for e in &ckpt.entries {
+        assert!(e.compressed.spec.tail().is_empty(), "{}", e.name);
+    }
+    let sd = decompress_state_dict(&ckpt, None).unwrap();
+    assert_eq!(concat_bytes(&sd), fixture("pr9_params_expected.bin"));
+    // the v2→v4 upgrade is pinned byte-for-byte against a hand-authored
+    // twin: same entries, explicit empty stage tails
+    assert_eq!(serialize(&ckpt), fixture("pr9_params_upgraded.bsnp"));
+}
+
+#[test]
+fn pr9_stacked_v4_container_self_reads_bit_exactly() {
+    let bytes = fixture("pr9_stacked.bsnp");
+    assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), VERSION);
+    let ckpt = deserialize(&bytes).unwrap();
+    let spec_of = |name: &str| {
+        ckpt.entries.iter().find(|e| e.name == name).unwrap().compressed.spec
+    };
+    assert_eq!(spec_of("layers.0.weight").tail(), &[StageId::Huffman]);
+    assert_eq!(spec_of("layers.0.bias").tail(), &[StageId::ByteGroup, StageId::Huffman]);
+    assert!(spec_of("optimizer.0.master").tail().is_empty());
+    // staged payloads invert through the real stage decoders
+    let sd = decompress_state_dict(&ckpt, None).unwrap();
+    assert_eq!(concat_bytes(&sd), fixture("pr9_stacked_expected.bin"));
+    // serialize ∘ deserialize is the byte identity on the current format
+    assert_eq!(serialize(&ckpt), bytes);
+}
+
+#[test]
+fn pr9_cas_manifest_upgrades_to_the_flagged_v4_layout() {
+    let v3 = fixture("pr9_manifest_cas.bsnm");
+    assert_eq!(u32::from_le_bytes(v3[4..8].try_into().unwrap()), MANIFEST_VERSION_CAS);
+    let m = deserialize_manifest(&v3).unwrap();
+    assert_eq!((m.mp, m.pp), (2, 1));
+    let w = &m.entries[0];
+    assert_eq!(w.codecs, vec![PipelineSpec::of(CodecId::BitmaskPacked), PipelineSpec::raw()]);
+    assert_eq!(w.blobs[0], BlobKey { hash: 0x1122_3344_5566_7788, len: 100 });
+    // reserializing writes the v4 flag-byte layout with everything intact
+    let v4 = serialize_manifest(&m);
+    assert_eq!(u32::from_le_bytes(v4[4..8].try_into().unwrap()), MANIFEST_VERSION);
+    assert_eq!(v4[4 + 4 + 8 + 8 + 4 + 4 + 4], 1, "has_blobs flag");
+    assert_eq!(deserialize_manifest(&v4).unwrap(), m);
 }
 
 #[test]
@@ -115,7 +176,7 @@ fn legacy_fixtures_load_bit_exactly_through_the_cas_read_path() {
     // straight on disk) read through CAS-backed Storage: payloads are
     // imported into the blob store on first touch, the rank files become
     // version-3 stubs, and every decode stays bit-exact before and after
-    use bitsnap::engine::container::VERSION_CAS;
+    use bitsnap::engine::container::VERSION_CAS_PIPELINE;
     use bitsnap::engine::Storage;
 
     let root = std::env::temp_dir().join(format!("bsnp-golden-cas-{}", std::process::id()));
@@ -139,9 +200,9 @@ fn legacy_fixtures_load_bit_exactly_through_the_cas_read_path() {
     let delta = decompress_state_dict(&delta_ckpt, Some(&base)).unwrap();
     assert_eq!(concat_bytes(&delta), fixture("pr2_delta_expected.bin"));
 
-    // the legacy files are now stubs backed by blobs
+    // the legacy files are now stubs backed by blobs (current stub form)
     let on_disk = std::fs::read(root.join("iter0000000100").join("rank0.bsnp")).unwrap();
-    assert_eq!(u32::from_le_bytes(on_disk[4..8].try_into().unwrap()), VERSION_CAS);
+    assert_eq!(u32::from_le_bytes(on_disk[4..8].try_into().unwrap()), VERSION_CAS_PIPELINE);
     assert!(storage.stats().unwrap().blob_count > 0);
 
     // second read resolves through the CAS — still bit-exact

@@ -16,7 +16,7 @@ use std::path::PathBuf;
 
 use bitsnap::adapt::{AdaptiveConfig, AdaptivePolicy, Calibration, CostModel, StageConfig};
 use bitsnap::compress::delta::Policy;
-use bitsnap::compress::{CodecId, CodecSpec};
+use bitsnap::compress::{CodecId, CodecSpec, PipelineSpec};
 use bitsnap::engine::{container, CheckpointEngine, EngineConfig, Storage};
 use bitsnap::tensor::{StateDict, StateKind};
 
@@ -83,7 +83,7 @@ fn adaptive_policy_switches_codecs_across_training_stages() {
 
     // inspect what actually landed in storage: per-entry codec tags
     let mut delta_model_codecs: HashSet<CodecId> = HashSet::new();
-    let mut master_spec_at: Vec<(u64, CodecSpec)> = Vec::new();
+    let mut master_spec_at: Vec<(u64, PipelineSpec)> = Vec::new();
     for &(iteration, _) in &snapshots {
         let ckpt = container::deserialize(&storage.get(iteration, 0).unwrap()).unwrap();
         for e in &ckpt.entries {
@@ -115,10 +115,10 @@ fn adaptive_policy_switches_codecs_across_training_stages() {
     assert_eq!(late_master, CodecSpec::raw(), "master stays lossless near convergence");
     // the cluster count itself adapted across stages: containers carry
     // more than one distinct ClusterQuant parameterization over the run
-    let distinct_cluster_specs: HashSet<CodecSpec> = master_spec_at
+    let distinct_cluster_specs: HashSet<PipelineSpec> = master_spec_at
         .iter()
         .map(|(_, s)| *s)
-        .filter(|s| s.id == CodecId::ClusterQuant)
+        .filter(|s| s.head.id == CodecId::ClusterQuant)
         .collect();
     assert!(
         distinct_cluster_specs.len() >= 2,

@@ -105,7 +105,7 @@ impl PolicySource for PoisonOnce {
         if ctx.iteration == self.fail_iteration {
             plan.set(
                 "layers.0.weight#mp0",
-                TensorDirective::Delta(CodecSpec::of(CodecId::ClusterQuant)),
+                TensorDirective::Delta(CodecSpec::of(CodecId::ClusterQuant).into()),
             );
         }
         plan
