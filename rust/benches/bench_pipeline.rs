@@ -15,12 +15,14 @@
 //!   host the assertion is physically unsatisfiable and is skipped with
 //!   a loud warning (determinism is still asserted).
 //!
-//! A third, single-rep arm re-runs workers=4 with the span tracer
-//! enabled and asserts its CRC equals the untraced arm's — tracing must
-//! not change a single persisted byte. Its event file is left at env
-//! `TRACE_OUT` (default `events.jsonl`) for the CI trace-schema check;
-//! the arm is deliberately NOT part of `BENCH_pipeline.json` (the
-//! regression gate's baseline arrays are arm-count-exact).
+//! A third, single-rep arm re-runs workers=4 with the span tracer AND
+//! the run ledger enabled and asserts its CRC equals the untraced
+//! arm's — observability must not change a single persisted byte. Its
+//! event file is left at env `TRACE_OUT` (default `events.jsonl`) and
+//! its ledger at env `LEDGER_OUT` (default `ledger.jsonl`) for the CI
+//! schema checks; the arm is deliberately NOT part of
+//! `BENCH_pipeline.json` (the regression gate's baseline arrays are
+//! arm-count-exact).
 //!
 //! Emits `BENCH_pipeline.json` (override with env `BENCH_OUT`) — the CI
 //! bench-regression gate re-checks the equal-bytes fields and ratio
@@ -124,11 +126,12 @@ fn run_arm(params: usize, p: Parallelism, workers: usize) -> ArmResult {
     }
 }
 
-/// One traced rep of the workers=4 arm: drives the identical save
-/// trajectory with the span tracer on, returns the artifact CRC (the
-/// caller asserts it equals the untraced pooled arm's), and copies the
-/// event file to env `TRACE_OUT` (default `events.jsonl`) for the CI
-/// schema check.
+/// One instrumented rep of the workers=4 arm: drives the identical save
+/// trajectory with the span tracer and the run ledger on, returns the
+/// artifact CRC (the caller asserts it equals the untraced pooled
+/// arm's), and copies the event file to env `TRACE_OUT` (default
+/// `events.jsonl`) and the ledger to env `LEDGER_OUT` (default
+/// `ledger.jsonl`) for the CI schema checks.
 fn run_traced_arm(params: usize, p: Parallelism) -> u64 {
     let pid = std::process::id();
     let tag = format!("bench-pipe-traced-{pid}");
@@ -138,6 +141,7 @@ fn run_traced_arm(params: usize, p: Parallelism) -> u64 {
     let _ = std::fs::remove_dir_all(&store_root);
     let storage = Storage::new(&store_root).unwrap();
     let events_path = storage.tracer().enable(store_root.join("trace")).unwrap();
+    let ledger_path = storage.ledger().enable(&store_root).unwrap();
     let cfg = ShardedEngineConfig {
         job: tag.clone(),
         parallelism: p,
@@ -168,6 +172,8 @@ fn run_traced_arm(params: usize, p: Parallelism) -> u64 {
     drop(eng);
     let trace_out = std::env::var("TRACE_OUT").unwrap_or_else(|_| "events.jsonl".to_string());
     std::fs::copy(&events_path, &trace_out).expect("copy trace events");
+    let ledger_out = std::env::var("LEDGER_OUT").unwrap_or_else(|_| "ledger.jsonl".to_string());
+    std::fs::copy(&ledger_path, &ledger_out).expect("copy run ledger");
     let _ = std::fs::remove_dir_all(&shm_root);
     let _ = std::fs::remove_dir_all(&store_root);
     crc
@@ -231,13 +237,13 @@ fn main() {
         println!("WARNING: single-core host — skipping the strict speedup assertion");
     }
 
-    // traced arm: tracing must not change a single persisted byte
+    // instrumented arm: tracing + ledger must not change a persisted byte
     let traced_crc = run_traced_arm(params, p);
     assert_eq!(
         pooled.output_crc, traced_crc,
-        "tracing must not change a single persisted byte"
+        "tracing/ledger must not change a single persisted byte"
     );
-    println!("traced arm byte-identical to untraced (crc64 {traced_crc:#018x})");
+    println!("instrumented arm byte-identical to untraced (crc64 {traced_crc:#018x})");
 
     let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_pipeline.json".to_string());
     let arm_json = |a: &ArmResult| {

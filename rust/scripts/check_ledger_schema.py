@@ -1,0 +1,313 @@
+#!/usr/bin/env python3
+"""Ledger-schema gate: validate a BitSnap run ledger line by line.
+
+The run ledger (``rust/src/obs/ledger.rs``) appends one JSON object per
+save / restore / GC / scrub to ``<storage root>/ledger.jsonl``. The
+``bitsnap doctor`` anomaly detectors and any external consumer (capacity
+dashboards, fleet reports) parse that file, so its shape is a contract.
+This gate re-checks it on the ledger the instrumented bench arm produces
+in CI:
+
+* every line is a standalone JSON object (JSONL, no arrays, no blanks),
+  except that an invalid-JSON **final** line is tolerated with a note —
+  the writer appends without fsync barriers, so a crash can tear the
+  tail, and the Rust reader (``parse_ledger``) skips exactly that case;
+* the envelope on every row: ``schema`` == 1, ``event`` one of
+  ``save`` / ``restore`` / ``gc`` / ``scrub``, ``ts_us`` int >= 0;
+* per event type, the exact field set with required types (a
+  producer-side rename or addition must be a deliberate schema bump, not
+  silent drift);
+* value domains: ``kind`` in {base, delta}; restore ``mode`` in {load,
+  recover, adopt_resharded}; gc ``mode`` in {execute, dry_run};
+  ``stage`` null or early/mid/late; ``probe_rel_mse`` null or a
+  non-negative number; ``pipelines`` an array of non-empty strings;
+  every counter/byte/wall field a non-negative int;
+* at least one row (an empty ledger means recording silently never
+  fired).
+
+Usage:
+  check_ledger_schema.py <ledger.jsonl>
+  check_ledger_schema.py --self-test
+
+``--self-test`` verifies the gate itself catches injected schema breaks.
+"""
+
+import argparse
+import json
+import sys
+
+SCHEMA = 1
+
+ENVELOPE = {
+    "schema": int,
+    "event": str,
+    "ts_us": int,
+}
+
+# exact per-event field sets, envelope excluded
+EVENT_FIELDS = {
+    "save": {
+        "iteration": int,
+        "kind": str,
+        "mp": int,
+        "pp": int,
+        "workers": int,
+        "kernel": str,
+        "async": bool,
+        "raw_bytes": int,
+        "compressed_bytes": int,
+        "model_raw_bytes": int,
+        "model_compressed_bytes": int,
+        "opt_raw_bytes": int,
+        "opt_compressed_bytes": int,
+        "pipelines": list,
+        "plan_us": int,
+        "encode_us": int,
+        "commit_us": int,
+        "stall_us": int,
+        "skipped_total": int,
+        "probe_rel_mse": (int, float, type(None)),
+        "stage": (str, type(None)),
+        "logical_bytes_total": int,
+        "physical_bytes_total": int,
+    },
+    "restore": {
+        "iteration": int,
+        "mode": str,
+        "bytes": int,
+        "wall_us": int,
+        "ok": bool,
+    },
+    "gc": {
+        "mode": str,
+        "pruned_iterations": int,
+        "live_iterations": int,
+        "deleted_blobs": int,
+        "pinned_blobs": int,
+        "reclaimed_bytes": int,
+        "wall_us": int,
+    },
+    "scrub": {
+        "deep": bool,
+        "blobs_checked": int,
+        "corrupt_blobs": int,
+        "missing_blobs": int,
+        "orphan_blobs": int,
+        "pinned_inflight": int,
+        "broken_chains": int,
+        "deep_checked": int,
+        "deep_failures": int,
+        "wall_us": int,
+        "clean": bool,
+    },
+}
+
+DOMAINS = {
+    ("save", "kind"): {"base", "delta"},
+    ("save", "stage"): {"early", "mid", "late", None},
+    ("restore", "mode"): {"load", "recover", "adopt_resharded"},
+    ("gc", "mode"): {"execute", "dry_run"},
+}
+
+
+def type_ok(value, want):
+    """isinstance with JSON semantics: bool is not an int."""
+    if want is int or want == (int,):
+        return isinstance(value, int) and not isinstance(value, bool)
+    if isinstance(want, tuple) and bool not in want:
+        if isinstance(value, bool):
+            return False
+    return isinstance(value, want)
+
+
+def check_lines(lines):
+    """Validate decoded JSONL lines; returns (failures, notes)."""
+    fails = []
+    notes = []
+    rows = []
+    last = len(lines)
+    for n, raw in enumerate(lines, start=1):
+        if not raw.strip():
+            fails.append(f"line {n}: blank line in JSONL stream")
+            continue
+        try:
+            row = json.loads(raw)
+        except ValueError as e:
+            if n == last:
+                # the one tolerated malformation: a crash-torn tail,
+                # matching the Rust reader's contract
+                notes.append(f"line {n}: torn final line skipped ({e})")
+            else:
+                fails.append(f"line {n}: not valid JSON: {e}")
+            continue
+        if not isinstance(row, dict):
+            fails.append(f"line {n}: not a JSON object")
+            continue
+        rows.append((n, row))
+
+    for n, row in rows:
+        for key, want in ENVELOPE.items():
+            if key not in row:
+                fails.append(f"line {n}: missing envelope key {key!r}")
+            elif not type_ok(row[key], want):
+                fails.append(
+                    f"line {n}: {key}={row[key]!r} has the wrong type "
+                    f"(got {type(row[key]).__name__})"
+                )
+        schema = row.get("schema")
+        if type_ok(schema, int) and schema != SCHEMA:
+            fails.append(f"line {n}: schema {schema} != {SCHEMA}")
+        ts = row.get("ts_us")
+        if type_ok(ts, int) and ts < 0:
+            fails.append(f"line {n}: ts_us {ts} < 0")
+
+        event = row.get("event")
+        if not isinstance(event, str):
+            continue
+        fields = EVENT_FIELDS.get(event)
+        if fields is None:
+            fails.append(f"line {n}: unknown event {event!r}")
+            continue
+        for key, want in fields.items():
+            if key not in row:
+                fails.append(f"line {n}: {event} row missing key {key!r}")
+            elif not type_ok(row[key], want):
+                fails.append(
+                    f"line {n}: {key}={row[key]!r} has the wrong type "
+                    f"(got {type(row[key]).__name__})"
+                )
+            elif want is int and row[key] < 0:
+                fails.append(f"line {n}: {key} {row[key]} < 0")
+        for key in row:
+            if key not in fields and key not in ENVELOPE:
+                fails.append(f"line {n}: {event} row has unexpected key {key!r}")
+
+        for (ev, key), allowed in DOMAINS.items():
+            if ev != event or key not in row:
+                continue
+            if row[key] not in allowed:
+                fails.append(f"line {n}: {key}={row[key]!r} not in {sorted(map(str, allowed))}")
+        if event == "save":
+            mse = row.get("probe_rel_mse")
+            if isinstance(mse, (int, float)) and not isinstance(mse, bool) and mse < 0:
+                fails.append(f"line {n}: probe_rel_mse {mse} < 0")
+            pipelines = row.get("pipelines")
+            if isinstance(pipelines, list):
+                for p in pipelines:
+                    if not isinstance(p, str) or not p:
+                        fails.append(f"line {n}: pipeline label {p!r} is not a non-empty string")
+
+    if not rows and not fails:
+        fails.append("ledger is empty: recording never fired")
+    return fails, notes
+
+
+def check_file(path):
+    try:
+        with open(path) as f:
+            lines = f.read().splitlines()
+    except OSError as e:
+        print(f"ERROR: cannot read {path}: {e}", file=sys.stderr)
+        return 1
+    fails, notes = check_lines(lines)
+    for note in notes:
+        print(f"note {path}: {note}")
+    if fails:
+        print(f"FAIL: {len(fails)} ledger schema violation(s) in {path}:", file=sys.stderr)
+        for f in fails:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"OK   {path}: {len(lines)} rows conform to the ledger schema")
+    return 0
+
+
+def self_test():
+    """The gate must catch what it claims to catch."""
+    ok = [
+        '{"schema": 1, "event": "save", "ts_us": 1000, "iteration": 10, '
+        '"kind": "base", "mp": 2, "pp": 2, "workers": 4, "kernel": "wide", '
+        '"async": false, "raw_bytes": 4096, "compressed_bytes": 1024, '
+        '"model_raw_bytes": 2048, "model_compressed_bytes": 512, '
+        '"opt_raw_bytes": 2048, "opt_compressed_bytes": 512, '
+        '"pipelines": ["bitmask|rle", "cluster8|rle"], "plan_us": 5, '
+        '"encode_us": 100, "commit_us": 20, "stall_us": 125, '
+        '"skipped_total": 0, "probe_rel_mse": 0.004, "stage": "early", '
+        '"logical_bytes_total": 4096, "physical_bytes_total": 900}',
+        '{"schema": 1, "event": "restore", "ts_us": 2000, "iteration": 10, '
+        '"mode": "recover", "bytes": 4096, "wall_us": 40, "ok": true}',
+        '{"schema": 1, "event": "gc", "ts_us": 3000, "mode": "execute", '
+        '"pruned_iterations": 1, "live_iterations": 2, "deleted_blobs": 3, '
+        '"pinned_blobs": 0, "reclaimed_bytes": 512, "wall_us": 15}',
+        '{"schema": 1, "event": "scrub", "ts_us": 4000, "deep": false, '
+        '"blobs_checked": 9, "corrupt_blobs": 0, "missing_blobs": 0, '
+        '"orphan_blobs": 1, "pinned_inflight": 0, "broken_chains": 0, '
+        '"deep_checked": 0, "deep_failures": 0, "wall_us": 8, "clean": true}',
+    ]
+
+    def mutate(idx, **kv):
+        lines = list(ok)
+        row = json.loads(lines[idx])
+        for k, v in kv.items():
+            if v is ...:
+                row.pop(k, None)
+            else:
+                row[k] = v
+        lines[idx] = json.dumps(row)
+        return lines
+
+    def fails_of(lines):
+        return check_lines(lines)[0]
+
+    null_mse = mutate(0, probe_rel_mse=None, stage=None)
+    cases = [
+        ("clean pass", fails_of(ok), False),
+        ("null probe_rel_mse and stage", fails_of(null_mse), False),
+        ("torn final line tolerated", fails_of(ok + [ok[0][:37]]), False),
+        ("torn line mid-stream", fails_of([ok[0][:37]] + ok[1:]), True),
+        ("blank line mid-stream", fails_of([ok[0], "", ok[1]]), True),
+        ("wrong schema version", fails_of(mutate(0, schema=2)), True),
+        ("unknown event", fails_of(mutate(1, event="prune")), True),
+        ("missing save field", fails_of(mutate(0, stall_us=...)), True),
+        ("unexpected extra key", fails_of(mutate(0, wall_secs=1.5)), True),
+        ("string byte count", fails_of(mutate(0, raw_bytes="4096")), True),
+        ("bool smuggled as int", fails_of(mutate(0, workers=True)), True),
+        ("bad save kind", fails_of(mutate(0, kind="incremental")), True),
+        ("bad restore mode", fails_of(mutate(1, mode="rewind")), True),
+        ("bad gc mode", fails_of(mutate(2, mode="force")), True),
+        ("bad stage", fails_of(mutate(0, stage="warmup")), True),
+        ("negative probe_rel_mse", fails_of(mutate(0, probe_rel_mse=-0.1)), True),
+        ("negative wall", fails_of(mutate(3, wall_us=-1)), True),
+        ("non-string pipeline label", fails_of(mutate(0, pipelines=["ok", 3])), True),
+        ("clean flag as string", fails_of(mutate(3, clean="true")), True),
+        ("empty ledger", fails_of([]), True),
+    ]
+    failed = False
+    for name, fails, should_fail in cases:
+        caught = bool(fails)
+        verdict = "ok" if caught == should_fail else "BROKEN"
+        if caught != should_fail:
+            failed = True
+        print(f"self-test [{verdict}] {name}: {len(fails)} finding(s)")
+        for f in fails:
+            print(f"    {f}")
+    if failed:
+        print("self-test FAILED: the gate does not catch what it must", file=sys.stderr)
+        return 1
+    print("self-test passed: the gate fails on injected schema breaks and passes clean ledgers")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("ledger", nargs="?", help="path to a ledger.jsonl")
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+    if args.self_test:
+        sys.exit(self_test())
+    if not args.ledger:
+        ap.error("give a ledger.jsonl path or --self-test")
+    sys.exit(check_file(args.ledger))
+
+
+if __name__ == "__main__":
+    main()

@@ -360,6 +360,13 @@ fn worker_loop(
                 span.attr("snapshot_us", snapshot_us);
                 span.attr("wait_us", wait_us);
                 span.attr("stall_us", snapshot_us + wait_us);
+                // hand the engine's ledger the trainer-side stall split:
+                // only this plane sees it, and the save-row writer inside
+                // save_traced consumes it to mark the row async
+                engine.ledger().set_async_note(crate::obs::ledger::AsyncNote {
+                    stall_us: snapshot_us + wait_us,
+                    skipped_total: shared.skipped.load(Ordering::Relaxed),
+                });
                 let res = engine.save_with_parent(iteration, &snapshot, Some(span.id()));
                 match &res {
                     Ok(r) => span.set_bytes(r.compressed_bytes as u64),

@@ -27,7 +27,7 @@
 //! count. A failed (or panicked) encode aborts the save *before* any
 //! counter, shm or storage mutation, so the engine stays reusable.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeSet, HashMap, HashSet};
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
@@ -36,10 +36,11 @@ use crate::compress::delta::{
     compress_entry_planned, decompress_state_dict, CompressTimings, CompressedCheckpoint,
     CompressedEntry, Policy,
 };
-use crate::compress::{CompressError, PipelineSpec};
-use crate::obs::{Span, Tracer};
+use crate::compress::{CodecId, CodecParams, CompressError, PipelineSpec};
+use crate::obs::ledger::{RestoreRecord, SaveRecord};
+use crate::obs::{Ledger, Span, Tracer};
 use crate::store::BlobKey;
-use crate::tensor::StateDict;
+use crate::tensor::{StateDict, StateKind};
 use crate::train::parallel::{entry_stage, shard_bounds, shard_state_dict, Parallelism};
 
 use super::agent::{AgentStats, CheckpointEngine, EncodedSave, EngineConfig, SaveReport};
@@ -187,6 +188,13 @@ impl ShardedCheckpointEngine {
         self.storage.tracer()
     }
 
+    /// The run ledger shared with this engine's storage backend — same
+    /// sharing model as [`Self::tracer`]: enabling it on any clone makes
+    /// every save/restore/GC/scrub of this lineage append a row.
+    pub fn ledger(&self) -> &Ledger {
+        self.storage.ledger()
+    }
+
     /// Arm a one-shot failure for the next save's encode phase (the
     /// [`FailureKind`] names what a production crash would have
     /// corrupted). The save aborts exactly like a real encode error —
@@ -290,14 +298,34 @@ impl ShardedCheckpointEngine {
             ));
         }
         let shards = shard_state_dict(sd, self.parallelism);
+        let ledger = self.storage.ledger().clone();
         // phase 1 — plan
         let t_plan = Instant::now();
         let mut plan_span = tracer.span_with_parent("plan", Some(root.id()));
         let mut preps = Vec::with_capacity(shards.len());
+        // the ledger's precision view of this save: the detected training
+        // stage and the worst modeled rel-MSE across cluster-quant picks
+        let mut stage: Option<&'static str> = None;
+        let mut probe_rel_mse: Option<f64> = None;
         for (rank, shard) in shards.iter().enumerate() {
             preps.push(self.engines[rank].begin_save(iteration, shard));
-            if tracer.is_enabled() {
+            // draining consumes the records, so one loop feeds both
+            // planes; either one being live is reason enough to drain
+            if tracer.is_enabled() || ledger.is_enabled() {
                 for d in self.engines[rank].drain_decisions() {
+                    stage = Some(d.stage.as_str());
+                    if d.spec.head.id == CodecId::ClusterQuant {
+                        if let CodecParams::Clusters(m) = d.spec.head.params {
+                            let mse = crate::compress::cluster_quant::modeled_rel_mse(
+                                (m as usize).clamp(2, 256),
+                            );
+                            probe_rel_mse =
+                                Some(probe_rel_mse.map_or(mse, |worst: f64| worst.max(mse)));
+                        }
+                    }
+                    if !tracer.is_enabled() {
+                        continue;
+                    }
                     let mut attrs = vec![
                         ("rank", rank.to_string()),
                         ("tensor", d.name.clone()),
@@ -386,7 +414,15 @@ impl ShardedCheckpointEngine {
         let encode_workers = self.pool.workers();
         let t_commit = Instant::now();
         let mut commit_span = tracer.span_with_parent("commit", Some(root.id()));
-        let commit = || -> Result<Vec<SaveReport>, CompressError> {
+        // per-kind compression splits + pipeline labels for the save's
+        // ledger row, accumulated while the commit walks every entry
+        let mut model_bytes = (0u64, 0u64);
+        let mut opt_bytes = (0u64, 0u64);
+        let mut pipeline_labels = BTreeSet::new();
+        let commit = |model_bytes: &mut (u64, u64),
+                      opt_bytes: &mut (u64, u64),
+                      pipeline_labels: &mut BTreeSet<String>|
+         -> Result<Vec<SaveReport>, CompressError> {
             let mut encoded = encoded.into_iter();
             let mut per_rank = Vec::with_capacity(shards.len());
             for (rank, prep) in preps.into_iter().enumerate() {
@@ -403,6 +439,16 @@ impl ShardedCheckpointEngine {
                     // keeps the calibration's implied bytes/sec per-worker
                     encode += item_wall;
                     blobs.push(key);
+                    if ledger.is_enabled() {
+                        pipeline_labels.insert(compressed.spec.label());
+                        let acc = if e.kind == StateKind::ModelState {
+                            &mut *model_bytes
+                        } else {
+                            &mut *opt_bytes
+                        };
+                        acc.0 += e.tensor.byte_len() as u64;
+                        acc.1 += compressed.payload.len() as u64;
+                    }
                     entries.push(CompressedEntry {
                         name: e.name.clone(),
                         kind: e.kind,
@@ -418,7 +464,7 @@ impl ShardedCheckpointEngine {
             self.storage.put_manifest(iteration, &container::serialize_manifest(&manifest))?;
             Ok(per_rank)
         };
-        let per_rank = match commit() {
+        let per_rank = match commit(&mut model_bytes, &mut opt_bytes, &mut pipeline_labels) {
             Ok(per_rank) => per_rank,
             Err(e) => {
                 commit_span.fail(&e.to_string());
@@ -427,8 +473,45 @@ impl ShardedCheckpointEngine {
         };
         commit_span.end();
         let commit_wall = t_commit.elapsed();
-        let compressed_bytes = per_rank.iter().map(|r| r.compressed_bytes).sum();
+        let compressed_bytes: usize = per_rank.iter().map(|r| r.compressed_bytes).sum();
         let simulated_parallel = per_rank.iter().map(|r| r.blocking).max().unwrap_or_default();
+        if ledger.is_enabled() {
+            // async saves carry the trainer's real stall (planted by the
+            // persist handle); a sync save's stall is the save wall itself
+            let note = ledger.take_async_note();
+            let pipelines: Vec<String> = pipeline_labels.into_iter().collect();
+            let metrics = tracer.metrics();
+            ledger.record_save(&SaveRecord {
+                iteration,
+                kind: if will_base { "base" } else { "delta" },
+                mp: self.parallelism.mp,
+                pp: self.parallelism.pp,
+                workers: encode_workers,
+                kernel: crate::compress::kernels::active().name(),
+                is_async: note.is_some(),
+                raw_bytes: sd.total_bytes() as u64,
+                compressed_bytes: compressed_bytes as u64,
+                model_raw_bytes: model_bytes.0,
+                model_compressed_bytes: model_bytes.1,
+                opt_raw_bytes: opt_bytes.0,
+                opt_compressed_bytes: opt_bytes.1,
+                pipelines: &pipelines,
+                plan_us: plan_wall.as_micros() as u64,
+                encode_us: encode_wall.as_micros() as u64,
+                commit_us: commit_wall.as_micros() as u64,
+                stall_us: note
+                    .map_or(simulated_parallel.as_micros() as u64, |n| n.stall_us),
+                skipped_total: note.map_or(0, |n| n.skipped_total),
+                probe_rel_mse,
+                stage,
+                logical_bytes_total: metrics
+                    .counter_value("bitsnap_save_logical_bytes_total", &[])
+                    as u64,
+                physical_bytes_total: metrics
+                    .counter_value("bitsnap_save_physical_bytes_total", &[])
+                    as u64,
+            });
+        }
         Ok(ShardedSaveReport {
             iteration,
             is_base: will_base,
@@ -477,6 +560,7 @@ impl ShardedCheckpointEngine {
     /// each rank's delta decodes against the *resliced* base shard.
     pub fn load_iteration(&self, iteration: u64) -> Result<StateDict, CompressError> {
         let tracer = self.storage.tracer().clone();
+        let t0 = Instant::now();
         let mut root = tracer.span("restore");
         root.attr("iteration", iteration);
         let res = (|| {
@@ -487,6 +571,13 @@ impl ShardedCheckpointEngine {
             Ok(sd) => root.set_bytes(sd.total_bytes() as u64),
             Err(e) => root.fail(&e.to_string()),
         }
+        self.storage.ledger().record_restore(&RestoreRecord {
+            iteration,
+            mode: "load",
+            bytes: res.as_ref().map_or(0, |sd| sd.total_bytes() as u64),
+            wall_us: t0.elapsed().as_micros() as u64,
+            ok: res.is_ok(),
+        });
         res
     }
 
@@ -613,6 +704,7 @@ impl ShardedCheckpointEngine {
     /// [`crate::train::parallel::shard_state_dict`] as needed).
     pub fn adopt_resharded(&mut self, iteration: u64) -> Result<StateDict, CompressError> {
         let tracer = self.storage.tracer().clone();
+        let t0 = Instant::now();
         let mut span = tracer.span("adopt_resharded");
         span.attr("iteration", iteration);
         span.attr("mp", self.parallelism.mp);
@@ -622,6 +714,13 @@ impl ShardedCheckpointEngine {
             Ok(full) => span.set_bytes(full.total_bytes() as u64),
             Err(e) => span.fail(&e.to_string()),
         }
+        self.storage.ledger().record_restore(&RestoreRecord {
+            iteration,
+            mode: "adopt_resharded",
+            bytes: res.as_ref().map_or(0, |sd| sd.total_bytes() as u64),
+            wall_us: t0.elapsed().as_micros() as u64,
+            ok: res.is_ok(),
+        });
         res
     }
 
@@ -670,6 +769,7 @@ impl ShardedCheckpointEngine {
     /// ranks.
     pub fn recover_latest(&self) -> Result<Option<(u64, StateDict)>, CompressError> {
         let tracer = self.storage.tracer().clone();
+        let t0 = Instant::now();
         let mut span = tracer.span("recover");
         let res = self.recover_latest_inner(span.id());
         match &res {
@@ -680,6 +780,19 @@ impl ShardedCheckpointEngine {
             Ok(None) => span.attr("outcome", "no recoverable iteration"),
             Err(e) => span.fail(&e.to_string()),
         }
+        // an empty store recovering to "nothing" is a successful outcome,
+        // recorded as a zero-byte row at iteration 0
+        let (iteration, bytes) = match &res {
+            Ok(Some((i, sd))) => (*i, sd.total_bytes() as u64),
+            _ => (0, 0),
+        };
+        self.storage.ledger().record_restore(&RestoreRecord {
+            iteration,
+            mode: "recover",
+            bytes,
+            wall_us: t0.elapsed().as_micros() as u64,
+            ok: res.is_ok(),
+        });
         res
     }
 

@@ -31,7 +31,7 @@
 //! prices the bytes *physically* written, so dedup hits are (correctly)
 //! free.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::fs;
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -39,9 +39,13 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::obs::Tracer;
+use crate::obs::ledger::{GcRecord, ScrubRecord};
+use crate::obs::{Ledger, Tracer};
 use crate::store::gc::{chain_closure, retained, ChainInfo};
-use crate::store::{BlobKey, BlobStore, GcReport, RefCounts, RetentionPolicy, StoreStats};
+use crate::store::{
+    BlobKey, BlobStore, GcReport, RefCounts, RetentionPolicy, ScrubOptions, ScrubReport,
+    StoreStats,
+};
 
 use super::container::{self, CasContainer, CasEntry};
 
@@ -60,6 +64,9 @@ pub struct Storage {
     /// is shared across clones, that lights up agent threads spawned
     /// long before.
     tracer: Tracer,
+    /// The run ledger (`<root>/ledger.jsonl`), sharing the tracer's
+    /// enable-through-any-clone model. Disabled (free) by default.
+    ledger: Ledger,
     /// One-shot failure injection: when armed, the next `write_ckpt`
     /// "crashes" between blob pin and stub publish (see
     /// [`Storage::arm_crash_between_pin_and_publish`]). Shared across
@@ -79,6 +86,7 @@ impl Storage {
             throttle_bps: None,
             cas: Some(cas),
             tracer,
+            ledger: Ledger::disabled(),
             crash_after_pin: Arc::new(AtomicBool::new(false)),
         })
     }
@@ -95,6 +103,7 @@ impl Storage {
             throttle_bps: None,
             cas: None,
             tracer: Tracer::disabled(),
+            ledger: Ledger::disabled(),
             crash_after_pin: Arc::new(AtomicBool::new(false)),
         })
     }
@@ -116,6 +125,14 @@ impl Storage {
     /// storage (see [`crate::obs`]).
     pub fn tracer(&self) -> &Tracer {
         &self.tracer
+    }
+
+    /// The run ledger shared by everything built on this storage.
+    /// Disabled until someone calls `storage.ledger().enable(root)`
+    /// (conventionally the storage root itself, so the ledger lives next
+    /// to the checkpoints and survives restarts).
+    pub fn ledger(&self) -> &Ledger {
+        &self.ledger
     }
 
     /// Apply a simulated write-bandwidth cap (see module docs).
@@ -539,6 +556,7 @@ impl Storage {
     }
 
     fn gc_inner(&self, policy: &RetentionPolicy, execute: bool) -> std::io::Result<GcReport> {
+        let t0 = Instant::now();
         let mut span = self.tracer.span("gc");
         span.attr("keep_last", policy.keep_last);
         span.attr("keep_every", policy.keep_every);
@@ -557,6 +575,15 @@ impl Storage {
                     );
                 }
                 span.end();
+                self.ledger.record_gc(&GcRecord {
+                    mode: if execute { "execute" } else { "dry_run" },
+                    pruned_iterations: report.pruned_iterations.len() as u64,
+                    live_iterations: report.live_iterations.len() as u64,
+                    deleted_blobs: report.deleted_blobs as u64,
+                    pinned_blobs: report.pinned_blobs as u64,
+                    reclaimed_bytes: report.reclaimed_bytes,
+                    wall_us: t0.elapsed().as_micros() as u64,
+                });
                 Ok(report)
             }
             Err(e) => {
@@ -690,6 +717,172 @@ impl Storage {
             }
         }
         Ok(stats)
+    }
+
+    /// Scrub the store: re-verify every blob's stored bytes against its
+    /// content key, find blobs that are referenced but missing, count
+    /// orphans, and walk every delta chain for missing bases — with an
+    /// optional deep arm that decodes sampled rank containers end-to-end
+    /// through their restore chain (see [`ScrubOptions`]). Read-only;
+    /// nothing is repaired or deleted.
+    ///
+    /// Uses the **same** reachability scan as [`Storage::gc`] and shares
+    /// this process's pin table, so a blob an in-flight async save has
+    /// pinned but not yet published is reported as `pinned_inflight`,
+    /// never as damage. (From a *different* process the pins are
+    /// invisible and such blobs count as orphans — still clean.)
+    pub fn scrub(&self, opts: &ScrubOptions) -> std::io::Result<ScrubReport> {
+        let t0 = Instant::now();
+        let mut span = self.tracer.span("scrub");
+        span.attr("deep", opts.deep);
+        match self.scrub_body(opts) {
+            Ok(report) => {
+                span.attr("blobs_checked", report.blobs_checked);
+                span.attr("corrupt_blobs", report.corrupt_blobs.len());
+                span.attr("missing_blobs", report.missing_blobs.len());
+                span.attr("broken_chains", report.broken_chains.len());
+                span.attr("clean", report.is_clean());
+                span.end();
+                let metrics = self.tracer.metrics();
+                metrics.counter_add("bitsnap_scrub_runs_total", &[], 1.0);
+                metrics.gauge_set(
+                    "bitsnap_scrub_corrupt_blobs",
+                    &[],
+                    report.corrupt_blobs.len() as f64,
+                );
+                metrics.gauge_set(
+                    "bitsnap_scrub_missing_blobs",
+                    &[],
+                    report.missing_blobs.len() as f64,
+                );
+                metrics.gauge_set("bitsnap_scrub_orphan_blobs", &[], report.orphan_blobs as f64);
+                self.ledger.record_scrub(&ScrubRecord {
+                    deep: opts.deep,
+                    blobs_checked: report.blobs_checked,
+                    corrupt_blobs: report.corrupt_blobs.len() as u64,
+                    missing_blobs: report.missing_blobs.len() as u64,
+                    orphan_blobs: report.orphan_blobs,
+                    pinned_inflight: report.pinned_inflight,
+                    broken_chains: report.broken_chains.len() as u64,
+                    deep_checked: report.deep_checked,
+                    deep_failures: report.deep_failures.len() as u64,
+                    wall_us: t0.elapsed().as_micros() as u64,
+                    clean: report.is_clean(),
+                });
+                Ok(report)
+            }
+            Err(e) => {
+                span.fail(&e.to_string());
+                Err(e)
+            }
+        }
+    }
+
+    fn scrub_body(&self, opts: &ScrubOptions) -> std::io::Result<ScrubReport> {
+        let mut report = ScrubReport::default();
+        let iters = self.iterations()?;
+        if let Some(cas) = &self.cas {
+            // (1) every blob on disk: a full read re-verifies stored
+            // length and content hash against the key in the file name
+            for key in cas.keys()? {
+                report.blobs_checked += 1;
+                if let Err(e) = cas.get(&key) {
+                    report.corrupt_blobs.push((key, e.to_string()));
+                }
+            }
+            report.corrupt_blobs.sort_by_key(|(k, _)| *k);
+            // (2) every referenced blob must exist — the same stub +
+            // manifest reachability scan GC trusts
+            let refs = self.refcounts_for(&iters)?;
+            for (key, _) in refs.iter() {
+                if !cas.contains(key) {
+                    report.missing_blobs.push(*key);
+                }
+            }
+            report.missing_blobs.sort();
+            // (3) unreferenced blobs: pinned ones belong to an in-flight
+            // save (phase 1 done, stub not yet published); the rest are
+            // collectible orphans
+            for key in cas.keys()? {
+                if refs.is_referenced(&key) {
+                    continue;
+                }
+                if cas.is_pinned(&key) {
+                    report.pinned_inflight += 1;
+                } else {
+                    report.orphan_blobs += 1;
+                }
+            }
+        }
+        // (4) delta chains: every known base must still be present
+        let present: HashSet<u64> = iters.iter().copied().collect();
+        for &i in &iters {
+            if let ChainInfo::Known(bases) = self.chain_info_one(i)? {
+                for b in bases {
+                    if !present.contains(&b) {
+                        report.broken_chains.push((i, b));
+                    }
+                }
+            }
+        }
+        report.broken_chains.sort_unstable();
+        // (5) deep: decode the newest `sample` iterations end-to-end
+        // through their restore chains (CRC + codec round-trip)
+        if opts.deep {
+            let newest: Vec<u64> = iters.iter().rev().take(opts.sample).copied().collect();
+            for &i in &newest {
+                for rank in self.ranks_of(i)? {
+                    match self.deep_decode(i, rank, 0) {
+                        Ok(()) => report.deep_checked += 1,
+                        Err(e) => report.deep_failures.push(format!("iter{i} rank{rank}: {e}")),
+                    }
+                }
+            }
+        }
+        Ok(report)
+    }
+
+    /// Ranks with a container file at one iteration, ascending.
+    fn ranks_of(&self, iteration: u64) -> std::io::Result<Vec<usize>> {
+        let mut out = Vec::new();
+        for entry in fs::read_dir(self.iter_dir(iteration))? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(num) = name.strip_prefix("rank").and_then(|n| n.strip_suffix(".bsnp")) {
+                if let Ok(r) = num.parse::<usize>() {
+                    out.push(r);
+                }
+            }
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    /// Decode one rank's container through its full restore chain,
+    /// discarding the result — the decode itself (container CRC, blob
+    /// resolution, codec round-trip, delta application against the
+    /// recursively decoded base) is the verification.
+    fn deep_decode(&self, iteration: u64, rank: usize, depth: usize) -> std::io::Result<()> {
+        self.deep_decode_sd(iteration, rank, depth).map(|_| ())
+    }
+
+    fn deep_decode_sd(
+        &self,
+        iteration: u64,
+        rank: usize,
+        depth: usize,
+    ) -> std::io::Result<crate::tensor::StateDict> {
+        if depth > 64 {
+            return Err(std::io::Error::other("delta chain deeper than 64 links"));
+        }
+        let bytes = self.get(iteration, rank)?;
+        let ckpt = container::deserialize(&bytes).map_err(invalid_data)?;
+        let base = if ckpt.is_base() {
+            None
+        } else {
+            Some(self.deep_decode_sd(ckpt.base_iteration, rank, depth + 1)?)
+        };
+        crate::compress::delta::decompress_state_dict(&ckpt, base.as_ref()).map_err(invalid_data)
     }
 }
 

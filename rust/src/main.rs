@@ -13,6 +13,10 @@
 //!   store-stats   blob counts, live/dead bytes and dedup ratio of a store
 //!   trace-report  render the save timeline of a traced run (phase
 //!                 waterfall, slowest tensors, planner rationale)
+//!   scrub         re-verify every CAS blob, reference and delta chain
+//!                 (exit 1 when the store is damaged)
+//!   doctor        fold ledger + store stats + scrub + metrics into one
+//!                 health report (exit 2 on critical findings)
 //!
 //! `train` and `inspect --histogram` execute AOT-compiled XLA artifacts
 //! and need the crate built with `--features xla`; everything else is
@@ -37,6 +41,8 @@ fn main() {
         Some("gc") => cmd_gc(&args),
         Some("store-stats") => cmd_store_stats(&args),
         Some("trace-report") => cmd_trace_report(&args),
+        Some("scrub") => cmd_scrub(&args),
+        Some("doctor") => cmd_doctor(&args),
         Some("help") | None => {
             print_help();
             Ok(())
@@ -73,6 +79,8 @@ fn print_help() {
                          3 iterations plus every 100th)\n\
                          [--trace] (record the save timeline to <out>/storage/trace/ and dump\n\
                          the metrics registry; render with trace-report)\n\
+                         [--ledger] (append one row per save/restore/gc to\n\
+                         <out>/storage/ledger.jsonl — survives restarts; read with doctor)\n\
                          [--async-persist[=block|skip]] (snapshot-and-return saves: the loop\n\
                          stalls only for the state-dict snapshot while probe/encode/commit run\n\
                          on a background thread; at most one save in flight — \"block\" waits\n\
@@ -94,7 +102,15 @@ fn print_help() {
            store-stats   --dir <storage root> (blob counts, live/dead bytes, dedup ratio)\n\
            trace-report  --dir <storage root> [--save N] [--top 10]\n\
                          (phase waterfall, slowest tensors, per-codec throughput and\n\
-                         planner rationale from a train --trace / recover --trace run)\n\
+                         planner rationale from a train --trace / recover --trace run,\n\
+                         plus estimated latency quantiles from the metrics dump)\n\
+           scrub         --dir <storage root> [--deep] [--sample N]\n\
+                         (re-verify every blob's hash+length, find missing/orphaned\n\
+                         blobs and broken delta chains; --deep also decodes the N\n\
+                         newest iterations end-to-end. Exit 1 when damaged)\n\
+           doctor        --dir <storage root> [--deep] [--window N]\n\
+                         (one health report: run-ledger trends, store census, scrub\n\
+                         verdict and anomaly findings. Exit 2 on critical findings)\n\
            help          this text"
     );
 }
@@ -153,6 +169,13 @@ fn cmd_train(args: &Args) -> Result<(), String> {
         let p =
             storage.tracer().enable(storage.root().join("trace")).map_err(|e| e.to_string())?;
         println!("tracing save timeline to {}", p.display());
+    }
+    // --ledger appends one durable row per save/restore/gc to
+    // <out>/storage/ledger.jsonl; a restarted run keeps appending to the
+    // same file, which is what doctor's trend detectors read back
+    if args.has("ledger") {
+        let p = storage.ledger().enable(storage.root()).map_err(|e| e.to_string())?;
+        println!("recording run ledger to {}", p.display());
     }
     // a clone shares the CAS pin table, so GC during async persists is safe
     let gc_storage = storage.clone();
@@ -264,6 +287,9 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                     &[],
                     stall.as_secs_f64(),
                 );
+                // per-save stall distribution: trace-report and doctor
+                // estimate p50/p95/p99 from the histogram buckets
+                metrics.observe("bitsnap_trainer_stall_seconds", &[], stall.as_secs_f64());
                 if receipt.enqueued {
                     println!(
                         "  ckpt @{i} enqueued: stalled {:.2} ms (snapshot {:.2} + wait {:.2})",
@@ -287,6 +313,7 @@ fn cmd_train(args: &Args) -> Result<(), String> {
                     &[],
                     stall.as_secs_f64(),
                 );
+                metrics.observe("bitsnap_trainer_stall_seconds", &[], stall.as_secs_f64());
                 print_report(&r);
             }
             if let Some(policy) = &retention {
@@ -903,6 +930,50 @@ fn cmd_trace_report(args: &Args) -> Result<(), String> {
     if prom.is_file() {
         let text = std::fs::read_to_string(&prom).map_err(|e| e.to_string())?;
         print!("\nmetrics registry ({}):\n{text}", prom.display());
+        let quantiles = bitsnap::obs::render_histogram_quantiles(&text);
+        if !quantiles.is_empty() {
+            print!("\n{quantiles}");
+        }
+    }
+    Ok(())
+}
+
+/// Walk the CAS re-verifying every blob, reference and delta chain;
+/// `--deep` also decodes the newest iterations end-to-end through their
+/// restore chains. Read-only — exits 1 (without touching anything) when
+/// the store is damaged, so cron and CI can gate on it.
+fn cmd_scrub(args: &Args) -> Result<(), String> {
+    use bitsnap::store::ScrubOptions;
+    let dir = args.get("dir").ok_or("scrub needs --dir <storage root>")?;
+    let storage = Storage::new(dir).map_err(|e| e.to_string())?;
+    let opts = ScrubOptions {
+        deep: args.has("deep"),
+        sample: parse_opt_flag(args, "sample")?.unwrap_or(ScrubOptions::default().sample),
+    };
+    let report = storage.scrub(&opts).map_err(|e| e.to_string())?;
+    print!("{}", report.render());
+    if !report.is_clean() {
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// Fold the run ledger, store census, a scrub pass and the metrics dump
+/// into one health report with anomaly findings. Exits 2 when any
+/// finding is critical (corruption, ratio collapse, precision breach),
+/// so it can gate CI and cron the same way scrub does.
+fn cmd_doctor(args: &Args) -> Result<(), String> {
+    use bitsnap::obs::DoctorOptions;
+    let dir = args.get("dir").ok_or("doctor needs --dir <storage root>")?;
+    let storage = Storage::new(dir).map_err(|e| e.to_string())?;
+    let opts = DoctorOptions {
+        window: parse_opt_flag(args, "window")?.unwrap_or(DoctorOptions::default().window),
+        deep: args.has("deep"),
+    };
+    let report = bitsnap::obs::diagnose(&storage, &opts).map_err(|e| e.to_string())?;
+    print!("{}", report.render());
+    if report.has_critical() {
+        std::process::exit(2);
     }
     Ok(())
 }

@@ -1,0 +1,596 @@
+//! `bitsnap doctor` — the health plane's synthesis step (PR 10).
+//!
+//! [`diagnose`] folds four independent sources into one report: the run
+//! ledger (longitudinal — compression-ratio, stall and skip trends plus
+//! the planner's modeled precision), the store census
+//! ([`StoreStats`]), a fresh scrub pass ([`ScrubReport`]) and, when a
+//! traced run left a `trace/metrics.prom` dump behind, estimated latency
+//! quantiles. Findings rank [`Severity::Critical`] (data at risk or a
+//! guarantee broken — the `bitsnap doctor` CLI exits nonzero) above
+//! [`Severity::Warning`] (operational drift worth a look).
+//!
+//! The trend detectors are deliberately conservative: each needs a
+//! minimum number of ledger rows before it can fire, so a fresh run —
+//! or a store that never enabled the ledger — diagnoses `HEALTHY`
+//! rather than drowning the operator in cold-start noise.
+
+use std::fs;
+use std::io;
+
+use crate::adapt::{stage_precision_budget, TrainingStage};
+use crate::engine::Storage;
+use crate::store::{ScrubOptions, ScrubReport, StoreStats};
+
+use super::ledger::{load_ledger, LedgerRow, LEDGER_FILE};
+use super::report::render_histogram_quantiles;
+
+/// A save's compression ratio must stay above this fraction of the
+/// trailing-window median, or the drop is flagged critical.
+const RATIO_COLLAPSE_FACTOR: f64 = 0.5;
+/// Trainer stall regresses when the recent half's mean exceeds the
+/// earlier half's by this factor.
+const STALL_TREND_FACTOR: f64 = 2.0;
+/// Dedup-collapse only fires when the earlier epoch actually observed
+/// dedup (rate at least this), guarding against lossless/tiny stores.
+const DEDUP_PRIOR_MIN: f64 = 1.5;
+/// ...and the recent epoch stopped observing it (rate below this).
+const DEDUP_RECENT_COLLAPSED: f64 = 1.05;
+
+/// How bad a [`Finding`] is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Data at risk or a guarantee broken; `bitsnap doctor` exits
+    /// nonzero.
+    Critical,
+    /// Operational drift worth a look; does not change the exit code.
+    Warning,
+}
+
+impl Severity {
+    /// The report-rendering tag.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Critical => "CRITICAL",
+            Severity::Warning => "WARNING",
+        }
+    }
+}
+
+/// One anomaly the doctor found.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// How bad it is.
+    pub severity: Severity,
+    /// Stable machine-readable anomaly code (e.g. `"ratio-collapse"`).
+    pub code: &'static str,
+    /// Human-readable specifics, with the numbers that tripped the
+    /// detector.
+    pub detail: String,
+}
+
+/// What [`diagnose`] examines.
+#[derive(Clone, Copy, Debug)]
+pub struct DoctorOptions {
+    /// Trailing save-row window the trend detectors look at.
+    pub window: usize,
+    /// Run the slow deep arm of the embedded scrub (decode sampled
+    /// tensors end-to-end through their restore chains).
+    pub deep: bool,
+}
+
+impl Default for DoctorOptions {
+    fn default() -> Self {
+        Self { window: 8, deep: false }
+    }
+}
+
+/// The folded health report. `render()` is the CLI output;
+/// `has_critical()` drives the exit code.
+#[derive(Clone, Debug)]
+pub struct DoctorReport {
+    /// Anomalies, critical first.
+    pub findings: Vec<Finding>,
+    /// Whether a ledger file exists at the storage root.
+    pub ledger_present: bool,
+    /// Total ledger rows parsed.
+    pub ledger_rows: usize,
+    /// Save rows among them.
+    pub saves: usize,
+    /// Store census at diagnosis time.
+    pub stats: StoreStats,
+    /// The embedded scrub pass's findings.
+    pub scrub: ScrubReport,
+    /// Estimated latency quantiles rendered from `trace/metrics.prom`,
+    /// empty when no metrics dump exists or no histogram was sampled.
+    pub quantiles: String,
+}
+
+impl DoctorReport {
+    /// Any critical finding present (→ nonzero exit).
+    pub fn has_critical(&self) -> bool {
+        self.findings.iter().any(|f| f.severity == Severity::Critical)
+    }
+
+    /// The `bitsnap doctor` CLI rendering.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if self.ledger_present {
+            out.push_str(&format!(
+                "ledger           {} rows ({} saves)\n",
+                self.ledger_rows, self.saves
+            ));
+        } else {
+            out.push_str("ledger           absent (train with --ledger to record run history)\n");
+        }
+        out.push_str(&self.stats.render());
+        out.push('\n');
+        out.push_str(&format!(
+            "scrub verdict    {}\n",
+            if self.scrub.is_clean() { "CLEAN" } else { "DAMAGED" }
+        ));
+        if !self.quantiles.is_empty() {
+            out.push('\n');
+            out.push_str(&self.quantiles);
+        }
+        out.push('\n');
+        if self.findings.is_empty() {
+            out.push_str("no findings\n");
+        } else {
+            for f in &self.findings {
+                out.push_str(&format!("{:<8} {}: {}\n", f.severity.as_str(), f.code, f.detail));
+            }
+        }
+        out.push_str(if self.has_critical() {
+            "verdict          CRITICAL\n"
+        } else if self.findings.is_empty() {
+            "verdict          HEALTHY\n"
+        } else {
+            "verdict          WARNINGS\n"
+        });
+        out
+    }
+}
+
+/// Diagnose a storage root: load its ledger (if any), census the store,
+/// run a scrub, fold in the metrics dump, and run every anomaly
+/// detector. Errors only on I/O or a malformed (non-torn) ledger — an
+/// unhealthy-but-readable store diagnoses fine and reports findings.
+pub fn diagnose(storage: &Storage, opts: &DoctorOptions) -> io::Result<DoctorReport> {
+    let ledger_path = storage.root().join(LEDGER_FILE);
+    let (rows, ledger_warning, ledger_present) = if ledger_path.exists() {
+        let (rows, warning) = load_ledger(&ledger_path)?;
+        (rows, warning, true)
+    } else {
+        (Vec::new(), None, false)
+    };
+    let stats = storage.stats()?;
+    let scrub = storage.scrub(&ScrubOptions { deep: opts.deep, ..Default::default() })?;
+    let quantiles = match fs::read_to_string(storage.root().join("trace").join("metrics.prom")) {
+        Ok(text) => render_histogram_quantiles(&text),
+        Err(_) => String::new(),
+    };
+    let mut findings = Vec::new();
+    scrub_findings(&scrub, &mut findings);
+    ledger_findings(&rows, opts.window, &mut findings);
+    if let Some(w) = ledger_warning {
+        findings.push(Finding {
+            severity: Severity::Warning,
+            code: "ledger-torn-tail",
+            detail: w,
+        });
+    }
+    findings.sort_by_key(|f| f.severity);
+    let saves = rows.iter().filter(|r| r.event == "save").count();
+    Ok(DoctorReport {
+        findings,
+        ledger_present,
+        ledger_rows: rows.len(),
+        saves,
+        stats,
+        scrub,
+        quantiles,
+    })
+}
+
+/// Corruption-class scrub results become critical findings; orphans
+/// (normal collectible garbage) a warning.
+fn scrub_findings(scrub: &ScrubReport, out: &mut Vec<Finding>) {
+    if let Some((key, err)) = scrub.corrupt_blobs.first() {
+        out.push(Finding {
+            severity: Severity::Critical,
+            code: "cas-corrupt",
+            detail: format!(
+                "{} blob(s) failed hash/length re-verification (first: {key}: {err})",
+                scrub.corrupt_blobs.len()
+            ),
+        });
+    }
+    if let Some(key) = scrub.missing_blobs.first() {
+        out.push(Finding {
+            severity: Severity::Critical,
+            code: "cas-missing",
+            detail: format!(
+                "{} referenced blob(s) absent from the CAS (first: {key})",
+                scrub.missing_blobs.len()
+            ),
+        });
+    }
+    if let Some((iter, base)) = scrub.broken_chains.first() {
+        out.push(Finding {
+            severity: Severity::Critical,
+            code: "chain-broken",
+            detail: format!(
+                "{} delta chain(s) reference a missing base (first: iter{iter} needs iter{base})",
+                scrub.broken_chains.len()
+            ),
+        });
+    }
+    if let Some(err) = scrub.deep_failures.first() {
+        out.push(Finding {
+            severity: Severity::Critical,
+            code: "deep-decode",
+            detail: format!(
+                "{} sampled restore chain(s) failed to decode (first: {err})",
+                scrub.deep_failures.len()
+            ),
+        });
+    }
+    if scrub.orphan_blobs > 0 {
+        out.push(Finding {
+            severity: Severity::Warning,
+            code: "cas-orphans",
+            detail: format!(
+                "{} unreferenced blob(s) awaiting gc ({} more pinned by in-flight saves)",
+                scrub.orphan_blobs, scrub.pinned_inflight
+            ),
+        });
+    }
+}
+
+/// A save row's achieved compression ratio, when both byte counters are
+/// present and sane.
+fn save_ratio(row: &LedgerRow) -> Option<f64> {
+    let raw = row.num("raw_bytes")?;
+    let comp = row.num("compressed_bytes")?;
+    if comp > 0.0 {
+        Some(raw / comp)
+    } else {
+        None
+    }
+}
+
+/// Run every ledger-trend detector over the save rows.
+fn ledger_findings(rows: &[LedgerRow], window: usize, out: &mut Vec<Finding>) {
+    let saves: Vec<&LedgerRow> = rows.iter().filter(|r| r.event == "save").collect();
+    let window = window.max(2);
+    ratio_collapse(&saves, window, out);
+    precision_breach(&saves, window, out);
+    stall_trend(&saves, window, out);
+    skip_growth(&saves, window, out);
+    dedup_collapse(&saves, out);
+}
+
+/// Critical: the latest save's ratio fell below
+/// [`RATIO_COLLAPSE_FACTOR`] × the trailing-window median. Needs at
+/// least 3 prior ratios so one odd base save can't trip it.
+fn ratio_collapse(saves: &[&LedgerRow], window: usize, out: &mut Vec<Finding>) {
+    let ratios: Vec<f64> = saves.iter().filter_map(|r| save_ratio(r)).collect();
+    if ratios.len() < 4 {
+        return;
+    }
+    let recent = &ratios[ratios.len().saturating_sub(window + 1)..];
+    let (latest, prior) = recent.split_last().expect("len >= 4");
+    if prior.len() < 3 {
+        return;
+    }
+    let mut sorted = prior.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let median = sorted[sorted.len() / 2];
+    if *latest < RATIO_COLLAPSE_FACTOR * median {
+        out.push(Finding {
+            severity: Severity::Critical,
+            code: "ratio-collapse",
+            detail: format!(
+                "latest save compressed {latest:.2}x vs. a trailing median of {median:.2}x \
+                 (threshold {RATIO_COLLAPSE_FACTOR}x of median)"
+            ),
+        });
+    }
+}
+
+/// Critical: a save in the window recorded a modeled precision worse
+/// than its detected stage's budget — the ratio/precision dial is no
+/// longer honoring the guarantee the paper's controller promises.
+fn precision_breach(saves: &[&LedgerRow], window: usize, out: &mut Vec<Finding>) {
+    let recent = &saves[saves.len().saturating_sub(window)..];
+    let mut breaches = 0usize;
+    let mut worst: Option<(f64, f64, &str)> = None;
+    for row in recent {
+        let (Some(mse), Some(stage_str)) = (row.num("probe_rel_mse"), row.text("stage")) else {
+            continue;
+        };
+        let Some(stage) = parse_stage(stage_str) else { continue };
+        let budget = stage_precision_budget(stage);
+        if mse > budget * (1.0 + 1e-9) {
+            breaches += 1;
+            match worst {
+                Some((w, _, _)) if w >= mse => {}
+                _ => worst = Some((mse, budget, stage_str)),
+            }
+        }
+    }
+    if let Some((mse, budget, stage)) = worst {
+        out.push(Finding {
+            severity: Severity::Critical,
+            code: "precision-breach",
+            detail: format!(
+                "{breaches} save(s) modeled rel-MSE above the {stage}-stage budget \
+                 (worst {mse:.3e} > {budget:.3e})"
+            ),
+        });
+    }
+}
+
+/// Warning: mean trainer stall over the window's later half regressed
+/// past [`STALL_TREND_FACTOR`] × the earlier half's.
+fn stall_trend(saves: &[&LedgerRow], window: usize, out: &mut Vec<Finding>) {
+    let stalls: Vec<f64> = saves
+        .iter()
+        .skip(saves.len().saturating_sub(window))
+        .filter_map(|r| r.num("stall_us"))
+        .collect();
+    if stalls.len() < 4 {
+        return;
+    }
+    let mid = stalls.len() / 2;
+    let mean = |s: &[f64]| s.iter().sum::<f64>() / s.len() as f64;
+    let (earlier, later) = (mean(&stalls[..mid]), mean(&stalls[mid..]));
+    if earlier > 0.0 && later > STALL_TREND_FACTOR * earlier {
+        out.push(Finding {
+            severity: Severity::Warning,
+            code: "stall-trend",
+            detail: format!(
+                "mean trainer stall regressed {:.0}µs → {:.0}µs over the last {} saves",
+                earlier,
+                later,
+                stalls.len()
+            ),
+        });
+    }
+}
+
+/// Warning: the cumulative skip counter grew inside the window — the
+/// async plane is dropping checkpoints faster than it persists them.
+fn skip_growth(saves: &[&LedgerRow], window: usize, out: &mut Vec<Finding>) {
+    let skips: Vec<f64> = saves
+        .iter()
+        .skip(saves.len().saturating_sub(window))
+        .filter_map(|r| r.num("skipped_total"))
+        .collect();
+    let (Some(first), Some(last)) = (skips.first(), skips.last()) else { return };
+    if last > first {
+        out.push(Finding {
+            severity: Severity::Warning,
+            code: "persist-skips",
+            detail: format!(
+                "async persist skipped {} save(s) during the last {} recorded saves \
+                 ({first:.0} → {last:.0} cumulative)",
+                last - first,
+                skips.len()
+            ),
+        });
+    }
+}
+
+/// Warning: the store used to dedup across snapshots and stopped — e.g.
+/// a pipeline change that defeats content addressing. Computed from the
+/// cumulative logical/physical counters the save rows carry (deltas, so
+/// the async flush lag documented on
+/// [`SaveRecord`](super::ledger::SaveRecord) washes out). Heavily
+/// guarded: both epochs need positive byte growth, and the earlier one
+/// must have actually observed dedup.
+fn dedup_collapse(saves: &[&LedgerRow], out: &mut Vec<Finding>) {
+    if saves.len() < 6 {
+        return;
+    }
+    let rate = |seg: &[&LedgerRow]| -> Option<f64> {
+        let first = seg.first()?;
+        let last = seg.last()?;
+        let dl = last.num("logical_bytes_total")? - first.num("logical_bytes_total")?;
+        let dp = last.num("physical_bytes_total")? - first.num("physical_bytes_total")?;
+        if dl > 0.0 && dp > 0.0 {
+            Some(dl / dp)
+        } else {
+            None
+        }
+    };
+    let mid = saves.len() / 2;
+    let (Some(prior), Some(recent)) = (rate(&saves[..mid]), rate(&saves[mid..])) else {
+        return;
+    };
+    if prior >= DEDUP_PRIOR_MIN && recent < DEDUP_RECENT_COLLAPSED {
+        out.push(Finding {
+            severity: Severity::Warning,
+            code: "dedup-collapse",
+            detail: format!(
+                "cross-snapshot dedup rate fell {prior:.2}x → {recent:.2}x between the run's \
+                 earlier and later halves"
+            ),
+        });
+    }
+}
+
+fn parse_stage(s: &str) -> Option<TrainingStage> {
+    match s {
+        "early" => Some(TrainingStage::Early),
+        "mid" => Some(TrainingStage::Mid),
+        "late" => Some(TrainingStage::Late),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::ledger::parse_ledger;
+
+    fn save_line(
+        iteration: u64,
+        raw: u64,
+        comp: u64,
+        stall: u64,
+        skipped: u64,
+        probe: Option<f64>,
+        logical: u64,
+        physical: u64,
+    ) -> String {
+        let probe = probe.map_or("null".into(), |p| format!("{p}"));
+        format!(
+            "{{\"schema\": 1, \"event\": \"save\", \"ts_us\": {iteration}, \
+             \"iteration\": {iteration}, \"raw_bytes\": {raw}, \"compressed_bytes\": {comp}, \
+             \"stall_us\": {stall}, \"skipped_total\": {skipped}, \"probe_rel_mse\": {probe}, \
+             \"stage\": \"late\", \"logical_bytes_total\": {logical}, \
+             \"physical_bytes_total\": {physical}}}"
+        )
+    }
+
+    fn rows_of(lines: &[String]) -> Vec<LedgerRow> {
+        parse_ledger(&lines.join("\n")).unwrap().0
+    }
+
+    #[test]
+    fn ratio_collapse_fires_only_on_a_real_drop() {
+        // steady 4x saves, then the newest collapses to 1x
+        let mut lines: Vec<String> =
+            (0..6).map(|i| save_line(i * 10, 4000, 1000, 50, 0, None, 0, 0)).collect();
+        lines.push(save_line(60, 4000, 4000, 50, 0, None, 0, 0));
+        let mut findings = Vec::new();
+        ledger_findings(&rows_of(&lines), 8, &mut findings);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].code, "ratio-collapse");
+        assert_eq!(findings[0].severity, Severity::Critical);
+
+        // the same steady run without the drop is quiet
+        let steady: Vec<String> =
+            (0..7).map(|i| save_line(i * 10, 4000, 1000, 50, 0, None, 0, 0)).collect();
+        let mut findings = Vec::new();
+        ledger_findings(&rows_of(&steady), 8, &mut findings);
+        assert!(findings.is_empty(), "{findings:?}");
+
+        // too few rows: the detector stays silent even on a drop
+        let short = vec![
+            save_line(0, 4000, 1000, 50, 0, None, 0, 0),
+            save_line(10, 4000, 4000, 50, 0, None, 0, 0),
+        ];
+        let mut findings = Vec::new();
+        ledger_findings(&rows_of(&short), 8, &mut findings);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn precision_breach_checks_the_stage_budget() {
+        // late-stage budget is 2e-6; 1e-4 breaches, 1e-6 does not
+        let bad = vec![save_line(0, 100, 50, 1, 0, Some(1.0e-4), 0, 0)];
+        let mut findings = Vec::new();
+        ledger_findings(&rows_of(&bad), 8, &mut findings);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert_eq!(findings[0].code, "precision-breach");
+        assert!(findings[0].detail.contains("late"), "{}", findings[0].detail);
+
+        let good = vec![save_line(0, 100, 50, 1, 0, Some(1.0e-6), 0, 0)];
+        let mut findings = Vec::new();
+        ledger_findings(&rows_of(&good), 8, &mut findings);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn stall_and_skip_trends_warn() {
+        // stall doubles-plus in the later half, and skips accumulate
+        let lines: Vec<String> = (0..8)
+            .map(|i| {
+                let stall = if i < 4 { 100 } else { 500 };
+                save_line(i * 10, 400, 100, stall, i / 4, None, 0, 0)
+            })
+            .collect();
+        let mut findings = Vec::new();
+        ledger_findings(&rows_of(&lines), 8, &mut findings);
+        let codes: Vec<&str> = findings.iter().map(|f| f.code).collect();
+        assert!(codes.contains(&"stall-trend"), "{findings:?}");
+        assert!(codes.contains(&"persist-skips"), "{findings:?}");
+        assert!(findings.iter().all(|f| f.severity == Severity::Warning), "{findings:?}");
+    }
+
+    #[test]
+    fn dedup_collapse_needs_prior_dedup_and_positive_growth() {
+        // earlier half dedups 2x (logical grows twice as fast as
+        // physical), later half stores every byte it references
+        let mut lines = Vec::new();
+        for i in 0..4u64 {
+            lines.push(save_line(i * 10, 400, 100, 1, 0, None, 2000 * i, 1000 * i));
+        }
+        let (l0, p0) = (2000 * 3, 1000 * 3);
+        for i in 0..4u64 {
+            lines.push(save_line(100 + i * 10, 400, 100, 1, 0, None, l0 + 1000 * i, p0 + 1000 * i));
+        }
+        let mut findings = Vec::new();
+        ledger_findings(&rows_of(&lines), 20, &mut findings);
+        let codes: Vec<&str> = findings.iter().map(|f| f.code).collect();
+        assert!(codes.contains(&"dedup-collapse"), "{findings:?}");
+
+        // no dedup ever observed (lossless run): quiet
+        let flat: Vec<String> = (0..8)
+            .map(|i| save_line(i * 10, 400, 100, 1, 0, None, 1000 * i, 1000 * i))
+            .collect();
+        let mut findings = Vec::new();
+        ledger_findings(&rows_of(&flat), 20, &mut findings);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn report_renders_verdict_and_orders_critical_first() {
+        let scrub = ScrubReport {
+            blobs_checked: 5,
+            orphan_blobs: 1,
+            corrupt_blobs: vec![(
+                crate::store::BlobKey { hash: 1, len: 2 },
+                "hash mismatch".into(),
+            )],
+            ..Default::default()
+        };
+        let mut findings = Vec::new();
+        scrub_findings(&scrub, &mut findings);
+        findings.sort_by_key(|f| f.severity);
+        let report = DoctorReport {
+            findings,
+            ledger_present: true,
+            ledger_rows: 3,
+            saves: 2,
+            stats: StoreStats::default(),
+            scrub,
+            quantiles: String::new(),
+        };
+        assert!(report.has_critical());
+        assert_eq!(report.findings[0].code, "cas-corrupt");
+        assert_eq!(report.findings[1].code, "cas-orphans");
+        let text = report.render();
+        assert!(text.contains("verdict          CRITICAL"), "{text}");
+        assert!(text.contains("scrub verdict    DAMAGED"), "{text}");
+        assert!(text.contains("CRITICAL cas-corrupt"), "{text}");
+        assert!(text.contains("ledger           3 rows (2 saves)"), "{text}");
+
+        let clean = DoctorReport {
+            findings: Vec::new(),
+            ledger_present: false,
+            ledger_rows: 0,
+            saves: 0,
+            stats: StoreStats::default(),
+            scrub: ScrubReport::default(),
+            quantiles: String::new(),
+        };
+        assert!(!clean.has_critical());
+        let text = clean.render();
+        assert!(text.contains("verdict          HEALTHY"), "{text}");
+        assert!(text.contains("no findings"), "{text}");
+        assert!(text.contains("ledger           absent"), "{text}");
+    }
+}

@@ -1,0 +1,673 @@
+//! The run ledger: a schema-versioned, append-only record of every
+//! save/restore/GC/scrub at `<storage root>/ledger.jsonl`.
+//!
+//! Traces and metrics (PR 6) die with the process; the ledger is the
+//! longitudinal complement — it survives restarts because it lives next
+//! to the checkpoints themselves and every engine lifetime appends to
+//! the same file. Each row is one JSON object carrying a `schema`
+//! version, an `event` discriminator and a wall-clock `ts_us`, plus
+//! event-specific fields (see [`SaveRecord`] et al. for the save row's
+//! vocabulary: logical/physical bytes, per-kind compression, pipeline
+//! labels, phase walls, trainer stall, async skip count, worker/kernel
+//! config and the planner's modeled precision).
+//!
+//! Like [`crate::obs::Tracer`], a [`Ledger`] is a cloneable shared-cell
+//! handle owned by [`crate::engine::Storage`]: enabling any clone lights
+//! up every engine/agent clone of the same lineage, and a disabled
+//! ledger is inert — recording into it is a read-lock and a `None`
+//! check, and it never touches checkpoint artifacts (byte-identity with
+//! the ledger on or off is pinned by `tests/trace_determinism.rs`).
+//!
+//! The reader half ([`load_ledger`]/[`parse_ledger`]) tolerates exactly
+//! one kind of damage: a crash-torn *final* line (the writer died
+//! mid-append) is skipped with a warning. Anything else — torn lines
+//! mid-file, valid JSON of the wrong shape — stays a loud error, because
+//! the writer controls the format and silent drift would defeat the
+//! schema gate (`rust/scripts/check_ledger_schema.py`).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use super::report::{parse_json, Json};
+use super::trace::escape_json;
+
+/// Schema version stamped into every row. Bump on any field rename or
+/// type change — consumers (`doctor`, the CI gate) key on it.
+pub const LEDGER_SCHEMA: u64 = 1;
+
+/// File name of the ledger inside a storage root.
+pub const LEDGER_FILE: &str = "ledger.jsonl";
+
+#[derive(Debug)]
+struct Sink {
+    path: PathBuf,
+    file: Mutex<fs::File>,
+}
+
+/// Trainer-side context the async persist plane plants on the ledger
+/// just before it runs a background save, consumed by the save-row
+/// writer inside the engine (the engine itself cannot observe the
+/// trainer's stall — only the persist handle sees it).
+#[derive(Clone, Copy, Debug)]
+pub struct AsyncNote {
+    /// What the trainer paid for this save: snapshot memcpy plus
+    /// backpressure wait, microseconds.
+    pub stall_us: u64,
+    /// Cumulative saves dropped under `Backpressure::Skip` so far.
+    pub skipped_total: u64,
+}
+
+/// Cloneable handle to one append-only run ledger. Disabled (inert) by
+/// default; see the module docs for the sharing model.
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    sink: Arc<RwLock<Option<Arc<Sink>>>>,
+    async_note: Arc<Mutex<Option<AsyncNote>>>,
+}
+
+impl Ledger {
+    /// A ledger that records nothing (the default).
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    /// Open (append) `<root>/ledger.jsonl` and start recording on every
+    /// clone of this handle. Returns the ledger file path. The file is
+    /// never truncated: a second engine lifetime on the same storage
+    /// root continues the same run history.
+    pub fn enable(&self, root: impl AsRef<Path>) -> io::Result<PathBuf> {
+        let root = root.as_ref();
+        fs::create_dir_all(root)?;
+        let path = root.join(LEDGER_FILE);
+        let file = fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        *self.sink.write().unwrap() = Some(Arc::new(Sink { path: path.clone(), file: Mutex::new(file) }));
+        Ok(path)
+    }
+
+    /// Whether any clone of this handle has been enabled.
+    pub fn is_enabled(&self) -> bool {
+        self.sink.read().unwrap().is_some()
+    }
+
+    /// Path of the ledger file, when enabled.
+    pub fn path(&self) -> Option<PathBuf> {
+        self.sink.read().unwrap().as_ref().map(|s| s.path.clone())
+    }
+
+    /// Plant the trainer-side stall context for the next save row (the
+    /// async persist worker calls this right before running the save).
+    pub(crate) fn set_async_note(&self, note: AsyncNote) {
+        *self.async_note.lock().unwrap() = Some(note);
+    }
+
+    /// Consume the planted async note, if any (the save-row writer calls
+    /// this; a `None` means the save ran synchronously).
+    pub(crate) fn take_async_note(&self) -> Option<AsyncNote> {
+        self.async_note.lock().unwrap().take()
+    }
+
+    /// Append one completed save. No-op when disabled.
+    pub fn record_save(&self, r: &SaveRecord<'_>) {
+        if !self.is_enabled() {
+            return;
+        }
+        let mut line = self.envelope("save");
+        let _ = write!(
+            line,
+            ", \"iteration\": {}, \"kind\": \"{}\", \"mp\": {}, \"pp\": {}, \
+             \"workers\": {}, \"kernel\": \"{}\", \"async\": {}",
+            r.iteration, r.kind, r.mp, r.pp, r.workers, r.kernel, r.is_async
+        );
+        let _ = write!(
+            line,
+            ", \"raw_bytes\": {}, \"compressed_bytes\": {}, \"model_raw_bytes\": {}, \
+             \"model_compressed_bytes\": {}, \"opt_raw_bytes\": {}, \"opt_compressed_bytes\": {}",
+            r.raw_bytes,
+            r.compressed_bytes,
+            r.model_raw_bytes,
+            r.model_compressed_bytes,
+            r.opt_raw_bytes,
+            r.opt_compressed_bytes
+        );
+        line.push_str(", \"pipelines\": [");
+        for (i, p) in r.pipelines.iter().enumerate() {
+            if i > 0 {
+                line.push_str(", ");
+            }
+            line.push('"');
+            escape_json(p, &mut line);
+            line.push('"');
+        }
+        let _ = write!(
+            line,
+            "], \"plan_us\": {}, \"encode_us\": {}, \"commit_us\": {}, \"stall_us\": {}, \
+             \"skipped_total\": {}",
+            r.plan_us, r.encode_us, r.commit_us, r.stall_us, r.skipped_total
+        );
+        match r.probe_rel_mse {
+            Some(m) if m.is_finite() => {
+                let _ = write!(line, ", \"probe_rel_mse\": {m}");
+            }
+            _ => line.push_str(", \"probe_rel_mse\": null"),
+        }
+        match r.stage {
+            Some(s) => {
+                line.push_str(", \"stage\": \"");
+                escape_json(s, &mut line);
+                line.push('"');
+            }
+            None => line.push_str(", \"stage\": null"),
+        }
+        let _ = write!(
+            line,
+            ", \"logical_bytes_total\": {}, \"physical_bytes_total\": {}}}",
+            r.logical_bytes_total, r.physical_bytes_total
+        );
+        self.append(&line);
+    }
+
+    /// Append one restore/recover. No-op when disabled.
+    pub fn record_restore(&self, r: &RestoreRecord<'_>) {
+        if !self.is_enabled() {
+            return;
+        }
+        let mut line = self.envelope("restore");
+        let _ = write!(
+            line,
+            ", \"iteration\": {}, \"mode\": \"{}\", \"bytes\": {}, \"wall_us\": {}, \"ok\": {}}}",
+            r.iteration, r.mode, r.bytes, r.wall_us, r.ok
+        );
+        self.append(&line);
+    }
+
+    /// Append one GC pass. No-op when disabled.
+    pub fn record_gc(&self, r: &GcRecord) {
+        if !self.is_enabled() {
+            return;
+        }
+        let mut line = self.envelope("gc");
+        let _ = write!(
+            line,
+            ", \"mode\": \"{}\", \"pruned_iterations\": {}, \"live_iterations\": {}, \
+             \"deleted_blobs\": {}, \"pinned_blobs\": {}, \"reclaimed_bytes\": {}, \
+             \"wall_us\": {}}}",
+            r.mode,
+            r.pruned_iterations,
+            r.live_iterations,
+            r.deleted_blobs,
+            r.pinned_blobs,
+            r.reclaimed_bytes,
+            r.wall_us
+        );
+        self.append(&line);
+    }
+
+    /// Append one scrub pass. No-op when disabled.
+    pub fn record_scrub(&self, r: &ScrubRecord) {
+        if !self.is_enabled() {
+            return;
+        }
+        let mut line = self.envelope("scrub");
+        let _ = write!(
+            line,
+            ", \"deep\": {}, \"blobs_checked\": {}, \"corrupt_blobs\": {}, \
+             \"missing_blobs\": {}, \"orphan_blobs\": {}, \"pinned_inflight\": {}, \
+             \"broken_chains\": {}, \"deep_checked\": {}, \"deep_failures\": {}, \
+             \"wall_us\": {}, \"clean\": {}}}",
+            r.deep,
+            r.blobs_checked,
+            r.corrupt_blobs,
+            r.missing_blobs,
+            r.orphan_blobs,
+            r.pinned_inflight,
+            r.broken_chains,
+            r.deep_checked,
+            r.deep_failures,
+            r.wall_us,
+            r.clean
+        );
+        self.append(&line);
+    }
+
+    /// The common row prefix: `{"schema": N, "event": "...", "ts_us": N`
+    /// (wall clock — the ledger is a run history, not a trace; nothing
+    /// deterministic reads it back).
+    fn envelope(&self, event: &str) -> String {
+        let ts_us = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        format!("{{\"schema\": {LEDGER_SCHEMA}, \"event\": \"{event}\", \"ts_us\": {ts_us}")
+    }
+
+    fn append(&self, line: &str) {
+        let sink = self.sink.read().unwrap().clone();
+        let Some(sink) = sink else { return };
+        let mut f = sink.file.lock().unwrap();
+        use std::io::Write as _;
+        let _ = writeln!(f, "{line}");
+        let _ = f.flush();
+    }
+}
+
+/// Everything a save row records. Built by the sharded engine after a
+/// successful commit; see the module docs for field meanings.
+#[derive(Clone, Debug)]
+pub struct SaveRecord<'a> {
+    /// Saved iteration.
+    pub iteration: u64,
+    /// `"base"` or `"delta"`.
+    pub kind: &'a str,
+    /// Model-parallel width of the layout.
+    pub mp: usize,
+    /// Pipeline-parallel depth of the layout.
+    pub pp: usize,
+    /// Encode worker-pool width this save ran with.
+    pub workers: usize,
+    /// Active compress kernel (`"scalar"` / `"wide"`).
+    pub kernel: &'a str,
+    /// Whether this save ran on the async persist plane.
+    pub is_async: bool,
+    /// Raw (uncompressed) bytes across every rank shard.
+    pub raw_bytes: u64,
+    /// Compressed container bytes across every rank shard.
+    pub compressed_bytes: u64,
+    /// Raw bytes of model-state tensors only.
+    pub model_raw_bytes: u64,
+    /// Compressed payload bytes of model-state tensors only.
+    pub model_compressed_bytes: u64,
+    /// Raw bytes of optimizer-state (and other) tensors.
+    pub opt_raw_bytes: u64,
+    /// Compressed payload bytes of optimizer-state (and other) tensors.
+    pub opt_compressed_bytes: u64,
+    /// Sorted, deduplicated pipeline labels used by this save.
+    pub pipelines: &'a [String],
+    /// Plan-phase wall, microseconds.
+    pub plan_us: u64,
+    /// Encode-phase wall, microseconds.
+    pub encode_us: u64,
+    /// Commit-phase wall, microseconds.
+    pub commit_us: u64,
+    /// What the trainer paid: the full save wall for a sync save, or
+    /// snapshot + backpressure wait for an async one.
+    pub stall_us: u64,
+    /// Cumulative saves dropped under skip backpressure so far.
+    pub skipped_total: u64,
+    /// The planner's modeled precision for this save — the worst
+    /// (largest) analytic relative MSE across cluster-quant pipelines it
+    /// picked; `None` when no lossy quantizer ran or planning was
+    /// static.
+    pub probe_rel_mse: Option<f64>,
+    /// Detected training stage (`"early"`/`"mid"`/`"late"`), when an
+    /// adaptive planner reported decisions.
+    pub stage: Option<&'a str>,
+    /// Cumulative `bitsnap_save_logical_bytes_total` counter after this
+    /// save. Agents persist asynchronously, so this can lag the save by
+    /// one flush — `doctor` reads deltas over windows, not per-row.
+    pub logical_bytes_total: u64,
+    /// Cumulative `bitsnap_save_physical_bytes_total` counter after this
+    /// save (same lag caveat; dedup makes physical < logical).
+    pub physical_bytes_total: u64,
+}
+
+/// One restore-side row: a manifest-driven load, an all-gather recover,
+/// or a resharded adoption.
+#[derive(Clone, Copy, Debug)]
+pub struct RestoreRecord<'a> {
+    /// Iteration restored (or attempted).
+    pub iteration: u64,
+    /// `"load"`, `"recover"` or `"adopt_resharded"`.
+    pub mode: &'a str,
+    /// Reassembled state-dict bytes (0 on failure).
+    pub bytes: u64,
+    /// Wall clock of the restore, microseconds.
+    pub wall_us: u64,
+    /// Whether the restore succeeded.
+    pub ok: bool,
+}
+
+/// One GC row.
+#[derive(Clone, Copy, Debug)]
+pub struct GcRecord {
+    /// `"execute"` or `"dry_run"`.
+    pub mode: &'static str,
+    /// Iterations pruned by this pass.
+    pub pruned_iterations: u64,
+    /// Iterations still live after this pass.
+    pub live_iterations: u64,
+    /// Blob files deleted (would-be-deleted on a dry run).
+    pub deleted_blobs: u64,
+    /// Blobs skipped because an in-flight save pinned them.
+    pub pinned_blobs: u64,
+    /// Physical bytes reclaimed.
+    pub reclaimed_bytes: u64,
+    /// Wall clock of the pass, microseconds.
+    pub wall_us: u64,
+}
+
+/// One scrub row (see [`crate::store::ScrubReport`] for semantics).
+#[derive(Clone, Copy, Debug)]
+pub struct ScrubRecord {
+    /// Whether the deep (decode-through-the-chain) arm ran.
+    pub deep: bool,
+    /// Blobs re-verified (hash + length).
+    pub blobs_checked: u64,
+    /// Blobs whose stored bytes failed re-verification.
+    pub corrupt_blobs: u64,
+    /// Blobs referenced by a stub/manifest but absent from the CAS.
+    pub missing_blobs: u64,
+    /// Unreferenced, unpinned blobs (GC-collectible; a warning).
+    pub orphan_blobs: u64,
+    /// Unreferenced blobs pinned by an in-flight save (never flagged).
+    pub pinned_inflight: u64,
+    /// Delta chains referencing a missing base iteration.
+    pub broken_chains: u64,
+    /// Rank containers decoded end-to-end by the deep arm.
+    pub deep_checked: u64,
+    /// Deep decodes that failed.
+    pub deep_failures: u64,
+    /// Wall clock of the pass, microseconds.
+    pub wall_us: u64,
+    /// No corruption-class findings (orphans alone stay clean).
+    pub clean: bool,
+}
+
+// ---------------------------------------------------------------------
+// The reader: `doctor` and tests parse rows back.
+// ---------------------------------------------------------------------
+
+/// One parsed ledger row: the common envelope plus event-specific fields
+/// reachable through the typed accessors ([`num`](LedgerRow::num),
+/// [`text`](LedgerRow::text), [`flag`](LedgerRow::flag),
+/// [`list`](LedgerRow::list)).
+#[derive(Clone, Debug)]
+pub struct LedgerRow {
+    /// Schema version the writer stamped.
+    pub schema: u64,
+    /// Event discriminator: `"save"`, `"restore"`, `"gc"` or `"scrub"`.
+    pub event: String,
+    /// Wall-clock timestamp, microseconds since the Unix epoch.
+    pub ts_us: u64,
+    fields: Vec<(String, Json)>,
+}
+
+impl LedgerRow {
+    fn get(&self, key: &str) -> Option<&Json> {
+        self.fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// Numeric field value (integers included), if present and numeric.
+    pub fn num(&self, key: &str) -> Option<f64> {
+        match self.get(key) {
+            Some(Json::Num(n)) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// String field value, if present and a string.
+    pub fn text(&self, key: &str) -> Option<&str> {
+        match self.get(key) {
+            Some(Json::Str(s)) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    /// Boolean field value, if present and a bool.
+    pub fn flag(&self, key: &str) -> Option<bool> {
+        match self.get(key) {
+            Some(Json::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// String-array field value, if present and an array of strings.
+    pub fn list(&self, key: &str) -> Option<Vec<&str>> {
+        match self.get(key) {
+            Some(Json::Arr(items)) => items
+                .iter()
+                .map(|v| match v {
+                    Json::Str(s) => Some(s.as_str()),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a whole ledger body. Returns the rows plus an optional warning
+/// when the final line was crash-torn (invalid JSON syntax) and skipped;
+/// every other malformation is an error (see module docs).
+pub fn parse_ledger(text: &str) -> Result<(Vec<LedgerRow>, Option<String>), String> {
+    let lines: Vec<(usize, &str)> = text
+        .lines()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty())
+        .collect();
+    let mut rows = Vec::new();
+    let mut warning = None;
+    for (idx, (lineno, line)) in lines.iter().enumerate() {
+        let v = match parse_json(line) {
+            Ok(v) => v,
+            Err(e) if idx + 1 == lines.len() => {
+                warning = Some(format!(
+                    "ledger line {}: torn final line skipped (crash mid-append?): {e}",
+                    lineno + 1
+                ));
+                continue;
+            }
+            Err(e) => return Err(format!("line {}: {e}", lineno + 1)),
+        };
+        rows.push(row_from_json(&v).map_err(|e| format!("line {}: {e}", lineno + 1))?);
+    }
+    Ok((rows, warning))
+}
+
+/// Read and parse a ledger file; any torn-tail warning is printed to
+/// stderr and also returned.
+pub fn load_ledger(path: &Path) -> io::Result<(Vec<LedgerRow>, Option<String>)> {
+    let text = fs::read_to_string(path)?;
+    let (rows, warning) =
+        parse_ledger(&text).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+    if let Some(w) = &warning {
+        eprintln!("warning: {w}");
+    }
+    Ok((rows, warning))
+}
+
+fn row_from_json(v: &Json) -> Result<LedgerRow, String> {
+    let obj = match v {
+        Json::Obj(fields) => fields,
+        _ => return Err("ledger row is not a JSON object".into()),
+    };
+    let get = |k: &str| obj.iter().find(|(n, _)| n == k).map(|(_, v)| v);
+    let schema = match get("schema") {
+        Some(Json::Num(n)) if *n >= 1.0 => *n as u64,
+        _ => return Err("missing or invalid \"schema\"".into()),
+    };
+    let event = match get("event") {
+        Some(Json::Str(s)) if !s.is_empty() => s.clone(),
+        _ => return Err("missing or invalid \"event\"".into()),
+    };
+    let ts_us = match get("ts_us") {
+        Some(Json::Num(n)) if *n >= 0.0 => *n as u64,
+        _ => return Err("missing or invalid \"ts_us\"".into()),
+    };
+    let fields = obj
+        .iter()
+        .filter(|(k, _)| k != "schema" && k != "event" && k != "ts_us")
+        .cloned()
+        .collect();
+    Ok(LedgerRow { schema, event, ts_us, fields })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn save_record<'a>(iteration: u64, pipelines: &'a [String]) -> SaveRecord<'a> {
+        SaveRecord {
+            iteration,
+            kind: "delta",
+            mp: 2,
+            pp: 2,
+            workers: 4,
+            kernel: "wide",
+            is_async: false,
+            raw_bytes: 1000,
+            compressed_bytes: 250,
+            model_raw_bytes: 600,
+            model_compressed_bytes: 100,
+            opt_raw_bytes: 400,
+            opt_compressed_bytes: 150,
+            pipelines,
+            plan_us: 10,
+            encode_us: 20,
+            commit_us: 30,
+            stall_us: 60,
+            skipped_total: 0,
+            probe_rel_mse: Some(3.0e-6),
+            stage: Some("mid"),
+            logical_bytes_total: 250,
+            physical_bytes_total: 200,
+        }
+    }
+
+    #[test]
+    fn disabled_ledger_is_inert() {
+        let l = Ledger::disabled();
+        assert!(!l.is_enabled());
+        assert!(l.path().is_none());
+        l.record_save(&save_record(10, &[])); // must not panic or create files
+    }
+
+    #[test]
+    fn rows_roundtrip_through_the_reader() {
+        let dir = std::env::temp_dir().join(format!("bitsnap-ledger-rt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let l = Ledger::disabled();
+        let path = l.enable(&dir).unwrap();
+        assert!(l.is_enabled());
+        assert_eq!(l.path().as_deref(), Some(path.as_path()));
+        let pipes = vec!["delta|huffman".to_string(), "cluster_quant{m=8}".to_string()];
+        l.record_save(&save_record(20, &pipes));
+        l.record_restore(&RestoreRecord {
+            iteration: 20,
+            mode: "load",
+            bytes: 1000,
+            wall_us: 55,
+            ok: true,
+        });
+        l.record_gc(&GcRecord {
+            mode: "execute",
+            pruned_iterations: 1,
+            live_iterations: 2,
+            deleted_blobs: 3,
+            pinned_blobs: 0,
+            reclaimed_bytes: 4096,
+            wall_us: 77,
+        });
+        l.record_scrub(&ScrubRecord {
+            deep: true,
+            blobs_checked: 9,
+            corrupt_blobs: 0,
+            missing_blobs: 0,
+            orphan_blobs: 1,
+            pinned_inflight: 0,
+            broken_chains: 0,
+            deep_checked: 4,
+            deep_failures: 0,
+            wall_us: 88,
+            clean: true,
+        });
+        let (rows, warning) = load_ledger(&path).unwrap();
+        assert!(warning.is_none());
+        assert_eq!(rows.len(), 4);
+        let save = &rows[0];
+        assert_eq!((save.schema, save.event.as_str()), (LEDGER_SCHEMA, "save"));
+        assert_eq!(save.num("iteration"), Some(20.0));
+        assert_eq!(save.text("kind"), Some("delta"));
+        assert_eq!(save.flag("async"), Some(false));
+        assert_eq!(save.num("compressed_bytes"), Some(250.0));
+        assert_eq!(save.num("probe_rel_mse"), Some(3.0e-6));
+        assert_eq!(save.text("stage"), Some("mid"));
+        assert_eq!(
+            save.list("pipelines"),
+            Some(vec!["delta|huffman", "cluster_quant{m=8}"])
+        );
+        assert_eq!(rows[1].event, "restore");
+        assert_eq!(rows[1].flag("ok"), Some(true));
+        assert_eq!(rows[2].event, "gc");
+        assert_eq!(rows[2].num("reclaimed_bytes"), Some(4096.0));
+        assert_eq!(rows[3].event, "scrub");
+        assert_eq!(rows[3].flag("clean"), Some(true));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn enable_appends_across_lifetimes() {
+        let dir = std::env::temp_dir().join(format!("bitsnap-ledger-app-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let pipes: Vec<String> = Vec::new();
+        let l1 = Ledger::disabled();
+        let path = l1.enable(&dir).unwrap();
+        l1.record_save(&save_record(10, &pipes));
+        drop(l1);
+        let l2 = Ledger::disabled();
+        l2.enable(&dir).unwrap();
+        l2.record_save(&save_record(20, &pipes));
+        let (rows, _) = load_ledger(&path).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].num("iteration"), Some(10.0));
+        assert_eq!(rows[1].num("iteration"), Some(20.0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_final_line_is_skipped_with_warning() {
+        let good = "{\"schema\": 1, \"event\": \"gc\", \"ts_us\": 5, \"mode\": \"execute\"}";
+        let torn = "{\"schema\": 1, \"event\": \"sa";
+        let (rows, warning) = parse_ledger(&format!("{good}\n{torn}")).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(warning.unwrap().contains("torn final line"));
+        // the same damage mid-file stays a loud error
+        let err = parse_ledger(&format!("{torn}\n{good}")).unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        // valid JSON of the wrong shape is loud even on the final line
+        let err = parse_ledger(&format!("{good}\n[1, 2]")).unwrap_err();
+        assert!(err.contains("not a JSON object"), "{err}");
+        let err = parse_ledger("{\"event\": \"save\", \"ts_us\": 1}").unwrap_err();
+        assert!(err.contains("schema"), "{err}");
+    }
+
+    #[test]
+    fn clones_share_one_sink() {
+        let dir = std::env::temp_dir().join(format!("bitsnap-ledger-cl-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let l = Ledger::disabled();
+        let clone = l.clone();
+        let path = l.enable(&dir).unwrap();
+        assert!(clone.is_enabled());
+        clone.record_gc(&GcRecord {
+            mode: "dry_run",
+            pruned_iterations: 0,
+            live_iterations: 0,
+            deleted_blobs: 0,
+            pinned_blobs: 0,
+            reclaimed_bytes: 0,
+            wall_us: 0,
+        });
+        let (rows, _) = load_ledger(&path).unwrap();
+        assert_eq!(rows.len(), 1);
+        // the async-note slot is shared too
+        clone.set_async_note(AsyncNote { stall_us: 9, skipped_total: 2 });
+        let note = l.take_async_note().unwrap();
+        assert_eq!((note.stall_us, note.skipped_total), (9, 2));
+        assert!(l.take_async_note().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -111,6 +111,22 @@ impl Metrics {
         }
     }
 
+    /// A histogram series' finite bucket bounds, per-bound cumulative
+    /// counts and total sample count — the inputs [`estimate_quantile`]
+    /// wants. `None` when the series was never observed.
+    pub fn histogram_buckets(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+    ) -> Option<(Vec<f64>, Vec<u64>, u64)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .histograms
+            .get(&key(name, labels))
+            .map(|h| (h.bounds.clone(), h.counts.clone(), h.count))
+    }
+
     /// Render every series in the Prometheus text exposition format,
     /// sorted by (name, labels) so the output is deterministic.
     ///
@@ -175,7 +191,13 @@ fn render_labels(labels: &[(String, String)], le: Option<&str>) -> String {
         if i > 0 {
             s.push(',');
         }
-        let _ = write!(s, "{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\""));
+        // Prometheus text exposition: label values escape `\`, `"` and
+        // newline (in that order — backslash first or the escapes double).
+        let _ = write!(
+            s,
+            "{k}=\"{}\"",
+            v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+        );
     }
     if let Some(le) = le {
         if !labels.is_empty() {
@@ -185,6 +207,35 @@ fn render_labels(labels: &[(String, String)], le: Option<&str>) -> String {
     }
     s.push('}');
     s
+}
+
+/// Estimate quantile `q` (in `0.0..=1.0`) from cumulative histogram
+/// bucket counts, Prometheus `histogram_quantile` style: linear
+/// interpolation inside the bucket the target rank lands in, a lower
+/// edge of 0 for the first bucket, and the last finite bound when the
+/// rank falls in the implicit `+Inf` bucket (the true value is only
+/// known to be at least that). `bounds` are the finite upper edges,
+/// `cumulative[i]` the count of samples `<= bounds[i]`, `total` the
+/// full sample count (the `+Inf` cumulative). `None` when there are no
+/// samples or no finite buckets.
+pub fn estimate_quantile(bounds: &[f64], cumulative: &[u64], total: u64, q: f64) -> Option<f64> {
+    if total == 0 || bounds.is_empty() || bounds.len() != cumulative.len() {
+        return None;
+    }
+    let target = q.clamp(0.0, 1.0) * total as f64;
+    for (i, &cum) in cumulative.iter().enumerate() {
+        if cum as f64 >= target {
+            let lower_cum = if i == 0 { 0 } else { cumulative[i - 1] };
+            let lower_edge = if i == 0 { 0.0 } else { bounds[i - 1] };
+            let in_bucket = cum - lower_cum;
+            if in_bucket == 0 {
+                return Some(lower_edge);
+            }
+            let frac = (target - lower_cum as f64) / in_bucket as f64;
+            return Some(lower_edge + (bounds[i] - lower_edge) * frac.clamp(0.0, 1.0));
+        }
+    }
+    Some(*bounds.last().unwrap())
 }
 
 /// Integral values print without a trailing `.0` so byte counters read
@@ -260,5 +311,83 @@ mod tests {
         m.counter_add("weird_total", &[("k", "a\"b\\c")], 1.0);
         let text = m.render_prometheus();
         assert!(text.contains("weird_total{k=\"a\\\"b\\\\c\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn label_values_escape_newlines_and_adversarial_mixes() {
+        let m = Metrics::new();
+        m.counter_add("weird_total", &[("k", "line1\nline2")], 1.0);
+        m.gauge_set("nasty", &[("v", "\\n\"\n")], 2.0);
+        let text = m.render_prometheus();
+        // a raw newline inside a label value would tear the exposition
+        // line in two; it must come out as the two-byte escape
+        assert!(text.contains("weird_total{k=\"line1\\nline2\"} 1"), "{text}");
+        // `\n` already in the value stays a literal backslash-n, the raw
+        // newline after it becomes an escape: \\n then \" then \n
+        assert!(text.contains("nasty{v=\"\\\\n\\\"\\n\"} 2"), "{text}");
+        for line in text.lines() {
+            assert!(
+                line.starts_with('#') || line.contains(' '),
+                "torn exposition line: {line:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantile_estimator_matches_known_bucket_fills() {
+        // 10 samples uniform in the (0.001, 0.01] bucket of SECONDS_BOUNDS
+        let bounds = SECONDS_BOUNDS.to_vec();
+        let mut cumulative = vec![0u64; bounds.len()];
+        for (i, &b) in bounds.iter().enumerate() {
+            if b >= 1e-2 {
+                cumulative[i] = 10;
+            }
+        }
+        let p50 = estimate_quantile(&bounds, &cumulative, 10, 0.5).unwrap();
+        // rank 5 of 10 inside (0.001, 0.01]: 0.001 + 0.009 * 5/10
+        assert!((p50 - 0.0055).abs() < 1e-12, "{p50}");
+        let p99 = estimate_quantile(&bounds, &cumulative, 10, 0.99).unwrap();
+        assert!((p99 - (0.001 + 0.009 * 0.99)).abs() < 1e-12, "{p99}");
+
+        // samples split across two buckets: 3 in (0, 1e-6], 1 in (0.1, 1]
+        let mut cum2 = vec![0u64; bounds.len()];
+        for (i, &b) in bounds.iter().enumerate() {
+            cum2[i] = if b >= 1.0 {
+                4
+            } else if b >= 1e-6 {
+                3
+            } else {
+                0
+            };
+        }
+        // p50 -> rank 2 of the 3 in the first bucket: 0 + 1e-6 * 2/3
+        let p50 = estimate_quantile(&bounds, &cum2, 4, 0.5).unwrap();
+        assert!((p50 - 1e-6 * (2.0 / 3.0)).abs() < 1e-15, "{p50}");
+        // p99 -> rank 3.96 lands on the single sample in (0.1, 1]
+        let p99 = estimate_quantile(&bounds, &cum2, 4, 0.99).unwrap();
+        assert!((0.1..=1.0).contains(&p99), "{p99}");
+
+        // every sample beyond the last bound -> clamp to the last bound
+        let over = estimate_quantile(&bounds, &vec![0u64; bounds.len()], 5, 0.5).unwrap();
+        assert_eq!(over, *bounds.last().unwrap());
+        // degenerate inputs
+        assert_eq!(estimate_quantile(&bounds, &cum2, 0, 0.5), None);
+        assert_eq!(estimate_quantile(&[], &[], 3, 0.5), None);
+    }
+
+    #[test]
+    fn metrics_expose_bucket_counts_for_quantiles() {
+        let m = Metrics::new();
+        for _ in 0..8 {
+            m.observe("w_seconds", &[], 5e-4); // (1e-4, 1e-3] bucket
+        }
+        m.observe("w_seconds", &[], 2.0); // (1, 10]
+        let (bounds, cumulative, total) = m.histogram_buckets("w_seconds", &[]).unwrap();
+        assert_eq!(total, 9);
+        let p50 = estimate_quantile(&bounds, &cumulative, total, 0.5).unwrap();
+        assert!(p50 > 1e-4 && p50 <= 1e-3, "{p50}");
+        let p99 = estimate_quantile(&bounds, &cumulative, total, 0.99).unwrap();
+        assert!(p99 > 1.0, "{p99}");
+        assert!(m.histogram_buckets("absent", &[]).is_none());
     }
 }

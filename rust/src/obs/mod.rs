@@ -16,16 +16,34 @@
 //!   the per-save phase waterfall, slowest tensors, per-codec throughput
 //!   and planner decision rationale.
 //!
-//! Invariant: tracing never touches checkpoint artifacts. Wall-clock
-//! timestamps exist only in trace files, and saves are byte-identical
-//! with tracing on or off (see `tests/trace_determinism.rs`).
+//! The health plane (PR 10) builds on those rails:
+//!
+//! * [`ledger`] — the run ledger, an append-only
+//!   `<storage root>/ledger.jsonl` written at each save/restore/GC/scrub
+//!   that survives process restarts (traces and metrics die with the
+//!   process).
+//! * [`doctor`] — fold ledger + store stats + a scrub + the metrics dump
+//!   into one health report with anomaly flags; `bitsnap doctor` exits
+//!   nonzero on critical findings so it can gate CI and cron.
+//!
+//! Invariant: observability never touches checkpoint artifacts.
+//! Wall-clock timestamps exist only in trace/ledger files, and saves are
+//! byte-identical with tracing and the ledger on or off (see
+//! `tests/trace_determinism.rs`).
 
+pub mod doctor;
+pub mod ledger;
 pub mod metrics;
 pub mod report;
 pub mod trace;
 
+pub use doctor::{diagnose, DoctorOptions, DoctorReport, Finding, Severity};
+pub use ledger::{load_ledger, parse_ledger, Ledger, LedgerRow, LEDGER_SCHEMA};
 pub use metrics::{Metrics, SECONDS_BOUNDS};
-pub use report::{load_events, parse_events, render_report, ReportOptions, TraceEvent};
+pub use report::{
+    load_events, parse_events, parse_events_tolerant, render_histogram_quantiles, render_report,
+    ReportOptions, TraceEvent,
+};
 pub use trace::{Span, Tracer};
 
 /// Human-readable byte count with the exact figure in parens — the shared

@@ -59,17 +59,47 @@ impl Default for ReportOptions {
 
 /// Parse a whole `events.jsonl` body. Any malformed line is an error —
 /// the writer controls the format, so damage means a torn file worth
-/// reporting, not skipping.
+/// reporting, not skipping — with one exception: a crash-torn *final*
+/// line (a writer killed mid-append, e.g. via
+/// `arm_crash_between_pin_and_publish`) is skipped with a warning on
+/// stderr. See [`parse_events_tolerant`] for the warning itself.
 pub fn parse_events(text: &str) -> Result<Vec<TraceEvent>, String> {
+    let (events, warning) = parse_events_tolerant(text)?;
+    if let Some(w) = warning {
+        eprintln!("warning: {w}");
+    }
+    Ok(events)
+}
+
+/// [`parse_events`] with the torn-tail warning returned instead of
+/// printed. Only a JSON *syntax* failure on the final non-empty line is
+/// tolerated — valid JSON of the wrong shape stays a loud error even
+/// there, and any damage before the final line always fails.
+pub fn parse_events_tolerant(
+    text: &str,
+) -> Result<(Vec<TraceEvent>, Option<String>), String> {
+    let lines: Vec<(usize, &str)> = text
+        .lines()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty())
+        .collect();
     let mut out = Vec::new();
-    for (lineno, line) in text.lines().enumerate() {
-        if line.trim().is_empty() {
-            continue;
-        }
-        let v = parse_json(line).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+    let mut warning = None;
+    for (idx, (lineno, line)) in lines.iter().enumerate() {
+        let v = match parse_json(line) {
+            Ok(v) => v,
+            Err(e) if idx + 1 == lines.len() => {
+                warning = Some(format!(
+                    "trace line {}: torn final line skipped (crash mid-append?): {e}",
+                    lineno + 1
+                ));
+                continue;
+            }
+            Err(e) => return Err(format!("line {}: {e}", lineno + 1)),
+        };
         out.push(event_from_json(&v).map_err(|e| format!("line {}: {e}", lineno + 1))?);
     }
-    Ok(out)
+    Ok((out, warning))
 }
 
 /// Read and parse a trace event file.
@@ -420,12 +450,125 @@ fn fmt_dur_us(us: u64) -> String {
     crate::bench::fmt_duration(Duration::from_micros(us))
 }
 
+/// Render estimated p50/p95/p99 for every histogram series found in a
+/// Prometheus text dump (`metrics.prom`), from its `_bucket` cumulative
+/// counts via [`crate::obs::metrics::estimate_quantile`]. All bitsnap
+/// histograms record seconds, so estimates print as durations. Empty
+/// string when the dump carries no sampled histograms — callers can
+/// append unconditionally.
+pub fn render_histogram_quantiles(prom_text: &str) -> String {
+    use std::collections::BTreeMap;
+    let mut series: BTreeMap<String, Vec<(f64, u64)>> = BTreeMap::new();
+    for line in prom_text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some(brace) = line.find('{') else { continue };
+        let Some(base) = line[..brace].strip_suffix("_bucket") else { continue };
+        let Some(close) = line.rfind('}') else { continue };
+        let Some(labels) = parse_prom_labels(&line[brace + 1..close]) else { continue };
+        let Ok(count) = line[close + 1..].trim().parse::<f64>() else { continue };
+        let Some(le) = labels.iter().find(|(k, _)| k == "le").map(|(_, v)| v.as_str()) else {
+            continue;
+        };
+        let bound = if le == "+Inf" {
+            f64::INFINITY
+        } else {
+            let Ok(b) = le.parse::<f64>() else { continue };
+            b
+        };
+        let rest: Vec<String> = labels
+            .iter()
+            .filter(|(k, _)| k != "le")
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        let key = if rest.is_empty() {
+            base.to_string()
+        } else {
+            format!("{base}{{{}}}", rest.join(","))
+        };
+        series.entry(key).or_default().push((bound, count as u64));
+    }
+    let mut out = String::new();
+    for (name, mut buckets) in series {
+        buckets.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let total = buckets.last().map(|&(_, c)| c).unwrap_or(0);
+        if total == 0 {
+            continue;
+        }
+        let bounds: Vec<f64> = buckets.iter().map(|&(b, _)| b).filter(|b| b.is_finite()).collect();
+        let cumulative: Vec<u64> =
+            buckets.iter().filter(|(b, _)| b.is_finite()).map(|&(_, c)| c).collect();
+        if out.is_empty() {
+            out.push_str("histogram quantiles (estimated from bucket counts)\n");
+        }
+        let est = |q: f64| {
+            match super::metrics::estimate_quantile(&bounds, &cumulative, total, q) {
+                Some(v) => fmt_dur_us((v * 1e6) as u64),
+                None => "?".to_string(),
+            }
+        };
+        out.push_str(&format!(
+            "  {:<44} n={:<6} p50 {:>10}  p95 {:>10}  p99 {:>10}\n",
+            name,
+            total,
+            est(0.5),
+            est(0.95),
+            est(0.99),
+        ));
+    }
+    if !out.is_empty() {
+        out.push('\n');
+    }
+    out
+}
+
+/// Parse the inside of a Prometheus label brace block, honoring quoted
+/// values and their `\\`/`\"`/`\n` escapes (so a `,` or `=` inside a
+/// value — codec labels like `cluster_quant{m=16}` — cannot tear the
+/// split).
+fn parse_prom_labels(s: &str) -> Option<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let mut it = s.chars().peekable();
+    loop {
+        while matches!(it.peek(), Some(',') | Some(' ')) {
+            it.next();
+        }
+        if it.peek().is_none() {
+            return Some(out);
+        }
+        let mut key = String::new();
+        loop {
+            match it.next()? {
+                '=' => break,
+                c => key.push(c),
+            }
+        }
+        if it.next()? != '"' {
+            return None;
+        }
+        let mut val = String::new();
+        loop {
+            match it.next()? {
+                '"' => break,
+                '\\' => match it.next()? {
+                    'n' => val.push('\n'),
+                    c => val.push(c),
+                },
+                c => val.push(c),
+            }
+        }
+        out.push((key, val));
+    }
+}
+
 // ---------------------------------------------------------------------
 // The minimal JSON reader.
 // ---------------------------------------------------------------------
 
 #[derive(Clone, Debug, PartialEq)]
-enum Json {
+pub(crate) enum Json {
     Null,
     Bool(bool),
     Num(f64),
@@ -434,7 +577,7 @@ enum Json {
     Obj(Vec<(String, Json)>),
 }
 
-fn parse_json(text: &str) -> Result<Json, String> {
+pub(crate) fn parse_json(text: &str) -> Result<Json, String> {
     let mut p = Parser { s: text.as_bytes(), i: 0 };
     let v = p.value()?;
     p.skip_ws();
@@ -640,12 +783,72 @@ mod tests {
         assert_eq!(e.attr("error"), Some("a\nb"));
     }
 
+    const GOOD_LINE: &str = r#"{"id": 1, "parent": null, "name": "gc", "start_us": 0, "dur_us": 5, "status": "ok", "bytes": null, "attrs": {}}"#;
+
     #[test]
     fn malformed_lines_are_loud_errors() {
-        assert!(parse_events("{\"id\": }").is_err());
+        // a syntax-torn line that is NOT final stays a loud error
+        assert!(parse_events(&format!("{{\"id\": }}\n{GOOD_LINE}")).is_err());
+        // semantically invalid (but syntactically fine) lines are loud
+        // everywhere, final line included
         assert!(parse_events("[1, 2]").unwrap_err().contains("not a JSON object"));
         let missing_status = r#"{"id": 1, "parent": null, "name": "x", "start_us": 0, "dur_us": 0, "bytes": null, "attrs": {}}"#;
         assert!(parse_events(missing_status).unwrap_err().contains("status"));
+        assert!(parse_events(&format!("{GOOD_LINE}\n{missing_status}"))
+            .unwrap_err()
+            .contains("status"));
+    }
+
+    #[test]
+    fn crash_torn_final_line_is_skipped_with_warning() {
+        // a writer killed mid-append leaves a syntax-torn final line:
+        // tolerated, reported as a warning
+        let torn = "{\"id\": 2, \"parent\": null, \"na";
+        let (events, warning) =
+            parse_events_tolerant(&format!("{GOOD_LINE}\n{torn}")).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].name, "gc");
+        assert!(warning.unwrap().contains("torn final line"));
+        // trailing newline / blank lines after the torn tail don't
+        // change the verdict
+        let (events, warning) =
+            parse_events_tolerant(&format!("{GOOD_LINE}\n{torn}\n\n")).unwrap();
+        assert_eq!(events.len(), 1);
+        assert!(warning.is_some());
+        // an intact file reports no warning
+        let (events, warning) = parse_events_tolerant(GOOD_LINE).unwrap();
+        assert_eq!(events.len(), 1);
+        assert!(warning.is_none());
+        // parse_events (the printing wrapper) also tolerates it
+        assert_eq!(parse_events(&format!("{GOOD_LINE}\n{torn}")).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn histogram_quantiles_render_from_prom_text() {
+        let prom = "\
+# TYPE w_seconds histogram
+w_seconds_bucket{le=\"0.001\"} 0
+w_seconds_bucket{le=\"0.01\"} 10
+w_seconds_bucket{le=\"+Inf\"} 10
+w_seconds_sum 0.055
+w_seconds_count 10
+# TYPE q_seconds histogram
+q_seconds_bucket{pool=\"a\",le=\"1\"} 0
+q_seconds_bucket{pool=\"a\",le=\"+Inf\"} 0
+# TYPE x_total counter
+x_total 5
+";
+        let text = render_histogram_quantiles(prom);
+        assert!(text.contains("histogram quantiles"), "{text}");
+        assert!(text.contains("w_seconds"), "{text}");
+        // all 10 samples in (0.001, 0.01]: p50 interpolates to 5.5ms
+        assert!(text.contains("p50"), "{text}");
+        assert!(text.contains("5.50 ms"), "{text}");
+        // the empty series and the counter are not rendered
+        assert!(!text.contains("q_seconds"), "{text}");
+        assert!(!text.contains("x_total"), "{text}");
+        // a dump with no sampled histograms renders nothing at all
+        assert_eq!(render_histogram_quantiles("# TYPE x_total counter\nx_total 5\n"), "");
     }
 
     fn ev(

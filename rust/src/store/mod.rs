@@ -17,6 +17,9 @@
 //!   GC pins for in-flight saves.
 //! * [`gc`] — retention policy, delta-chain closure (a base can never be
 //!   collected while a live delta needs it) and blob refcounts.
+//! * [`scrub`] — the integrity-pass vocabulary ([`ScrubOptions`],
+//!   [`ScrubReport`]); the walk itself is
+//!   `crate::engine::storage::Storage::scrub`.
 //!
 //! The filesystem orchestration — parsing containers into blobs on
 //! `put`, resolving them on `get`, importing legacy inline containers on
@@ -27,10 +30,12 @@
 pub mod blob;
 pub mod gc;
 pub mod hash;
+pub mod scrub;
 
 pub use blob::BlobStore;
 pub use gc::{ChainInfo, GcReport, RefCounts, RetentionPolicy};
 pub use hash::{content_hash, BlobKey, Hasher64};
+pub use scrub::{ScrubOptions, ScrubReport};
 
 /// A point-in-time census of the store, as `store-stats` prints it.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]

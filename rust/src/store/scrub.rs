@@ -1,0 +1,136 @@
+//! Scrub vocabulary: what a CAS integrity pass checks and what it found.
+//!
+//! The types live here (next to [`super::gc`], whose refcount walk the
+//! scrubber reuses); the orchestration — walking blobs, manifests and
+//! delta chains of a concrete storage root — is
+//! `crate::engine::storage::Storage::scrub`, because only the engine
+//! layer can resolve stubs and decode restore chains. `bitsnap scrub
+//! [--deep]` is the CLI entry.
+//!
+//! A scrub never repairs and never deletes: it is the read-only half of
+//! the health plane, turning silent corruption into a loud
+//! [`ScrubReport`] that `bitsnap doctor` folds into its verdict.
+
+use super::hash::BlobKey;
+
+/// What to scrub.
+#[derive(Clone, Copy, Debug)]
+pub struct ScrubOptions {
+    /// Also decode sampled rank containers end-to-end through their full
+    /// restore chain (base + deltas), re-verifying content fingerprints —
+    /// much slower, catches damage a hash+length walk cannot (e.g. a
+    /// stale stub pointing at the wrong, but intact, blob).
+    pub deep: bool,
+    /// How many of the newest iterations the deep arm decodes.
+    pub sample: usize,
+}
+
+impl Default for ScrubOptions {
+    fn default() -> Self {
+        Self { deep: false, sample: 2 }
+    }
+}
+
+/// What a scrub pass found. Produced by
+/// `crate::engine::storage::Storage::scrub`.
+#[derive(Clone, Debug, Default)]
+pub struct ScrubReport {
+    /// Blobs whose stored bytes were re-read and re-verified.
+    pub blobs_checked: u64,
+    /// Blobs whose stored bytes no longer match their key (hash or
+    /// length mismatch), with the verifier's error.
+    pub corrupt_blobs: Vec<(BlobKey, String)>,
+    /// Blobs referenced by a stub or manifest but absent from the CAS.
+    pub missing_blobs: Vec<BlobKey>,
+    /// Unreferenced, unpinned blobs — collectible garbage, a warning
+    /// (the next `gc` sweeps them), never a corruption finding.
+    pub orphan_blobs: u64,
+    /// Unreferenced blobs pinned by an in-flight save sharing this
+    /// process's pin table. Expected while an async persist runs; never
+    /// flagged.
+    pub pinned_inflight: u64,
+    /// Delta chains whose base iteration is gone: `(iteration,
+    /// missing_base)` pairs.
+    pub broken_chains: Vec<(u64, u64)>,
+    /// Rank containers the deep arm decoded end-to-end.
+    pub deep_checked: u64,
+    /// Deep decodes that failed, with the decode error.
+    pub deep_failures: Vec<String>,
+}
+
+impl ScrubReport {
+    /// No corruption-class findings. Orphans and pinned in-flight blobs
+    /// do not count — both are normal store states.
+    pub fn is_clean(&self) -> bool {
+        self.corrupt_blobs.is_empty()
+            && self.missing_blobs.is_empty()
+            && self.broken_chains.is_empty()
+            && self.deep_failures.is_empty()
+    }
+
+    /// The `bitsnap scrub` CLI rendering.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "blobs checked    {}\n\
+             corrupt blobs    {}\n\
+             missing blobs    {}\n\
+             broken chains    {}\n\
+             orphan blobs     {}\n\
+             pinned in-flight {}\n",
+            self.blobs_checked,
+            self.corrupt_blobs.len(),
+            self.missing_blobs.len(),
+            self.broken_chains.len(),
+            self.orphan_blobs,
+            self.pinned_inflight,
+        );
+        if self.deep_checked > 0 || !self.deep_failures.is_empty() {
+            out.push_str(&format!(
+                "deep decodes     {} ({} failed)\n",
+                self.deep_checked,
+                self.deep_failures.len()
+            ));
+        }
+        for (key, err) in &self.corrupt_blobs {
+            out.push_str(&format!("  CORRUPT {key}: {err}\n"));
+        }
+        for key in &self.missing_blobs {
+            out.push_str(&format!("  MISSING {key}\n"));
+        }
+        for (iter, base) in &self.broken_chains {
+            out.push_str(&format!("  BROKEN CHAIN iter{iter} needs missing base iter{base}\n"));
+        }
+        for err in &self.deep_failures {
+            out.push_str(&format!("  DEEP FAIL {err}\n"));
+        }
+        out.push_str(if self.is_clean() { "verdict          CLEAN\n" } else { "verdict          DAMAGED\n" });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_verdict_ignores_orphans_and_pins() {
+        let mut r = ScrubReport { blobs_checked: 9, orphan_blobs: 2, pinned_inflight: 1, ..Default::default() };
+        assert!(r.is_clean());
+        let text = r.render();
+        assert!(text.contains("verdict          CLEAN"), "{text}");
+        assert!(text.contains("orphan blobs     2"), "{text}");
+        assert!(text.contains("pinned in-flight 1"), "{text}");
+        assert!(!text.contains("deep decodes"), "{text}");
+
+        r.corrupt_blobs.push((BlobKey { hash: 0xabcd, len: 64 }, "hash mismatch".into()));
+        r.broken_chains.push((30, 20));
+        r.deep_checked = 3;
+        r.deep_failures.push("iter30 rank0: crc".into());
+        assert!(!r.is_clean());
+        let text = r.render();
+        assert!(text.contains("verdict          DAMAGED"), "{text}");
+        assert!(text.contains("CORRUPT"), "{text}");
+        assert!(text.contains("BROKEN CHAIN iter30 needs missing base iter20"), "{text}");
+        assert!(text.contains("deep decodes     3 (1 failed)"), "{text}");
+    }
+}

@@ -1,10 +1,11 @@
-//! Tracing never enters artifacts: two identical sharded save
-//! trajectories — one with the span tracer enabled, one without — must
-//! leave byte-identical storage trees (`rank*.bsnp` shards,
-//! `manifest.bsnm` files, CAS blobs, type markers); only the `trace/`
-//! directory may differ. The engines run under the ambient
-//! `BITSNAP_TEST_WORKERS` (the CI matrix covers 1 and 4), so the
-//! byte-identity contract holds for tracing × worker-pool width.
+//! Observability never enters artifacts: two identical sharded save
+//! trajectories — one with the span tracer AND the run ledger enabled,
+//! one with neither — must leave byte-identical storage trees
+//! (`rank*.bsnp` shards, `manifest.bsnm` files, CAS blobs, type
+//! markers); only the `trace/` directory and `ledger.jsonl` may differ.
+//! The engines run under the ambient `BITSNAP_TEST_WORKERS` (the CI
+//! matrix covers 1 and 4), so the byte-identity contract holds for
+//! observability × worker-pool width.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -24,7 +25,8 @@ fn roots(tag: &str) -> (PathBuf, PathBuf) {
 }
 
 /// Every file under a storage root as relative path → content, skipping
-/// the `trace/` directory (the one place wall-clock is allowed to land).
+/// the `trace/` directory and `ledger.jsonl` (the only places
+/// wall-clock is allowed to land).
 fn snapshot_tree(root: &Path) -> BTreeMap<String, Vec<u8>> {
     fn walk(dir: &Path, root: &Path, out: &mut BTreeMap<String, Vec<u8>>) {
         for entry in std::fs::read_dir(dir).unwrap() {
@@ -35,7 +37,7 @@ fn snapshot_tree(root: &Path) -> BTreeMap<String, Vec<u8>> {
                     continue;
                 }
                 walk(&path, root, out);
-            } else {
+            } else if rel != "ledger.jsonl" {
                 out.insert(rel, std::fs::read(&path).unwrap());
             }
         }
@@ -53,6 +55,7 @@ fn run(tag: &str, traced: bool) -> BTreeMap<String, Vec<u8>> {
     let storage = Storage::new(&store_root).unwrap();
     if traced {
         storage.tracer().enable(store_root.join("trace")).unwrap();
+        storage.ledger().enable(&store_root).unwrap();
     }
     let cfg = ShardedEngineConfig {
         job: tag.into(),
@@ -75,6 +78,14 @@ fn run(tag: &str, traced: bool) -> BTreeMap<String, Vec<u8>> {
     if traced {
         let events = std::fs::read_to_string(store_root.join("trace/events.jsonl")).unwrap();
         assert!(!events.is_empty(), "the traced arm must actually trace");
+        let (rows, warning) =
+            bitsnap::obs::load_ledger(&store_root.join("ledger.jsonl")).unwrap();
+        assert!(warning.is_none(), "{warning:?}");
+        assert_eq!(
+            rows.iter().filter(|r| r.event == "save").count(),
+            3,
+            "the instrumented arm must ledger every save"
+        );
     }
     let snap = snapshot_tree(&store_root);
     let _ = std::fs::remove_dir_all(&shm_root);
